@@ -1,0 +1,48 @@
+//! The Tracking-Logic knob in isolation: run the same 1000-camera
+//! workload under the four spotlight strategies and compare the active
+//! camera-set sizes and the work they induce — the paper's scalability
+//! argument (a smarter TL supports more total cameras on the same
+//! resources).
+//!
+//! Run: `cargo run --release --example tracking_strategies`
+
+use anveshak::config::{BatchingKind, ExperimentConfig, TlKind};
+use anveshak::coordinator::des;
+
+fn main() {
+    println!(
+        "{:<16} {:>9} {:>10} {:>9} {:>9} {:>11}",
+        "TL strategy", "frames", "on-time %", "peak-cams", "median-s", "detections"
+    );
+    for (label, tl, cams) in [
+        ("Base (all on)", TlKind::Base, 200), // full network melts down
+        ("BFS", TlKind::Bfs, 1000),
+        ("WBFS", TlKind::Wbfs, 1000),
+        ("WBFS+speed", TlKind::WbfsSpeed, 1000),
+        ("Probabilistic", TlKind::Probabilistic, 1000),
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("tl-{label}");
+        cfg.tl = tl;
+        cfg.num_cameras = cams;
+        cfg.workload.vertices = cams;
+        cfg.workload.edges = (cams as f64 * 2.817) as usize;
+        cfg.batching = BatchingKind::Dynamic { max: 25 };
+        let r = des::run(cfg);
+        let s = &r.summary;
+        println!(
+            "{:<16} {:>9} {:>9.1}% {:>9} {:>9.2} {:>11}",
+            label,
+            s.generated,
+            100.0 * s.on_time as f64 / s.generated.max(1) as f64,
+            r.peak_active,
+            s.latency.median,
+            r.detections
+        );
+    }
+    println!(
+        "\nSmarter spotlights process orders of magnitude fewer frames at\n\
+         the same tracking quality — the knob that lets 1000 cameras run\n\
+         on resources that cannot even sustain 200 always-on feeds."
+    );
+}

@@ -1,0 +1,146 @@
+"""AOT export: lower every (variant, batch-bucket) model to HLO text.
+
+The interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Because HLO is static-shape, one executable is exported per *batch
+bucket*; the Rust dynamic batcher pads a formed batch up to the nearest
+bucket.  Weights are exported once to ``weights.bin`` and passed as
+runtime parameters (keeps HLO text small, single upload on the Rust side).
+
+Usage::
+
+    python -m compile.aot --out ../artifacts   # from python/
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import weights as W
+
+BUCKETS = [1, 2, 4, 8, 16, 25, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple*)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(name, fn, wts, out_dir, buckets):
+    """Lower ``fn(images, query, *weights)`` for every bucket."""
+    files = {}
+    w_specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in wts]
+    for b in buckets:
+        img = jax.ShapeDtypeStruct((b, W.IMG_DIM), np.float32)
+        q = jax.ShapeDtypeStruct((W.FEAT_DIM,), np.float32)
+        lowered = jax.jit(fn).lower(img, q, *w_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_b{b}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        files[str(b)] = fname
+    return files
+
+
+def export_qf(out_dir, buckets):
+    files = {}
+    for b in buckets:
+        q = jax.ShapeDtypeStruct((W.FEAT_DIM,), np.float32)
+        e = jax.ShapeDtypeStruct((b, W.FEAT_DIM), np.float32)
+        c = jax.ShapeDtypeStruct((b,), np.float32)
+        lowered = jax.jit(model.qf_fuse).lower(q, e, c)
+        fname = f"qf_b{b}.hlo.txt"
+        (out_dir / fname).write_text(to_hlo_text(lowered))
+        files[str(b)] = fname
+    return files
+
+
+def export_weights(out_dir):
+    """Concatenate all variant weights into weights.bin + manifest entries."""
+    entries = []
+    blobs = []
+    offset = 0
+    for variant in ("va", "cr_small", "cr_large"):
+        for name, arr in W.get_weights(variant):
+            flat = np.ascontiguousarray(arr, np.float32)
+            entries.append(
+                {
+                    "name": name,
+                    "variant": variant,
+                    "shape": list(arr.shape),
+                    "offset": offset,
+                    "len": int(flat.size),
+                }
+            )
+            blobs.append(flat.tobytes())
+            offset += flat.size
+    blob = b"".join(blobs)
+    (out_dir / "weights.bin").write_bytes(blob)
+    return entries, hashlib.sha256(blob).hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--buckets", default=",".join(map(str, BUCKETS)),
+        help="comma-separated batch buckets",
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",")]
+
+    manifest = {
+        "img_dim": W.IMG_DIM,
+        "img_patches": W.IMG_PATCHES,
+        "patch_size": W.PATCH_SIZE,
+        "feat_dim": W.FEAT_DIM,
+        "buckets": buckets,
+        "variants": {},
+    }
+
+    for name, (fn, _dims) in model.VARIANTS.items():
+        wts = W.get_weights(name)
+        files = export_variant(name, fn, wts, out_dir, buckets)
+        manifest["variants"][name] = {
+            "files": files,
+            "weights": [n for n, _ in wts],
+            "params": ["images", "query"] + [n for n, _ in wts],
+            "outputs": ["scores", "embeddings"],
+        }
+        print(f"exported {name}: {len(files)} buckets")
+
+    manifest["variants"]["qf"] = {
+        "files": export_qf(out_dir, buckets),
+        "weights": [],
+        "params": ["query", "embeddings", "confidences"],
+        "outputs": ["fused_query"],
+    }
+    print("exported qf")
+
+    entries, digest = export_weights(out_dir)
+    manifest["weights"] = {
+        "file": "weights.bin",
+        "sha256": digest,
+        "entries": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote manifest + weights.bin ({len(entries)} tensors) to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the Anveshak-RS analytics models.
+
+All kernels are authored TPU-idiomatically (MXU-shaped tiles, VMEM-sized
+blocks expressed through BlockSpec) but lowered with ``interpret=True`` so
+the resulting HLO runs on any PJRT backend, including the Rust CPU client
+on the request path.  Correctness oracles live in :mod:`.ref`.
+"""
+
+from .matmul import matmul
+from .cosine_sim import cosine_sim
+from .patch_pool import patch_pool
+
+__all__ = ["matmul", "cosine_sim", "patch_pool"]

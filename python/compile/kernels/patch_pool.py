@@ -1,0 +1,53 @@
+"""Patch mean-pool Pallas kernel.
+
+First stage of the VA/CR feature extractors: a flattened frame of
+``P * S`` pixels is reduced to a ``P``-dim patch-mean vector.  The
+BlockSpec expresses the HBM -> VMEM schedule: a ``(bb, P*S)`` strip of
+frames is staged in, reduced along the patch axis, and the ``(bb, P)``
+result written back — the same role the paper's HoG/stem convolution
+plays before the dense re-id layers.
+
+VMEM per step at ``bb=4, P=64, S=128``: 4 * 8192 * 4 B = 128 KiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["patch_pool"]
+
+
+def _pool_kernel(x_ref, o_ref, *, P: int, S: int):
+    x = x_ref[...]
+    o_ref[...] = x.reshape(x.shape[0], P, S).mean(axis=2)
+
+
+@functools.partial(jax.named_call, name="pallas_patch_pool")
+def patch_pool(x, P: int, *, bb: int = 4):
+    """Mean over ``S = D/P`` contiguous pixels per patch.
+
+    Args:
+      x: ``(B, D)`` float32 flattened frames, ``D`` divisible by ``P``.
+      P: number of patches.
+      bb: batch tile size.
+
+    Returns:
+      ``(B, P)`` float32 patch means.
+    """
+    B, D = x.shape
+    if D % P != 0:
+        raise ValueError(f"pixel dim {D} not divisible by P={P}")
+    S = D // P
+    pb = (-B) % bb
+    xp = jnp.pad(x, ((0, pb), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, P=P, S=S),
+        grid=((B + pb) // bb,),
+        in_specs=[pl.BlockSpec((bb, D), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bb, P), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B + pb, P), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:B]

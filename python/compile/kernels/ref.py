@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+These are deliberately written in the most obvious way possible; pytest
+asserts the Pallas kernels match them via ``assert_allclose`` across
+hypothesis-driven shape sweeps.
+"""
+
+import jax.numpy as jnp
+
+_EPS = 1e-6
+
+
+def matmul_ref(x, w):
+    """(M,K) @ (K,N) -> (M,N)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def cosine_sim_ref(feats, query):
+    """(B,D),(D,) -> (B,) cosine similarity with the kernel's epsilon."""
+    fn = jnp.sqrt(jnp.sum(feats * feats, axis=1)) + _EPS
+    qn = jnp.sqrt(jnp.sum(query * query)) + _EPS
+    return feats @ query / (fn * qn)
+
+
+def patch_pool_ref(x, P):
+    """(B, P*S) -> (B, P) patch means."""
+    B, D = x.shape
+    return x.reshape(B, P, D // P).mean(axis=2)

@@ -1,0 +1,137 @@
+"""Layer-2 JAX analytics models for Anveshak-RS, built on the L1 kernels.
+
+Each function is the compute graph of one dataflow module from the paper
+(Table 1), expressed over the Pallas kernels so the hot loops lower into
+the same HLO module:
+
+* :func:`va_features`   — VA stage (HoG-substitute): patch-pool stem +
+  2-layer projection + query match score.
+* :func:`cr_reid_small` — CR stage, App 1 (OpenReid substitute).
+* :func:`cr_reid_large` — CR stage, App 2 (Ahmed et al. substitute,
+  ~63% more per-frame compute via an extra 512-wide layer).
+* :func:`qf_fuse`       — QF stage: confidence-gated query fusion
+  (RNN-fusion substitute, [42] in the paper).
+
+Every model takes ``(images, query_emb, *weights)`` and returns
+``(scores, embeddings)``; passing ``query_emb = 0`` turns the score head
+off, which is how the Rust runtime bootstraps the query embedding from the
+query *image* using the same executable (no separate embed artifact).
+
+``*_ref`` twins are pure-jnp oracles over :mod:`.kernels.ref` used by
+pytest to validate the full Pallas compositions.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cosine_sim, matmul, patch_pool
+from .kernels import ref
+from . import weights as W
+
+
+def _mlp(z, wts, dims, mm):
+    """Dense stack matching weights._mlp_weights layout."""
+    i = 0
+    n_layers = len(dims) - 1
+    for layer in range(n_layers):
+        w = wts[i]
+        i += 1
+        z = mm(z, w)
+        if layer < n_layers - 1:
+            b = wts[i]
+            i += 1
+            # tanh keeps hidden features zero-centred, so embeddings of
+            # unrelated identities stay near-orthogonal (a ReLU stack
+            # pushes every embedding into the positive orthant and
+            # inflates negative-pair cosine scores).
+            z = jnp.tanh(z + b)
+    assert i == len(wts), f"consumed {i} of {len(wts)} weights"
+    return z
+
+
+def _model(images, query_emb, wts, dims, *, mm, pool, cos):
+    z = pool(images, W.IMG_PATCHES)
+    emb = _mlp(z, wts, dims, mm)
+    scores = cos(emb, query_emb)
+    return scores, emb
+
+
+def va_features(images, query_emb, *wts):
+    """VA: (B, IMG_DIM), (FEAT_DIM,) -> ((B,), (B, FEAT_DIM))."""
+    return _model(
+        images, query_emb, wts, W.VA_DIMS,
+        mm=matmul, pool=patch_pool, cos=cosine_sim,
+    )
+
+
+def cr_reid_small(images, query_emb, *wts):
+    """CR App 1: deeper re-id head over the same stem."""
+    return _model(
+        images, query_emb, wts, W.CR_SMALL_DIMS,
+        mm=matmul, pool=patch_pool, cos=cosine_sim,
+    )
+
+
+def cr_reid_large(images, query_emb, *wts):
+    """CR App 2: widest head; ~1.6x the per-frame compute of cr_small."""
+    return _model(
+        images, query_emb, wts, W.CR_LARGE_DIMS,
+        mm=matmul, pool=patch_pool, cos=cosine_sim,
+    )
+
+
+def qf_fuse(query_emb, embs, confs):
+    """Confidence-gated query fusion.
+
+    High-confidence detections pull the query embedding toward their
+    mean; the gate ``sigmoid(8 * (conf - 0.5))`` suppresses low-confidence
+    evidence.  Output is re-normalised to unit length.
+    """
+    gate = 1.0 / (1.0 + jnp.exp(-8.0 * (confs - 0.5)))  # (B,)
+    delta = jnp.sum(gate[:, None] * (embs - query_emb), axis=0)
+    # Normalise by batch size (not sum(gate)): a batch of low-confidence
+    # detections must barely move the query, not be re-amplified.
+    delta = delta / confs.shape[0]
+    fused = query_emb + 0.3 * delta
+    return (fused / (jnp.linalg.norm(fused) + 1e-6),)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference twins (oracle path, no Pallas).
+# ---------------------------------------------------------------------------
+
+def _pool_ref(x, P):
+    return ref.patch_pool_ref(x, P)
+
+
+def va_features_ref(images, query_emb, *wts):
+    return _model(
+        images, query_emb, wts, W.VA_DIMS,
+        mm=ref.matmul_ref, pool=_pool_ref, cos=ref.cosine_sim_ref,
+    )
+
+
+def cr_reid_small_ref(images, query_emb, *wts):
+    return _model(
+        images, query_emb, wts, W.CR_SMALL_DIMS,
+        mm=ref.matmul_ref, pool=_pool_ref, cos=ref.cosine_sim_ref,
+    )
+
+
+def cr_reid_large_ref(images, query_emb, *wts):
+    return _model(
+        images, query_emb, wts, W.CR_LARGE_DIMS,
+        mm=ref.matmul_ref, pool=_pool_ref, cos=ref.cosine_sim_ref,
+    )
+
+
+VARIANTS = {
+    "va": (va_features, W.VA_DIMS),
+    "cr_small": (cr_reid_small, W.CR_SMALL_DIMS),
+    "cr_large": (cr_reid_large, W.CR_LARGE_DIMS),
+}
+
+REF_VARIANTS = {
+    "va": va_features_ref,
+    "cr_small": cr_reid_small_ref,
+    "cr_large": cr_reid_large_ref,
+}

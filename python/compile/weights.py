@@ -1,0 +1,81 @@
+"""Deterministic model weights for the Anveshak-RS analytics variants.
+
+The reproduction has no training loop (the paper uses off-the-shelf
+pretrained HoG / re-id models); instead each variant gets seeded random
+projection weights.  Because the synthetic frames are generated as an
+identity embedding broadcast across patches plus noise (see
+``rust/src/sim/images.rs`` and :func:`make_identity_image`), a shared
+random projection maps same-identity frames to nearby embeddings and
+different identities far apart — giving the same TP/FP behaviour the
+CUHK03 labels provided, with controllable margins.
+
+Weights are exported to ``artifacts/weights.bin`` (little-endian f32,
+concatenated in manifest order) and passed to the HLO executables as
+runtime parameters, keeping the HLO text small and the weight data in one
+binary blob the Rust runtime uploads once.
+"""
+
+import numpy as np
+
+# Model geometry — mirrored in rust/src/runtime/manifest.rs via manifest.json.
+IMG_PATCHES = 64  # P: patches per frame
+PATCH_SIZE = 128  # S: pixels per patch
+IMG_DIM = IMG_PATCHES * PATCH_SIZE  # flattened frame length (= 8192)
+FEAT_DIM = 128  # re-id embedding dimension
+
+SEED = 42
+
+# Hidden widths per variant.  cr_large carries one extra 512-wide layer —
+# the paper's App 2 CR is ~63% slower per frame than App 1's (§5.3).
+VA_DIMS = [IMG_PATCHES, 128, FEAT_DIM]
+CR_SMALL_DIMS = [IMG_PATCHES, 256, 256, FEAT_DIM]
+CR_LARGE_DIMS = [IMG_PATCHES, 512, 512, 512, FEAT_DIM]
+
+
+def _mlp_weights(rng, prefix, dims):
+    """Xavier-scaled dense stack; biases only on hidden (tanh) layers."""
+    out = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        w = (rng.randn(din, dout) * np.sqrt(1.0 / din)).astype(np.float32)
+        out.append((f"{prefix}/W{i}", w))
+        if i < len(dims) - 2:  # hidden layer bias
+            out.append((f"{prefix}/b{i}", np.zeros(dout, np.float32)))
+    return out
+
+
+def get_weights(variant: str):
+    """Ordered ``[(name, array)]`` for a model variant.
+
+    Order is the parameter order of the lowered HLO after
+    ``(images, query)`` and must stay in sync with ``model.py``.
+    """
+    rng = np.random.RandomState(SEED)
+    # Draw in a fixed global order so each variant's weights are stable
+    # regardless of which variants are exported.
+    all_w = {
+        "va": _mlp_weights(rng, "va", VA_DIMS),
+        "cr_small": _mlp_weights(rng, "cr_small", CR_SMALL_DIMS),
+        "cr_large": _mlp_weights(rng, "cr_large", CR_LARGE_DIMS),
+        "qf": [],  # query fusion has no trainable parameters
+    }
+    if variant not in all_w:
+        raise KeyError(f"unknown variant {variant!r}")
+    return all_w[variant]
+
+
+def make_identity_embedding(identity: int) -> np.ndarray:
+    """Unit-norm P-dim identity code; deterministic per identity id."""
+    rng = np.random.RandomState(0xC0FFEE ^ identity)
+    e = rng.randn(IMG_PATCHES).astype(np.float32)
+    return e / np.linalg.norm(e)
+
+
+def make_identity_image(identity: int, frame: int, noise: float = 0.25):
+    """Synthetic CUHK03 substitute: identity code broadcast across patches
+    plus per-frame Gaussian noise.  ``patch_pool`` recovers ~the code."""
+    e = make_identity_embedding(identity)
+    rng = np.random.RandomState((identity * 1_000_003 + frame) & 0x7FFFFFFF)
+    img = np.repeat(e, PATCH_SIZE) + noise * rng.randn(IMG_DIM).astype(
+        np.float32
+    )
+    return img.astype(np.float32)

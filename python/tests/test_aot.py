@@ -1,0 +1,69 @@
+"""AOT export tests: manifest integrity, weights.bin layout, HLO text
+well-formedness (parseable header, expected parameter count)."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import weights as W
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def export_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--buckets", "1,4"],
+        cwd=ROOT, check=True, capture_output=True, text=True,
+    )
+    return out
+
+
+def test_manifest_written(export_dir):
+    man = json.loads((export_dir / "manifest.json").read_text())
+    assert man["img_dim"] == W.IMG_DIM
+    assert man["feat_dim"] == W.FEAT_DIM
+    assert man["buckets"] == [1, 4]
+    assert set(man["variants"]) == {"va", "cr_small", "cr_large", "qf"}
+
+
+def test_all_hlo_files_exist_and_parse_header(export_dir):
+    man = json.loads((export_dir / "manifest.json").read_text())
+    for v, spec in man["variants"].items():
+        for b, fname in spec["files"].items():
+            text = (export_dir / fname).read_text()
+            assert text.startswith("HloModule"), f"{v} b{b} bad header"
+            assert "ENTRY" in text
+
+
+def test_weights_bin_layout(export_dir):
+    man = json.loads((export_dir / "manifest.json").read_text())
+    blob = np.fromfile(export_dir / "weights.bin", dtype=np.float32)
+    total = sum(e["len"] for e in man["weights"]["entries"])
+    assert blob.size == total
+    # Each entry round-trips to the generator's array.
+    for e in man["weights"]["entries"]:
+        arr = blob[e["offset"]:e["offset"] + e["len"]].reshape(e["shape"])
+        src = dict(W.get_weights(e["variant"]))[e["name"]]
+        np.testing.assert_allclose(arr, src, atol=0)
+
+
+def test_weight_order_matches_params(export_dir):
+    man = json.loads((export_dir / "manifest.json").read_text())
+    for v in ("va", "cr_small", "cr_large"):
+        spec = man["variants"][v]
+        assert spec["params"][:2] == ["images", "query"]
+        assert spec["params"][2:] == spec["weights"]
+        assert [n for n, _ in W.get_weights(v)] == spec["weights"]
+
+
+def test_batch_bucket_shapes_in_hlo(export_dir):
+    man = json.loads((export_dir / "manifest.json").read_text())
+    text = (export_dir / man["variants"]["va"]["files"]["4"]).read_text()
+    assert f"f32[4,{W.IMG_DIM}]" in text  # images param at bucket 4

@@ -1,0 +1,69 @@
+"""Pallas cosine-similarity kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import cosine_sim
+from compile.kernels.ref import cosine_sim_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    d=st.integers(1, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cosine_matches_ref(b, d, seed):
+    rng = np.random.default_rng(seed)
+    f, q = _rand(rng, b, d), _rand(rng, d)
+    assert_allclose(cosine_sim(f, q), cosine_sim_ref(f, q),
+                    rtol=1e-4, atol=1e-5)
+
+
+def test_cosine_self_similarity_is_one():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, 128)
+    f = jnp.stack([q, 2.0 * q, -q])
+    out = np.asarray(cosine_sim(f, q))
+    assert_allclose(out[:2], [1.0, 1.0], atol=1e-3)
+    assert_allclose(out[2], -1.0, atol=1e-3)
+
+
+def test_cosine_orthogonal_is_zero():
+    f = jnp.asarray([[1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    q = jnp.asarray([0.0, 1.0], jnp.float32)
+    out = np.asarray(cosine_sim(f, q))
+    assert abs(out[0]) < 1e-5 and abs(out[1] - 1.0) < 1e-3
+
+
+def test_cosine_bounded():
+    rng = np.random.default_rng(7)
+    out = np.asarray(cosine_sim(_rand(rng, 33, 64), _rand(rng, 64)))
+    assert np.all(out <= 1.0 + 1e-5) and np.all(out >= -1.0 - 1e-5)
+
+
+def test_cosine_zero_vectors_safe():
+    f = jnp.zeros((3, 16), jnp.float32)
+    q = jnp.zeros(16, jnp.float32)
+    out = np.asarray(cosine_sim(f, q))
+    assert np.all(np.isfinite(out)) and assert_allclose(out, 0.0, atol=1e-6) is None
+
+
+def test_cosine_query_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="query shape"):
+        cosine_sim(jnp.zeros((2, 8), jnp.float32), jnp.zeros(9, jnp.float32))
+
+
+@pytest.mark.parametrize("bb", [1, 2, 8, 16])
+def test_cosine_tile_sizes(bb):
+    rng = np.random.default_rng(9)
+    f, q = _rand(rng, 11, 32), _rand(rng, 32)
+    assert_allclose(cosine_sim(f, q, bb=bb), cosine_sim_ref(f, q),
+                    rtol=1e-4, atol=1e-5)

@@ -1,0 +1,70 @@
+"""Pallas matmul kernel vs pure-jnp oracle (hypothesis shape sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import matmul
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_random_shapes(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 128, 128), (8, 128, 128),
+                                   (25, 64, 512), (32, 512, 128),
+                                   (3, 1, 1), (1, 1, 1), (128, 128, 128)])
+def test_matmul_block_boundaries(m, k, n):
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, m, k), _rand(rng, k, n)
+    assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(4, 32, 32), (8, 128, 128),
+                                      (16, 64, 256), (1, 256, 8)])
+def test_matmul_custom_blocking(bm, bk, bn):
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 13, 200), _rand(rng, 200, 70)
+    out = matmul(x, w, bm=bm, bk=bk, bn=bn)
+    assert_allclose(out, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(64, dtype=jnp.float32)
+    x = _rand(np.random.default_rng(2), 7, 64)
+    assert_allclose(matmul(x, eye), x, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_zeros():
+    x = jnp.zeros((5, 33), jnp.float32)
+    w = jnp.zeros((33, 9), jnp.float32)
+    assert_allclose(matmul(x, w), jnp.zeros((5, 9)), atol=0)
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 8), jnp.float32)
+    w = jnp.zeros((9, 4), jnp.float32)
+    with pytest.raises(ValueError, match="inner dims"):
+        matmul(x, w)
+
+
+def test_matmul_result_dtype_f32():
+    rng = np.random.default_rng(3)
+    out = matmul(_rand(rng, 2, 2), _rand(rng, 2, 2))
+    assert out.dtype == jnp.float32

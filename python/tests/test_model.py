@@ -1,0 +1,116 @@
+"""L2 model tests: Pallas composition vs pure-jnp oracle, shape contracts,
+and the identity-separation property the whole tracking pipeline rests on."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile import weights as W
+
+
+def _wts(variant):
+    return [jnp.asarray(a) for _, a in W.get_weights(variant)]
+
+
+def _imgs(identities, frames0=0):
+    return jnp.stack([
+        jnp.asarray(W.make_identity_image(i, frames0 + k))
+        for k, i in enumerate(identities)
+    ])
+
+
+@pytest.mark.parametrize("variant", ["va", "cr_small", "cr_large"])
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_model_shapes(variant, batch):
+    fn, _ = model.VARIANTS[variant]
+    imgs = _imgs([7] * batch)
+    q = jnp.zeros(W.FEAT_DIM, jnp.float32)
+    scores, embs = fn(imgs, q, *_wts(variant))
+    assert scores.shape == (batch,)
+    assert embs.shape == (batch, W.FEAT_DIM)
+    assert scores.dtype == jnp.float32 and embs.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("variant", ["va", "cr_small", "cr_large"])
+def test_model_matches_ref(variant):
+    fn, _ = model.VARIANTS[variant]
+    ref_fn = model.REF_VARIANTS[variant]
+    imgs = _imgs([1, 2, 3, 1])
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal(W.FEAT_DIM), jnp.float32)
+    wts = _wts(variant)
+    s1, e1 = fn(imgs, q, *wts)
+    s2, e2 = ref_fn(imgs, q, *wts)
+    assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-4)
+    assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("variant", ["va", "cr_small", "cr_large"])
+def test_identity_separation(variant):
+    """Same-identity frames must score well above different-identity ones
+    against a query embedding bootstrapped from the query image."""
+    fn, _ = model.VARIANTS[variant]
+    wts = _wts(variant)
+    zero_q = jnp.zeros(W.FEAT_DIM, jnp.float32)
+    # Bootstrap query embedding exactly as the Rust runtime does.
+    _, q_emb = fn(_imgs([42]), zero_q, *wts)
+    q_emb = q_emb[0]
+
+    pos = _imgs([42, 42, 42, 42], frames0=10)
+    neg = _imgs([7, 99, 13, 55], frames0=10)
+    pos_scores, _ = fn(pos, q_emb, *wts)
+    neg_scores, _ = fn(neg, q_emb, *wts)
+    assert float(jnp.min(pos_scores)) > 0.7, np.asarray(pos_scores)
+    assert float(jnp.max(neg_scores)) < 0.5, np.asarray(neg_scores)
+
+
+def test_score_head_off_with_zero_query():
+    fn, _ = model.VARIANTS["va"]
+    scores, _ = fn(_imgs([1, 2]), jnp.zeros(W.FEAT_DIM, jnp.float32),
+                   *_wts("va"))
+    assert_allclose(np.asarray(scores), 0.0, atol=1e-5)
+
+
+def test_qf_fuse_moves_toward_confident_embeddings():
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal(W.FEAT_DIM).astype(np.float32)
+    q /= np.linalg.norm(q)
+    target = rng.standard_normal(W.FEAT_DIM).astype(np.float32)
+    target /= np.linalg.norm(target)
+    embs = jnp.asarray(np.stack([target] * 4))
+    high = jnp.asarray([0.95, 0.9, 0.99, 0.92], jnp.float32)
+    low = jnp.asarray([0.05, 0.1, 0.02, 0.08], jnp.float32)
+    (fused_hi,) = model.qf_fuse(jnp.asarray(q), embs, high)
+    (fused_lo,) = model.qf_fuse(jnp.asarray(q), embs, low)
+    d0 = float(np.asarray(target) @ q)
+    d_hi = float(np.asarray(fused_hi) @ np.asarray(target))
+    d_lo = float(np.asarray(fused_lo) @ np.asarray(target))
+    assert d_hi > d0 + 0.05      # confident evidence pulls query to target
+    assert abs(d_lo - d0) < 0.05  # low-confidence evidence barely moves it
+
+
+def test_qf_fuse_output_unit_norm():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal(W.FEAT_DIM), jnp.float32)
+    embs = jnp.asarray(rng.standard_normal((5, W.FEAT_DIM)), jnp.float32)
+    confs = jnp.asarray(rng.uniform(0, 1, 5), jnp.float32)
+    (fused,) = model.qf_fuse(q, embs, confs)
+    assert abs(float(jnp.linalg.norm(fused)) - 1.0) < 1e-3
+
+
+def test_cr_large_has_more_flops_than_cr_small():
+    """App 2's CR must carry more per-frame compute (paper: ~63% more)."""
+    def flops(dims):
+        return sum(a * b for a, b in zip(dims[:-1], dims[1:]))
+    assert flops(W.CR_LARGE_DIMS) > 1.4 * flops(W.CR_SMALL_DIMS)
+
+
+def test_identity_embedding_deterministic_and_unit():
+    e1 = W.make_identity_embedding(5)
+    e2 = W.make_identity_embedding(5)
+    e3 = W.make_identity_embedding(6)
+    assert_allclose(e1, e2, atol=0)
+    assert abs(np.linalg.norm(e1) - 1.0) < 1e-5
+    assert abs(float(e1 @ e3)) < 0.5

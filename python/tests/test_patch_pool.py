@@ -1,0 +1,52 @@
+"""Pallas patch-pool kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import patch_pool
+from compile.kernels.ref import patch_pool_ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 33),
+    p=st.sampled_from([1, 4, 16, 64]),
+    s=st.sampled_from([1, 8, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool_matches_ref(b, p, s, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, p * s)), jnp.float32)
+    assert_allclose(patch_pool(x, p), patch_pool_ref(x, p),
+                    rtol=1e-5, atol=1e-6)
+
+
+def test_pool_constant_patches():
+    # patch p filled with value p -> mean is exactly p
+    P, S = 8, 16
+    x = jnp.repeat(jnp.arange(P, dtype=jnp.float32), S)[None, :]
+    out = np.asarray(patch_pool(x, P))
+    assert_allclose(out[0], np.arange(P, dtype=np.float32), atol=0)
+
+
+def test_pool_indivisible_raises():
+    with pytest.raises(ValueError, match="not divisible"):
+        patch_pool(jnp.zeros((1, 10), jnp.float32), 3)
+
+
+def test_pool_single_patch_is_row_mean():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    assert_allclose(np.asarray(patch_pool(x, 1))[:, 0],
+                    np.asarray(x).mean(axis=1), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("bb", [1, 2, 4, 16])
+def test_pool_tile_sizes(bb):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((9, 256)), jnp.float32)
+    assert_allclose(patch_pool(x, 16, bb=bb), patch_pool_ref(x, 16),
+                    rtol=1e-5, atol=1e-6)

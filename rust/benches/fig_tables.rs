@@ -1,0 +1,87 @@
+//! One bench per paper table/figure: runs each §5 experiment preset end
+//! to end on the DES engine and prints the paper-comparable headline
+//! row plus the wall-clock cost of regenerating it.
+//!
+//! Run via `cargo bench --bench fig_tables`. (Hand-rolled harness; the
+//! offline build has no criterion.) The full-resolution CSV series come
+//! from `cargo run --release --bin harness -- all`.
+
+use std::time::Instant;
+
+use anveshak::config::preset;
+use anveshak::coordinator::des;
+
+struct Row {
+    fig: &'static str,
+    label: &'static str,
+    preset: &'static str,
+    paper: &'static str,
+}
+
+fn main() {
+    let rows = [
+        Row { fig: "Fig5/7a", label: "SB-1 (stream)", preset: "fig7a",
+              paper: "median ~0.2s, occasional >gamma at peak cams" },
+        Row { fig: "Fig5/7b", label: "SB-20", preset: "fig7b",
+              paper: "median 3.65s, ~6% (703) delayed" },
+        Row { fig: "Fig5/7c", label: "NOB-25", preset: "fig7c",
+              paper: "median 0.4s, 90 delayed" },
+        Row { fig: "Fig5/7d", label: "DB-25", preset: "fig7d",
+              paper: "median 7.66s, 0 delayed" },
+        Row { fig: "Fig6b", label: "SB-1 es=6", preset: "fig6b_sb1",
+              paper: "57% delayed" },
+        Row { fig: "Fig6b", label: "SB-20 es=6", preset: "fig6b_sb20",
+              paper: "0 delayed (this run), knob-dependent" },
+        Row { fig: "Fig6b", label: "DB-25 es=6", preset: "fig6b_db25",
+              paper: "0 delayed" },
+        Row { fig: "Fig9", label: "DB-25 +bw-drop", preset: "fig9_anv",
+              paper: "stable, no delays after 30Mbps drop" },
+        Row { fig: "Fig9", label: "NOB +bw-drop", preset: "fig9_nob",
+              paper: "unstable after 500s" },
+        Row { fig: "Fig10", label: "WBFS SB-1", preset: "fig10_wbfs_sb1",
+              paper: "stable; peak 67 cams (vs BFS 111)" },
+        Row { fig: "Fig10", label: "Base 100c", preset: "fig10_base_100",
+              paper: "stable, ~60k frames" },
+        Row { fig: "Fig10", label: "Base 200c", preset: "fig10_base_200",
+              paper: "unstable, >55% of ~120k delayed" },
+        Row { fig: "Fig11", label: "DB-25 es=7", preset: "fig11_nodrops",
+              paper: "unstable, 85% delayed" },
+        Row { fig: "Fig11", label: "+drops es=7", preset: "fig11_drops",
+              paper: "stable, 17% dropped, 0 delayed" },
+        Row { fig: "Fig12", label: "App2 SB-20", preset: "fig12_sb20",
+              paper: "median 4.33s, ~5% delayed" },
+        Row { fig: "Fig12", label: "App2 DB-25", preset: "fig12_db25",
+              paper: "median 5.39s, 0 delayed" },
+        Row { fig: "Fig12", label: "App2 es6 drops", preset: "fig12_es6_drops",
+              paper: "median 5.36s, ~12% dropped" },
+    ];
+
+    println!(
+        "{:<8} {:<16} {:>8} {:>8} {:>7} {:>7} {:>8} {:>6} {:>9}  paper-expectation",
+        "figure", "config", "events", "on-time", "delay%", "drop%",
+        "median-s", "peak", "bench-s"
+    );
+    let mut total = 0.0;
+    for row in &rows {
+        let cfg = preset(row.preset);
+        let start = Instant::now();
+        let r = des::run(cfg);
+        let wall = start.elapsed().as_secs_f64();
+        total += wall;
+        let s = &r.summary;
+        println!(
+            "{:<8} {:<16} {:>8} {:>8} {:>6.1}% {:>6.1}% {:>8.2} {:>6} {:>9.2}  {}",
+            row.fig,
+            row.label,
+            s.generated,
+            s.on_time,
+            100.0 * s.delay_rate(),
+            100.0 * s.drop_rate(),
+            s.latency.median,
+            r.peak_active,
+            wall,
+            row.paper
+        );
+    }
+    println!("\ntotal bench wall time: {total:.1}s for {} experiments", rows.len());
+}

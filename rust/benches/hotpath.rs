@@ -1,0 +1,184 @@
+//! Hot-path microbenchmarks (hand-rolled harness; the offline build has
+//! no criterion). Run via `cargo bench --bench hotpath`.
+//!
+//! Covers every L3 request-path primitive plus the PJRT model execution
+//! per batch bucket (the measured ξ(b) of §4.2), and the DES engine's
+//! virtual-event throughput that bounds harness turnaround.
+
+use std::time::Instant;
+
+use anveshak::config::{BatchingKind, ExperimentConfig, WorkloadConfig};
+use anveshak::coordinator::des;
+use anveshak::dataflow::Partitioner;
+use anveshak::roadnet::{bfs_spotlight, generate, wbfs_spotlight};
+use anveshak::runtime::{default_dir, ModelPool};
+use anveshak::sim::identity_image;
+use anveshak::tuning::{
+    drop_before_exec, Batcher, BatcherPoll, BudgetManager, EventRecord,
+    QueuedEvent, Signal, XiModel,
+};
+use anveshak::util::{Json, MS, SEC};
+
+/// Time `f` over `iters` iterations; returns ns/op.
+fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+    // Warm-up.
+    for _ in 0..iters.min(100) {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = start.elapsed().as_nanos() as f64 / iters as f64;
+    let (val, unit) = if ns > 1e6 {
+        (ns / 1e6, "ms")
+    } else if ns > 1e3 {
+        (ns / 1e3, "us")
+    } else {
+        (ns, "ns")
+    };
+    println!("{name:<44} {val:>10.2} {unit}/op   ({iters} iters)");
+    ns
+}
+
+fn main() {
+    println!("== L3 request-path primitives ==");
+
+    let part = Partitioner::new(10);
+    let mut k = 0usize;
+    bench("partitioner.route", 5_000_000, || {
+        k = k.wrapping_add(1);
+        std::hint::black_box(part.route(k));
+    });
+
+    let xi = XiModel::affine_ms(52.5, 67.5);
+    bench("xi.estimate", 5_000_000, || {
+        std::hint::black_box(xi.xi(std::hint::black_box(17)));
+    });
+
+    bench("drop_point_2.check", 5_000_000, || {
+        std::hint::black_box(drop_before_exec(
+            std::hint::black_box(10 * SEC),
+            2 * SEC,
+            1_740 * MS,
+            15 * SEC,
+        ));
+    });
+
+    // Batcher: steady-state push+poll cycle at batch ~8.
+    let mut b: Batcher<u64> = Batcher::dynamic(25);
+    let mut now = 0i64;
+    let mut id = 0u64;
+    bench("batcher.push_poll (dynamic)", 300_000, || {
+        now += 125 * MS;
+        b.push(QueuedEvent {
+            item: id,
+            id,
+            arrival: now,
+            deadline: now + 10 * SEC,
+        });
+        id += 1;
+        if let BatcherPoll::Ready(batch) = b.poll(now, &xi) {
+            std::hint::black_box(batch.len());
+        }
+    });
+
+    // Budget bookkeeping: record + signal application.
+    let mut bm = BudgetManager::new(10, 25, 4096);
+    let mut e = 0u64;
+    bench("budget.record", 1_000_000, || {
+        bm.record(
+            e,
+            EventRecord {
+                departure: 5 * SEC,
+                queue: SEC,
+                batch: 10,
+                sent_to: (e % 10) as usize,
+            },
+        );
+        e += 1;
+    });
+    let mut s = 0u64;
+    bench("budget.apply(reject)", 1_000_000, || {
+        bm.apply(
+            Signal::Reject {
+                event: s % e,
+                eps: SEC,
+                sum_queue: 2 * SEC,
+            },
+            &xi,
+        );
+        s += 1;
+    });
+
+    println!("\n== Road-network / TL substrate ==");
+    let g = generate(&WorkloadConfig::default(), 2019);
+    bench("wbfs_spotlight r=500m (1000v graph)", 2_000, || {
+        std::hint::black_box(wbfs_spotlight(&g, 0, 500.0).len());
+    });
+    bench("bfs_spotlight r=500m", 2_000, || {
+        std::hint::black_box(bfs_spotlight(&g, 0, 500.0, 84.5).len());
+    });
+
+    println!("\n== Infra substrates ==");
+    let manifest_text = std::fs::read_to_string(
+        default_dir().join("manifest.json"),
+    )
+    .unwrap_or_else(|_| "{\"a\":[1,2,3]}".into());
+    bench("json.parse(manifest)", 2_000, || {
+        std::hint::black_box(Json::parse(&manifest_text).unwrap());
+    });
+
+    println!("\n== DES engine throughput ==");
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_cameras = 200;
+        cfg.workload.vertices = 200;
+        cfg.workload.edges = 560;
+        cfg.duration_secs = 120.0;
+        cfg.tl = anveshak::config::TlKind::Base; // all active: max load
+        cfg.batching = BatchingKind::Dynamic { max: 25 };
+        cfg.drops_enabled = true;
+        let start = Instant::now();
+        let r = des::run(cfg);
+        let wall = start.elapsed().as_secs_f64();
+        // Each source event crosses ~4 tasks; count hops as DES events.
+        let hops = r.summary.generated * 4;
+        println!(
+            "des.run 200cams x 120s: {:.2}s wall, {} source events, {:.0} task-hops/s",
+            wall,
+            r.summary.generated,
+            hops as f64 / wall
+        );
+    }
+
+    println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");
+    match ModelPool::load(&default_dir(), &["va", "cr_small"], Some(&[1, 8, 25])) {
+        Ok(pool) => {
+            for variant in ["va", "cr_small"] {
+                let (fit, samples) = pool.calibrate_xi(variant, 5).unwrap();
+                for (b, us) in &samples {
+                    println!(
+                        "pjrt.{variant:<9} b={b:<3} {:>9.2} ms/batch  {:>8.2} ms/event",
+                        *us as f64 / 1e3,
+                        *us as f64 / 1e3 / *b as f64
+                    );
+                }
+                println!(
+                    "pjrt.{variant:<9} fitted xi(b) = {:.2} + {:.3}*b ms",
+                    fit.alpha_us() / 1e3,
+                    fit.beta_us() / 1e3
+                );
+            }
+            // End-to-end model call including upload of one frame.
+            let img = identity_image(1, 0, 0.25);
+            let q = vec![0f32; pool.feat_dim()];
+            bench("pjrt.va.execute b=1 (incl upload)", 200, || {
+                std::hint::black_box(
+                    pool.execute("va", &img, &q).unwrap().scores[0],
+                );
+            });
+        }
+        Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+}

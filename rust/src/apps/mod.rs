@@ -1,0 +1,184 @@
+//! The four illustrative tracking applications (Table 1).
+//!
+//! Each app is a composition of user logic over the fixed dataflow:
+//!
+//! | App | FC | VA | CR | TL | QF |
+//! |-----|----|----|----|----|----|
+//! | 1 | Active? | HoG-like features | Re-id (small) | WBFS | — |
+//! | 2 | Active? | HoG-like features | Re-id (large) | BFS | RNN-fusion |
+//! | 3 | FrameRate | YOLO-like (cars) | Car re-id | WBFS w/ speed | — |
+//! | 4 | Active? | Re-id (small) | Re-id (large) | Probabilistic | — |
+//!
+//! [`AppSpec::apply`] configures an [`ExperimentConfig`] for the DES
+//! engine; the `*_variant` names select AOT artifacts for the live
+//! engine.
+
+use crate::config::{AppKind, ExperimentConfig, TlKind};
+
+/// Composition of one tracking application.
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub kind: AppKind,
+    pub name: &'static str,
+    pub description: &'static str,
+    /// FC user logic: simple active flag vs frame-rate control.
+    pub fc_logic: &'static str,
+    /// AOT model variant the live VA stage runs.
+    pub va_variant: &'static str,
+    /// AOT model variant the live CR stage runs.
+    pub cr_variant: &'static str,
+    /// Default tracking logic.
+    pub tl: TlKind,
+    /// Whether query fusion runs on high-confidence detections.
+    pub qf: bool,
+    /// CR per-frame cost multiplier relative to App 1's CR (the paper
+    /// reports App 2's CR at ~1.63x).
+    pub cr_cost: f64,
+    /// VA cost multiplier (App 4 runs a DNN in VA, not HoG).
+    pub va_cost: f64,
+}
+
+/// Table-1 composition for an application.
+pub fn spec(kind: AppKind) -> AppSpec {
+    match kind {
+        AppKind::App1 => AppSpec {
+            kind,
+            name: "App1-person",
+            description: "Missing-person tracking: HoG VA, OpenReid-class \
+                          CR, weighted-BFS spotlight.",
+            fc_logic: "active-flag",
+            va_variant: "va",
+            cr_variant: "cr_small",
+            tl: TlKind::Wbfs,
+            qf: false,
+            cr_cost: 1.0,
+            va_cost: 1.0,
+        },
+        AppKind::App2 => AppSpec {
+            kind,
+            name: "App2-person-fusion",
+            description: "Person tracking with a deeper CR DNN and \
+                          RNN-style query fusion.",
+            fc_logic: "active-flag",
+            va_variant: "va",
+            cr_variant: "cr_large",
+            tl: TlKind::Bfs,
+            qf: true,
+            cr_cost: 1.63,
+            va_cost: 1.0,
+        },
+        AppKind::App3 => AppSpec {
+            kind,
+            name: "App3-vehicle",
+            description: "Stolen-vehicle tracking: YOLO-class VA, BoxCars \
+                          CR, speed-aware WBFS with FC frame-rate control.",
+            fc_logic: "frame-rate",
+            va_variant: "va",
+            cr_variant: "cr_small",
+            tl: TlKind::WbfsSpeed,
+            qf: false,
+            cr_cost: 1.2,
+            va_cost: 2.5, // YOLO-class detector is heavier than HoG
+        },
+        AppKind::App4 => AppSpec {
+            kind,
+            name: "App4-two-stage",
+            description: "Two-stage re-id (small model in VA, large in CR) \
+                          with Naive-Bayes path-likelihood TL.",
+            fc_logic: "active-flag",
+            va_variant: "cr_small",
+            cr_variant: "cr_large",
+            tl: TlKind::Probabilistic,
+            qf: false,
+            cr_cost: 1.63,
+            va_cost: 3.0,
+        },
+    }
+}
+
+impl AppSpec {
+    /// Configure an experiment for this application: tracking logic and
+    /// the per-stage service-cost scaling relative to App 1's profile.
+    ///
+    /// Leaves `cfg.tl` alone if the caller already overrode it (the §5
+    /// experiments sweep TL independent of the app).
+    pub fn apply(&self, cfg: &mut ExperimentConfig, override_tl: bool) {
+        cfg.app = self.kind;
+        if override_tl {
+            cfg.tl = self.tl;
+        }
+        cfg.service.cr_alpha_ms *= self.cr_cost;
+        cfg.service.cr_beta_ms *= self.cr_cost;
+        cfg.service.va_alpha_ms *= self.va_cost;
+        cfg.service.va_beta_ms *= self.va_cost;
+        if matches!(self.fc_logic, "frame-rate") {
+            // App 3's FC throttles the frame rate for slow targets; the
+            // entity defaults to vehicle speeds in that app.
+            cfg.workload.entity_speed_mps =
+                cfg.workload.entity_speed_mps.max(8.0);
+            cfg.tl_peak_speed_mps = cfg.tl_peak_speed_mps.max(14.0);
+        }
+    }
+}
+
+/// All four app specs.
+pub fn all() -> Vec<AppSpec> {
+    vec![
+        spec(AppKind::App1),
+        spec(AppKind::App2),
+        spec(AppKind::App3),
+        spec(AppKind::App4),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_compositions() {
+        let a1 = spec(AppKind::App1);
+        assert_eq!(a1.cr_variant, "cr_small");
+        assert_eq!(a1.tl, TlKind::Wbfs);
+        assert!(!a1.qf);
+
+        let a2 = spec(AppKind::App2);
+        assert_eq!(a2.cr_variant, "cr_large");
+        assert!(a2.qf);
+        assert!((a2.cr_cost - 1.63).abs() < 1e-9);
+
+        let a3 = spec(AppKind::App3);
+        assert_eq!(a3.fc_logic, "frame-rate");
+        assert_eq!(a3.tl, TlKind::WbfsSpeed);
+
+        let a4 = spec(AppKind::App4);
+        assert_eq!(a4.va_variant, "cr_small"); // small re-id in VA
+        assert_eq!(a4.tl, TlKind::Probabilistic);
+    }
+
+    #[test]
+    fn apply_scales_service_model() {
+        let mut cfg = ExperimentConfig::default();
+        let base_cr = cfg.service.cr_alpha_ms + cfg.service.cr_beta_ms;
+        spec(AppKind::App2).apply(&mut cfg, true);
+        let new_cr = cfg.service.cr_alpha_ms + cfg.service.cr_beta_ms;
+        assert!((new_cr / base_cr - 1.63).abs() < 1e-9);
+        assert_eq!(cfg.tl, TlKind::Bfs);
+    }
+
+    #[test]
+    fn apply_respects_tl_override() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.tl = TlKind::Base;
+        spec(AppKind::App1).apply(&mut cfg, false);
+        assert_eq!(cfg.tl, TlKind::Base);
+    }
+
+    #[test]
+    fn app3_is_vehicle_speed() {
+        let mut cfg = ExperimentConfig::default();
+        spec(AppKind::App3).apply(&mut cfg, true);
+        assert!(cfg.workload.entity_speed_mps >= 8.0);
+        assert!(cfg.tl_peak_speed_mps >= 14.0);
+    }
+}

@@ -1,0 +1,383 @@
+//! Experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§5) from the DES engine.
+//!
+//! Usage:
+//!   harness all                 # every figure, results into ./results
+//!   harness fig7 fig9           # selected figures
+//!   harness table1              # app compositions
+//!   harness --out DIR figN ...  # custom output directory
+//!
+//! Each figure writes CSV series under the output directory and prints
+//! the paper-comparable summary rows to stdout.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use anveshak::config::preset;
+use anveshak::coordinator::des::{run, RunResult};
+use anveshak::dataflow::Stage;
+use anveshak::util::json::{obj, Json};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let mut out_dir = PathBuf::from("results");
+    if let Some(i) = args.iter().position(|a| a == "--out") {
+        args.remove(i);
+        out_dir = PathBuf::from(args.remove(i));
+    }
+    if args.is_empty() || args.iter().any(|a| a == "--help") {
+        eprintln!(
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12 ..."
+        );
+        std::process::exit(2);
+    }
+    std::fs::create_dir_all(&out_dir).expect("create output dir");
+
+    let all = args.iter().any(|a| a == "all");
+    let want = |name: &str| all || args.iter().any(|a| a == name);
+
+    let mut cache: BTreeMap<String, RunResult> = BTreeMap::new();
+    if want("table1") {
+        table1();
+    }
+    if want("fig5") {
+        fig5(&out_dir, &mut cache);
+    }
+    if want("fig6") {
+        fig6(&out_dir, &mut cache);
+    }
+    if want("fig7") {
+        fig7(&out_dir, &mut cache);
+    }
+    if want("fig8") {
+        fig8(&out_dir, &mut cache);
+    }
+    if want("fig9") {
+        fig9(&out_dir, &mut cache);
+    }
+    if want("fig10") {
+        fig10(&out_dir, &mut cache);
+    }
+    if want("fig11") {
+        fig11(&out_dir, &mut cache);
+    }
+    if want("fig12") {
+        fig12(&out_dir, &mut cache);
+    }
+    println!("\nresults written to {}", out_dir.display());
+}
+
+/// Run (and memoize) a preset.
+fn get<'a>(
+    cache: &'a mut BTreeMap<String, RunResult>,
+    name: &str,
+) -> &'a RunResult {
+    if !cache.contains_key(name) {
+        let cfg = preset(name);
+        eprintln!("[run] {name} ...");
+        let start = std::time::Instant::now();
+        let r = run(cfg);
+        eprintln!(
+            "[run] {name} done in {:.1}s (events: {})",
+            start.elapsed().as_secs_f64(),
+            r.summary.generated
+        );
+        cache.insert(name.to_string(), r);
+    }
+    &cache[name]
+}
+
+fn write_timeline(out: &Path, name: &str, r: &RunResult) {
+    let mut csv = String::from(
+        "sec,active_cameras,mean_latency_s,completed,dropped,va_batch,cr_batch\n",
+    );
+    for (s, row) in r.timeline.rows().iter().enumerate() {
+        let _ = writeln!(
+            csv,
+            "{s},{},{:.3},{},{},{:.2},{:.2}",
+            row.active_cameras,
+            row.mean_latency_s,
+            row.completed,
+            row.dropped,
+            row.mean_batch.get(&Stage::Va).copied().unwrap_or(0.0),
+            row.mean_batch.get(&Stage::Cr).copied().unwrap_or(0.0),
+        );
+    }
+    std::fs::write(out.join(format!("{name}.csv")), csv).unwrap();
+}
+
+fn summary_json(r: &RunResult) -> Json {
+    let s = &r.summary;
+    obj([
+        ("generated", (s.generated as i64).into()),
+        ("on_time", (s.on_time as i64).into()),
+        ("delayed", (s.delayed as i64).into()),
+        ("dropped", (s.dropped as i64).into()),
+        ("in_flight", (s.in_flight as i64).into()),
+        ("median_latency_s", s.latency.median.into()),
+        ("p25_latency_s", s.latency.p25.into()),
+        ("p75_latency_s", s.latency.p75.into()),
+        ("p99_latency_s", s.latency.p99.into()),
+        ("max_latency_s", s.latency.max.into()),
+        ("detections", (r.detections as i64).into()),
+        ("peak_active", r.peak_active.into()),
+        ("true_positives", (s.true_positives as i64).into()),
+        ("positives_dropped", (s.positives_dropped as i64).into()),
+    ])
+}
+
+fn print_summary_row(label: &str, r: &RunResult) {
+    let s = &r.summary;
+    println!(
+        "  {label:<22} gen {:>7}  on-time {:>7}  delayed {:>6} ({:>5.1}%)  dropped {:>6} ({:>5.1}%)  median {:.2}s  p99 {:.2}s  peak-cams {}",
+        s.generated,
+        s.on_time,
+        s.delayed,
+        100.0 * s.delay_rate(),
+        s.dropped,
+        100.0 * s.drop_rate(),
+        s.latency.median,
+        s.latency.p99,
+        r.peak_active
+    );
+}
+
+// ---------------------------------------------------------------------------
+
+fn table1() {
+    println!("== Table 1: module mappings for illustrative tracking apps ==");
+    for spec in anveshak::apps::all() {
+        println!(
+            "  {:<18} FC: {:<11} VA: {:<9} CR: {:<9} TL: {:?}{}",
+            spec.name,
+            spec.fc_logic,
+            spec.va_variant,
+            spec.cr_variant,
+            spec.tl,
+            if spec.qf { "  QF: fusion" } else { "" }
+        );
+    }
+}
+
+/// Fig 5: distribution of end-to-end latencies per batching strategy
+/// (App 1, TL-BFS es=4; plus TL-WBFS SB-1).
+fn fig5(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 5: latency distribution per batching strategy ==");
+    let runs = [
+        ("SB-1", "fig7a"),
+        ("SB-20", "fig7b"),
+        ("NOB-25", "fig7c"),
+        ("DB-25", "fig7d"),
+        ("WBFS SB-1", "fig10_wbfs_sb1"),
+    ];
+    let mut j = Vec::new();
+    for (label, name) in runs {
+        let r = get(cache, name);
+        let s = &r.summary.latency;
+        println!(
+            "  {label:<10} median {:.2}s  p25 {:.2}s  p75 {:.2}s  p99 {:.2}s  max {:.2}s",
+            s.median, s.p25, s.p75, s.p99, s.max
+        );
+        j.push(obj([
+            ("label", label.into()),
+            ("median", s.median.into()),
+            ("p25", s.p25.into()),
+            ("p75", s.p75.into()),
+            ("p99", s.p99.into()),
+            ("max", s.max.into()),
+        ]));
+    }
+    std::fs::write(out.join("fig5.json"), Json::Arr(j).to_string())
+        .unwrap();
+}
+
+/// Fig 6: events <= gamma vs delayed vs dropped, for es = 4/6/7.
+fn fig6(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 6a: on-time / delayed / dropped (es = 4 m/s) ==");
+    let a = [
+        ("SB-1", "fig7a"),
+        ("SB-20", "fig7b"),
+        ("NOB-25", "fig7c"),
+        ("DB-25", "fig7d"),
+        ("WBFS SB-1", "fig10_wbfs_sb1"),
+        ("Base SB-20 100c", "fig10_base_100"),
+        ("Base SB-20 200c", "fig10_base_200"),
+    ];
+    let mut j = Vec::new();
+    for (label, name) in a {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        j.push(obj([("label", label.into()), ("summary", summary_json(r))]));
+    }
+    println!("== Fig 6b: es = 6 m/s ==");
+    for (label, name) in [
+        ("SB-1", "fig6b_sb1"),
+        ("SB-20", "fig6b_sb20"),
+        ("DB-25", "fig6b_db25"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        j.push(obj([("label", label.into()), ("summary", summary_json(r))]));
+    }
+    println!("== Fig 6c: es = 7 m/s ==");
+    for (label, name) in [
+        ("DB-25", "fig11_nodrops"),
+        ("DB-25 Drops", "fig11_drops"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        j.push(obj([("label", label.into()), ("summary", summary_json(r))]));
+    }
+    std::fs::write(out.join("fig6.json"), Json::Arr(j).to_string())
+        .unwrap();
+}
+
+/// Fig 7: application timelines for the four batching strategies.
+fn fig7(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 7: timelines (active cams + latency) ==");
+    for (panel, name) in [
+        ("a-SB1", "fig7a"),
+        ("b-SB20", "fig7b"),
+        ("c-NOB", "fig7c"),
+        ("d-DB25", "fig7d"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(panel, r);
+        write_timeline(out, &format!("fig7{panel}"), r);
+    }
+}
+
+/// Fig 8: batch-size timelines and latency-vs-batch scatter (DB-25).
+fn fig8(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 8: dynamic batch sizes (DB-25) ==");
+    let r = get(cache, "fig7d");
+    write_timeline(out, "fig8_timeline", r);
+    for (stage, label) in [(Stage::Va, "va"), (Stage::Cr, "cr")] {
+        let sc = r.timeline.scatter(stage);
+        let mut csv = String::from("task_latency_s,batch_size\n");
+        let mut max_b = 0;
+        for (lat, b) in &sc {
+            let _ = writeln!(csv, "{lat:.3},{b}");
+            max_b = max_b.max(*b);
+        }
+        std::fs::write(out.join(format!("fig8_{label}_scatter.csv")), csv)
+            .unwrap();
+        let mean_b = if sc.is_empty() {
+            0.0
+        } else {
+            sc.iter().map(|&(_, b)| b as f64).sum::<f64>() / sc.len() as f64
+        };
+        println!(
+            "  {label}: {} batches, mean size {:.1}, peak size {}",
+            sc.len(),
+            mean_b,
+            max_b
+        );
+    }
+}
+
+/// Fig 9: 1 Gbps -> 30 Mbps at t = 300 s; Anveshak vs NOB.
+fn fig9(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 9: bandwidth drop at t=300s (1Gbps -> 30Mbps) ==");
+    for (label, name) in [("Anveshak DB-25", "fig9_anv"), ("NOB-25", "fig9_nob")]
+    {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        // Delays before vs after the bandwidth drop tell the story.
+        let rows = r.timeline.rows();
+        let (mut pre, mut post) = (0usize, 0usize);
+        for (s, row) in rows.iter().enumerate() {
+            let late = row.mean_latency_s > 15.0;
+            if late {
+                if s < 300 {
+                    pre += 1
+                } else {
+                    post += 1
+                }
+            }
+        }
+        println!(
+            "    seconds with avg latency > gamma: pre-drop {pre}, post-drop {post}"
+        );
+        write_timeline(out, &format!("fig9_{name}"), r);
+    }
+}
+
+/// Fig 10: tracking-logic knob (WBFS streaming, Base at 100/200 cams).
+fn fig10(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 10: tracking logic effect ==");
+    for (label, name) in [
+        ("WBFS SB-1", "fig10_wbfs_sb1"),
+        ("BFS SB-1", "fig7a"),
+        ("Base SB-20 100c", "fig10_base_100"),
+        ("Base SB-20 200c", "fig10_base_200"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        write_timeline(out, &format!("fig10_{name}"), r);
+    }
+    let wbfs_peak = cache["fig10_wbfs_sb1"].peak_active;
+    let bfs_peak = cache["fig7a"].peak_active;
+    println!(
+        "  peak active cams: WBFS {wbfs_peak} vs BFS {bfs_peak} (paper: 67 vs 111)"
+    );
+}
+
+/// Fig 11: drops disabled vs enabled at es = 7 m/s.
+fn fig11(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 11: drop knob at es = 7 m/s ==");
+    for (label, name) in [
+        ("drops disabled", "fig11_nodrops"),
+        ("drops enabled", "fig11_drops"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        write_timeline(out, &format!("fig11_{name}"), r);
+    }
+    let nod = &cache["fig11_nodrops"].summary;
+    let wd = &cache["fig11_drops"].summary;
+    println!(
+        "  delayed: {:.0}% -> {:.0}% | dropped: {:.0}% -> {:.0}% (paper: 85% delayed -> 0%, 17% dropped)",
+        100.0 * nod.delay_rate(),
+        100.0 * wd.delay_rate(),
+        100.0 * nod.drop_rate(),
+        100.0 * wd.drop_rate()
+    );
+}
+
+/// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.
+fn fig12(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
+    println!("\n== Fig 12: App 2 (large CR) ==");
+    for (label, name) in [
+        ("BFS SB-20", "fig12_sb20"),
+        ("BFS DB-25", "fig12_db25"),
+        ("WBFS SB-20", "fig12_wbfs_sb20"),
+        ("BFS DB-25 es6", "fig12_es6_db25"),
+        ("BFS DB-25 es6 Drops", "fig12_es6_drops"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        write_timeline(out, &format!("fig12_{name}"), r);
+    }
+    // Camera-count comparison App1 vs App2 (both SB-20, BFS).
+    let _ = get(cache, "fig7b");
+    let a1 = cache["fig7b"].peak_active;
+    let a2 = cache["fig12_sb20"].peak_active;
+    println!("  peak active cams SB-20: App1 {a1} vs App2 {a2}");
+    let mut j = Vec::new();
+    for name in [
+        "fig12_sb20",
+        "fig12_db25",
+        "fig12_wbfs_sb20",
+        "fig12_es6_db25",
+        "fig12_es6_drops",
+    ] {
+        j.push(obj([
+            ("name", name.into()),
+            ("summary", summary_json(&cache[name])),
+        ]));
+    }
+    std::fs::write(out.join("fig12.json"), Json::Arr(j).to_string())
+        .unwrap();
+}

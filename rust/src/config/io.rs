@@ -1,0 +1,329 @@
+//! JSON (de)serialization for [`ExperimentConfig`] — the launcher's
+//! config-file format (hand-rolled; the offline environment has no
+//! serde facade).
+
+use super::*;
+use crate::util::json::{obj, Json};
+
+pub fn config_to_json(c: &ExperimentConfig) -> Json {
+    obj([
+        ("name", c.name.as_str().into()),
+        ("seed", (c.seed as i64).into()),
+        ("duration_secs", c.duration_secs.into()),
+        ("num_cameras", c.num_cameras.into()),
+        ("fps", c.fps.into()),
+        ("gamma_ms", c.gamma_ms.into()),
+        ("tl_peak_speed_mps", c.tl_peak_speed_mps.into()),
+        ("app", app_str(c.app).into()),
+        ("tl", tl_str(c.tl).into()),
+        ("batching", batching_to_json(&c.batching)),
+        ("drops_enabled", c.drops_enabled.into()),
+        ("seed_last_seen", c.seed_last_seen.into()),
+        ("eps_max_ms", c.eps_max_ms.into()),
+        ("probe_every", (c.probe_every as i64).into()),
+        (
+            "cluster",
+            obj([
+                ("compute_nodes", c.cluster.compute_nodes.into()),
+                ("va_instances", c.cluster.va_instances.into()),
+                ("cr_instances", c.cluster.cr_instances.into()),
+                ("clock_skew_ms", c.cluster.clock_skew_ms.into()),
+            ]),
+        ),
+        (
+            "network",
+            obj([
+                ("bandwidth_bps", c.network.bandwidth_bps.into()),
+                ("latency_ms", c.network.latency_ms.into()),
+                ("frame_bytes", c.network.frame_bytes.into()),
+                ("candidate_bytes", c.network.candidate_bytes.into()),
+                ("meta_bytes", c.network.meta_bytes.into()),
+                ("shared_fabric", c.network.shared_fabric.into()),
+                (
+                    "events",
+                    Json::Arr(
+                        c.network
+                            .events
+                            .iter()
+                            .map(|e| {
+                                obj([
+                                    ("at_sec", e.at_sec.into()),
+                                    (
+                                        "bandwidth_bps",
+                                        e.bandwidth_bps.into(),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "service",
+            obj([
+                ("fc_ms", c.service.fc_ms.into()),
+                ("va_alpha_ms", c.service.va_alpha_ms.into()),
+                ("va_beta_ms", c.service.va_beta_ms.into()),
+                ("cr_alpha_ms", c.service.cr_alpha_ms.into()),
+                ("cr_beta_ms", c.service.cr_beta_ms.into()),
+                ("tl_ms", c.service.tl_ms.into()),
+                ("jitter", c.service.jitter.into()),
+            ]),
+        ),
+        (
+            "semantics",
+            obj([
+                ("va_tp", c.semantics.va_tp.into()),
+                ("va_fp", c.semantics.va_fp.into()),
+                ("cr_tp", c.semantics.cr_tp.into()),
+                ("cr_fp", c.semantics.cr_fp.into()),
+                ("transit_miss", c.semantics.transit_miss.into()),
+            ]),
+        ),
+        (
+            "workload",
+            obj([
+                ("vertices", c.workload.vertices.into()),
+                ("edges", c.workload.edges.into()),
+                ("mean_road_m", c.workload.mean_road_m.into()),
+                ("fov_m", c.workload.fov_m.into()),
+                (
+                    "entity_speed_mps",
+                    c.workload.entity_speed_mps.into(),
+                ),
+            ]),
+        ),
+    ])
+}
+
+pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
+    let j = Json::parse(text)?;
+    let mut c = ExperimentConfig::default();
+    // Every field is optional and defaults to the paper setup, so config
+    // files only need to name what they change.
+    if let Some(v) = j.get("name").and_then(Json::as_str) {
+        c.name = v.to_string();
+    }
+    set_f64(&j, "duration_secs", &mut c.duration_secs);
+    set_f64(&j, "fps", &mut c.fps);
+    set_f64(&j, "gamma_ms", &mut c.gamma_ms);
+    set_f64(&j, "tl_peak_speed_mps", &mut c.tl_peak_speed_mps);
+    set_f64(&j, "eps_max_ms", &mut c.eps_max_ms);
+    set_usize(&j, "num_cameras", &mut c.num_cameras);
+    if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+        c.seed = v as u64;
+    }
+    if let Some(v) = j.get("probe_every").and_then(Json::as_f64) {
+        c.probe_every = v as u64;
+    }
+    if let Some(v) = j.get("drops_enabled").and_then(Json::as_bool) {
+        c.drops_enabled = v;
+    }
+    if let Some(v) = j.get("seed_last_seen").and_then(Json::as_bool) {
+        c.seed_last_seen = v;
+    }
+    if let Some(v) = j.get("app").and_then(Json::as_str) {
+        c.app = app_from_str(v)?;
+    }
+    if let Some(v) = j.get("tl").and_then(Json::as_str) {
+        c.tl = tl_from_str(v)?;
+    }
+    if let Some(v) = j.get("batching") {
+        c.batching = batching_from_json(v)?;
+    }
+    if let Some(v) = j.get("cluster") {
+        set_usize(v, "compute_nodes", &mut c.cluster.compute_nodes);
+        set_usize(v, "va_instances", &mut c.cluster.va_instances);
+        set_usize(v, "cr_instances", &mut c.cluster.cr_instances);
+        set_f64(v, "clock_skew_ms", &mut c.cluster.clock_skew_ms);
+    }
+    if let Some(v) = j.get("network") {
+        set_f64(v, "bandwidth_bps", &mut c.network.bandwidth_bps);
+        set_f64(v, "latency_ms", &mut c.network.latency_ms);
+        set_usize(v, "frame_bytes", &mut c.network.frame_bytes);
+        set_usize(v, "candidate_bytes", &mut c.network.candidate_bytes);
+        set_usize(v, "meta_bytes", &mut c.network.meta_bytes);
+        if let Some(b) = v.get("shared_fabric").and_then(Json::as_bool) {
+            c.network.shared_fabric = b;
+        }
+        if let Some(evs) = v.get("events").and_then(Json::as_arr) {
+            c.network.events = evs
+                .iter()
+                .map(|e| {
+                    Ok(BandwidthEvent {
+                        at_sec: e
+                            .get("at_sec")
+                            .and_then(Json::as_f64)
+                            .ok_or("event missing at_sec")?,
+                        bandwidth_bps: e
+                            .get("bandwidth_bps")
+                            .and_then(Json::as_f64)
+                            .ok_or("event missing bandwidth_bps")?,
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+        }
+    }
+    if let Some(v) = j.get("service") {
+        set_f64(v, "fc_ms", &mut c.service.fc_ms);
+        set_f64(v, "va_alpha_ms", &mut c.service.va_alpha_ms);
+        set_f64(v, "va_beta_ms", &mut c.service.va_beta_ms);
+        set_f64(v, "cr_alpha_ms", &mut c.service.cr_alpha_ms);
+        set_f64(v, "cr_beta_ms", &mut c.service.cr_beta_ms);
+        set_f64(v, "tl_ms", &mut c.service.tl_ms);
+        set_f64(v, "jitter", &mut c.service.jitter);
+    }
+    if let Some(v) = j.get("semantics") {
+        set_f64(v, "va_tp", &mut c.semantics.va_tp);
+        set_f64(v, "va_fp", &mut c.semantics.va_fp);
+        set_f64(v, "cr_tp", &mut c.semantics.cr_tp);
+        set_f64(v, "cr_fp", &mut c.semantics.cr_fp);
+        set_f64(v, "transit_miss", &mut c.semantics.transit_miss);
+    }
+    if let Some(v) = j.get("workload") {
+        set_usize(v, "vertices", &mut c.workload.vertices);
+        set_usize(v, "edges", &mut c.workload.edges);
+        set_f64(v, "mean_road_m", &mut c.workload.mean_road_m);
+        set_f64(v, "fov_m", &mut c.workload.fov_m);
+        set_f64(v, "entity_speed_mps", &mut c.workload.entity_speed_mps);
+    }
+    Ok(c)
+}
+
+fn set_f64(j: &Json, key: &str, out: &mut f64) {
+    if let Some(v) = j.get(key).and_then(Json::as_f64) {
+        *out = v;
+    }
+}
+
+fn set_usize(j: &Json, key: &str, out: &mut usize) {
+    if let Some(v) = j.get(key).and_then(Json::as_f64) {
+        *out = v as usize;
+    }
+}
+
+fn app_str(a: AppKind) -> &'static str {
+    match a {
+        AppKind::App1 => "app1",
+        AppKind::App2 => "app2",
+        AppKind::App3 => "app3",
+        AppKind::App4 => "app4",
+    }
+}
+
+fn app_from_str(s: &str) -> Result<AppKind, String> {
+    Ok(match s {
+        "app1" => AppKind::App1,
+        "app2" => AppKind::App2,
+        "app3" => AppKind::App3,
+        "app4" => AppKind::App4,
+        other => return Err(format!("unknown app {other:?}")),
+    })
+}
+
+fn tl_str(t: TlKind) -> &'static str {
+    match t {
+        TlKind::Base => "base",
+        TlKind::Bfs => "bfs",
+        TlKind::Wbfs => "wbfs",
+        TlKind::WbfsSpeed => "wbfs_speed",
+        TlKind::Probabilistic => "probabilistic",
+    }
+}
+
+fn tl_from_str(s: &str) -> Result<TlKind, String> {
+    Ok(match s {
+        "base" => TlKind::Base,
+        "bfs" => TlKind::Bfs,
+        "wbfs" => TlKind::Wbfs,
+        "wbfs_speed" => TlKind::WbfsSpeed,
+        "probabilistic" => TlKind::Probabilistic,
+        other => return Err(format!("unknown tl {other:?}")),
+    })
+}
+
+fn batching_to_json(b: &BatchingKind) -> Json {
+    match b {
+        BatchingKind::Static { size } => {
+            obj([("kind", "static".into()), ("size", (*size).into())])
+        }
+        BatchingKind::Dynamic { max } => {
+            obj([("kind", "dynamic".into()), ("max", (*max).into())])
+        }
+        BatchingKind::Nob { max } => {
+            obj([("kind", "nob".into()), ("max", (*max).into())])
+        }
+    }
+}
+
+fn batching_from_json(j: &Json) -> Result<BatchingKind, String> {
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("batching missing kind")?;
+    Ok(match kind {
+        "static" => BatchingKind::Static {
+            size: j
+                .get("size")
+                .and_then(Json::as_usize)
+                .ok_or("static batching missing size")?,
+        },
+        "dynamic" => BatchingKind::Dynamic {
+            max: j
+                .get("max")
+                .and_then(Json::as_usize)
+                .ok_or("dynamic batching missing max")?,
+        },
+        "nob" => BatchingKind::Nob {
+            max: j
+                .get("max")
+                .and_then(Json::as_usize)
+                .ok_or("nob batching missing max")?,
+        },
+        other => return Err(format!("unknown batching kind {other:?}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let c = config_from_json(r#"{"num_cameras": 64, "tl": "wbfs"}"#)
+            .unwrap();
+        assert_eq!(c.num_cameras, 64);
+        assert_eq!(c.tl, TlKind::Wbfs);
+        assert_eq!(c.gamma_ms, 15_000.0); // default preserved
+    }
+
+    #[test]
+    fn bad_enum_is_an_error() {
+        assert!(config_from_json(r#"{"app": "app9"}"#).is_err());
+        assert!(config_from_json(r#"{"tl": "magic"}"#).is_err());
+        assert!(
+            config_from_json(r#"{"batching": {"kind": "wild"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn every_preset_round_trips() {
+        for name in super::super::PRESETS {
+            let c = preset(name);
+            let j = config_to_json(&c).to_string();
+            let c2 = config_from_json(&j).unwrap();
+            assert_eq!(c2.name, c.name);
+            assert_eq!(c2.app, c.app);
+            assert_eq!(c2.tl, c.tl);
+            assert_eq!(c2.batching.label(), c.batching.label());
+            assert_eq!(c2.num_cameras, c.num_cameras);
+            assert_eq!(c2.drops_enabled, c.drops_enabled);
+            assert_eq!(c2.network.events.len(), c.network.events.len());
+            assert!(
+                (c2.service.cr_alpha_ms - c.service.cr_alpha_ms).abs()
+                    < 1e-9
+            );
+        }
+    }
+}

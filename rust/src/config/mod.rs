@@ -1,0 +1,343 @@
+//! Experiment and application configuration.
+//!
+//! Every paper experiment is expressible as an [`ExperimentConfig`]; the
+//! harness ships named presets (one per figure panel) and any config can
+//! be loaded from / saved to TOML for the launcher CLI.
+
+pub mod io;
+mod presets;
+
+pub use presets::{preset, ALL as PRESETS};
+
+use crate::util::{millis, secs, Micros};
+
+/// Which tracking application (Table 1) to compose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AppKind {
+    /// HoG-like VA + small re-id CR, WBFS TL.
+    App1,
+    /// App 1 with the larger (≈63% slower) CR DNN and query fusion.
+    App2,
+    /// Vehicle variant: frame-rate FC control, speed-aware WBFS.
+    App3,
+    /// Two-stage re-id with probabilistic TL.
+    App4,
+}
+
+/// Tracking-Logic strategy (the "scalability" knob of the tuning triangle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TlKind {
+    /// Keep every camera active all the time (contemporary baseline).
+    Base,
+    /// Spotlight BFS with a fixed assumed road length.
+    Bfs,
+    /// Weighted BFS (Dijkstra ball) with exact road lengths.
+    Wbfs,
+    /// WBFS that also adapts the radius to the entity's observed speed.
+    WbfsSpeed,
+    /// Naive-Bayes path-likelihood activation (App 4).
+    Probabilistic,
+}
+
+/// Batching strategy (the "latency" knob).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BatchingKind {
+    /// Fixed batch size; submits only when full (paper's SB-b).
+    Static { size: usize },
+    /// Anveshak's budget/deadline-driven dynamic batching (DB-bmax).
+    Dynamic { max: usize },
+    /// Near-Optimal Baseline: rate -> batch-size lookup table (§5.1).
+    Nob { max: usize },
+}
+
+impl BatchingKind {
+    pub fn label(&self) -> String {
+        match self {
+            BatchingKind::Static { size } => format!("SB-{size}"),
+            BatchingKind::Dynamic { max } => format!("DB-{max}"),
+            BatchingKind::Nob { max } => format!("NOB-{max}"),
+        }
+    }
+}
+
+/// Cluster topology: mirrors the paper's 1 head + 10 compute nodes, each
+/// compute node hosting FC/VA/CR executors on Pi-3B-class cores.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub compute_nodes: usize,
+    pub va_instances: usize,
+    pub cr_instances: usize,
+    /// Per-device clock skew bound (± ms) for non-source/sink devices.
+    pub clock_skew_ms: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            compute_nodes: 10,
+            va_instances: 10,
+            cr_instances: 10,
+            clock_skew_ms: 0.0,
+        }
+    }
+}
+
+/// A scheduled change to the inter-node bandwidth (Fig 9's 1 Gbps ->
+/// 30 Mbps drop at t = 300 s).
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthEvent {
+    pub at_sec: f64,
+    pub bandwidth_bps: f64,
+}
+
+/// MAN/WAN model between cluster nodes.
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    pub bandwidth_bps: f64,
+    pub latency_ms: f64,
+    /// Median frame payload size (paper: 2.9 kB CUHK03 JPGs).
+    pub frame_bytes: usize,
+    /// VA -> CR candidate payload (cropped raw regions for the DNN).
+    pub candidate_bytes: usize,
+    /// Metadata event size (detections, signals).
+    pub meta_bytes: usize,
+    /// Model the MAN as one shared backbone serializer (true) or as
+    /// independent per-node NICs (false). The paper's Fig 9 bandwidth
+    /// drop throttles the fabric between compute nodes.
+    pub shared_fabric: bool,
+    pub events: Vec<BandwidthEvent>,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            bandwidth_bps: 1e9,
+            latency_ms: 0.5,
+            frame_bytes: 2_900,
+            candidate_bytes: 24_000,
+            meta_bytes: 256,
+            shared_fabric: true,
+            events: vec![],
+        }
+    }
+}
+
+/// Per-module service-time model `xi(b) = alpha + beta * b` (ms), i.e.
+/// invocation overhead plus per-event marginal cost. Calibrated so CR
+/// matches the paper's measured 120 ms/frame at b=1 and xi(25) = 1.74 s.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub fc_ms: f64,
+    pub va_alpha_ms: f64,
+    pub va_beta_ms: f64,
+    pub cr_alpha_ms: f64,
+    pub cr_beta_ms: f64,
+    pub tl_ms: f64,
+    /// Multiplicative jitter bound on actual vs estimated execution time.
+    pub jitter: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            fc_ms: 0.2,
+            va_alpha_ms: 20.0,
+            va_beta_ms: 12.0,
+            // xi(1) = 120 ms, xi(25) = 1.7475 s — the paper's CR numbers.
+            cr_alpha_ms: 52.5,
+            cr_beta_ms: 67.5,
+            tl_ms: 1.0,
+            jitter: 0.05,
+        }
+    }
+}
+
+/// Detection semantics for the simulated analytics (ground-truth driven;
+/// the live engine uses the real PJRT models instead).
+#[derive(Debug, Clone)]
+pub struct SemanticsConfig {
+    /// P(VA flags a frame | entity in frame).
+    pub va_tp: f64,
+    /// P(VA flags a frame | entity absent) — false positives go to CR.
+    pub va_fp: f64,
+    /// P(CR confirms | entity in frame and VA flagged).
+    pub cr_tp: f64,
+    /// P(CR confirms | entity absent).
+    pub cr_fp: f64,
+    /// P(an entire FOV transit goes undetected) — real re-id misses
+    /// whole tracks (occlusion, pose), which is what produces the
+    /// paper's long blind-spot spells and 100+ camera spotlights.
+    pub transit_miss: f64,
+}
+
+impl Default for SemanticsConfig {
+    fn default() -> Self {
+        Self {
+            va_tp: 0.98,
+            va_fp: 0.02,
+            cr_tp: 0.99,
+            cr_fp: 0.0,
+            transit_miss: 0.05,
+        }
+    }
+}
+
+/// Road network + workload generation parameters (§5.1 Workload).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Number of road-graph vertices (paper: 1,000).
+    pub vertices: usize,
+    /// Target number of edges (paper: 2,817).
+    pub edges: usize,
+    /// Mean road segment length in metres (paper: 84.5 m).
+    pub mean_road_m: f64,
+    /// Camera field-of-view radius (metres).
+    pub fov_m: f64,
+    /// True walking speed of the entity (paper: 1 m/s).
+    pub entity_speed_mps: f64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            vertices: 1000,
+            edges: 2817,
+            mean_road_m: 84.5,
+            // Small FOV relative to road length: the entity spends most
+            // of each segment in a blind spot, producing the paper's
+            // saw-tooth spotlight growth (peaks >100 cameras).
+            fov_m: 10.0,
+            entity_speed_mps: 1.0,
+        }
+    }
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Simulated duration (paper timelines run ~600 s).
+    pub duration_secs: f64,
+    pub num_cameras: usize,
+    /// Camera frame rate (paper: 1 fps).
+    pub fps: f64,
+    /// Maximum tolerable latency gamma (paper: 15 s).
+    pub gamma_ms: f64,
+    /// TL's configured peak entity speed `es` (m/s): 4, 6 or 7 in §5.
+    pub tl_peak_speed_mps: f64,
+    pub app: AppKind,
+    pub tl: TlKind,
+    pub batching: BatchingKind,
+    pub drops_enabled: bool,
+    /// Seed TL with the entity's last-seen location at t=0 (Fig 1's
+    /// narrative: "only CA is made active"). When false, every FC
+    /// bootstraps active (§2.3) — which transiently floods the cluster
+    /// at 1000 cameras.
+    pub seed_last_seen: bool,
+    /// Early-arrival threshold epsilon_max for budget increases (§4.5.2).
+    pub eps_max_ms: f64,
+    /// Send a probe for every k-th dropped event (§4.5.2).
+    pub probe_every: u64,
+    pub cluster: ClusterConfig,
+    pub network: NetworkConfig,
+    pub service: ServiceConfig,
+    pub semantics: SemanticsConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            seed: 2019,
+            duration_secs: 600.0,
+            num_cameras: 1000,
+            fps: 1.0,
+            gamma_ms: 15_000.0,
+            tl_peak_speed_mps: 4.0,
+            app: AppKind::App1,
+            tl: TlKind::Bfs,
+            batching: BatchingKind::Dynamic { max: 25 },
+            drops_enabled: false,
+            seed_last_seen: true,
+            eps_max_ms: 2_000.0,
+            probe_every: 50,
+            cluster: ClusterConfig::default(),
+            network: NetworkConfig::default(),
+            service: ServiceConfig::default(),
+            semantics: SemanticsConfig::default(),
+            workload: WorkloadConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn gamma(&self) -> Micros {
+        millis(self.gamma_ms)
+    }
+
+    pub fn duration(&self) -> Micros {
+        secs(self.duration_secs)
+    }
+
+    /// Load from a JSON file (see [`io`] for the schema).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        io::config_from_json(&text).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Save to a JSON file.
+    pub fn to_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, io::config_to_json(self).to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.num_cameras, 1000);
+        assert_eq!(c.gamma(), 15 * crate::util::SEC);
+        assert_eq!(c.workload.vertices, 1000);
+        assert_eq!(c.workload.edges, 2817);
+        assert_eq!(c.cluster.va_instances, 10);
+        assert_eq!(c.cluster.cr_instances, 10);
+    }
+
+    #[test]
+    fn cr_service_matches_paper_calibration() {
+        let s = ServiceConfig::default();
+        // xi(1) = 120 ms/event => mu = 8.33 events/s per CR instance.
+        assert!((s.cr_alpha_ms + s.cr_beta_ms - 120.0).abs() < 1e-9);
+        // xi(25) ~ 1.74 s (paper's §5.2.1 budget arithmetic).
+        let xi25 = s.cr_alpha_ms + 25.0 * s.cr_beta_ms;
+        assert!((xi25 - 1740.0).abs() < 20.0, "xi(25) = {xi25}");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = preset("fig9_anv");
+        c.drops_enabled = true;
+        let j = io::config_to_json(&c).to_string();
+        let c2 = io::config_from_json(&j).unwrap();
+        assert_eq!(c2.num_cameras, c.num_cameras);
+        assert_eq!(c2.batching.label(), c.batching.label());
+        assert_eq!(c2.name, c.name);
+        assert!(c2.drops_enabled);
+        assert_eq!(c2.network.events.len(), 1);
+        assert_eq!(c2.app, c.app);
+        assert_eq!(c2.tl, c.tl);
+    }
+
+    #[test]
+    fn batching_labels() {
+        assert_eq!(BatchingKind::Static { size: 20 }.label(), "SB-20");
+        assert_eq!(BatchingKind::Dynamic { max: 25 }.label(), "DB-25");
+        assert_eq!(BatchingKind::Nob { max: 25 }.label(), "NOB-25");
+    }
+}

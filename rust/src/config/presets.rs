@@ -1,0 +1,163 @@
+//! Named experiment presets — one per panel of the paper's evaluation.
+//!
+//! `preset("fig7a")` etc. return ready-to-run [`ExperimentConfig`]s; the
+//! harness binary iterates these to regenerate every figure/table.
+
+use super::*;
+
+/// All preset names, in paper order.
+pub const ALL: &[&str] = &[
+    "fig7a", "fig7b", "fig7c", "fig7d", "fig6b_sb1", "fig6b_sb20",
+    "fig6b_db25", "fig9_anv", "fig9_nob", "fig10_wbfs_sb1",
+    "fig10_base_100", "fig10_base_200", "fig11_nodrops", "fig11_drops",
+    "fig12_sb20", "fig12_db25", "fig12_wbfs_sb20", "fig12_es6_db25",
+    "fig12_es6_drops",
+];
+
+/// Build the named preset. Panics on unknown names (the harness validates
+/// against [`ALL`]).
+pub fn preset(name: &str) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = name.to_string();
+    match name {
+        // ---- Fig 5a / 6a / 7: App 1 batching knob, TL-BFS, es = 4 ----
+        "fig7a" => {
+            c.batching = BatchingKind::Static { size: 1 };
+        }
+        "fig7b" => {
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        "fig7c" => {
+            c.batching = BatchingKind::Nob { max: 25 };
+        }
+        "fig7d" => {
+            c.batching = BatchingKind::Dynamic { max: 25 };
+        }
+        // ---- Fig 6b: es = 6 m/s ----
+        "fig6b_sb1" => {
+            c.tl_peak_speed_mps = 6.0;
+            c.batching = BatchingKind::Static { size: 1 };
+        }
+        "fig6b_sb20" => {
+            c.tl_peak_speed_mps = 6.0;
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        "fig6b_db25" => {
+            c.tl_peak_speed_mps = 6.0;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+        }
+        // ---- Fig 9: bandwidth 1 Gbps -> 30 Mbps at t = 300 s ----
+        "fig9_anv" | "fig9_nob" => {
+            c.batching = if name == "fig9_anv" {
+                BatchingKind::Dynamic { max: 25 }
+            } else {
+                BatchingKind::Nob { max: 25 }
+            };
+            c.network.events.push(BandwidthEvent {
+                at_sec: 300.0,
+                bandwidth_bps: 30e6,
+            });
+        }
+        // ---- Fig 10: tracking-logic knob ----
+        "fig10_wbfs_sb1" => {
+            c.tl = TlKind::Wbfs;
+            c.batching = BatchingKind::Static { size: 1 };
+        }
+        "fig10_base_100" => {
+            c.tl = TlKind::Base;
+            c.num_cameras = 100;
+            c.workload.vertices = 100;
+            c.workload.edges = 282;
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        "fig10_base_200" => {
+            c.tl = TlKind::Base;
+            c.num_cameras = 200;
+            c.workload.vertices = 200;
+            c.workload.edges = 563;
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        // ---- Fig 11: drop knob at es = 7 m/s ----
+        "fig11_nodrops" | "fig11_drops" => {
+            c.tl_peak_speed_mps = 7.0;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.drops_enabled = name == "fig11_drops";
+        }
+        // ---- Fig 12: App 2 (large CR) ----
+        "fig12_sb20" => {
+            c.app = AppKind::App2;
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        "fig12_db25" => {
+            c.app = AppKind::App2;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+        }
+        "fig12_wbfs_sb20" => {
+            c.app = AppKind::App2;
+            c.tl = TlKind::Wbfs;
+            c.batching = BatchingKind::Static { size: 20 };
+        }
+        "fig12_es6_db25" => {
+            c.app = AppKind::App2;
+            c.tl_peak_speed_mps = 6.0;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+        }
+        "fig12_es6_drops" => {
+            c.app = AppKind::App2;
+            c.tl_peak_speed_mps = 6.0;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.drops_enabled = true;
+        }
+        other => panic!("unknown preset {other:?}"),
+    }
+    if matches!(c.app, AppKind::App2) {
+        // App 2's CR DNN takes ~63% longer per frame (§5.3).
+        c.service.cr_alpha_ms *= 1.63;
+        c.service.cr_beta_ms *= 1.63;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_build() {
+        for name in ALL {
+            let c = preset(name);
+            assert_eq!(&c.name, name);
+        }
+    }
+
+    #[test]
+    fn fig9_has_bandwidth_event() {
+        let c = preset("fig9_anv");
+        assert_eq!(c.network.events.len(), 1);
+        assert!((c.network.events[0].at_sec - 300.0).abs() < 1e-9);
+        assert!((c.network.events[0].bandwidth_bps - 30e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn fig12_cr_is_slower() {
+        let a1 = preset("fig7d");
+        let a2 = preset("fig12_db25");
+        let x1 = a1.service.cr_alpha_ms + a1.service.cr_beta_ms;
+        let x2 = a2.service.cr_alpha_ms + a2.service.cr_beta_ms;
+        assert!((x2 / x1 - 1.63).abs() < 0.01);
+    }
+
+    #[test]
+    fn base_presets_shrink_network() {
+        let c = preset("fig10_base_100");
+        assert_eq!(c.num_cameras, 100);
+        assert_eq!(c.workload.vertices, 100);
+        assert!(matches!(c.tl, TlKind::Base));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown preset")]
+    fn unknown_preset_panics() {
+        preset("nope");
+    }
+}

@@ -1,0 +1,742 @@
+//! Live engine: wall-clock, thread-based serving with real PJRT model
+//! execution — Python is nowhere on this path.
+//!
+//! Workers are OS threads connected by channels (the in-process stand-in
+//! for the paper's ZeroMQ/SysV transport): camera feeds → VA workers →
+//! CR workers → UV sink, with TL consuming CR detections and flipping
+//! per-camera active flags. VA/CR workers run the *same* [`Batcher`],
+//! drop-point and [`BudgetManager`] logic as the DES engine, but against
+//! the real clock and the real AOT-compiled models from
+//! [`crate::runtime::ModelPool`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{BatchingKind, ExperimentConfig};
+use crate::coordinator::tl::TrackingLogic;
+use crate::dataflow::{Event, Header, Partitioner, Payload, Stage};
+use crate::metrics::{Ledger, Summary};
+use crate::roadnet::{generate, place_cameras};
+use crate::runtime::{ModelOutput, ModelPool};
+use crate::sim::{identity_image, EntityWalk, GroundTruth};
+use crate::tuning::budget::BUDGET_INF;
+use crate::tuning::{
+    drop_before_exec, drop_before_queue, Batcher, BatcherPoll,
+    BudgetManager, EventRecord, NobTable, QueuedEvent, Signal, XiModel,
+};
+use crate::util::{Micros, SEC};
+
+/// A request to the model-service thread.
+struct ModelReq {
+    variant: String,
+    images: Vec<f32>,
+    reply: Sender<Result<ModelOutput>>,
+}
+
+/// The PJRT client is not `Send` (it holds `Rc` internals), so one
+/// dedicated thread owns the [`ModelPool`] and serves execution
+/// requests over a channel — the in-process analogue of the paper's
+/// local gRPC model service that VA/CR call into (§3).
+#[derive(Clone)]
+pub struct ModelService {
+    tx: Sender<ModelReq>,
+    query: Arc<Vec<f32>>,
+    img_dim: usize,
+}
+
+/// Data produced while initializing the model-service thread.
+pub struct ModelServiceInit {
+    pub va_xi: XiModel,
+    pub cr_xi: XiModel,
+}
+
+impl ModelService {
+    /// Spawn the service thread. The PJRT pool is **loaded inside the
+    /// thread** (the client is not `Send`); the thread bootstraps the
+    /// query embedding from the entity's query image and calibrates
+    /// ξ(b) for both variants before serving.
+    pub fn spawn(
+        artifacts_dir: std::path::PathBuf,
+        va_variant: &str,
+        cr_variant: &str,
+        buckets: Vec<usize>,
+    ) -> Result<(Self, ModelServiceInit)> {
+        let (tx, rx) = mpsc::channel::<ModelReq>();
+        let (init_tx, init_rx) = mpsc::channel();
+        let va_v = va_variant.to_string();
+        let cr_v = cr_variant.to_string();
+        std::thread::spawn(move || {
+            let setup = || -> Result<(ModelPool, Vec<f32>, XiModel, XiModel)> {
+                let mut variants: Vec<&str> = vec![&va_v, &cr_v];
+                variants.dedup();
+                let pool = ModelPool::load(
+                    &artifacts_dir,
+                    &variants,
+                    Some(&buckets),
+                )?;
+                let qimg = identity_image(ENTITY_IDENTITY, 0, 0.25);
+                let query = pool.embed_query(&cr_v, &qimg)?;
+                let (va_xi, _) = pool.calibrate_xi(&va_v, 2)?;
+                let (cr_xi, _) = pool.calibrate_xi(&cr_v, 2)?;
+                Ok((pool, query, va_xi, cr_xi))
+            };
+            match setup() {
+                Ok((pool, query, va_xi, cr_xi)) => {
+                    let q = query.clone();
+                    let _ = init_tx.send(Ok((query, va_xi, cr_xi)));
+                    for req in rx {
+                        let out =
+                            pool.execute(&req.variant, &req.images, &q);
+                        let _ = req.reply.send(out);
+                    }
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                }
+            }
+        });
+        let (query, va_xi, cr_xi) = init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("model service died"))??;
+        let img_dim = crate::sim::IMG_DIM;
+        Ok((
+            Self {
+                tx,
+                query: Arc::new(query),
+                img_dim,
+            },
+            ModelServiceInit { va_xi, cr_xi },
+        ))
+    }
+
+    pub fn execute(
+        &self,
+        variant: &str,
+        images: Vec<f32>,
+    ) -> Result<ModelOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(ModelReq {
+                variant: variant.to_string(),
+                images,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("model service down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("model service down"))?
+    }
+
+    pub fn img_dim(&self) -> usize {
+        self.img_dim
+    }
+
+    pub fn query(&self) -> &[f32] {
+        &self.query
+    }
+}
+
+/// Messages on a worker's input channel.
+enum Msg {
+    Ev(Event),
+    Sig(Signal),
+    Stop,
+}
+
+/// Output of a live run.
+#[derive(Debug)]
+pub struct LiveReport {
+    pub summary: Summary,
+    /// Confirmed entity detections delivered to UV.
+    pub detections: u64,
+    /// Wall-clock duration of the run (s).
+    pub wall_secs: f64,
+    /// Frames processed per second of wall time.
+    pub throughput: f64,
+    /// Peak TL active-set size observed.
+    pub peak_active: usize,
+}
+
+/// Identity used for the tracked entity's frames.
+pub const ENTITY_IDENTITY: u64 = 42;
+
+fn now_us(start: Instant) -> Micros {
+    start.elapsed().as_micros() as Micros
+}
+
+/// A VA/CR worker: batcher + budgets + real model execution.
+struct Worker {
+    stage: Stage,
+    batcher: Batcher<Event>,
+    budget: BudgetManager,
+    xi: XiModel,
+    score_threshold: f32,
+}
+
+struct Shared {
+    ledger: Mutex<Ledger>,
+    detections: AtomicU64,
+    fc_active: Vec<AtomicBool>,
+    gamma: Micros,
+    drops_enabled: bool,
+    start: Instant,
+}
+
+/// The live serving engine.
+pub struct LiveEngine {
+    cfg: ExperimentConfig,
+    artifacts_dir: std::path::PathBuf,
+    va_variant: String,
+    cr_variant: String,
+}
+
+impl LiveEngine {
+    pub fn new(
+        cfg: ExperimentConfig,
+        artifacts_dir: std::path::PathBuf,
+        va_variant: &str,
+        cr_variant: &str,
+    ) -> Self {
+        Self {
+            cfg,
+            artifacts_dir,
+            va_variant: va_variant.to_string(),
+            cr_variant: cr_variant.to_string(),
+        }
+    }
+
+    /// Run the tracking application for `cfg.duration_secs` of wall
+    /// time and report latency/throughput/accuracy.
+    pub fn run(self) -> Result<LiveReport> {
+        let cfg = &self.cfg;
+        let graph = generate(&cfg.workload, cfg.seed);
+        let cams =
+            place_cameras(&graph, cfg.num_cameras, 0, cfg.workload.fov_m);
+        let duration = cfg.duration();
+        let walk = EntityWalk::simulate(
+            &graph,
+            0,
+            cfg.workload.entity_speed_mps,
+            duration + 30 * SEC,
+            cfg.seed,
+        );
+        let gt = GroundTruth::compute(
+            &graph,
+            &cams,
+            &walk,
+            duration + 30 * SEC,
+            200_000,
+        );
+
+        // The model-service thread loads the pool, bootstraps the
+        // query embedding and calibrates xi(b) from the real
+        // executables.
+        let buckets = match cfg.batching {
+            BatchingKind::Static { size } => {
+                vec![1, size.min(32).max(1)]
+            }
+            BatchingKind::Dynamic { max }
+            | BatchingKind::Nob { max } => {
+                let mut b: Vec<usize> = [1usize, 2, 4, 8, 16, 25, 32]
+                    .into_iter()
+                    .filter(|&x| x <= max.max(1))
+                    .collect();
+                if b.is_empty() {
+                    b.push(1);
+                }
+                b
+            }
+        };
+        let (service, init) = ModelService::spawn(
+            self.artifacts_dir.clone(),
+            &self.va_variant,
+            &self.cr_variant,
+            buckets,
+        )?;
+        let (va_xi, cr_xi) = (init.va_xi, init.cr_xi);
+
+        let shared = Arc::new(Shared {
+            ledger: Mutex::new(Ledger::new()),
+            detections: AtomicU64::new(0),
+            fc_active: (0..cfg.num_cameras)
+                .map(|_| AtomicBool::new(true))
+                .collect(),
+            gamma: cfg.gamma(),
+            drops_enabled: cfg.drops_enabled,
+            start: Instant::now(),
+        });
+
+        // ---- channel topology -------------------------------------------
+        let n_va = cfg.cluster.va_instances.min(4).max(1);
+        let n_cr = cfg.cluster.cr_instances.min(4).max(1);
+        let va_part = Partitioner::new(n_va);
+        let cr_part = Partitioner::new(n_cr);
+
+        let (uv_tx, uv_rx) = mpsc::channel::<Msg>();
+        let (tl_tx, tl_rx) = mpsc::channel::<(usize, Micros, bool)>();
+
+        let mut cr_tx = Vec::new();
+        let mut cr_handles = Vec::new();
+        for i in 0..n_cr {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            cr_tx.push(tx);
+            let mut w = self.mk_worker(Stage::Cr, &cr_xi);
+            w.score_threshold = 0.6;
+            let sh = Arc::clone(&shared);
+            let uv = uv_tx.clone();
+            let tl = tl_tx.clone();
+            let variant = self.cr_variant.clone();
+            let svc = service.clone();
+            cr_handles.push(std::thread::spawn(move || {
+                worker_loop(w, rx, sh, svc, variant, move |ev| {
+                    if let Payload::Detection { detected, .. } = ev.payload
+                    {
+                        let _ = tl.send((
+                            ev.header.camera,
+                            ev.header.captured,
+                            detected,
+                        ));
+                    }
+                    let _ = uv.send(Msg::Ev(ev));
+                });
+                i
+            }));
+        }
+
+        let mut va_tx = Vec::new();
+        let mut va_handles = Vec::new();
+        for i in 0..n_va {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            va_tx.push(tx);
+            let mut w = self.mk_worker(Stage::Va, &va_xi);
+            w.score_threshold = 0.0; // VA forwards everything (1:1)
+            let sh = Arc::clone(&shared);
+            let crs = cr_tx.clone();
+            let part = cr_part;
+            let variant = self.va_variant.clone();
+            let svc = service.clone();
+            va_handles.push(std::thread::spawn(move || {
+                worker_loop(w, rx, sh, svc, variant, move |ev| {
+                    let _ = crs[part.route(ev.header.camera)]
+                        .send(Msg::Ev(ev));
+                });
+                i
+            }));
+        }
+
+        // ---- TL thread ----------------------------------------------------
+        let tl_handle = {
+            let sh = Arc::clone(&shared);
+            let mut tl_logic = TrackingLogic::new(
+                cfg.tl,
+                cfg.tl_peak_speed_mps,
+                cfg.workload.mean_road_m,
+                cfg.workload.fov_m,
+                &cams,
+            );
+            if cfg.seed_last_seen {
+                tl_logic.on_detection(0, 0, true);
+            }
+            let graph = graph.clone();
+            std::thread::spawn(move || {
+                let mut peak = 0usize;
+                let mut last_eval = Instant::now();
+                loop {
+                    match tl_rx.recv_timeout(Duration::from_millis(200)) {
+                        Ok((cam, captured, detected)) => {
+                            tl_logic.on_detection(cam, captured, detected);
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                    if last_eval.elapsed() >= Duration::from_millis(500) {
+                        last_eval = Instant::now();
+                        let t = now_us(sh.start);
+                        let active = tl_logic.active_set(&graph, t);
+                        peak = peak.max(active.len());
+                        let mut want =
+                            vec![false; sh.fc_active.len()];
+                        for c in active {
+                            want[c] = true;
+                        }
+                        for (c, w) in want.iter().enumerate() {
+                            sh.fc_active[c]
+                                .store(*w, Ordering::Relaxed);
+                        }
+                    }
+                }
+                peak
+            })
+        };
+
+        // ---- UV sink thread -------------------------------------------------
+        let uv_handle = {
+            let sh = Arc::clone(&shared);
+            let va_sig = va_tx.clone();
+            let cr_sig = cr_tx.clone();
+            let va_part_c = va_part;
+            let cr_part_c = cr_part;
+            let eps_max = crate::util::millis(cfg.eps_max_ms);
+            std::thread::spawn(move || loop {
+                match uv_rx.recv_timeout(Duration::from_millis(200)) {
+                    Ok(Msg::Ev(ev)) => {
+                        let t = now_us(sh.start);
+                        let latency = t - ev.header.src_arrival;
+                        if ev.header.probe {
+                            continue;
+                        }
+                        let detected = matches!(
+                            ev.payload,
+                            Payload::Detection { detected: true, .. }
+                        );
+                        if detected {
+                            sh.detections
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        sh.ledger.lock().unwrap().completed(
+                            ev.header.id,
+                            latency,
+                            sh.gamma,
+                            detected,
+                        );
+                        // Accept signals on comfortably-early arrivals.
+                        let eps = sh.gamma - latency;
+                        if eps > eps_max {
+                            let sig = Signal::Accept {
+                                event: ev.header.id,
+                                eps,
+                                sum_exec: ev.header.sum_exec.max(1),
+                            };
+                            let cam = ev.header.camera;
+                            let _ = va_sig[va_part_c.route(cam)]
+                                .send(Msg::Sig(sig));
+                            let _ = cr_sig[cr_part_c.route(cam)]
+                                .send(Msg::Sig(sig));
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            })
+        };
+
+        // ---- feed loop (main thread) -----------------------------------------
+        let mut next_id = 0u64;
+        let mut frame_no = vec![0u64; cfg.num_cameras];
+        let period =
+            Duration::from_micros((1e6 / cfg.fps) as u64);
+        let mut next_fire = Instant::now();
+        while shared.start.elapsed()
+            < Duration::from_secs_f64(cfg.duration_secs)
+        {
+            for cam in 0..cfg.num_cameras {
+                if !shared.fc_active[cam].load(Ordering::Relaxed) {
+                    continue;
+                }
+                let t = now_us(shared.start);
+                let present = gt.visible(cam, t);
+                // Real pixels: entity frames use the entity identity;
+                // negatives use a per-camera/frame background identity.
+                let ident = if present {
+                    ENTITY_IDENTITY
+                } else {
+                    1_000 + ((cam as u64) * 131 + frame_no[cam]) % 5_000
+                };
+                let img = identity_image(ident, frame_no[cam], 0.25);
+                let header =
+                    Header::new(next_id, cam, frame_no[cam], t);
+                shared
+                    .ledger
+                    .lock()
+                    .unwrap()
+                    .generated(next_id, present);
+                let ev = Event {
+                    header,
+                    payload: Payload::FrameData(Arc::new(img)),
+                };
+                let _ =
+                    va_tx[va_part.route(cam)].send(Msg::Ev(ev));
+                next_id += 1;
+                frame_no[cam] += 1;
+            }
+            next_fire += period;
+            let now = Instant::now();
+            if next_fire > now {
+                std::thread::sleep(next_fire - now);
+            }
+        }
+
+        // Drain: give in-flight events one gamma to finish.
+        std::thread::sleep(Duration::from_millis(
+            (cfg.gamma_ms as u64).min(3_000),
+        ));
+        for tx in &va_tx {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in va_handles {
+            let _ = h.join();
+        }
+        for tx in &cr_tx {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in cr_handles {
+            let _ = h.join();
+        }
+        drop(uv_tx);
+        drop(tl_tx);
+        let _ = uv_handle.join();
+        let peak_active = tl_handle.join().unwrap_or(0);
+
+        let wall = shared.start.elapsed().as_secs_f64();
+        let summary = shared.ledger.lock().unwrap().summary();
+        let processed = summary.on_time + summary.delayed;
+        Ok(LiveReport {
+            detections: shared.detections.load(Ordering::Relaxed),
+            throughput: processed as f64 / wall,
+            wall_secs: wall,
+            peak_active,
+            summary,
+        })
+    }
+
+    fn mk_worker(&self, stage: Stage, xi: &XiModel) -> Worker {
+        let cfg = &self.cfg;
+        let batcher = match cfg.batching {
+            BatchingKind::Static { size } => Batcher::fixed(size),
+            BatchingKind::Dynamic { max } => Batcher::dynamic(max),
+            BatchingKind::Nob { max } => {
+                Batcher::nob(NobTable::build(xi, 1000.0, 10.0, max), max)
+            }
+        };
+        let m_max = match cfg.batching {
+            BatchingKind::Static { size } => size,
+            BatchingKind::Dynamic { max }
+            | BatchingKind::Nob { max } => max,
+        };
+        Worker {
+            stage,
+            batcher,
+            budget: BudgetManager::new(1, m_max, 2048),
+            xi: xi.clone().with_ema(0.1),
+            score_threshold: 0.5,
+        }
+    }
+}
+
+/// The executor loop shared by VA and CR workers.
+fn worker_loop(
+    mut w: Worker,
+    rx: Receiver<Msg>,
+    sh: Arc<Shared>,
+    svc: ModelService,
+    variant: String,
+    mut forward: impl FnMut(Event),
+) {
+    let img_dim = svc.img_dim();
+    'outer: loop {
+        // Drive the batcher.
+        let now = now_us(sh.start);
+        let poll = {
+            let xi = w.xi.clone();
+            w.batcher.poll(now, &xi)
+        };
+        match poll {
+            BatcherPoll::Ready(batch) => {
+                exec_batch(
+                    &mut w, batch, &sh, &svc, &variant, img_dim,
+                    &mut forward,
+                );
+                continue;
+            }
+            BatcherPoll::Timer(at) => {
+                let wait = (at - now).max(0) as u64;
+                match rx.recv_timeout(Duration::from_micros(
+                    wait.min(200_000),
+                )) {
+                    Ok(msg) => {
+                        if !handle_msg(&mut w, msg, &sh) {
+                            break 'outer;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            BatcherPoll::Idle => {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(msg) => {
+                        if !handle_msg(&mut w, msg, &sh) {
+                            break 'outer;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        // Opportunistically drain without blocking.
+        while let Ok(msg) = rx.try_recv() {
+            if !handle_msg(&mut w, msg, &sh) {
+                break 'outer;
+            }
+        }
+    }
+    // Final flush: execute whatever is still queued.
+    loop {
+        let now = now_us(sh.start);
+        let xi = w.xi.clone();
+        match w.batcher.poll(now + BUDGET_INF / 2, &xi) {
+            BatcherPoll::Ready(batch) => exec_batch(
+                &mut w,
+                batch,
+                &sh,
+                &svc,
+                &variant,
+                img_dim,
+                &mut forward,
+            ),
+            _ => break,
+        }
+    }
+}
+
+/// Returns false on Stop.
+fn handle_msg(w: &mut Worker, msg: Msg, sh: &Arc<Shared>) -> bool {
+    match msg {
+        Msg::Stop => false,
+        Msg::Sig(sig) => {
+            w.budget.apply(sig, &w.xi);
+            true
+        }
+        Msg::Ev(ev) => {
+            let now = now_us(sh.start);
+            let u = now - ev.header.src_arrival;
+            let exempt = ev.header.avoid_drop || ev.header.probe;
+            if sh.drops_enabled && !exempt {
+                let budget = w.budget.budget_max();
+                if budget < BUDGET_INF
+                    && drop_before_queue(u, w.xi.xi(1), budget)
+                {
+                    sh.ledger
+                        .lock()
+                        .unwrap()
+                        .dropped(ev.header.id, w.stage);
+                    return true;
+                }
+            }
+            let deadline = {
+                let b = w.budget.budget_max();
+                if b >= BUDGET_INF {
+                    BUDGET_INF
+                } else {
+                    b + ev.header.src_arrival
+                }
+            };
+            let id = ev.header.id;
+            w.batcher.push(QueuedEvent {
+                item: ev,
+                id,
+                arrival: now,
+                deadline,
+            });
+            true
+        }
+    }
+}
+
+fn exec_batch(
+    w: &mut Worker,
+    mut batch: Vec<QueuedEvent<Event>>,
+    sh: &Arc<Shared>,
+    svc: &ModelService,
+    variant: &str,
+    img_dim: usize,
+    forward: &mut impl FnMut(Event),
+) {
+    let start = now_us(sh.start);
+    // Drop point 2.
+    if sh.drops_enabled {
+        let budget = w.budget.budget_max();
+        if budget < BUDGET_INF {
+            let xib = w.xi.xi(batch.len());
+            let mut kept = Vec::with_capacity(batch.len());
+            for qe in batch {
+                let u = qe.arrival - qe.item.header.src_arrival;
+                let q = start - qe.arrival;
+                let exempt =
+                    qe.item.header.avoid_drop || qe.item.header.probe;
+                if !exempt && drop_before_exec(u, q, xib, budget) {
+                    sh.ledger
+                        .lock()
+                        .unwrap()
+                        .dropped(qe.item.header.id, w.stage);
+                } else {
+                    kept.push(qe);
+                }
+            }
+            batch = kept;
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let b = batch.len();
+
+    // Gather pixels and run the real model.
+    let mut images = Vec::with_capacity(b * img_dim);
+    for qe in &batch {
+        match &qe.item.payload {
+            Payload::FrameData(img) => images.extend_from_slice(img),
+            _ => images.extend(std::iter::repeat(0f32).take(img_dim)),
+        }
+    }
+
+    let out = svc.execute(variant, images).expect("model execution");
+    let end = now_us(sh.start);
+    let actual = end - start;
+    w.xi.observe(b, actual);
+    let xi_est = w.xi.xi(b);
+
+    for (i, qe) in batch.into_iter().enumerate() {
+        let mut ev = qe.item;
+        let q = start - qe.arrival;
+        let u = qe.arrival - ev.header.src_arrival;
+        w.budget.record(
+            ev.header.id,
+            EventRecord {
+                departure: u + q + actual,
+                queue: q,
+                batch: b,
+                sent_to: 0,
+            },
+        );
+        ev.header.sum_exec += xi_est;
+        ev.header.sum_queue += q;
+        let score = out.scores[i];
+        match w.stage {
+            Stage::Va => {
+                // 1:1 selectivity: every frame flows on, carrying the
+                // match score for CR.
+                if let Payload::FrameData(img) = &ev.payload {
+                    let img = Arc::clone(img);
+                    ev.payload = Payload::FrameData(img);
+                }
+            }
+            Stage::Cr => {
+                let detected = score > w.score_threshold;
+                if detected {
+                    ev.header.avoid_drop = true;
+                }
+                ev.payload = Payload::Detection {
+                    detected,
+                    confidence: score,
+                };
+            }
+            _ => {}
+        }
+        forward(ev);
+    }
+}

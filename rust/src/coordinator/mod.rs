@@ -1,0 +1,17 @@
+//! The Anveshak coordinator: deployment topology (Master/Scheduler),
+//! the tracking-logic state machine, and two execution engines sharing
+//! the same module and tuning logic:
+//!
+//! * [`des`] — virtual-time discrete-event engine (experiment harness),
+//! * [`live`] — wall-clock, thread-based engine with real PJRT model
+//!   execution (serving examples).
+
+pub mod des;
+pub mod live;
+pub mod tl;
+pub mod topology;
+
+pub use des::{DesEngine, RunResult};
+pub use live::{LiveEngine, LiveReport, ModelService, ENTITY_IDENTITY};
+pub use tl::TrackingLogic;
+pub use topology::{TaskInfo, Topology};

@@ -1,0 +1,280 @@
+//! Tracking Logic — the spotlight state machine (§2.2.4, Alg 1 TL_WBFS).
+//!
+//! Consumes CR detections, maintains the last-seen location/time, and
+//! computes the set of cameras that should be active: contracting to the
+//! sighting camera on a positive detection, expanding the spotlight
+//! (BFS/WBFS/probabilistic over the road network) while the entity is in
+//! a blind-spot. Engine-agnostic: both the DES and the live engine feed
+//! it detections and ask for the active set.
+
+use std::collections::HashMap;
+
+use crate::config::TlKind;
+use crate::roadnet::{
+    bfs_spotlight, probabilistic_spotlight, wbfs_spotlight, Camera, Graph,
+};
+use crate::util::{Micros, SEC};
+
+/// Spotlight tracking state.
+pub struct TrackingLogic {
+    kind: TlKind,
+    /// Configured peak entity speed `es` (m/s) — the expansion rate.
+    es_mps: f64,
+    /// Fixed road length assumed by TL-BFS (the paper uses the network
+    /// mean, 84.5 m).
+    fixed_len_m: f64,
+    /// Extra slack added to the spotlight radius (covers FOV).
+    fov_m: f64,
+    /// vertex -> cameras mounted there.
+    cam_at: HashMap<usize, Vec<usize>>,
+    cameras: Vec<Camera>,
+    /// Last positive sighting: (vertex, capture time).
+    last_seen: Option<(usize, Micros)>,
+    /// Previous sighting (for speed estimation in WbfsSpeed).
+    prev_seen: Option<(usize, Micros)>,
+    /// Whether the entity was visible at the last evaluation.
+    visible: bool,
+}
+
+impl TrackingLogic {
+    pub fn new(
+        kind: TlKind,
+        es_mps: f64,
+        fixed_len_m: f64,
+        fov_m: f64,
+        cameras: &[Camera],
+    ) -> Self {
+        let mut cam_at: HashMap<usize, Vec<usize>> = HashMap::new();
+        for c in cameras {
+            cam_at.entry(c.vertex).or_default().push(c.id);
+        }
+        Self {
+            kind,
+            es_mps,
+            fixed_len_m,
+            fov_m,
+            cam_at,
+            cameras: cameras.to_vec(),
+            last_seen: None,
+            prev_seen: None,
+            visible: false,
+        }
+    }
+
+    /// Feed a CR detection for the frame captured by `camera` at
+    /// `captured` (source timestamps, so late events can't corrupt the
+    /// sighting order).
+    pub fn on_detection(
+        &mut self,
+        camera: usize,
+        captured: Micros,
+        detected: bool,
+    ) {
+        if detected {
+            let vertex = self.cameras[camera].vertex;
+            match self.last_seen {
+                Some((v, t)) if captured >= t => {
+                    if v != vertex {
+                        self.prev_seen = Some((v, t));
+                    }
+                    self.last_seen = Some((vertex, captured));
+                    self.visible = true;
+                }
+                None => {
+                    self.last_seen = Some((vertex, captured));
+                    self.visible = true;
+                }
+                _ => {} // stale event, ignore
+            }
+        } else if let Some((_, t)) = self.last_seen {
+            // A negative frame *newer* than the last sighting from the
+            // last-seen camera means the entity left the FOV.
+            if captured > t {
+                self.visible = false;
+            }
+        }
+    }
+
+    /// Last positive sighting (vertex, time), if any.
+    pub fn last_seen(&self) -> Option<(usize, Micros)> {
+        self.last_seen
+    }
+
+    /// Estimated entity speed from the last two sightings (m/s).
+    fn observed_speed(&self, g: &Graph) -> Option<f64> {
+        let (v1, t1) = self.last_seen?;
+        let (v0, t0) = self.prev_seen?;
+        if t1 <= t0 {
+            return None;
+        }
+        let d = g.euclid(v0, v1);
+        Some(d / ((t1 - t0) as f64 / SEC as f64))
+    }
+
+    /// The camera ids that should be active at time `now`.
+    ///
+    /// Expansion (§ Fig 1): while in a blind-spot the spotlight radius
+    /// grows as `es * time-since-last-seen + fov`; on a sighting it
+    /// contracts to the camera(s) at the sighting vertex.
+    pub fn active_set(&self, g: &Graph, now: Micros) -> Vec<usize> {
+        if matches!(self.kind, TlKind::Base) {
+            // Baseline: every camera active all the time.
+            return (0..self.cameras.len()).collect();
+        }
+        let Some((vertex, seen_at)) = self.last_seen else {
+            // Entity never seen: keep the whole network live so the
+            // first sighting can happen (paper bootstraps all-active).
+            return (0..self.cameras.len()).collect();
+        };
+        if self.visible {
+            // Contracted spotlight: the sighting vertex only.
+            return self
+                .cam_at
+                .get(&vertex)
+                .cloned()
+                .unwrap_or_default();
+        }
+        let blind_s = ((now - seen_at).max(0)) as f64 / SEC as f64;
+        let radius = match self.kind {
+            TlKind::WbfsSpeed => {
+                // Speed-aware: expand with the *observed* speed (capped
+                // by the configured peak) instead of always the peak.
+                let sp = self
+                    .observed_speed(g)
+                    .map(|s| (1.5 * s).clamp(0.5, self.es_mps))
+                    .unwrap_or(self.es_mps);
+                sp * blind_s + self.fov_m
+            }
+            _ => self.es_mps * blind_s + self.fov_m,
+        };
+        let verts = match self.kind {
+            TlKind::Bfs => {
+                bfs_spotlight(g, vertex, radius, self.fixed_len_m)
+            }
+            TlKind::Wbfs | TlKind::WbfsSpeed => {
+                wbfs_spotlight(g, vertex, radius)
+            }
+            TlKind::Probabilistic => probabilistic_spotlight(
+                g,
+                vertex,
+                self.es_mps,
+                blind_s.max(1.0),
+                0.90,
+            ),
+            TlKind::Base => unreachable!(),
+        };
+        let mut cams: Vec<usize> = verts
+            .iter()
+            .filter_map(|v| self.cam_at.get(v))
+            .flatten()
+            .copied()
+            .collect();
+        cams.sort_unstable();
+        cams.dedup();
+        cams
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::roadnet::{generate, place_cameras};
+    use crate::util::secs;
+
+    fn setup(kind: TlKind) -> (Graph, TrackingLogic) {
+        let g = generate(&WorkloadConfig::default(), 5);
+        let cams = place_cameras(&g, 1000, 0, 40.0);
+        let tl = TrackingLogic::new(kind, 4.0, 84.5, 40.0, &cams);
+        (g, tl)
+    }
+
+    #[test]
+    fn bootstrap_all_active() {
+        let (g, tl) = setup(TlKind::Bfs);
+        assert_eq!(tl.active_set(&g, 0).len(), 1000);
+    }
+
+    #[test]
+    fn positive_detection_contracts_to_camera() {
+        let (g, mut tl) = setup(TlKind::Bfs);
+        tl.on_detection(5, secs(10.0), true);
+        let act = tl.active_set(&g, secs(10.5));
+        assert!(act.contains(&5));
+        assert!(act.len() <= 3, "contracted set: {act:?}");
+    }
+
+    #[test]
+    fn blindspot_expands_with_time() {
+        let (g, mut tl) = setup(TlKind::Bfs);
+        tl.on_detection(5, secs(10.0), true);
+        tl.on_detection(5, secs(11.0), false); // left FOV
+        let a = tl.active_set(&g, secs(15.0)).len();
+        let b = tl.active_set(&g, secs(40.0)).len();
+        let c = tl.active_set(&g, secs(90.0)).len();
+        assert!(a < b && b < c, "sawtooth growth: {a} {b} {c}");
+    }
+
+    #[test]
+    fn reacquisition_contracts_again() {
+        let (g, mut tl) = setup(TlKind::Wbfs);
+        tl.on_detection(5, secs(10.0), true);
+        tl.on_detection(5, secs(11.0), false);
+        assert!(tl.active_set(&g, secs(60.0)).len() > 5);
+        tl.on_detection(9, secs(61.0), true);
+        let act = tl.active_set(&g, secs(61.5));
+        assert!(act.contains(&9));
+        assert!(act.len() <= 3);
+    }
+
+    #[test]
+    fn stale_detections_ignored() {
+        let (_, mut tl) = setup(TlKind::Bfs);
+        tl.on_detection(5, secs(20.0), true);
+        tl.on_detection(7, secs(10.0), true); // older capture
+        assert_eq!(tl.last_seen().unwrap().1, secs(20.0));
+        // A stale negative cannot flip visibility either.
+        tl.on_detection(5, secs(15.0), false);
+        assert!(tl.visible);
+    }
+
+    #[test]
+    fn wbfs_spotlight_no_larger_than_bfs() {
+        // The paper: WBFS grows more gradually because it knows exact
+        // road lengths; BFS with the mean fixed length overshoots once
+        // hops overshoot real distances.
+        let (g, mut tl_b) = setup(TlKind::Bfs);
+        let (_, mut tl_w) = setup(TlKind::Wbfs);
+        for tl in [&mut tl_b, &mut tl_w] {
+            tl.on_detection(0, secs(10.0), true);
+            tl.on_detection(0, secs(11.0), false);
+        }
+        // Average over several blind-spot durations.
+        let (mut nb, mut nw) = (0usize, 0usize);
+        for s in [30.0, 60.0, 90.0, 120.0] {
+            nb += tl_b.active_set(&g, secs(s)).len();
+            nw += tl_w.active_set(&g, secs(s)).len();
+        }
+        assert!(
+            nw <= nb,
+            "WBFS total {nw} should not exceed BFS total {nb}"
+        );
+    }
+
+    #[test]
+    fn base_keeps_everything_active() {
+        let (g, mut tl) = setup(TlKind::Base);
+        tl.on_detection(5, secs(10.0), true);
+        assert_eq!(tl.active_set(&g, secs(20.0)).len(), 1000);
+    }
+
+    #[test]
+    fn probabilistic_activates_likely_region() {
+        let (g, mut tl) = setup(TlKind::Probabilistic);
+        tl.on_detection(0, secs(10.0), true);
+        tl.on_detection(0, secs(11.0), false);
+        let act = tl.active_set(&g, secs(41.0));
+        assert!(!act.is_empty());
+        assert!(act.len() < 1000);
+    }
+}

@@ -1,0 +1,230 @@
+//! Deployment topology — the Master's Scheduler output (§3).
+//!
+//! Mirrors the paper's setup: one head node plus N compute nodes. FC
+//! instances (one per camera) are placed round-robin across compute
+//! nodes; VA and CR instances round-robin as well, co-locating a subset
+//! of FC/VA/CR per server to cut network transfers; TL and UV run on the
+//! head node. The default scheduler is round-robin with a fixed instance
+//! count per module type, exactly as in the paper.
+
+use crate::config::ExperimentConfig;
+use crate::dataflow::{Partitioner, Stage};
+
+/// One deployed module instance (task).
+#[derive(Debug, Clone)]
+pub struct TaskInfo {
+    pub stage: Stage,
+    /// Instance index within its stage.
+    pub instance: usize,
+    /// Hosting node (0..compute_nodes are compute, `compute_nodes` is
+    /// the head node).
+    pub node: usize,
+}
+
+/// The deployed dataflow: task table plus routing.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub tasks: Vec<TaskInfo>,
+    /// task index of the first FC (then one per camera).
+    fc0: usize,
+    va0: usize,
+    cr0: usize,
+    pub tl: usize,
+    pub uv: usize,
+    pub num_cameras: usize,
+    pub va_part: Partitioner,
+    pub cr_part: Partitioner,
+    pub head_node: usize,
+    pub nodes: usize,
+}
+
+impl Topology {
+    /// Run the round-robin scheduler for a config.
+    pub fn schedule(cfg: &ExperimentConfig) -> Self {
+        let compute = cfg.cluster.compute_nodes;
+        let head = compute;
+        let mut tasks = Vec::new();
+
+        let fc0 = tasks.len();
+        for cam in 0..cfg.num_cameras {
+            tasks.push(TaskInfo {
+                stage: Stage::Fc,
+                instance: cam,
+                node: cam % compute,
+            });
+        }
+        let va0 = tasks.len();
+        for i in 0..cfg.cluster.va_instances {
+            tasks.push(TaskInfo {
+                stage: Stage::Va,
+                instance: i,
+                node: i % compute,
+            });
+        }
+        let cr0 = tasks.len();
+        for i in 0..cfg.cluster.cr_instances {
+            tasks.push(TaskInfo {
+                stage: Stage::Cr,
+                instance: i,
+                node: i % compute,
+            });
+        }
+        let tl = tasks.len();
+        tasks.push(TaskInfo {
+            stage: Stage::Tl,
+            instance: 0,
+            node: head,
+        });
+        let uv = tasks.len();
+        tasks.push(TaskInfo {
+            stage: Stage::Uv,
+            instance: 0,
+            node: head,
+        });
+
+        Self {
+            tasks,
+            fc0,
+            va0,
+            cr0,
+            tl,
+            uv,
+            num_cameras: cfg.num_cameras,
+            va_part: Partitioner::new(cfg.cluster.va_instances),
+            cr_part: Partitioner::new(cfg.cluster.cr_instances),
+            head_node: head,
+            nodes: compute + 1,
+        }
+    }
+
+    pub fn fc_task(&self, cam: usize) -> usize {
+        debug_assert!(cam < self.num_cameras);
+        self.fc0 + cam
+    }
+
+    /// The VA instance serving a camera (key-partitioned).
+    pub fn va_task(&self, cam: usize) -> usize {
+        self.va0 + self.va_part.route(cam)
+    }
+
+    /// The CR instance serving a camera.
+    pub fn cr_task(&self, cam: usize) -> usize {
+        self.cr0 + self.cr_part.route(cam)
+    }
+
+    /// The full latency-pipeline path of a camera's events.
+    pub fn path(&self, cam: usize) -> [usize; 4] {
+        [
+            self.fc_task(cam),
+            self.va_task(cam),
+            self.cr_task(cam),
+            self.uv,
+        ]
+    }
+
+    pub fn node_of(&self, task: usize) -> usize {
+        self.tasks[task].node
+    }
+
+    pub fn stage_of(&self, task: usize) -> Stage {
+        self.tasks[task].stage
+    }
+
+    /// Number of downstream instances a task partitions over (for
+    /// per-downstream budgets, §4.3.4).
+    pub fn downstream_count(&self, task: usize) -> usize {
+        match self.tasks[task].stage {
+            Stage::Fc => self.va_part.instances(),
+            Stage::Va => self.cr_part.instances(),
+            Stage::Cr => 1, // UV
+            _ => 1,
+        }
+    }
+
+    /// Downstream slot index an event from `cam` takes at `task` —
+    /// indexes that task's per-downstream budget table.
+    pub fn downstream_slot(&self, task: usize, cam: usize) -> usize {
+        match self.tasks[task].stage {
+            Stage::Fc => self.va_part.route(cam),
+            Stage::Va => self.cr_part.route(cam),
+            _ => 0,
+        }
+    }
+
+    pub fn va_tasks(&self) -> std::ops::Range<usize> {
+        self.va0..self.cr0
+    }
+
+    pub fn cr_tasks(&self) -> std::ops::Range<usize> {
+        self.cr0..self.tl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_cameras = 100;
+        Topology::schedule(&cfg)
+    }
+
+    #[test]
+    fn paper_instance_counts() {
+        let t = topo();
+        // 100 FC + 10 VA + 10 CR + TL + UV
+        assert_eq!(t.tasks.len(), 100 + 10 + 10 + 2);
+        assert_eq!(t.va_tasks().len(), 10);
+        assert_eq!(t.cr_tasks().len(), 10);
+    }
+
+    #[test]
+    fn fc_round_robin_over_compute_nodes() {
+        let t = topo();
+        assert_eq!(t.node_of(t.fc_task(0)), 0);
+        assert_eq!(t.node_of(t.fc_task(1)), 1);
+        assert_eq!(t.node_of(t.fc_task(10)), 0);
+        // No FC on the head node.
+        for cam in 0..100 {
+            assert_ne!(t.node_of(t.fc_task(cam)), t.head_node);
+        }
+    }
+
+    #[test]
+    fn tl_uv_on_head() {
+        let t = topo();
+        assert_eq!(t.node_of(t.tl), t.head_node);
+        assert_eq!(t.node_of(t.uv), t.head_node);
+    }
+
+    #[test]
+    fn path_follows_partitioning() {
+        let t = topo();
+        for cam in 0..100 {
+            let p = t.path(cam);
+            assert_eq!(t.stage_of(p[0]), Stage::Fc);
+            assert_eq!(t.stage_of(p[1]), Stage::Va);
+            assert_eq!(t.stage_of(p[2]), Stage::Cr);
+            assert_eq!(t.stage_of(p[3]), Stage::Uv);
+            // Stable.
+            assert_eq!(p, t.path(cam));
+        }
+    }
+
+    #[test]
+    fn downstream_slots_match_routing() {
+        let t = topo();
+        for cam in 0..100 {
+            let fc = t.fc_task(cam);
+            let slot = t.downstream_slot(fc, cam);
+            assert_eq!(t.va0_task_check(slot), t.va_task(cam));
+        }
+    }
+
+    impl Topology {
+        fn va0_task_check(&self, slot: usize) -> usize {
+            self.va0 + slot
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Events flowing through the dataflow.
+//!
+//! Events are key-value pairs (camera id, payload) with a header that
+//! carries the provenance the tuning strategies need: the source arrival
+//! time `a¹` (propagated to all causal downstream events, §4.2), the
+//! accumulated execution and queueing durations (Σξ, Σq — the two fields
+//! §4.5 adds to every downstream event), the `avoid-drop` flag (§4.3.3)
+//! and the probe marker (§4.5.2).
+
+use std::sync::Arc;
+
+use crate::util::Micros;
+
+pub type EventId = u64;
+
+/// Provenance and tuning metadata carried by every event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    /// Source event id `k`; all causal downstream events share it.
+    pub id: EventId,
+    /// Key: the originating camera.
+    pub camera: usize,
+    /// Frame number at that camera.
+    pub frame_no: u64,
+    /// Arrival time `aᵏ₁` at the source task (source device clock κ₁).
+    pub src_arrival: Micros,
+    /// Capture timestamp at the camera (used by TL for sighting times).
+    pub captured: Micros,
+    /// Σ ξⱼ(mᵏⱼ) over upstream tasks (§4.5 header field).
+    pub sum_exec: Micros,
+    /// Σ qᵏⱼ over upstream tasks (§4.5 header field).
+    pub sum_queue: Micros,
+    /// User-logic hint: never drop this event (e.g. positive matches).
+    pub avoid_drop: bool,
+    /// Probe events traverse the pipeline without being dropped so the
+    /// sink can re-open collapsed budgets (§4.5.2).
+    pub probe: bool,
+}
+
+impl Header {
+    pub fn new(
+        id: EventId,
+        camera: usize,
+        frame_no: u64,
+        src_arrival: Micros,
+    ) -> Self {
+        Self {
+            id,
+            camera,
+            frame_no,
+            src_arrival,
+            captured: src_arrival,
+            sum_exec: 0,
+            sum_queue: 0,
+            avoid_drop: false,
+            probe: false,
+        }
+    }
+}
+
+/// Module-specific payloads. The simulated engines carry ground-truth
+/// labels; the live engine carries real pixel data for the PJRT models.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// A camera frame (FC → VA). `entity_present` is ground truth.
+    Frame { entity_present: bool },
+    /// A frame with real pixels (live engine).
+    FrameData(Arc<Vec<f32>>),
+    /// VA output: candidate detections for CR (bounding boxes in the
+    /// paper; here the flag + matching score).
+    Candidate { entity_present: bool, score: f32 },
+    /// CR output: confirmed detection verdict (CR → UV/TL/QF).
+    Detection { detected: bool, confidence: f32 },
+    /// QF output: an updated query embedding (QF → VA/CR).
+    QueryUpdate(Arc<Vec<f32>>),
+}
+
+impl Payload {
+    /// Ground-truth presence, where the payload carries it.
+    pub fn entity_present(&self) -> Option<bool> {
+        match self {
+            Payload::Frame { entity_present }
+            | Payload::Candidate { entity_present, .. } => {
+                Some(*entity_present)
+            }
+            Payload::Detection { detected, .. } => Some(*detected),
+            _ => None,
+        }
+    }
+}
+
+/// A key-value event: header (key side) plus payload (value side).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub header: Header,
+    pub payload: Payload,
+}
+
+impl Event {
+    pub fn frame(
+        id: EventId,
+        camera: usize,
+        frame_no: u64,
+        src_arrival: Micros,
+        entity_present: bool,
+    ) -> Self {
+        Self {
+            header: Header::new(id, camera, frame_no, src_arrival),
+            payload: Payload::Frame { entity_present },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_propagates_source_arrival() {
+        let e = Event::frame(7, 3, 0, 123456, true);
+        assert_eq!(e.header.id, 7);
+        assert_eq!(e.header.src_arrival, 123456);
+        assert_eq!(e.header.captured, 123456);
+        assert_eq!(e.header.sum_exec, 0);
+        assert!(!e.header.avoid_drop);
+    }
+
+    #[test]
+    fn payload_truth_access() {
+        assert_eq!(
+            Payload::Frame {
+                entity_present: true
+            }
+            .entity_present(),
+            Some(true)
+        );
+        assert_eq!(
+            Payload::Detection {
+                detected: false,
+                confidence: 0.1
+            }
+            .entity_present(),
+            Some(false)
+        );
+        assert_eq!(
+            Payload::QueryUpdate(Arc::new(vec![])).entity_present(),
+            None
+        );
+    }
+}

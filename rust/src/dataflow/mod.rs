@@ -1,0 +1,16 @@
+//! The domain-specific dataflow programming model (§2.2).
+//!
+//! A tracking application is a fixed dataflow of six module types —
+//! Filter Controls (FC), Video Analytics (VA), Contention Resolution
+//! (CR), Tracking Logic (TL), Query Fusion (QF) and User Visualization
+//! (UV) — for which the user supplies functional logic; the platform
+//! owns grouping, batching, dropping and routing (like MapReduce fixes
+//! the dataflow and the user fills in Map/Reduce).
+
+mod event;
+mod partition;
+mod stage;
+
+pub use event::{Event, EventId, Header, Payload};
+pub use partition::Partitioner;
+pub use stage::Stage;

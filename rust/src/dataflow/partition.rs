@@ -1,0 +1,73 @@
+//! Key-based partitioning of events across module instances.
+//!
+//! Events are grouped by key (camera id) before module execution, like
+//! MapReduce's shuffle (§2.2.2); the partitioner maps a key to one of
+//! `n` downstream instances, and must be total and stable so a camera's
+//! frames always visit the same VA/CR instance (preserving per-camera
+//! temporal batches).
+
+/// Stable key → instance mapping.
+#[derive(Debug, Clone, Copy)]
+pub struct Partitioner {
+    n: usize,
+}
+
+impl Partitioner {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0, "partitioner needs at least one instance");
+        Self { n }
+    }
+
+    /// Instance index for a key (fibonacci-hash then mod — cheap and
+    /// well-spread for dense camera ids).
+    pub fn route(&self, key: usize) -> usize {
+        let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) as usize) % self.n
+    }
+
+    pub fn instances(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_and_stable() {
+        let p = Partitioner::new(10);
+        for k in 0..5000 {
+            let a = p.route(k);
+            assert!(a < 10);
+            assert_eq!(a, p.route(k), "stable for key {k}");
+        }
+    }
+
+    #[test]
+    fn spreads_dense_keys() {
+        let p = Partitioner::new(10);
+        let mut counts = [0usize; 10];
+        for k in 0..1000 {
+            counts[p.route(k)] += 1;
+        }
+        // 1000 cameras over 10 instances: every instance gets 60-140.
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((60..=140).contains(&c), "instance {i} got {c}");
+        }
+    }
+
+    #[test]
+    fn single_instance_routes_everything() {
+        let p = Partitioner::new(1);
+        for k in 0..100 {
+            assert_eq!(p.route(k), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_instances_panics() {
+        Partitioner::new(0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Dataflow stages and their pipeline order.
+
+/// The module types of the tracking dataflow (Fig 2 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Filter Controls — per-camera ingress gate on an edge device.
+    Fc,
+    /// Video Analytics — per-camera-stream detection (edge/fog/cloud).
+    Va,
+    /// Contention Resolution — cross-camera re-identification.
+    Cr,
+    /// Tracking Logic — the distributed-tracking brain (cloud).
+    Tl,
+    /// Query Fusion — query-embedding refinement.
+    Qf,
+    /// User Visualization — the sink.
+    Uv,
+}
+
+impl Stage {
+    /// Position in the latency pipeline `[FC, VA, CR, UV]` (§4.2); TL/QF
+    /// branch off CR's metadata output and are not latency-accounted.
+    pub fn pipeline_index(self) -> Option<usize> {
+        match self {
+            Stage::Fc => Some(0),
+            Stage::Va => Some(1),
+            Stage::Cr => Some(2),
+            Stage::Uv => Some(3),
+            Stage::Tl | Stage::Qf => None,
+        }
+    }
+
+    /// The next stage in the latency pipeline.
+    pub fn next(self) -> Option<Stage> {
+        match self {
+            Stage::Fc => Some(Stage::Va),
+            Stage::Va => Some(Stage::Cr),
+            Stage::Cr => Some(Stage::Uv),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Fc => "FC",
+            Stage::Va => "VA",
+            Stage::Cr => "CR",
+            Stage::Tl => "TL",
+            Stage::Qf => "QF",
+            Stage::Uv => "UV",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_order() {
+        assert_eq!(Stage::Fc.next(), Some(Stage::Va));
+        assert_eq!(Stage::Va.next(), Some(Stage::Cr));
+        assert_eq!(Stage::Cr.next(), Some(Stage::Uv));
+        assert_eq!(Stage::Uv.next(), None);
+        assert_eq!(Stage::Tl.next(), None);
+    }
+
+    #[test]
+    fn pipeline_indices_are_sequential() {
+        let idx: Vec<_> = [Stage::Fc, Stage::Va, Stage::Cr, Stage::Uv]
+            .iter()
+            .map(|s| s.pipeline_index().unwrap())
+            .collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+        assert_eq!(Stage::Tl.pipeline_index(), None);
+    }
+}

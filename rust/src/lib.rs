@@ -1,0 +1,38 @@
+//! # Anveshak-RS
+//!
+//! A from-scratch reproduction of *"A Scalable Platform for Distributed
+//! Object Tracking across a Many-camera Network"* (Khochare, Krishnan,
+//! Simmhan — 2019; the **Anveshak** platform) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the
+//!   domain-specific tracking dataflow (FC → VA → CR → {TL, QF, UV}),
+//!   per-task FIFO queues with the paper's three drop points (§4.3),
+//!   deadline-driven dynamic batching (§4.4), completion-budget
+//!   adaptation via accept/reject/probe signals (§4.5), and the
+//!   spotlight Tracking-Logic algorithms.
+//! * **Layer 2/1 (build-time Python)** — the VA/CR re-identification
+//!   models and their Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from Rust through the PJRT C API
+//!   ([`runtime`]). Python never runs on the request path.
+//!
+//! Two execution engines share the same module and tuning logic:
+//!
+//! * [`coordinator::des`] — a virtual-time discrete-event engine used by
+//!   the experiment harness to regenerate every figure of the paper's
+//!   evaluation in seconds instead of 600-second wall-clock runs.
+//! * [`coordinator::live`] — a tokio engine with real clocks and real
+//!   PJRT model execution, used by the serving examples.
+
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod metrics;
+pub mod roadnet;
+pub mod runtime;
+pub mod sim;
+pub mod tuning;
+pub mod util;
+
+pub use config::ExperimentConfig;

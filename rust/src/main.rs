@@ -1,0 +1,140 @@
+//! `anveshak` — the launcher CLI (§3's Master entry point).
+//!
+//! Subcommands:
+//!   sim   [--preset NAME | --config FILE.json] [--out results/]
+//!         Run an experiment on the virtual-time engine and print the
+//!         run summary (fast; used by the harness presets too).
+//!   serve [--config FILE.json] [--cameras N] [--secs S]
+//!         Run the live engine: real clocks, real PJRT models.
+//!   presets
+//!         List the named experiment presets.
+
+use std::path::PathBuf;
+
+use anveshak::config::{preset, ExperimentConfig, PRESETS};
+use anveshak::coordinator::des;
+use anveshak::coordinator::LiveEngine;
+use anveshak::runtime::default_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("presets") => {
+            for p in PRESETS {
+                println!("{p}");
+            }
+            Ok(())
+        }
+        Some("sim") => cmd_sim(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: anveshak <sim|serve|presets> [options]\n  see --help of each subcommand"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn load_cfg(args: &[String]) -> anyhow::Result<ExperimentConfig> {
+    if let Some(name) = flag_value(args, "--preset") {
+        return Ok(preset(name));
+    }
+    if let Some(path) = flag_value(args, "--config") {
+        return ExperimentConfig::from_file(&PathBuf::from(path));
+    }
+    Ok(ExperimentConfig::default())
+}
+
+fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
+    let cfg = load_cfg(args)?;
+    let name = cfg.name.clone();
+    println!(
+        "simulating {name}: {} cameras, {:.0}s, {} batching, TL {:?}, drops {}",
+        cfg.num_cameras,
+        cfg.duration_secs,
+        cfg.batching.label(),
+        cfg.tl,
+        cfg.drops_enabled
+    );
+    let start = std::time::Instant::now();
+    let r = des::run(cfg);
+    let s = &r.summary;
+    println!(
+        "done in {:.1}s wall: generated {} | on-time {} | delayed {} | dropped {} | in-flight {}",
+        start.elapsed().as_secs_f64(),
+        s.generated,
+        s.on_time,
+        s.delayed,
+        s.dropped,
+        s.in_flight
+    );
+    println!(
+        "latency: median {:.2}s p99 {:.2}s max {:.2}s | detections {} | peak active cams {}",
+        s.latency.median, s.latency.p99, s.latency.max, r.detections, r.peak_active
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let mut cfg = load_cfg(args)?;
+    // Live-mode defaults: a laptop-scale network unless overridden.
+    if flag_value(args, "--preset").is_none()
+        && flag_value(args, "--config").is_none()
+    {
+        cfg.num_cameras = 16;
+        cfg.workload.vertices = 60;
+        cfg.workload.edges = 150;
+        cfg.duration_secs = 10.0;
+        cfg.fps = 2.0;
+        cfg.gamma_ms = 5_000.0;
+        cfg.cluster.va_instances = 2;
+        cfg.cluster.cr_instances = 2;
+    }
+    if let Some(n) = flag_value(args, "--cameras") {
+        cfg.num_cameras = n.parse()?;
+    }
+    if let Some(s) = flag_value(args, "--secs") {
+        cfg.duration_secs = s.parse()?;
+    }
+    let spec = anveshak::apps::spec(cfg.app);
+    println!(
+        "serving {} for {:.0}s: {} cameras, VA={} CR={} (real PJRT models)",
+        spec.name,
+        cfg.duration_secs,
+        cfg.num_cameras,
+        spec.va_variant,
+        spec.cr_variant
+    );
+    let eng = LiveEngine::new(
+        cfg,
+        default_dir(),
+        spec.va_variant,
+        spec.cr_variant,
+    );
+    let r = eng.run()?;
+    println!(
+        "wall {:.1}s | throughput {:.1} fps | generated {} on-time {} delayed {} dropped {}",
+        r.wall_secs,
+        r.throughput,
+        r.summary.generated,
+        r.summary.on_time,
+        r.summary.delayed,
+        r.summary.dropped
+    );
+    println!(
+        "latency median {:.2}s p99 {:.2}s | detections {} | peak active {}",
+        r.summary.latency.median,
+        r.summary.latency.p99,
+        r.detections,
+        r.peak_active
+    );
+    Ok(())
+}

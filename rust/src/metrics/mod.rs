@@ -1,0 +1,8 @@
+//! Metrics: the per-event ledger and the 1-second timeline aggregation
+//! that back every figure in the paper's evaluation.
+
+mod ledger;
+mod timeline;
+
+pub use ledger::{Ledger, Outcome, Summary};
+pub use timeline::{Timeline, TimelineRow};

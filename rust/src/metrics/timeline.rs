@@ -1,0 +1,188 @@
+//! Per-second timeline aggregation — the data behind the paper's
+//! timeline plots (Figs 7, 8, 9, 10, 11): active camera count, mean
+//! end-to-end event latency per second, and per-stage batch sizes.
+
+use std::collections::HashMap;
+
+use crate::dataflow::Stage;
+use crate::util::FastMap;
+use crate::util::{Micros, SEC};
+
+/// One second of aggregated run state.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineRow {
+    /// Active camera count sampled during this second.
+    pub active_cameras: usize,
+    /// Mean end-to-end latency (s) of events completing this second.
+    pub mean_latency_s: f64,
+    /// Number of events completing this second.
+    pub completed: usize,
+    /// Events dropped this second.
+    pub dropped: usize,
+    /// Mean batch size executed per stage this second.
+    pub mean_batch: HashMap<Stage, f64>,
+}
+
+#[derive(Debug, Default)]
+struct Acc {
+    active_cameras: usize,
+    lat_sum: f64,
+    completed: usize,
+    dropped: usize,
+    batch_sum: HashMap<Stage, (f64, usize)>,
+    /// (latency_s, batch_size) samples per stage — Fig 8's scatter.
+    scatter: Vec<(Stage, f64, usize)>,
+}
+
+/// Collects per-second aggregates for a run.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    rows: FastMap<i64, Acc>,
+    horizon: i64,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn acc(&mut self, t: Micros) -> &mut Acc {
+        let s = t / SEC;
+        self.horizon = self.horizon.max(s);
+        self.rows.entry(s).or_default()
+    }
+
+    /// Sample the current active camera count (call once per second).
+    pub fn sample_active(&mut self, t: Micros, active: usize) {
+        self.acc(t).active_cameras = active;
+    }
+
+    /// An event completed at `t` with end-to-end `latency`.
+    pub fn completed(&mut self, t: Micros, latency: Micros) {
+        let a = self.acc(t);
+        a.lat_sum += latency as f64 / 1e6;
+        a.completed += 1;
+    }
+
+    /// An event was dropped at `t`.
+    pub fn dropped(&mut self, t: Micros) {
+        self.acc(t).dropped += 1;
+    }
+
+    /// A batch of size `b` executed at `stage`, with per-event task
+    /// latency `task_lat` (queue + exec) — feeds Fig 8's scatter too.
+    pub fn batch_executed(
+        &mut self,
+        t: Micros,
+        stage: Stage,
+        b: usize,
+        task_lat: Micros,
+    ) {
+        let a = self.acc(t);
+        let e = a.batch_sum.entry(stage).or_insert((0.0, 0));
+        e.0 += b as f64;
+        e.1 += 1;
+        a.scatter.push((stage, task_lat as f64 / 1e6, b));
+    }
+
+    /// Materialize dense per-second rows `0..=horizon`.
+    pub fn rows(&self) -> Vec<TimelineRow> {
+        let mut out = Vec::with_capacity(self.horizon as usize + 1);
+        let mut last_active = 0;
+        for s in 0..=self.horizon {
+            let mut row = TimelineRow::default();
+            if let Some(a) = self.rows.get(&s) {
+                // Hold the last sampled camera count through gaps.
+                if a.active_cameras > 0 {
+                    last_active = a.active_cameras;
+                }
+                row.active_cameras = last_active;
+                row.completed = a.completed;
+                row.dropped = a.dropped;
+                row.mean_latency_s = if a.completed > 0 {
+                    a.lat_sum / a.completed as f64
+                } else {
+                    0.0
+                };
+                for (stage, (sum, n)) in &a.batch_sum {
+                    row.mean_batch.insert(*stage, sum / *n as f64);
+                }
+            } else {
+                row.active_cameras = last_active;
+            }
+            out.push(row);
+        }
+        out
+    }
+
+    /// All (stage, task latency s, batch size) samples — Fig 8c/8d.
+    pub fn scatter(&self, stage: Stage) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        let mut keys: Vec<_> = self.rows.keys().copied().collect();
+        keys.sort();
+        for k in keys {
+            for (s, lat, b) in &self.rows[&k].scatter {
+                if *s == stage {
+                    out.push((*lat, *b));
+                }
+            }
+        }
+        out
+    }
+
+    /// Peak active camera count over the run.
+    pub fn peak_active(&self) -> usize {
+        self.rows
+            .values()
+            .map(|a| a.active_cameras)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::secs;
+
+    #[test]
+    fn per_second_bucketing() {
+        let mut t = Timeline::new();
+        t.completed(secs(1.2), secs(0.5));
+        t.completed(secs(1.8), secs(1.5));
+        t.completed(secs(3.0), secs(2.0));
+        t.dropped(secs(1.5));
+        let rows = t.rows();
+        assert_eq!(rows[1].completed, 2);
+        assert!((rows[1].mean_latency_s - 1.0).abs() < 1e-9);
+        assert_eq!(rows[1].dropped, 1);
+        assert_eq!(rows[2].completed, 0);
+        assert_eq!(rows[3].completed, 1);
+    }
+
+    #[test]
+    fn active_count_held_through_gaps() {
+        let mut t = Timeline::new();
+        t.sample_active(secs(0.0), 42);
+        t.completed(secs(5.0), secs(1.0));
+        let rows = t.rows();
+        assert_eq!(rows[0].active_cameras, 42);
+        assert_eq!(rows[3].active_cameras, 42);
+        assert_eq!(rows[5].active_cameras, 42);
+        assert_eq!(t.peak_active(), 42);
+    }
+
+    #[test]
+    fn batch_means_and_scatter() {
+        let mut t = Timeline::new();
+        t.batch_executed(secs(2.0), Stage::Va, 10, secs(1.0));
+        t.batch_executed(secs(2.5), Stage::Va, 20, secs(2.0));
+        t.batch_executed(secs(2.5), Stage::Cr, 5, secs(3.0));
+        let rows = t.rows();
+        assert!((rows[2].mean_batch[&Stage::Va] - 15.0).abs() < 1e-9);
+        assert!((rows[2].mean_batch[&Stage::Cr] - 5.0).abs() < 1e-9);
+        let sc = t.scatter(Stage::Va);
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc[1], (2.0, 20));
+    }
+}

@@ -1,0 +1,98 @@
+//! Camera placement on the road network.
+
+use super::graph::{Graph, VertexId};
+
+pub type CameraId = usize;
+
+/// A fixed camera mounted at a road vertex with a circular FOV.
+#[derive(Debug, Clone, Copy)]
+pub struct Camera {
+    pub id: CameraId,
+    pub vertex: VertexId,
+    /// Field-of-view radius in metres.
+    pub fov_m: f64,
+}
+
+impl Camera {
+    /// Is a point (metres) within this camera's FOV?
+    pub fn sees(&self, g: &Graph, p: (f64, f64)) -> bool {
+        let (cx, cy) = g.pos[self.vertex];
+        let d2 = (p.0 - cx).powi(2) + (p.1 - cy).powi(2);
+        d2 <= self.fov_m * self.fov_m
+    }
+}
+
+/// Place `n` cameras on the vertices nearest the start vertex (the paper
+/// "places cameras on vertices surrounding the starting vertex"). With
+/// `n == |V|` every vertex hosts a camera.
+pub fn place_cameras(
+    g: &Graph,
+    n: usize,
+    start: VertexId,
+    fov_m: f64,
+) -> Vec<Camera> {
+    let mut order: Vec<VertexId> = (0..g.num_vertices()).collect();
+    order.sort_by(|&a, &b| {
+        g.euclid(start, a)
+            .partial_cmp(&g.euclid(start, b))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    order
+        .into_iter()
+        .take(n.min(g.num_vertices()))
+        .enumerate()
+        .map(|(id, vertex)| Camera { id, vertex, fov_m })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::roadnet::generate;
+
+    #[test]
+    fn placement_covers_start_first() {
+        let g = generate(&WorkloadConfig::default(), 1);
+        let cams = place_cameras(&g, 50, 0, 40.0);
+        assert_eq!(cams.len(), 50);
+        assert_eq!(cams[0].vertex, 0); // nearest to start is start itself
+        // ids are dense 0..n
+        for (i, c) in cams.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // no duplicate vertices
+        let mut vs: Vec<_> = cams.iter().map(|c| c.vertex).collect();
+        vs.sort();
+        vs.dedup();
+        assert_eq!(vs.len(), 50);
+    }
+
+    #[test]
+    fn fov_test_is_euclidean() {
+        let g = generate(&WorkloadConfig::default(), 1);
+        let cam = Camera {
+            id: 0,
+            vertex: 0,
+            fov_m: 40.0,
+        };
+        let (x, y) = g.pos[0];
+        assert!(cam.sees(&g, (x + 10.0, y)));
+        assert!(cam.sees(&g, (x, y + 39.9)));
+        assert!(!cam.sees(&g, (x + 41.0, y)));
+    }
+
+    #[test]
+    fn capped_at_vertex_count() {
+        let g = generate(
+            &WorkloadConfig {
+                vertices: 20,
+                edges: 40,
+                ..Default::default()
+            },
+            1,
+        );
+        assert_eq!(place_cameras(&g, 100, 0, 40.0).len(), 20);
+    }
+}

@@ -1,0 +1,141 @@
+//! Undirected road graph with geometric vertices and per-edge lengths.
+
+pub type VertexId = usize;
+
+/// Undirected road network. Vertices carry planar coordinates (metres);
+/// edges carry road lengths (metres) which may differ from the Euclidean
+/// distance (roads bend).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Vertex coordinates in metres.
+    pub pos: Vec<(f64, f64)>,
+    /// Adjacency: `adj[v] = [(neighbor, road_length_m), ...]`.
+    pub adj: Vec<Vec<(VertexId, f64)>>,
+    edge_count: usize,
+}
+
+impl Graph {
+    pub fn new(pos: Vec<(f64, f64)>) -> Self {
+        let n = pos.len();
+        Self {
+            pos,
+            adj: vec![Vec::new(); n],
+            edge_count: 0,
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_count
+    }
+
+    /// Add an undirected edge; ignores duplicates and self-loops.
+    pub fn add_edge(&mut self, a: VertexId, b: VertexId, len_m: f64) -> bool {
+        if a == b || self.has_edge(a, b) {
+            return false;
+        }
+        self.adj[a].push((b, len_m));
+        self.adj[b].push((a, len_m));
+        self.edge_count += 1;
+        true
+    }
+
+    pub fn has_edge(&self, a: VertexId, b: VertexId) -> bool {
+        self.adj[a].iter().any(|&(v, _)| v == b)
+    }
+
+    pub fn edge_len(&self, a: VertexId, b: VertexId) -> Option<f64> {
+        self.adj[a].iter().find(|&&(v, _)| v == b).map(|&(_, l)| l)
+    }
+
+    /// Mean road length over all edges.
+    pub fn mean_edge_len(&self) -> f64 {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for (v, nbrs) in self.adj.iter().enumerate() {
+            for &(u, l) in nbrs {
+                if u > v {
+                    sum += l;
+                    n += 1;
+                }
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Euclidean distance between two vertices.
+    pub fn euclid(&self, a: VertexId, b: VertexId) -> f64 {
+        let (ax, ay) = self.pos[a];
+        let (bx, by) = self.pos[b];
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    }
+
+    /// Is the graph connected? (BFS from vertex 0.)
+    pub fn is_connected(&self) -> bool {
+        if self.pos.is_empty() {
+            return true;
+        }
+        let mut seen = vec![false; self.num_vertices()];
+        let mut stack = vec![0];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &(u, _) in &self.adj[v] {
+                if !seen[u] {
+                    seen[u] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        count == self.num_vertices()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri() -> Graph {
+        let mut g = Graph::new(vec![(0.0, 0.0), (3.0, 0.0), (0.0, 4.0)]);
+        g.add_edge(0, 1, 3.0);
+        g.add_edge(1, 2, 5.0);
+        g.add_edge(2, 0, 4.0);
+        g
+    }
+
+    #[test]
+    fn edges_are_undirected_and_deduped() {
+        let mut g = tri();
+        assert_eq!(g.num_edges(), 3);
+        assert!(!g.add_edge(0, 1, 9.0)); // duplicate
+        assert!(!g.add_edge(1, 1, 1.0)); // self loop
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.edge_len(1, 0), Some(3.0));
+    }
+
+    #[test]
+    fn mean_edge_len_counts_each_edge_once() {
+        assert!((tri().mean_edge_len() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn euclid_matches_geometry() {
+        assert!((tri().euclid(1, 2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn connectivity() {
+        let mut g = Graph::new(vec![(0.0, 0.0), (1.0, 0.0), (2.0, 0.0)]);
+        g.add_edge(0, 1, 1.0);
+        assert!(!g.is_connected());
+        g.add_edge(1, 2, 1.0);
+        assert!(g.is_connected());
+    }
+}

@@ -1,0 +1,16 @@
+//! Road-network substrate: graph types, the synthetic OSM-substitute
+//! generator, camera placement, and the spotlight search algorithms used
+//! by the Tracking Logic module.
+
+mod cameras;
+mod gen;
+mod graph;
+mod spotlight;
+
+pub use cameras::{place_cameras, Camera, CameraId};
+pub use gen::generate;
+pub use graph::{Graph, VertexId};
+pub use spotlight::{
+    bfs_spotlight, dijkstra_distances, probabilistic_spotlight,
+    wbfs_spotlight,
+};

@@ -1,0 +1,249 @@
+//! Spotlight search algorithms for the Tracking Logic module.
+//!
+//! The TL expands a search region around the entity's last-seen location
+//! while it is in a blind-spot, and contracts it on a positive detection
+//! (Fig 1 of the paper). Three substrate algorithms:
+//!
+//! * [`bfs_spotlight`] — hop-count BFS assuming a *fixed* road length for
+//!   every edge (the paper's TL-BFS).
+//! * [`wbfs_spotlight`] — weighted BFS (a Dijkstra ball) using exact road
+//!   lengths (TL-WBFS).
+//! * [`probabilistic_spotlight`] — Naive-Bayes style path-likelihood
+//!   activation (App 4's TL).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::graph::{Graph, VertexId};
+
+/// Vertices reachable within `radius_m` of `src`, assuming every edge is
+/// `fixed_len_m` long (hop distance x fixed length <= radius).
+pub fn bfs_spotlight(
+    g: &Graph,
+    src: VertexId,
+    radius_m: f64,
+    fixed_len_m: f64,
+) -> Vec<VertexId> {
+    let max_hops = if fixed_len_m <= 0.0 {
+        0
+    } else {
+        (radius_m / fixed_len_m).floor() as usize
+    };
+    let mut dist = vec![usize::MAX; g.num_vertices()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    let mut out = vec![src];
+    while let Some(v) = queue.pop_front() {
+        if dist[v] >= max_hops {
+            continue;
+        }
+        for &(u, _) in &g.adj[v] {
+            if dist[u] == usize::MAX {
+                dist[u] = dist[v] + 1;
+                out.push(u);
+                queue.push_back(u);
+            }
+        }
+    }
+    out
+}
+
+#[derive(PartialEq)]
+struct HeapItem(f64, VertexId);
+
+impl Eq for HeapItem {}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on distance.
+        other.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+    }
+}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Shortest-path (road-length) distances from `src`, bounded by
+/// `max_m` (pass `f64::INFINITY` for the full graph).
+pub fn dijkstra_distances(g: &Graph, src: VertexId, max_m: f64) -> Vec<f64> {
+    let mut dist = vec![f64::INFINITY; g.num_vertices()];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(HeapItem(0.0, src));
+    while let Some(HeapItem(d, v)) = heap.pop() {
+        if d > dist[v] || d > max_m {
+            continue;
+        }
+        for &(u, len) in &g.adj[v] {
+            let nd = d + len;
+            if nd < dist[u] && nd <= max_m {
+                dist[u] = nd;
+                heap.push(HeapItem(nd, u));
+            }
+        }
+    }
+    dist
+}
+
+/// Vertices whose exact road distance from `src` is within `radius_m`
+/// (the paper's weighted BFS — a Dijkstra ball).
+pub fn wbfs_spotlight(g: &Graph, src: VertexId, radius_m: f64) -> Vec<VertexId> {
+    dijkstra_distances(g, src, radius_m)
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d.is_finite())
+        .map(|(v, _)| v)
+        .collect()
+}
+
+/// Naive-Bayes path-likelihood spotlight (App 4's TL).
+///
+/// A random walker of expected speed `es` departing `elapsed_s` ago is
+/// most likely at road distance `mu = es * elapsed_s`; the likelihood of
+/// each vertex is a Gaussian over `|d(v) - mu|`. Returns the smallest set
+/// of vertices capturing `mass` of the total likelihood (vertices sorted
+/// by likelihood, greedy).
+pub fn probabilistic_spotlight(
+    g: &Graph,
+    src: VertexId,
+    es_mps: f64,
+    elapsed_s: f64,
+    mass: f64,
+) -> Vec<VertexId> {
+    let mu = es_mps * elapsed_s;
+    // The walker cannot be farther than mu (peak speed); sigma widens
+    // with time to reflect route uncertainty.
+    let sigma = (0.35 * mu).max(30.0);
+    let dist = dijkstra_distances(g, src, mu + 4.0 * sigma);
+    let mut lik: Vec<(f64, VertexId)> = dist
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d.is_finite())
+        .map(|(v, &d)| {
+            // Walkers dawdle: anywhere in [0, mu] is plausible, with the
+            // frontier decaying as a half-Gaussian beyond mu.
+            let l = if d <= mu {
+                1.0
+            } else {
+                (-((d - mu) / sigma).powi(2) / 2.0).exp()
+            };
+            (l, v)
+        })
+        .collect();
+    lik.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let total: f64 = lik.iter().map(|&(l, _)| l).sum();
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for (l, v) in lik {
+        out.push(v);
+        acc += l;
+        if acc >= mass * total {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::roadnet::generate;
+
+    fn line_graph() -> Graph {
+        // 0 -100m- 1 -100m- 2 -50m- 3
+        let mut g = Graph::new(vec![
+            (0.0, 0.0),
+            (100.0, 0.0),
+            (200.0, 0.0),
+            (250.0, 0.0),
+        ]);
+        g.add_edge(0, 1, 100.0);
+        g.add_edge(1, 2, 100.0);
+        g.add_edge(2, 3, 50.0);
+        g
+    }
+
+    #[test]
+    fn bfs_uses_hop_counts() {
+        let g = line_graph();
+        // radius 150 m at fixed length 84.5 => 1 hop
+        let s = bfs_spotlight(&g, 1, 150.0, 84.5);
+        let mut s = s;
+        s.sort();
+        assert_eq!(s, vec![0, 1, 2]);
+        // radius below one fixed length => only the source
+        assert_eq!(bfs_spotlight(&g, 1, 50.0, 84.5), vec![1]);
+    }
+
+    #[test]
+    fn wbfs_uses_road_lengths() {
+        let g = line_graph();
+        let mut s = wbfs_spotlight(&g, 2, 60.0);
+        s.sort();
+        assert_eq!(s, vec![2, 3]); // 3 is 50 m away, 1 is 100 m
+        let mut s = wbfs_spotlight(&g, 2, 100.0);
+        s.sort();
+        assert_eq!(s, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn dijkstra_distances_exact() {
+        let g = line_graph();
+        let d = dijkstra_distances(&g, 0, f64::INFINITY);
+        assert_eq!(d, vec![0.0, 100.0, 200.0, 250.0]);
+    }
+
+    #[test]
+    fn wbfs_is_subset_of_generous_bfs() {
+        // With fixed length = min edge length, BFS hop-balls dominate
+        // the Dijkstra ball of the same radius.
+        let g = generate(&WorkloadConfig::default(), 3);
+        let min_len = g
+            .adj
+            .iter()
+            .flatten()
+            .map(|&(_, l)| l)
+            .fold(f64::INFINITY, f64::min);
+        let w = wbfs_spotlight(&g, 0, 400.0);
+        let b = bfs_spotlight(&g, 0, 400.0, min_len);
+        for v in &w {
+            assert!(b.contains(v), "vertex {v} in WBFS but not BFS");
+        }
+    }
+
+    #[test]
+    fn spotlight_grows_with_radius() {
+        let g = generate(&WorkloadConfig::default(), 3);
+        let a = wbfs_spotlight(&g, 10, 100.0).len();
+        let b = wbfs_spotlight(&g, 10, 300.0).len();
+        let c = wbfs_spotlight(&g, 10, 900.0).len();
+        assert!(a < b && b < c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn probabilistic_concentrates_near_expected_distance() {
+        let g = generate(&WorkloadConfig::default(), 3);
+        let spot = probabilistic_spotlight(&g, 0, 4.0, 30.0, 0.9);
+        // Expected distance 120 m; spotlight should contain everything
+        // within 120 m of the source.
+        let d = dijkstra_distances(&g, 0, f64::INFINITY);
+        for (v, &dv) in d.iter().enumerate() {
+            if dv <= 120.0 {
+                assert!(spot.contains(&v), "missing vertex {v} at {dv} m");
+            }
+        }
+        // ...but not the whole graph.
+        assert!(spot.len() < g.num_vertices() / 2);
+    }
+
+    #[test]
+    fn probabilistic_mass_monotone() {
+        let g = generate(&WorkloadConfig::default(), 3);
+        let small = probabilistic_spotlight(&g, 0, 4.0, 60.0, 0.5).len();
+        let large = probabilistic_spotlight(&g, 0, 4.0, 60.0, 0.95).len();
+        assert!(small <= large);
+    }
+}

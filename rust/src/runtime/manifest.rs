@@ -1,0 +1,251 @@
+//! `artifacts/manifest.json` — the contract between the Python AOT
+//! export and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One exported model variant (va / cr_small / cr_large / qf).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    /// batch bucket -> HLO text file name.
+    pub files: HashMap<usize, String>,
+    /// Weight tensor names, in parameter order after (images, query).
+    pub weights: Vec<String>,
+}
+
+/// One tensor inside `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset and length in f32 elements.
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Parsed manifest plus the weight blob.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub img_dim: usize,
+    pub feat_dim: usize,
+    pub buckets: Vec<usize>,
+    pub variants: HashMap<String, VariantSpec>,
+    pub weight_entries: Vec<WeightEntry>,
+    /// The full weights.bin contents as f32.
+    pub weights: Vec<f32>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` + `weights.bin` from the artifacts dir.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!(e))?;
+
+        let img_dim = j
+            .at("img_dim")
+            .as_usize()
+            .ok_or_else(|| anyhow!("img_dim"))?;
+        let feat_dim = j
+            .at("feat_dim")
+            .as_usize()
+            .ok_or_else(|| anyhow!("feat_dim"))?;
+        let buckets: Vec<usize> = j
+            .at("buckets")
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+
+        let mut variants = HashMap::new();
+        for (name, spec) in j
+            .at("variants")
+            .as_obj()
+            .ok_or_else(|| anyhow!("variants"))?
+        {
+            let files = spec
+                .at("files")
+                .as_obj()
+                .ok_or_else(|| anyhow!("files"))?
+                .iter()
+                .map(|(b, f)| {
+                    Ok((
+                        b.parse::<usize>()?,
+                        f.as_str()
+                            .ok_or_else(|| anyhow!("file name"))?
+                            .to_string(),
+                    ))
+                })
+                .collect::<Result<HashMap<_, _>>>()?;
+            let weights = spec
+                .at("weights")
+                .as_arr()
+                .ok_or_else(|| anyhow!("weights"))?
+                .iter()
+                .filter_map(Json::as_str)
+                .map(String::from)
+                .collect();
+            variants.insert(name.clone(), VariantSpec { files, weights });
+        }
+
+        let wspec = j.at("weights");
+        let weight_entries = wspec
+            .at("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow!("weight entries"))?
+            .iter()
+            .map(|e| {
+                Ok(WeightEntry {
+                    name: e
+                        .at("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry name"))?
+                        .to_string(),
+                    shape: e
+                        .at("shape")
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    offset: e
+                        .at("offset")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("offset"))?,
+                    len: e
+                        .at("len")
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("len"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let wfile = wspec
+            .at("file")
+            .as_str()
+            .ok_or_else(|| anyhow!("weights file"))?;
+        let bytes = std::fs::read(dir.join(wfile))
+            .with_context(|| format!("reading {wfile}"))?;
+        anyhow::ensure!(
+            bytes.len() % 4 == 0,
+            "weights.bin not a multiple of 4 bytes"
+        );
+        let weights: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let total: usize = weight_entries.iter().map(|e| e.len).sum();
+        anyhow::ensure!(
+            weights.len() == total,
+            "weights.bin has {} f32s, manifest expects {total}",
+            weights.len()
+        );
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            img_dim,
+            feat_dim,
+            buckets,
+            variants,
+            weight_entries,
+            weights,
+        })
+    }
+
+    /// Slice of the blob for a named tensor.
+    pub fn tensor(&self, name: &str) -> Option<(&WeightEntry, &[f32])> {
+        let e = self.weight_entries.iter().find(|e| e.name == name)?;
+        Some((e, &self.weights[e.offset..e.offset + e.len]))
+    }
+
+    /// Smallest bucket >= `batch` (or the largest bucket if none fits).
+    pub fn bucket_for(&self, batch: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= batch)
+            .min()
+            .unwrap_or_else(|| {
+                self.buckets.iter().copied().max().unwrap_or(1)
+            })
+    }
+
+    /// Path to a variant's HLO file at a bucket.
+    pub fn hlo_path(&self, variant: &str, bucket: usize) -> Option<PathBuf> {
+        Some(self.dir.join(self.variants.get(variant)?.files.get(&bucket)?))
+    }
+}
+
+/// Default artifacts directory (repo-root/artifacts).
+pub fn default_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load() -> Option<Manifest> {
+        Manifest::load(&default_dir()).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        // Skips silently if artifacts haven't been built (unit-test runs
+        // before `make artifacts`); integration tests require them.
+        let Some(m) = load() else { return };
+        assert_eq!(m.img_dim, 8192);
+        assert_eq!(m.feat_dim, 128);
+        assert!(m.buckets.contains(&25));
+        for v in ["va", "cr_small", "cr_large", "qf"] {
+            assert!(m.variants.contains_key(v), "missing {v}");
+        }
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        let Some(m) = load() else { return };
+        // buckets: 1,2,4,8,16,25,32
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(3), 4);
+        assert_eq!(m.bucket_for(17), 25);
+        assert_eq!(m.bucket_for(26), 32);
+        assert_eq!(m.bucket_for(99), 32); // capped at the largest
+    }
+
+    #[test]
+    fn tensors_resolve() {
+        let Some(m) = load() else { return };
+        let spec = &m.variants["va"];
+        for name in &spec.weights {
+            let (e, data) = m.tensor(name).expect("tensor present");
+            assert_eq!(
+                data.len(),
+                e.shape.iter().product::<usize>(),
+                "shape/len mismatch for {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let Some(m) = load() else { return };
+        for (v, spec) in &m.variants {
+            for &b in spec.files.keys() {
+                let p = m.hlo_path(v, b).unwrap();
+                assert!(p.exists(), "{v} bucket {b}: {p:?}");
+            }
+        }
+    }
+}

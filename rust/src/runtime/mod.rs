@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the interchange is HLO *text* (see
+//! DESIGN.md and /opt/xla-example/README.md for why text, not proto) and
+//! the model weights arrive through `weights.bin`, uploaded once as
+//! device buffers.
+
+mod manifest;
+mod pool;
+
+pub use manifest::{default_dir, Manifest, VariantSpec, WeightEntry};
+pub use pool::{ModelOutput, ModelPool};

@@ -1,0 +1,244 @@
+//! Model pool: one compiled PJRT executable per (variant, batch bucket).
+//!
+//! The dynamic batcher picks an arbitrary batch size; the pool pads the
+//! batch up to the nearest compiled bucket, executes, and slices the
+//! outputs back. Weights are uploaded to device buffers once at load
+//! time (`execute_b`), so the steady-state request path transfers only
+//! the image batch and the query embedding.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+use crate::tuning::XiModel;
+use crate::util::Micros;
+
+/// Scores + embeddings for an executed batch.
+#[derive(Debug, Clone)]
+pub struct ModelOutput {
+    /// Cosine-similarity score per input frame.
+    pub scores: Vec<f32>,
+    /// `feat_dim`-dim embedding per input frame (row-major).
+    pub embeddings: Vec<f32>,
+}
+
+struct LoadedVariant {
+    /// bucket -> compiled executable.
+    exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Weight device buffers in parameter order.
+    weights: Vec<xla::PjRtBuffer>,
+}
+
+/// All loaded model variants plus the PJRT client.
+pub struct ModelPool {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    variants: HashMap<String, LoadedVariant>,
+}
+
+impl ModelPool {
+    /// Load selected variants (pass e.g. `&["va", "cr_small"]`) at the
+    /// given buckets (`None` = all manifest buckets).
+    pub fn load(
+        dir: &Path,
+        variant_names: &[&str],
+        buckets: Option<&[usize]>,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        let mut variants = HashMap::new();
+        for &name in variant_names {
+            let spec = manifest
+                .variants
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown variant {name}"))?
+                .clone();
+            let use_buckets: Vec<usize> = match buckets {
+                Some(bs) => bs.to_vec(),
+                None => manifest.buckets.clone(),
+            };
+            let mut exes = HashMap::new();
+            for b in use_buckets {
+                let path = manifest
+                    .hlo_path(name, b)
+                    .ok_or_else(|| anyhow!("{name} missing bucket {b}"))?;
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("{e:?}"))
+                    .with_context(|| format!("parsing {path:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("{e:?}"))
+                    .with_context(|| format!("compiling {name} b{b}"))?;
+                exes.insert(b, exe);
+            }
+            // Upload weights once.
+            let mut wbufs = Vec::new();
+            for wname in &spec.weights {
+                let (entry, data) = manifest
+                    .tensor(wname)
+                    .ok_or_else(|| anyhow!("missing tensor {wname}"))?;
+                let buf = client
+                    .buffer_from_host_buffer::<f32>(
+                        data,
+                        &entry.shape,
+                        None,
+                    )
+                    .map_err(|e| anyhow!("{e:?}"))?;
+                wbufs.push(buf);
+            }
+            variants.insert(
+                name.to_string(),
+                LoadedVariant {
+                    exes,
+                    weights: wbufs,
+                },
+            );
+        }
+        Ok(Self {
+            client,
+            manifest,
+            variants,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn img_dim(&self) -> usize {
+        self.manifest.img_dim
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.manifest.feat_dim
+    }
+
+    /// Buckets actually loaded for a variant (sorted).
+    pub fn loaded_buckets(&self, variant: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .variants
+            .get(variant)
+            .map(|lv| lv.exes.keys().copied().collect())
+            .unwrap_or_default();
+        v.sort_unstable();
+        v
+    }
+
+    fn bucket_for(&self, variant: &str, batch: usize) -> Result<usize> {
+        let loaded = self.loaded_buckets(variant);
+        loaded
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .or_else(|| loaded.last().copied())
+            .ok_or_else(|| anyhow!("no buckets loaded for {variant}"))
+    }
+
+    /// Run a re-id variant on `batch` frames (each `img_dim` floats)
+    /// against `query` (a `feat_dim` embedding; all-zero disables the
+    /// score head). Pads to the nearest bucket and slices back.
+    pub fn execute(
+        &self,
+        variant: &str,
+        images: &[f32],
+        query: &[f32],
+    ) -> Result<ModelOutput> {
+        let d = self.manifest.img_dim;
+        anyhow::ensure!(
+            images.len() % d == 0,
+            "images not a multiple of img_dim"
+        );
+        let batch = images.len() / d;
+        anyhow::ensure!(batch > 0, "empty batch");
+        anyhow::ensure!(
+            query.len() == self.manifest.feat_dim,
+            "bad query len {}",
+            query.len()
+        );
+        let bucket = self.bucket_for(variant, batch)?;
+        let lv = &self.variants[variant];
+        let exe = lv
+            .exes
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("{variant} bucket {bucket}"))?;
+
+        // Pad the image batch up to the bucket.
+        let mut padded;
+        let img_data: &[f32] = if batch == bucket {
+            images
+        } else {
+            padded = vec![0f32; bucket * d];
+            padded[..images.len()].copy_from_slice(images);
+            &padded
+        };
+        let img_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(img_data, &[bucket, d], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let q_buf = self
+            .client
+            .buffer_from_host_buffer::<f32>(
+                query,
+                &[self.manifest.feat_dim],
+                None,
+            )
+            .map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = vec![&img_buf, &q_buf];
+        args.extend(lv.weights.iter());
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("{e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let (scores_l, embs_l) =
+            lit.to_tuple2().map_err(|e| anyhow!("{e:?}"))?;
+        let mut scores =
+            scores_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let mut embeddings =
+            embs_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        scores.truncate(batch);
+        embeddings.truncate(batch * self.manifest.feat_dim);
+        Ok(ModelOutput {
+            scores,
+            embeddings,
+        })
+    }
+
+    /// Bootstrap a query embedding from a query *image* using the same
+    /// executable (zero query disables the score head; §model.py).
+    pub fn embed_query(&self, variant: &str, image: &[f32]) -> Result<Vec<f32>> {
+        let zero_q = vec![0f32; self.manifest.feat_dim];
+        let out = self.execute(variant, image, &zero_q)?;
+        Ok(out.embeddings)
+    }
+
+    /// Time each loaded bucket of a variant to calibrate ξ(b) — the
+    /// measured analogue of the paper's service model.
+    pub fn calibrate_xi(
+        &self,
+        variant: &str,
+        reps: usize,
+    ) -> Result<(XiModel, Vec<(usize, Micros)>)> {
+        let d = self.manifest.img_dim;
+        let q = vec![0f32; self.manifest.feat_dim];
+        let mut samples = Vec::new();
+        for b in self.loaded_buckets(variant) {
+            let images = vec![0.5f32; b * d];
+            // Warm-up once, then measure.
+            self.execute(variant, &images, &q)?;
+            let start = Instant::now();
+            for _ in 0..reps.max(1) {
+                self.execute(variant, &images, &q)?;
+            }
+            let per = start.elapsed().as_micros() as Micros
+                / reps.max(1) as Micros;
+            samples.push((b, per));
+        }
+        Ok((XiModel::from_samples(&samples), samples))
+    }
+}

@@ -1,0 +1,94 @@
+//! Skewed device clocks (§4.6.2).
+//!
+//! Devices in a MAN/WAN have unsynchronized clocks. The paper's tuning
+//! math is resilient to per-device skews as long as the clocks of the
+//! devices hosting the *source* and *sink* tasks agree (κ1 = κn). We
+//! model a signed skew per node; every timestamp a task records is the
+//! true simulation time plus its node's skew. Tests assert the drop and
+//! batch decisions are invariant to the skews.
+
+use crate::util::{millis, rng, Micros};
+
+/// Per-node clock skews relative to true time.
+#[derive(Debug, Clone)]
+pub struct ClockSkews {
+    skews: Vec<Micros>,
+}
+
+impl ClockSkews {
+    /// No skew anywhere (synchronized clocks).
+    pub fn zero(nodes: usize) -> Self {
+        Self {
+            skews: vec![0; nodes],
+        }
+    }
+
+    /// Random skews in `[-bound_ms, bound_ms]` for every node except the
+    /// source and sink nodes (κ1 = κn = 0, the paper's §4.6.2 condition).
+    pub fn random(
+        nodes: usize,
+        bound_ms: f64,
+        source_node: usize,
+        sink_node: usize,
+        seed: u64,
+    ) -> Self {
+        let mut r = rng(seed, 0xC10C);
+        let bound = millis(bound_ms);
+        let skews = (0..nodes)
+            .map(|n| {
+                if n == source_node || n == sink_node || bound == 0 {
+                    0
+                } else {
+                    r.range_i64(-bound, bound)
+                }
+            })
+            .collect();
+        Self { skews }
+    }
+
+    /// The time node `n`'s clock shows when true time is `t`.
+    pub fn observe(&self, node: usize, t: Micros) -> Micros {
+        t + self.skews[node]
+    }
+
+    pub fn skew(&self, node: usize) -> Micros {
+        self.skews[node]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_skew_is_identity() {
+        let c = ClockSkews::zero(4);
+        assert_eq!(c.observe(2, 12345), 12345);
+    }
+
+    #[test]
+    fn source_and_sink_never_skewed() {
+        let c = ClockSkews::random(8, 500.0, 0, 7, 42);
+        assert_eq!(c.skew(0), 0);
+        assert_eq!(c.skew(7), 0);
+        // At least one interior node should be skewed with this seed.
+        assert!((1..7).any(|n| c.skew(n) != 0));
+    }
+
+    #[test]
+    fn skews_bounded() {
+        let c = ClockSkews::random(20, 100.0, 0, 19, 7);
+        for n in 0..20 {
+            assert!(c.skew(n).abs() <= millis(100.0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ClockSkews::random(8, 500.0, 0, 7, 42);
+        let b = ClockSkews::random(8, 500.0, 0, 7, 42);
+        for n in 0..8 {
+            assert_eq!(a.skew(n), b.skew(n));
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Synthetic identity images — the CUHK03 dataset substitute.
+//!
+//! Frames are generated exactly like `python/compile/weights.py`'s
+//! `make_identity_image`: a unit-norm identity code broadcast across
+//! patches plus per-frame Gaussian noise. The AOT-compiled VA/CR models
+//! (whose stem is a patch mean-pool) recover the code, so same-identity
+//! frames embed close to the query and different identities far away —
+//! giving the controllable true-positive/negative labels the paper got
+//! from CUHK03.
+//!
+//! The distributions need not match Python bit-for-bit (each side
+//! generates its own gallery); only the *model weights* cross the
+//! language boundary, via `artifacts/weights.bin`.
+
+use crate::util::Rng;
+
+/// Patches per frame (must match `weights.IMG_PATCHES`).
+pub const IMG_PATCHES: usize = 64;
+/// Pixels per patch (must match `weights.PATCH_SIZE`).
+pub const PATCH_SIZE: usize = 128;
+/// Flattened frame length.
+pub const IMG_DIM: usize = IMG_PATCHES * PATCH_SIZE;
+/// Re-id embedding dimension (must match `weights.FEAT_DIM`).
+pub const FEAT_DIM: usize = 128;
+
+/// Unit-norm identity code, deterministic per identity.
+pub fn identity_embedding(identity: u64) -> Vec<f32> {
+    let mut r = Rng::seed_from_u64(0xC0FF_EE00 ^ identity);
+    let mut e: Vec<f32> =
+        (0..IMG_PATCHES).map(|_| r.gauss() as f32).collect();
+    let norm = e.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    e.iter_mut().for_each(|x| *x /= norm);
+    e
+}
+
+/// Synthetic frame: identity code broadcast across patches + noise.
+pub fn identity_image(identity: u64, frame: u64, noise: f32) -> Vec<f32> {
+    let e = identity_embedding(identity);
+    let mut r =
+        Rng::seed_from_u64(identity.wrapping_mul(1_000_003) ^ frame);
+    let mut img = Vec::with_capacity(IMG_DIM);
+    for code in e.iter().take(IMG_PATCHES) {
+        for _ in 0..PATCH_SIZE {
+            img.push(code + noise * r.gauss() as f32);
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_unit_norm_and_deterministic() {
+        let a = identity_embedding(5);
+        let b = identity_embedding(5);
+        assert_eq!(a, b);
+        let n: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn different_identities_are_nearly_orthogonal() {
+        let a = identity_embedding(1);
+        let b = identity_embedding(2);
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(dot.abs() < 0.5, "dot = {dot}");
+    }
+
+    #[test]
+    fn image_patch_means_recover_code() {
+        let e = identity_embedding(9);
+        let img = identity_image(9, 3, 0.25);
+        for p in 0..IMG_PATCHES {
+            let mean: f32 = img[p * PATCH_SIZE..(p + 1) * PATCH_SIZE]
+                .iter()
+                .sum::<f32>()
+                / PATCH_SIZE as f32;
+            // noise/sqrt(128) ~ 0.022 std
+            assert!((mean - e[p]).abs() < 0.12, "patch {p}");
+        }
+    }
+
+    #[test]
+    fn frames_differ_but_identities_persist() {
+        let a = identity_image(9, 0, 0.25);
+        let b = identity_image(9, 1, 0.25);
+        assert_ne!(a, b);
+        // Correlation across frames of the same identity: the signal
+        // power is 128 (unit code over 64 patches x 128 px) vs noise
+        // power 8192 * 0.25^2 = 512, so corr ~ 128/640 = 0.2.
+        let dot: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum::<f32>()
+            / (norm(&a) * norm(&b));
+        assert!(dot > 0.15, "corr = {dot}");
+        // And across *different* identities it is near zero.
+        let c = identity_image(4242, 0, 0.25);
+        let cross: f32 = a.iter().zip(&c).map(|(x, y)| x * y).sum::<f32>()
+            / (norm(&a) * norm(&c));
+        assert!(cross.abs() < 0.1, "cross = {cross}");
+    }
+
+    fn norm(v: &[f32]) -> f32 {
+        v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}

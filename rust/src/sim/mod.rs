@@ -1,0 +1,15 @@
+//! Workload simulation substrate: the entity's random walk, per-camera
+//! ground-truth visibility, synthetic identity images (CUHK03
+//! substitute), the MAN/WAN network model and skewed device clocks.
+
+mod clock;
+mod feeds;
+mod images;
+mod netmodel;
+mod walk;
+
+pub use clock::ClockSkews;
+pub use feeds::{visibility_of, FrameTruth, GroundTruth};
+pub use images::{identity_embedding, identity_image, FEAT_DIM, IMG_DIM, IMG_PATCHES, PATCH_SIZE};
+pub use netmodel::NetModel;
+pub use walk::{EntityWalk, Position};

@@ -1,0 +1,173 @@
+//! MAN/WAN network model between cluster nodes.
+//!
+//! Each node has a single egress NIC modelled as a FIFO serializer with a
+//! (time-varying) bandwidth plus a propagation latency — enough to
+//! reproduce the paper's Fig 9 experiment where the inter-node bandwidth
+//! drops from 1 Gbps to 30 Mbps mid-run and the congestion cascades into
+//! event latencies.
+
+use crate::config::NetworkConfig;
+use crate::util::{millis, secs, Micros};
+
+/// Per-node egress serialization queue with scheduled bandwidth changes.
+#[derive(Debug, Clone)]
+pub struct NetModel {
+    latency: Micros,
+    /// `(effective_from, bandwidth_bps)` steps, sorted by time.
+    bw_schedule: Vec<(Micros, f64)>,
+    /// Next time each node's NIC is free.
+    nic_free: Vec<Micros>,
+    /// Shared-backbone serializer: all inter-node transfers contend on
+    /// one fabric (Fig 9 throttles "the bandwidth between compute
+    /// nodes" — a switch-level constraint).
+    shared: Option<Micros>,
+    pub frame_bytes: usize,
+    pub candidate_bytes: usize,
+    pub meta_bytes: usize,
+}
+
+impl NetModel {
+    pub fn new(cfg: &NetworkConfig, nodes: usize) -> Self {
+        let mut bw_schedule = vec![(0, cfg.bandwidth_bps)];
+        for ev in &cfg.events {
+            bw_schedule.push((secs(ev.at_sec), ev.bandwidth_bps));
+        }
+        bw_schedule.sort_by_key(|&(t, _)| t);
+        Self {
+            latency: millis(cfg.latency_ms),
+            bw_schedule,
+            nic_free: vec![0; nodes],
+            shared: if cfg.shared_fabric { Some(0) } else { None },
+            frame_bytes: cfg.frame_bytes,
+            candidate_bytes: cfg.candidate_bytes,
+            meta_bytes: cfg.meta_bytes,
+        }
+    }
+
+    /// Bandwidth in effect at time `t`.
+    pub fn bandwidth_at(&self, t: Micros) -> f64 {
+        self.bw_schedule
+            .iter()
+            .rev()
+            .find(|&&(from, _)| from <= t)
+            .map(|&(_, bw)| bw)
+            .unwrap_or(self.bw_schedule[0].1)
+    }
+
+    /// Enqueue a transfer of `bytes` from `src` to `dst` starting at `t`;
+    /// returns the arrival time at `dst`. Same-node transfers (IPC via
+    /// the Worker's router) cost only a fixed small overhead.
+    pub fn transfer(
+        &mut self,
+        src: usize,
+        dst: usize,
+        bytes: usize,
+        t: Micros,
+    ) -> Micros {
+        if src == dst {
+            return t + 50; // Sys V IPC hop, ~50 us
+        }
+        if let Some(fabric_free) = self.shared {
+            let start = fabric_free.max(t);
+            let bw = self.bandwidth_at(start);
+            let ser = (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros;
+            self.shared = Some(start + ser);
+            return start + ser + self.latency;
+        }
+        let start = self.nic_free[src].max(t);
+        let bw = self.bandwidth_at(start);
+        let ser = (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros;
+        self.nic_free[src] = start + ser;
+        start + ser + self.latency
+    }
+
+    /// Non-mutating estimate of a transfer duration (no queueing).
+    pub fn transfer_estimate(&self, bytes: usize, t: Micros) -> Micros {
+        let bw = self.bandwidth_at(t);
+        (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros + self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BandwidthEvent;
+    use crate::util::SEC;
+
+    fn cfg() -> NetworkConfig {
+        NetworkConfig {
+            shared_fabric: false, // exercise the per-NIC mode here
+            events: vec![BandwidthEvent {
+                at_sec: 300.0,
+                bandwidth_bps: 30e6,
+            }],
+            ..NetworkConfig::default()
+        }
+    }
+
+    fn cfg_shared() -> NetworkConfig {
+        NetworkConfig {
+            events: vec![BandwidthEvent {
+                at_sec: 300.0,
+                bandwidth_bps: 30e6,
+            }],
+            ..NetworkConfig::default()
+        }
+    }
+
+    #[test]
+    fn shared_fabric_serializes_across_nodes() {
+        let mut n = NetModel::new(&cfg_shared(), 4);
+        let a = n.transfer(0, 1, 1_000_000, 0);
+        let b = n.transfer(2, 3, 1_000_000, 0); // different NICs, same fabric
+        assert!(b > a, "fabric is shared");
+    }
+
+    #[test]
+    fn bandwidth_schedule_applies() {
+        let n = NetModel::new(&cfg(), 3);
+        assert_eq!(n.bandwidth_at(0), 1e9);
+        assert_eq!(n.bandwidth_at(299 * SEC), 1e9);
+        assert_eq!(n.bandwidth_at(301 * SEC), 30e6);
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bandwidth() {
+        let mut n = NetModel::new(&cfg(), 3);
+        let fast = n.transfer(0, 1, 2900, 0) - 0;
+        let slow = n.transfer(0, 1, 2900, 400 * SEC) - 400 * SEC;
+        // 2900 B at 1 Gbps ~ 23 us + 500 us latency; at 30 Mbps ~ 773 us.
+        assert!(fast < slow);
+        assert!((slow - fast) > 600);
+    }
+
+    #[test]
+    fn nic_serializes_concurrent_transfers() {
+        let mut n = NetModel::new(&cfg(), 2);
+        let a = n.transfer(0, 1, 1_000_000, 0);
+        let b = n.transfer(0, 1, 1_000_000, 0);
+        assert!(b > a, "second transfer must queue behind the first");
+        let c = n.transfer(1, 0, 1_000_000, 0);
+        assert_eq!(c, a, "different NIC is independent");
+    }
+
+    #[test]
+    fn same_node_is_ipc() {
+        let mut n = NetModel::new(&cfg(), 2);
+        assert_eq!(n.transfer(1, 1, 5_000_000, 100), 150);
+    }
+
+    #[test]
+    fn congestion_collapse_at_low_bandwidth() {
+        // 200 cameras x 2.9 kB/s = 4.6 Mbps fits in 30 Mbps, but
+        // 2000 frames/s would not — verify queueing grows unbounded.
+        let mut n = NetModel::new(&cfg(), 2);
+        let t0 = 400 * SEC;
+        let mut last = 0;
+        for _ in 0..2000 {
+            last = n.transfer(0, 1, 2900, t0);
+        }
+        // 2000 * 2900B * 8 / 30e6 = 1.55 s of serialization
+        assert!(last - t0 > SEC, "got {}", last - t0);
+    }
+}

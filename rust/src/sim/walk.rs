@@ -1,0 +1,182 @@
+//! Entity random walk over the road network (§5.1 Workload).
+//!
+//! The tracked entity starts at a vertex and performs a random walk at a
+//! constant speed (paper: 1 m/s), interpolating along edges. The walk is
+//! pre-computed for the experiment duration so `position(t)` is O(log n).
+
+use crate::roadnet::{Graph, VertexId};
+use crate::util::{rng, Micros, SEC};
+
+/// A point along the walk: on the edge `(from, to)` having covered
+/// `offset_m` of its `len_m`.
+#[derive(Debug, Clone, Copy)]
+pub struct Position {
+    pub from: VertexId,
+    pub to: VertexId,
+    pub offset_m: f64,
+    pub len_m: f64,
+    /// Planar coordinates (metres).
+    pub xy: (f64, f64),
+}
+
+/// Pre-computed random walk.
+#[derive(Debug, Clone)]
+pub struct EntityWalk {
+    /// (arrival_time, vertex) for each vertex visited, in order.
+    visits: Vec<(Micros, VertexId)>,
+    speed_mps: f64,
+}
+
+impl EntityWalk {
+    /// Simulate a walk of `duration` starting at `start`. Avoids
+    /// immediately backtracking unless the vertex is a dead end.
+    pub fn simulate(
+        g: &Graph,
+        start: VertexId,
+        speed_mps: f64,
+        duration: Micros,
+        seed: u64,
+    ) -> Self {
+        let mut r = rng(seed, 0x11A1);
+        let mut visits = vec![(0, start)];
+        let mut t = 0;
+        let mut cur = start;
+        let mut prev: Option<VertexId> = None;
+        while t < duration {
+            let nbrs = &g.adj[cur];
+            if nbrs.is_empty() {
+                break; // isolated vertex: entity stays put
+            }
+            let choices: Vec<&(VertexId, f64)> = nbrs
+                .iter()
+                .filter(|&&(v, _)| Some(v) != prev || nbrs.len() == 1)
+                .collect();
+            let &(next, len) = choices[r.range_u(0, choices.len())];
+            let dt = (len / speed_mps * SEC as f64).round() as Micros;
+            t += dt.max(1);
+            prev = Some(cur);
+            cur = next;
+            visits.push((t, cur));
+        }
+        Self {
+            visits,
+            speed_mps,
+        }
+    }
+
+    pub fn speed(&self) -> f64 {
+        self.speed_mps
+    }
+
+    /// Position at time `t` (clamped to the walk's extent).
+    pub fn position(&self, g: &Graph, t: Micros) -> Position {
+        let idx = match self.visits.binary_search_by_key(&t, |&(vt, _)| vt) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        let (t0, v0) = self.visits[idx];
+        if idx + 1 >= self.visits.len() {
+            let xy = g.pos[v0];
+            return Position {
+                from: v0,
+                to: v0,
+                offset_m: 0.0,
+                len_m: 0.0,
+                xy,
+            };
+        }
+        let (t1, v1) = self.visits[idx + 1];
+        let len = g.edge_len(v0, v1).unwrap_or(0.0);
+        let frac = if t1 > t0 {
+            ((t - t0) as f64 / (t1 - t0) as f64).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let (x0, y0) = g.pos[v0];
+        let (x1, y1) = g.pos[v1];
+        Position {
+            from: v0,
+            to: v1,
+            offset_m: frac * len,
+            len_m: len,
+            xy: (x0 + frac * (x1 - x0), y0 + frac * (y1 - y0)),
+        }
+    }
+
+    /// The vertex visited most recently at or before `t`.
+    pub fn vertex_at(&self, t: Micros) -> VertexId {
+        let idx = match self.visits.binary_search_by_key(&t, |&(vt, _)| vt) {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        self.visits[idx].1
+    }
+
+    pub fn visits(&self) -> &[(Micros, VertexId)] {
+        &self.visits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::roadnet::generate;
+    use crate::util::secs;
+
+    fn setup() -> (Graph, EntityWalk) {
+        let g = generate(&WorkloadConfig::default(), 5);
+        let w = EntityWalk::simulate(&g, 0, 1.0, secs(600.0), 5);
+        (g, w)
+    }
+
+    #[test]
+    fn walk_respects_speed() {
+        let (g, w) = setup();
+        // Total distance covered / total time ~ speed.
+        let visits = w.visits();
+        let mut dist = 0.0;
+        for pair in visits.windows(2) {
+            dist += g.edge_len(pair[0].1, pair[1].1).unwrap();
+        }
+        let dt = (visits.last().unwrap().0 - visits[0].0) as f64 / 1e6;
+        let v = dist / dt;
+        assert!((v - 1.0).abs() < 0.01, "speed {v}");
+    }
+
+    #[test]
+    fn walk_covers_duration() {
+        let (_, w) = setup();
+        assert!(w.visits().last().unwrap().0 >= secs(600.0));
+    }
+
+    #[test]
+    fn positions_interpolate_continuously() {
+        let (g, w) = setup();
+        let mut last = w.position(&g, 0).xy;
+        for s in 1..600 {
+            let p = w.position(&g, secs(s as f64)).xy;
+            let step =
+                ((p.0 - last.0).powi(2) + (p.1 - last.1).powi(2)).sqrt();
+            // 1 m/s => at most ~1.05 m per second step (edge wiggle).
+            assert!(step < 1.6, "jump of {step} m at t={s}s");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn walk_moves_along_edges() {
+        let (g, w) = setup();
+        let p = w.position(&g, secs(42.5));
+        assert!(g.has_edge(p.from, p.to) || p.from == p.to);
+        assert!(p.offset_m <= p.len_m + 1e-9);
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = generate(&WorkloadConfig::default(), 5);
+        let a = EntityWalk::simulate(&g, 0, 1.0, secs(60.0), 9);
+        let b = EntityWalk::simulate(&g, 0, 1.0, secs(60.0), 9);
+        assert_eq!(a.visits(), b.visits());
+    }
+}

@@ -1,0 +1,350 @@
+//! Dynamic batch formation (§4.4), plus the Static and NOB strategies.
+//!
+//! The dynamic batcher considers the event at the head of the queue for
+//! the current batch `Bₚ` of size `m`: it is added iff
+//! `t + ξ(m+1) ≤ min(Δₚ, δₓ)` — i.e. the grown batch would still finish
+//! before both the batch deadline (earliest member deadline) and the new
+//! event's own deadline. When the head cannot join, the current batch is
+//! submitted. An idle batch auto-submits when the clock reaches
+//! `Δₚ − ξ(m)`; the engine drives this through [`BatcherPoll::Timer`].
+
+use std::collections::VecDeque;
+
+use super::budget::BUDGET_INF;
+use super::nob::NobTable;
+use super::xi::XiModel;
+use crate::util::Micros;
+
+/// An event queued at a task, with the timestamps batching needs.
+#[derive(Debug, Clone)]
+pub struct QueuedEvent<T> {
+    pub item: T,
+    /// Source event id `k`.
+    pub id: u64,
+    /// Observed arrival time at this task (`aᵏᵢ`, local clock).
+    pub arrival: Micros,
+    /// Event deadline `δ = βᵢ + aᵏ₁` at this task's clock; `BUDGET_INF`
+    /// while budgets are uninitialized (bootstrap).
+    pub deadline: Micros,
+}
+
+/// Result of polling the batcher.
+#[derive(Debug)]
+pub enum BatcherPoll<T> {
+    /// A batch ready for execution now.
+    Ready(Vec<QueuedEvent<T>>),
+    /// Nothing ready; poll again at this time (auto-submit deadline).
+    Timer(Micros),
+    /// Nothing pending.
+    Idle,
+}
+
+enum Kind {
+    Static {
+        size: usize,
+    },
+    Dynamic {
+        max: usize,
+    },
+    Nob {
+        table: NobTable,
+        max: usize,
+        rate_ema: f64,
+        last_arrival: Option<Micros>,
+    },
+}
+
+/// Batch-formation state for one task.
+pub struct Batcher<T> {
+    kind: Kind,
+    pending: VecDeque<QueuedEvent<T>>,
+    current: Vec<QueuedEvent<T>>,
+    /// Δₚ: earliest deadline among `current`.
+    cur_deadline: Micros,
+}
+
+impl<T> Batcher<T> {
+    pub fn fixed(size: usize) -> Self {
+        Self::with_kind(Kind::Static { size: size.max(1) })
+    }
+
+    pub fn dynamic(max: usize) -> Self {
+        Self::with_kind(Kind::Dynamic { max: max.max(1) })
+    }
+
+    pub fn nob(table: NobTable, max: usize) -> Self {
+        Self::with_kind(Kind::Nob {
+            table,
+            max: max.max(1),
+            rate_ema: 0.0,
+            last_arrival: None,
+        })
+    }
+
+    fn with_kind(kind: Kind) -> Self {
+        Self {
+            kind,
+            pending: VecDeque::new(),
+            current: Vec::new(),
+            cur_deadline: BUDGET_INF,
+        }
+    }
+
+    /// Enqueue an arriving (post-drop-point-1) event.
+    pub fn push(&mut self, qe: QueuedEvent<T>) {
+        if let Kind::Nob {
+            rate_ema,
+            last_arrival,
+            ..
+        } = &mut self.kind
+        {
+            if let Some(last) = *last_arrival {
+                let dt = (qe.arrival - last).max(1) as f64;
+                let inst = 1e6 / dt;
+                *rate_ema = if *rate_ema == 0.0 {
+                    inst
+                } else {
+                    0.2 * inst + 0.8 * *rate_ema
+                };
+            }
+            *last_arrival = Some(qe.arrival);
+        }
+        self.pending.push_back(qe);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn current_len(&self) -> usize {
+        self.current.len()
+    }
+
+    /// Estimated input rate (NOB only).
+    pub fn rate_estimate(&self) -> f64 {
+        match &self.kind {
+            Kind::Nob { rate_ema, .. } => *rate_ema,
+            _ => 0.0,
+        }
+    }
+
+    fn take_current(&mut self) -> Vec<QueuedEvent<T>> {
+        self.cur_deadline = BUDGET_INF;
+        std::mem::take(&mut self.current)
+    }
+
+    /// Drive batch formation at time `now`. Call when the executor is
+    /// free, after each `push`, and when a previously returned timer
+    /// fires.
+    pub fn poll(&mut self, now: Micros, xi: &XiModel) -> BatcherPoll<T> {
+        match &mut self.kind {
+            Kind::Static { size } => {
+                let size = *size;
+                if self.pending.len() >= size {
+                    let batch = self.pending.drain(..size).collect();
+                    BatcherPoll::Ready(batch)
+                } else {
+                    // Static batching never times out — exactly the
+                    // unbounded-wait behaviour the paper calls out.
+                    BatcherPoll::Idle
+                }
+            }
+            Kind::Nob { table, max, rate_ema, .. } => {
+                let target = table.lookup(*rate_ema).clamp(1, *max);
+                if self.pending.len() >= target {
+                    let batch = self.pending.drain(..target).collect();
+                    BatcherPoll::Ready(batch)
+                } else {
+                    BatcherPoll::Idle
+                }
+            }
+            Kind::Dynamic { max } => {
+                let max = *max;
+                loop {
+                    if self.current.len() >= max {
+                        return BatcherPoll::Ready(self.take_current());
+                    }
+                    let Some(head) = self.pending.front() else {
+                        // Queue drained: wait for the auto-submit point.
+                        if self.current.is_empty() {
+                            return BatcherPoll::Idle;
+                        }
+                        let m = self.current.len();
+                        let submit_at =
+                            self.cur_deadline.saturating_sub(xi.xi(m));
+                        if now >= submit_at {
+                            return BatcherPoll::Ready(self.take_current());
+                        }
+                        return BatcherPoll::Timer(submit_at);
+                    };
+                    // Bootstrap: no budget yet -> streaming (b = 1).
+                    if head.deadline >= BUDGET_INF {
+                        if !self.current.is_empty() {
+                            return BatcherPoll::Ready(self.take_current());
+                        }
+                        let head = self.pending.pop_front().unwrap();
+                        return BatcherPoll::Ready(vec![head]);
+                    }
+                    let m = self.current.len();
+                    let fits = now + xi.xi(m + 1)
+                        <= self.cur_deadline.min(head.deadline);
+                    if fits {
+                        let head = self.pending.pop_front().unwrap();
+                        self.cur_deadline =
+                            self.cur_deadline.min(head.deadline);
+                        self.current.push(head);
+                    } else if !self.current.is_empty() {
+                        return BatcherPoll::Ready(self.take_current());
+                    } else {
+                        // Even alone the head misses its deadline; pass
+                        // it through solo — drop point 2 will judge it.
+                        let head = self.pending.pop_front().unwrap();
+                        return BatcherPoll::Ready(vec![head]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MS, SEC};
+
+    fn xi() -> XiModel {
+        XiModel::affine_ms(52.5, 67.5)
+    }
+
+    fn qe(id: u64, arrival: Micros, deadline: Micros) -> QueuedEvent<u64> {
+        QueuedEvent {
+            item: id,
+            id,
+            arrival,
+            deadline,
+        }
+    }
+
+    fn ready_ids(p: BatcherPoll<u64>) -> Vec<u64> {
+        match p {
+            BatcherPoll::Ready(b) => b.iter().map(|e| e.id).collect(),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn static_waits_for_full_batch() {
+        let mut b = Batcher::fixed(3);
+        b.push(qe(1, 0, BUDGET_INF));
+        b.push(qe(2, SEC, BUDGET_INF));
+        assert!(matches!(b.poll(SEC, &xi()), BatcherPoll::Idle));
+        b.push(qe(3, 2 * SEC, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(2 * SEC, &xi())), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn dynamic_bootstrap_streams() {
+        let mut b = Batcher::dynamic(25);
+        b.push(qe(1, 0, BUDGET_INF));
+        b.push(qe(2, 0, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(0, &xi())), vec![1]);
+        assert_eq!(ready_ids(b.poll(0, &xi())), vec![2]);
+    }
+
+    #[test]
+    fn dynamic_accumulates_within_deadline() {
+        let mut b = Batcher::dynamic(25);
+        // Deadlines far out: batch should accumulate, then Timer.
+        let dl = 20 * SEC;
+        for k in 0..5 {
+            b.push(qe(k, 0, dl));
+        }
+        match b.poll(0, &xi()) {
+            BatcherPoll::Timer(at) => {
+                // submit at Δ − ξ(5)
+                assert_eq!(at, dl - xi().xi(5));
+            }
+            other => panic!("{other:?}"),
+        }
+        // At the timer, the batch is released.
+        let at = dl - xi().xi(5);
+        assert_eq!(ready_ids(b.poll(at, &xi())), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dynamic_respects_batch_deadline_test() {
+        let mut b = Batcher::dynamic(25);
+        let x = xi();
+        // First event deadline tight: only a small batch fits.
+        b.push(qe(0, 0, x.xi(2) + 1)); // fits with one companion
+        b.push(qe(1, 0, 20 * SEC));
+        b.push(qe(2, 0, 20 * SEC));
+        // Adding event 2 would need now + xi(3) <= Δ = xi(2)+1: fails.
+        let ids = ready_ids(b.poll(0, &x));
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn dynamic_max_size_caps_batch() {
+        let mut b = Batcher::dynamic(4);
+        for k in 0..10 {
+            b.push(qe(k, 0, 60 * SEC));
+        }
+        assert_eq!(ready_ids(b.poll(0, &xi())).len(), 4);
+    }
+
+    #[test]
+    fn dynamic_solo_event_past_deadline_still_released() {
+        let mut b = Batcher::dynamic(25);
+        b.push(qe(0, 0, 1)); // cannot meet deadline even alone
+        assert_eq!(ready_ids(b.poll(10, &xi())), vec![0]);
+    }
+
+    #[test]
+    fn dynamic_batch_deadline_is_min_of_members() {
+        let mut b = Batcher::dynamic(25);
+        let x = xi();
+        b.push(qe(0, 0, 30 * SEC));
+        b.push(qe(1, 0, 10 * SEC)); // tighter
+        match b.poll(0, &x) {
+            BatcherPoll::Timer(at) => assert_eq!(at, 10 * SEC - x.xi(2)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn nob_uses_rate_lookup() {
+        let x = XiModel::affine_ms(100.0, 10.0);
+        let table = NobTable::build(&x, 100.0, 10.0, 32);
+        let mut b = Batcher::nob(table, 32);
+        // 20 events/s arrivals -> target batch 3 (see nob tests).
+        let mut t = 0;
+        let mut got = None;
+        for k in 0..10 {
+            b.push(qe(k, t, BUDGET_INF));
+            if let BatcherPoll::Ready(batch) = b.poll(t, &x) {
+                got = Some(batch.len());
+                break;
+            }
+            t += 50 * MS; // 20 events/s
+        }
+        assert_eq!(got, Some(3));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::dynamic(25);
+        let x = xi();
+        for k in 0..6 {
+            b.push(qe(k, 0, 60 * SEC));
+        }
+        // All six join the batch; the timer releases them in order.
+        let at = match b.poll(0, &x) {
+            BatcherPoll::Timer(at) => at,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(at, 60 * SEC - x.xi(6));
+        let ids = ready_ids(b.poll(at, &x));
+        assert_eq!(ids, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

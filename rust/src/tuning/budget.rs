@@ -1,0 +1,378 @@
+//! Completion budgets and their adaptation (§4.5).
+//!
+//! Each task τᵢ keeps one completion budget βᵢ *per downstream task*
+//! (§4.3.4). Budgets shrink when downstream drops an event (reject
+//! signal, §4.5.1) and grow when events reach the sink well before γ
+//! (accept signal, §4.5.2). The task stores a 3-tuple ⟨dᵏ, qᵏ, mᵏ⟩ per
+//! processed event so late signals can be resolved; `min`/`max` against
+//! the previous budget makes updates resilient to out-of-order signals.
+
+use std::collections::VecDeque;
+
+use crate::util::FastMap;
+
+use super::xi::XiModel;
+use crate::util::Micros;
+
+/// "No budget yet" sentinel — far below `i64::MAX` so `u + xi > budget`
+/// comparisons cannot overflow.
+pub const BUDGET_INF: Micros = i64::MAX / 4;
+
+/// Per-event bookkeeping stored at a task after processing (§4.5).
+#[derive(Debug, Clone, Copy)]
+pub struct EventRecord {
+    /// Departure time `d = u + π` (observed at this task's clock).
+    pub departure: Micros,
+    /// Queueing duration `q`.
+    pub queue: Micros,
+    /// Batch size `m` the event executed in.
+    pub batch: usize,
+    /// Index of the downstream task the event was routed to.
+    pub sent_to: usize,
+}
+
+/// Budget-adaptation signals travelling upstream from a dropping task
+/// (reject) or the sink (accept).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    /// Event `event` was dropped downstream having exceeded its budget by
+    /// `eps`; `sum_queue` is Σq over the tasks upstream of the dropper.
+    Reject {
+        event: u64,
+        eps: Micros,
+        sum_queue: Micros,
+    },
+    /// Event `event` (the slowest of its batch) reached the sink `eps`
+    /// early; `sum_exec` is Σξ over tasks before the sink.
+    Accept {
+        event: u64,
+        eps: Micros,
+        sum_exec: Micros,
+    },
+}
+
+/// Budget state for one task.
+#[derive(Debug)]
+pub struct BudgetManager {
+    /// Per-downstream budget; `None` until the first signal arrives
+    /// (bootstrap: "no budgets assigned", streaming b=1).
+    budgets: Vec<Option<Micros>>,
+    records: FastMap<u64, EventRecord>,
+    order: VecDeque<u64>,
+    capacity: usize,
+    m_max: usize,
+}
+
+impl BudgetManager {
+    pub fn new(n_downstream: usize, m_max: usize, capacity: usize) -> Self {
+        Self {
+            budgets: vec![None; n_downstream.max(1)],
+            records: FastMap::default(),
+            order: VecDeque::new(),
+            capacity,
+            m_max,
+        }
+    }
+
+    /// Budget toward a specific downstream task (drop point 3).
+    pub fn budget_for(&self, downstream: usize) -> Micros {
+        self.budgets
+            .get(downstream)
+            .copied()
+            .flatten()
+            .unwrap_or(BUDGET_INF)
+    }
+
+    /// Optimistic budget for drop points 1–2, where the destination is
+    /// unknown: an event is only *guaranteed* stale if it would miss
+    /// every downstream path, so use the max.
+    pub fn budget_max(&self) -> Micros {
+        self.budgets
+            .iter()
+            .map(|b| b.unwrap_or(BUDGET_INF))
+            .max()
+            .unwrap_or(BUDGET_INF)
+    }
+
+    /// Smallest initialized budget (used for reporting).
+    pub fn budget_min_initialized(&self) -> Option<Micros> {
+        self.budgets.iter().copied().flatten().min()
+    }
+
+    /// Has any signal initialized a budget yet?
+    pub fn initialized(&self) -> bool {
+        self.budgets.iter().any(|b| b.is_some())
+    }
+
+    /// Store the 3-tuple for a processed event (bounded; oldest evicted).
+    pub fn record(&mut self, event: u64, rec: EventRecord) {
+        if self.records.len() >= self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                self.records.remove(&old);
+            }
+        }
+        if self.records.insert(event, rec).is_none() {
+            self.order.push_back(event);
+        }
+    }
+
+    pub fn get_record(&self, event: u64) -> Option<&EventRecord> {
+        self.records.get(&event)
+    }
+
+    /// Apply an upstream-travelling signal. Returns the new budget for
+    /// the affected downstream if the event was known.
+    pub fn apply(&mut self, sig: Signal, xi: &XiModel) -> Option<Micros> {
+        match sig {
+            Signal::Reject {
+                event,
+                eps,
+                sum_queue,
+            } => {
+                let rec = *self.records.get(&event)?;
+                // λ̄ = min(ε·qᵏ/Σq, ξ(mᵏ) − ξ(1))   (§4.5.1)
+                let ratio = if sum_queue > 0 {
+                    rec.queue as f64 / sum_queue as f64
+                } else {
+                    0.0
+                };
+                let lam = ((eps as f64 * ratio) as Micros)
+                    .min(xi.xi(rec.batch) - xi.xi(1))
+                    .max(0);
+                let cand = rec.departure - lam;
+                let slot = &mut self.budgets[rec.sent_to];
+                let new = match *slot {
+                    // min against the old budget: resilient to
+                    // out-of-order reject signals.
+                    Some(old) => cand.min(old),
+                    // Bootstrap: first signal sets the budget directly.
+                    None => cand,
+                };
+                *slot = Some(new);
+                Some(new)
+            }
+            Signal::Accept {
+                event,
+                eps,
+                sum_exec,
+            } => {
+                let rec = *self.records.get(&event)?;
+                // λ⃗ = min(ε·ξ(mᵏ)/Σξ,
+                //          (mᵐᵃˣ−mᵏ)·qᵏ/mᵏ + ξ(mᵐᵃˣ) − ξ(mᵏ))  (§4.5.2)
+                let xi_m = xi.xi(rec.batch);
+                let ratio = if sum_exec > 0 {
+                    xi_m as f64 / sum_exec as f64
+                } else {
+                    1.0
+                };
+                let headroom = (self.m_max as i64 - rec.batch as i64).max(0)
+                    as Micros
+                    * (rec.queue / rec.batch.max(1) as Micros)
+                    + (xi.xi(self.m_max) - xi_m);
+                let lam =
+                    ((eps as f64 * ratio) as Micros).min(headroom).max(0);
+                let cand = rec.departure + lam;
+                let slot = &mut self.budgets[rec.sent_to];
+                let new = match *slot {
+                    // max against the old budget for out-of-order accepts.
+                    Some(old) => cand.max(old),
+                    None => cand,
+                };
+                *slot = Some(new);
+                Some(new)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MS, SEC};
+
+    fn xi() -> XiModel {
+        XiModel::affine_ms(52.5, 67.5)
+    }
+
+    fn rec(departure: Micros, queue: Micros, batch: usize) -> EventRecord {
+        EventRecord {
+            departure,
+            queue,
+            batch,
+            sent_to: 0,
+        }
+    }
+
+    #[test]
+    fn uninitialized_budget_is_infinite() {
+        let b = BudgetManager::new(3, 25, 128);
+        assert_eq!(b.budget_max(), BUDGET_INF);
+        assert_eq!(b.budget_for(2), BUDGET_INF);
+        assert!(!b.initialized());
+        // No overflow in a drop check against the sentinel:
+        assert!(10 * SEC + 120 * MS < b.budget_max());
+    }
+
+    #[test]
+    fn reject_shrinks_budget() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        b.record(7, rec(10 * SEC, 2 * SEC, 10));
+        let new = b
+            .apply(
+                Signal::Reject {
+                    event: 7,
+                    eps: 1 * SEC,
+                    sum_queue: 4 * SEC,
+                },
+                &xi(),
+            )
+            .unwrap();
+        // λ = min(1s * 2/4, ξ(10)−ξ(1)) = min(500ms, 607.5ms) = 500 ms
+        assert_eq!(new, 10 * SEC - 500 * MS);
+        assert_eq!(b.budget_for(0), new);
+    }
+
+    #[test]
+    fn reject_lambda_clamped_by_streaming_floor() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        b.record(7, rec(10 * SEC, 8 * SEC, 3));
+        let new = b
+            .apply(
+                Signal::Reject {
+                    event: 7,
+                    eps: 5 * SEC,
+                    sum_queue: 8 * SEC,
+                },
+                &xi(),
+            )
+            .unwrap();
+        // ε·q/Σq = 5 s but ξ(3)−ξ(1) = 135 ms caps the reduction.
+        assert_eq!(new, 10 * SEC - 135 * MS);
+    }
+
+    #[test]
+    fn accept_grows_budget() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        b.record(9, rec(5 * SEC, 1 * SEC, 5));
+        let new = b
+            .apply(
+                Signal::Accept {
+                    event: 9,
+                    eps: 4 * SEC,
+                    sum_exec: xi().xi(5) * 2,
+                },
+                &xi(),
+            )
+            .unwrap();
+        // ratio = 1/2 -> 2 s, headroom = 20*(1s/5) + ξ(25)−ξ(5) -> 4 s+
+        assert_eq!(new, 5 * SEC + 2 * SEC);
+    }
+
+    #[test]
+    fn accept_capped_by_max_batch_headroom() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        b.record(9, rec(5 * SEC, 100 * MS, 25)); // already at m_max
+        let new = b
+            .apply(
+                Signal::Accept {
+                    event: 9,
+                    eps: 60 * SEC,
+                    sum_exec: xi().xi(25),
+                },
+                &xi(),
+            )
+            .unwrap();
+        // headroom = 0 at m = m_max: budget cannot grow.
+        assert_eq!(new, 5 * SEC);
+    }
+
+    #[test]
+    fn out_of_order_signals_resolve_to_extremes() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        b.record(1, rec(10 * SEC, SEC, 10));
+        b.record(2, rec(12 * SEC, SEC, 10));
+        let x = xi();
+        // Reject for event 2 (later, larger d) then event 1.
+        b.apply(
+            Signal::Reject {
+                event: 2,
+                eps: SEC,
+                sum_queue: SEC,
+            },
+            &x,
+        );
+        let first = b.budget_for(0);
+        b.apply(
+            Signal::Reject {
+                event: 1,
+                eps: SEC,
+                sum_queue: SEC,
+            },
+            &x,
+        );
+        let second = b.budget_for(0);
+        assert!(second <= first, "rejects only shrink");
+        // A stale accept cannot shrink it back below.
+        b.record(3, rec(2 * SEC, SEC, 1));
+        b.apply(
+            Signal::Accept {
+                event: 3,
+                eps: 0,
+                sum_exec: x.xi(1),
+            },
+            &x,
+        );
+        assert!(b.budget_for(0) >= second);
+    }
+
+    #[test]
+    fn per_downstream_isolation() {
+        let mut b = BudgetManager::new(2, 25, 128);
+        b.record(
+            1,
+            EventRecord {
+                departure: 10 * SEC,
+                queue: SEC,
+                batch: 5,
+                sent_to: 1,
+            },
+        );
+        b.apply(
+            Signal::Reject {
+                event: 1,
+                eps: SEC,
+                sum_queue: SEC,
+            },
+            &xi(),
+        );
+        assert_eq!(b.budget_for(0), BUDGET_INF);
+        assert!(b.budget_for(1) < BUDGET_INF);
+        assert_eq!(b.budget_max(), BUDGET_INF);
+    }
+
+    #[test]
+    fn unknown_event_signal_ignored() {
+        let mut b = BudgetManager::new(1, 25, 128);
+        assert!(b
+            .apply(
+                Signal::Reject {
+                    event: 99,
+                    eps: SEC,
+                    sum_queue: SEC
+                },
+                &xi()
+            )
+            .is_none());
+    }
+
+    #[test]
+    fn record_capacity_evicts_oldest() {
+        let mut b = BudgetManager::new(1, 25, 4);
+        for k in 0..6u64 {
+            b.record(k, rec(SEC, SEC, 1));
+        }
+        assert!(b.get_record(0).is_none());
+        assert!(b.get_record(1).is_none());
+        assert!(b.get_record(5).is_some());
+    }
+}

@@ -1,0 +1,129 @@
+//! The three drop points (§4.3).
+//!
+//! An event is *stale* at task τᵢ when its upstream time plus remaining
+//! processing exceeds the task's completion budget βᵢ. The three
+//! decisions are taken (1) on arrival before queueing, (2) after batch
+//! formation before execution, and (3) after execution before transmit —
+//! each uses progressively better information about the event's actual
+//! processing time, so drops happen just-in-time while still saving the
+//! downstream work.
+//!
+//! All inputs are *observed* timestamps/durations at the deciding task's
+//! device; the skew-cancellation argument of §4.6.2 holds because every
+//! comparison has the same `-σᵢ` term on both sides (validated by the
+//! `prop_tuning` suite).
+
+use crate::util::Micros;
+
+/// Drop point 1 — on arrival, before the input queue.
+///
+/// Conservative: assumes the fastest possible execution (`xi(1)`) and no
+/// queueing. `u` is the observed upstream time `aᵏᵢ − aᵏ₁`; `budget` is
+/// βᵢ (use the max across downstream budgets when the destination is not
+/// yet known — an event is only *guaranteed* stale if it would miss every
+/// path).
+pub fn drop_before_queue(u: Micros, xi_1: Micros, budget: Micros) -> bool {
+    u + xi_1 > budget
+}
+
+/// Drop point 2 — batch formed, before execution.
+///
+/// `q` is this event's queueing duration so far and `xi_b` the estimated
+/// execution time of the formed batch.
+pub fn drop_before_exec(
+    u: Micros,
+    q: Micros,
+    xi_b: Micros,
+    budget: Micros,
+) -> bool {
+    u + q + xi_b > budget
+}
+
+/// Drop point 3 — after execution, before transmit.
+///
+/// `pi` is the realized processing duration `q + ξ_actual(b)`. Also the
+/// point where the destination task is finally known (the partitioner has
+/// run), so `budget` is the per-downstream budget (§4.3.4).
+pub fn drop_before_transmit(u: Micros, pi: Micros, budget: Micros) -> bool {
+    u + pi > budget
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{MS, SEC};
+
+    #[test]
+    fn point1_conservative() {
+        // 14 s upstream + 120 ms best-case exec < 15 s budget: keep.
+        assert!(!drop_before_queue(14 * SEC, 120 * MS, 15 * SEC));
+        // 14.9 s upstream + 120 ms > 15 s: drop.
+        assert!(drop_before_queue(14_900 * MS, 120 * MS, 15 * SEC));
+    }
+
+    #[test]
+    fn point2_accounts_for_queue_and_batch() {
+        let (u, budget) = (10 * SEC, 15 * SEC);
+        // 3 s queued + 1.74 s batch exec: 14.74 s < 15 s: keep.
+        assert!(!drop_before_exec(u, 3 * SEC, 1_740 * MS, budget));
+        // 4 s queued: 15.74 s > 15 s: drop.
+        assert!(drop_before_exec(u, 4 * SEC, 1_740 * MS, budget));
+    }
+
+    #[test]
+    fn point3_uses_realized_time() {
+        assert!(!drop_before_transmit(10 * SEC, 4 * SEC, 15 * SEC));
+        assert!(drop_before_transmit(10 * SEC, 6 * SEC, 15 * SEC));
+    }
+
+    #[test]
+    fn exact_budget_boundary_is_kept() {
+        // <= budget is *not* stale (strict > in all three).
+        assert!(!drop_before_queue(10, 5, 15));
+        assert!(!drop_before_exec(5, 5, 5, 15));
+        assert!(!drop_before_transmit(10, 5, 15));
+    }
+
+    #[test]
+    fn points_tighten_monotonically() {
+        // Any event dropped at point 1 would also be dropped at 2 and 3
+        // given consistent inputs (q, xi_b >= xi_1 ... pi >= q + xi_b).
+        let (u, budget, xi1) = (12 * SEC, 15 * SEC, 120 * MS);
+        if drop_before_queue(u, xi1, budget) {
+            assert!(drop_before_exec(u, 0, xi1, budget));
+            assert!(drop_before_transmit(u, xi1, budget));
+        }
+        // And surviving point 2 with pi == q + xi_b survives point 3.
+        let (q, xib) = (1 * SEC, 1 * SEC);
+        if !drop_before_exec(u, q, xib, budget) {
+            assert!(!drop_before_transmit(u, q + xib, budget));
+        }
+    }
+
+    #[test]
+    fn skew_cancels_in_all_points() {
+        // Adding the same skew to both u (via observed arrival) and the
+        // budget (which is defined relative to the same clock) leaves
+        // every decision unchanged.
+        for skew in [-700 * MS, -1, 0, 1, 300 * MS] {
+            for (u, q, x, b) in [
+                (10 * SEC, 2 * SEC, 1 * SEC, 15 * SEC),
+                (14 * SEC, 2 * SEC, 1 * SEC, 15 * SEC),
+                (0, 0, 120 * MS, 100 * MS),
+            ] {
+                assert_eq!(
+                    drop_before_queue(u, x, b),
+                    drop_before_queue(u - skew, x, b - skew)
+                );
+                assert_eq!(
+                    drop_before_exec(u, q, x, b),
+                    drop_before_exec(u - skew, q, x, b - skew)
+                );
+                assert_eq!(
+                    drop_before_transmit(u, q + x, b),
+                    drop_before_transmit(u - skew, q + x, b - skew)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Runtime tuning strategies (§4 of the paper) — the Tuning Triangle.
+//!
+//! Three knobs trade off three properties:
+//!
+//! * **batching** ([`batcher`]) controls latency/throughput,
+//! * **dropping** ([`drops`]) controls accuracy under overload,
+//! * **tracking logic** (in [`crate::roadnet`]/[`crate::apps`]) controls
+//!   the active camera-set size (scalability).
+//!
+//! Everything here is *pure timestamp logic* — no clocks, no channels —
+//! so the discrete-event engine and the live tokio engine share it
+//! unchanged, and the skew-resilience property (§4.6.2) can be tested by
+//! feeding the same scenario through skewed observation functions.
+
+pub mod batcher;
+pub mod bounds;
+pub mod budget;
+pub mod drops;
+pub mod nob;
+pub mod xi;
+
+pub use batcher::{Batcher, BatcherPoll, QueuedEvent};
+pub use bounds::{batching_added_latency, max_stable_batch, max_stable_rate};
+pub use budget::{BudgetManager, EventRecord, Signal};
+pub use drops::{drop_before_exec, drop_before_queue, drop_before_transmit};
+pub use nob::NobTable;
+pub use xi::XiModel;

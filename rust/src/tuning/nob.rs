@@ -1,0 +1,116 @@
+//! Near-Optimal Baseline (NOB) batching (§5.1 Baseline).
+//!
+//! Built by *prior benchmarking on a stable system*: for input rates
+//! 1–1000 events/s (step 10) find the smallest batch size that sustains
+//! the rate (service throughput `b/ξ(b)` ≥ rate). At runtime the
+//! platform looks up the batch size for the rate closest to the current
+//! input rate. Near-optimal under static conditions — and exactly the
+//! strategy that destabilizes under runtime variability (Fig 9b).
+
+use super::xi::XiModel;
+
+/// Rate → batch-size lookup table.
+#[derive(Debug, Clone)]
+pub struct NobTable {
+    /// (rate events/s, batch size), sorted by rate.
+    entries: Vec<(f64, usize)>,
+}
+
+impl NobTable {
+    /// Benchmark-build the table for rates `step, 2·step, …, max_rate`.
+    pub fn build(xi: &XiModel, max_rate: f64, step: f64, b_max: usize) -> Self {
+        let mut entries = Vec::new();
+        let mut rate = step;
+        while rate <= max_rate + 1e-9 {
+            let b = (1..=b_max)
+                .find(|&b| {
+                    // throughput(b) = b / xi(b) >= rate
+                    b as f64 * 1e6 >= rate * xi.xi(b) as f64
+                })
+                .unwrap_or(b_max);
+            entries.push((rate, b));
+            rate += step;
+        }
+        Self { entries }
+    }
+
+    /// Batch size for the table rate closest to `rate`.
+    pub fn lookup(&self, rate: f64) -> usize {
+        self.entries
+            .iter()
+            .min_by(|a, b| {
+                (a.0 - rate)
+                    .abs()
+                    .partial_cmp(&(b.0 - rate).abs())
+                    .unwrap()
+            })
+            .map(|&(_, b)| b)
+            .unwrap_or(1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cr() -> XiModel {
+        XiModel::affine_ms(52.5, 67.5) // paper CR: mu(1) = 8.33/s
+    }
+
+    #[test]
+    fn low_rate_streams() {
+        let t = NobTable::build(&cr(), 1000.0, 10.0, 25);
+        // 8.33/s capacity at b=1 covers a 1-8/s rate... table starts at 10.
+        // At 10/s: b=1 gives 8.3/s (insufficient); need larger b.
+        assert!(t.lookup(1.0) >= 1);
+        assert!(t.lookup(10.0) > 1);
+    }
+
+    #[test]
+    fn batch_size_monotone_in_rate() {
+        let t = NobTable::build(&cr(), 1000.0, 10.0, 25);
+        let mut last = 0;
+        for r in [10.0, 50.0, 100.0, 200.0, 400.0] {
+            let b = t.lookup(r);
+            assert!(b >= last, "rate {r} size {b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn saturates_at_b_max() {
+        let t = NobTable::build(&cr(), 1000.0, 10.0, 25);
+        // throughput(25) = 25/1.74s ~ 14.4/s; unsustainable rates cap out.
+        assert_eq!(t.lookup(900.0), 25);
+    }
+
+    #[test]
+    fn smallest_sufficient_batch() {
+        let xi = XiModel::affine_ms(100.0, 10.0);
+        let t = NobTable::build(&xi, 100.0, 10.0, 32);
+        // at 20/s: need b with b/ (0.1+0.01b) >= 20 -> b >= 2/0.8 = 2.5 -> 3
+        assert_eq!(t.lookup(20.0), 3);
+    }
+
+    #[test]
+    fn lookup_picks_nearest_rate() {
+        let xi = XiModel::affine_ms(100.0, 10.0);
+        let t = NobTable::build(&xi, 100.0, 10.0, 32);
+        assert_eq!(t.lookup(14.9), t.lookup(10.0));
+        assert_eq!(t.lookup(15.1), t.lookup(20.0));
+    }
+
+    #[test]
+    fn table_covers_paper_range() {
+        let t = NobTable::build(&cr(), 1000.0, 10.0, 25);
+        assert_eq!(t.len(), 100); // 10..=1000 step 10
+    }
+}

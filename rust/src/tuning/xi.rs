@@ -1,0 +1,168 @@
+//! ξ(b) — estimated batch execution duration (§4.2).
+//!
+//! The paper assumes ξ monotonically increases with batch size. We model
+//! it as the affine `ξ(b) = α + β·b` (invocation overhead + marginal
+//! per-event cost), which matches both the paper's published CR numbers
+//! (ξ(1)=120 ms, ξ(25)=1.74 s ⇒ α=52.5 ms, β=67.5 ms) and what we measure
+//! from the PJRT executables at calibration ([`XiModel::from_samples`]).
+//! An online EMA keeps the estimate fresh under drift.
+
+use crate::util::{Micros, MS};
+
+/// Affine batch execution-time model with optional online refinement.
+#[derive(Debug, Clone)]
+pub struct XiModel {
+    alpha: f64, // us
+    beta: f64,  // us
+    /// EMA smoothing for online observations (0 disables updates).
+    ema: f64,
+}
+
+impl XiModel {
+    /// From α, β in milliseconds.
+    pub fn affine_ms(alpha_ms: f64, beta_ms: f64) -> Self {
+        Self {
+            alpha: alpha_ms * MS as f64,
+            beta: beta_ms * MS as f64,
+            ema: 0.0,
+        }
+    }
+
+    /// Enable online EMA refinement with the given smoothing factor.
+    pub fn with_ema(mut self, ema: f64) -> Self {
+        self.ema = ema;
+        self
+    }
+
+    /// Least-squares fit of `(batch_size, duration)` calibration samples,
+    /// e.g. from timing the PJRT executable per batch bucket.
+    pub fn from_samples(samples: &[(usize, Micros)]) -> Self {
+        assert!(!samples.is_empty());
+        if samples.len() == 1 {
+            // Degenerate: attribute everything to the marginal cost.
+            let (b, t) = samples[0];
+            return Self {
+                alpha: 0.0,
+                beta: t as f64 / b as f64,
+                ema: 0.0,
+            };
+        }
+        let n = samples.len() as f64;
+        let sx: f64 = samples.iter().map(|&(b, _)| b as f64).sum();
+        let sy: f64 = samples.iter().map(|&(_, t)| t as f64).sum();
+        let sxx: f64 = samples.iter().map(|&(b, _)| (b * b) as f64).sum();
+        let sxy: f64 =
+            samples.iter().map(|&(b, t)| b as f64 * t as f64).sum();
+        let denom = n * sxx - sx * sx;
+        let beta = if denom.abs() < 1e-9 {
+            sy / sx
+        } else {
+            (n * sxy - sx * sy) / denom
+        };
+        let alpha = (sy - beta * sx) / n;
+        Self {
+            alpha: alpha.max(0.0),
+            beta: beta.max(1.0),
+            ema: 0.0,
+        }
+    }
+
+    /// Estimated execution duration for a batch of `b` events.
+    pub fn xi(&self, b: usize) -> Micros {
+        (self.alpha + self.beta * b as f64).round() as Micros
+    }
+
+    /// Record an observed `(batch, actual_duration)`; nudges α and β by
+    /// splitting the residual between them (EMA).
+    pub fn observe(&mut self, b: usize, actual: Micros) {
+        if self.ema <= 0.0 {
+            return;
+        }
+        let est = self.alpha + self.beta * b as f64;
+        let resid = actual as f64 - est;
+        // Attribute residual half to overhead, half to marginal cost.
+        self.alpha = (self.alpha + self.ema * resid * 0.5).max(0.0);
+        self.beta =
+            (self.beta + self.ema * resid * 0.5 / b as f64).max(1.0);
+    }
+
+    /// Per-event service capacity at batch size `b` (events/sec).
+    pub fn throughput(&self, b: usize) -> f64 {
+        b as f64 / (self.xi(b) as f64 / 1e6)
+    }
+
+    pub fn alpha_us(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn beta_us(&self) -> f64 {
+        self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::MS;
+
+    #[test]
+    fn paper_cr_calibration() {
+        let m = XiModel::affine_ms(52.5, 67.5);
+        assert_eq!(m.xi(1), 120 * MS);
+        assert!((m.xi(25) - 1740 * MS).abs() < MS);
+        // mu = 8.33 events/s at b=1 (paper §5.2.1)
+        assert!((m.throughput(1) - 8.33).abs() < 0.01);
+    }
+
+    #[test]
+    fn monotone_in_batch_size() {
+        let m = XiModel::affine_ms(20.0, 12.0);
+        for b in 1..64 {
+            assert!(m.xi(b) < m.xi(b + 1));
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_overhead() {
+        let m = XiModel::affine_ms(52.5, 67.5);
+        assert!(m.throughput(25) > 1.5 * m.throughput(1));
+    }
+
+    #[test]
+    fn fit_recovers_affine_model() {
+        let truth = XiModel::affine_ms(50.0, 70.0);
+        let samples: Vec<(usize, Micros)> =
+            [1, 2, 4, 8, 16, 25, 32].iter().map(|&b| (b, truth.xi(b))).collect();
+        let fit = XiModel::from_samples(&samples);
+        for b in [1, 5, 20, 32] {
+            let err = (fit.xi(b) - truth.xi(b)).abs();
+            assert!(err <= 2, "b={b} err={err}us");
+        }
+    }
+
+    #[test]
+    fn single_sample_fit_is_proportional() {
+        let fit = XiModel::from_samples(&[(4, 400)]);
+        assert_eq!(fit.xi(8), 800);
+    }
+
+    #[test]
+    fn ema_tracks_drift() {
+        let mut m = XiModel::affine_ms(50.0, 70.0).with_ema(0.3);
+        // Actual service got 2x slower.
+        for _ in 0..200 {
+            m.observe(10, 2 * (50 * MS + 70 * MS * 10));
+        }
+        let est = m.xi(10) as f64;
+        let target = 2.0 * (50.0 + 700.0) * MS as f64;
+        assert!((est - target).abs() / target < 0.15, "est {est}");
+    }
+
+    #[test]
+    fn ema_disabled_by_default() {
+        let mut m = XiModel::affine_ms(50.0, 70.0);
+        let before = m.xi(10);
+        m.observe(10, 10 * before);
+        assert_eq!(m.xi(10), before);
+    }
+}

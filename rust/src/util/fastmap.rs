@@ -1,0 +1,89 @@
+//! `HashMap` with a multiply-xor hasher for integer keys.
+//!
+//! The tuning hot path (per-event budget records, sink batch tracking,
+//! timeline buckets) is keyed by dense-ish integers; std's SipHash
+//! dominates those lookups. This is the same idea as `rustc-hash`'s
+//! FxHasher, implemented locally because the build is offline.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-xor hasher for integer-ish keys (not DoS-resistant — only
+/// used for internal, non-adversarial keys).
+#[derive(Default)]
+pub struct FastHasher {
+    state: u64,
+}
+
+const K: u64 = 0x517C_C1B7_2722_0A95;
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = (self.state.rotate_left(5) ^ b as u64)
+                .wrapping_mul(K);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.state = (self.state.rotate_left(5) ^ n).wrapping_mul(K);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_i64(&mut self, n: i64) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// Drop-in `HashMap` with the fast hasher.
+pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behaves_like_a_map() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for k in 0..1000u64 {
+            m.insert(k, (k * 3) as u32);
+        }
+        for k in 0..1000u64 {
+            assert_eq!(m.get(&k), Some(&((k * 3) as u32)));
+        }
+        assert_eq!(m.len(), 1000);
+        m.remove(&500);
+        assert!(!m.contains_key(&500));
+    }
+
+    #[test]
+    fn hashes_spread() {
+        // Dense keys must not collide into few buckets: sanity-check
+        // the low bits vary.
+        use std::hash::Hash;
+        let mut low = std::collections::HashSet::new();
+        for k in 0..256u64 {
+            let mut h = FastHasher::default();
+            k.hash(&mut h);
+            low.insert(h.finish() & 0xFF);
+        }
+        assert!(low.len() > 100, "only {} distinct low bytes", low.len());
+    }
+}

@@ -1,0 +1,135 @@
+//! Small shared utilities: virtual time, seeded RNG helpers, statistics,
+//! and the hand-rolled JSON codec (the build environment is offline, so
+//! `rand`/`serde_json` substitutes live here — see DESIGN.md).
+
+pub mod fastmap;
+pub mod json;
+pub mod rng;
+
+pub use fastmap::FastMap;
+pub use json::Json;
+pub use rng::Rng;
+
+/// Virtual (or wall) time in microseconds. All tuning math in the paper
+/// operates on timestamps; `i64` µs gives ±292k years of range and exact
+/// arithmetic for budget comparisons.
+pub type Micros = i64;
+
+/// One second in [`Micros`].
+pub const SEC: Micros = 1_000_000;
+/// One millisecond in [`Micros`].
+pub const MS: Micros = 1_000;
+
+/// Convert seconds (f64) to [`Micros`].
+pub fn secs(s: f64) -> Micros {
+    (s * SEC as f64).round() as Micros
+}
+
+/// Convert milliseconds (f64) to [`Micros`].
+pub fn millis(ms: f64) -> Micros {
+    (ms * MS as f64).round() as Micros
+}
+
+/// Convert [`Micros`] to f64 seconds (for reporting).
+pub fn to_secs(t: Micros) -> f64 {
+    t as f64 / SEC as f64
+}
+
+/// Build a deterministic [`Rng`] from a base seed and a subsystem salt,
+/// so experiment runs are exactly reproducible per subsystem.
+pub fn rng(seed: u64, salt: u64) -> Rng {
+    Rng::seed_from_u64(seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Percentile of a sorted slice (linear interpolation), `p` in `[0, 100]`.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Summary stats over an unsorted sample.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub count: usize,
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub mean: f64,
+}
+
+impl Stats {
+    pub fn from(mut xs: Vec<f64>) -> Self {
+        if xs.is_empty() {
+            return Self::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        Stats {
+            count: xs.len(),
+            min: xs[0],
+            p25: percentile(&xs, 25.0),
+            median: percentile(&xs, 50.0),
+            p75: percentile(&xs, 75.0),
+            p99: percentile(&xs, 99.0),
+            max: *xs.last().unwrap(),
+            mean,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions_round_trip() {
+        assert_eq!(secs(15.0), 15 * SEC);
+        assert_eq!(millis(120.0), 120 * MS);
+        assert!((to_secs(secs(3.25)) - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rng_is_deterministic_per_salt() {
+        let mut a = rng(7, 1);
+        let mut b = rng(7, 1);
+        let mut c = rng(7, 2);
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.median - 2.0).abs() < 1e-12);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_empty_is_default() {
+        let s = Stats::from(vec![]);
+        assert_eq!(s.count, 0);
+    }
+}

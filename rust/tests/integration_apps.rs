@@ -1,0 +1,102 @@
+//! Integration: the four Table-1 applications compose and run end to
+//! end on the DES engine, and their distinguishing characteristics show
+//! up in the outcomes.
+
+use anveshak::apps::{all, spec};
+use anveshak::config::{AppKind, BatchingKind, ExperimentConfig, TlKind};
+use anveshak::coordinator::des;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.num_cameras = 120;
+    c.workload.vertices = 120;
+    c.workload.edges = 330;
+    c.duration_secs = 120.0;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c
+}
+
+#[test]
+fn all_apps_run_and_track() {
+    for app in all() {
+        let mut cfg = base_cfg();
+        app.apply(&mut cfg, true);
+        let r = des::run(cfg);
+        assert!(r.summary.conserved(), "{}: {:?}", app.name, r.summary);
+        assert!(
+            r.detections > 0,
+            "{} never detected the entity: {:?}",
+            app.name,
+            r.summary
+        );
+        assert!(
+            r.summary.on_time > 0,
+            "{}: nothing on time",
+            app.name
+        );
+    }
+}
+
+#[test]
+fn app2_cr_is_heavier_than_app1() {
+    // Same workload; App 2's CR is ~63% slower per frame, so its CR
+    // batches take longer and the median latency rises.
+    let mut c1 = base_cfg();
+    spec(AppKind::App1).apply(&mut c1, false); // keep TL identical (Bfs)
+    let mut c2 = base_cfg();
+    spec(AppKind::App2).apply(&mut c2, false);
+    let r1 = des::run(c1);
+    let r2 = des::run(c2);
+    let x1 = r1.summary.latency.median;
+    let x2 = r2.summary.latency.median;
+    assert!(
+        x2 > x1,
+        "App2 median {x2:.2}s should exceed App1 {x1:.2}s"
+    );
+}
+
+#[test]
+fn app3_tracks_fast_vehicles() {
+    let mut cfg = base_cfg();
+    spec(AppKind::App3).apply(&mut cfg, true);
+    assert!(cfg.workload.entity_speed_mps >= 8.0);
+    assert_eq!(cfg.tl, TlKind::WbfsSpeed);
+    let r = des::run(cfg);
+    assert!(r.summary.conserved());
+    // A vehicle crosses FOVs fast: fewer positive frames, but the
+    // speed-aware spotlight must still reacquire it.
+    assert!(r.detections > 0, "{:?}", r.summary);
+}
+
+#[test]
+fn app4_probabilistic_tl_bounds_active_set() {
+    let mut cfg = base_cfg();
+    spec(AppKind::App4).apply(&mut cfg, true);
+    let r = des::run(cfg);
+    assert!(r.detections > 0);
+    // The 90%-mass likelihood spotlight never needs the whole network.
+    assert!(
+        r.peak_active < cfg_peak_bound(),
+        "peak {} too large",
+        r.peak_active
+    );
+}
+
+fn cfg_peak_bound() -> usize {
+    120 // the full (small) network
+}
+
+#[test]
+fn tl_knob_orders_work_done() {
+    // Base >> BFS >= WBFS in frames processed (the scalability knob).
+    let mk = |tl| {
+        let mut c = base_cfg();
+        c.tl = tl;
+        des::run(c).summary.generated
+    };
+    let base = mk(TlKind::Base);
+    let bfs = mk(TlKind::Bfs);
+    let wbfs = mk(TlKind::Wbfs);
+    assert!(base > 3 * bfs, "base {base} vs bfs {bfs}");
+    assert!(wbfs <= bfs, "wbfs {wbfs} vs bfs {bfs}");
+}

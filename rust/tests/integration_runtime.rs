@@ -1,0 +1,160 @@
+//! Integration: AOT artifacts load + execute on the PJRT CPU client and
+//! reproduce the Python models' semantics (identity separation, query
+//! bootstrap, batch-bucket padding). Requires `make artifacts`.
+
+use anveshak::runtime::ModelPool;
+use anveshak::sim::{identity_image, FEAT_DIM, IMG_DIM};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts"
+    ))
+}
+
+fn pool(variants: &[&str], buckets: &[usize]) -> ModelPool {
+    ModelPool::load(&artifacts_dir(), variants, Some(buckets))
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    dot / (na * nb).max(1e-9)
+}
+
+#[test]
+fn va_model_executes_and_scores() {
+    let p = pool(&["va"], &[1, 4]);
+    assert_eq!(p.img_dim(), IMG_DIM);
+    assert_eq!(p.feat_dim(), FEAT_DIM);
+
+    // Bootstrap the query embedding from identity 42's image.
+    let qimg = identity_image(42, 0, 0.25);
+    let qemb = p.embed_query("va", &qimg).unwrap();
+    assert_eq!(qemb.len(), FEAT_DIM);
+
+    // Batch: two frames of identity 42, two of other identities.
+    let mut images = Vec::new();
+    for (ident, frame) in [(42, 1), (42, 2), (7, 1), (99, 1)] {
+        images.extend(identity_image(ident, frame, 0.25));
+    }
+    let out = p.execute("va", &images, &qemb).unwrap();
+    assert_eq!(out.scores.len(), 4);
+    assert_eq!(out.embeddings.len(), 4 * FEAT_DIM);
+    assert!(
+        out.scores[0] > 0.7 && out.scores[1] > 0.7,
+        "positives {:?}",
+        out.scores
+    );
+    assert!(
+        out.scores[2] < 0.5 && out.scores[3] < 0.5,
+        "negatives {:?}",
+        out.scores
+    );
+}
+
+#[test]
+fn cr_models_separate_identities() {
+    for variant in ["cr_small", "cr_large"] {
+        let p = pool(&[variant], &[1, 4]);
+        let qemb = p
+            .embed_query(variant, &identity_image(11, 0, 0.25))
+            .unwrap();
+        let mut images = Vec::new();
+        for (ident, frame) in [(11, 5), (23, 5)] {
+            images.extend(identity_image(ident, frame, 0.25));
+        }
+        let out = p.execute(variant, &images, &qemb).unwrap();
+        assert!(
+            out.scores[0] > out.scores[1] + 0.3,
+            "{variant}: {:?}",
+            out.scores
+        );
+    }
+}
+
+#[test]
+fn bucket_padding_is_transparent() {
+    let p = pool(&["va"], &[1, 4, 8]);
+    let qemb = p.embed_query("va", &identity_image(1, 0, 0.25)).unwrap();
+
+    // Batch of 3 -> bucket 4; batch of 5 -> bucket 8. Scores for the
+    // same frames must agree regardless of padding.
+    let frames: Vec<Vec<f32>> =
+        (0..5).map(|f| identity_image(1, f, 0.25)).collect();
+    let b3: Vec<f32> = frames[..3].concat();
+    let b5: Vec<f32> = frames.concat();
+    let o3 = p.execute("va", &b3, &qemb).unwrap();
+    let o5 = p.execute("va", &b5, &qemb).unwrap();
+    assert_eq!(o3.scores.len(), 3);
+    assert_eq!(o5.scores.len(), 5);
+    for i in 0..3 {
+        assert!(
+            (o3.scores[i] - o5.scores[i]).abs() < 1e-4,
+            "score {i}: {} vs {}",
+            o3.scores[i],
+            o5.scores[i]
+        );
+    }
+}
+
+#[test]
+fn embeddings_cluster_by_identity() {
+    let p = pool(&["cr_small"], &[4]);
+    let q = vec![0f32; FEAT_DIM];
+    let mut images = Vec::new();
+    for (ident, frame) in [(5, 0), (5, 1), (9, 0), (9, 1)] {
+        images.extend(identity_image(ident, frame, 0.25));
+    }
+    let out = p.execute("cr_small", &images, &q).unwrap();
+    let e: Vec<&[f32]> = out.embeddings.chunks(FEAT_DIM).collect();
+    let same_a = cosine(e[0], e[1]);
+    let same_b = cosine(e[2], e[3]);
+    let cross = cosine(e[0], e[2]);
+    assert!(same_a > 0.8, "same_a {same_a}");
+    assert!(same_b > 0.8, "same_b {same_b}");
+    assert!(cross < 0.5, "cross {cross}");
+}
+
+#[test]
+fn xi_calibration_monotone() {
+    let p = pool(&["cr_small"], &[1, 8, 32]);
+    let (xi, samples) = p.calibrate_xi("cr_small", 3).unwrap();
+    assert_eq!(samples.len(), 3);
+    // Larger buckets take longer in absolute terms...
+    assert!(samples[2].1 > samples[0].1, "{samples:?}");
+    // ...and the fitted model is monotone.
+    assert!(xi.xi(32) > xi.xi(1));
+    // Batching amortizes the PJRT invocation overhead.
+    let per_event_1 = samples[0].1 as f64;
+    let per_event_32 = samples[2].1 as f64 / 32.0;
+    assert!(
+        per_event_32 < per_event_1,
+        "batch-32 per-event {per_event_32} vs solo {per_event_1}"
+    );
+}
+
+#[test]
+fn zero_query_disables_score_head() {
+    let p = pool(&["va"], &[1]);
+    let q = vec![0f32; FEAT_DIM];
+    let out = p.execute("va", &identity_image(3, 0, 0.25), &q).unwrap();
+    assert!(out.scores[0].abs() < 1e-4, "{}", out.scores[0]);
+}
+
+#[test]
+fn bad_inputs_are_errors() {
+    let p = pool(&["va"], &[1]);
+    let q = vec![0f32; FEAT_DIM];
+    // Wrong image length.
+    assert!(p.execute("va", &vec![0f32; 100], &q).is_err());
+    // Wrong query length.
+    let img = identity_image(1, 0, 0.25);
+    assert!(p.execute("va", &img, &vec![0f32; 3]).is_err());
+    // Unknown variant.
+    assert!(p.execute("nope", &img, &q).is_err());
+    // Empty batch.
+    assert!(p.execute("va", &[], &q).is_err());
+}
