@@ -1,0 +1,80 @@
+//! Multi-query service bench: engine throughput and per-query latency
+//! vs. the number of concurrent queries sharing the deployment.
+//!
+//! Runs the multi-query DES mode with 1, 4 and 8 concurrent queries on
+//! the same camera network and reports aggregate event throughput
+//! (simulated events per wall-clock second of engine time), on-time
+//! rate and latency percentiles — the scaling story the service layer
+//! exists to tell. Run via `cargo bench --bench multi_query`.
+//! (Hand-rolled harness; the offline build has no criterion.)
+
+use std::time::Instant;
+
+use anveshak::config::ExperimentConfig;
+use anveshak::coordinator::des::run_multi;
+
+fn cfg_for(concurrent: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("mq-bench-{concurrent}");
+    // A mid-size network keeps the bench quick while still exercising
+    // cross-query batching on shared workers.
+    cfg.num_cameras = 300;
+    cfg.workload.vertices = 300;
+    cfg.workload.edges = 840;
+    // All queries arrive (nearly) together and live the whole window,
+    // so `concurrent` is the steady-state multiprogramming level.
+    cfg.multi_query.num_queries = concurrent;
+    cfg.multi_query.mean_interarrival_secs = 0.5;
+    cfg.multi_query.lifetime_secs = 120.0;
+    cfg.multi_query.max_active = concurrent.max(1);
+    cfg.multi_query.max_active_cameras = 10_000;
+    cfg.multi_query.queue_capacity = concurrent;
+    cfg
+}
+
+fn main() {
+    println!(
+        "{:<12} {:>8} {:>12} {:>10} {:>9} {:>9} {:>9} {:>7}",
+        "concurrent",
+        "events",
+        "events/s(w)",
+        "on-time%",
+        "median-s",
+        "p99-s",
+        "drop%",
+        "wall-s"
+    );
+    for concurrent in [1usize, 4, 8] {
+        let cfg = cfg_for(concurrent);
+        let start = Instant::now();
+        let r = run_multi(cfg);
+        let wall = start.elapsed().as_secs_f64();
+        let s = &r.aggregate;
+        let done = s.on_time + s.delayed;
+        let throughput = if wall > 0.0 {
+            done as f64 / wall
+        } else {
+            0.0
+        };
+        let on_time_pct = if s.generated > 0 {
+            100.0 * s.on_time as f64 / s.generated as f64
+        } else {
+            0.0
+        };
+        println!(
+            "{:<12} {:>8} {:>12.0} {:>9.1}% {:>9.2} {:>9.2} {:>8.1}% {:>7.2}",
+            concurrent,
+            s.generated,
+            throughput,
+            on_time_pct,
+            s.latency.median,
+            s.latency.p99,
+            100.0 * s.drop_rate(),
+            wall
+        );
+        assert_eq!(
+            r.peak_concurrent, concurrent,
+            "bench config should reach the target concurrency"
+        );
+    }
+}

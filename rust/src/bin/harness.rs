@@ -5,6 +5,9 @@
 //!   harness all                 # every figure, results into ./results
 //!   harness fig7 fig9           # selected figures
 //!   harness table1              # app compositions
+//!   harness mq                  # multi-query service run (beyond the
+//!                               # paper: concurrent queries over the
+//!                               # shared 1000-camera deployment)
 //!   harness --out DIR figN ...  # custom output directory
 //!
 //! Each figure writes CSV series under the output directory and prints
@@ -28,7 +31,7 @@ fn main() {
     }
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12 ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq ..."
         );
         std::process::exit(2);
     }
@@ -64,6 +67,9 @@ fn main() {
     }
     if want("fig12") {
         fig12(&out_dir, &mut cache);
+    }
+    if want("mq") {
+        multi_query(&out_dir);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -344,6 +350,97 @@ fn fig11(out: &Path, cache: &mut BTreeMap<String, RunResult>) {
         100.0 * nod.drop_rate(),
         100.0 * wd.drop_rate()
     );
+}
+
+/// Multi-query service run (beyond the paper): 12 queries arrive as a
+/// Poisson process over the 1000-camera roadnet and are multiplexed
+/// over the shared VA/CR deployment with admission control and
+/// fair-share batching; ≥8 run concurrently at peak. Prints per-query
+/// recall/latency rows from the per-query ledgers.
+fn multi_query(out: &Path) {
+    use anveshak::config::ExperimentConfig;
+    use anveshak::coordinator::des::run_multi;
+
+    println!("\n== Multi-query service: 1000-camera roadnet ==");
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "mq".into();
+    cfg.multi_query.num_queries = 12;
+    cfg.multi_query.mean_interarrival_secs = 20.0;
+    cfg.multi_query.lifetime_secs = 300.0;
+    cfg.multi_query.max_active = 16;
+    cfg.multi_query.max_active_cameras = 8_000;
+    cfg.multi_query.queue_capacity = 8;
+
+    eprintln!("[run] mq ...");
+    let start = std::time::Instant::now();
+    let r = run_multi(cfg);
+    eprintln!(
+        "[run] mq done in {:.1}s (events: {}, peak concurrent: {})",
+        start.elapsed().as_secs_f64(),
+        r.aggregate.generated,
+        r.peak_concurrent
+    );
+
+    let mut j = Vec::new();
+    println!(
+        "  {:<6} {:<4} {:<10} {:>8} {:>8} {:>8} {:>7} {:>9} {:>9} {:>6}",
+        "query", "prio", "status", "gen", "on-time", "dropped",
+        "recall", "median-s", "p99-s", "cams"
+    );
+    for q in &r.queries {
+        let (gen, on_time, dropped, median, p99) = match &q.summary {
+            Some(s) => (
+                s.generated,
+                s.on_time,
+                s.dropped,
+                s.latency.median,
+                s.latency.p99,
+            ),
+            None => (0, 0, 0, 0.0, 0.0),
+        };
+        println!(
+            "  {:<6} {:<4} {:<10} {:>8} {:>8} {:>8} {:>6.1}% {:>9.2} {:>9.2} {:>6}",
+            q.label,
+            q.priority,
+            format!("{:?}", q.status),
+            gen,
+            on_time,
+            dropped,
+            100.0 * q.recall(),
+            median,
+            p99,
+            q.peak_active
+        );
+        j.push(obj([
+            ("label", q.label.as_str().into()),
+            ("priority", (q.priority as i64).into()),
+            ("status", format!("{:?}", q.status).as_str().into()),
+            ("generated", (gen as i64).into()),
+            ("on_time", (on_time as i64).into()),
+            ("dropped", (dropped as i64).into()),
+            ("recall", q.recall().into()),
+            ("median_latency_s", median.into()),
+            ("p99_latency_s", p99.into()),
+            ("peak_active_cams", q.peak_active.into()),
+        ]));
+    }
+    let agg = &r.aggregate;
+    println!(
+        "  peak concurrent queries: {} | aggregate: gen {} on-time {} delayed {} dropped {} | conserved: {}",
+        r.peak_concurrent,
+        agg.generated,
+        agg.on_time,
+        agg.delayed,
+        agg.dropped,
+        agg.conserved()
+    );
+    let doc = obj([
+        ("peak_concurrent", r.peak_concurrent.into()),
+        ("rejected", (r.rejected as i64).into()),
+        ("queued", (r.queued as i64).into()),
+        ("queries", Json::Arr(j)),
+    ]);
+    std::fs::write(out.join("mq.json"), doc.to_string()).unwrap();
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

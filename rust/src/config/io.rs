@@ -94,6 +94,33 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ),
             ]),
         ),
+        (
+            "multi_query",
+            obj([
+                ("num_queries", c.multi_query.num_queries.into()),
+                (
+                    "mean_interarrival_secs",
+                    c.multi_query.mean_interarrival_secs.into(),
+                ),
+                (
+                    "lifetime_secs",
+                    c.multi_query.lifetime_secs.into(),
+                ),
+                ("max_active", c.multi_query.max_active.into()),
+                (
+                    "max_active_cameras",
+                    c.multi_query.max_active_cameras.into(),
+                ),
+                (
+                    "queue_capacity",
+                    c.multi_query.queue_capacity.into(),
+                ),
+                (
+                    "priority_levels",
+                    (c.multi_query.priority_levels as usize).into(),
+                ),
+            ]),
+        ),
     ])
 }
 
@@ -187,6 +214,26 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         set_f64(v, "mean_road_m", &mut c.workload.mean_road_m);
         set_f64(v, "fov_m", &mut c.workload.fov_m);
         set_f64(v, "entity_speed_mps", &mut c.workload.entity_speed_mps);
+    }
+    if let Some(v) = j.get("multi_query") {
+        set_usize(v, "num_queries", &mut c.multi_query.num_queries);
+        set_f64(
+            v,
+            "mean_interarrival_secs",
+            &mut c.multi_query.mean_interarrival_secs,
+        );
+        set_f64(v, "lifetime_secs", &mut c.multi_query.lifetime_secs);
+        set_usize(v, "max_active", &mut c.multi_query.max_active);
+        set_usize(
+            v,
+            "max_active_cameras",
+            &mut c.multi_query.max_active_cameras,
+        );
+        set_usize(v, "queue_capacity", &mut c.multi_query.queue_capacity);
+        if let Some(p) = v.get("priority_levels").and_then(Json::as_usize)
+        {
+            c.multi_query.priority_levels = p.min(255) as u8;
+        }
     }
     Ok(c)
 }
@@ -304,6 +351,29 @@ mod tests {
         assert!(config_from_json(r#"{"tl": "magic"}"#).is_err());
         assert!(
             config_from_json(r#"{"batching": {"kind": "wild"}}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn multi_query_round_trips() {
+        let mut c = ExperimentConfig::default();
+        c.multi_query.num_queries = 12;
+        c.multi_query.max_active = 5;
+        c.multi_query.priority_levels = 4;
+        c.multi_query.mean_interarrival_secs = 7.5;
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert_eq!(c2.multi_query.num_queries, 12);
+        assert_eq!(c2.multi_query.max_active, 5);
+        assert_eq!(c2.multi_query.priority_levels, 4);
+        assert!(
+            (c2.multi_query.mean_interarrival_secs - 7.5).abs() < 1e-9
+        );
+        // Omitting the section keeps the defaults.
+        let c3 = config_from_json("{}").unwrap();
+        assert_eq!(
+            c3.multi_query.queue_capacity,
+            MultiQueryConfig::default().queue_capacity
         );
     }
 

@@ -212,6 +212,42 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Multi-query service parameters: how many concurrent tracking
+/// queries arrive, how they arrive, and the admission-control limits
+/// protecting the shared VA/CR workers (see [`crate::service`]).
+#[derive(Debug, Clone)]
+pub struct MultiQueryConfig {
+    /// Total queries submitted over the run.
+    pub num_queries: usize,
+    /// Mean gap of the Poisson arrival process (seconds).
+    pub mean_interarrival_secs: f64,
+    /// Tracking window of each query once activated (seconds).
+    pub lifetime_secs: f64,
+    /// Admission: maximum concurrently active queries.
+    pub max_active: usize,
+    /// Admission: maximum aggregate active-camera set across queries.
+    pub max_active_cameras: usize,
+    /// Admission: capacity of the wait queue before outright rejection.
+    pub queue_capacity: usize,
+    /// Priorities cycle `1..=priority_levels` across arriving queries;
+    /// the fair-share scheduler weights batch slots by priority.
+    pub priority_levels: u8,
+}
+
+impl Default for MultiQueryConfig {
+    fn default() -> Self {
+        Self {
+            num_queries: 8,
+            mean_interarrival_secs: 20.0,
+            lifetime_secs: 240.0,
+            max_active: 16,
+            max_active_cameras: 4_000,
+            queue_capacity: 8,
+            priority_levels: 3,
+        }
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -244,6 +280,9 @@ pub struct ExperimentConfig {
     pub service: ServiceConfig,
     pub semantics: SemanticsConfig,
     pub workload: WorkloadConfig,
+    /// Multi-query service parameters (used by the `service` layer and
+    /// the engines' multi-query modes; ignored by single-query runs).
+    pub multi_query: MultiQueryConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -268,6 +307,7 @@ impl Default for ExperimentConfig {
             service: ServiceConfig::default(),
             semantics: SemanticsConfig::default(),
             workload: WorkloadConfig::default(),
+            multi_query: MultiQueryConfig::default(),
         }
     }
 }

@@ -21,9 +21,8 @@ use crate::roadnet::{generate, place_cameras, Graph};
 use crate::sim::{ClockSkews, EntityWalk, GroundTruth, NetModel};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
-    drop_before_exec, drop_before_queue, drop_before_transmit, Batcher,
-    BatcherPoll, BudgetManager, EventRecord, NobTable, QueuedEvent, Signal,
-    XiModel,
+    drop_at_exec, drop_at_queue, drop_at_transmit, Batcher, BatcherPoll,
+    BudgetManager, EventRecord, NobTable, QueuedEvent, Signal, XiModel,
 };
 use crate::util::{millis, rng, Micros, Rng, SEC};
 
@@ -390,7 +389,7 @@ impl DesEngine {
         if self.cfg.drops_enabled {
             let budget = self.fc_budget[cam].budget_max();
             if budget < BUDGET_INF
-                && drop_before_queue(0, self.fc_xi.xi(1), budget)
+                && drop_at_queue(false, 0, self.fc_xi.xi(1), budget)
             {
                 self.record_drop(cam, id, Stage::Fc, 0, self.fc_xi.xi(1));
                 return;
@@ -448,10 +447,10 @@ impl DesEngine {
                     .topo
                     .downstream_slot(task, ev.header.camera);
                 let budget = self.tasks[task].budget.budget_for(slot);
-                if self.cfg.drops_enabled && !exempt {
+                if self.cfg.drops_enabled {
                     let xi1 = self.tasks[task].xi.xi(1);
                     if budget < BUDGET_INF
-                        && drop_before_queue(u, xi1, budget)
+                        && drop_at_queue(exempt, u, xi1, budget)
                     {
                         let eps = (u + xi1) - budget;
                         self.drop_event(task, &ev, eps);
@@ -521,8 +520,7 @@ impl DesEngine {
                             let exempt = qe.item.header.avoid_drop
                                 || qe.item.header.probe;
                             if budget < BUDGET_INF
-                                && !exempt
-                                && drop_before_exec(u, q, xib, budget)
+                                && drop_at_exec(exempt, u, q, xib, budget)
                             {
                                 let eps = (u + q + xib) - budget;
                                 self.drop_event(task, &qe.item, eps);
@@ -615,10 +613,10 @@ impl DesEngine {
 
             // Drop point 3 (per-downstream budget).
             let exempt = ev.header.avoid_drop || ev.header.probe;
-            if self.cfg.drops_enabled && !exempt {
+            if self.cfg.drops_enabled {
                 let budget = self.tasks[task].budget.budget_for(slot);
                 if budget < BUDGET_INF
-                    && drop_before_transmit(u, pi, budget)
+                    && drop_at_transmit(exempt, u, pi, budget)
                 {
                     let eps = (u + pi) - budget;
                     self.drop_event(task, &ev, eps);
@@ -957,6 +955,17 @@ impl DesEngine {
 /// Convenience: run a config end to end.
 pub fn run(cfg: ExperimentConfig) -> RunResult {
     DesEngine::new(cfg).run()
+}
+
+/// Multi-query experiment mode: N tracking queries arriving as a
+/// Poisson process (per `cfg.multi_query`), multiplexed over the shared
+/// VA/CR deployment with admission control and fair-share batching.
+/// See [`crate::service::engine`] for the engine itself.
+pub fn run_multi(
+    cfg: ExperimentConfig,
+) -> crate::service::MultiQueryResult {
+    let mq = cfg.multi_query.clone();
+    crate::service::engine::run(cfg, mq)
 }
 
 #[cfg(test)]

@@ -1,13 +1,19 @@
 //! Live engine: wall-clock, thread-based serving with real PJRT model
 //! execution — Python is nowhere on this path.
 //!
-//! Workers are OS threads connected by channels (the in-process stand-in
-//! for the paper's ZeroMQ/SysV transport): camera feeds → VA workers →
+//! Workers are OS threads connected by std `mpsc` channels (the
+//! in-process stand-in for the paper's ZeroMQ/SysV transport; an async
+//! transport is a planned follow-up — this is **not** a tokio engine,
+//! despite what earlier crate docs said): camera feeds → VA workers →
 //! CR workers → UV sink, with TL consuming CR detections and flipping
 //! per-camera active flags. VA/CR workers run the *same* [`Batcher`],
 //! drop-point and [`BudgetManager`] logic as the DES engine, but against
 //! the real clock and the real AOT-compiled models from
 //! [`crate::runtime::ModelPool`].
+//!
+//! This engine serves exactly one query. The runtime multi-query
+//! service front — shared workers, admission control, submit/cancel
+//! while serving — is [`crate::service::TrackingService`].
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -25,8 +31,8 @@ use crate::runtime::{ModelOutput, ModelPool};
 use crate::sim::{identity_image, EntityWalk, GroundTruth};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
-    drop_before_exec, drop_before_queue, Batcher, BatcherPoll,
-    BudgetManager, EventRecord, NobTable, QueuedEvent, Signal, XiModel,
+    drop_at_exec, drop_at_queue, Batcher, BatcherPoll, BudgetManager,
+    EventRecord, NobTable, QueuedEvent, Signal, XiModel,
 };
 use crate::util::{Micros, SEC};
 
@@ -615,10 +621,10 @@ fn handle_msg(w: &mut Worker, msg: Msg, sh: &Arc<Shared>) -> bool {
             let now = now_us(sh.start);
             let u = now - ev.header.src_arrival;
             let exempt = ev.header.avoid_drop || ev.header.probe;
-            if sh.drops_enabled && !exempt {
+            if sh.drops_enabled {
                 let budget = w.budget.budget_max();
                 if budget < BUDGET_INF
-                    && drop_before_queue(u, w.xi.xi(1), budget)
+                    && drop_at_queue(exempt, u, w.xi.xi(1), budget)
                 {
                     sh.ledger
                         .lock()
@@ -668,7 +674,7 @@ fn exec_batch(
                 let q = start - qe.arrival;
                 let exempt =
                     qe.item.header.avoid_drop || qe.item.header.probe;
-                if !exempt && drop_before_exec(u, q, xib, budget) {
+                if drop_at_exec(exempt, u, q, xib, budget) {
                     sh.ledger
                         .lock()
                         .unwrap()

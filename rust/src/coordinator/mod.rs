@@ -3,8 +3,12 @@
 //! the same module and tuning logic:
 //!
 //! * [`des`] — virtual-time discrete-event engine (experiment harness),
+//!   with a multi-query mode ([`des::run_multi`]) multiplexing many
+//!   queries over the shared deployment;
 //! * [`live`] — wall-clock, thread-based engine with real PJRT model
-//!   execution (serving examples).
+//!   execution (serving examples). Its multi-query counterpart, the
+//!   runtime-submission service front, lives in
+//!   [`crate::service::TrackingService`].
 
 pub mod des;
 pub mod live;

@@ -13,11 +13,26 @@ use crate::util::Micros;
 
 pub type EventId = u64;
 
+/// Identifier of the tracking query an event belongs to.
+///
+/// The seed platform ran exactly one query per process; the service
+/// layer ([`crate::service`]) multiplexes many concurrent queries over
+/// the shared VA/CR workers, so every event is tagged with its query —
+/// batches may mix events of different queries (cross-query batching)
+/// while budgets, drops and ledgers stay per-query.
+pub type QueryId = u32;
+
+/// The query id used by all single-query engines and tests.
+pub const SINGLE_QUERY: QueryId = 0;
+
 /// Provenance and tuning metadata carried by every event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Header {
     /// Source event id `k`; all causal downstream events share it.
     pub id: EventId,
+    /// The tracking query this event serves ([`SINGLE_QUERY`] in
+    /// single-query mode).
+    pub query: QueryId,
     /// Key: the originating camera.
     pub camera: usize,
     /// Frame number at that camera.
@@ -46,6 +61,7 @@ impl Header {
     ) -> Self {
         Self {
             id,
+            query: SINGLE_QUERY,
             camera,
             frame_no,
             src_arrival,
@@ -55,6 +71,12 @@ impl Header {
             avoid_drop: false,
             probe: false,
         }
+    }
+
+    /// Tag the header with the query it serves (builder-style).
+    pub fn with_query(mut self, query: QueryId) -> Self {
+        self.query = query;
+        self
     }
 }
 
@@ -119,6 +141,12 @@ mod tests {
     fn header_propagates_source_arrival() {
         let e = Event::frame(7, 3, 0, 123456, true);
         assert_eq!(e.header.id, 7);
+        assert_eq!(e.header.query, SINGLE_QUERY);
+        assert_eq!(
+            e.header.with_query(4).query,
+            4,
+            "query tag is builder-assignable"
+        );
         assert_eq!(e.header.src_arrival, 123456);
         assert_eq!(e.header.captured, 123456);
         assert_eq!(e.header.sum_exec, 0);

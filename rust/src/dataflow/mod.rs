@@ -11,6 +11,8 @@ mod event;
 mod partition;
 mod stage;
 
-pub use event::{Event, EventId, Header, Payload};
+pub use event::{
+    Event, EventId, Header, Payload, QueryId, SINGLE_QUERY,
+};
 pub use partition::Partitioner;
 pub use stage::Stage;

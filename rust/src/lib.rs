@@ -21,8 +21,39 @@
 //! * [`coordinator::des`] — a virtual-time discrete-event engine used by
 //!   the experiment harness to regenerate every figure of the paper's
 //!   evaluation in seconds instead of 600-second wall-clock runs.
-//! * [`coordinator::live`] — a tokio engine with real clocks and real
-//!   PJRT model execution, used by the serving examples.
+//! * [`coordinator::live`] — a wall-clock engine built on std threads
+//!   and mpsc channels (an async/tokio transport is a planned follow-up;
+//!   earlier docs called this "a tokio engine" prematurely) with real
+//!   PJRT model execution, used by the serving examples. The PJRT
+//!   runtime is gated behind the `pjrt` cargo feature; without it a
+//!   stub reports a clear error and everything else builds and tests
+//!   green.
+//!
+//! ## The multi-query service layer
+//!
+//! The seed ran **one** tracking query per process. [`service`] turns
+//! the platform into a multi-tenant system, mapping many logical
+//! single-query dataflows onto one physical deployment:
+//!
+//! ```text
+//!   submit/cancel ──► QueryRegistry ──► AdmissionController
+//!                          │                (admit / queue / reject)
+//!                          ▼
+//!                  per-query TL spotlights ──union──► camera activation
+//!                          │
+//!          events tagged with QueryId ([`dataflow::Header`])
+//!                          ▼
+//!        shared VA/CR workers, FairShareBatcher per executor
+//!        (cross-query batches, weighted deficit round robin)
+//!                          ▼
+//!        per-query budgets/drops ([`tuning`]) + per-query ledgers
+//!        ([`metrics::QueryLedgers`]) ──► per-query recall/latency
+//! ```
+//!
+//! Both engines expose a multi-query mode: [`coordinator::des::run_multi`]
+//! (Poisson query arrivals over the road network; used by `harness mq`
+//! and the `multi_query` bench/example) and [`service::TrackingService`]
+//! (runtime submit/cancel over shared wall-clock workers).
 
 pub mod apps;
 pub mod config;
@@ -31,6 +62,7 @@ pub mod dataflow;
 pub mod metrics;
 pub mod roadnet;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tuning;
 pub mod util;

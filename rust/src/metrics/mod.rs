@@ -1,8 +1,11 @@
-//! Metrics: the per-event ledger and the 1-second timeline aggregation
-//! that back every figure in the paper's evaluation.
+//! Metrics: the per-event ledger, the 1-second timeline aggregation
+//! that back every figure in the paper's evaluation, and the per-query
+//! ledger set used by the multi-query service layer.
 
 mod ledger;
+mod multi;
 mod timeline;
 
 pub use ledger::{Ledger, Outcome, Summary};
+pub use multi::QueryLedgers;
 pub use timeline::{Timeline, TimelineRow};

@@ -1,0 +1,134 @@
+//! Per-query ledgers for the multi-query service layer.
+//!
+//! Each admitted tracking query gets its own [`Ledger`], so conservation
+//! and recall/latency statistics hold *per query* even though all
+//! queries share the same VA/CR workers. A global mirror ledger backs
+//! aggregate (whole-service) summaries without merging latency samples.
+
+use crate::dataflow::{QueryId, Stage};
+use crate::metrics::{Ledger, Summary};
+use crate::util::{FastMap, Micros};
+
+/// One [`Ledger`] per query plus a global aggregate mirror.
+#[derive(Debug, Default)]
+pub struct QueryLedgers {
+    per: FastMap<QueryId, Ledger>,
+    /// First-seen registration order, for stable reporting.
+    order: Vec<QueryId>,
+    global: Ledger,
+}
+
+impl QueryLedgers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ledger_mut(&mut self, q: QueryId) -> &mut Ledger {
+        if !self.per.contains_key(&q) {
+            self.per.insert(q, Ledger::new());
+            self.order.push(q);
+        }
+        self.per.get_mut(&q).expect("just inserted")
+    }
+
+    /// A source event for query `q` entered the dataflow.
+    pub fn generated(&mut self, q: QueryId, id: u64, entity_present: bool) {
+        self.ledger_mut(q).generated(id, entity_present);
+        self.global.generated(id, entity_present);
+    }
+
+    /// Query `q`'s event reached the sink.
+    pub fn completed(
+        &mut self,
+        q: QueryId,
+        id: u64,
+        latency: Micros,
+        gamma: Micros,
+        detected: bool,
+    ) {
+        self.ledger_mut(q).completed(id, latency, gamma, detected);
+        self.global.completed(id, latency, gamma, detected);
+    }
+
+    /// Query `q`'s event was dropped at `stage`.
+    pub fn dropped(&mut self, q: QueryId, id: u64, stage: Stage) {
+        self.ledger_mut(q).dropped(id, stage);
+        self.global.dropped(id, stage);
+    }
+
+    /// Summary for one query (None if the query never generated events).
+    pub fn summary(&self, q: QueryId) -> Option<Summary> {
+        self.per.get(&q).map(Ledger::summary)
+    }
+
+    /// Per-query summaries in first-seen order.
+    pub fn summaries(&self) -> Vec<(QueryId, Summary)> {
+        self.order
+            .iter()
+            .map(|&q| (q, self.per[&q].summary()))
+            .collect()
+    }
+
+    /// Whole-service aggregate summary.
+    pub fn aggregate(&self) -> Summary {
+        self.global.summary()
+    }
+
+    /// Number of queries that generated at least one event.
+    pub fn num_queries(&self) -> usize {
+        self.order.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SEC;
+
+    #[test]
+    fn per_query_isolation_and_aggregate() {
+        let mut ql = QueryLedgers::new();
+        // Interleaved ids across two queries (ids are globally dense).
+        ql.generated(1, 0, true);
+        ql.generated(2, 1, false);
+        ql.generated(1, 2, true);
+        ql.completed(1, 0, SEC, 15 * SEC, true);
+        ql.dropped(1, 2, Stage::Cr);
+        ql.completed(2, 1, 20 * SEC, 15 * SEC, false);
+
+        let s1 = ql.summary(1).unwrap();
+        assert_eq!(s1.generated, 2);
+        assert_eq!(s1.on_time, 1);
+        assert_eq!(s1.dropped, 1);
+        assert_eq!(s1.true_positives, 1);
+        assert!(s1.conserved());
+
+        let s2 = ql.summary(2).unwrap();
+        assert_eq!(s2.generated, 1);
+        assert_eq!(s2.delayed, 1);
+        assert!(s2.conserved());
+
+        let agg = ql.aggregate();
+        assert_eq!(agg.generated, 3);
+        assert_eq!(agg.on_time + agg.delayed + agg.dropped, 3);
+        assert!(agg.conserved());
+        assert_eq!(ql.num_queries(), 2);
+    }
+
+    #[test]
+    fn summaries_in_first_seen_order() {
+        let mut ql = QueryLedgers::new();
+        ql.generated(7, 0, false);
+        ql.generated(3, 1, false);
+        ql.generated(7, 2, false);
+        let ids: Vec<QueryId> =
+            ql.summaries().iter().map(|&(q, _)| q).collect();
+        assert_eq!(ids, vec![7, 3]);
+    }
+
+    #[test]
+    fn unknown_query_has_no_summary() {
+        let ql = QueryLedgers::new();
+        assert!(ql.summary(9).is_none());
+    }
+}

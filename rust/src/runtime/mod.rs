@@ -5,8 +5,18 @@
 //! DESIGN.md and /opt/xla-example/README.md for why text, not proto) and
 //! the model weights arrive through `weights.bin`, uploaded once as
 //! device buffers.
+//!
+//! The PJRT-backed [`ModelPool`] is gated behind the `pjrt` cargo
+//! feature. Without it, an API-identical stub is compiled whose `load`
+//! reports a clear error — so the library, the DES engine and the whole
+//! service layer build and test green on machines without PJRT
+//! artifacts or bindings.
 
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pool;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pool_stub.rs"]
 mod pool;
 
 pub use manifest::{default_dir, Manifest, VariantSpec, WeightEntry};

@@ -1,0 +1,84 @@
+//! API-identical stand-in for the PJRT-backed [`ModelPool`] used when
+//! the `pjrt` feature is disabled.
+//!
+//! `load` always fails with an actionable message; the remaining
+//! methods exist so call sites (live engine, benches, examples)
+//! type-check identically under both feature sets.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::Manifest;
+use crate::tuning::XiModel;
+use crate::util::Micros;
+
+/// Scores + embeddings for an executed batch.
+#[derive(Debug, Clone)]
+pub struct ModelOutput {
+    /// Cosine-similarity score per input frame.
+    pub scores: Vec<f32>,
+    /// `feat_dim`-dim embedding per input frame (row-major).
+    pub embeddings: Vec<f32>,
+}
+
+/// Stub model pool: never constructible without the `pjrt` feature.
+pub struct ModelPool {
+    manifest: Manifest,
+}
+
+impl ModelPool {
+    pub fn load(
+        _dir: &Path,
+        _variant_names: &[&str],
+        _buckets: Option<&[usize]>,
+    ) -> Result<Self> {
+        Err(anyhow!(
+            "anveshak was built without the `pjrt` feature: model \
+             execution is unavailable (rebuild with `--features pjrt` \
+             on a machine with the PJRT toolchain and artifacts)"
+        ))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn img_dim(&self) -> usize {
+        self.manifest.img_dim
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.manifest.feat_dim
+    }
+
+    /// Buckets actually loaded for a variant (sorted).
+    pub fn loaded_buckets(&self, _variant: &str) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn execute(
+        &self,
+        _variant: &str,
+        _images: &[f32],
+        _query: &[f32],
+    ) -> Result<ModelOutput> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    pub fn embed_query(
+        &self,
+        _variant: &str,
+        _image: &[f32],
+    ) -> Result<Vec<f32>> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+
+    pub fn calibrate_xi(
+        &self,
+        _variant: &str,
+        _reps: usize,
+    ) -> Result<(XiModel, Vec<(usize, Micros)>)> {
+        Err(anyhow!("pjrt feature disabled"))
+    }
+}

@@ -1,0 +1,153 @@
+//! Admission control for the multi-query service.
+//!
+//! New queries are admitted only while the service has headroom on two
+//! axes: the number of concurrently active queries (each holds worker
+//! queue/budget state) and the *aggregate active-camera set* (the sum
+//! of per-query spotlights is what actually drives VA/CR load — an
+//! unseeded query bootstraps all-active, §2.3, and admitting two of
+//! those on a 1000-camera network is a meltdown). Queries without
+//! headroom are wait-listed up to a queue capacity, then rejected.
+
+use crate::config::MultiQueryConfig;
+use crate::service::query::QuerySpec;
+
+/// Resource limits the controller enforces.
+#[derive(Debug, Clone)]
+pub struct AdmissionPolicy {
+    /// Maximum concurrently active queries.
+    pub max_active: usize,
+    /// Maximum aggregate active-camera count across all queries.
+    pub max_active_cameras: usize,
+    /// Wait-queue capacity before outright rejection.
+    pub queue_capacity: usize,
+}
+
+impl From<&MultiQueryConfig> for AdmissionPolicy {
+    fn from(mq: &MultiQueryConfig) -> Self {
+        Self {
+            max_active: mq.max_active,
+            max_active_cameras: mq.max_active_cameras,
+            queue_capacity: mq.queue_capacity,
+        }
+    }
+}
+
+/// Outcome of an admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Activate now.
+    Admit,
+    /// Wait-list; re-evaluated whenever capacity frees up.
+    Queue,
+    /// Refuse (wait queue full or query can never fit).
+    Reject(&'static str),
+}
+
+/// Stateless decision logic over a snapshot of service occupancy.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    pub policy: AdmissionPolicy,
+}
+
+impl AdmissionController {
+    pub fn new(policy: AdmissionPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Decide for `spec` given current occupancy: `active_queries` and
+    /// `queued` counts, the current aggregate `active_cameras`, and the
+    /// total camera count (to project the query's bootstrap cost).
+    pub fn decide(
+        &self,
+        spec: &QuerySpec,
+        active_queries: usize,
+        queued: usize,
+        active_cameras: usize,
+        total_cameras: usize,
+    ) -> Admission {
+        let projected = spec.initial_camera_estimate(total_cameras);
+        // A query that alone exceeds the camera budget can never be
+        // admitted — reject instead of wait-listing it forever.
+        if projected > self.policy.max_active_cameras {
+            return Admission::Reject(
+                "query's bootstrap camera set exceeds the service budget",
+            );
+        }
+        let has_query_slot = active_queries < self.policy.max_active;
+        let has_camera_room =
+            active_cameras + projected <= self.policy.max_active_cameras;
+        if has_query_slot && has_camera_room {
+            return Admission::Admit;
+        }
+        if queued < self.policy.queue_capacity {
+            return Admission::Queue;
+        }
+        Admission::Reject("service at capacity and wait queue full")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::query::QuerySpec;
+
+    fn ctl(max_active: usize, max_cams: usize, qcap: usize) -> AdmissionController {
+        AdmissionController::new(AdmissionPolicy {
+            max_active,
+            max_active_cameras: max_cams,
+            queue_capacity: qcap,
+        })
+    }
+
+    #[test]
+    fn admits_with_headroom() {
+        let c = ctl(4, 100, 2);
+        let s = QuerySpec::new("a", 0);
+        assert_eq!(c.decide(&s, 0, 0, 0, 1000), Admission::Admit);
+        assert_eq!(c.decide(&s, 3, 0, 90, 1000), Admission::Admit);
+    }
+
+    #[test]
+    fn queues_when_slots_exhausted() {
+        let c = ctl(2, 100, 2);
+        let s = QuerySpec::new("a", 0);
+        assert_eq!(c.decide(&s, 2, 0, 8, 1000), Admission::Queue);
+        assert_eq!(c.decide(&s, 2, 1, 8, 1000), Admission::Queue);
+    }
+
+    #[test]
+    fn rejects_when_queue_full() {
+        let c = ctl(2, 100, 2);
+        let s = QuerySpec::new("a", 0);
+        assert!(matches!(
+            c.decide(&s, 2, 2, 8, 1000),
+            Admission::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn camera_budget_blocks_unseeded_bootstrap() {
+        let c = ctl(8, 500, 2);
+        let unseeded = QuerySpec {
+            start_camera: None,
+            ..QuerySpec::new("u", 0)
+        };
+        // 1000-camera bootstrap > 500 budget: can never fit.
+        assert!(matches!(
+            c.decide(&unseeded, 0, 0, 0, 1000),
+            Admission::Reject(_)
+        ));
+        // A seeded query still fits while the aggregate has room.
+        let seeded = QuerySpec::new("s", 3);
+        assert_eq!(c.decide(&seeded, 0, 0, 497, 1000), Admission::Queue);
+        assert_eq!(c.decide(&seeded, 0, 0, 496, 1000), Admission::Admit);
+    }
+
+    #[test]
+    fn policy_from_config() {
+        let mq = crate::config::MultiQueryConfig::default();
+        let p = AdmissionPolicy::from(&mq);
+        assert_eq!(p.max_active, mq.max_active);
+        assert_eq!(p.queue_capacity, mq.queue_capacity);
+    }
+}

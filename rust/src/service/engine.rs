@@ -1,0 +1,1307 @@
+//! Multi-query discrete-event engine: N tracking queries multiplexed
+//! over one shared deployment, in virtual time.
+//!
+//! Queries arrive as a Poisson process. Each admitted query tracks its
+//! own entity (its own random walk, ground truth and spotlight TL) but
+//! shares the physical FC/VA/CR/UV deployment with every other query:
+//! a camera produces one logical event per query that has it active,
+//! events are tagged with their [`QueryId`], and the shared VA/CR
+//! executors form **cross-query batches** under weighted fair sharing
+//! ([`FairShareBatcher`]). The tuning triangle is keyed per query —
+//! per-(task, query) [`BudgetManager`]s, per-query drop/probe state,
+//! per-query ledgers — so one query collapsing its completion budget
+//! cannot starve or mis-account the rest.
+//!
+//! Modelling simplifications relative to [`crate::coordinator::des`]
+//! (documented, deliberate): device clocks are unskewed (the skew
+//! invariance of the tuning logic is property-tested separately) and
+//! TL (de)activation commands apply at evaluation time rather than
+//! after a control-message latency.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{BatchingKind, ExperimentConfig, MultiQueryConfig};
+use crate::coordinator::tl::TrackingLogic;
+use crate::coordinator::topology::Topology;
+use crate::dataflow::{Event, Payload, QueryId, Stage};
+use crate::metrics::{QueryLedgers, Summary};
+use crate::roadnet::{generate, place_cameras, Camera, Graph};
+use crate::service::admission::{
+    Admission, AdmissionController, AdmissionPolicy,
+};
+use crate::service::query::{
+    QueryRegistry, QueryReport, QuerySpec, QueryStatus,
+};
+use crate::service::scheduler::FairShareBatcher;
+use crate::sim::{EntityWalk, GroundTruth, NetModel};
+use crate::tuning::budget::BUDGET_INF;
+use crate::tuning::{
+    drop_at_exec, drop_at_queue, drop_at_transmit, BatcherPoll,
+    BudgetManager, EventRecord, QueuedEvent, Signal, XiModel,
+};
+use crate::util::{millis, rng, secs, FastMap, Micros, Rng, SEC};
+
+/// Simulation events, ordered by time then sequence.
+enum Ev {
+    /// A camera captures its next frame (one logical event per query
+    /// that has the camera active).
+    FrameTick { cam: usize },
+    /// The `idx`-th query of the arrival schedule is submitted.
+    QueryArrive { idx: usize },
+    /// An active query's tracking window elapsed.
+    QueryEnd { query: QueryId },
+    /// A dataflow event arrives at `task` (post-network).
+    Arrive {
+        task: usize,
+        ev: Event,
+        batch: Option<(u64, usize)>,
+    },
+    /// A batcher auto-submit timer.
+    BatchTimer { task: usize, seq: u64 },
+    /// A cross-query batch finishes executing at `task`.
+    ExecDone {
+        task: usize,
+        batch: Vec<QueuedEvent<Event>>,
+        start: Micros,
+        xi_est: Micros,
+        actual: Micros,
+    },
+    /// A budget signal for one query arrives at `task`.
+    SignalAt {
+        task: usize,
+        query: QueryId,
+        sig: Signal,
+    },
+    /// Periodic per-query TL spotlight evaluation.
+    TlTick,
+    /// A detection (metadata) reaches a query's TL.
+    TlDetection {
+        query: QueryId,
+        camera: usize,
+        captured: Micros,
+        detected: bool,
+    },
+}
+
+/// Shared executor state (VA/CR) — one fair-share batcher, per-query
+/// budgets.
+struct MqTask {
+    stage: Stage,
+    node: usize,
+    batcher: FairShareBatcher<Event>,
+    budgets: FastMap<QueryId, BudgetManager>,
+    xi: XiModel,
+    busy: bool,
+    timer_seq: u64,
+    drop_count: u64,
+}
+
+/// Per-query runtime state while active.
+struct QueryCtx {
+    /// Activation time (the query's walk/ground-truth run on a clock
+    /// starting here).
+    t0: Micros,
+    gt: GroundTruth,
+    tl: TrackingLogic,
+    active_cams: Vec<bool>,
+    detections: u64,
+    peak_active: usize,
+}
+
+/// Result of a multi-query DES run.
+#[derive(Debug)]
+pub struct MultiQueryResult {
+    /// Per-query reports, in submission order.
+    pub queries: Vec<QueryReport>,
+    /// Whole-service aggregate summary.
+    pub aggregate: Summary,
+    /// Peak number of concurrently active queries.
+    pub peak_concurrent: usize,
+    /// Queries rejected by admission control.
+    pub rejected: usize,
+    /// Queries that were wait-listed at least once.
+    pub queued: usize,
+}
+
+impl MultiQueryResult {
+    /// Reports of queries that actually ran (activated at some point).
+    pub fn activated(&self) -> impl Iterator<Item = &QueryReport> {
+        self.queries.iter().filter(|q| q.activated_s.is_some())
+    }
+}
+
+/// The multi-query discrete-event engine.
+pub struct MultiQueryDes {
+    cfg: ExperimentConfig,
+    topo: Topology,
+    graph: Graph,
+    cams: Vec<Camera>,
+    net: NetModel,
+    registry: QueryRegistry,
+    admission: AdmissionController,
+    /// Active query contexts (insertion-ordered id list for iteration
+    /// determinism).
+    ctx: FastMap<QueryId, QueryCtx>,
+    active: Vec<QueryId>,
+    /// (detections, peak_active) of queries that already finished.
+    finished_stats: FastMap<QueryId, (u64, usize)>,
+    /// Arrival schedule: (arrival time, spec), in submission order.
+    schedule: Vec<(Micros, QuerySpec)>,
+    service_end: Micros,
+    tasks: Vec<MqTask>,
+    fc_budget: Vec<FastMap<QueryId, BudgetManager>>,
+    fc_xi: XiModel,
+    heap: BinaryHeap<(Reverse<Micros>, Reverse<u64>, usize)>,
+    store: Vec<Option<Ev>>,
+    free_slots: Vec<usize>,
+    seq: u64,
+    next_event_id: u64,
+    next_batch_seq: u64,
+    frame_counters: Vec<u64>,
+    ledgers: QueryLedgers,
+    /// batch seq -> (remaining, slowest latency, slowest id, Σξ of
+    /// slowest, slowest query, slowest camera).
+    sink_batches:
+        FastMap<u64, (usize, Micros, u64, Micros, QueryId, usize)>,
+    peak_concurrent: usize,
+    ever_queued: u64,
+    m_max: usize,
+    rng: Rng,
+    now: Micros,
+}
+
+impl MultiQueryDes {
+    pub fn new(cfg: ExperimentConfig, mq: MultiQueryConfig) -> Self {
+        let graph = generate(&cfg.workload, cfg.seed);
+        let cams = place_cameras(
+            &graph,
+            cfg.num_cameras,
+            0,
+            cfg.workload.fov_m,
+        );
+        let topo = Topology::schedule(&cfg);
+        let net = NetModel::new(&cfg.network, topo.nodes);
+
+        let va_xi = XiModel::affine_ms(
+            cfg.service.va_alpha_ms,
+            cfg.service.va_beta_ms,
+        );
+        let cr_xi = XiModel::affine_ms(
+            cfg.service.cr_alpha_ms,
+            cfg.service.cr_beta_ms,
+        );
+        let fc_xi = XiModel::affine_ms(cfg.service.fc_ms, 0.01);
+
+        let m_max = match cfg.batching {
+            BatchingKind::Static { size } => size,
+            BatchingKind::Dynamic { max } | BatchingKind::Nob { max } => {
+                max
+            }
+        };
+
+        let mut tasks = Vec::with_capacity(topo.tasks.len());
+        for info in topo.tasks.iter() {
+            let xi = match info.stage {
+                Stage::Va => va_xi.clone(),
+                Stage::Cr => cr_xi.clone(),
+                _ => fc_xi.clone(),
+            };
+            tasks.push(MqTask {
+                stage: info.stage,
+                node: info.node,
+                batcher: FairShareBatcher::new(m_max.max(1)),
+                budgets: FastMap::default(),
+                xi,
+                busy: false,
+                timer_seq: 0,
+                drop_count: 0,
+            });
+        }
+
+        // Poisson arrival schedule with cycling priorities and random
+        // start cameras (every query is seeded with a last-seen camera;
+        // unseeded bootstraps are an admission-test concern).
+        let mut r = rng(cfg.seed, 0x5E81);
+        let mut schedule = Vec::with_capacity(mq.num_queries);
+        let mut t: Micros = 0;
+        let levels = mq.priority_levels.max(1);
+        for i in 0..mq.num_queries {
+            if i > 0 {
+                let u = r.f64().max(1e-12);
+                let gap = -u.ln() * mq.mean_interarrival_secs;
+                t += secs(gap.min(10.0 * mq.mean_interarrival_secs));
+            }
+            let start_camera = r.range_u(0, cfg.num_cameras.max(1));
+            schedule.push((
+                t,
+                QuerySpec {
+                    app: cfg.app,
+                    label: format!("q{i}"),
+                    start_camera: Some(start_camera),
+                    priority: (i as u8 % levels) + 1,
+                    lifetime_secs: mq.lifetime_secs,
+                },
+            ));
+        }
+        let service_end = schedule
+            .iter()
+            .map(|(at, spec)| *at + secs(spec.lifetime_secs))
+            .max()
+            .unwrap_or(0);
+
+        let num_cameras = cfg.num_cameras;
+        let policy = AdmissionPolicy::from(&mq);
+        let seed = cfg.seed;
+        Self {
+            cfg,
+            topo,
+            graph,
+            cams,
+            net,
+            registry: QueryRegistry::new(),
+            admission: AdmissionController::new(policy),
+            ctx: FastMap::default(),
+            active: Vec::new(),
+            finished_stats: FastMap::default(),
+            schedule,
+            service_end,
+            tasks,
+            fc_budget: (0..num_cameras).map(|_| FastMap::default()).collect(),
+            fc_xi,
+            heap: BinaryHeap::new(),
+            store: Vec::new(),
+            free_slots: Vec::new(),
+            seq: 0,
+            next_event_id: 0,
+            next_batch_seq: 0,
+            frame_counters: vec![0; num_cameras],
+            ledgers: QueryLedgers::new(),
+            sink_batches: FastMap::default(),
+            peak_concurrent: 0,
+            ever_queued: 0,
+            m_max: m_max.max(1),
+            rng: rng(seed, 0x3DE5),
+            now: 0,
+        }
+    }
+
+    // ---- event plumbing --------------------------------------------------
+
+    fn push(&mut self, t: Micros, ev: Ev) {
+        let slot = if let Some(s) = self.free_slots.pop() {
+            self.store[s] = Some(ev);
+            s
+        } else {
+            self.store.push(Some(ev));
+            self.store.len() - 1
+        };
+        self.seq += 1;
+        self.heap
+            .push((Reverse(t.max(self.now)), Reverse(self.seq), slot));
+    }
+
+    /// Run to completion: all arrivals, all lifetimes, plus a drain of
+    /// two γ for in-flight events.
+    pub fn run(mut self) -> MultiQueryResult {
+        for cam in 0..self.cfg.num_cameras {
+            let phase = self
+                .rng
+                .range_i64(0, (SEC as f64 / self.cfg.fps) as i64);
+            self.push(phase, Ev::FrameTick { cam });
+        }
+        for idx in 0..self.schedule.len() {
+            let at = self.schedule[idx].0;
+            self.push(at, Ev::QueryArrive { idx });
+        }
+        self.push(SEC, Ev::TlTick);
+
+        // Horizon re-evaluated each step: promotions extend
+        // `service_end` mid-run.
+        while let Some((Reverse(t), _, slot)) = self.heap.pop() {
+            if t > self.service_end + 2 * self.cfg.gamma() {
+                break;
+            }
+            self.now = t;
+            let ev = self.store[slot].take().expect("event slot occupied");
+            self.free_slots.push(slot);
+            self.dispatch(ev);
+        }
+        self.report()
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::FrameTick { cam } => self.on_frame_tick(cam),
+            Ev::QueryArrive { idx } => self.on_query_arrive(idx),
+            Ev::QueryEnd { query } => self.on_query_end(query),
+            Ev::Arrive { task, ev, batch } => {
+                self.on_arrive(task, ev, batch)
+            }
+            Ev::BatchTimer { task, seq } => {
+                if self.tasks[task].timer_seq == seq
+                    && !self.tasks[task].busy
+                {
+                    self.try_form_batch(task);
+                }
+            }
+            Ev::ExecDone {
+                task,
+                batch,
+                start,
+                xi_est,
+                actual,
+            } => self.on_exec_done(task, batch, start, xi_est, actual),
+            Ev::SignalAt { task, query, sig } => {
+                let t = &mut self.tasks[task];
+                if let Some(bm) = t.budgets.get_mut(&query) {
+                    bm.apply(sig, &t.xi);
+                }
+            }
+            Ev::TlTick => self.on_tl_tick(),
+            Ev::TlDetection {
+                query,
+                camera,
+                captured,
+                detected,
+            } => {
+                let Some(ctx) = self.ctx.get_mut(&query) else {
+                    return; // query already finished
+                };
+                ctx.tl.on_detection(camera, captured, detected);
+                if detected {
+                    self.refresh_active_set(query);
+                }
+            }
+        }
+    }
+
+    // ---- query lifecycle -------------------------------------------------
+
+    fn active_cameras_total(&self) -> usize {
+        self.active
+            .iter()
+            .map(|q| {
+                self.ctx[q]
+                    .active_cams
+                    .iter()
+                    .filter(|&&a| a)
+                    .count()
+            })
+            .sum()
+    }
+
+    fn on_query_arrive(&mut self, idx: usize) {
+        let spec = self.schedule[idx].1.clone();
+        let id = self.registry.submit(spec.clone(), self.now);
+        let decision = self.admission.decide(
+            &spec,
+            self.registry.num_active(),
+            self.registry.num_queued(),
+            self.active_cameras_total(),
+            self.cfg.num_cameras,
+        );
+        match decision {
+            Admission::Admit => self.activate_query(id),
+            Admission::Queue => {
+                self.ever_queued += 1;
+                self.registry
+                    .enqueue(id)
+                    .expect("submitted query can queue");
+            }
+            Admission::Reject(_) => {
+                self.registry
+                    .reject(id, self.now)
+                    .expect("submitted query can be rejected");
+            }
+        }
+    }
+
+    fn activate_query(&mut self, id: QueryId) {
+        self.registry
+            .activate(id, self.now)
+            .expect("admission checked the transition");
+        let spec = self.registry.record(id).unwrap().spec.clone();
+        let lifetime = secs(spec.lifetime_secs);
+        let start_cam = spec
+            .start_camera
+            .unwrap_or(0)
+            .min(self.cams.len().saturating_sub(1));
+        let start_vertex = self.cams[start_cam].vertex;
+        let walk = EntityWalk::simulate(
+            &self.graph,
+            start_vertex,
+            self.cfg.workload.entity_speed_mps,
+            lifetime + 60 * SEC,
+            self.cfg.seed
+                ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let gt = GroundTruth::compute(
+            &self.graph,
+            &self.cams,
+            &walk,
+            lifetime + 60 * SEC,
+            200_000,
+        );
+        let mut tl = TrackingLogic::new(
+            self.cfg.tl,
+            self.cfg.tl_peak_speed_mps,
+            self.cfg.workload.mean_road_m,
+            self.cfg.workload.fov_m,
+            &self.cams,
+        );
+        tl.on_detection(start_cam, self.now, true);
+        let active_set = tl.active_set(&self.graph, self.now);
+        let mut active_cams = vec![false; self.cfg.num_cameras];
+        for cam in &active_set {
+            active_cams[*cam] = true;
+        }
+        let peak = active_set.len();
+        self.ctx.insert(
+            id,
+            QueryCtx {
+                t0: self.now,
+                gt,
+                tl,
+                active_cams,
+                detections: 0,
+                peak_active: peak,
+            },
+        );
+        self.active.push(id);
+        self.peak_concurrent =
+            self.peak_concurrent.max(self.active.len());
+        // Wait-listed queries promoted late run past the static
+        // schedule end: extend the service window (frame ticks and the
+        // run horizon both follow it dynamically).
+        self.service_end = self.service_end.max(self.now + lifetime);
+        // Register the query with every executor's fair-share batcher.
+        let w = spec.weight();
+        for t in &mut self.tasks {
+            if matches!(t.stage, Stage::Va | Stage::Cr) {
+                t.batcher.register(id, w);
+            }
+        }
+        self.push(self.now + lifetime, Ev::QueryEnd { query: id });
+    }
+
+    fn on_query_end(&mut self, query: QueryId) {
+        if self.registry.status(query) != Some(QueryStatus::Active) {
+            return;
+        }
+        self.registry
+            .complete(query, self.now)
+            .expect("status checked");
+        self.active.retain(|&q| q != query);
+        if let Some(ctx) = self.ctx.remove(&query) {
+            self.finished_stats
+                .insert(query, (ctx.detections, ctx.peak_active));
+        }
+        // Drain the query's leftover worker-queue events (ledgered as
+        // dropped at the owning stage: they will never complete).
+        for ti in 0..self.tasks.len() {
+            if !matches!(self.tasks[ti].stage, Stage::Va | Stage::Cr) {
+                continue;
+            }
+            let left = self.tasks[ti].batcher.deregister(query);
+            let stage = self.tasks[ti].stage;
+            for qe in left {
+                self.ledgers.dropped(query, qe.item.header.id, stage);
+            }
+            self.tasks[ti].budgets.remove(&query);
+        }
+        for cam in 0..self.fc_budget.len() {
+            self.fc_budget[cam].remove(&query);
+        }
+        // Capacity freed: promote wait-listed queries that now fit.
+        while let Some(next) = self.registry.next_pending() {
+            let spec =
+                self.registry.record(next).unwrap().spec.clone();
+            let decision = self.admission.decide(
+                &spec,
+                self.registry.num_active(),
+                self.registry.num_queued(),
+                self.active_cameras_total(),
+                self.cfg.num_cameras,
+            );
+            if decision == Admission::Admit {
+                self.activate_query(next);
+            } else {
+                break;
+            }
+        }
+    }
+
+    // ---- feeds + FC ------------------------------------------------------
+
+    fn on_frame_tick(&mut self, cam: usize) {
+        let t = self.now;
+        if t < self.service_end {
+            let period = (SEC as f64 / self.cfg.fps) as Micros;
+            self.push(t + period, Ev::FrameTick { cam });
+        } else {
+            return;
+        }
+        if self.active.is_empty() {
+            return;
+        }
+        let frame_no = self.frame_counters[cam];
+        self.frame_counters[cam] += 1;
+        // One logical event per query that has this camera active.
+        let queries: Vec<QueryId> = self.active.clone();
+        for q in queries {
+            let (present, wants) = match self.ctx.get(&q) {
+                Some(ctx) if ctx.active_cams[cam] => {
+                    (ctx.gt.visible(cam, t - ctx.t0), true)
+                }
+                _ => (false, false),
+            };
+            if !wants {
+                continue;
+            }
+            let id = self.next_event_id;
+            self.next_event_id += 1;
+            let mut ev = Event::frame(id, cam, frame_no, t, present);
+            ev.header = ev.header.with_query(q);
+            self.ledgers.generated(q, id, present);
+
+            // FC drop point 1 against this query's FC budget.
+            let slot = self
+                .topo
+                .downstream_slot(self.topo.fc_task(cam), cam);
+            let fc_xi1 = self.fc_xi.xi(1);
+            if self.cfg.drops_enabled {
+                let budget = self.fc_budget[cam]
+                    .get(&q)
+                    .map(|b| b.budget_max())
+                    .unwrap_or(BUDGET_INF);
+                if budget < BUDGET_INF
+                    && drop_at_queue(false, 0, fc_xi1, budget)
+                {
+                    self.ledgers.dropped(q, id, Stage::Fc);
+                    continue;
+                }
+            }
+            let fc_dur = fc_xi1;
+            self.fc_budget[cam]
+                .entry(q)
+                .or_insert_with(|| {
+                    BudgetManager::new(
+                        self.topo.va_part.instances(),
+                        self.m_max,
+                        256,
+                    )
+                })
+                .record(
+                    id,
+                    EventRecord {
+                        departure: fc_dur,
+                        queue: 0,
+                        batch: 1,
+                        sent_to: slot,
+                    },
+                );
+            ev.header.sum_exec += fc_dur;
+            let fc_task = self.topo.fc_task(cam);
+            let va = self.topo.va_task(cam);
+            let arrive = self.net.transfer(
+                self.topo.node_of(fc_task),
+                self.topo.node_of(va),
+                self.net.frame_bytes,
+                t + fc_dur,
+            );
+            self.push(
+                arrive,
+                Ev::Arrive {
+                    task: va,
+                    ev,
+                    batch: None,
+                },
+            );
+        }
+    }
+
+    // ---- shared executors (VA / CR) --------------------------------------
+
+    /// Per-(task, query) budget, created on first use. Only call for
+    /// queries that are still active (creation for a finished query
+    /// would leak state); use [`Self::task_budget_for`] for lookups.
+    fn task_budget(
+        &mut self,
+        task: usize,
+        q: QueryId,
+    ) -> &mut BudgetManager {
+        let n_down = self.topo.downstream_count(task);
+        let m_max = self.m_max;
+        self.tasks[task]
+            .budgets
+            .entry(q)
+            .or_insert_with(|| BudgetManager::new(n_down, m_max, 4096))
+    }
+
+    /// Read-only per-(task, query) budget toward `slot`;
+    /// [`BUDGET_INF`] when the query has no budget state at this task.
+    fn task_budget_for(
+        &self,
+        task: usize,
+        q: QueryId,
+        slot: usize,
+    ) -> Micros {
+        self.tasks[task]
+            .budgets
+            .get(&q)
+            .map(|bm| bm.budget_for(slot))
+            .unwrap_or(BUDGET_INF)
+    }
+
+    fn on_arrive(
+        &mut self,
+        task: usize,
+        ev: Event,
+        batch: Option<(u64, usize)>,
+    ) {
+        match self.tasks[task].stage {
+            Stage::Uv => self.on_sink_arrive(ev, batch),
+            Stage::Va | Stage::Cr => {
+                let now = self.now;
+                let q = ev.header.query;
+                let u = now - ev.header.src_arrival;
+                let exempt = ev.header.avoid_drop || ev.header.probe;
+                let slot = self
+                    .topo
+                    .downstream_slot(task, ev.header.camera);
+                let xi1 = self.tasks[task].xi.xi(1);
+                let budget = self.task_budget_for(task, q, slot);
+                if self.cfg.drops_enabled
+                    && budget < BUDGET_INF
+                    && drop_at_queue(exempt, u, xi1, budget)
+                {
+                    let eps = (u + xi1) - budget;
+                    self.drop_event(task, &ev, eps);
+                    return;
+                }
+                let deadline = if budget >= BUDGET_INF {
+                    BUDGET_INF
+                } else {
+                    budget + ev.header.src_arrival
+                };
+                let id = ev.header.id;
+                let rejected = self.tasks[task].batcher.push(
+                    q,
+                    QueuedEvent {
+                        item: ev,
+                        id,
+                        arrival: now,
+                        deadline,
+                    },
+                );
+                if let Some(qe) = rejected {
+                    // The query already completed/cancelled (this is a
+                    // late in-flight event): it can never be served, so
+                    // account it as dropped here — per-query
+                    // conservation must still hold, and re-registering
+                    // a finished query would leak fair-share state.
+                    let stage = self.tasks[task].stage;
+                    self.ledgers
+                        .dropped(q, qe.item.header.id, stage);
+                    return;
+                }
+                if !self.tasks[task].busy {
+                    self.try_form_batch(task);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn try_form_batch(&mut self, task: usize) {
+        loop {
+            let now = self.now;
+            let poll = {
+                let ts = &mut self.tasks[task];
+                let xi = ts.xi.clone();
+                ts.batcher.poll(now, &xi)
+            };
+            match poll {
+                BatcherPoll::Idle => return,
+                BatcherPoll::Timer(at) => {
+                    let ts = &mut self.tasks[task];
+                    ts.timer_seq += 1;
+                    let seq = ts.timer_seq;
+                    self.push(at, Ev::BatchTimer { task, seq });
+                    return;
+                }
+                BatcherPoll::Ready(mut batch) => {
+                    // Drop point 2 against each event's own query
+                    // budget (per-query isolation).
+                    if self.cfg.drops_enabled {
+                        let b = batch.len();
+                        let xib = self.tasks[task].xi.xi(b);
+                        let mut kept = Vec::with_capacity(b);
+                        for qe in batch {
+                            let q = qe.item.header.query;
+                            let slot = self.topo.downstream_slot(
+                                task,
+                                qe.item.header.camera,
+                            );
+                            let budget =
+                                self.task_budget_for(task, q, slot);
+                            let u =
+                                qe.arrival - qe.item.header.src_arrival;
+                            let qdur = now - qe.arrival;
+                            let exempt = qe.item.header.avoid_drop
+                                || qe.item.header.probe;
+                            if budget < BUDGET_INF
+                                && drop_at_exec(
+                                    exempt, u, qdur, xib, budget,
+                                )
+                            {
+                                let eps = (u + qdur + xib) - budget;
+                                self.drop_event(task, &qe.item, eps);
+                            } else {
+                                kept.push(qe);
+                            }
+                        }
+                        batch = kept;
+                    }
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let b = batch.len();
+                    let (xi_est, jitter) = {
+                        let ts = &self.tasks[task];
+                        (ts.xi.xi(b), self.cfg.service.jitter)
+                    };
+                    let factor =
+                        1.0 + self.rng.range_f64(-jitter, jitter);
+                    let actual =
+                        ((xi_est as f64) * factor).round() as Micros;
+                    self.tasks[task].busy = true;
+                    self.push(
+                        now + actual.max(1),
+                        Ev::ExecDone {
+                            task,
+                            batch,
+                            start: now,
+                            xi_est,
+                            actual,
+                        },
+                    );
+                    return;
+                }
+            }
+        }
+    }
+
+    fn on_exec_done(
+        &mut self,
+        task: usize,
+        batch: Vec<QueuedEvent<Event>>,
+        start: Micros,
+        xi_est: Micros,
+        actual: Micros,
+    ) {
+        self.tasks[task].busy = false;
+        let b = batch.len();
+        let stage = self.tasks[task].stage;
+        let batch_seq = self.next_batch_seq;
+        self.next_batch_seq += 1;
+
+        let mut outgoing: Vec<Event> = Vec::with_capacity(b);
+        for qe in batch {
+            let mut ev = qe.item;
+            let q = ev.header.query;
+            let cam = ev.header.camera;
+            let qdur = start - qe.arrival;
+            let u = qe.arrival - ev.header.src_arrival;
+            let pi = qdur + actual;
+            let slot = self.topo.downstream_slot(task, cam);
+            // Record only for still-active queries: creating budget
+            // state for a finished query would leak it (signals for
+            // unknown events are ignored anyway).
+            if self.ctx.contains_key(&q) {
+                self.task_budget(task, q).record(
+                    ev.header.id,
+                    EventRecord {
+                        departure: u + pi,
+                        queue: qdur,
+                        batch: b,
+                        sent_to: slot,
+                    },
+                );
+            }
+            ev.header.sum_exec += xi_est;
+            ev.header.sum_queue += qdur;
+
+            self.apply_semantics(stage, &mut ev);
+
+            // Drop point 3 against this query's per-downstream budget.
+            let exempt = ev.header.avoid_drop || ev.header.probe;
+            if self.cfg.drops_enabled {
+                let budget = self.task_budget_for(task, q, slot);
+                if budget < BUDGET_INF
+                    && drop_at_transmit(exempt, u, pi, budget)
+                {
+                    let eps = (u + pi) - budget;
+                    self.drop_event(task, &ev, eps);
+                    continue;
+                }
+            }
+            outgoing.push(ev);
+        }
+
+        let out_n = outgoing.len();
+        let src_node = self.topo.node_of(task);
+        for ev in outgoing {
+            let cam = ev.header.camera;
+            let q = ev.header.query;
+            let (next_task, bytes) = match stage {
+                Stage::Va => {
+                    (self.topo.cr_task(cam), self.net.candidate_bytes)
+                }
+                Stage::Cr => (self.topo.uv, self.net.meta_bytes),
+                _ => unreachable!("only VA/CR execute batches"),
+            };
+            if stage == Stage::Cr {
+                if let Payload::Detection { detected, .. } = ev.payload {
+                    let tl_arrive = self.net.transfer(
+                        src_node,
+                        self.topo.node_of(self.topo.tl),
+                        self.net.meta_bytes,
+                        self.now,
+                    );
+                    self.push(
+                        tl_arrive,
+                        Ev::TlDetection {
+                            query: q,
+                            camera: cam,
+                            captured: ev.header.captured,
+                            detected,
+                        },
+                    );
+                }
+            }
+            let arrive = self.net.transfer(
+                src_node,
+                self.topo.node_of(next_task),
+                bytes,
+                self.now,
+            );
+            let tag = if stage == Stage::Cr {
+                Some((batch_seq, out_n))
+            } else {
+                None
+            };
+            self.push(
+                arrive,
+                Ev::Arrive {
+                    task: next_task,
+                    ev,
+                    batch: tag,
+                },
+            );
+        }
+
+        self.try_form_batch(task);
+    }
+
+    /// VA/CR user-logic over per-query ground truth.
+    fn apply_semantics(&mut self, stage: Stage, ev: &mut Event) {
+        let sem = self.cfg.semantics.clone();
+        let q = ev.header.query;
+        match stage {
+            Stage::Va => {
+                if let Payload::Frame { entity_present } = ev.payload {
+                    let transit_missed = entity_present
+                        && self
+                            .ctx
+                            .get(&q)
+                            .and_then(|ctx| {
+                                ctx.gt.interval_index(
+                                    ev.header.camera,
+                                    ev.header.captured - ctx.t0,
+                                )
+                            })
+                            .map(|idx| {
+                                let mut h = self.cfg.seed
+                                    ^ (q as u64).wrapping_mul(0xB5297A4D)
+                                    ^ (ev.header.camera as u64)
+                                        .wrapping_mul(0x9E37_79B9)
+                                    ^ (idx as u64)
+                                        .wrapping_mul(0xC2B2_AE35);
+                                h ^= h >> 33;
+                                h = h.wrapping_mul(
+                                    0xFF51_AFD7_ED55_8CCD,
+                                );
+                                h ^= h >> 33;
+                                (h as f64 / u64::MAX as f64)
+                                    < sem.transit_miss
+                            })
+                            .unwrap_or(false);
+                    let flagged = if entity_present && !transit_missed {
+                        self.rng.bool(sem.va_tp)
+                    } else if entity_present {
+                        false
+                    } else {
+                        self.rng.bool(sem.va_fp)
+                    };
+                    ev.payload = Payload::Candidate {
+                        entity_present,
+                        score: if flagged { 0.9 } else { 0.1 },
+                    };
+                }
+            }
+            Stage::Cr => {
+                if let Payload::Candidate {
+                    entity_present,
+                    score,
+                } = ev.payload
+                {
+                    let candidate = score > 0.5;
+                    let detected = if entity_present && candidate {
+                        self.rng.bool(sem.cr_tp)
+                    } else {
+                        candidate && self.rng.bool(sem.cr_fp)
+                    };
+                    if detected {
+                        ev.header.avoid_drop = true;
+                    }
+                    ev.payload = Payload::Detection {
+                        detected,
+                        confidence: if detected { 0.95 } else { 0.05 },
+                    };
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ---- drops + signals -------------------------------------------------
+
+    /// Drop an event at `task`: ledger it per query, send reject
+    /// signals upstream (scoped to the same query) and forward every
+    /// k-th drop as a probe.
+    fn drop_event(&mut self, task: usize, ev: &Event, eps: Micros) {
+        let stage = self.tasks[task].stage;
+        let q = ev.header.query;
+        self.ledgers.dropped(q, ev.header.id, stage);
+        self.tasks[task].drop_count += 1;
+
+        let cam = ev.header.camera;
+        let sig = Signal::Reject {
+            event: ev.header.id,
+            eps: eps.max(0),
+            sum_queue: ev.header.sum_queue.max(1),
+        };
+        let path = self.topo.path(cam);
+        let my_pos = path
+            .iter()
+            .position(|&t| t == task)
+            .unwrap_or(path.len());
+        for &up in path.iter().take(my_pos) {
+            if self.topo.stage_of(up) == Stage::Fc {
+                let xi = self.fc_xi.clone();
+                if let Some(bm) = self.fc_budget[cam].get_mut(&q) {
+                    bm.apply(sig, &xi);
+                }
+            } else {
+                let lat = self.net.transfer_estimate(
+                    self.net.meta_bytes,
+                    self.now,
+                );
+                self.push(
+                    self.now + lat,
+                    Ev::SignalAt {
+                        task: up,
+                        query: q,
+                        sig,
+                    },
+                );
+            }
+        }
+
+        if self.cfg.probe_every > 0
+            && self.tasks[task].drop_count % self.cfg.probe_every == 0
+        {
+            let mut probe = ev.clone();
+            probe.header.probe = true;
+            let (next_task, bytes) = match stage {
+                Stage::Va => {
+                    (self.topo.cr_task(cam), self.net.candidate_bytes)
+                }
+                Stage::Cr => (self.topo.uv, self.net.meta_bytes),
+                _ => return,
+            };
+            let arrive = self.net.transfer(
+                self.tasks[task].node,
+                self.topo.node_of(next_task),
+                bytes,
+                self.now,
+            );
+            self.push(
+                arrive,
+                Ev::Arrive {
+                    task: next_task,
+                    ev: probe,
+                    batch: None,
+                },
+            );
+        }
+    }
+
+    // ---- sink (UV) -------------------------------------------------------
+
+    fn on_sink_arrive(&mut self, ev: Event, batch: Option<(u64, usize)>) {
+        let q = ev.header.query;
+        let latency = self.now - ev.header.src_arrival;
+        let gamma = self.cfg.gamma();
+
+        if ev.header.probe {
+            if latency <= gamma {
+                self.send_accepts(
+                    q,
+                    ev.header.camera,
+                    ev.header.id,
+                    gamma - latency,
+                    ev.header.sum_exec.max(1),
+                );
+            }
+            return;
+        }
+
+        let detected = matches!(
+            ev.payload,
+            Payload::Detection { detected: true, .. }
+        );
+        if detected {
+            if let Some(ctx) = self.ctx.get_mut(&q) {
+                ctx.detections += 1;
+            }
+        }
+        self.ledgers
+            .completed(q, ev.header.id, latency, gamma, detected);
+
+        if let Some((seq, size)) = batch {
+            let entry = self
+                .sink_batches
+                .entry(seq)
+                .or_insert((size, -1, 0, 0, q, ev.header.camera));
+            if latency > entry.1 {
+                entry.1 = latency;
+                entry.2 = ev.header.id;
+                entry.3 = ev.header.sum_exec.max(1);
+                entry.4 = q;
+                entry.5 = ev.header.camera;
+            }
+            entry.0 -= 1;
+            if entry.0 == 0 {
+                let (_, slowest_lat, slowest_id, sum_exec, sq, scam) =
+                    self.sink_batches.remove(&seq).unwrap();
+                let eps = gamma - slowest_lat;
+                if eps > millis(self.cfg.eps_max_ms) {
+                    self.send_accepts(sq, scam, slowest_id, eps, sum_exec);
+                }
+            }
+        }
+    }
+
+    fn send_accepts(
+        &mut self,
+        q: QueryId,
+        cam: usize,
+        event: u64,
+        eps: Micros,
+        sum_exec: Micros,
+    ) {
+        let sig = Signal::Accept {
+            event,
+            eps,
+            sum_exec,
+        };
+        let path = self.topo.path(cam);
+        for &up in path.iter().take(3) {
+            // FC, VA, CR
+            if self.topo.stage_of(up) == Stage::Fc {
+                let xi = self.fc_xi.clone();
+                if let Some(bm) = self.fc_budget[cam].get_mut(&q) {
+                    bm.apply(sig, &xi);
+                }
+            } else {
+                let lat = self
+                    .net
+                    .transfer_estimate(self.net.meta_bytes, self.now);
+                self.push(
+                    self.now + lat,
+                    Ev::SignalAt {
+                        task: up,
+                        query: q,
+                        sig,
+                    },
+                );
+            }
+        }
+    }
+
+    // ---- TL --------------------------------------------------------------
+
+    fn on_tl_tick(&mut self) {
+        if self.now < self.service_end {
+            self.push(self.now + SEC, Ev::TlTick);
+        }
+        let queries: Vec<QueryId> = self.active.clone();
+        for q in queries {
+            self.refresh_active_set(q);
+        }
+    }
+
+    fn refresh_active_set(&mut self, q: QueryId) {
+        let Some(ctx) = self.ctx.get_mut(&q) else { return };
+        let active = ctx.tl.active_set(&self.graph, self.now);
+        ctx.peak_active = ctx.peak_active.max(active.len());
+        for a in ctx.active_cams.iter_mut() {
+            *a = false;
+        }
+        for cam in active {
+            ctx.active_cams[cam] = true;
+        }
+    }
+
+    // ---- reporting -------------------------------------------------------
+
+    fn report(self) -> MultiQueryResult {
+        let mut queries = Vec::new();
+        for rec in self.registry.records() {
+            let mut r = QueryReport::from_record(rec);
+            r.summary = self.ledgers.summary(rec.id);
+            if let Some(&(d, p)) = self.finished_stats.get(&rec.id) {
+                r.detections = d;
+                r.peak_active = p;
+            } else if let Some(ctx) = self.ctx.get(&rec.id) {
+                r.detections = ctx.detections;
+                r.peak_active = ctx.peak_active;
+            }
+            queries.push(r);
+        }
+        let rejected = queries
+            .iter()
+            .filter(|q| q.status == QueryStatus::Rejected)
+            .count();
+        MultiQueryResult {
+            queries,
+            aggregate: self.ledgers.aggregate(),
+            peak_concurrent: self.peak_concurrent,
+            rejected,
+            queued: self.ever_queued as usize,
+        }
+    }
+}
+
+/// Convenience: run a multi-query experiment end to end.
+pub fn run(
+    cfg: ExperimentConfig,
+    mq: MultiQueryConfig,
+) -> MultiQueryResult {
+    MultiQueryDes::new(cfg, mq).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.num_cameras = 60;
+        c.workload.vertices = 60;
+        c.workload.edges = 160;
+        c.batching = BatchingKind::Dynamic { max: 25 };
+        c
+    }
+
+    fn mq_cfg(n: usize) -> MultiQueryConfig {
+        MultiQueryConfig {
+            num_queries: n,
+            mean_interarrival_secs: 5.0,
+            lifetime_secs: 60.0,
+            max_active: 16,
+            max_active_cameras: 10_000,
+            queue_capacity: 8,
+            priority_levels: 3,
+        }
+    }
+
+    #[test]
+    fn multi_query_run_conserves_per_query() {
+        let r = run(base_cfg(), mq_cfg(4));
+        let activated: Vec<_> = r.activated().collect();
+        assert_eq!(activated.len(), 4, "all queries admitted");
+        for q in &activated {
+            let s = q.summary.as_ref().expect("per-query ledger");
+            assert!(s.conserved(), "query {}: {:?}", q.id, s);
+            assert!(s.generated > 0, "query {} generated no events", q.id);
+        }
+        assert!(r.aggregate.conserved());
+        assert!(r.peak_concurrent >= 2, "{}", r.peak_concurrent);
+    }
+
+    #[test]
+    fn queries_detect_their_own_entities() {
+        let r = run(base_cfg(), mq_cfg(3));
+        let with_detections = r
+            .activated()
+            .filter(|q| q.detections > 0 || q.recall() > 0.0)
+            .count();
+        assert!(
+            with_detections >= 2,
+            "most queries should re-acquire their entity: {:?}",
+            r.queries
+                .iter()
+                .map(|q| (q.id, q.detections))
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(base_cfg(), mq_cfg(3));
+        let b = run(base_cfg(), mq_cfg(3));
+        assert_eq!(a.aggregate.generated, b.aggregate.generated);
+        assert_eq!(a.aggregate.on_time, b.aggregate.on_time);
+        assert_eq!(a.aggregate.dropped, b.aggregate.dropped);
+        assert_eq!(a.peak_concurrent, b.peak_concurrent);
+    }
+
+    #[test]
+    fn admission_limits_enforced() {
+        let mut mq = mq_cfg(5);
+        mq.max_active = 1;
+        mq.queue_capacity = 1;
+        // Arrivals every ~5 s with 60 s lifetimes: the first query is
+        // admitted, one waits, the rest are rejected.
+        let r = run(base_cfg(), mq);
+        assert_eq!(r.peak_concurrent, 1);
+        let statuses: Vec<QueryStatus> =
+            r.queries.iter().map(|q| q.status).collect();
+        assert!(statuses.contains(&QueryStatus::Rejected));
+        assert!(r.rejected >= 2, "{statuses:?}");
+        assert!(r.queued >= 1, "someone was wait-listed");
+        // The wait-listed query is promoted once the first completes.
+        let completed = statuses
+            .iter()
+            .filter(|&&s| s == QueryStatus::Completed)
+            .count();
+        assert!(completed >= 2, "{statuses:?}");
+    }
+
+    #[test]
+    fn per_query_ledgers_survive_overload_with_drops() {
+        let mut cfg = base_cfg();
+        cfg.cluster.cr_instances = 2;
+        cfg.drops_enabled = true;
+        let r = run(cfg, mq_cfg(4));
+        assert!(r.aggregate.conserved());
+        for q in r.activated() {
+            let s = q.summary.as_ref().unwrap();
+            assert!(s.conserved(), "query {}: {:?}", q.id, s);
+        }
+    }
+}

@@ -1,0 +1,1145 @@
+//! Live service front-end: accept tracking queries *at runtime* over
+//! shared wall-clock workers.
+//!
+//! [`TrackingService`] is the multi-tenant counterpart of
+//! [`crate::coordinator::live::LiveEngine`]: shared VA/CR worker
+//! threads (std threads + mpsc channels, like the live engine) serve
+//! every admitted query, composing cross-query batches through the same
+//! [`FairShareBatcher`] the DES engine uses. Queries are submitted and
+//! cancelled while the service runs; admission control applies the same
+//! [`AdmissionController`] policy as the DES mode, and wait-listed
+//! queries are promoted when capacity frees up (completion or cancel).
+//!
+//! Scoring is pluggable through [`ScoreBackend`]: the bundled
+//! [`SimBackend`] scores deterministically from ground-truth labels (so
+//! the service layer is fully testable without PJRT), while a
+//! PJRT-backed deployment implements the trait over
+//! [`crate::runtime::ModelPool`] (one `execute` per per-query group of
+//! a batch, since each query carries its own embedding).
+//!
+//! Batching SLA: every event gets the deadline
+//! `min(γ, max_batch_delay)` past its source arrival, which drives both
+//! dynamic batch formation and (when drops are enabled) the
+//! admission-time drop point. Budget *adaptation* (accept/reject
+//! signals) is exercised in the engines; the front keeps the static
+//! γ-bound deadline.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::tl::TrackingLogic;
+use crate::dataflow::{
+    Event, Header, Partitioner, Payload, QueryId, Stage,
+};
+use crate::metrics::{QueryLedgers, Summary};
+use crate::roadnet::{generate, place_cameras, Camera, Graph};
+use crate::service::admission::{
+    Admission, AdmissionController, AdmissionPolicy,
+};
+use crate::service::query::{
+    QueryRegistry, QueryReport, QuerySpec, QueryStatus,
+};
+use crate::service::scheduler::FairShareBatcher;
+use crate::sim::{EntityWalk, GroundTruth};
+use crate::tuning::budget::BUDGET_INF;
+use crate::tuning::{drop_at_queue, BatcherPoll, QueuedEvent, XiModel};
+use crate::util::{millis, secs, Micros, SEC};
+
+/// Pluggable model execution for the service front.
+pub trait ScoreBackend: Send + Sync {
+    /// Score every event of one query's group within a batch (one score
+    /// per event, higher = better match against this query).
+    fn score(
+        &self,
+        stage: Stage,
+        query: QueryId,
+        events: &[Event],
+    ) -> Vec<f32>;
+
+    /// Service-time model for a stage (drives batching deadlines and
+    /// the modelled execution duration).
+    fn xi(&self, stage: Stage) -> XiModel;
+}
+
+/// Deterministic ground-truth-driven backend: frames carry their
+/// per-query truth label, scores follow it with a seeded hash coin.
+pub struct SimBackend {
+    pub seed: u64,
+    /// P(score high | entity present).
+    pub tp: f64,
+    /// P(score high | entity absent).
+    pub fp: f64,
+    /// VA/CR per-batch service models (small, so tests stay fast).
+    pub va_xi: XiModel,
+    pub cr_xi: XiModel,
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        Self {
+            seed: 2019,
+            tp: 0.97,
+            fp: 0.01,
+            va_xi: XiModel::affine_ms(1.0, 0.3),
+            cr_xi: XiModel::affine_ms(2.0, 0.5),
+        }
+    }
+}
+
+impl SimBackend {
+    /// Per-(event, query, stage) coin — the stage salt makes VA and CR
+    /// draws independent, so the pipeline's combined error rates are
+    /// tp² / fp², not a single shared draw.
+    fn coin(&self, ev: &Event, q: QueryId, stage: Stage) -> f64 {
+        let stage_salt = match stage {
+            Stage::Cr => 0xC12A_5E0F_u64,
+            _ => 0x7A11_D00D_u64,
+        };
+        let mut h = self.seed
+            ^ ev.header.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (q as u64).wrapping_mul(0xC2B2_AE35)
+            ^ stage_salt.wrapping_mul(0x9E37_79B9);
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        h ^= h >> 33;
+        h as f64 / u64::MAX as f64
+    }
+}
+
+impl ScoreBackend for SimBackend {
+    fn score(
+        &self,
+        stage: Stage,
+        query: QueryId,
+        events: &[Event],
+    ) -> Vec<f32> {
+        events
+            .iter()
+            .map(|ev| {
+                let present = ev.payload.entity_present() == Some(true);
+                let p = if present { self.tp } else { self.fp };
+                if self.coin(ev, query, stage) < p {
+                    0.9
+                } else {
+                    0.1
+                }
+            })
+            .collect()
+    }
+
+    fn xi(&self, stage: Stage) -> XiModel {
+        match stage {
+            Stage::Cr => self.cr_xi.clone(),
+            _ => self.va_xi.clone(),
+        }
+    }
+}
+
+/// Worker inbox messages.
+enum Msg {
+    Ev(Event),
+    Register(QueryId, u32),
+    Deregister(QueryId),
+    Stop,
+}
+
+/// Per-query runtime state owned by the control plane. Ground truth is
+/// behind an `Arc` so the feed loop can snapshot it and compute
+/// visibility *outside* the state lock.
+struct LiveCtx {
+    t0: Micros,
+    end: Micros,
+    gt: Arc<GroundTruth>,
+    tl: TrackingLogic,
+    active_cams: Vec<bool>,
+    detections: u64,
+    peak_active: usize,
+}
+
+/// Control-plane state behind one mutex.
+struct State {
+    registry: QueryRegistry,
+    ledgers: QueryLedgers,
+    ctx: Vec<(QueryId, LiveCtx)>,
+    /// Camera-budget reservations for queries admitted (phase A) whose
+    /// context is still being built outside the lock (phase B) —
+    /// counted by [`State::active_cameras_total`] so concurrent
+    /// admissions cannot overshoot `max_active_cameras` in the window.
+    reserved_cameras: Vec<(QueryId, usize)>,
+    finished_stats: Vec<(QueryId, (u64, usize))>,
+    next_event_id: u64,
+    peak_concurrent: usize,
+}
+
+impl State {
+    fn ctx_of(&mut self, q: QueryId) -> Option<&mut LiveCtx> {
+        self.ctx
+            .iter_mut()
+            .find(|(id, _)| *id == q)
+            .map(|(_, c)| c)
+    }
+
+    fn take_ctx(&mut self, q: QueryId) -> Option<LiveCtx> {
+        self.ctx
+            .iter()
+            .position(|(id, _)| *id == q)
+            .map(|i| self.ctx.remove(i).1)
+    }
+
+    fn active_cameras_total(&self) -> usize {
+        let installed: usize = self
+            .ctx
+            .iter()
+            .map(|(_, c)| c.active_cams.iter().filter(|&&a| a).count())
+            .sum();
+        let reserved: usize =
+            self.reserved_cameras.iter().map(|&(_, n)| n).sum();
+        installed + reserved
+    }
+
+    fn release_reservation(&mut self, q: QueryId) {
+        self.reserved_cameras.retain(|&(id, _)| id != q);
+    }
+}
+
+struct Inner {
+    cfg: ExperimentConfig,
+    graph: Graph,
+    cams: Vec<Camera>,
+    admission: AdmissionController,
+    state: Mutex<State>,
+    start: Instant,
+    stopping: AtomicBool,
+}
+
+impl Inner {
+    fn now_us(&self) -> Micros {
+        self.start.elapsed().as_micros() as Micros
+    }
+}
+
+/// Phase A of activation — the registry transition plus worker
+/// registration. Caller holds the state lock; the expensive runtime
+/// context ([`build_ctx`]) is deliberately **not** built here, so a
+/// submit cannot stall the dataflow behind the lock.
+fn admit_locked(
+    inner: &Inner,
+    st: &mut State,
+    worker_tx: &[Sender<Msg>],
+    id: QueryId,
+    now: Micros,
+) {
+    st.registry
+        .activate(id, now)
+        .expect("admission checked the transition");
+    st.peak_concurrent =
+        st.peak_concurrent.max(st.registry.num_active());
+    let spec = st.registry.record(id).unwrap().spec.clone();
+    // Hold the projected camera budget until the context is installed,
+    // so admissions racing with phase B cannot overshoot the limit.
+    st.reserved_cameras.push((
+        id,
+        spec.initial_camera_estimate(inner.cfg.num_cameras),
+    ));
+    for tx in worker_tx {
+        let _ = tx.send(Msg::Register(id, spec.weight()));
+    }
+}
+
+/// Phase B — build the query's runtime context (entity walk, ground
+/// truth, TL). Lock-free: this is the expensive part of activation.
+fn build_ctx(
+    inner: &Inner,
+    spec: &QuerySpec,
+    id: QueryId,
+    now: Micros,
+) -> LiveCtx {
+    let lifetime = secs(spec.lifetime_secs);
+    let start_cam = spec
+        .start_camera
+        .unwrap_or(0)
+        .min(inner.cams.len().saturating_sub(1));
+    let start_vertex = inner.cams[start_cam].vertex;
+    let walk = EntityWalk::simulate(
+        &inner.graph,
+        start_vertex,
+        inner.cfg.workload.entity_speed_mps,
+        lifetime + 10 * SEC,
+        inner.cfg.seed
+            ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let gt = GroundTruth::compute(
+        &inner.graph,
+        &inner.cams,
+        &walk,
+        lifetime + 10 * SEC,
+        100_000,
+    );
+    let mut tl = TrackingLogic::new(
+        inner.cfg.tl,
+        inner.cfg.tl_peak_speed_mps,
+        inner.cfg.workload.mean_road_m,
+        inner.cfg.workload.fov_m,
+        &inner.cams,
+    );
+    tl.on_detection(start_cam, now, true);
+    let active_set = tl.active_set(&inner.graph, now);
+    let mut active_cams = vec![false; inner.cfg.num_cameras];
+    for cam in &active_set {
+        active_cams[*cam] = true;
+    }
+    let peak = active_set.len();
+    LiveCtx {
+        t0: now,
+        end: now + lifetime,
+        gt: Arc::new(gt),
+        tl,
+        active_cams,
+        detections: 0,
+        peak_active: peak,
+    }
+}
+
+/// Phase C — install a built context, unless the query was cancelled
+/// in the window between phases (then the context is discarded). The
+/// phase-A camera reservation is released either way (the installed
+/// context's real spotlight takes over the accounting).
+fn install_ctx(inner: &Inner, id: QueryId, ctx: LiveCtx) {
+    let mut st = inner.state.lock().unwrap();
+    st.release_reservation(id);
+    if st.registry.status(id) == Some(QueryStatus::Active)
+        && !st.ctx.iter().any(|(q, _)| *q == id)
+    {
+        st.ctx.push((id, ctx));
+    }
+}
+
+/// Run phases B+C for a batch of freshly admitted queries (specs
+/// snapshotted under the lock, contexts built outside it).
+fn finish_activation(
+    inner: &Inner,
+    admitted: Vec<(QueryId, QuerySpec, Micros)>,
+) {
+    for (id, spec, now) in admitted {
+        let ctx = build_ctx(inner, &spec, id, now);
+        install_ctx(inner, id, ctx);
+    }
+}
+
+/// Promote wait-listed queries while they fit (phase A only). Caller
+/// holds the lock and must pass the returned list to
+/// [`finish_activation`] *after releasing it*.
+#[must_use]
+fn promote_locked(
+    inner: &Inner,
+    st: &mut State,
+    worker_tx: &[Sender<Msg>],
+    now: Micros,
+) -> Vec<(QueryId, QuerySpec, Micros)> {
+    let mut admitted = Vec::new();
+    while let Some(next) = st.registry.next_pending() {
+        let spec = st.registry.record(next).unwrap().spec.clone();
+        let decision = inner.admission.decide(
+            &spec,
+            st.registry.num_active(),
+            st.registry.num_queued(),
+            st.active_cameras_total(),
+            inner.cfg.num_cameras,
+        );
+        if decision == Admission::Admit {
+            admit_locked(inner, st, worker_tx, next, now);
+            admitted.push((next, spec, now));
+        } else {
+            break;
+        }
+    }
+    admitted
+}
+
+/// Final report of a service run.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub queries: Vec<QueryReport>,
+    pub aggregate: Summary,
+    pub peak_concurrent: usize,
+    pub wall_secs: f64,
+}
+
+/// The running multi-query service.
+pub struct TrackingService {
+    inner: Arc<Inner>,
+    /// All worker inboxes (VA then CR) for registration broadcasts.
+    worker_tx: Vec<Sender<Msg>>,
+    va_tx: Vec<Sender<Msg>>,
+    cr_tx: Vec<Sender<Msg>>,
+    feed: Option<JoinHandle<()>>,
+    /// VA and CR worker handles, kept separate so shutdown can be
+    /// staged upstream-first (VA flushes into live CR workers).
+    va_workers: Vec<JoinHandle<()>>,
+    cr_workers: Vec<JoinHandle<()>>,
+    sink: Option<JoinHandle<()>>,
+    sink_tx: Sender<Msg>,
+    max_batch_delay: Micros,
+}
+
+impl TrackingService {
+    /// Start the shared workers and the feed loop; returns immediately.
+    /// `cfg` describes the camera network and worker counts; queries
+    /// are then submitted at runtime.
+    pub fn start(
+        cfg: ExperimentConfig,
+        policy: AdmissionPolicy,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Result<Self> {
+        let graph = generate(&cfg.workload, cfg.seed);
+        let cams = place_cameras(
+            &graph,
+            cfg.num_cameras,
+            0,
+            cfg.workload.fov_m,
+        );
+        let inner = Arc::new(Inner {
+            admission: AdmissionController::new(policy),
+            state: Mutex::new(State {
+                registry: QueryRegistry::new(),
+                ledgers: QueryLedgers::new(),
+                ctx: Vec::new(),
+                reserved_cameras: Vec::new(),
+                finished_stats: Vec::new(),
+                next_event_id: 0,
+                peak_concurrent: 0,
+            }),
+            start: Instant::now(),
+            stopping: AtomicBool::new(false),
+            graph,
+            cams,
+            cfg,
+        });
+        let cfg = &inner.cfg;
+        let max_batch_delay = millis(250.0).min(cfg.gamma());
+
+        let n_va = cfg.cluster.va_instances.clamp(1, 4);
+        let n_cr = cfg.cluster.cr_instances.clamp(1, 4);
+        let va_part = Partitioner::new(n_va);
+        let cr_part = Partitioner::new(n_cr);
+
+        let (sink_tx, sink_rx) = mpsc::channel::<Msg>();
+
+        // CR workers → sink.
+        let mut cr_tx = Vec::new();
+        let mut cr_workers = Vec::new();
+        for _ in 0..n_cr {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            cr_tx.push(tx);
+            let out = sink_tx.clone();
+            let inner_c = Arc::clone(&inner);
+            let backend_c = Arc::clone(&backend);
+            let delay = max_batch_delay;
+            cr_workers.push(std::thread::spawn(move || {
+                worker_loop(Stage::Cr, rx, inner_c, backend_c, delay, {
+                    move |ev| {
+                        let _ = out.send(Msg::Ev(ev));
+                    }
+                });
+            }));
+        }
+
+        // VA workers → CR workers.
+        let mut va_tx = Vec::new();
+        let mut va_workers = Vec::new();
+        for _ in 0..n_va {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            va_tx.push(tx);
+            let crs = cr_tx.clone();
+            let inner_c = Arc::clone(&inner);
+            let backend_c = Arc::clone(&backend);
+            let delay = max_batch_delay;
+            va_workers.push(std::thread::spawn(move || {
+                worker_loop(Stage::Va, rx, inner_c, backend_c, delay, {
+                    move |ev| {
+                        let _ = crs[cr_part.route(ev.header.camera)]
+                            .send(Msg::Ev(ev));
+                    }
+                });
+            }));
+        }
+
+        let mut worker_tx: Vec<Sender<Msg>> = Vec::new();
+        worker_tx.extend(va_tx.iter().cloned());
+        worker_tx.extend(cr_tx.iter().cloned());
+
+        // Sink thread: completion accounting + TL updates.
+        let sink = {
+            let inner_c = Arc::clone(&inner);
+            std::thread::spawn(move || sink_loop(inner_c, sink_rx))
+        };
+
+        // Feed thread: frame generation, expiry, spotlight refresh,
+        // wait-queue promotion.
+        let feed = {
+            let inner_c = Arc::clone(&inner);
+            let vas = va_tx.clone();
+            let all = worker_tx.clone();
+            std::thread::spawn(move || {
+                feed_loop(inner_c, vas, va_part, all)
+            })
+        };
+
+        Ok(Self {
+            inner,
+            worker_tx,
+            va_tx,
+            cr_tx,
+            feed: Some(feed),
+            va_workers,
+            cr_workers,
+            sink: Some(sink),
+            sink_tx,
+            max_batch_delay,
+        })
+    }
+
+    /// Submit a query; admission control admits, wait-lists or rejects
+    /// it. Returns the query id and its initial status.
+    pub fn submit(
+        &self,
+        spec: QuerySpec,
+    ) -> Result<(QueryId, QueryStatus)> {
+        let now = self.inner.now_us();
+        let mut st = self.inner.state.lock().unwrap();
+        let id = st.registry.submit(spec.clone(), now);
+        let decision = self.inner.admission.decide(
+            &spec,
+            st.registry.num_active(),
+            st.registry.num_queued(),
+            st.active_cameras_total(),
+            self.inner.cfg.num_cameras,
+        );
+        match decision {
+            Admission::Admit => {
+                admit_locked(
+                    &self.inner,
+                    &mut st,
+                    &self.worker_tx,
+                    id,
+                    now,
+                );
+                drop(st);
+                // Expensive context construction happens outside the
+                // lock so concurrent tenants keep flowing.
+                let ctx = build_ctx(&self.inner, &spec, id, now);
+                install_ctx(&self.inner, id, ctx);
+                Ok((id, QueryStatus::Active))
+            }
+            Admission::Queue => {
+                st.registry.enqueue(id).map_err(|e| anyhow!(e))?;
+                Ok((id, QueryStatus::Queued))
+            }
+            Admission::Reject(_reason) => {
+                st.registry.reject(id, now).map_err(|e| anyhow!(e))?;
+                Ok((id, QueryStatus::Rejected))
+            }
+        }
+    }
+
+    /// Cancel a submitted/queued/active query; frees its capacity and
+    /// promotes wait-listed queries.
+    pub fn cancel(&self, id: QueryId) -> Result<()> {
+        let now = self.inner.now_us();
+        let mut st = self.inner.state.lock().unwrap();
+        st.registry.cancel(id, now).map_err(|e| anyhow!(e))?;
+        st.release_reservation(id);
+        if let Some(ctx) = st.take_ctx(id) {
+            st.finished_stats
+                .push((id, (ctx.detections, ctx.peak_active)));
+        }
+        for tx in &self.worker_tx {
+            let _ = tx.send(Msg::Deregister(id));
+        }
+        let admitted =
+            promote_locked(&self.inner, &mut st, &self.worker_tx, now);
+        drop(st);
+        finish_activation(&self.inner, admitted);
+        Ok(())
+    }
+
+    /// Current lifecycle status of a query.
+    pub fn status(&self, id: QueryId) -> Option<QueryStatus> {
+        self.inner.state.lock().unwrap().registry.status(id)
+    }
+
+    /// The service's batching-delay cap (µs).
+    pub fn max_batch_delay(&self) -> Micros {
+        self.max_batch_delay
+    }
+
+    /// Stop the service, join every thread and build the final report.
+    ///
+    /// Shutdown is staged upstream-first: feed, then VA workers (whose
+    /// final flush lands in still-running CR workers), then CR workers
+    /// (flushing into the still-running sink), then the sink — so no
+    /// in-flight event is silently lost and per-query conservation
+    /// holds in the report.
+    pub fn stop(mut self) -> ServiceReport {
+        self.inner.stopping.store(true, Ordering::SeqCst);
+        if let Some(h) = self.feed.take() {
+            let _ = h.join();
+        }
+        for tx in &self.va_tx {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.va_workers.drain(..) {
+            let _ = h.join();
+        }
+        for tx in &self.cr_tx {
+            let _ = tx.send(Msg::Stop);
+        }
+        for h in self.cr_workers.drain(..) {
+            let _ = h.join();
+        }
+        let _ = self.sink_tx.send(Msg::Stop);
+        if let Some(h) = self.sink.take() {
+            let _ = h.join();
+        }
+        let wall = self.inner.start.elapsed().as_secs_f64();
+        let st = self.inner.state.lock().unwrap();
+        let mut queries = Vec::new();
+        for rec in st.registry.records() {
+            let mut r = QueryReport::from_record(rec);
+            r.summary = st.ledgers.summary(rec.id);
+            if let Some((_, (d, p))) = st
+                .finished_stats
+                .iter()
+                .find(|(q, _)| *q == rec.id)
+            {
+                r.detections = *d;
+                r.peak_active = *p;
+            } else if let Some((_, ctx)) =
+                st.ctx.iter().find(|(q, _)| *q == rec.id)
+            {
+                r.detections = ctx.detections;
+                r.peak_active = ctx.peak_active;
+            }
+            queries.push(r);
+        }
+        ServiceReport {
+            queries,
+            aggregate: st.ledgers.aggregate(),
+            peak_concurrent: st.peak_concurrent,
+            wall_secs: wall,
+        }
+    }
+}
+
+/// Frame generation: one event per (active query, active camera) at
+/// the configured fps; also expires elapsed queries (promoting
+/// wait-listed ones) and refreshes per-query spotlights.
+fn feed_loop(
+    inner: Arc<Inner>,
+    va_tx: Vec<Sender<Msg>>,
+    va_part: Partitioner,
+    all_tx: Vec<Sender<Msg>>,
+) {
+    let cfg = &inner.cfg;
+    let period = Duration::from_micros((1e6 / cfg.fps.max(0.1)) as u64);
+    let mut frame_no: u64 = 0;
+    let mut next_fire = Instant::now();
+    while !inner.stopping.load(Ordering::SeqCst) {
+        let now = inner.now_us();
+        let mut outgoing: Vec<Event> = Vec::new();
+        let mut admitted = Vec::new();
+        let mut snapshots: Vec<(
+            QueryId,
+            Micros,
+            Arc<GroundTruth>,
+            Vec<usize>,
+        )> = Vec::new();
+        {
+            let mut st = inner.state.lock().unwrap();
+            // Expire elapsed queries.
+            let expired: Vec<QueryId> = st
+                .ctx
+                .iter()
+                .filter(|(_, c)| now >= c.end)
+                .map(|(q, _)| *q)
+                .collect();
+            for q in &expired {
+                let _ = st.registry.complete(*q, now);
+                if let Some(ctx) = st.take_ctx(*q) {
+                    st.finished_stats.push((
+                        *q,
+                        (ctx.detections, ctx.peak_active),
+                    ));
+                }
+                for tx in &all_tx {
+                    let _ = tx.send(Msg::Deregister(*q));
+                }
+            }
+            if !expired.is_empty() {
+                admitted =
+                    promote_locked(&inner, &mut st, &all_tx, now);
+            }
+            // Refresh spotlights and snapshot what frame generation
+            // needs; the O(queries × cameras) ground-truth scan runs
+            // *outside* the lock so workers and the sink keep flowing.
+            for (_, ctx) in st.ctx.iter_mut() {
+                let active = ctx.tl.active_set(&inner.graph, now);
+                ctx.peak_active = ctx.peak_active.max(active.len());
+                for a in ctx.active_cams.iter_mut() {
+                    *a = false;
+                }
+                for cam in active {
+                    ctx.active_cams[cam] = true;
+                }
+            }
+            for (q, ctx) in st.ctx.iter() {
+                let cams: Vec<usize> = (0..cfg.num_cameras)
+                    .filter(|&cam| ctx.active_cams[cam])
+                    .collect();
+                snapshots.push((
+                    *q,
+                    ctx.t0,
+                    Arc::clone(&ctx.gt),
+                    cams,
+                ));
+            }
+        }
+        // Visibility lookups, lock-free.
+        let mut frames: Vec<(QueryId, usize, bool)> = Vec::new();
+        for (q, t0, gt, cams) in &snapshots {
+            for &cam in cams {
+                frames.push((*q, cam, gt.visible(cam, now - t0)));
+            }
+        }
+        // Short second critical section: allocate ids + ledger.
+        {
+            let mut st = inner.state.lock().unwrap();
+            for (q, cam, present) in frames {
+                if st.registry.status(q) != Some(QueryStatus::Active) {
+                    continue; // cancelled between the two sections
+                }
+                let id = st.next_event_id;
+                st.next_event_id += 1;
+                let header = Header::new(id, cam, frame_no, now)
+                    .with_query(q);
+                st.ledgers.generated(q, id, present);
+                outgoing.push(Event {
+                    header,
+                    payload: Payload::Frame {
+                        entity_present: present,
+                    },
+                });
+            }
+        }
+        for ev in outgoing {
+            let _ = va_tx[va_part.route(ev.header.camera)]
+                .send(Msg::Ev(ev));
+        }
+        // Promoted queries' contexts are built outside the lock; their
+        // frames start on the next tick.
+        finish_activation(&inner, admitted);
+        frame_no += 1;
+        next_fire += period;
+        let now_i = Instant::now();
+        if next_fire > now_i {
+            std::thread::sleep(next_fire - now_i);
+        } else {
+            next_fire = now_i;
+        }
+    }
+}
+
+/// Shared executor loop: fair-share batching + backend scoring.
+fn worker_loop(
+    stage: Stage,
+    rx: Receiver<Msg>,
+    inner: Arc<Inner>,
+    backend: Arc<dyn ScoreBackend>,
+    max_batch_delay: Micros,
+    mut forward: impl FnMut(Event),
+) {
+    let xi = backend.xi(stage);
+    let gamma = inner.cfg.gamma();
+    let drops_enabled = inner.cfg.drops_enabled;
+    let deadline_window = gamma.min(max_batch_delay);
+    // Max batch size follows the configured batching knob, matching
+    // what the multi-query DES mode derives from the same config.
+    let m_max = match inner.cfg.batching {
+        crate::config::BatchingKind::Static { size } => size,
+        crate::config::BatchingKind::Dynamic { max }
+        | crate::config::BatchingKind::Nob { max } => max,
+    };
+    let mut batcher: FairShareBatcher<Event> =
+        FairShareBatcher::new(m_max.max(1));
+
+    fn handle(
+        msg: Msg,
+        stage: Stage,
+        inner: &Inner,
+        batcher: &mut FairShareBatcher<Event>,
+        xi: &XiModel,
+        gamma: Micros,
+        drops_enabled: bool,
+        deadline_window: Micros,
+    ) -> bool {
+        match msg {
+            Msg::Stop => false,
+            Msg::Register(q, w) => {
+                batcher.register(q, w);
+                true
+            }
+            Msg::Deregister(q) => {
+                let left = batcher.deregister(q);
+                if !left.is_empty() {
+                    let mut st = inner.state.lock().unwrap();
+                    for qe in left {
+                        st.ledgers.dropped(q, qe.item.header.id, stage);
+                    }
+                }
+                true
+            }
+            Msg::Ev(ev) => {
+                let now = inner.now_us();
+                let q = ev.header.query;
+                let u = now - ev.header.src_arrival;
+                let exempt = ev.header.avoid_drop || ev.header.probe;
+                if drops_enabled
+                    && drop_at_queue(exempt, u, xi.xi(1), gamma)
+                {
+                    inner
+                        .state
+                        .lock()
+                        .unwrap()
+                        .ledgers
+                        .dropped(q, ev.header.id, stage);
+                    return true;
+                }
+                let deadline = ev.header.src_arrival + deadline_window;
+                let id = ev.header.id;
+                let rejected = batcher.push(
+                    q,
+                    QueuedEvent {
+                        item: ev,
+                        id,
+                        arrival: now,
+                        deadline,
+                    },
+                );
+                if let Some(qe) = rejected {
+                    // Late in-flight event of a completed/cancelled
+                    // query: account it so per-query conservation
+                    // holds; do not resurrect the query.
+                    inner
+                        .state
+                        .lock()
+                        .unwrap()
+                        .ledgers
+                        .dropped(q, qe.item.header.id, stage);
+                }
+                true
+            }
+        }
+    }
+
+    'outer: loop {
+        let now = inner.now_us();
+        match batcher.poll(now, &xi) {
+            BatcherPoll::Ready(batch) => {
+                exec_batch(
+                    stage,
+                    batch,
+                    backend.as_ref(),
+                    &xi,
+                    &mut forward,
+                );
+                continue;
+            }
+            BatcherPoll::Timer(at) => {
+                let wait = (at - now).max(0) as u64;
+                match rx.recv_timeout(Duration::from_micros(
+                    wait.min(100_000),
+                )) {
+                    Ok(msg) => {
+                        if !handle(
+                            msg,
+                            stage,
+                            &inner,
+                            &mut batcher,
+                            &xi,
+                            gamma,
+                            drops_enabled,
+                            deadline_window,
+                        ) {
+                            break 'outer;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            BatcherPoll::Idle => {
+                match rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(msg) => {
+                        if !handle(
+                            msg,
+                            stage,
+                            &inner,
+                            &mut batcher,
+                            &xi,
+                            gamma,
+                            drops_enabled,
+                            deadline_window,
+                        ) {
+                            break 'outer;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        while let Ok(msg) = rx.try_recv() {
+            if !handle(
+                msg,
+                stage,
+                &inner,
+                &mut batcher,
+                &xi,
+                gamma,
+                drops_enabled,
+                deadline_window,
+            ) {
+                break 'outer;
+            }
+        }
+    }
+    // Final flush: execute whatever is still queued.
+    loop {
+        match batcher.poll(BUDGET_INF / 2, &xi) {
+            BatcherPoll::Ready(batch) => exec_batch(
+                stage,
+                batch,
+                backend.as_ref(),
+                &xi,
+                &mut forward,
+            ),
+            _ => break,
+        }
+    }
+}
+
+/// Execute one cross-query batch: one shared execution sleep for the
+/// whole batch, then per-query-group scoring (each query carries its
+/// own embedding) and forwarding.
+fn exec_batch(
+    stage: Stage,
+    batch: Vec<QueuedEvent<Event>>,
+    backend: &dyn ScoreBackend,
+    xi: &XiModel,
+    forward: &mut impl FnMut(Event),
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let b = batch.len();
+    let dur = xi.xi(b).clamp(0, 50_000);
+    std::thread::sleep(Duration::from_micros(dur as u64));
+
+    // Group events by query, preserving per-query order.
+    let mut groups: Vec<(QueryId, Vec<Event>)> = Vec::new();
+    for qe in batch {
+        let ev = qe.item;
+        let q = ev.header.query;
+        match groups.iter_mut().find(|(g, _)| *g == q) {
+            Some((_, v)) => v.push(ev),
+            None => groups.push((q, vec![ev])),
+        }
+    }
+    for (q, events) in groups {
+        let scores = backend.score(stage, q, &events);
+        for (mut ev, score) in
+            events.into_iter().zip(scores.into_iter())
+        {
+            match stage {
+                Stage::Va => {
+                    if let Payload::Frame { entity_present } =
+                        ev.payload
+                    {
+                        ev.payload = Payload::Candidate {
+                            entity_present,
+                            score,
+                        };
+                    }
+                }
+                Stage::Cr => {
+                    if let Payload::Candidate {
+                        entity_present: _,
+                        score: va_score,
+                    } = ev.payload
+                    {
+                        let detected = va_score > 0.5 && score > 0.5;
+                        if detected {
+                            ev.header.avoid_drop = true;
+                        }
+                        ev.payload = Payload::Detection {
+                            detected,
+                            confidence: score,
+                        };
+                    }
+                }
+                _ => {}
+            }
+            forward(ev);
+        }
+    }
+}
+
+/// Sink: completion accounting + per-query TL updates.
+fn sink_loop(inner: Arc<Inner>, rx: Receiver<Msg>) {
+    let gamma = inner.cfg.gamma();
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(Msg::Ev(ev)) => {
+                let now = inner.now_us();
+                let q = ev.header.query;
+                if ev.header.probe {
+                    continue;
+                }
+                let latency = now - ev.header.src_arrival;
+                let detected = matches!(
+                    ev.payload,
+                    Payload::Detection { detected: true, .. }
+                );
+                let mut st = inner.state.lock().unwrap();
+                st.ledgers.completed(
+                    q,
+                    ev.header.id,
+                    latency,
+                    gamma,
+                    detected,
+                );
+                if let Some(ctx) = st.ctx_of(q) {
+                    if detected {
+                        ctx.detections += 1;
+                    }
+                    ctx.tl.on_detection(
+                        ev.header.camera,
+                        ev.header.captured,
+                        detected,
+                    );
+                }
+            }
+            Ok(Msg::Stop) => break,
+            Ok(_) => {}
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut c = ExperimentConfig::default();
+        c.num_cameras = 8;
+        c.workload.vertices = 40;
+        c.workload.edges = 100;
+        c.fps = 10.0;
+        c.gamma_ms = 2_000.0;
+        c.cluster.va_instances = 2;
+        c.cluster.cr_instances = 2;
+        c
+    }
+
+    fn policy(max_active: usize, qcap: usize) -> AdmissionPolicy {
+        AdmissionPolicy {
+            max_active,
+            max_active_cameras: 10_000,
+            queue_capacity: qcap,
+        }
+    }
+
+    fn spec(label: &str, cam: usize, secs: f64) -> QuerySpec {
+        QuerySpec {
+            lifetime_secs: secs,
+            ..QuerySpec::new(label, cam)
+        }
+    }
+
+    #[test]
+    fn service_runs_queries_to_completion() {
+        let svc = TrackingService::start(
+            small_cfg(),
+            policy(8, 4),
+            Arc::new(SimBackend::default()),
+        )
+        .unwrap();
+        let (a, st_a) = svc.submit(spec("alpha", 0, 0.8)).unwrap();
+        let (b, st_b) = svc.submit(spec("beta", 3, 0.8)).unwrap();
+        assert_eq!(st_a, QueryStatus::Active);
+        assert_eq!(st_b, QueryStatus::Active);
+        std::thread::sleep(Duration::from_millis(1_400));
+        // Windows elapsed: both completed by the feed loop.
+        assert_eq!(svc.status(a), Some(QueryStatus::Completed));
+        assert_eq!(svc.status(b), Some(QueryStatus::Completed));
+        let report = svc.stop();
+        assert_eq!(report.peak_concurrent, 2);
+        for q in report.queries.iter() {
+            let s = q.summary.as_ref().expect("per-query ledger");
+            assert!(s.generated > 0, "query {} idle", q.id);
+            assert!(s.conserved(), "query {}: {:?}", q.id, s);
+        }
+        assert!(report.aggregate.conserved());
+    }
+
+    #[test]
+    fn admission_queue_and_reject_at_runtime() {
+        let svc = TrackingService::start(
+            small_cfg(),
+            policy(1, 1),
+            Arc::new(SimBackend::default()),
+        )
+        .unwrap();
+        let (a, st_a) = svc.submit(spec("a", 0, 5.0)).unwrap();
+        let (b, st_b) = svc.submit(spec("b", 1, 5.0)).unwrap();
+        let (c, st_c) = svc.submit(spec("c", 2, 5.0)).unwrap();
+        assert_eq!(st_a, QueryStatus::Active);
+        assert_eq!(st_b, QueryStatus::Queued);
+        assert_eq!(st_c, QueryStatus::Rejected);
+        assert_eq!(svc.status(c), Some(QueryStatus::Rejected));
+        // Cancelling the active query promotes the wait-listed one.
+        svc.cancel(a).unwrap();
+        assert_eq!(svc.status(b), Some(QueryStatus::Active));
+        let report = svc.stop();
+        assert_eq!(report.peak_concurrent, 1);
+    }
+
+    #[test]
+    fn cancel_mid_run_keeps_ledgers_consistent() {
+        let svc = TrackingService::start(
+            small_cfg(),
+            policy(4, 2),
+            Arc::new(SimBackend::default()),
+        )
+        .unwrap();
+        let (a, _) = svc.submit(spec("a", 0, 5.0)).unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        svc.cancel(a).unwrap();
+        assert_eq!(svc.status(a), Some(QueryStatus::Cancelled));
+        std::thread::sleep(Duration::from_millis(200));
+        let report = svc.stop();
+        let qa = &report.queries[0];
+        if let Some(s) = &qa.summary {
+            assert!(s.conserved(), "{s:?}");
+        }
+    }
+}

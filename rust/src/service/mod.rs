@@ -1,0 +1,52 @@
+//! Multi-query tracking service: registry → admission → fair-share
+//! scheduling over the *shared* VA/CR workers.
+//!
+//! The paper's platform runs one tracking query per deployment. The
+//! service layer turns that into a multi-tenant system:
+//!
+//! * [`query`] — the **query registry**: submit / queue / activate /
+//!   cancel / complete lifecycle with a per-query [`QuerySpec`] (app
+//!   kind, start camera, priority, tracking window).
+//! * [`admission`] — **admission control**: new queries are admitted,
+//!   wait-listed or rejected based on concurrent-query and aggregate
+//!   active-camera limits, so a burst of queries cannot melt the
+//!   cluster the way an all-active bootstrap would (§2.3).
+//! * [`scheduler`] — the **fair-share batcher**: every VA/CR executor
+//!   keeps per-query FIFO queues and composes *cross-query batches*
+//!   (one model execution serves frames tagged for different queries)
+//!   under weighted deficit-round-robin, so one query collapsing its
+//!   completion budget or blowing up its spotlight cannot starve the
+//!   rest. Budgets, drops and ledgers stay keyed per query
+//!   ([`crate::metrics::QueryLedgers`], per-query
+//!   [`crate::tuning::BudgetManager`]s).
+//! * [`engine`] — the **multi-query DES mode**: N queries arrive as a
+//!   Poisson process over the road network (each tracking its own
+//!   entity walk with its own spotlight), multiplexed over one shared
+//!   deployment; reachable via [`crate::coordinator::des::run_multi`],
+//!   the `harness mq` subcommand and the `multi_query` bench/example.
+//! * [`front`] — the **live service front-end**: a wall-clock,
+//!   thread-based `TrackingService` that accepts queries *at runtime*
+//!   (submit/cancel while serving) over shared workers, scoring
+//!   through a pluggable [`front::ScoreBackend`].
+//!
+//! Mapping to the paper: each query still owns the single-query
+//! dataflow semantics (FC → VA → CR → {TL, QF, UV}); the service layer
+//! multiplexes many such logical dataflows onto one physical deployment
+//! by tagging every event with a [`crate::dataflow::QueryId`], keying
+//! the tuning triangle per query, and unioning the per-query spotlights
+//! into the physical camera activation set.
+
+pub mod admission;
+pub mod engine;
+pub mod front;
+pub mod query;
+pub mod scheduler;
+
+pub use admission::{Admission, AdmissionController, AdmissionPolicy};
+pub use engine::{MultiQueryDes, MultiQueryResult};
+pub use front::{ScoreBackend, ServiceReport, SimBackend, TrackingService};
+pub use query::{
+    Priority, QueryRecord, QueryRegistry, QueryReport, QuerySpec,
+    QueryStatus,
+};
+pub use scheduler::FairShareBatcher;

@@ -1,0 +1,390 @@
+//! Query registry: the submit / queue / activate / cancel / complete
+//! lifecycle of tracking queries.
+//!
+//! The registry is pure bookkeeping (no clocks, no threads): both the
+//! DES multi-query engine and the live service front drive it, and the
+//! lifecycle invariants are unit-tested directly.
+
+use std::collections::VecDeque;
+
+use crate::config::AppKind;
+use crate::dataflow::QueryId;
+use crate::metrics::Summary;
+use crate::util::{to_secs, Micros};
+
+/// Scheduling priority of a query; higher is more important. Used both
+/// as the fair-share weight (batch slots ∝ priority) and to order the
+/// admission wait queue.
+pub type Priority = u8;
+
+/// What a user submits: which application to run, where the entity was
+/// last seen, and how the service should treat the query.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    /// Application composition (Table 1) the query runs.
+    pub app: AppKind,
+    /// Human-readable tag for reports.
+    pub label: String,
+    /// Camera of the last known sighting; `None` bootstraps all-active
+    /// (expensive — admission accounts for it).
+    pub start_camera: Option<usize>,
+    pub priority: Priority,
+    /// Tracking window once activated (seconds).
+    pub lifetime_secs: f64,
+}
+
+impl QuerySpec {
+    pub fn new(label: impl Into<String>, start_camera: usize) -> Self {
+        Self {
+            app: AppKind::App1,
+            label: label.into(),
+            start_camera: Some(start_camera),
+            priority: 1,
+            lifetime_secs: 120.0,
+        }
+    }
+
+    /// Fair-share weight (≥ 1).
+    pub fn weight(&self) -> u32 {
+        self.priority.max(1) as u32
+    }
+
+    /// Cameras this query is expected to activate at admission time: a
+    /// seeded query contracts to the sighting neighbourhood; an unseeded
+    /// one bootstraps the whole network (§2.3).
+    pub fn initial_camera_estimate(&self, total_cameras: usize) -> usize {
+        if self.start_camera.is_some() {
+            4.min(total_cameras)
+        } else {
+            total_cameras
+        }
+    }
+}
+
+/// Lifecycle state of a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryStatus {
+    /// Submitted, admission decision pending.
+    Submitted,
+    /// Wait-listed by admission control.
+    Queued,
+    /// Running over the shared workers.
+    Active,
+    /// Tracking window elapsed (or explicitly finished).
+    Completed,
+    /// Cancelled by the user before completion.
+    Cancelled,
+    /// Refused by admission control.
+    Rejected,
+}
+
+/// Registry entry for one query.
+#[derive(Debug, Clone)]
+pub struct QueryRecord {
+    pub id: QueryId,
+    pub spec: QuerySpec,
+    pub status: QueryStatus,
+    pub submitted: Micros,
+    pub activated: Option<Micros>,
+    pub finished: Option<Micros>,
+}
+
+/// Submit / cancel / complete bookkeeping for all queries of a service.
+#[derive(Debug, Default)]
+pub struct QueryRegistry {
+    records: Vec<QueryRecord>,
+    /// Wait-listed ids, highest priority first (FIFO within a level).
+    pending: VecDeque<QueryId>,
+    active: Vec<QueryId>,
+}
+
+impl QueryRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new query (status [`QueryStatus::Submitted`]); the
+    /// caller applies the admission decision next.
+    pub fn submit(&mut self, spec: QuerySpec, now: Micros) -> QueryId {
+        let id = self.records.len() as QueryId;
+        self.records.push(QueryRecord {
+            id,
+            spec,
+            status: QueryStatus::Submitted,
+            submitted: now,
+            activated: None,
+            finished: None,
+        });
+        id
+    }
+
+    fn rec_mut(&mut self, id: QueryId) -> &mut QueryRecord {
+        &mut self.records[id as usize]
+    }
+
+    pub fn record(&self, id: QueryId) -> Option<&QueryRecord> {
+        self.records.get(id as usize)
+    }
+
+    pub fn status(&self, id: QueryId) -> Option<QueryStatus> {
+        self.record(id).map(|r| r.status)
+    }
+
+    pub fn records(&self) -> &[QueryRecord] {
+        &self.records
+    }
+
+    pub fn active_ids(&self) -> &[QueryId] {
+        &self.active
+    }
+
+    pub fn num_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn num_queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Head of the wait queue (highest priority, earliest submission).
+    pub fn next_pending(&self) -> Option<QueryId> {
+        self.pending.front().copied()
+    }
+
+    /// Transition to Active (from Submitted or Queued).
+    pub fn activate(
+        &mut self,
+        id: QueryId,
+        now: Micros,
+    ) -> Result<(), &'static str> {
+        match self.status(id) {
+            Some(QueryStatus::Submitted) | Some(QueryStatus::Queued) => {}
+            _ => return Err("only submitted/queued queries can activate"),
+        }
+        self.pending.retain(|&q| q != id);
+        let r = self.rec_mut(id);
+        r.status = QueryStatus::Active;
+        r.activated = Some(now);
+        self.active.push(id);
+        Ok(())
+    }
+
+    /// Wait-list a submitted query, ordered by (priority desc,
+    /// submission order).
+    pub fn enqueue(&mut self, id: QueryId) -> Result<(), &'static str> {
+        if self.status(id) != Some(QueryStatus::Submitted) {
+            return Err("only submitted queries can be wait-listed");
+        }
+        self.rec_mut(id).status = QueryStatus::Queued;
+        let prio = self.records[id as usize].spec.priority;
+        let pos = self
+            .pending
+            .iter()
+            .position(|&q| self.records[q as usize].spec.priority < prio)
+            .unwrap_or(self.pending.len());
+        self.pending.insert(pos, id);
+        Ok(())
+    }
+
+    /// Admission refused the query outright.
+    pub fn reject(
+        &mut self,
+        id: QueryId,
+        now: Micros,
+    ) -> Result<(), &'static str> {
+        if self.status(id) != Some(QueryStatus::Submitted) {
+            return Err("only submitted queries can be rejected");
+        }
+        let r = self.rec_mut(id);
+        r.status = QueryStatus::Rejected;
+        r.finished = Some(now);
+        Ok(())
+    }
+
+    /// An active query's tracking window elapsed.
+    pub fn complete(
+        &mut self,
+        id: QueryId,
+        now: Micros,
+    ) -> Result<(), &'static str> {
+        if self.status(id) != Some(QueryStatus::Active) {
+            return Err("only active queries can complete");
+        }
+        self.active.retain(|&q| q != id);
+        let r = self.rec_mut(id);
+        r.status = QueryStatus::Completed;
+        r.finished = Some(now);
+        Ok(())
+    }
+
+    /// User-initiated cancellation (allowed while submitted, queued or
+    /// active).
+    pub fn cancel(
+        &mut self,
+        id: QueryId,
+        now: Micros,
+    ) -> Result<(), &'static str> {
+        match self.status(id) {
+            Some(QueryStatus::Submitted)
+            | Some(QueryStatus::Queued)
+            | Some(QueryStatus::Active) => {}
+            _ => return Err("query is not cancellable"),
+        }
+        self.pending.retain(|&q| q != id);
+        self.active.retain(|&q| q != id);
+        let r = self.rec_mut(id);
+        r.status = QueryStatus::Cancelled;
+        r.finished = Some(now);
+        Ok(())
+    }
+}
+
+/// Per-query outcome of a multi-query run, built from the per-query
+/// ledger plus registry state.
+#[derive(Debug, Clone)]
+pub struct QueryReport {
+    pub id: QueryId,
+    pub label: String,
+    pub priority: Priority,
+    pub status: QueryStatus,
+    pub submitted_s: f64,
+    pub activated_s: Option<f64>,
+    pub finished_s: Option<f64>,
+    /// Event-level summary from this query's own ledger (None if the
+    /// query never generated events — e.g. rejected).
+    pub summary: Option<Summary>,
+    /// Confirmed detections delivered to this query's UV.
+    pub detections: u64,
+    /// Peak spotlight size of this query.
+    pub peak_active: usize,
+}
+
+impl QueryReport {
+    pub fn from_record(rec: &QueryRecord) -> Self {
+        Self {
+            id: rec.id,
+            label: rec.spec.label.clone(),
+            priority: rec.spec.priority,
+            status: rec.status,
+            submitted_s: to_secs(rec.submitted),
+            activated_s: rec.activated.map(to_secs),
+            finished_s: rec.finished.map(to_secs),
+            summary: None,
+            detections: 0,
+            peak_active: 0,
+        }
+    }
+
+    /// Fraction of ground-truth-positive frames this query completed
+    /// with a detection (the per-query recall the acceptance criteria
+    /// ask for).
+    pub fn recall(&self) -> f64 {
+        match &self.summary {
+            Some(s) if s.positives_generated > 0 => {
+                s.true_positives as f64 / s.positives_generated as f64
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SEC;
+
+    fn spec(prio: Priority) -> QuerySpec {
+        QuerySpec {
+            priority: prio,
+            ..QuerySpec::new("t", 0)
+        }
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut r = QueryRegistry::new();
+        let id = r.submit(spec(1), 0);
+        assert_eq!(r.status(id), Some(QueryStatus::Submitted));
+        r.activate(id, SEC).unwrap();
+        assert_eq!(r.status(id), Some(QueryStatus::Active));
+        assert_eq!(r.num_active(), 1);
+        r.complete(id, 10 * SEC).unwrap();
+        assert_eq!(r.status(id), Some(QueryStatus::Completed));
+        assert_eq!(r.num_active(), 0);
+        let rec = r.record(id).unwrap();
+        assert_eq!(rec.activated, Some(SEC));
+        assert_eq!(rec.finished, Some(10 * SEC));
+    }
+
+    #[test]
+    fn queued_then_promoted() {
+        let mut r = QueryRegistry::new();
+        let a = r.submit(spec(1), 0);
+        let b = r.submit(spec(1), SEC);
+        r.activate(a, 0).unwrap();
+        r.enqueue(b).unwrap();
+        assert_eq!(r.num_queued(), 1);
+        assert_eq!(r.next_pending(), Some(b));
+        r.complete(a, 5 * SEC).unwrap();
+        r.activate(b, 5 * SEC).unwrap();
+        assert_eq!(r.num_queued(), 0);
+        assert_eq!(r.active_ids(), &[b]);
+    }
+
+    #[test]
+    fn pending_ordered_by_priority_then_fifo() {
+        let mut r = QueryRegistry::new();
+        let lo1 = r.submit(spec(1), 0);
+        let hi = r.submit(spec(3), 1);
+        let lo2 = r.submit(spec(1), 2);
+        for id in [lo1, hi, lo2] {
+            r.enqueue(id).unwrap();
+        }
+        assert_eq!(r.next_pending(), Some(hi));
+        r.activate(hi, 0).unwrap();
+        assert_eq!(r.next_pending(), Some(lo1));
+        r.activate(lo1, 0).unwrap();
+        assert_eq!(r.next_pending(), Some(lo2));
+    }
+
+    #[test]
+    fn illegal_transitions_rejected() {
+        let mut r = QueryRegistry::new();
+        let id = r.submit(spec(1), 0);
+        assert!(r.complete(id, 0).is_err(), "complete before activate");
+        r.reject(id, 0).unwrap();
+        assert!(r.activate(id, 0).is_err(), "activate after reject");
+        assert!(r.cancel(id, 0).is_err(), "cancel after reject");
+        assert!(r.enqueue(id).is_err(), "queue after reject");
+
+        let id2 = r.submit(spec(1), 0);
+        r.activate(id2, 0).unwrap();
+        assert!(r.reject(id2, 0).is_err(), "reject after activate");
+        r.cancel(id2, SEC).unwrap();
+        assert_eq!(r.status(id2), Some(QueryStatus::Cancelled));
+        assert!(r.complete(id2, SEC).is_err(), "complete after cancel");
+        assert_eq!(r.num_active(), 0);
+    }
+
+    #[test]
+    fn cancel_removes_from_wait_queue() {
+        let mut r = QueryRegistry::new();
+        let a = r.submit(spec(1), 0);
+        r.enqueue(a).unwrap();
+        r.cancel(a, SEC).unwrap();
+        assert_eq!(r.num_queued(), 0);
+        assert_eq!(r.next_pending(), None);
+    }
+
+    #[test]
+    fn spec_camera_estimates() {
+        let seeded = QuerySpec::new("s", 7);
+        assert_eq!(seeded.initial_camera_estimate(1000), 4);
+        let unseeded = QuerySpec {
+            start_camera: None,
+            ..QuerySpec::new("u", 0)
+        };
+        assert_eq!(unseeded.initial_camera_estimate(1000), 1000);
+        assert_eq!(QuerySpec { priority: 0, ..seeded }.weight(), 1);
+    }
+}

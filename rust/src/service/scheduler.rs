@@ -1,0 +1,373 @@
+//! Fair-share batch formation across concurrent queries.
+//!
+//! Each shared VA/CR executor owns one [`FairShareBatcher`]: per-query
+//! FIFO queues plus the weighted deficit-round-robin core
+//! ([`crate::tuning::FairShare`]). Batch composition follows the
+//! paper's dynamic-batching rule (§4.4) — an event joins the current
+//! batch iff the grown batch still meets both the batch deadline
+//! (earliest member) and the event's own deadline — but candidates are
+//! drawn across query queues in DRR order, so a backlogged query can
+//! take at most its weighted share of batch slots. Batches therefore
+//! *mix queries* (one model execution serves frames tagged for
+//! different queries) while per-query FIFO order is preserved.
+
+use std::collections::VecDeque;
+
+use crate::dataflow::QueryId;
+use crate::tuning::budget::BUDGET_INF;
+use crate::tuning::{BatcherPoll, FairShare, QueuedEvent, XiModel};
+use crate::util::Micros;
+
+/// Per-executor fair-share batch formation state.
+pub struct FairShareBatcher<T> {
+    queues: Vec<(QueryId, VecDeque<QueuedEvent<T>>)>,
+    share: FairShare,
+    current: Vec<QueuedEvent<T>>,
+    /// Δₚ: earliest deadline among `current`.
+    cur_deadline: Micros,
+    max: usize,
+}
+
+impl<T> FairShareBatcher<T> {
+    pub fn new(max: usize) -> Self {
+        Self {
+            queues: Vec::new(),
+            share: FairShare::new(),
+            current: Vec::new(),
+            cur_deadline: BUDGET_INF,
+            max: max.max(1),
+        }
+    }
+
+    /// Register a query with its fair-share weight (idempotent).
+    pub fn register(&mut self, query: QueryId, weight: u32) {
+        self.share.ensure(query, weight);
+        if !self.queues.iter().any(|(q, _)| *q == query) {
+            self.queues.push((query, VecDeque::new()));
+        }
+    }
+
+    /// Remove a query from the rotation, returning any events still
+    /// queued for it (the engine ledgers them; in-flight work of a
+    /// cancelled query must not silently vanish).
+    pub fn deregister(&mut self, query: QueryId) -> Vec<QueuedEvent<T>> {
+        self.share.remove(query);
+        let mut out = Vec::new();
+        if let Some(i) =
+            self.queues.iter().position(|(q, _)| *q == query)
+        {
+            let (_, dq) = self.queues.remove(i);
+            out.extend(dq);
+        }
+        // The current batch may already hold events of this query;
+        // leave them — they execute with the in-progress batch.
+        out
+    }
+
+    fn queue_mut(
+        &mut self,
+        query: QueryId,
+    ) -> &mut VecDeque<QueuedEvent<T>> {
+        let i = self
+            .queues
+            .iter()
+            .position(|(q, _)| *q == query)
+            .expect("query registered");
+        &mut self.queues[i].1
+    }
+
+    /// Enqueue an arriving (post-drop-point-1) event of `query`.
+    ///
+    /// Returns the event back (`Some`) when the query is not
+    /// registered — i.e. it already completed or was cancelled and a
+    /// late in-flight event arrived. Callers must account for the
+    /// returned event (typically ledger it as dropped); silently
+    /// re-registering finished queries here would resurrect their
+    /// fair-share and budget state forever.
+    #[must_use]
+    pub fn push(
+        &mut self,
+        query: QueryId,
+        qe: QueuedEvent<T>,
+    ) -> Option<QueuedEvent<T>> {
+        if !self.queues.iter().any(|(q, _)| *q == query) {
+            return Some(qe);
+        }
+        self.queue_mut(query).push_back(qe);
+        None
+    }
+
+    /// Total queued events across queries (excluding the forming batch).
+    pub fn pending_len(&self) -> usize {
+        self.queues.iter().map(|(_, q)| q.len()).sum()
+    }
+
+    pub fn current_len(&self) -> usize {
+        self.current.len()
+    }
+
+    fn take_current(&mut self) -> Vec<QueuedEvent<T>> {
+        self.cur_deadline = BUDGET_INF;
+        std::mem::take(&mut self.current)
+    }
+
+    fn head_of(&self, query: QueryId) -> Option<&QueuedEvent<T>> {
+        self.queues
+            .iter()
+            .find(|(q, _)| *q == query)
+            .and_then(|(_, dq)| dq.front())
+    }
+
+    fn pop_head(&mut self, query: QueryId) -> QueuedEvent<T> {
+        self.share.charge(query, 1);
+        self.queue_mut(query)
+            .pop_front()
+            .expect("picked queue non-empty")
+    }
+
+    /// Drive batch formation at time `now` — same contract as
+    /// [`crate::tuning::Batcher::poll`].
+    pub fn poll(
+        &mut self,
+        now: Micros,
+        xi: &XiModel,
+    ) -> BatcherPoll<T> {
+        loop {
+            if self.current.len() >= self.max {
+                return BatcherPoll::Ready(self.take_current());
+            }
+            // Next candidate queue under weighted DRR. Borrow the
+            // queue table and the DRR state as disjoint fields so the
+            // has-work probe needs no snapshot allocation.
+            let picked = {
+                let queues = &self.queues;
+                self.share.pick(|k| {
+                    queues
+                        .iter()
+                        .any(|(q, dq)| *q == k && !dq.is_empty())
+                })
+            };
+            let Some(q) = picked else {
+                // No pending work anywhere: submit or arm the timer.
+                if self.current.is_empty() {
+                    return BatcherPoll::Idle;
+                }
+                let m = self.current.len();
+                let submit_at =
+                    self.cur_deadline.saturating_sub(xi.xi(m));
+                if now >= submit_at {
+                    return BatcherPoll::Ready(self.take_current());
+                }
+                return BatcherPoll::Timer(submit_at);
+            };
+            let head_deadline =
+                self.head_of(q).expect("picked queue non-empty").deadline;
+            // Bootstrap (no budget yet): stream solo, like the
+            // single-query dynamic batcher.
+            if head_deadline >= BUDGET_INF {
+                if !self.current.is_empty() {
+                    return BatcherPoll::Ready(self.take_current());
+                }
+                let head = self.pop_head(q);
+                return BatcherPoll::Ready(vec![head]);
+            }
+            let m = self.current.len();
+            let fits = now + xi.xi(m + 1)
+                <= self.cur_deadline.min(head_deadline);
+            if fits {
+                let head = self.pop_head(q);
+                self.cur_deadline = self.cur_deadline.min(head.deadline);
+                self.current.push(head);
+            } else if !self.current.is_empty() {
+                return BatcherPoll::Ready(self.take_current());
+            } else {
+                // Even alone the head misses its deadline; release it
+                // solo — drop point 2 will judge it.
+                let head = self.pop_head(q);
+                return BatcherPoll::Ready(vec![head]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SEC;
+
+    fn xi() -> XiModel {
+        XiModel::affine_ms(52.5, 67.5)
+    }
+
+    fn qe(query: QueryId, id: u64, deadline: Micros) -> QueuedEvent<(QueryId, u64)> {
+        QueuedEvent {
+            item: (query, id),
+            id,
+            arrival: 0,
+            deadline,
+        }
+    }
+
+    fn ready(
+        p: BatcherPoll<(QueryId, u64)>,
+    ) -> Vec<(QueryId, u64)> {
+        match p {
+            BatcherPoll::Ready(b) => {
+                b.into_iter().map(|e| e.item).collect()
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    fn counts(batch: &[(QueryId, u64)], queries: &[QueryId]) -> Vec<usize> {
+        queries
+            .iter()
+            .map(|&q| batch.iter().filter(|(b, _)| *b == q).count())
+            .collect()
+    }
+
+    /// Push to a registered query, asserting acceptance.
+    fn push_ok(
+        b: &mut FairShareBatcher<(QueryId, u64)>,
+        q: QueryId,
+        e: QueuedEvent<(QueryId, u64)>,
+    ) {
+        assert!(
+            b.push(q, e).is_none(),
+            "query {q} should be registered"
+        );
+    }
+
+    #[test]
+    fn cross_query_batch_shares_slots_equally() {
+        let mut b = FairShareBatcher::new(6);
+        for q in [1u32, 2, 3] {
+            b.register(q, 1);
+            for k in 0..10 {
+                push_ok(&mut b, q, qe(q, k, 60 * SEC));
+            }
+        }
+        let batch = ready(b.poll(0, &xi()));
+        assert_eq!(batch.len(), 6);
+        assert_eq!(counts(&batch, &[1, 2, 3]), vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn priority_weights_bias_batch_composition() {
+        let mut b = FairShareBatcher::new(8);
+        b.register(1, 2); // double weight
+        b.register(2, 1);
+        b.register(3, 1);
+        for q in [1u32, 2, 3] {
+            for k in 0..20 {
+                push_ok(&mut b, q, qe(q, k, 60 * SEC));
+            }
+        }
+        let batch = ready(b.poll(0, &xi()));
+        assert_eq!(batch.len(), 8);
+        assert_eq!(counts(&batch, &[1, 2, 3]), vec![4, 2, 2]);
+    }
+
+    #[test]
+    fn fifo_preserved_within_each_query() {
+        let mut b = FairShareBatcher::new(25);
+        for q in [1u32, 2] {
+            b.register(q, 1);
+            for k in 0..5 {
+                push_ok(&mut b, q, qe(q, k, 60 * SEC));
+            }
+        }
+        // Drain everything via far-future polls.
+        let mut seen: Vec<Vec<u64>> = vec![Vec::new(), Vec::new()];
+        loop {
+            match b.poll(BUDGET_INF / 2, &xi()) {
+                BatcherPoll::Ready(batch) => {
+                    for e in batch {
+                        seen[(e.item.0 - 1) as usize].push(e.item.1);
+                    }
+                }
+                _ => break,
+            }
+        }
+        assert_eq!(seen[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(seen[1], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn bootstrap_streams_solo() {
+        let mut b = FairShareBatcher::new(25);
+        b.register(7, 1);
+        push_ok(&mut b, 7, qe(7, 0, BUDGET_INF));
+        push_ok(&mut b, 7, qe(7, 1, BUDGET_INF));
+        assert_eq!(ready(b.poll(0, &xi())), vec![(7, 0)]);
+        assert_eq!(ready(b.poll(0, &xi())), vec![(7, 1)]);
+        assert!(matches!(b.poll(0, &xi()), BatcherPoll::Idle));
+    }
+
+    #[test]
+    fn timer_is_min_deadline_minus_xi() {
+        let mut b = FairShareBatcher::new(25);
+        let x = xi();
+        b.register(1, 1);
+        b.register(2, 1);
+        push_ok(&mut b, 1, qe(1, 0, 30 * SEC));
+        push_ok(&mut b, 2, qe(2, 0, 10 * SEC)); // tighter
+        match b.poll(0, &x) {
+            BatcherPoll::Timer(at) => {
+                assert_eq!(at, 10 * SEC - x.xi(2));
+            }
+            other => panic!("{other:?}"),
+        }
+        let at = 10 * SEC - x.xi(2);
+        let batch = ready(b.poll(at, &x));
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn starving_query_is_protected() {
+        // Query 1 is hugely backlogged; query 2 trickles. Over repeated
+        // max-size batches, query 2's events are always served promptly
+        // (each batch takes slots from both while both have work).
+        let mut b = FairShareBatcher::new(4);
+        b.register(1, 1);
+        b.register(2, 1);
+        for k in 0..100 {
+            push_ok(&mut b, 1, qe(1, k, 60 * SEC));
+        }
+        push_ok(&mut b, 2, qe(2, 0, 60 * SEC));
+        push_ok(&mut b, 2, qe(2, 1, 60 * SEC));
+        let batch = ready(b.poll(0, &xi()));
+        let c = counts(&batch, &[1, 2]);
+        assert_eq!(c[1], 2, "trickle query got its slots: {batch:?}");
+        assert_eq!(c[0], 2);
+        // Once query 2 drains, query 1 gets full batches.
+        let batch = ready(b.poll(0, &xi()));
+        assert_eq!(counts(&batch, &[1, 2]), vec![4, 0]);
+    }
+
+    #[test]
+    fn deregister_returns_leftovers() {
+        let mut b = FairShareBatcher::new(8);
+        b.register(5, 1);
+        for k in 0..3 {
+            push_ok(&mut b, 5, qe(5, k, 60 * SEC));
+        }
+        let left = b.deregister(5);
+        assert_eq!(left.len(), 3);
+        assert!(matches!(b.poll(0, &xi()), BatcherPoll::Idle));
+        assert_eq!(b.pending_len(), 0);
+        // Late in-flight events of the finished query bounce back for
+        // the caller to account — they must not resurrect the query.
+        assert!(b.push(5, qe(5, 9, 60 * SEC)).is_some());
+        assert!(matches!(b.poll(0, &xi()), BatcherPoll::Idle));
+    }
+
+    #[test]
+    fn solo_release_past_deadline() {
+        let mut b = FairShareBatcher::new(25);
+        b.register(1, 1);
+        push_ok(&mut b, 1, qe(1, 0, 1)); // cannot meet deadline even alone
+        let batch = ready(b.poll(10, &xi()));
+        assert_eq!(batch, vec![(1, 0)]);
+    }
+}

@@ -48,6 +48,47 @@ pub fn drop_before_transmit(u: Micros, pi: Micros, budget: Micros) -> bool {
     u + pi > budget
 }
 
+// ---------------------------------------------------------------------------
+// Exemption-aware gates (§4.3.3 + §4.5.2).
+//
+// `avoid-drop` events (positive matches the user logic flags) and probe
+// events must never be dropped, at any of the three points. Both
+// engines and the service layer route every drop decision through these
+// gates so the invariant lives in exactly one place (and is property-
+// tested in `tests/prop_tuning.rs`).
+// ---------------------------------------------------------------------------
+
+/// Drop point 1 with the exemption rule applied.
+pub fn drop_at_queue(
+    exempt: bool,
+    u: Micros,
+    xi_1: Micros,
+    budget: Micros,
+) -> bool {
+    !exempt && drop_before_queue(u, xi_1, budget)
+}
+
+/// Drop point 2 with the exemption rule applied.
+pub fn drop_at_exec(
+    exempt: bool,
+    u: Micros,
+    q: Micros,
+    xi_b: Micros,
+    budget: Micros,
+) -> bool {
+    !exempt && drop_before_exec(u, q, xi_b, budget)
+}
+
+/// Drop point 3 with the exemption rule applied.
+pub fn drop_at_transmit(
+    exempt: bool,
+    u: Micros,
+    pi: Micros,
+    budget: Micros,
+) -> bool {
+    !exempt && drop_before_transmit(u, pi, budget)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,20 +8,28 @@
 //!   the active camera-set size (scalability).
 //!
 //! Everything here is *pure timestamp logic* — no clocks, no channels —
-//! so the discrete-event engine and the live tokio engine share it
-//! unchanged, and the skew-resilience property (§4.6.2) can be tested by
-//! feeding the same scenario through skewed observation functions.
+//! so the discrete-event engine and the live thread-based engine share
+//! it unchanged, and the skew-resilience property (§4.6.2) can be tested
+//! by feeding the same scenario through skewed observation functions.
+//!
+//! The multi-query service layer adds a fourth concern: **fairness**
+//! across concurrent queries sharing the same executors ([`share`]).
 
 pub mod batcher;
 pub mod bounds;
 pub mod budget;
 pub mod drops;
 pub mod nob;
+pub mod share;
 pub mod xi;
 
 pub use batcher::{Batcher, BatcherPoll, QueuedEvent};
 pub use bounds::{batching_added_latency, max_stable_batch, max_stable_rate};
 pub use budget::{BudgetManager, EventRecord, Signal};
-pub use drops::{drop_before_exec, drop_before_queue, drop_before_transmit};
+pub use drops::{
+    drop_at_exec, drop_at_queue, drop_at_transmit, drop_before_exec,
+    drop_before_queue, drop_before_transmit,
+};
 pub use nob::NobTable;
+pub use share::FairShare;
 pub use xi::XiModel;

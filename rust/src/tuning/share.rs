@@ -1,0 +1,224 @@
+//! Deficit-round-robin fair sharing across tracking queries.
+//!
+//! The service layer multiplexes many queries over the shared VA/CR
+//! executors; when an executor is backlogged, batch slots are a scarce
+//! resource and one misbehaving query (huge spotlight, collapsed
+//! budget, probe storm) must not starve the rest. [`FairShare`] is the
+//! pure scheduling core: a weighted deficit-round-robin over query ids,
+//! with credits refilled in proportion to priority weights. Like the
+//! rest of [`crate::tuning`] it has no clocks or channels, so the DES
+//! engine, the live service and the property suite share it unchanged.
+
+use crate::dataflow::QueryId;
+
+#[derive(Debug, Clone)]
+struct ShareEntry {
+    key: QueryId,
+    weight: u32,
+    credit: i64,
+}
+
+/// Weighted deficit-round-robin state over a dynamic set of queries.
+#[derive(Debug, Clone, Default)]
+pub struct FairShare {
+    entries: Vec<ShareEntry>,
+    cursor: usize,
+}
+
+impl FairShare {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `key` with the given weight (idempotent; re-registering
+    /// updates the weight and keeps accrued credit).
+    pub fn ensure(&mut self, key: QueryId, weight: u32) {
+        let weight = weight.max(1);
+        match self.entries.iter_mut().find(|e| e.key == key) {
+            Some(e) => e.weight = weight,
+            None => self.entries.push(ShareEntry {
+                key,
+                weight,
+                credit: 0,
+            }),
+        }
+    }
+
+    /// Remove a completed/cancelled query from the rotation.
+    pub fn remove(&mut self, key: QueryId) {
+        if let Some(i) = self.entries.iter().position(|e| e.key == key) {
+            self.entries.remove(i);
+            if self.cursor > i {
+                self.cursor -= 1;
+            }
+            if !self.entries.is_empty() {
+                self.cursor %= self.entries.len();
+            } else {
+                self.cursor = 0;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Pick the next query to serve among those for which `has_work`
+    /// holds, honouring credits; refills credits (weight-proportional)
+    /// when every eligible query is out. Returns `None` iff no
+    /// registered query has work.
+    pub fn pick(
+        &mut self,
+        mut has_work: impl FnMut(QueryId) -> bool,
+    ) -> Option<QueryId> {
+        let n = self.entries.len();
+        if n == 0 {
+            return None;
+        }
+        // First pass: someone eligible still holds credit.
+        for off in 0..n {
+            let i = (self.cursor + off) % n;
+            let e = &self.entries[i];
+            if e.credit > 0 && has_work(e.key) {
+                self.cursor = i;
+                return Some(e.key);
+            }
+        }
+        // Refill until some eligible entry holds positive credit. A
+        // single pass is not enough when a past `charge` exceeded the
+        // weight (deficits carry over, standard DRR); each pass adds
+        // `weight >= 1` to every eligible entry, so this terminates.
+        loop {
+            let mut any = false;
+            for e in &mut self.entries {
+                if has_work(e.key) {
+                    e.credit += e.weight as i64;
+                    any = true;
+                }
+            }
+            if !any {
+                return None;
+            }
+            for off in 0..n {
+                let i = (self.cursor + off) % n;
+                let e = &self.entries[i];
+                if e.credit > 0 && has_work(e.key) {
+                    self.cursor = i;
+                    return Some(e.key);
+                }
+            }
+        }
+    }
+
+    /// Charge `cost` units (usually 1 per batch slot) to a query.
+    pub fn charge(&mut self, key: QueryId, cost: i64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.credit -= cost;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serve `rounds` single-unit picks with everyone backlogged and
+    /// count per-query service.
+    fn serve(fs: &mut FairShare, keys: &[QueryId], rounds: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; keys.len()];
+        for _ in 0..rounds {
+            let k = fs.pick(|_| true).expect("work available");
+            fs.charge(k, 1);
+            counts[keys.iter().position(|&x| x == k).unwrap()] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn equal_weights_share_equally() {
+        let mut fs = FairShare::new();
+        for q in [1u32, 2, 3] {
+            fs.ensure(q, 1);
+        }
+        let counts = serve(&mut fs, &[1, 2, 3], 30);
+        assert_eq!(counts, vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn weights_bias_service_proportionally() {
+        let mut fs = FairShare::new();
+        fs.ensure(1, 2);
+        fs.ensure(2, 1);
+        fs.ensure(3, 1);
+        let counts = serve(&mut fs, &[1, 2, 3], 40);
+        assert_eq!(counts, vec![20, 10, 10]);
+    }
+
+    #[test]
+    fn idle_queries_do_not_accrue_service() {
+        let mut fs = FairShare::new();
+        fs.ensure(1, 1);
+        fs.ensure(2, 1);
+        // Query 2 never has work: query 1 gets every slot.
+        for _ in 0..10 {
+            let k = fs.pick(|q| q == 1).unwrap();
+            assert_eq!(k, 1);
+            fs.charge(k, 1);
+        }
+        assert_eq!(fs.pick(|_| false), None);
+    }
+
+    #[test]
+    fn remove_keeps_rotation_consistent() {
+        let mut fs = FairShare::new();
+        for q in [1u32, 2, 3] {
+            fs.ensure(q, 1);
+        }
+        let _ = serve(&mut fs, &[1, 2, 3], 4);
+        fs.remove(2);
+        assert_eq!(fs.len(), 2);
+        let counts = serve(&mut fs, &[1, 2, 3], 20);
+        assert_eq!(counts[1], 0, "removed query never served");
+        assert_eq!(counts[0] + counts[2], 20);
+        assert!((counts[0] as i64 - counts[2] as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn oversized_charge_carries_deficit_without_stalling() {
+        // A charge larger than the weight (e.g. a whole batch) leaves
+        // a deficit; pick must keep serving (multi-pass refill) and the
+        // over-served query repays the deficit before being served
+        // again.
+        let mut fs = FairShare::new();
+        fs.ensure(1, 1);
+        fs.ensure(2, 1);
+        let first = fs.pick(|_| true).unwrap();
+        fs.charge(first, 8); // deficit of 7
+        let mut served = Vec::new();
+        for _ in 0..8 {
+            let k = fs.pick(|_| true).expect("work pending, no stall");
+            fs.charge(k, 1);
+            served.push(k);
+        }
+        let other = if first == 1 { 2 } else { 1 };
+        assert!(
+            served.iter().filter(|&&k| k == other).count() >= 7,
+            "deficit repaid before re-serving {first}: {served:?}"
+        );
+    }
+
+    #[test]
+    fn reregister_updates_weight() {
+        let mut fs = FairShare::new();
+        fs.ensure(1, 1);
+        fs.ensure(2, 1);
+        fs.ensure(1, 3); // promote
+        assert_eq!(fs.len(), 2);
+        let counts = serve(&mut fs, &[1, 2], 40);
+        assert_eq!(counts, vec![30, 10]);
+    }
+}

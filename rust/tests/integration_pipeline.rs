@@ -1,6 +1,8 @@
 //! Integration: the live engine serves a small camera network with real
 //! PJRT models end-to-end — frames in, batched model execution, TL
-//! spotlight control, latency accounting out.
+//! spotlight control, latency accounting out. Requires `make artifacts`
+//! and the `pjrt` feature (compiled out otherwise).
+#![cfg(feature = "pjrt")]
 
 use anveshak::config::{BatchingKind, ExperimentConfig, TlKind};
 use anveshak::coordinator::LiveEngine;

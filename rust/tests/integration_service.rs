@@ -1,0 +1,279 @@
+//! Integration: the multi-query service layer end to end — admission
+//! decisions, query lifecycle, fair-share batch composition across
+//! concurrent queries, and per-query accounting on the shared
+//! deployment (DES mode; no PJRT required).
+
+use anveshak::config::{ExperimentConfig, MultiQueryConfig};
+use anveshak::coordinator::des::run_multi;
+use anveshak::dataflow::QueryId;
+use anveshak::service::engine;
+use anveshak::service::{
+    Admission, AdmissionController, AdmissionPolicy, FairShareBatcher,
+    QueryRegistry, QuerySpec, QueryStatus,
+};
+use anveshak::tuning::budget::BUDGET_INF;
+use anveshak::tuning::{BatcherPoll, QueuedEvent, XiModel};
+use anveshak::util::SEC;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.num_cameras = 80;
+    c.workload.vertices = 80;
+    c.workload.edges = 220;
+    c
+}
+
+fn mq(n: usize) -> MultiQueryConfig {
+    MultiQueryConfig {
+        num_queries: n,
+        mean_interarrival_secs: 4.0,
+        lifetime_secs: 80.0,
+        max_active: 16,
+        max_active_cameras: 10_000,
+        queue_capacity: 8,
+        priority_levels: 3,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission decisions drive the registry lifecycle.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_and_lifecycle_compose() {
+    let ctl = AdmissionController::new(AdmissionPolicy {
+        max_active: 2,
+        max_active_cameras: 1_000,
+        queue_capacity: 1,
+    });
+    let mut reg = QueryRegistry::new();
+    let mut active_cams = 0usize;
+
+    let mut submit = |reg: &mut QueryRegistry,
+                      active_cams: &mut usize,
+                      cam: usize,
+                      now: i64|
+     -> (QueryId, QueryStatus) {
+        let spec = QuerySpec::new(format!("q{cam}"), cam);
+        let id = reg.submit(spec.clone(), now);
+        match ctl.decide(
+            &spec,
+            reg.num_active(),
+            reg.num_queued(),
+            *active_cams,
+            1_000,
+        ) {
+            Admission::Admit => {
+                reg.activate(id, now).unwrap();
+                *active_cams += spec.initial_camera_estimate(1_000);
+                (id, QueryStatus::Active)
+            }
+            Admission::Queue => {
+                reg.enqueue(id).unwrap();
+                (id, QueryStatus::Queued)
+            }
+            Admission::Reject(_) => {
+                reg.reject(id, now).unwrap();
+                (id, QueryStatus::Rejected)
+            }
+        }
+    };
+
+    let (a, sa) = submit(&mut reg, &mut active_cams, 0, 0);
+    let (_b, sb) = submit(&mut reg, &mut active_cams, 1, SEC);
+    let (c, sc) = submit(&mut reg, &mut active_cams, 2, 2 * SEC);
+    let (d, sd) = submit(&mut reg, &mut active_cams, 3, 3 * SEC);
+    assert_eq!(sa, QueryStatus::Active);
+    assert_eq!(sb, QueryStatus::Active);
+    assert_eq!(sc, QueryStatus::Queued);
+    assert_eq!(sd, QueryStatus::Rejected);
+
+    // Completing an active query frees a slot; the queued one fits.
+    reg.complete(a, 10 * SEC).unwrap();
+    assert_eq!(reg.next_pending(), Some(c));
+    reg.activate(c, 10 * SEC).unwrap();
+    assert_eq!(reg.status(c), Some(QueryStatus::Active));
+    assert_eq!(reg.num_active(), 2);
+    assert_eq!(reg.status(d), Some(QueryStatus::Rejected));
+}
+
+// ---------------------------------------------------------------------------
+// Fair-share batch composition across ≥3 concurrent queries.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fair_share_composes_cross_query_batches() {
+    let xi = XiModel::affine_ms(20.0, 10.0);
+    let mut b: FairShareBatcher<u64> = FairShareBatcher::new(9);
+    // Three backlogged queries with equal priority.
+    for q in [10u32, 20, 30] {
+        b.register(q, 1);
+        for k in 0..50 {
+            assert!(b.push(
+                    q,
+                    QueuedEvent {
+                        item: (q as u64) * 1_000 + k,
+                        id: k,
+                        arrival: 0,
+                        deadline: 60 * SEC,
+                    },
+                ).is_none());
+        }
+    }
+    // Several consecutive batches: each mixes all three queries with
+    // equal shares (9 slots -> 3 each).
+    for _ in 0..5 {
+        let batch = match b.poll(0, &xi) {
+            BatcherPoll::Ready(batch) => batch,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(batch.len(), 9);
+        for q in [10u64, 20, 30] {
+            let share = batch
+                .iter()
+                .filter(|e| e.item / 1_000 == q)
+                .count();
+            assert_eq!(share, 3, "query {q} share in cross-query batch");
+        }
+    }
+}
+
+#[test]
+fn one_collapsed_query_cannot_starve_the_rest() {
+    // Query 99's budget collapsed: its events carry immediate
+    // deadlines and are released solo/dropped, while queries 1 and 2
+    // keep their full fair share of batch slots.
+    let xi = XiModel::affine_ms(20.0, 10.0);
+    let mut b: FairShareBatcher<u64> = FairShareBatcher::new(8);
+    for q in [1u32, 2, 99] {
+        b.register(q, 1);
+    }
+    for k in 0..20 {
+        assert!(b.push(
+                1,
+                QueuedEvent {
+                    item: 1_000 + k,
+                    id: k,
+                    arrival: 0,
+                    deadline: 60 * SEC,
+                },
+            ).is_none());
+        assert!(b.push(
+                2,
+                QueuedEvent {
+                    item: 2_000 + k,
+                    id: k,
+                    arrival: 0,
+                    deadline: 60 * SEC,
+                },
+            ).is_none());
+        assert!(b.push(
+                99,
+                QueuedEvent {
+                    item: 99_000 + k,
+                    id: k,
+                    arrival: 0,
+                    deadline: 1, // collapsed budget: already past due
+                },
+            ).is_none());
+    }
+    let mut healthy = 0usize;
+    let mut collapsed = 0usize;
+    for _ in 0..12 {
+        match b.poll(10 * SEC, &xi) {
+            BatcherPoll::Ready(batch) => {
+                for e in &batch {
+                    if e.item >= 99_000 {
+                        collapsed += 1;
+                    } else {
+                        healthy += 1;
+                    }
+                }
+            }
+            _ => break,
+        }
+    }
+    // The collapsed query's past-due events release solo (headed for
+    // drop point 2) without blocking the healthy queries' batches.
+    assert!(
+        healthy >= 10,
+        "healthy queries kept flowing: healthy {healthy}, \
+         collapsed {collapsed}"
+    );
+    assert!(
+        collapsed >= 2,
+        "collapsed query still drains solo: {collapsed}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Whole-engine: shared deployment, per-query ledgers, concurrency.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn multi_query_engine_tracks_concurrently() {
+    let mut cfg = base_cfg();
+    cfg.multi_query = mq(5);
+    let r = run_multi(cfg);
+    assert!(r.peak_concurrent >= 3, "{}", r.peak_concurrent);
+    let activated: Vec<_> = r.activated().collect();
+    assert_eq!(activated.len(), 5);
+    for q in &activated {
+        let s = q.summary.as_ref().unwrap();
+        assert!(s.conserved(), "query {}: {:?}", q.id, s);
+        assert!(s.generated > 0);
+    }
+    // The per-query ledgers partition the aggregate exactly.
+    let sum_gen: u64 = activated
+        .iter()
+        .map(|q| q.summary.as_ref().unwrap().generated)
+        .sum();
+    assert_eq!(sum_gen, r.aggregate.generated);
+}
+
+#[test]
+fn engine_and_run_multi_agree() {
+    let mut cfg = base_cfg();
+    cfg.multi_query = mq(3);
+    let a = run_multi(cfg.clone());
+    let b = engine::run(cfg.clone(), cfg.multi_query.clone());
+    assert_eq!(a.aggregate.generated, b.aggregate.generated);
+    assert_eq!(a.aggregate.on_time, b.aggregate.on_time);
+    assert_eq!(a.peak_concurrent, b.peak_concurrent);
+}
+
+#[test]
+fn bootstrap_deadline_sentinel_streams() {
+    // Events with no budget yet must stream (batch of 1), same as the
+    // single-query dynamic batcher.
+    let xi = XiModel::affine_ms(20.0, 10.0);
+    let mut b: FairShareBatcher<u64> = FairShareBatcher::new(16);
+    b.register(1, 1);
+    assert!(b
+        .push(
+            1,
+            QueuedEvent {
+                item: 1,
+                id: 1,
+                arrival: 0,
+                deadline: BUDGET_INF,
+            },
+        )
+        .is_none());
+    match b.poll(0, &xi) {
+        BatcherPoll::Ready(batch) => assert_eq!(batch.len(), 1),
+        other => panic!("{other:?}"),
+    }
+    // Unregistered (finished) queries bounce events back to the caller.
+    assert!(b
+        .push(
+            9,
+            QueuedEvent {
+                item: 9,
+                id: 9,
+                arrival: 0,
+                deadline: BUDGET_INF,
+            },
+        )
+        .is_some());
+}

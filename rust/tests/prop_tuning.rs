@@ -1,6 +1,14 @@
 //! Property-based tests over the tuning invariants (hand-rolled
-//! generator loop — the offline environment has no proptest crate; each
-//! property runs across hundreds of seeded random cases).
+//! generator loop — the offline environment has no proptest crate, so
+//! the proptest-style properties are driven by seeded `Rng` loops; each
+//! property runs across hundreds of random cases and shrinking is
+//! replaced by printing the offending inputs in the assert message).
+//!
+//! Covers, among others: the three drop points' skew invariance and
+//! budget monotonicity, the §4.3.3 exemption rule (avoid-drop/probe
+//! events are never dropped at any point), batcher FIFO/deadline
+//! monotonicity, fair-share weight proportionality, signal-order
+//! resilience of budgets, and ledger conservation.
 
 use anveshak::config::{BatchingKind, ExperimentConfig};
 use anveshak::coordinator::des;
@@ -8,8 +16,9 @@ use anveshak::dataflow::Partitioner;
 use anveshak::metrics::Ledger;
 use anveshak::tuning::budget::BUDGET_INF;
 use anveshak::tuning::{
-    drop_before_exec, drop_before_queue, drop_before_transmit, Batcher,
-    BatcherPoll, BudgetManager, EventRecord, QueuedEvent, Signal, XiModel,
+    drop_at_exec, drop_at_queue, drop_at_transmit, drop_before_exec,
+    drop_before_queue, drop_before_transmit, Batcher, BatcherPoll,
+    BudgetManager, EventRecord, FairShare, QueuedEvent, Signal, XiModel,
 };
 use anveshak::util::{rng, Micros, Rng, MS, SEC};
 
@@ -77,6 +86,77 @@ fn prop_drop_monotone_in_budget() {
         }
         if !drop_before_queue(u, x, b1) {
             assert!(!drop_before_queue(u, x, b2));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exemption invariant (§4.3.3 + §4.5.2): avoid-drop and probe events
+// are never dropped at ANY of the three drop points, no matter how
+// stale — both engines route every decision through the drop_at_*
+// gates, so the invariant is provable here once.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exempt_events_never_dropped_at_any_point() {
+    for mut r in cases(20, 500) {
+        // Adversarial inputs: hugely stale events against tiny (even
+        // zero) budgets, where the non-exempt decision is surely Drop.
+        let u = r.range_i64(0, 120 * SEC);
+        let q = r.range_i64(0, 60 * SEC);
+        let x = r.range_i64(1, 5 * SEC);
+        let budget = r.range_i64(0, 2 * SEC);
+        // Exempt events (avoid_drop or probe) always survive.
+        assert!(!drop_at_queue(true, u, x, budget));
+        assert!(!drop_at_exec(true, u, q, x, budget));
+        assert!(!drop_at_transmit(true, u, q + x, budget));
+        // Non-exempt gates agree exactly with the raw drop points.
+        assert_eq!(
+            drop_at_queue(false, u, x, budget),
+            drop_before_queue(u, x, budget)
+        );
+        assert_eq!(
+            drop_at_exec(false, u, q, x, budget),
+            drop_before_exec(u, q, x, budget)
+        );
+        assert_eq!(
+            drop_at_transmit(false, u, q + x, budget),
+            drop_before_transmit(u, q + x, budget)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fair-share: weighted DRR service proportions over random workloads.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fair_share_service_proportional_to_weights() {
+    for mut r in cases(21, 100) {
+        let n = r.range_u(2, 6);
+        let weights: Vec<u32> =
+            (0..n).map(|_| r.range_u(1, 5) as u32).collect();
+        let mut fs = FairShare::new();
+        for (q, &w) in weights.iter().enumerate() {
+            fs.ensure(q as u32, w);
+        }
+        let total_w: u32 = weights.iter().sum();
+        // Serve several whole refill cycles with everyone backlogged.
+        let cycles = r.range_u(2, 8) as u32;
+        let rounds = (total_w * cycles) as usize;
+        let mut counts = vec![0u32; n];
+        for _ in 0..rounds {
+            let q = fs.pick(|_| true).expect("everyone has work");
+            fs.charge(q, 1);
+            counts[q as usize] += 1;
+        }
+        // Over whole cycles, service is exactly weight-proportional.
+        for (q, &w) in weights.iter().enumerate() {
+            assert_eq!(
+                counts[q],
+                w * cycles,
+                "weights {weights:?} counts {counts:?}"
+            );
         }
     }
 }
@@ -184,6 +264,77 @@ fn prop_dynamic_batch_deadline_is_min() {
                 assert!(!batch.is_empty());
             }
             BatcherPoll::Idle => panic!("events pending but idle"),
+        }
+    }
+}
+
+#[test]
+fn prop_batch_deadlines_monotone_in_arrival_order() {
+    // Events enter a task in arrival order with non-decreasing
+    // deadlines (deadline = budget + src_arrival and FIFO arrival).
+    // Then (a) each formed batch's deadline Δp is its *first* member's
+    // deadline (the min), and (b) successive batches have non-
+    // decreasing deadlines — batching never reorders urgency.
+    for mut r in cases(22, 200) {
+        let xi = XiModel::affine_ms(
+            r.range_f64(5.0, 60.0),
+            r.range_f64(5.0, 60.0),
+        );
+        let max = r.range_u(2, 26);
+        let mut b: Batcher<u64> = Batcher::dynamic(max);
+        let n = r.range_u(2, 40);
+        let mut deadline = r.range_i64(5 * SEC, 10 * SEC);
+        let mut now: Micros = 0;
+        let mut pushed = 0u64;
+        let mut batch_deadlines: Vec<Micros> = Vec::new();
+        let mut drain = |b: &mut Batcher<u64>,
+                         now: &mut Micros,
+                         out: &mut Vec<Micros>| {
+            loop {
+                match b.poll(*now, &xi) {
+                    BatcherPoll::Ready(batch) => {
+                        let min = batch
+                            .iter()
+                            .map(|e| e.deadline)
+                            .min()
+                            .unwrap();
+                        assert_eq!(
+                            min, batch[0].deadline,
+                            "batch deadline is the first (earliest) \
+                             member's"
+                        );
+                        out.push(min);
+                    }
+                    BatcherPoll::Timer(at) => {
+                        if *now >= at {
+                            break;
+                        }
+                        *now = at;
+                    }
+                    BatcherPoll::Idle => break,
+                }
+            }
+        };
+        while pushed < n as u64 {
+            now += r.range_i64(0, 300 * MS);
+            deadline += r.range_i64(0, 2 * SEC); // non-decreasing
+            b.push(QueuedEvent {
+                item: pushed,
+                id: pushed,
+                arrival: now,
+                deadline,
+            });
+            pushed += 1;
+            if r.bool(0.5) {
+                drain(&mut b, &mut now, &mut batch_deadlines);
+            }
+        }
+        drain(&mut b, &mut now, &mut batch_deadlines);
+        for w in batch_deadlines.windows(2) {
+            assert!(
+                w[0] <= w[1],
+                "batch deadlines regressed: {batch_deadlines:?}"
+            );
         }
     }
 }
