@@ -1,26 +1,201 @@
 //! Hot-path microbenchmarks (hand-rolled harness; the offline build has
 //! no criterion). Run via `cargo bench --bench hotpath`.
 //!
-//! Covers every L3 request-path primitive plus the PJRT model execution
-//! per batch bucket (the measured ξ(b) of §4.2), and the DES engine's
-//! virtual-event throughput that bounds harness turnaround.
+//! # Methodology
+//!
+//! Each primitive is timed by [`bench`]: up to 100 warm-up iterations,
+//! then `iters` timed iterations under `Instant`, reporting mean ns/op
+//! (no outlier rejection — these are comparative numbers on one
+//! machine, not absolute claims). Engine throughput is measured by
+//! running a fixed workload to completion and dividing the
+//! [`EventCore`]'s dispatched-event counter by the wall-clock seconds
+//! of the `run()` phase alone (engine construction — road generation,
+//! ground truth — is timed separately as `setup_s`).
+//!
+//! # Flags
+//!
+//! * `--smoke` — shrink iteration counts and DES workloads (~100x) so
+//!   CI can verify the bench builds and the JSON emitter works in
+//!   seconds. Smoke numbers are *not* comparable to full runs and the
+//!   emitted JSON carries `"mode": "smoke"` with no baseline ratios.
+//! * `--json` — additionally emit `BENCH_2.json` in the working
+//!   directory (the workspace root under `cargo bench`).
+//!
+//! # JSON schema (`BENCH_2.json`, schema `anveshak-hotpath-bench-v2`)
+//!
+//! ```json
+//! {
+//!   "schema": "anveshak-hotpath-bench-v2",
+//!   "mode": "full" | "smoke",
+//!   "baseline_commit": "...",         // full mode only
+//!   "primitives_ns_per_op": {
+//!     "<name>": {"current": ns, "baseline": ns?, "speedup": x?}
+//!   },
+//!   "des_runs": {
+//!     "<name>": {"setup_s": s, "wall_s": s, "core_events": n,
+//!                 "events_per_sec": r, "generated": n,
+//!                 "baseline_wall_s": s?, "speedup": x?}
+//!   }
+//! }
+//! ```
+//!
+//! The `baseline` values are one recorded run of the seed of this
+//! bench series (commit d1df67e, pre hot-path overhaul), compiled into
+//! [`BASELINE_NS`] / [`BASELINE_DES_WALL_S`]; a `speedup` is
+//! `baseline / current` (ns/op) or the wall-clock ratio (DES runs).
+//! **Caveat:** the baselines are machine-specific. A speedup computed
+//! against them is only meaningful when the current run uses
+//! comparable hardware; to re-establish the comparison locally, check
+//! out the baseline commit, run the seed bench there, update the
+//! constants, and re-run `--json` on this tree.
 
 use std::time::Instant;
 
-use anveshak::config::{BatchingKind, ExperimentConfig, WorkloadConfig};
-use anveshak::coordinator::des;
-use anveshak::dataflow::Partitioner;
-use anveshak::roadnet::{bfs_spotlight, generate, wbfs_spotlight};
+use anveshak::config::{
+    BatchingKind, ExperimentConfig, TlKind, WorkloadConfig,
+};
+use anveshak::coordinator::des::DesEngine;
+use anveshak::dataflow::{Event, Partitioner, Stage};
+use anveshak::engine::EventCore;
+use anveshak::roadnet::{
+    bfs_spotlight, bfs_spotlight_into, generate, probabilistic_spotlight,
+    probabilistic_spotlight_into, wbfs_spotlight, wbfs_spotlight_into,
+    SpotlightWorkspace,
+};
 use anveshak::runtime::{default_dir, ModelPool};
-use anveshak::sim::identity_image;
+use anveshak::service::engine::MultiQueryDes;
+use anveshak::service::{ScoreBackend, SimBackend};
+use anveshak::sim::{
+    identity_embedding, identity_image, identity_image_into,
+    IdentityGallery,
+};
 use anveshak::tuning::{
     drop_before_exec, Batcher, BatcherPoll, BudgetManager, EventRecord,
     QueuedEvent, Signal, XiModel,
 };
-use anveshak::util::{Json, MS, SEC};
+use anveshak::util::{Json, Micros, MS, SEC};
+
+/// Seed-commit ns/op numbers (full mode, same machine) for primitives
+/// that existed before the overhaul, or whose "fresh" variant is the
+/// legacy behaviour.
+const BASELINE_NS: &[(&str, f64)] = &[
+    ("spotlight.wbfs_r150.repeated", 1_690.0),
+    ("spotlight.wbfs_r500.repeated", 8_030.0),
+    ("spotlight.bfs_r500.repeated", 5_580.0),
+    ("spotlight.prob_60s.repeated", 40_700.0),
+    ("graph.generate_1000v", 7_410_000.0),
+    ("graph.generate_10000v", 931_000_000.0),
+    ("identity.embedding", 1_860.0),
+    ("identity.image", 63_900.0),
+    ("simbackend.score_b25.per_event", 96.0),
+];
+
+/// Seed-commit wall seconds of the `run()` phase for the DES workloads.
+const BASELINE_DES_WALL_S: &[(&str, f64)] = &[
+    ("des.1000cam.base.1q", 3.41),
+    ("mq.1000cam.wbfs.1q", 0.84),
+    ("mq.1000cam.wbfs.4q", 2.96),
+    ("mq.1000cam.wbfs.8q", 6.12),
+];
+
+struct Report {
+    mode: &'static str,
+    /// (name, current ns/op)
+    primitives: Vec<(String, f64)>,
+    /// (name, setup_s, wall_s, core_events, generated)
+    des: Vec<(String, f64, f64, u64, u64)>,
+}
+
+impl Report {
+    fn baseline_ns(name: &str) -> Option<f64> {
+        BASELINE_NS
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+    }
+
+    fn baseline_wall(name: &str) -> Option<f64> {
+        BASELINE_DES_WALL_S
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+    }
+
+    fn to_json(&self) -> String {
+        let full = self.mode == "full";
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"anveshak-hotpath-bench-v2\",\n");
+        s.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        if full {
+            s.push_str(
+                "  \"baseline_commit\": \"d1df67e (pre hot-path \
+                 overhaul)\",\n",
+            );
+            s.push_str(
+                "  \"baseline_note\": \"baselines are one recorded \
+                 dev-box run of the seed commit; speedup ratios are \
+                 only meaningful when 'current' comes from comparable \
+                 hardware — re-record both sides locally before citing \
+                 them\",\n",
+            );
+        }
+        s.push_str("  \"primitives_ns_per_op\": {\n");
+        for (i, (name, ns)) in self.primitives.iter().enumerate() {
+            let comma = if i + 1 < self.primitives.len() { "," } else { "" };
+            match Self::baseline_ns(name).filter(|_| full) {
+                Some(base) => s.push_str(&format!(
+                    "    \"{name}\": {{\"current\": {ns:.1}, \
+                     \"baseline\": {base:.1}, \"speedup\": {:.2}}}{comma}\n",
+                    base / ns
+                )),
+                None => s.push_str(&format!(
+                    "    \"{name}\": {{\"current\": {ns:.1}}}{comma}\n"
+                )),
+            }
+        }
+        s.push_str("  },\n");
+        s.push_str("  \"des_runs\": {\n");
+        for (i, (name, setup, wall, events, generated)) in
+            self.des.iter().enumerate()
+        {
+            let comma = if i + 1 < self.des.len() { "," } else { "" };
+            let eps = *events as f64 / wall.max(1e-9);
+            match Self::baseline_wall(name).filter(|_| full) {
+                Some(bw) => {
+                    // Same workload, same event count: the throughput
+                    // ratio is the wall-clock ratio.
+                    s.push_str(&format!(
+                        "    \"{name}\": {{\"setup_s\": {setup:.2}, \
+                         \"wall_s\": {wall:.2}, \"core_events\": {events}, \
+                         \"events_per_sec\": {eps:.0}, \
+                         \"generated\": {generated}, \
+                         \"baseline_wall_s\": {bw:.2}, \
+                         \"speedup\": {:.2}}}{comma}\n",
+                        bw / *wall
+                    ))
+                }
+                None => s.push_str(&format!(
+                    "    \"{name}\": {{\"setup_s\": {setup:.2}, \
+                     \"wall_s\": {wall:.2}, \"core_events\": {events}, \
+                     \"events_per_sec\": {eps:.0}, \
+                     \"generated\": {generated}}}{comma}\n"
+                )),
+            }
+        }
+        s.push_str("  }\n");
+        s.push_str("}\n");
+        s
+    }
+}
 
 /// Time `f` over `iters` iterations; returns ns/op.
-fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
+fn bench<F: FnMut()>(
+    report: &mut Report,
+    name: &str,
+    iters: u64,
+    mut f: F,
+) -> f64 {
     // Warm-up.
     for _ in 0..iters.min(100) {
         f();
@@ -38,25 +213,128 @@ fn bench<F: FnMut()>(name: &str, iters: u64, mut f: F) -> f64 {
         (ns, "ns")
     };
     println!("{name:<44} {val:>10.2} {unit}/op   ({iters} iters)");
+    report.primitives.push((name.to_string(), ns));
     ns
 }
 
+/// Run a single-query DES workload; records setup/run wall + counters.
+fn run_des(report: &mut Report, name: &str, cfg: ExperimentConfig) {
+    let setup = Instant::now();
+    let engine = DesEngine::new(cfg);
+    let setup_s = setup.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let r = engine.run();
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "{name:<34} setup {setup_s:>5.2}s  run {wall:>6.2}s  \
+         {:>9} core events  {:>9.0} ev/s  ({} frames)",
+        r.core_events,
+        r.core_events as f64 / wall.max(1e-9),
+        r.summary.generated,
+    );
+    report.des.push((
+        name.to_string(),
+        setup_s,
+        wall,
+        r.core_events,
+        r.summary.generated,
+    ));
+}
+
+/// Run a multi-query DES workload (N queries over the shared workers).
+fn run_mq(report: &mut Report, name: &str, cfg: ExperimentConfig) {
+    let mq = cfg.multi_query.clone();
+    let setup = Instant::now();
+    let engine = MultiQueryDes::new(cfg, mq);
+    let setup_s = setup.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let r = engine.run();
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "{name:<34} setup {setup_s:>5.2}s  run {wall:>6.2}s  \
+         {:>9} core events  {:>9.0} ev/s  ({} frames)",
+        r.core_events,
+        r.core_events as f64 / wall.max(1e-9),
+        r.aggregate.generated,
+    );
+    report.des.push((
+        name.to_string(),
+        setup_s,
+        wall,
+        r.core_events,
+        r.aggregate.generated,
+    ));
+}
+
+fn des_cfg(smoke: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    if smoke {
+        c.num_cameras = 60;
+        c.workload.vertices = 60;
+        c.workload.edges = 160;
+        c.duration_secs = 10.0;
+    } else {
+        c.num_cameras = 1000;
+        c.duration_secs = 60.0;
+    }
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c.drops_enabled = true;
+    c
+}
+
+fn mq_cfg(smoke: bool, queries: usize) -> ExperimentConfig {
+    let mut c = des_cfg(smoke);
+    c.tl = TlKind::Wbfs;
+    c.multi_query.num_queries = queries;
+    c.multi_query.mean_interarrival_secs = 5.0;
+    c.multi_query.lifetime_secs = if smoke { 10.0 } else { 60.0 };
+    c.multi_query.max_active = 16;
+    c.multi_query.max_active_cameras = 100_000;
+    c
+}
+
 fn main() {
-    println!("== L3 request-path primitives ==");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let emit_json = args.iter().any(|a| a == "--json");
+    let mut report = Report {
+        mode: if smoke { "smoke" } else { "full" },
+        primitives: Vec::new(),
+        des: Vec::new(),
+    };
+    let rp = &mut report;
+    // Iteration scaler for smoke mode.
+    let it = |n: u64| if smoke { (n / 100).max(10) } else { n };
+
+    println!("== Shared event core ==");
+    {
+        let mut core: EventCore<u64> = EventCore::new();
+        let mut t: Micros = 0;
+        // Two schedules + two pops per iteration: steady state, so the
+        // slab/heap stay at their (tiny) high-water capacity.
+        bench(rp, "event_core.schedule_pop_x2", it(2_500_000), || {
+            t += 100;
+            core.schedule(t, t as u64);
+            core.schedule(t + 50, t as u64 + 1);
+            while core.pop_until(t + 50).is_some() {}
+        });
+    }
+
+    println!("\n== L3 request-path primitives ==");
 
     let part = Partitioner::new(10);
     let mut k = 0usize;
-    bench("partitioner.route", 5_000_000, || {
+    bench(rp, "partitioner.route", it(5_000_000), || {
         k = k.wrapping_add(1);
         std::hint::black_box(part.route(k));
     });
 
     let xi = XiModel::affine_ms(52.5, 67.5);
-    bench("xi.estimate", 5_000_000, || {
+    bench(rp, "xi.estimate", it(5_000_000), || {
         std::hint::black_box(xi.xi(std::hint::black_box(17)));
     });
 
-    bench("drop_point_2.check", 5_000_000, || {
+    bench(rp, "drop_point_2.check", it(5_000_000), || {
         std::hint::black_box(drop_before_exec(
             std::hint::black_box(10 * SEC),
             2 * SEC,
@@ -69,7 +347,7 @@ fn main() {
     let mut b: Batcher<u64> = Batcher::dynamic(25);
     let mut now = 0i64;
     let mut id = 0u64;
-    bench("batcher.push_poll (dynamic)", 300_000, || {
+    bench(rp, "batcher.push_poll (dynamic)", it(300_000), || {
         now += 125 * MS;
         b.push(QueuedEvent {
             item: id,
@@ -86,7 +364,7 @@ fn main() {
     // Budget bookkeeping: record + signal application.
     let mut bm = BudgetManager::new(10, 25, 4096);
     let mut e = 0u64;
-    bench("budget.record", 1_000_000, || {
+    bench(rp, "budget.record", it(1_000_000), || {
         bm.record(
             e,
             EventRecord {
@@ -99,7 +377,7 @@ fn main() {
         e += 1;
     });
     let mut s = 0u64;
-    bench("budget.apply(reject)", 1_000_000, || {
+    bench(rp, "budget.apply(reject)", it(1_000_000), || {
         bm.apply(
             Signal::Reject {
                 event: s % e,
@@ -111,45 +389,131 @@ fn main() {
         s += 1;
     });
 
-    println!("\n== Road-network / TL substrate ==");
+    println!("\n== Road-network generation (CSR + dedup-set builder) ==");
+    bench(rp, "graph.generate_1000v", it(300), || {
+        std::hint::black_box(
+            generate(&WorkloadConfig::default(), 2019).num_edges(),
+        );
+    });
+    if !smoke {
+        let w10k = WorkloadConfig {
+            vertices: 10_000,
+            edges: 28_170,
+            ..Default::default()
+        };
+        bench(rp, "graph.generate_10000v", 3, || {
+            std::hint::black_box(generate(&w10k, 2019).num_edges());
+        });
+    }
+
+    println!("\n== TL spotlight expansion (fresh vs reused workspace) ==");
     let g = generate(&WorkloadConfig::default(), 2019);
-    bench("wbfs_spotlight r=500m (1000v graph)", 2_000, || {
+    let mut ws = SpotlightWorkspace::new();
+    let mut out = Vec::new();
+    // r=150 m is the typical early blind-spot radius (es=4 m/s, a few
+    // seconds blind, + FOV): the contracted-spotlight common case the
+    // TL re-expands every tick.
+    bench(rp, "spotlight.wbfs_r150.fresh", it(200_000), || {
+        std::hint::black_box(wbfs_spotlight(&g, 0, 150.0).len());
+    });
+    bench(rp, "spotlight.wbfs_r150.repeated", it(200_000), || {
+        wbfs_spotlight_into(&g, 0, 150.0, &mut ws, &mut out);
+        std::hint::black_box(out.len());
+    });
+    bench(rp, "spotlight.wbfs_r500.fresh", it(50_000), || {
         std::hint::black_box(wbfs_spotlight(&g, 0, 500.0).len());
     });
-    bench("bfs_spotlight r=500m", 2_000, || {
+    bench(rp, "spotlight.wbfs_r500.repeated", it(50_000), || {
+        wbfs_spotlight_into(&g, 0, 500.0, &mut ws, &mut out);
+        std::hint::black_box(out.len());
+    });
+    bench(rp, "spotlight.bfs_r500.fresh", it(50_000), || {
         std::hint::black_box(bfs_spotlight(&g, 0, 500.0, 84.5).len());
     });
+    bench(rp, "spotlight.bfs_r500.repeated", it(50_000), || {
+        bfs_spotlight_into(&g, 0, 500.0, 84.5, &mut ws, &mut out);
+        std::hint::black_box(out.len());
+    });
+    bench(rp, "spotlight.prob_60s.fresh", it(20_000), || {
+        std::hint::black_box(
+            probabilistic_spotlight(&g, 0, 4.0, 60.0, 0.9).len(),
+        );
+    });
+    bench(rp, "spotlight.prob_60s.repeated", it(20_000), || {
+        probabilistic_spotlight_into(
+            &g, 0, 4.0, 60.0, 0.9, &mut ws, &mut out,
+        );
+        std::hint::black_box(out.len());
+    });
+
+    println!("\n== Identity images / batch scoring ==");
+    let mut ident = 0u64;
+    bench(rp, "identity.embedding", it(100_000), || {
+        ident = (ident + 1) % 16;
+        std::hint::black_box(identity_embedding(ident).len());
+    });
+    let mut gallery = IdentityGallery::new();
+    bench(rp, "identity.embedding.cached", it(1_000_000), || {
+        ident = (ident + 1) % 16;
+        std::hint::black_box(gallery.embedding(ident).len());
+    });
+    let mut frame = 0u64;
+    bench(rp, "identity.image", it(5_000), || {
+        frame += 1;
+        std::hint::black_box(identity_image(1, frame, 0.25).len());
+    });
+    let mut img_buf = Vec::new();
+    bench(rp, "identity.image.into_buffer", it(5_000), || {
+        frame += 1;
+        identity_image_into(1, frame, 0.25, &mut img_buf);
+        std::hint::black_box(img_buf.len());
+    });
+
+    // SimBackend columnar batch scoring, 25 events per batch.
+    {
+        let backend = SimBackend::default();
+        let events: Vec<Event> = (0..25)
+            .map(|i| Event::frame(i, i as usize % 8, i, 0, i % 3 == 0))
+            .collect();
+        let mut scores: Vec<f32> = Vec::new();
+        let per_batch = bench(
+            rp,
+            "simbackend.score_b25.batch",
+            it(200_000),
+            || {
+                scores.clear();
+                backend.score_into(Stage::Va, 0, &events, &mut scores);
+                std::hint::black_box(scores.len());
+            },
+        );
+        let per_event = per_batch / events.len() as f64;
+        println!(
+            "simbackend.score_b25.per_event               {per_event:>10.2} ns/op"
+        );
+        rp.primitives
+            .push(("simbackend.score_b25.per_event".into(), per_event));
+    }
 
     println!("\n== Infra substrates ==");
     let manifest_text = std::fs::read_to_string(
         default_dir().join("manifest.json"),
     )
     .unwrap_or_else(|_| "{\"a\":[1,2,3]}".into());
-    bench("json.parse(manifest)", 2_000, || {
+    bench(rp, "json.parse(manifest)", it(2_000), || {
         std::hint::black_box(Json::parse(&manifest_text).unwrap());
     });
 
-    println!("\n== DES engine throughput ==");
+    println!("\n== DES engine throughput (events/sec, shared core) ==");
     {
-        let mut cfg = ExperimentConfig::default();
-        cfg.num_cameras = 200;
-        cfg.workload.vertices = 200;
-        cfg.workload.edges = 560;
-        cfg.duration_secs = 120.0;
-        cfg.tl = anveshak::config::TlKind::Base; // all active: max load
-        cfg.batching = BatchingKind::Dynamic { max: 25 };
-        cfg.drops_enabled = true;
-        let start = Instant::now();
-        let r = des::run(cfg);
-        let wall = start.elapsed().as_secs_f64();
-        // Each source event crosses ~4 tasks; count hops as DES events.
-        let hops = r.summary.generated * 4;
-        println!(
-            "des.run 200cams x 120s: {:.2}s wall, {} source events, {:.0} task-hops/s",
-            wall,
-            r.summary.generated,
-            hops as f64 / wall
-        );
+        // Single query, Base TL (all cameras active): the max-load
+        // configuration that stresses the batcher/budget/drop path.
+        let mut c = des_cfg(smoke);
+        c.tl = TlKind::Base;
+        run_des(rp, "des.1000cam.base.1q", c);
+    }
+    for queries in [1usize, 4, 8] {
+        let c = mq_cfg(smoke, queries);
+        run_mq(rp, &format!("mq.1000cam.wbfs.{queries}q"), c);
     }
 
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");
@@ -173,12 +537,19 @@ fn main() {
             // End-to-end model call including upload of one frame.
             let img = identity_image(1, 0, 0.25);
             let q = vec![0f32; pool.feat_dim()];
-            bench("pjrt.va.execute b=1 (incl upload)", 200, || {
+            bench(rp, "pjrt.va.execute b=1 (incl upload)", 200, || {
                 std::hint::black_box(
                     pool.execute("va", &img, &q).unwrap().scores[0],
                 );
             });
         }
         Err(e) => println!("(skipping PJRT benches: {e})"),
+    }
+
+    if emit_json {
+        let json = report.to_json();
+        std::fs::write("BENCH_2.json", &json)
+            .expect("write BENCH_2.json");
+        println!("\nwrote BENCH_2.json ({} bytes)", json.len());
     }
 }

@@ -7,15 +7,13 @@
 //! 1000-camera experiments replay in seconds of wall-clock, exercising
 //! exactly the same tuning code the live engine uses.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::util::FastMap;
 
 use crate::config::{BatchingKind, ExperimentConfig};
 use crate::coordinator::tl::TrackingLogic;
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{Event, Payload, Stage};
+use crate::engine::EventCore;
 use crate::metrics::{Ledger, Summary, Timeline};
 use crate::roadnet::{generate, place_cameras, Graph};
 use crate::sim::{ClockSkews, EntityWalk, GroundTruth, NetModel};
@@ -83,6 +81,10 @@ pub struct RunResult {
     pub detections: u64,
     /// Peak size of the TL active set.
     pub peak_active: usize,
+    /// Total simulation events dispatched by the shared
+    /// [`EventCore`] — the numerator of the events/sec throughput
+    /// metric reported by `benches/hotpath.rs`.
+    pub core_events: u64,
 }
 
 /// The discrete-event simulation engine.
@@ -98,10 +100,7 @@ pub struct DesEngine {
     fc_active: Vec<bool>,
     fc_budget: Vec<BudgetManager>,
     fc_xi: XiModel,
-    heap: BinaryHeap<(Reverse<Micros>, Reverse<u64>, usize)>,
-    store: Vec<Option<Ev>>,
-    free_slots: Vec<usize>,
-    seq: u64,
+    core: EventCore<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
     frame_counters: Vec<u64>,
@@ -114,6 +113,14 @@ pub struct DesEngine {
     peak_active: usize,
     rng: Rng,
     now: Micros,
+    /// Reusable buffers for the per-batch hot path (drop filtering,
+    /// outgoing transmissions) and the TL tick (active set + wanted
+    /// cameras): allocations circulate instead of being re-made per
+    /// batch/tick.
+    kept_scratch: Vec<QueuedEvent<Event>>,
+    outgoing_scratch: Vec<Event>,
+    active_scratch: Vec<usize>,
+    want_scratch: Vec<bool>,
 }
 
 impl DesEngine {
@@ -236,10 +243,7 @@ impl DesEngine {
             fc_active: vec![true; num_cameras],
             fc_budget,
             fc_xi,
-            heap: BinaryHeap::new(),
-            store: Vec::new(),
-            free_slots: Vec::new(),
-            seq: 0,
+            core: EventCore::new(),
             next_event_id: 0,
             next_batch_seq: 0,
             frame_counters: vec![0; num_cameras],
@@ -250,21 +254,17 @@ impl DesEngine {
             peak_active: num_cameras,
             rng: rng(seed, 0xDE5),
             now: 0,
+            kept_scratch: Vec::new(),
+            outgoing_scratch: Vec::new(),
+            active_scratch: Vec::new(),
+            want_scratch: Vec::new(),
         }
     }
 
     // ---- event plumbing --------------------------------------------------
 
     fn push(&mut self, t: Micros, ev: Ev) {
-        let slot = if let Some(s) = self.free_slots.pop() {
-            self.store[s] = Some(ev);
-            s
-        } else {
-            self.store.push(Some(ev));
-            self.store.len() - 1
-        };
-        self.seq += 1;
-        self.heap.push((Reverse(t.max(self.now)), Reverse(self.seq), slot));
+        self.core.schedule(t, ev);
     }
 
     fn observe(&self, task: usize) -> Micros {
@@ -283,9 +283,10 @@ impl DesEngine {
     /// in-flight.
     pub fn run(mut self) -> RunResult {
         if self.cfg.seed_last_seen {
-            let active = self.tl.active_set(&self.graph, 0);
+            let mut active = std::mem::take(&mut self.active_scratch);
+            self.tl.active_set_into(&self.graph, 0, &mut active);
             self.fc_active = vec![false; self.cfg.num_cameras];
-            for cam in active {
+            for &cam in &active {
                 self.fc_active[cam] = true;
             }
             self.peak_active = self
@@ -293,6 +294,7 @@ impl DesEngine {
                 .iter()
                 .filter(|&&a| a)
                 .count();
+            self.active_scratch = active;
         }
         for cam in 0..self.cfg.num_cameras {
             // Stagger camera phases within the first frame interval.
@@ -302,13 +304,8 @@ impl DesEngine {
         self.push(SEC, Ev::TlTick);
 
         let horizon = self.cfg.duration() + 2 * self.cfg.gamma();
-        while let Some((Reverse(t), _, slot)) = self.heap.pop() {
-            if t > horizon {
-                break;
-            }
+        while let Some((t, ev)) = self.core.pop_until(horizon) {
             self.now = t;
-            let ev = self.store[slot].take().expect("event slot occupied");
-            self.free_slots.push(slot);
             self.dispatch(ev);
         }
 
@@ -317,6 +314,7 @@ impl DesEngine {
             timeline: self.timeline,
             detections: self.detections,
             peak_active: self.peak_active,
+            core_events: self.core.dispatched(),
         }
     }
 
@@ -453,7 +451,7 @@ impl DesEngine {
                         && drop_at_queue(exempt, u, xi1, budget)
                     {
                         let eps = (u + xi1) - budget;
-                        self.drop_event(task, &ev, eps);
+                        self.drop_event(task, ev, eps);
                         return;
                     }
                 }
@@ -482,8 +480,7 @@ impl DesEngine {
             let t_obs = self.observe(task);
             let poll = {
                 let ts = &mut self.tasks[task];
-                let xi = ts.xi.clone();
-                ts.batcher.poll(t_obs, &xi)
+                ts.batcher.poll(t_obs, &ts.xi)
             };
             match poll {
                 BatcherPoll::Idle => return,
@@ -502,11 +499,15 @@ impl DesEngine {
                 BatcherPoll::Ready(mut batch) => {
                     // Drop point 2: filter the formed batch (per-event
                     // downstream budgets; the route is key-determined).
+                    // The survivor buffer is engine-owned scratch, so
+                    // the filter allocates nothing in steady state.
                     if self.cfg.drops_enabled {
                         let b = batch.len();
                         let xib = self.tasks[task].xi.xi(b);
-                        let mut kept = Vec::with_capacity(b);
-                        for qe in batch {
+                        let mut kept =
+                            std::mem::take(&mut self.kept_scratch);
+                        kept.clear();
+                        for qe in batch.drain(..) {
                             let slot = self.topo.downstream_slot(
                                 task,
                                 qe.item.header.camera,
@@ -523,14 +524,16 @@ impl DesEngine {
                                 && drop_at_exec(exempt, u, q, xib, budget)
                             {
                                 let eps = (u + q + xib) - budget;
-                                self.drop_event(task, &qe.item, eps);
+                                self.drop_event(task, qe.item, eps);
                             } else {
                                 kept.push(qe);
                             }
                         }
-                        batch = kept;
+                        std::mem::swap(&mut batch, &mut kept);
+                        self.kept_scratch = kept;
                     }
                     if batch.is_empty() {
+                        self.tasks[task].batcher.recycle(batch);
                         continue; // try to form the next batch
                     }
                     let b = batch.len();
@@ -562,7 +565,7 @@ impl DesEngine {
     fn on_exec_done(
         &mut self,
         task: usize,
-        batch: Vec<QueuedEvent<Event>>,
+        mut batch: Vec<QueuedEvent<Event>>,
         start_obs: Micros,
         xi_est: Micros,
         actual: Micros,
@@ -587,8 +590,12 @@ impl DesEngine {
         );
 
         // First pass: per-event bookkeeping + semantics + drop point 3.
-        let mut outgoing: Vec<(Event, usize /*slot*/)> = Vec::new();
-        for qe in batch {
+        // Survivors land in engine-owned scratch; the emptied batch vec
+        // is recycled into the batcher, so the steady state circulates
+        // two buffers instead of allocating per batch.
+        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
+        outgoing.clear();
+        for qe in batch.drain(..) {
             let mut ev = qe.item;
             let cam = ev.header.camera;
             let q = start_obs - qe.arrival;
@@ -619,18 +626,19 @@ impl DesEngine {
                     && drop_at_transmit(exempt, u, pi, budget)
                 {
                     let eps = (u + pi) - budget;
-                    self.drop_event(task, &ev, eps);
+                    self.drop_event(task, ev, eps);
                     continue;
                 }
             }
-            outgoing.push((ev, slot));
+            outgoing.push(ev);
         }
+        self.tasks[task].batcher.recycle(batch);
 
         // Second pass: transmit (batch tag tells the sink the surviving
         // size so accept logic can find the slowest member).
         let out_n = outgoing.len();
         let src_node = self.topo.node_of(task);
-        for (ev, _slot) in outgoing {
+        for ev in outgoing.drain(..) {
             let cam = ev.header.camera;
             let (next_task, bytes) = match stage {
                 Stage::Va => {
@@ -678,6 +686,7 @@ impl DesEngine {
                 },
             );
         }
+        self.outgoing_scratch = outgoing;
 
         // The executor is free: form the next batch.
         self.try_form_batch(task);
@@ -767,8 +776,9 @@ impl DesEngine {
     }
 
     /// Drop an event at `task`, ledger it, send reject signals upstream
-    /// and forward every k-th drop as a probe (§4.5.2).
-    fn drop_event(&mut self, task: usize, ev: &Event, eps: Micros) {
+    /// and forward every k-th drop as a probe (§4.5.2). Takes the event
+    /// by value: probes reuse the dropped event instead of cloning it.
+    fn drop_event(&mut self, task: usize, ev: Event, eps: Micros) {
         let stage = self.tasks[task].stage;
         self.ledger.dropped(ev.header.id, stage);
         self.timeline.dropped(self.now);
@@ -786,30 +796,26 @@ impl DesEngine {
             .iter()
             .position(|&t| t == task)
             .unwrap_or(path.len());
-        let src_node = self.tasks[task].node;
         for &up in path.iter().take(my_pos) {
             let lat = self.net.transfer_estimate(
                 self.net.meta_bytes,
                 self.now,
             );
             if self.topo.stage_of(up) == Stage::Fc {
-                // FC budgets live in the engine (per camera).
-                let xi = self.fc_xi.clone();
-                // Signals to the edge arrive after the network latency;
-                // apply directly (FC state is engine-owned).
-                self.fc_budget[cam].apply(sig, &xi);
+                // FC budgets live in the engine (per camera); signals
+                // to the edge apply directly (FC state is engine-owned).
+                self.fc_budget[cam].apply(sig, &self.fc_xi);
             } else {
                 self.push(self.now + lat, Ev::SignalAt { task: up, sig });
             }
         }
-        let _ = src_node;
 
         // Probe: forward every k-th dropped event un-droppable so the
         // sink can re-open collapsed budgets.
         if self.cfg.probe_every > 0
             && self.tasks[task].drop_count % self.cfg.probe_every == 0
         {
-            let mut probe = ev.clone();
+            let mut probe = ev;
             probe.header.probe = true;
             let (next_task, bytes) = match stage {
                 Stage::Va => {
@@ -904,8 +910,7 @@ impl DesEngine {
         for &up in path.iter().take(3) {
             // FC, VA, CR
             if self.topo.stage_of(up) == Stage::Fc {
-                let xi = self.fc_xi.clone();
-                self.fc_budget[cam].apply(sig, &xi);
+                self.fc_budget[cam].apply(sig, &self.fc_xi);
             } else {
                 let lat = self
                     .net
@@ -925,14 +930,19 @@ impl DesEngine {
     }
 
     fn apply_active_set(&mut self) {
-        let active = self.tl.active_set(&self.graph, self.now);
+        // Spotlight expansion reuses the TL's epoch-stamped workspace;
+        // the active/wanted buffers are engine scratch — the per-tick
+        // allocations this used to make are gone.
+        let mut active = std::mem::take(&mut self.active_scratch);
+        self.tl.active_set_into(&self.graph, self.now, &mut active);
         self.peak_active = self.peak_active.max(active.len());
         self.timeline.sample_active(self.now, active.len());
-        let mut want = vec![false; self.cfg.num_cameras];
-        for cam in active {
+        let mut want = std::mem::take(&mut self.want_scratch);
+        want.clear();
+        want.resize(self.cfg.num_cameras, false);
+        for &cam in &active {
             want[cam] = true;
         }
-        let tl_node = self.topo.node_of(self.topo.tl);
         for cam in 0..self.cfg.num_cameras {
             if want[cam] != self.fc_active[cam] {
                 // Control command travels to the edge device.
@@ -948,7 +958,8 @@ impl DesEngine {
                 );
             }
         }
-        let _ = tl_node;
+        self.want_scratch = want;
+        self.active_scratch = active;
     }
 }
 

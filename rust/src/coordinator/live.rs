@@ -28,7 +28,9 @@ use crate::dataflow::{Event, Header, Partitioner, Payload, Stage};
 use crate::metrics::{Ledger, Summary};
 use crate::roadnet::{generate, place_cameras};
 use crate::runtime::{ModelOutput, ModelPool};
-use crate::sim::{identity_image, EntityWalk, GroundTruth};
+use crate::sim::{
+    identity_image, EntityWalk, GroundTruth, IdentityGallery,
+};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, Batcher, BatcherPoll, BudgetManager,
@@ -36,11 +38,14 @@ use crate::tuning::{
 };
 use crate::util::{Micros, SEC};
 
-/// A request to the model-service thread.
+/// A request to the model-service thread. The reply returns the image
+/// buffer alongside the output so callers can reuse it (one gather
+/// buffer round-trips per worker instead of reallocating
+/// `batch × IMG_DIM` floats per execution).
 struct ModelReq {
     variant: String,
     images: Vec<f32>,
-    reply: Sender<Result<ModelOutput>>,
+    reply: Sender<(Result<ModelOutput>, Vec<f32>)>,
 }
 
 /// The PJRT client is not `Send` (it holds `Rc` internals), so one
@@ -97,7 +102,7 @@ impl ModelService {
                     for req in rx {
                         let out =
                             pool.execute(&req.variant, &req.images, &q);
-                        let _ = req.reply.send(out);
+                        let _ = req.reply.send((out, req.images));
                     }
                 }
                 Err(e) => {
@@ -124,15 +129,38 @@ impl ModelService {
         variant: &str,
         images: Vec<f32>,
     ) -> Result<ModelOutput> {
+        self.execute_reusing(variant, images).0
+    }
+
+    /// Execute and hand the (emptied-of-purpose) image buffer back so
+    /// the caller can refill it for the next batch.
+    pub fn execute_reusing(
+        &self,
+        variant: &str,
+        images: Vec<f32>,
+    ) -> (Result<ModelOutput>, Vec<f32>) {
         let (reply, rx) = mpsc::channel();
-        self.tx
+        if self
+            .tx
             .send(ModelReq {
                 variant: variant.to_string(),
                 images,
                 reply,
             })
-            .map_err(|_| anyhow::anyhow!("model service down"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("model service down"))?
+            .is_err()
+        {
+            return (
+                Err(anyhow::anyhow!("model service down")),
+                Vec::new(),
+            );
+        }
+        match rx.recv() {
+            Ok((out, buf)) => (out, buf),
+            Err(_) => (
+                Err(anyhow::anyhow!("model service down")),
+                Vec::new(),
+            ),
+        }
     }
 
     pub fn img_dim(&self) -> usize {
@@ -179,6 +207,8 @@ struct Worker {
     budget: BudgetManager,
     xi: XiModel,
     score_threshold: f32,
+    /// Reusable image gather buffer (batch × IMG_DIM floats).
+    img_scratch: Vec<f32>,
 }
 
 struct Shared {
@@ -432,6 +462,9 @@ impl LiveEngine {
         // ---- feed loop (main thread) -----------------------------------------
         let mut next_id = 0u64;
         let mut frame_no = vec![0u64; cfg.num_cameras];
+        // Identity embeddings recur (the entity + a bounded background
+        // pool): memoise them instead of recomputing per frame.
+        let mut gallery = IdentityGallery::new();
         let period =
             Duration::from_micros((1e6 / cfg.fps) as u64);
         let mut next_fire = Instant::now();
@@ -451,7 +484,7 @@ impl LiveEngine {
                 } else {
                     1_000 + ((cam as u64) * 131 + frame_no[cam]) % 5_000
                 };
-                let img = identity_image(ident, frame_no[cam], 0.25);
+                let img = gallery.image(ident, frame_no[cam], 0.25);
                 let header =
                     Header::new(next_id, cam, frame_no[cam], t);
                 shared
@@ -528,6 +561,7 @@ impl LiveEngine {
             budget: BudgetManager::new(1, m_max, 2048),
             xi: xi.clone().with_ema(0.1),
             score_threshold: 0.5,
+            img_scratch: Vec::new(),
         }
     }
 }
@@ -691,8 +725,11 @@ fn exec_batch(
     }
     let b = batch.len();
 
-    // Gather pixels and run the real model.
-    let mut images = Vec::with_capacity(b * img_dim);
+    // Gather pixels into the worker's reusable buffer and run the real
+    // model; the buffer round-trips through the service thread.
+    let mut images = std::mem::take(&mut w.img_scratch);
+    images.clear();
+    images.reserve(b * img_dim);
     for qe in &batch {
         match &qe.item.payload {
             Payload::FrameData(img) => images.extend_from_slice(img),
@@ -700,7 +737,9 @@ fn exec_batch(
         }
     }
 
-    let out = svc.execute(variant, images).expect("model execution");
+    let (out, buf) = svc.execute_reusing(variant, images);
+    w.img_scratch = buf;
+    let out = out.expect("model execution");
     let end = now_us(sh.start);
     let actual = end - start;
     w.xi.observe(b, actual);

@@ -7,13 +7,12 @@
 //! a blind-spot. Engine-agnostic: both the DES and the live engine feed
 //! it detections and ask for the active set.
 
-use std::collections::HashMap;
-
 use crate::config::TlKind;
 use crate::roadnet::{
-    bfs_spotlight, probabilistic_spotlight, wbfs_spotlight, Camera, Graph,
+    bfs_spotlight_into, probabilistic_spotlight_into, wbfs_spotlight_into,
+    Camera, Graph, SpotlightWorkspace, VertexId,
 };
-use crate::util::{Micros, SEC};
+use crate::util::{FastMap, Micros, SEC};
 
 /// Spotlight tracking state.
 pub struct TrackingLogic {
@@ -25,8 +24,8 @@ pub struct TrackingLogic {
     fixed_len_m: f64,
     /// Extra slack added to the spotlight radius (covers FOV).
     fov_m: f64,
-    /// vertex -> cameras mounted there.
-    cam_at: HashMap<usize, Vec<usize>>,
+    /// vertex -> cameras mounted there (hit once per spotlight vertex).
+    cam_at: FastMap<usize, Vec<usize>>,
     cameras: Vec<Camera>,
     /// Last positive sighting: (vertex, capture time).
     last_seen: Option<(usize, Micros)>,
@@ -34,6 +33,11 @@ pub struct TrackingLogic {
     prev_seen: Option<(usize, Micros)>,
     /// Whether the entity was visible at the last evaluation.
     visible: bool,
+    /// Reusable expansion state: the TL re-expands on every blind-spot
+    /// tick, so the workspace and vertex buffer live for the TL's
+    /// lifetime instead of being allocated per expansion.
+    ws: SpotlightWorkspace,
+    verts: Vec<VertexId>,
 }
 
 impl TrackingLogic {
@@ -44,7 +48,7 @@ impl TrackingLogic {
         fov_m: f64,
         cameras: &[Camera],
     ) -> Self {
-        let mut cam_at: HashMap<usize, Vec<usize>> = HashMap::new();
+        let mut cam_at: FastMap<usize, Vec<usize>> = FastMap::default();
         for c in cameras {
             cam_at.entry(c.vertex).or_default().push(c.id);
         }
@@ -58,6 +62,8 @@ impl TrackingLogic {
             last_seen: None,
             prev_seen: None,
             visible: false,
+            ws: SpotlightWorkspace::new(),
+            verts: Vec::new(),
         }
     }
 
@@ -111,28 +117,46 @@ impl TrackingLogic {
         Some(d / ((t1 - t0) as f64 / SEC as f64))
     }
 
-    /// The camera ids that should be active at time `now`.
+    /// The camera ids that should be active at time `now` (convenience
+    /// wrapper over [`Self::active_set_into`]).
+    pub fn active_set(&mut self, g: &Graph, now: Micros) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.active_set_into(g, now, &mut out);
+        out
+    }
+
+    /// Compute the active camera ids at time `now` into `out` (sorted,
+    /// deduplicated), reusing the TL's spotlight workspace — the
+    /// engines call this every blind-spot tick, so the expansion
+    /// allocates nothing in steady state.
     ///
     /// Expansion (§ Fig 1): while in a blind-spot the spotlight radius
     /// grows as `es * time-since-last-seen + fov`; on a sighting it
     /// contracts to the camera(s) at the sighting vertex.
-    pub fn active_set(&self, g: &Graph, now: Micros) -> Vec<usize> {
+    pub fn active_set_into(
+        &mut self,
+        g: &Graph,
+        now: Micros,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
         if matches!(self.kind, TlKind::Base) {
             // Baseline: every camera active all the time.
-            return (0..self.cameras.len()).collect();
+            out.extend(0..self.cameras.len());
+            return;
         }
         let Some((vertex, seen_at)) = self.last_seen else {
             // Entity never seen: keep the whole network live so the
             // first sighting can happen (paper bootstraps all-active).
-            return (0..self.cameras.len()).collect();
+            out.extend(0..self.cameras.len());
+            return;
         };
         if self.visible {
             // Contracted spotlight: the sighting vertex only.
-            return self
-                .cam_at
-                .get(&vertex)
-                .cloned()
-                .unwrap_or_default();
+            if let Some(cams) = self.cam_at.get(&vertex) {
+                out.extend_from_slice(cams);
+            }
+            return;
         }
         let blind_s = ((now - seen_at).max(0)) as f64 / SEC as f64;
         let radius = match self.kind {
@@ -147,31 +171,42 @@ impl TrackingLogic {
             }
             _ => self.es_mps * blind_s + self.fov_m,
         };
-        let verts = match self.kind {
-            TlKind::Bfs => {
-                bfs_spotlight(g, vertex, radius, self.fixed_len_m)
-            }
-            TlKind::Wbfs | TlKind::WbfsSpeed => {
-                wbfs_spotlight(g, vertex, radius)
-            }
-            TlKind::Probabilistic => probabilistic_spotlight(
+        let mut verts = std::mem::take(&mut self.verts);
+        match self.kind {
+            TlKind::Bfs => bfs_spotlight_into(
+                g,
+                vertex,
+                radius,
+                self.fixed_len_m,
+                &mut self.ws,
+                &mut verts,
+            ),
+            TlKind::Wbfs | TlKind::WbfsSpeed => wbfs_spotlight_into(
+                g,
+                vertex,
+                radius,
+                &mut self.ws,
+                &mut verts,
+            ),
+            TlKind::Probabilistic => probabilistic_spotlight_into(
                 g,
                 vertex,
                 self.es_mps,
                 blind_s.max(1.0),
                 0.90,
+                &mut self.ws,
+                &mut verts,
             ),
             TlKind::Base => unreachable!(),
-        };
-        let mut cams: Vec<usize> = verts
-            .iter()
-            .filter_map(|v| self.cam_at.get(v))
-            .flatten()
-            .copied()
-            .collect();
-        cams.sort_unstable();
-        cams.dedup();
-        cams
+        }
+        for v in &verts {
+            if let Some(cams) = self.cam_at.get(v) {
+                out.extend_from_slice(cams);
+            }
+        }
+        self.verts = verts;
+        out.sort_unstable();
+        out.dedup();
     }
 }
 
@@ -191,7 +226,7 @@ mod tests {
 
     #[test]
     fn bootstrap_all_active() {
-        let (g, tl) = setup(TlKind::Bfs);
+        let (g, mut tl) = setup(TlKind::Bfs);
         assert_eq!(tl.active_set(&g, 0).len(), 1000);
     }
 

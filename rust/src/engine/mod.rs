@@ -1,0 +1,11 @@
+//! Engine substrate shared by the virtual-time execution engines.
+//!
+//! [`EventCore`] holds the slab-indexed event queue and pop-advance
+//! loop that [`crate::coordinator::des`] (single query) and
+//! [`crate::service::engine`] (multi query) both instantiate; the
+//! engines contribute only their event vocabularies and handlers.
+
+pub mod core;
+
+// `self::` disambiguates from the `core` built-in crate (E0659).
+pub use self::core::EventCore;

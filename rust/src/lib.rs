@@ -16,7 +16,11 @@
 //!   `artifacts/` and executed from Rust through the PJRT C API
 //!   ([`runtime`]). Python never runs on the request path.
 //!
-//! Two execution engines share the same module and tuning logic:
+//! Two execution engines share the same module and tuning logic — and
+//! one event substrate, [`engine::EventCore`] (slab-indexed storage, a
+//! binary heap over 24-byte keys, zero steady-state allocation), so
+//! there is a single dispatch loop implementation rather than one per
+//! engine:
 //!
 //! * [`coordinator::des`] — a virtual-time discrete-event engine used by
 //!   the experiment harness to regenerate every figure of the paper's
@@ -59,6 +63,7 @@ pub mod apps;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
+pub mod engine;
 pub mod metrics;
 pub mod roadnet;
 pub mod runtime;

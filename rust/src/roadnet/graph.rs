@@ -1,26 +1,44 @@
 //! Undirected road graph with geometric vertices and per-edge lengths.
+//!
+//! The graph is stored in **CSR form** (offsets + one flat neighbour
+//! array): spotlight expansions walk `neighbors(v)` slices that are
+//! contiguous in memory instead of chasing one heap allocation per
+//! vertex, which is what the TL's blind-spot re-expansion hammers every
+//! tick. Construction goes through [`GraphBuilder`], whose `add_edge`
+//! deduplicates through a hash set in O(1) — the generator used to pay
+//! an O(degree) `has_edge` scan per candidate edge, which made
+//! 10k-vertex generation degree-quadratic.
+//!
+//! The CSR finalize preserves per-vertex neighbour order exactly as the
+//! old `Vec<Vec<_>>` adjacency produced it (insertion order of
+//! `add_edge` calls), so entity walks — which draw neighbours by index
+//! — are bit-identical per seed across the representation change.
+
+use crate::util::FastSet;
 
 pub type VertexId = usize;
 
-/// Undirected road network. Vertices carry planar coordinates (metres);
-/// edges carry road lengths (metres) which may differ from the Euclidean
-/// distance (roads bend).
-#[derive(Debug, Clone)]
-pub struct Graph {
-    /// Vertex coordinates in metres.
-    pub pos: Vec<(f64, f64)>,
-    /// Adjacency: `adj[v] = [(neighbor, road_length_m), ...]`.
-    pub adj: Vec<Vec<(VertexId, f64)>>,
-    edge_count: usize,
+/// Incremental graph construction with O(1) edge dedup.
+pub struct GraphBuilder {
+    pos: Vec<(f64, f64)>,
+    /// Undirected edges in insertion order.
+    edges: Vec<(VertexId, VertexId, f64)>,
+    /// Packed `(min(a,b) << 32) | max(a,b)` keys of existing edges.
+    seen: FastSet<u64>,
 }
 
-impl Graph {
+#[inline]
+fn edge_key(a: VertexId, b: VertexId) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    ((lo as u64) << 32) | hi as u64
+}
+
+impl GraphBuilder {
     pub fn new(pos: Vec<(f64, f64)>) -> Self {
-        let n = pos.len();
         Self {
             pos,
-            adj: vec![Vec::new(); n],
-            edge_count: 0,
+            edges: Vec::new(),
+            seen: FastSet::default(),
         }
     }
 
@@ -29,43 +47,27 @@ impl Graph {
     }
 
     pub fn num_edges(&self) -> usize {
-        self.edge_count
+        self.edges.len()
     }
 
     /// Add an undirected edge; ignores duplicates and self-loops.
+    /// O(1) via the dedup set (the old adjacency scan was O(degree)).
     pub fn add_edge(&mut self, a: VertexId, b: VertexId, len_m: f64) -> bool {
-        if a == b || self.has_edge(a, b) {
+        if a == b || !self.seen.insert(edge_key(a, b)) {
             return false;
         }
-        self.adj[a].push((b, len_m));
-        self.adj[b].push((a, len_m));
-        self.edge_count += 1;
+        self.edges.push((a, b, len_m));
         true
     }
 
     pub fn has_edge(&self, a: VertexId, b: VertexId) -> bool {
-        self.adj[a].iter().any(|&(v, _)| v == b)
+        self.seen.contains(&edge_key(a, b))
     }
 
-    pub fn edge_len(&self, a: VertexId, b: VertexId) -> Option<f64> {
-        self.adj[a].iter().find(|&&(v, _)| v == b).map(|&(_, l)| l)
-    }
-
-    /// Mean road length over all edges.
-    pub fn mean_edge_len(&self) -> f64 {
-        let (mut sum, mut n) = (0.0, 0usize);
-        for (v, nbrs) in self.adj.iter().enumerate() {
-            for &(u, l) in nbrs {
-                if u > v {
-                    sum += l;
-                    n += 1;
-                }
-            }
-        }
-        if n == 0 {
-            0.0
-        } else {
-            sum / n as f64
+    /// Visit every accepted edge `(a, b)` in insertion order.
+    pub fn for_each_edge(&self, mut f: impl FnMut(VertexId, VertexId)) {
+        for &(a, b, _) in &self.edges {
+            f(a, b);
         }
     }
 
@@ -76,7 +78,128 @@ impl Graph {
         ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
     }
 
-    /// Is the graph connected? (BFS from vertex 0.)
+    /// Flatten into the CSR [`Graph`]. Per-vertex neighbour order is
+    /// the `add_edge` insertion order (stable counting sort), matching
+    /// the legacy `Vec<Vec<_>>` adjacency exactly.
+    pub fn finalize(self) -> Graph {
+        let n = self.pos.len();
+        let mut degree = vec![0usize; n];
+        for &(a, b, _) in &self.edges {
+            degree[a] += 1;
+            degree[b] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for d in &degree {
+            acc += d;
+            offsets.push(acc);
+        }
+        let mut cursor: Vec<usize> = offsets[..n].to_vec();
+        let mut nbrs: Vec<(VertexId, f64)> = vec![(0, 0.0); acc];
+        for &(a, b, len) in &self.edges {
+            nbrs[cursor[a]] = (b, len);
+            cursor[a] += 1;
+            nbrs[cursor[b]] = (a, len);
+            cursor[b] += 1;
+        }
+        Graph {
+            pos: self.pos,
+            offsets,
+            nbrs,
+            edge_count: self.edges.len(),
+        }
+    }
+}
+
+/// Undirected road network in CSR form. Vertices carry planar
+/// coordinates (metres); edges carry road lengths (metres) which may
+/// differ from the Euclidean distance (roads bend).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Vertex coordinates in metres.
+    pub pos: Vec<(f64, f64)>,
+    /// CSR offsets: `nbrs[offsets[v]..offsets[v + 1]]` are `v`'s
+    /// neighbours.
+    offsets: Vec<usize>,
+    /// Flat neighbour array: `(neighbor, road_length_m)`.
+    nbrs: Vec<(VertexId, f64)>,
+    edge_count: usize,
+}
+
+impl Graph {
+    pub fn num_vertices(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edge_count
+    }
+
+    /// The neighbours of `v` as a contiguous slice.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[(VertexId, f64)] {
+        &self.nbrs[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    pub fn has_edge(&self, a: VertexId, b: VertexId) -> bool {
+        self.neighbors(a).iter().any(|&(v, _)| v == b)
+    }
+
+    pub fn edge_len(&self, a: VertexId, b: VertexId) -> Option<f64> {
+        self.neighbors(a)
+            .iter()
+            .find(|&&(v, _)| v == b)
+            .map(|&(_, l)| l)
+    }
+
+    /// Every undirected edge once, as `(a, b, length)` with `a < b`,
+    /// ordered by `a` then adjacency position.
+    pub fn iter_edges(
+        &self,
+    ) -> impl Iterator<Item = (VertexId, VertexId, f64)> + '_ {
+        (0..self.num_vertices()).flat_map(move |v| {
+            self.neighbors(v)
+                .iter()
+                .filter(move |&&(u, _)| u > v)
+                .map(move |&(u, l)| (v, u, l))
+        })
+    }
+
+    /// Mean road length over all edges.
+    pub fn mean_edge_len(&self) -> f64 {
+        let (mut sum, mut n) = (0.0, 0usize);
+        for (_, _, l) in self.iter_edges() {
+            sum += l;
+            n += 1;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Shortest edge length in the graph (`INFINITY` when edgeless).
+    pub fn min_edge_len(&self) -> f64 {
+        self.nbrs
+            .iter()
+            .map(|&(_, l)| l)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Euclidean distance between two vertices.
+    pub fn euclid(&self, a: VertexId, b: VertexId) -> f64 {
+        let (ax, ay) = self.pos[a];
+        let (bx, by) = self.pos[b];
+        ((ax - bx).powi(2) + (ay - by).powi(2)).sqrt()
+    }
+
+    /// Is the graph connected? (DFS from vertex 0.)
     pub fn is_connected(&self) -> bool {
         if self.pos.is_empty() {
             return true;
@@ -86,7 +209,7 @@ impl Graph {
         seen[0] = true;
         let mut count = 1;
         while let Some(v) = stack.pop() {
-            for &(u, _) in &self.adj[v] {
+            for &(u, _) in self.neighbors(v) {
                 if !seen[u] {
                     seen[u] = true;
                     count += 1;
@@ -102,40 +225,94 @@ impl Graph {
 mod tests {
     use super::*;
 
-    fn tri() -> Graph {
-        let mut g = Graph::new(vec![(0.0, 0.0), (3.0, 0.0), (0.0, 4.0)]);
-        g.add_edge(0, 1, 3.0);
-        g.add_edge(1, 2, 5.0);
-        g.add_edge(2, 0, 4.0);
-        g
+    fn tri() -> (GraphBuilder, Graph) {
+        let mut b = GraphBuilder::new(vec![
+            (0.0, 0.0),
+            (3.0, 0.0),
+            (0.0, 4.0),
+        ]);
+        b.add_edge(0, 1, 3.0);
+        b.add_edge(1, 2, 5.0);
+        b.add_edge(2, 0, 4.0);
+        let mut b2 = GraphBuilder::new(vec![
+            (0.0, 0.0),
+            (3.0, 0.0),
+            (0.0, 4.0),
+        ]);
+        b2.add_edge(0, 1, 3.0);
+        b2.add_edge(1, 2, 5.0);
+        b2.add_edge(2, 0, 4.0);
+        (b, b2.finalize())
     }
 
     #[test]
     fn edges_are_undirected_and_deduped() {
-        let mut g = tri();
+        let (mut b, g) = tri();
         assert_eq!(g.num_edges(), 3);
-        assert!(!g.add_edge(0, 1, 9.0)); // duplicate
-        assert!(!g.add_edge(1, 1, 1.0)); // self loop
-        assert_eq!(g.num_edges(), 3);
+        assert!(!b.add_edge(0, 1, 9.0)); // duplicate
+        assert!(!b.add_edge(1, 0, 9.0)); // reversed duplicate
+        assert!(!b.add_edge(1, 1, 1.0)); // self loop
+        assert_eq!(b.num_edges(), 3);
+        assert!(b.has_edge(1, 0));
+        assert!(!b.has_edge(0, 0));
         assert_eq!(g.edge_len(1, 0), Some(3.0));
+        assert!(g.has_edge(2, 1));
+        assert_eq!(g.edge_len(0, 2), Some(4.0));
+    }
+
+    #[test]
+    fn csr_preserves_insertion_order_per_vertex() {
+        let (_, g) = tri();
+        // Vertex 0's edges were inserted 0-1 then 2-0.
+        assert_eq!(g.neighbors(0), &[(1, 3.0), (2, 4.0)]);
+        assert_eq!(g.neighbors(1), &[(0, 3.0), (2, 5.0)]);
+        assert_eq!(g.neighbors(2), &[(1, 5.0), (0, 4.0)]);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn iter_edges_each_once() {
+        let (_, g) = tri();
+        let mut es: Vec<_> = g.iter_edges().collect();
+        es.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        assert_eq!(es, vec![(0, 1, 3.0), (0, 2, 4.0), (1, 2, 5.0)]);
+        assert!((g.min_edge_len() - 3.0).abs() < 1e-12);
     }
 
     #[test]
     fn mean_edge_len_counts_each_edge_once() {
-        assert!((tri().mean_edge_len() - 4.0).abs() < 1e-12);
+        let (_, g) = tri();
+        assert!((g.mean_edge_len() - 4.0).abs() < 1e-12);
     }
 
     #[test]
     fn euclid_matches_geometry() {
-        assert!((tri().euclid(1, 2) - 5.0).abs() < 1e-12);
+        let (_, g) = tri();
+        assert!((g.euclid(1, 2) - 5.0).abs() < 1e-12);
     }
 
     #[test]
     fn connectivity() {
-        let mut g = Graph::new(vec![(0.0, 0.0), (1.0, 0.0), (2.0, 0.0)]);
-        g.add_edge(0, 1, 1.0);
-        assert!(!g.is_connected());
-        g.add_edge(1, 2, 1.0);
-        assert!(g.is_connected());
+        let mut b = GraphBuilder::new(vec![
+            (0.0, 0.0),
+            (1.0, 0.0),
+            (2.0, 0.0),
+        ]);
+        b.add_edge(0, 1, 1.0);
+        assert!(!b.clone_finalize().is_connected());
+        b.add_edge(1, 2, 1.0);
+        assert!(b.finalize().is_connected());
+    }
+}
+
+#[cfg(test)]
+impl GraphBuilder {
+    /// Test helper: finalize a snapshot without consuming the builder.
+    fn clone_finalize(&self) -> Graph {
+        let mut b = GraphBuilder::new(self.pos.clone());
+        for &(a, bb, l) in &self.edges {
+            b.add_edge(a, bb, l);
+        }
+        b.finalize()
     }
 }

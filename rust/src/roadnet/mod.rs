@@ -1,6 +1,7 @@
-//! Road-network substrate: graph types, the synthetic OSM-substitute
-//! generator, camera placement, and the spotlight search algorithms used
-//! by the Tracking Logic module.
+//! Road-network substrate: CSR graph types, the synthetic
+//! OSM-substitute generator, camera placement, and the spotlight search
+//! algorithms used by the Tracking Logic module (with reusable
+//! workspaces for the per-tick expansion hot path).
 
 mod cameras;
 mod gen;
@@ -9,8 +10,9 @@ mod spotlight;
 
 pub use cameras::{place_cameras, Camera, CameraId};
 pub use gen::generate;
-pub use graph::{Graph, VertexId};
+pub use graph::{Graph, GraphBuilder, VertexId};
 pub use spotlight::{
-    bfs_spotlight, dijkstra_distances, probabilistic_spotlight,
-    wbfs_spotlight,
+    bfs_spotlight, bfs_spotlight_into, dijkstra_distances,
+    probabilistic_spotlight, probabilistic_spotlight_into,
+    wbfs_spotlight, wbfs_spotlight_into, SpotlightWorkspace,
 };

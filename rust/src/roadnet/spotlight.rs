@@ -10,11 +10,132 @@
 //!   lengths (TL-WBFS).
 //! * [`probabilistic_spotlight`] — Naive-Bayes style path-likelihood
 //!   activation (App 4's TL).
+//!
+//! Each has an `_into` variant taking a reusable [`SpotlightWorkspace`]:
+//! the TL re-expands on **every** blind-spot tick, and the legacy
+//! implementations paid a `vec![usize::MAX; n]` (or `vec![f64::INFINITY;
+//! n]`) allocation-and-initialisation per expansion. The workspace keeps
+//! epoch-stamped distance arrays — bumping a `u32` epoch invalidates the
+//! whole previous expansion in O(1) — plus the queue/heap/scratch
+//! buffers, so a steady-state expansion allocates nothing and touches
+//! only the vertices it actually reaches. The allocating free functions
+//! remain as thin wrappers (and as the reference the property suite
+//! compares against).
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::graph::{Graph, VertexId};
+
+/// Reusable scratch state for spotlight expansions.
+///
+/// One workspace serves any number of sequential expansions over graphs
+/// of any size (arrays grow to the largest graph seen). Stamps make
+/// reuse safe: a vertex's `hops`/`dist` entry is only meaningful when
+/// its stamp equals the current epoch, so no state leaks between
+/// expansions — property-tested in `tests/prop_roadnet.rs`.
+pub struct SpotlightWorkspace {
+    epoch: u32,
+    stamp: Vec<u32>,
+    /// Hop distance (BFS), valid where `stamp == epoch`.
+    hops: Vec<u32>,
+    /// Road distance (Dijkstra), valid where `stamp == epoch`.
+    dist: Vec<f64>,
+    /// Vertices stamped this epoch, in first-stamp order.
+    touched: Vec<VertexId>,
+    queue: VecDeque<VertexId>,
+    heap: BinaryHeap<HeapItem>,
+    /// `(likelihood, vertex)` scratch for the probabilistic TL.
+    lik: Vec<(f64, VertexId)>,
+}
+
+impl Default for SpotlightWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpotlightWorkspace {
+    pub fn new() -> Self {
+        Self {
+            epoch: 0,
+            stamp: Vec::new(),
+            hops: Vec::new(),
+            dist: Vec::new(),
+            touched: Vec::new(),
+            queue: VecDeque::new(),
+            heap: BinaryHeap::new(),
+            lik: Vec::new(),
+        }
+    }
+
+    /// Start a new expansion over a graph of `n` vertices.
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+            self.hops.resize(n, 0);
+            self.dist.resize(n, 0.0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // u32 wrap after ~4e9 expansions: stale stamps could alias
+            // the fresh epoch, so reset them once.
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+        self.touched.clear();
+        self.queue.clear();
+        self.heap.clear();
+        self.lik.clear();
+    }
+
+    /// Stamp `v` for this epoch; returns whether it was fresh.
+    #[inline]
+    fn visit(&mut self, v: VertexId) -> bool {
+        if self.stamp[v] == self.epoch {
+            false
+        } else {
+            self.stamp[v] = self.epoch;
+            self.touched.push(v);
+            true
+        }
+    }
+}
+
+/// Hop-limited BFS into `out` (see [`bfs_spotlight`]), reusing `ws`.
+pub fn bfs_spotlight_into(
+    g: &Graph,
+    src: VertexId,
+    radius_m: f64,
+    fixed_len_m: f64,
+    ws: &mut SpotlightWorkspace,
+    out: &mut Vec<VertexId>,
+) {
+    let max_hops = if fixed_len_m <= 0.0 {
+        0
+    } else {
+        (radius_m / fixed_len_m).floor() as u32
+    };
+    ws.begin(g.num_vertices());
+    out.clear();
+    ws.visit(src);
+    ws.hops[src] = 0;
+    ws.queue.push_back(src);
+    out.push(src);
+    while let Some(v) = ws.queue.pop_front() {
+        if ws.hops[v] >= max_hops {
+            continue;
+        }
+        let next_hops = ws.hops[v] + 1;
+        for &(u, _) in g.neighbors(v) {
+            if ws.visit(u) {
+                ws.hops[u] = next_hops;
+                out.push(u);
+                ws.queue.push_back(u);
+            }
+        }
+    }
+}
 
 /// Vertices reachable within `radius_m` of `src`, assuming every edge is
 /// `fixed_len_m` long (hop distance x fixed length <= radius).
@@ -24,28 +145,9 @@ pub fn bfs_spotlight(
     radius_m: f64,
     fixed_len_m: f64,
 ) -> Vec<VertexId> {
-    let max_hops = if fixed_len_m <= 0.0 {
-        0
-    } else {
-        (radius_m / fixed_len_m).floor() as usize
-    };
-    let mut dist = vec![usize::MAX; g.num_vertices()];
-    let mut queue = std::collections::VecDeque::new();
-    dist[src] = 0;
-    queue.push_back(src);
-    let mut out = vec![src];
-    while let Some(v) = queue.pop_front() {
-        if dist[v] >= max_hops {
-            continue;
-        }
-        for &(u, _) in &g.adj[v] {
-            if dist[u] == usize::MAX {
-                dist[u] = dist[v] + 1;
-                out.push(u);
-                queue.push_back(u);
-            }
-        }
-    }
+    let mut ws = SpotlightWorkspace::new();
+    let mut out = Vec::new();
+    bfs_spotlight_into(g, src, radius_m, fixed_len_m, &mut ws, &mut out);
     out
 }
 
@@ -65,37 +167,118 @@ impl PartialOrd for HeapItem {
     }
 }
 
-/// Shortest-path (road-length) distances from `src`, bounded by
-/// `max_m` (pass `f64::INFINITY` for the full graph).
-pub fn dijkstra_distances(g: &Graph, src: VertexId, max_m: f64) -> Vec<f64> {
-    let mut dist = vec![f64::INFINITY; g.num_vertices()];
-    let mut heap = BinaryHeap::new();
-    dist[src] = 0.0;
-    heap.push(HeapItem(0.0, src));
-    while let Some(HeapItem(d, v)) = heap.pop() {
-        if d > dist[v] || d > max_m {
+/// Bounded Dijkstra into the workspace: after the call, `ws.touched`
+/// holds every vertex within `max_m` road distance of `src` (in
+/// first-reach order) and `ws.dist[v]` its exact distance.
+fn dijkstra_ball(
+    g: &Graph,
+    src: VertexId,
+    max_m: f64,
+    ws: &mut SpotlightWorkspace,
+) {
+    ws.begin(g.num_vertices());
+    ws.visit(src);
+    ws.dist[src] = 0.0;
+    ws.heap.push(HeapItem(0.0, src));
+    while let Some(HeapItem(d, v)) = ws.heap.pop() {
+        if d > ws.dist[v] || d > max_m {
             continue;
         }
-        for &(u, len) in &g.adj[v] {
+        for &(u, len) in g.neighbors(v) {
             let nd = d + len;
-            if nd < dist[u] && nd <= max_m {
-                dist[u] = nd;
-                heap.push(HeapItem(nd, u));
+            if nd > max_m {
+                continue;
+            }
+            if ws.stamp[u] != ws.epoch || nd < ws.dist[u] {
+                if ws.stamp[u] != ws.epoch {
+                    ws.stamp[u] = ws.epoch;
+                    ws.touched.push(u);
+                }
+                ws.dist[u] = nd;
+                ws.heap.push(HeapItem(nd, u));
             }
         }
+    }
+}
+
+/// Shortest-path (road-length) distances from `src`, bounded by
+/// `max_m` (pass `f64::INFINITY` for the full graph). Allocates a full
+/// distance vector; the engines' hot path uses the workspace variants.
+pub fn dijkstra_distances(g: &Graph, src: VertexId, max_m: f64) -> Vec<f64> {
+    let mut ws = SpotlightWorkspace::new();
+    dijkstra_ball(g, src, max_m, &mut ws);
+    let mut dist = vec![f64::INFINITY; g.num_vertices()];
+    for &v in &ws.touched {
+        dist[v] = ws.dist[v];
     }
     dist
 }
 
+/// Dijkstra ball into `out` (see [`wbfs_spotlight`]), reusing `ws`.
+pub fn wbfs_spotlight_into(
+    g: &Graph,
+    src: VertexId,
+    radius_m: f64,
+    ws: &mut SpotlightWorkspace,
+    out: &mut Vec<VertexId>,
+) {
+    dijkstra_ball(g, src, radius_m, ws);
+    out.clear();
+    out.extend_from_slice(&ws.touched);
+}
+
 /// Vertices whose exact road distance from `src` is within `radius_m`
-/// (the paper's weighted BFS — a Dijkstra ball).
+/// (the paper's weighted BFS — a Dijkstra ball). Order is unspecified
+/// (first-reach); callers needing determinism sort.
 pub fn wbfs_spotlight(g: &Graph, src: VertexId, radius_m: f64) -> Vec<VertexId> {
-    dijkstra_distances(g, src, radius_m)
-        .iter()
-        .enumerate()
-        .filter(|&(_, &d)| d.is_finite())
-        .map(|(v, _)| v)
-        .collect()
+    let mut ws = SpotlightWorkspace::new();
+    let mut out = Vec::new();
+    wbfs_spotlight_into(g, src, radius_m, &mut ws, &mut out);
+    out
+}
+
+/// Probabilistic spotlight into `out` (see
+/// [`probabilistic_spotlight`]), reusing `ws`.
+pub fn probabilistic_spotlight_into(
+    g: &Graph,
+    src: VertexId,
+    es_mps: f64,
+    elapsed_s: f64,
+    mass: f64,
+    ws: &mut SpotlightWorkspace,
+    out: &mut Vec<VertexId>,
+) {
+    let mu = es_mps * elapsed_s;
+    // The walker cannot be farther than mu (peak speed); sigma widens
+    // with time to reflect route uncertainty.
+    let sigma = (0.35 * mu).max(30.0);
+    dijkstra_ball(g, src, mu + 4.0 * sigma, ws);
+    ws.lik.clear();
+    for &v in &ws.touched {
+        let d = ws.dist[v];
+        // Walkers dawdle: anywhere in [0, mu] is plausible, with the
+        // frontier decaying as a half-Gaussian beyond mu.
+        let l = if d <= mu {
+            1.0
+        } else {
+            (-((d - mu) / sigma).powi(2) / 2.0).exp()
+        };
+        ws.lik.push((l, v));
+    }
+    // Total order (likelihood desc, id asc): output is independent of
+    // the touched-set order.
+    ws.lik
+        .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let total: f64 = ws.lik.iter().map(|&(l, _)| l).sum();
+    out.clear();
+    let mut acc = 0.0;
+    for &(l, v) in &ws.lik {
+        out.push(v);
+        acc += l;
+        if acc >= mass * total {
+            break;
+        }
+    }
 }
 
 /// Naive-Bayes path-likelihood spotlight (App 4's TL).
@@ -112,37 +295,11 @@ pub fn probabilistic_spotlight(
     elapsed_s: f64,
     mass: f64,
 ) -> Vec<VertexId> {
-    let mu = es_mps * elapsed_s;
-    // The walker cannot be farther than mu (peak speed); sigma widens
-    // with time to reflect route uncertainty.
-    let sigma = (0.35 * mu).max(30.0);
-    let dist = dijkstra_distances(g, src, mu + 4.0 * sigma);
-    let mut lik: Vec<(f64, VertexId)> = dist
-        .iter()
-        .enumerate()
-        .filter(|&(_, &d)| d.is_finite())
-        .map(|(v, &d)| {
-            // Walkers dawdle: anywhere in [0, mu] is plausible, with the
-            // frontier decaying as a half-Gaussian beyond mu.
-            let l = if d <= mu {
-                1.0
-            } else {
-                (-((d - mu) / sigma).powi(2) / 2.0).exp()
-            };
-            (l, v)
-        })
-        .collect();
-    lik.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-    let total: f64 = lik.iter().map(|&(l, _)| l).sum();
-    let mut acc = 0.0;
+    let mut ws = SpotlightWorkspace::new();
     let mut out = Vec::new();
-    for (l, v) in lik {
-        out.push(v);
-        acc += l;
-        if acc >= mass * total {
-            break;
-        }
-    }
+    probabilistic_spotlight_into(
+        g, src, es_mps, elapsed_s, mass, &mut ws, &mut out,
+    );
     out
 }
 
@@ -150,20 +307,20 @@ pub fn probabilistic_spotlight(
 mod tests {
     use super::*;
     use crate::config::WorkloadConfig;
-    use crate::roadnet::generate;
+    use crate::roadnet::{generate, GraphBuilder};
 
     fn line_graph() -> Graph {
         // 0 -100m- 1 -100m- 2 -50m- 3
-        let mut g = Graph::new(vec![
+        let mut b = GraphBuilder::new(vec![
             (0.0, 0.0),
             (100.0, 0.0),
             (200.0, 0.0),
             (250.0, 0.0),
         ]);
-        g.add_edge(0, 1, 100.0);
-        g.add_edge(1, 2, 100.0);
-        g.add_edge(2, 3, 50.0);
-        g
+        b.add_edge(0, 1, 100.0);
+        b.add_edge(1, 2, 100.0);
+        b.add_edge(2, 3, 50.0);
+        b.finalize()
     }
 
     #[test]
@@ -201,12 +358,7 @@ mod tests {
         // With fixed length = min edge length, BFS hop-balls dominate
         // the Dijkstra ball of the same radius.
         let g = generate(&WorkloadConfig::default(), 3);
-        let min_len = g
-            .adj
-            .iter()
-            .flatten()
-            .map(|&(_, l)| l)
-            .fold(f64::INFINITY, f64::min);
+        let min_len = g.min_edge_len();
         let w = wbfs_spotlight(&g, 0, 400.0);
         let b = bfs_spotlight(&g, 0, 400.0, min_len);
         for v in &w {
@@ -221,6 +373,37 @@ mod tests {
         let b = wbfs_spotlight(&g, 10, 300.0).len();
         let c = wbfs_spotlight(&g, 10, 900.0).len();
         assert!(a < b && b < c, "{a} {b} {c}");
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_expansions() {
+        let g = generate(&WorkloadConfig::default(), 3);
+        let mut ws = SpotlightWorkspace::new();
+        let mut out = Vec::new();
+        for (src, radius) in
+            [(0, 100.0), (10, 900.0), (0, 100.0), (500, 300.0)]
+        {
+            wbfs_spotlight_into(&g, src, radius, &mut ws, &mut out);
+            let mut got = out.clone();
+            got.sort_unstable();
+            let mut want = wbfs_spotlight(&g, src, radius);
+            want.sort_unstable();
+            assert_eq!(got, want, "src {src} radius {radius}");
+        }
+    }
+
+    #[test]
+    fn workspace_shrinks_to_smaller_graphs() {
+        // Stale stamps from a big graph must not leak into expansions
+        // over a smaller one.
+        let big = generate(&WorkloadConfig::default(), 3);
+        let small = line_graph();
+        let mut ws = SpotlightWorkspace::new();
+        let mut out = Vec::new();
+        wbfs_spotlight_into(&big, 0, 900.0, &mut ws, &mut out);
+        wbfs_spotlight_into(&small, 2, 60.0, &mut ws, &mut out);
+        out.sort_unstable();
+        assert_eq!(out, vec![2, 3]);
     }
 
     #[test]

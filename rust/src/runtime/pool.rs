@@ -6,6 +6,7 @@
 //! time (`execute_b`), so the steady-state request path transfers only
 //! the image batch and the query embedding.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
@@ -37,6 +38,11 @@ pub struct ModelPool {
     client: xla::PjRtClient,
     manifest: Manifest,
     variants: HashMap<String, LoadedVariant>,
+    /// Reusable bucket-padding buffer: executing a batch smaller than
+    /// its bucket used to allocate `bucket × img_dim` floats per call.
+    /// (The pool is single-threaded — the client is not `Send` — so a
+    /// `RefCell` suffices.)
+    pad_scratch: RefCell<Vec<f32>>,
 }
 
 impl ModelPool {
@@ -103,6 +109,7 @@ impl ModelPool {
             client,
             manifest,
             variants,
+            pad_scratch: RefCell::new(Vec::new()),
         })
     }
 
@@ -167,14 +174,17 @@ impl ModelPool {
             .get(&bucket)
             .ok_or_else(|| anyhow!("{variant} bucket {bucket}"))?;
 
-        // Pad the image batch up to the bucket.
-        let mut padded;
+        // Pad the image batch up to the bucket, reusing the pool's
+        // scratch buffer instead of allocating `bucket × d` floats per
+        // padded execution.
+        let mut pad = self.pad_scratch.borrow_mut();
         let img_data: &[f32] = if batch == bucket {
             images
         } else {
-            padded = vec![0f32; bucket * d];
-            padded[..images.len()].copy_from_slice(images);
-            &padded
+            pad.clear();
+            pad.resize(bucket * d, 0.0);
+            pad[..images.len()].copy_from_slice(images);
+            &pad[..]
         };
         let img_buf = self
             .client

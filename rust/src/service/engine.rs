@@ -18,13 +18,11 @@
 //! TL (de)activation commands apply at evaluation time rather than
 //! after a control-message latency.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use crate::config::{BatchingKind, ExperimentConfig, MultiQueryConfig};
 use crate::coordinator::tl::TrackingLogic;
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{Event, Payload, QueryId, Stage};
+use crate::engine::EventCore;
 use crate::metrics::{QueryLedgers, Summary};
 use crate::roadnet::{generate, place_cameras, Camera, Graph};
 use crate::service::admission::{
@@ -122,6 +120,10 @@ pub struct MultiQueryResult {
     pub rejected: usize,
     /// Queries that were wait-listed at least once.
     pub queued: usize,
+    /// Total simulation events dispatched by the shared
+    /// [`EventCore`] — the numerator of the events/sec throughput
+    /// metric reported by `benches/hotpath.rs`.
+    pub core_events: u64,
 }
 
 impl MultiQueryResult {
@@ -152,10 +154,7 @@ pub struct MultiQueryDes {
     tasks: Vec<MqTask>,
     fc_budget: Vec<FastMap<QueryId, BudgetManager>>,
     fc_xi: XiModel,
-    heap: BinaryHeap<(Reverse<Micros>, Reverse<u64>, usize)>,
-    store: Vec<Option<Ev>>,
-    free_slots: Vec<usize>,
-    seq: u64,
+    core: EventCore<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
     frame_counters: Vec<u64>,
@@ -169,6 +168,12 @@ pub struct MultiQueryDes {
     m_max: usize,
     rng: Rng,
     now: Micros,
+    /// Reusable hot-path buffers (drop filtering, outgoing
+    /// transmissions, per-query spotlight refresh) — allocations
+    /// circulate instead of being re-made per batch/tick.
+    kept_scratch: Vec<QueuedEvent<Event>>,
+    outgoing_scratch: Vec<Event>,
+    active_scratch: Vec<usize>,
 }
 
 impl MultiQueryDes {
@@ -269,10 +274,7 @@ impl MultiQueryDes {
             tasks,
             fc_budget: (0..num_cameras).map(|_| FastMap::default()).collect(),
             fc_xi,
-            heap: BinaryHeap::new(),
-            store: Vec::new(),
-            free_slots: Vec::new(),
-            seq: 0,
+            core: EventCore::new(),
             next_event_id: 0,
             next_batch_seq: 0,
             frame_counters: vec![0; num_cameras],
@@ -283,22 +285,16 @@ impl MultiQueryDes {
             m_max: m_max.max(1),
             rng: rng(seed, 0x3DE5),
             now: 0,
+            kept_scratch: Vec::new(),
+            outgoing_scratch: Vec::new(),
+            active_scratch: Vec::new(),
         }
     }
 
     // ---- event plumbing --------------------------------------------------
 
     fn push(&mut self, t: Micros, ev: Ev) {
-        let slot = if let Some(s) = self.free_slots.pop() {
-            self.store[s] = Some(ev);
-            s
-        } else {
-            self.store.push(Some(ev));
-            self.store.len() - 1
-        };
-        self.seq += 1;
-        self.heap
-            .push((Reverse(t.max(self.now)), Reverse(self.seq), slot));
+        self.core.schedule(t, ev);
     }
 
     /// Run to completion: all arrivals, all lifetimes, plus a drain of
@@ -318,13 +314,12 @@ impl MultiQueryDes {
 
         // Horizon re-evaluated each step: promotions extend
         // `service_end` mid-run.
-        while let Some((Reverse(t), _, slot)) = self.heap.pop() {
-            if t > self.service_end + 2 * self.cfg.gamma() {
+        loop {
+            let horizon = self.service_end + 2 * self.cfg.gamma();
+            let Some((t, ev)) = self.core.pop_until(horizon) else {
                 break;
-            }
+            };
             self.now = t;
-            let ev = self.store[slot].take().expect("event slot occupied");
-            self.free_slots.push(slot);
             self.dispatch(ev);
         }
         self.report()
@@ -392,10 +387,13 @@ impl MultiQueryDes {
     }
 
     fn on_query_arrive(&mut self, idx: usize) {
-        let spec = self.schedule[idx].1.clone();
-        let id = self.registry.submit(spec.clone(), self.now);
+        // One clone (the registry stores the spec); admission reads
+        // the schedule's copy by reference.
+        let id = self
+            .registry
+            .submit(self.schedule[idx].1.clone(), self.now);
         let decision = self.admission.decide(
-            &spec,
+            &self.schedule[idx].1,
             self.registry.num_active(),
             self.registry.num_queued(),
             self.active_cameras_total(),
@@ -421,12 +419,18 @@ impl MultiQueryDes {
         self.registry
             .activate(id, self.now)
             .expect("admission checked the transition");
-        let spec = self.registry.record(id).unwrap().spec.clone();
-        let lifetime = secs(spec.lifetime_secs);
-        let start_cam = spec
-            .start_camera
-            .unwrap_or(0)
-            .min(self.cams.len().saturating_sub(1));
+        // Copy the scalar spec fields out instead of cloning the whole
+        // spec (the label `String` is the only heap part).
+        let (lifetime, start_cam, weight) = {
+            let spec = &self.registry.record(id).unwrap().spec;
+            (
+                secs(spec.lifetime_secs),
+                spec.start_camera
+                    .unwrap_or(0)
+                    .min(self.cams.len().saturating_sub(1)),
+                spec.weight(),
+            )
+        };
         let start_vertex = self.cams[start_cam].vertex;
         let walk = EntityWalk::simulate(
             &self.graph,
@@ -476,10 +480,9 @@ impl MultiQueryDes {
         // run horizon both follow it dynamically).
         self.service_end = self.service_end.max(self.now + lifetime);
         // Register the query with every executor's fair-share batcher.
-        let w = spec.weight();
         for t in &mut self.tasks {
             if matches!(t.stage, Stage::Va | Stage::Cr) {
-                t.batcher.register(id, w);
+                t.batcher.register(id, weight);
             }
         }
         self.push(self.now + lifetime, Ev::QueryEnd { query: id });
@@ -515,15 +518,16 @@ impl MultiQueryDes {
         }
         // Capacity freed: promote wait-listed queries that now fit.
         while let Some(next) = self.registry.next_pending() {
-            let spec =
-                self.registry.record(next).unwrap().spec.clone();
-            let decision = self.admission.decide(
-                &spec,
-                self.registry.num_active(),
-                self.registry.num_queued(),
-                self.active_cameras_total(),
-                self.cfg.num_cameras,
-            );
+            let decision = {
+                let spec = &self.registry.record(next).unwrap().spec;
+                self.admission.decide(
+                    spec,
+                    self.registry.num_active(),
+                    self.registry.num_queued(),
+                    self.active_cameras_total(),
+                    self.cfg.num_cameras,
+                )
+            };
             if decision == Admission::Admit {
                 self.activate_query(next);
             } else {
@@ -548,8 +552,10 @@ impl MultiQueryDes {
         let frame_no = self.frame_counters[cam];
         self.frame_counters[cam] += 1;
         // One logical event per query that has this camera active.
-        let queries: Vec<QueryId> = self.active.clone();
-        for q in queries {
+        // Index iteration instead of cloning the active list per tick:
+        // the loop body never mutates `self.active`.
+        for qi in 0..self.active.len() {
+            let q = self.active[qi];
             let (present, wants) = match self.ctx.get(&q) {
                 Some(ctx) if ctx.active_cams[cam] => {
                     (ctx.gt.visible(cam, t - ctx.t0), true)
@@ -677,7 +683,7 @@ impl MultiQueryDes {
                     && drop_at_queue(exempt, u, xi1, budget)
                 {
                     let eps = (u + xi1) - budget;
-                    self.drop_event(task, &ev, eps);
+                    self.drop_event(task, ev, eps);
                     return;
                 }
                 let deadline = if budget >= BUDGET_INF {
@@ -719,8 +725,7 @@ impl MultiQueryDes {
             let now = self.now;
             let poll = {
                 let ts = &mut self.tasks[task];
-                let xi = ts.xi.clone();
-                ts.batcher.poll(now, &xi)
+                ts.batcher.poll(now, &ts.xi)
             };
             match poll {
                 BatcherPoll::Idle => return,
@@ -733,12 +738,16 @@ impl MultiQueryDes {
                 }
                 BatcherPoll::Ready(mut batch) => {
                     // Drop point 2 against each event's own query
-                    // budget (per-query isolation).
+                    // budget (per-query isolation). The survivor
+                    // buffer is engine-owned scratch, so the filter
+                    // allocates nothing in steady state.
                     if self.cfg.drops_enabled {
                         let b = batch.len();
                         let xib = self.tasks[task].xi.xi(b);
-                        let mut kept = Vec::with_capacity(b);
-                        for qe in batch {
+                        let mut kept =
+                            std::mem::take(&mut self.kept_scratch);
+                        kept.clear();
+                        for qe in batch.drain(..) {
                             let q = qe.item.header.query;
                             let slot = self.topo.downstream_slot(
                                 task,
@@ -757,14 +766,16 @@ impl MultiQueryDes {
                                 )
                             {
                                 let eps = (u + qdur + xib) - budget;
-                                self.drop_event(task, &qe.item, eps);
+                                self.drop_event(task, qe.item, eps);
                             } else {
                                 kept.push(qe);
                             }
                         }
-                        batch = kept;
+                        std::mem::swap(&mut batch, &mut kept);
+                        self.kept_scratch = kept;
                     }
                     if batch.is_empty() {
+                        self.tasks[task].batcher.recycle(batch);
                         continue;
                     }
                     let b = batch.len();
@@ -796,7 +807,7 @@ impl MultiQueryDes {
     fn on_exec_done(
         &mut self,
         task: usize,
-        batch: Vec<QueuedEvent<Event>>,
+        mut batch: Vec<QueuedEvent<Event>>,
         start: Micros,
         xi_est: Micros,
         actual: Micros,
@@ -807,8 +818,11 @@ impl MultiQueryDes {
         let batch_seq = self.next_batch_seq;
         self.next_batch_seq += 1;
 
-        let mut outgoing: Vec<Event> = Vec::with_capacity(b);
-        for qe in batch {
+        // Survivors land in engine-owned scratch; the emptied batch
+        // vec is recycled into the batcher (no per-batch allocation).
+        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
+        outgoing.clear();
+        for qe in batch.drain(..) {
             let mut ev = qe.item;
             let q = ev.header.query;
             let cam = ev.header.camera;
@@ -843,16 +857,17 @@ impl MultiQueryDes {
                     && drop_at_transmit(exempt, u, pi, budget)
                 {
                     let eps = (u + pi) - budget;
-                    self.drop_event(task, &ev, eps);
+                    self.drop_event(task, ev, eps);
                     continue;
                 }
             }
             outgoing.push(ev);
         }
+        self.tasks[task].batcher.recycle(batch);
 
         let out_n = outgoing.len();
         let src_node = self.topo.node_of(task);
-        for ev in outgoing {
+        for ev in outgoing.drain(..) {
             let cam = ev.header.camera;
             let q = ev.header.query;
             let (next_task, bytes) = match stage {
@@ -901,13 +916,14 @@ impl MultiQueryDes {
                 },
             );
         }
+        self.outgoing_scratch = outgoing;
 
         self.try_form_batch(task);
     }
 
     /// VA/CR user-logic over per-query ground truth.
     fn apply_semantics(&mut self, stage: Stage, ev: &mut Event) {
-        let sem = self.cfg.semantics.clone();
+        let sem = &self.cfg.semantics;
         let q = ev.header.query;
         match stage {
             Stage::Va => {
@@ -980,8 +996,9 @@ impl MultiQueryDes {
 
     /// Drop an event at `task`: ledger it per query, send reject
     /// signals upstream (scoped to the same query) and forward every
-    /// k-th drop as a probe.
-    fn drop_event(&mut self, task: usize, ev: &Event, eps: Micros) {
+    /// k-th drop as a probe. Takes the event by value: probes reuse
+    /// the dropped event instead of cloning it.
+    fn drop_event(&mut self, task: usize, ev: Event, eps: Micros) {
         let stage = self.tasks[task].stage;
         let q = ev.header.query;
         self.ledgers.dropped(q, ev.header.id, stage);
@@ -1000,9 +1017,8 @@ impl MultiQueryDes {
             .unwrap_or(path.len());
         for &up in path.iter().take(my_pos) {
             if self.topo.stage_of(up) == Stage::Fc {
-                let xi = self.fc_xi.clone();
                 if let Some(bm) = self.fc_budget[cam].get_mut(&q) {
-                    bm.apply(sig, &xi);
+                    bm.apply(sig, &self.fc_xi);
                 }
             } else {
                 let lat = self.net.transfer_estimate(
@@ -1023,7 +1039,7 @@ impl MultiQueryDes {
         if self.cfg.probe_every > 0
             && self.tasks[task].drop_count % self.cfg.probe_every == 0
         {
-            let mut probe = ev.clone();
+            let mut probe = ev;
             probe.header.probe = true;
             let (next_task, bytes) = match stage {
                 Stage::Va => {
@@ -1122,9 +1138,8 @@ impl MultiQueryDes {
         for &up in path.iter().take(3) {
             // FC, VA, CR
             if self.topo.stage_of(up) == Stage::Fc {
-                let xi = self.fc_xi.clone();
                 if let Some(bm) = self.fc_budget[cam].get_mut(&q) {
-                    bm.apply(sig, &xi);
+                    bm.apply(sig, &self.fc_xi);
                 }
             } else {
                 let lat = self
@@ -1148,22 +1163,27 @@ impl MultiQueryDes {
         if self.now < self.service_end {
             self.push(self.now + SEC, Ev::TlTick);
         }
-        let queries: Vec<QueryId> = self.active.clone();
-        for q in queries {
+        // Index iteration instead of cloning the active list per tick:
+        // `refresh_active_set` never mutates `self.active`.
+        for qi in 0..self.active.len() {
+            let q = self.active[qi];
             self.refresh_active_set(q);
         }
     }
 
     fn refresh_active_set(&mut self, q: QueryId) {
-        let Some(ctx) = self.ctx.get_mut(&q) else { return };
-        let active = ctx.tl.active_set(&self.graph, self.now);
-        ctx.peak_active = ctx.peak_active.max(active.len());
-        for a in ctx.active_cams.iter_mut() {
-            *a = false;
+        let mut active = std::mem::take(&mut self.active_scratch);
+        if let Some(ctx) = self.ctx.get_mut(&q) {
+            ctx.tl.active_set_into(&self.graph, self.now, &mut active);
+            ctx.peak_active = ctx.peak_active.max(active.len());
+            for a in ctx.active_cams.iter_mut() {
+                *a = false;
+            }
+            for &cam in &active {
+                ctx.active_cams[cam] = true;
+            }
         }
-        for cam in active {
-            ctx.active_cams[cam] = true;
-        }
+        self.active_scratch = active;
     }
 
     // ---- reporting -------------------------------------------------------
@@ -1192,6 +1212,7 @@ impl MultiQueryDes {
             peak_concurrent: self.peak_concurrent,
             rejected,
             queued: self.ever_queued as usize,
+            core_events: self.core.dispatched(),
         }
     }
 }

@@ -60,7 +60,22 @@ pub trait ScoreBackend: Send + Sync {
         stage: Stage,
         query: QueryId,
         events: &[Event],
-    ) -> Vec<f32>;
+    ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(events.len());
+        self.score_into(stage, query, events, &mut out);
+        out
+    }
+
+    /// Append one score per event to `out` — the workers score whole
+    /// batches into one reusable columnar buffer, so backends should
+    /// implement this (the hot variant) and inherit `score`.
+    fn score_into(
+        &self,
+        stage: Stage,
+        query: QueryId,
+        events: &[Event],
+        out: &mut Vec<f32>,
+    );
 
     /// Service-time model for a stage (drives batching deadlines and
     /// the modelled execution duration).
@@ -113,24 +128,22 @@ impl SimBackend {
 }
 
 impl ScoreBackend for SimBackend {
-    fn score(
+    fn score_into(
         &self,
         stage: Stage,
         query: QueryId,
         events: &[Event],
-    ) -> Vec<f32> {
-        events
-            .iter()
-            .map(|ev| {
-                let present = ev.payload.entity_present() == Some(true);
-                let p = if present { self.tp } else { self.fp };
-                if self.coin(ev, query, stage) < p {
-                    0.9
-                } else {
-                    0.1
-                }
-            })
-            .collect()
+        out: &mut Vec<f32>,
+    ) {
+        out.extend(events.iter().map(|ev| {
+            let present = ev.payload.entity_present() == Some(true);
+            let p = if present { self.tp } else { self.fp };
+            if self.coin(ev, query, stage) < p {
+                0.9
+            } else {
+                0.1
+            }
+        }));
     }
 
     fn xi(&self, stage: Stage) -> XiModel {
@@ -777,6 +790,7 @@ fn worker_loop(
     };
     let mut batcher: FairShareBatcher<Event> =
         FairShareBatcher::new(m_max.max(1));
+    let mut scratch = BatchScratch::default();
 
     fn handle(
         msg: Msg,
@@ -851,13 +865,15 @@ fn worker_loop(
         let now = inner.now_us();
         match batcher.poll(now, &xi) {
             BatcherPoll::Ready(batch) => {
-                exec_batch(
+                let spare = exec_batch(
                     stage,
                     batch,
                     backend.as_ref(),
                     &xi,
+                    &mut scratch,
                     &mut forward,
                 );
+                batcher.recycle(spare);
                 continue;
             }
             BatcherPoll::Timer(at) => {
@@ -922,82 +938,103 @@ fn worker_loop(
     // Final flush: execute whatever is still queued.
     loop {
         match batcher.poll(BUDGET_INF / 2, &xi) {
-            BatcherPoll::Ready(batch) => exec_batch(
-                stage,
-                batch,
-                backend.as_ref(),
-                &xi,
-                &mut forward,
-            ),
+            BatcherPoll::Ready(batch) => {
+                let spare = exec_batch(
+                    stage,
+                    batch,
+                    backend.as_ref(),
+                    &xi,
+                    &mut scratch,
+                    &mut forward,
+                );
+                batcher.recycle(spare);
+            }
             _ => break,
         }
     }
 }
 
+/// Reusable per-worker batch buffers: the batch's events regrouped by
+/// query plus one columnar score buffer for the whole batch — the
+/// per-group `Vec<Event>`/`Vec<f32>` allocations the old grouping made
+/// are gone.
+#[derive(Default)]
+struct BatchScratch {
+    events: Vec<Event>,
+    scores: Vec<f32>,
+}
+
 /// Execute one cross-query batch: one shared execution sleep for the
 /// whole batch, then per-query-group scoring (each query carries its
-/// own embedding) and forwarding.
+/// own embedding) and forwarding. Returns the emptied batch vec for
+/// the caller to recycle into its batcher.
 fn exec_batch(
     stage: Stage,
-    batch: Vec<QueuedEvent<Event>>,
+    mut batch: Vec<QueuedEvent<Event>>,
     backend: &dyn ScoreBackend,
     xi: &XiModel,
+    scratch: &mut BatchScratch,
     forward: &mut impl FnMut(Event),
-) {
+) -> Vec<QueuedEvent<Event>> {
     if batch.is_empty() {
-        return;
+        return batch;
     }
     let b = batch.len();
     let dur = xi.xi(b).clamp(0, 50_000);
     std::thread::sleep(Duration::from_micros(dur as u64));
 
-    // Group events by query, preserving per-query order.
-    let mut groups: Vec<(QueryId, Vec<Event>)> = Vec::new();
-    for qe in batch {
-        let ev = qe.item;
-        let q = ev.header.query;
-        match groups.iter_mut().find(|(g, _)| *g == q) {
-            Some((_, v)) => v.push(ev),
-            None => groups.push((q, vec![ev])),
+    // Group events by query — a stable sort preserves per-query FIFO
+    // order — then score each query group into one shared columnar
+    // buffer (`scores[i]` belongs to `events[i]`).
+    let events = &mut scratch.events;
+    events.clear();
+    events.extend(batch.drain(..).map(|qe| qe.item));
+    events.sort_by_key(|ev| ev.header.query);
+    let scores = &mut scratch.scores;
+    scores.clear();
+    let mut start = 0;
+    while start < events.len() {
+        let q = events[start].header.query;
+        let mut end = start + 1;
+        while end < events.len() && events[end].header.query == q {
+            end += 1;
         }
+        backend.score_into(stage, q, &events[start..end], scores);
+        debug_assert_eq!(scores.len(), end, "one score per event");
+        start = end;
     }
-    for (q, events) in groups {
-        let scores = backend.score(stage, q, &events);
-        for (mut ev, score) in
-            events.into_iter().zip(scores.into_iter())
-        {
-            match stage {
-                Stage::Va => {
-                    if let Payload::Frame { entity_present } =
-                        ev.payload
-                    {
-                        ev.payload = Payload::Candidate {
-                            entity_present,
-                            score,
-                        };
-                    }
+    for (i, mut ev) in events.drain(..).enumerate() {
+        let score = scores[i];
+        match stage {
+            Stage::Va => {
+                if let Payload::Frame { entity_present } = ev.payload {
+                    ev.payload = Payload::Candidate {
+                        entity_present,
+                        score,
+                    };
                 }
-                Stage::Cr => {
-                    if let Payload::Candidate {
-                        entity_present: _,
-                        score: va_score,
-                    } = ev.payload
-                    {
-                        let detected = va_score > 0.5 && score > 0.5;
-                        if detected {
-                            ev.header.avoid_drop = true;
-                        }
-                        ev.payload = Payload::Detection {
-                            detected,
-                            confidence: score,
-                        };
-                    }
-                }
-                _ => {}
             }
-            forward(ev);
+            Stage::Cr => {
+                if let Payload::Candidate {
+                    entity_present: _,
+                    score: va_score,
+                } = ev.payload
+                {
+                    let detected = va_score > 0.5 && score > 0.5;
+                    if detected {
+                        ev.header.avoid_drop = true;
+                    }
+                    ev.payload = Payload::Detection {
+                        detected,
+                        confidence: score,
+                    };
+                }
+            }
+            _ => {}
         }
+        forward(ev);
     }
+    batch
 }
 
 /// Sink: completion accounting + per-query TL updates.

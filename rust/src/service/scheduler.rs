@@ -111,6 +111,15 @@ impl<T> FairShareBatcher<T> {
         std::mem::take(&mut self.current)
     }
 
+    /// Hand back an emptied batch vec so its capacity seeds the next
+    /// batch (same contract as [`crate::tuning::Batcher::recycle`]).
+    pub fn recycle(&mut self, mut spare: Vec<QueuedEvent<T>>) {
+        if self.current.is_empty() && self.current.capacity() == 0 {
+            spare.clear();
+            self.current = spare;
+        }
+    }
+
     fn head_of(&self, query: QueryId) -> Option<&QueuedEvent<T>> {
         self.queues
             .iter()

@@ -12,7 +12,7 @@
 //! generates its own gallery); only the *model weights* cross the
 //! language boundary, via `artifacts/weights.bin`.
 
-use crate::util::Rng;
+use crate::util::{FastMap, Rng};
 
 /// Patches per frame (must match `weights.IMG_PATCHES`).
 pub const IMG_PATCHES: usize = 64;
@@ -33,18 +33,108 @@ pub fn identity_embedding(identity: u64) -> Vec<f32> {
     e
 }
 
-/// Synthetic frame: identity code broadcast across patches + noise.
-pub fn identity_image(identity: u64, frame: u64, noise: f32) -> Vec<f32> {
-    let e = identity_embedding(identity);
+/// Write the synthetic frame for `(identity, frame)` into `out`
+/// (cleared first), given the identity's embedding.
+fn write_image(
+    e: &[f32],
+    identity: u64,
+    frame: u64,
+    noise: f32,
+    out: &mut Vec<f32>,
+) {
     let mut r =
         Rng::seed_from_u64(identity.wrapping_mul(1_000_003) ^ frame);
-    let mut img = Vec::with_capacity(IMG_DIM);
+    out.clear();
+    out.reserve(IMG_DIM);
     for code in e.iter().take(IMG_PATCHES) {
         for _ in 0..PATCH_SIZE {
-            img.push(code + noise * r.gauss() as f32);
+            out.push(code + noise * r.gauss() as f32);
         }
     }
+}
+
+/// Synthetic frame into a caller-provided buffer (cleared first):
+/// IMG_DIM = 8192 floats per frame, so the per-frame allocation matters
+/// on the feed/bench hot paths. Recomputes the embedding; use
+/// [`IdentityGallery`] to amortise that too.
+pub fn identity_image_into(
+    identity: u64,
+    frame: u64,
+    noise: f32,
+    out: &mut Vec<f32>,
+) {
+    let e = identity_embedding(identity);
+    write_image(&e, identity, frame, noise, out);
+}
+
+/// Synthetic frame: identity code broadcast across patches + noise.
+pub fn identity_image(identity: u64, frame: u64, noise: f32) -> Vec<f32> {
+    let mut img = Vec::with_capacity(IMG_DIM);
+    identity_image_into(identity, frame, noise, &mut img);
     img
+}
+
+/// Memoised identity embeddings + buffer-reusing frame generation.
+///
+/// The live engine regenerates frames at camera rate; recomputing the
+/// identity code (64 Gaussian draws + a normalisation) per frame is
+/// pure waste since identities recur — the tracked entity on every
+/// positive frame, a bounded pool of background identities otherwise.
+/// The gallery computes each embedding once.
+#[derive(Default)]
+pub struct IdentityGallery {
+    cache: FastMap<u64, Vec<f32>>,
+}
+
+impl IdentityGallery {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The identity's unit-norm code, computed on first use.
+    pub fn embedding(&mut self, identity: u64) -> &[f32] {
+        self.cache
+            .entry(identity)
+            .or_insert_with(|| identity_embedding(identity))
+            .as_slice()
+    }
+
+    /// Generate `(identity, frame)`'s pixels into `out` (cleared
+    /// first), reusing the cached embedding.
+    pub fn image_into(
+        &mut self,
+        identity: u64,
+        frame: u64,
+        noise: f32,
+        out: &mut Vec<f32>,
+    ) {
+        let e = self
+            .cache
+            .entry(identity)
+            .or_insert_with(|| identity_embedding(identity));
+        write_image(e.as_slice(), identity, frame, noise, out);
+    }
+
+    /// Allocating convenience wrapper over [`Self::image_into`].
+    pub fn image(
+        &mut self,
+        identity: u64,
+        frame: u64,
+        noise: f32,
+    ) -> Vec<f32> {
+        let mut out = Vec::with_capacity(IMG_DIM);
+        self.image_into(identity, frame, noise, &mut out);
+        out
+    }
+
+    /// Distinct identities cached so far.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +192,20 @@ mod tests {
 
     fn norm(v: &[f32]) -> f32 {
         v.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn gallery_matches_uncached_generation() {
+        let mut gal = IdentityGallery::new();
+        assert_eq!(gal.embedding(7), identity_embedding(7).as_slice());
+        assert_eq!(gal.len(), 1);
+        let mut buf = Vec::new();
+        gal.image_into(9, 3, 0.25, &mut buf);
+        assert_eq!(buf, identity_image(9, 3, 0.25));
+        // Buffer reuse across identities/frames leaks nothing.
+        gal.image_into(7, 0, 0.25, &mut buf);
+        assert_eq!(buf, identity_image(7, 0, 0.25));
+        assert_eq!(buf.len(), IMG_DIM);
+        assert_eq!(gal.len(), 2);
     }
 }

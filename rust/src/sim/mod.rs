@@ -10,6 +10,9 @@ mod walk;
 
 pub use clock::ClockSkews;
 pub use feeds::{visibility_of, FrameTruth, GroundTruth};
-pub use images::{identity_embedding, identity_image, FEAT_DIM, IMG_DIM, IMG_PATCHES, PATCH_SIZE};
+pub use images::{
+    identity_embedding, identity_image, identity_image_into,
+    IdentityGallery, FEAT_DIM, IMG_DIM, IMG_PATCHES, PATCH_SIZE,
+};
 pub use netmodel::NetModel;
 pub use walk::{EntityWalk, Position};

@@ -43,7 +43,7 @@ impl EntityWalk {
         let mut cur = start;
         let mut prev: Option<VertexId> = None;
         while t < duration {
-            let nbrs = &g.adj[cur];
+            let nbrs = g.neighbors(cur);
             if nbrs.is_empty() {
                 break; // isolated vertex: entity stays put
             }

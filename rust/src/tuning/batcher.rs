@@ -133,6 +133,17 @@ impl<T> Batcher<T> {
         std::mem::take(&mut self.current)
     }
 
+    /// Hand back an emptied batch vec (from a finished execution) so
+    /// its capacity seeds the next batch instead of reallocating. A
+    /// non-empty `spare` is cleared; if a batch is already forming, the
+    /// spare is simply dropped.
+    pub fn recycle(&mut self, mut spare: Vec<QueuedEvent<T>>) {
+        if self.current.is_empty() && self.current.capacity() == 0 {
+            spare.clear();
+            self.current = spare;
+        }
+    }
+
     /// Drive batch formation at time `now`. Call when the executor is
     /// free, after each `push`, and when a previously returned timer
     /// fires.

@@ -1,11 +1,16 @@
-//! `HashMap` with a multiply-xor hasher for integer keys.
+//! `HashMap`/`HashSet` with a multiply-xor hasher for integer keys.
 //!
-//! The tuning hot path (per-event budget records, sink batch tracking,
-//! timeline buckets) is keyed by dense-ish integers; std's SipHash
-//! dominates those lookups. This is the same idea as `rustc-hash`'s
-//! FxHasher, implemented locally because the build is offline.
+//! The engine hot paths keyed by dense-ish integers — per-event budget
+//! records and sink batch tracking in both DES engines, the
+//! per-(task, query) budget tables of the multi-query engine, the TL's
+//! vertex→camera lookup hit once per spotlight vertex, the road
+//! generator's edge-dedup set, and the identity-embedding cache — would
+//! all be dominated by std's SipHash. This is the same idea as
+//! `rustc-hash`'s FxHasher, implemented locally because the build is
+//! offline. (The per-event outcome ledger is *not* a map: source event
+//! ids are dense, so it indexes a flat `Vec` directly.)
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{BuildHasherDefault, Hasher};
 
 /// Multiply-xor hasher for integer-ish keys (not DoS-resistant — only
@@ -54,6 +59,10 @@ impl Hasher for FastHasher {
 
 /// Drop-in `HashMap` with the fast hasher.
 pub type FastMap<K, V> = HashMap<K, V, BuildHasherDefault<FastHasher>>;
+
+/// Drop-in `HashSet` with the fast hasher (e.g. the road generator's
+/// O(1) edge-dedup set).
+pub type FastSet<K> = HashSet<K, BuildHasherDefault<FastHasher>>;
 
 #[cfg(test)]
 mod tests {

@@ -6,7 +6,7 @@ pub mod fastmap;
 pub mod json;
 pub mod rng;
 
-pub use fastmap::FastMap;
+pub use fastmap::{FastMap, FastSet};
 pub use json::Json;
 pub use rng::Rng;
 

@@ -1,0 +1,356 @@
+//! Property tests for the CSR road graph and the workspace-backed
+//! spotlight expansions (hand-rolled generator loops, same idiom as
+//! `prop_tuning.rs` — the offline environment has no proptest crate).
+//!
+//! The reference implementations below are the pre-CSR adjacency-list
+//! algorithms, verbatim: hop-BFS over `Vec<Vec<(v, len)>>`, a full
+//! Dijkstra distance vector, and the filter-enumerate WBFS. Properties
+//! assert that the CSR + epoch-stamped-workspace implementations are
+//! permutation-equal to them on random graphs, radii and sources, and
+//! that workspace reuse across expansions (including across graphs of
+//! different sizes) never leaks state.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use anveshak::roadnet::{
+    bfs_spotlight, bfs_spotlight_into, dijkstra_distances,
+    probabilistic_spotlight, probabilistic_spotlight_into,
+    wbfs_spotlight, wbfs_spotlight_into, Graph, GraphBuilder,
+    SpotlightWorkspace,
+};
+use anveshak::util::{rng, Rng};
+
+fn cases(seed: u64, n: usize) -> impl Iterator<Item = Rng> {
+    (0..n).map(move |i| rng(seed, i as u64))
+}
+
+/// Legacy adjacency-list representation, rebuilt from the CSR graph.
+fn adjacency(g: &Graph) -> Vec<Vec<(usize, f64)>> {
+    (0..g.num_vertices())
+        .map(|v| g.neighbors(v).to_vec())
+        .collect()
+}
+
+/// Random graph + its mirror adjacency list built by replaying the
+/// same accepted insertions on both representations.
+fn random_graph(r: &mut Rng) -> (Graph, Vec<Vec<(usize, f64)>>) {
+    let n = r.range_u(2, 60);
+    let pos = (0..n)
+        .map(|_| (r.range_f64(0.0, 1000.0), r.range_f64(0.0, 1000.0)))
+        .collect();
+    let mut b = GraphBuilder::new(pos);
+    let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    let attempts = r.range_u(1, 4 * n);
+    for _ in 0..attempts {
+        let x = r.range_u(0, n);
+        let y = r.range_u(0, n);
+        let len = r.range_f64(10.0, 200.0);
+        if b.add_edge(x, y, len) {
+            adj[x].push((y, len));
+            adj[y].push((x, len));
+        }
+    }
+    (b.finalize(), adj)
+}
+
+// ---- reference implementations (pre-CSR, verbatim) -------------------
+
+fn ref_bfs(
+    adj: &[Vec<(usize, f64)>],
+    src: usize,
+    radius_m: f64,
+    fixed_len_m: f64,
+) -> Vec<usize> {
+    let max_hops = if fixed_len_m <= 0.0 {
+        0
+    } else {
+        (radius_m / fixed_len_m).floor() as usize
+    };
+    let mut dist = vec![usize::MAX; adj.len()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[src] = 0;
+    queue.push_back(src);
+    let mut out = vec![src];
+    while let Some(v) = queue.pop_front() {
+        if dist[v] >= max_hops {
+            continue;
+        }
+        for &(u, _) in &adj[v] {
+            if dist[u] == usize::MAX {
+                dist[u] = dist[v] + 1;
+                out.push(u);
+                queue.push_back(u);
+            }
+        }
+    }
+    out
+}
+
+#[derive(PartialEq)]
+struct HeapItem(f64, usize);
+impl Eq for HeapItem {}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+    }
+}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn ref_dijkstra(
+    adj: &[Vec<(usize, f64)>],
+    src: usize,
+    max_m: f64,
+) -> Vec<f64> {
+    let mut dist = vec![f64::INFINITY; adj.len()];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(HeapItem(0.0, src));
+    while let Some(HeapItem(d, v)) = heap.pop() {
+        if d > dist[v] || d > max_m {
+            continue;
+        }
+        for &(u, len) in &adj[v] {
+            let nd = d + len;
+            if nd < dist[u] && nd <= max_m {
+                dist[u] = nd;
+                heap.push(HeapItem(nd, u));
+            }
+        }
+    }
+    dist
+}
+
+fn ref_wbfs(
+    adj: &[Vec<(usize, f64)>],
+    src: usize,
+    radius_m: f64,
+) -> Vec<usize> {
+    ref_dijkstra(adj, src, radius_m)
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d.is_finite())
+        .map(|(v, _)| v)
+        .collect()
+}
+
+fn ref_probabilistic(
+    adj: &[Vec<(usize, f64)>],
+    src: usize,
+    es_mps: f64,
+    elapsed_s: f64,
+    mass: f64,
+) -> Vec<usize> {
+    let mu = es_mps * elapsed_s;
+    let sigma = (0.35 * mu).max(30.0);
+    let dist = ref_dijkstra(adj, src, mu + 4.0 * sigma);
+    let mut lik: Vec<(f64, usize)> = dist
+        .iter()
+        .enumerate()
+        .filter(|&(_, &d)| d.is_finite())
+        .map(|(v, &d)| {
+            let l = if d <= mu {
+                1.0
+            } else {
+                (-((d - mu) / sigma).powi(2) / 2.0).exp()
+            };
+            (l, v)
+        })
+        .collect();
+    lik.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let total: f64 = lik.iter().map(|&(l, _)| l).sum();
+    let mut acc = 0.0;
+    let mut out = Vec::new();
+    for (l, v) in lik {
+        out.push(v);
+        acc += l;
+        if acc >= mass * total {
+            break;
+        }
+    }
+    out
+}
+
+fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v
+}
+
+// ---- properties ------------------------------------------------------
+
+#[test]
+fn prop_csr_neighbors_match_adjacency_mirror() {
+    for mut r in cases(11, 200) {
+        let (g, adj) = random_graph(&mut r);
+        assert_eq!(
+            g.num_edges(),
+            adj.iter().map(|a| a.len()).sum::<usize>() / 2
+        );
+        for v in 0..g.num_vertices() {
+            assert_eq!(
+                g.neighbors(v),
+                adj[v].as_slice(),
+                "vertex {v}: CSR must preserve insertion order"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_builder_dedup_rejects_duplicates_and_loops() {
+    for mut r in cases(12, 200) {
+        let n = r.range_u(2, 40);
+        let pos = (0..n).map(|_| (0.0, 0.0)).collect();
+        let mut b = GraphBuilder::new(pos);
+        let mut unique = std::collections::BTreeSet::new();
+        for _ in 0..r.range_u(1, 200) {
+            let x = r.range_u(0, n);
+            let y = r.range_u(0, n);
+            let accepted = b.add_edge(x, y, 1.0);
+            let fresh =
+                x != y && unique.insert((x.min(y), x.max(y)));
+            assert_eq!(accepted, fresh, "edge ({x},{y})");
+        }
+        assert_eq!(b.num_edges(), unique.len());
+        let g = b.finalize();
+        assert_eq!(g.num_edges(), unique.len());
+    }
+}
+
+#[test]
+fn prop_wbfs_matches_reference_on_random_graphs() {
+    for mut r in cases(13, 300) {
+        let (g, adj) = random_graph(&mut r);
+        let src = r.range_u(0, g.num_vertices());
+        let radius = r.range_f64(0.0, 800.0);
+        let got = sorted(wbfs_spotlight(&g, src, radius));
+        let want = sorted(ref_wbfs(&adj, src, radius));
+        assert_eq!(got, want, "src {src} radius {radius}");
+    }
+}
+
+#[test]
+fn prop_bfs_matches_reference_on_random_graphs() {
+    for mut r in cases(14, 300) {
+        let (g, adj) = random_graph(&mut r);
+        let src = r.range_u(0, g.num_vertices());
+        let radius = r.range_f64(0.0, 800.0);
+        let fixed = r.range_f64(1.0, 150.0);
+        // BFS discovery order is identical, not just the set.
+        assert_eq!(
+            bfs_spotlight(&g, src, radius, fixed),
+            ref_bfs(&adj, src, radius, fixed),
+            "src {src} radius {radius} fixed {fixed}"
+        );
+    }
+}
+
+#[test]
+fn prop_dijkstra_matches_reference_exactly() {
+    for mut r in cases(15, 200) {
+        let (g, adj) = random_graph(&mut r);
+        let src = r.range_u(0, g.num_vertices());
+        let max = if r.bool(0.5) {
+            f64::INFINITY
+        } else {
+            r.range_f64(0.0, 600.0)
+        };
+        assert_eq!(
+            dijkstra_distances(&g, src, max),
+            ref_dijkstra(&adj, src, max),
+            "src {src} max {max}"
+        );
+    }
+}
+
+#[test]
+fn prop_probabilistic_matches_reference_exactly() {
+    for mut r in cases(16, 200) {
+        let (g, adj) = random_graph(&mut r);
+        let src = r.range_u(0, g.num_vertices());
+        let es = r.range_f64(0.5, 8.0);
+        let elapsed = r.range_f64(1.0, 120.0);
+        let mass = r.range_f64(0.3, 0.99);
+        // The likelihood sort is a total order (id tie-break), so the
+        // output sequence — not just the set — must match.
+        assert_eq!(
+            probabilistic_spotlight(&g, src, es, elapsed, mass),
+            ref_probabilistic(&adj, src, es, elapsed, mass),
+            "src {src} es {es} elapsed {elapsed} mass {mass}"
+        );
+    }
+}
+
+#[test]
+fn prop_workspace_reuse_never_leaks_state() {
+    // One workspace, many interleaved expansions over two graphs of
+    // different sizes and all three algorithms: every result must
+    // equal the fresh-workspace computation.
+    for mut r in cases(17, 60) {
+        let (g1, _) = random_graph(&mut r);
+        let (g2, _) = random_graph(&mut r);
+        let mut ws = SpotlightWorkspace::new();
+        let mut out = Vec::new();
+        for _ in 0..20 {
+            let g = if r.bool(0.5) { &g1 } else { &g2 };
+            let src = r.range_u(0, g.num_vertices());
+            match r.range_u(0, 3) {
+                0 => {
+                    let radius = r.range_f64(0.0, 600.0);
+                    wbfs_spotlight_into(g, src, radius, &mut ws, &mut out);
+                    assert_eq!(
+                        sorted(out.clone()),
+                        sorted(wbfs_spotlight(g, src, radius)),
+                    );
+                }
+                1 => {
+                    let radius = r.range_f64(0.0, 600.0);
+                    let fixed = r.range_f64(1.0, 150.0);
+                    bfs_spotlight_into(
+                        g, src, radius, fixed, &mut ws, &mut out,
+                    );
+                    assert_eq!(
+                        out,
+                        bfs_spotlight(g, src, radius, fixed),
+                    );
+                }
+                _ => {
+                    let es = r.range_f64(0.5, 8.0);
+                    let elapsed = r.range_f64(1.0, 120.0);
+                    probabilistic_spotlight_into(
+                        g, src, es, elapsed, 0.9, &mut ws, &mut out,
+                    );
+                    assert_eq!(
+                        out,
+                        probabilistic_spotlight(g, src, es, elapsed, 0.9),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_workspace_epoch_wrap_is_safe() {
+    // Force many expansions on a tiny graph so the epoch counter
+    // advances far; results must stay correct throughout. (A full u32
+    // wrap is impractical in a test; this at least exercises heavy
+    // epoch churn on the same arrays.)
+    let mut r = rng(18, 0);
+    let (g, adj) = random_graph(&mut r);
+    let mut ws = SpotlightWorkspace::new();
+    let mut out = Vec::new();
+    for i in 0..5_000 {
+        let src = i % g.num_vertices();
+        wbfs_spotlight_into(&g, src, 300.0, &mut ws, &mut out);
+        assert_eq!(
+            sorted(out.clone()),
+            sorted(ref_wbfs(&adj, src, 300.0)),
+            "iteration {i}"
+        );
+    }
+}
