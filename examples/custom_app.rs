@@ -1,0 +1,191 @@
+//! A user-defined tracking application built **entirely on the public
+//! block API** — no engine code, no crate internals. This is the §2.2
+//! contract end to end: we implement two custom blocks (an FC and a
+//! TL), compose them with stock VA/CR via `AppBuilder`, and the
+//! platform runs them with its own batching, dropping and budget
+//! adaptation.
+//!
+//! Custom blocks here:
+//!  * `DutyCycleFc` — forwards every k-th frame per camera (a crude
+//!    power-saving duty cycle), independent of the spotlight policy.
+//!  * `FixedRadiusTl` — a spotlight that always keeps a fixed-radius
+//!    ball around the last sighting live (no time-based expansion):
+//!    simpler than the paper's policies, and expressible without
+//!    touching `coordinator/` at all.
+//!
+//! Run: `cargo run --release --example custom_app [-- --smoke]`
+//! (`--smoke` shrinks the workload so CI can run it in seconds).
+
+use anveshak::apps::{AppBuilder, SimDetector, SimReid};
+use anveshak::config::{BatchingKind, ExperimentConfig};
+use anveshak::coordinator::des;
+use anveshak::dataflow::{
+    FilterControl, ModelVariant, QueryId, TlEnv, TrackingLogic,
+};
+use anveshak::roadnet::{
+    wbfs_spotlight_into, Camera, Graph, SpotlightWorkspace, VertexId,
+};
+use anveshak::util::Micros;
+
+/// Custom FC: admit every `stride`-th frame of an active camera.
+#[derive(Clone)]
+struct DutyCycleFc {
+    stride: u64,
+}
+
+impl FilterControl for DutyCycleFc {
+    fn admit(
+        &mut self,
+        _query: QueryId,
+        _camera: usize,
+        frame_no: u64,
+        _now: Micros,
+        active: bool,
+    ) -> bool {
+        active && frame_no % self.stride == 0
+    }
+
+    fn label(&self) -> &'static str {
+        "duty-cycle"
+    }
+}
+
+/// Custom TL: keep a fixed-radius ball around the last sighting live.
+struct FixedRadiusTl {
+    radius_m: f64,
+    num_cameras: usize,
+    /// vertex -> camera ids mounted there.
+    cam_at: Vec<(usize, Vec<usize>)>,
+    cam_vertex: Vec<usize>,
+    last_seen: Option<(usize, Micros)>,
+    ws: SpotlightWorkspace,
+    verts: Vec<VertexId>,
+}
+
+impl FixedRadiusTl {
+    fn new(radius_m: f64, cameras: &[Camera]) -> Self {
+        let mut cam_at: Vec<(usize, Vec<usize>)> = Vec::new();
+        for c in cameras {
+            match cam_at.iter_mut().find(|(v, _)| *v == c.vertex) {
+                Some((_, ids)) => ids.push(c.id),
+                None => cam_at.push((c.vertex, vec![c.id])),
+            }
+        }
+        Self {
+            radius_m,
+            num_cameras: cameras.len(),
+            cam_at,
+            cam_vertex: cameras.iter().map(|c| c.vertex).collect(),
+            last_seen: None,
+            ws: SpotlightWorkspace::new(),
+            verts: Vec::new(),
+        }
+    }
+}
+
+impl TrackingLogic for FixedRadiusTl {
+    fn on_detection(
+        &mut self,
+        camera: usize,
+        captured: Micros,
+        detected: bool,
+    ) {
+        if detected {
+            match self.last_seen {
+                Some((_, t)) if captured < t => {}
+                _ => {
+                    self.last_seen =
+                        Some((self.cam_vertex[camera], captured))
+                }
+            }
+        }
+    }
+
+    fn active_set_into(
+        &mut self,
+        g: &Graph,
+        _now: Micros,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        let Some((vertex, _)) = self.last_seen else {
+            out.extend(0..self.num_cameras); // bootstrap all-active
+            return;
+        };
+        let mut verts = std::mem::take(&mut self.verts);
+        wbfs_spotlight_into(
+            g,
+            vertex,
+            self.radius_m,
+            &mut self.ws,
+            &mut verts,
+        );
+        for v in &verts {
+            if let Some((_, ids)) =
+                self.cam_at.iter().find(|(cv, _)| cv == v)
+            {
+                out.extend_from_slice(ids);
+            }
+        }
+        self.verts = verts;
+        out.sort_unstable();
+        out.dedup();
+    }
+
+    fn last_seen(&self) -> Option<(usize, Micros)> {
+        self.last_seen
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // Compose the app from the two custom blocks plus stock VA/CR.
+    let app = AppBuilder::new("custom-duty-cycle")
+        .describe(
+            "Duty-cycled FC + fixed-radius spotlight, stock detector \
+             and re-id — built on the public block API only.",
+        )
+        .filter_control(DutyCycleFc { stride: 2 })
+        .video_analytics(SimDetector::new(ModelVariant::Va))
+        .contention_resolver(SimReid::small())
+        .tracking_logic_with(|env: &TlEnv<'_>| {
+            Box::new(FixedRadiusTl::new(300.0, env.cameras))
+        })
+        .build();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "custom-app".into();
+    if smoke {
+        cfg.num_cameras = 60;
+        cfg.workload.vertices = 60;
+        cfg.workload.edges = 160;
+        cfg.duration_secs = 30.0;
+    } else {
+        cfg.num_cameras = 200;
+        cfg.workload.vertices = 200;
+        cfg.workload.edges = 560;
+        cfg.duration_secs = 120.0;
+    }
+    cfg.batching = BatchingKind::Dynamic { max: 25 };
+    app.apply(&mut cfg, true);
+
+    let r = des::run_app(cfg, &app);
+    let s = &r.summary;
+    println!("app                      : {}", app.name);
+    println!("frames into the dataflow : {}", s.generated);
+    println!(
+        "on-time / delayed / drop : {} / {} / {}",
+        s.on_time, s.delayed, s.dropped
+    );
+    println!("entity detections at UV  : {}", r.detections);
+    println!("peak active cameras      : {}", r.peak_active);
+
+    assert!(s.conserved(), "event conservation: {s:?}");
+    assert!(s.generated > 0, "the duty-cycled FC still admits frames");
+    assert!(
+        r.detections > 0,
+        "the fixed-radius spotlight must keep the entity acquirable"
+    );
+    println!("OK: custom blocks ran through the stock platform.");
+}

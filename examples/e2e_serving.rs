@@ -33,7 +33,10 @@ fn main() -> anyhow::Result<()> {
     cfg.batching = BatchingKind::Dynamic { max: 16 };
 
     println!("loading AOT artifacts + compiling PJRT executables...");
-    let eng = LiveEngine::new(cfg, default_dir(), "va", "cr_small");
+    // App 1's composition (HoG VA + small re-id CR) with the config's
+    // WBFS spotlight — typed model variants, no artifact-name strings.
+    let app = anveshak::apps::resolve(&cfg);
+    let eng = LiveEngine::new(cfg, default_dir(), app);
     let r = eng.run()?;
 
     println!("\n=== end-to-end serving report ===");

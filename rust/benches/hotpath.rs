@@ -18,14 +18,14 @@
 //!   CI can verify the bench builds and the JSON emitter works in
 //!   seconds. Smoke numbers are *not* comparable to full runs and the
 //!   emitted JSON carries `"mode": "smoke"` with no baseline ratios.
-//! * `--json` — additionally emit `BENCH_2.json` in the working
+//! * `--json` — additionally emit `BENCH_3.json` in the working
 //!   directory (the workspace root under `cargo bench`).
 //!
-//! # JSON schema (`BENCH_2.json`, schema `anveshak-hotpath-bench-v2`)
+//! # JSON schema (`BENCH_3.json`, schema `anveshak-hotpath-bench-v3`)
 //!
 //! ```json
 //! {
-//!   "schema": "anveshak-hotpath-bench-v2",
+//!   "schema": "anveshak-hotpath-bench-v3",
 //!   "mode": "full" | "smoke",
 //!   "baseline_commit": "...",         // full mode only
 //!   "primitives_ns_per_op": {
@@ -39,15 +39,18 @@
 //! }
 //! ```
 //!
-//! The `baseline` values are one recorded run of the seed of this
-//! bench series (commit d1df67e, pre hot-path overhaul), compiled into
-//! [`BASELINE_NS`] / [`BASELINE_DES_WALL_S`]; a `speedup` is
-//! `baseline / current` (ns/op) or the wall-clock ratio (DES runs).
-//! **Caveat:** the baselines are machine-specific. A speedup computed
-//! against them is only meaningful when the current run uses
-//! comparable hardware; to re-establish the comparison locally, check
-//! out the baseline commit, run the seed bench there, update the
-//! constants, and re-run `--json` on this tree.
+//! The v3 `baseline` values are one recorded run of commit fc1d8fe
+//! (the PR 2 hot-path overhaul, *before* the UDF-trait dispatch
+//! redesign), compiled into [`BASELINE_NS`] /
+//! [`BASELINE_DES_WALL_S`] from its committed `BENCH_2.json`. The DES
+//! `speedup` ratios therefore measure exactly what the trait redesign
+//! must not regress: a ratio near 1.0 means batch-hoisted dyn dispatch
+//! costs nothing measurable; materially below 1.0 means a per-event
+//! indirection snuck in. **Caveat:** the baselines are machine-specific
+//! (one dev-box run). A speedup computed against them is only
+//! meaningful on comparable hardware; to re-establish the comparison
+//! locally, check out fc1d8fe, run its bench, update the constants,
+//! and re-run `--json` on this tree.
 
 use std::time::Instant;
 
@@ -75,27 +78,28 @@ use anveshak::tuning::{
 };
 use anveshak::util::{Json, Micros, MS, SEC};
 
-/// Seed-commit ns/op numbers (full mode, same machine) for primitives
-/// that existed before the overhaul, or whose "fresh" variant is the
-/// legacy behaviour.
+/// fc1d8fe (PR 2) ns/op numbers (full mode, one dev-box run, from its
+/// committed BENCH_2.json) for the primitives that carry across.
 const BASELINE_NS: &[(&str, f64)] = &[
-    ("spotlight.wbfs_r150.repeated", 1_690.0),
-    ("spotlight.wbfs_r500.repeated", 8_030.0),
-    ("spotlight.bfs_r500.repeated", 5_580.0),
-    ("spotlight.prob_60s.repeated", 40_700.0),
-    ("graph.generate_1000v", 7_410_000.0),
-    ("graph.generate_10000v", 931_000_000.0),
-    ("identity.embedding", 1_860.0),
-    ("identity.image", 63_900.0),
-    ("simbackend.score_b25.per_event", 96.0),
+    ("spotlight.wbfs_r150.repeated", 213.4),
+    ("spotlight.wbfs_r500.repeated", 3_742.9),
+    ("spotlight.bfs_r500.repeated", 2_216.8),
+    ("spotlight.prob_60s.repeated", 24_880.0),
+    ("graph.generate_1000v", 5_870_000.0),
+    ("graph.generate_10000v", 604_000_000.0),
+    ("identity.embedding", 1_842.7),
+    ("identity.image", 61_320.4),
+    ("simbackend.score_b25.per_event", 60.5),
 ];
 
-/// Seed-commit wall seconds of the `run()` phase for the DES workloads.
+/// fc1d8fe (PR 2) wall seconds of the `run()` phase for the DES
+/// workloads — the pre-trait-dispatch throughput the redesigned
+/// engines are held to.
 const BASELINE_DES_WALL_S: &[(&str, f64)] = &[
-    ("des.1000cam.base.1q", 3.41),
-    ("mq.1000cam.wbfs.1q", 0.84),
-    ("mq.1000cam.wbfs.4q", 2.96),
-    ("mq.1000cam.wbfs.8q", 6.12),
+    ("des.1000cam.base.1q", 1.52),
+    ("mq.1000cam.wbfs.1q", 0.37),
+    ("mq.1000cam.wbfs.4q", 1.31),
+    ("mq.1000cam.wbfs.8q", 2.66),
 ];
 
 struct Report {
@@ -125,17 +129,19 @@ impl Report {
         let full = self.mode == "full";
         let mut s = String::new();
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"anveshak-hotpath-bench-v2\",\n");
+        s.push_str("  \"schema\": \"anveshak-hotpath-bench-v3\",\n");
         s.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
         if full {
             s.push_str(
-                "  \"baseline_commit\": \"d1df67e (pre hot-path \
-                 overhaul)\",\n",
+                "  \"baseline_commit\": \"fc1d8fe (PR 2 hot-path \
+                 overhaul, pre trait-dispatch redesign)\",\n",
             );
             s.push_str(
                 "  \"baseline_note\": \"baselines are one recorded \
-                 dev-box run of the seed commit; speedup ratios are \
-                 only meaningful when 'current' comes from comparable \
+                 dev-box run of fc1d8fe (its BENCH_2.json); DES \
+                 speedups near 1.0 mean the batch-hoisted trait \
+                 dispatch costs nothing measurable. Ratios are only \
+                 meaningful when 'current' comes from comparable \
                  hardware — re-record both sides locally before citing \
                  them\",\n",
             );
@@ -548,8 +554,8 @@ fn main() {
 
     if emit_json {
         let json = report.to_json();
-        std::fs::write("BENCH_2.json", &json)
-            .expect("write BENCH_2.json");
-        println!("\nwrote BENCH_2.json ({} bytes)", json.len());
+        std::fs::write("BENCH_3.json", &json)
+            .expect("write BENCH_3.json");
+        println!("\nwrote BENCH_3.json ({} bytes)", json.len());
     }
 }

@@ -1,0 +1,646 @@
+//! The stock block library: ready-made implementations of the
+//! [`crate::dataflow`] UDF traits that the Table-1 applications (and
+//! most user apps) compose from.
+//!
+//! Every block here is `Clone`, so [`crate::apps::AppBuilder`] can turn
+//! it into a factory (engines mint one instance per worker / per
+//! query). None of the simulated blocks allocates on the per-batch
+//! path, and all randomness flows through the engine-owned RNG in
+//! [`SimCtx`] — runs stay bit-reproducible per seed.
+
+use crate::dataflow::{
+    ContentionResolver, Event, FilterControl, ModelVariant, Payload,
+    QueryFusion, QueryId, ScoreParams, SimCtx, VideoAnalytics,
+};
+use crate::config::WorkloadConfig;
+use crate::util::{FastMap, Micros};
+
+// ---------------------------------------------------------------------------
+// Filter Controls
+// ---------------------------------------------------------------------------
+
+/// The §2.2.1 default FC: forward a frame iff TL has the camera active.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActiveFlagFc;
+
+impl FilterControl for ActiveFlagFc {
+    fn admit(
+        &mut self,
+        _query: QueryId,
+        _camera: usize,
+        _frame_no: u64,
+        _now: Micros,
+        active: bool,
+    ) -> bool {
+        active
+    }
+
+    fn label(&self) -> &'static str {
+        "active-flag"
+    }
+}
+
+/// App 3's FC: frame-rate control for fast entities. At the Table-1
+/// calibration (`stride = 1`) it forwards every active frame — the
+/// rate knob shows up through the workload it tunes (vehicle speeds
+/// raise the spotlight expansion rate) — while `stride > 1` decimates
+/// the per-camera frame rate.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameRateFc {
+    /// Forward every `stride`-th frame of an active camera (≥ 1).
+    pub stride: u64,
+    /// Floor for the entity speed this FC assumes (vehicles).
+    pub min_entity_speed_mps: f64,
+    /// Floor for TL's peak expansion speed.
+    pub min_peak_speed_mps: f64,
+}
+
+impl FrameRateFc {
+    /// Table-1 calibration (vehicle speeds, full frame rate).
+    pub fn vehicle() -> Self {
+        Self {
+            stride: 1,
+            min_entity_speed_mps: 8.0,
+            min_peak_speed_mps: 14.0,
+        }
+    }
+}
+
+impl FilterControl for FrameRateFc {
+    fn admit(
+        &mut self,
+        _query: QueryId,
+        _camera: usize,
+        frame_no: u64,
+        _now: Micros,
+        active: bool,
+    ) -> bool {
+        active && (self.stride <= 1 || frame_no % self.stride == 0)
+    }
+
+    fn tune_workload(
+        &self,
+        workload: &mut WorkloadConfig,
+        tl_peak_speed_mps: &mut f64,
+    ) {
+        // The entity defaults to vehicle speeds in this app.
+        workload.entity_speed_mps =
+            workload.entity_speed_mps.max(self.min_entity_speed_mps);
+        *tl_peak_speed_mps =
+            tl_peak_speed_mps.max(self.min_peak_speed_mps);
+    }
+
+    fn label(&self) -> &'static str {
+        "frame-rate"
+    }
+}
+
+/// DeepScale-style adaptive frame-rate FC (App 5): run a camera at full
+/// rate for its first `warmup_frames` frames after (re)activation — the
+/// reacquisition-critical window — then decimate to every
+/// `steady_stride`-th frame. Cuts steady-state VA load ~`stride`×
+/// without touching the platform's batching/dropping.
+#[derive(Debug, Clone)]
+pub struct AdaptiveRateFc {
+    pub steady_stride: u64,
+    pub warmup_frames: u64,
+    /// Floors applied at composition time (vehicle workload).
+    pub min_entity_speed_mps: f64,
+    pub min_peak_speed_mps: f64,
+    /// (query, camera) -> frames admitted-or-skipped since activation.
+    seen: FastMap<u64, u64>,
+}
+
+impl AdaptiveRateFc {
+    pub fn new(steady_stride: u64, warmup_frames: u64) -> Self {
+        Self {
+            steady_stride: steady_stride.max(1),
+            warmup_frames,
+            min_entity_speed_mps: 8.0,
+            min_peak_speed_mps: 14.0,
+            seen: FastMap::default(),
+        }
+    }
+}
+
+impl FilterControl for AdaptiveRateFc {
+    fn admit(
+        &mut self,
+        query: QueryId,
+        camera: usize,
+        frame_no: u64,
+        _now: Micros,
+        active: bool,
+    ) -> bool {
+        let key = ((query as u64) << 32) | camera as u64;
+        if !active {
+            // Deactivation resets the warm-up window.
+            self.seen.remove(&key);
+            return false;
+        }
+        let n = self.seen.entry(key).or_insert(0);
+        let admit =
+            *n < self.warmup_frames || frame_no % self.steady_stride == 0;
+        *n += 1;
+        admit
+    }
+
+    fn tune_workload(
+        &self,
+        workload: &mut WorkloadConfig,
+        tl_peak_speed_mps: &mut f64,
+    ) {
+        workload.entity_speed_mps =
+            workload.entity_speed_mps.max(self.min_entity_speed_mps);
+        *tl_peak_speed_mps =
+            tl_peak_speed_mps.max(self.min_peak_speed_mps);
+    }
+
+    fn forget_query(&mut self, query: QueryId) {
+        self.seen.retain(|&k, _| (k >> 32) != query as u64);
+    }
+
+    fn label(&self) -> &'static str {
+        "adaptive-rate"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Video Analytics
+// ---------------------------------------------------------------------------
+
+/// Seeded avalanche hash for the whole-transit miss coin: real re-id
+/// misses entire tracks (occlusion, pose), which is what produces the
+/// paper's long blind-spot spells. Deterministic per (seed, query,
+/// camera, transit), and independent of the engine RNG stream. The
+/// query term vanishes for `SINGLE_QUERY` (= 0), so single- and
+/// multi-query engines share one formula.
+fn transit_coin(seed: u64, query: QueryId, camera: usize, idx: usize) -> f64 {
+    let mut h = seed
+        ^ (query as u64).wrapping_mul(0xB529_7A4D)
+        ^ (camera as u64).wrapping_mul(0x9E37_79B9)
+        ^ (idx as u64).wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h as f64 / u64::MAX as f64
+}
+
+/// The stock VA block: on the DES path it detects against ground-truth
+/// labels (per-frame true/false-positive coins plus the whole-transit
+/// miss model); on the live path it carries the backend's match score
+/// into the `Candidate` payload (1:1 selectivity — every frame flows
+/// on, CR resolves).
+#[derive(Debug, Clone, Copy)]
+pub struct SimDetector {
+    variant: ModelVariant,
+    cost: f64,
+    label: &'static str,
+}
+
+impl SimDetector {
+    pub fn new(variant: ModelVariant) -> Self {
+        Self {
+            variant,
+            cost: 1.0,
+            label: "detector",
+        }
+    }
+
+    /// HoG-class person detector (App 1/2 calibration).
+    pub fn hog() -> Self {
+        Self::new(ModelVariant::Va).labeled("hog")
+    }
+
+    /// YOLO-class vehicle detector — heavier than HoG (App 3).
+    pub fn yolo() -> Self {
+        Self::new(ModelVariant::Va).with_cost(2.5).labeled("yolo")
+    }
+
+    /// Small re-id network run *in VA* (App 4's two-stage pipeline).
+    pub fn reid_small() -> Self {
+        Self::new(ModelVariant::CrSmall)
+            .with_cost(3.0)
+            .labeled("reid-small")
+    }
+
+    /// Service-cost multiplier relative to App 1's VA profile.
+    pub fn with_cost(mut self, cost: f64) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn labeled(mut self, label: &'static str) -> Self {
+        self.label = label;
+        self
+    }
+}
+
+impl VideoAnalytics for SimDetector {
+    fn step_sim(&mut self, events: &mut [Event], ctx: &mut SimCtx<'_>) {
+        for ev in events.iter_mut() {
+            if let Payload::Frame { entity_present } = ev.payload {
+                let transit_missed = entity_present
+                    && ctx
+                        .truth
+                        .interval_index(
+                            ev.header.query,
+                            ev.header.camera,
+                            ev.header.captured,
+                        )
+                        .map(|idx| {
+                            transit_coin(
+                                ctx.seed,
+                                ev.header.query,
+                                ev.header.camera,
+                                idx,
+                            ) < ctx.sem.transit_miss
+                        })
+                        .unwrap_or(false);
+                let flagged = if entity_present && !transit_missed {
+                    ctx.rng.bool(ctx.sem.va_tp)
+                } else if entity_present {
+                    false // transit missed entirely
+                } else {
+                    ctx.rng.bool(ctx.sem.va_fp)
+                };
+                ev.payload = Payload::Candidate {
+                    entity_present,
+                    score: if flagged { 0.9 } else { 0.1 },
+                };
+            }
+        }
+    }
+
+    fn apply_scores(
+        &mut self,
+        events: &mut [Event],
+        scores: &[f32],
+        _params: &ScoreParams,
+    ) {
+        for (ev, &score) in events.iter_mut().zip(scores) {
+            // Ground-truth frames (service front) become scored
+            // candidates; pixel frames (live engine) flow on 1:1 — the
+            // real VA is a detector, CR resolves the identity.
+            if let Payload::Frame { entity_present } = ev.payload {
+                ev.payload = Payload::Candidate {
+                    entity_present,
+                    score,
+                };
+            }
+        }
+    }
+
+    fn variant(&self) -> ModelVariant {
+        self.variant
+    }
+
+    fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contention Resolution
+// ---------------------------------------------------------------------------
+
+/// The stock CR block: re-identification of VA candidates against the
+/// query identity. DES path draws the confirm/false-positive coins;
+/// live path thresholds the backend's match score (gating on the VA
+/// score when the payload carries one). Confirmed detections are
+/// flagged `avoid_drop` (§4.3.3: positive matches must not be dropped).
+#[derive(Debug, Clone, Copy)]
+pub struct SimReid {
+    variant: ModelVariant,
+    cost: f64,
+    label: &'static str,
+}
+
+impl SimReid {
+    pub fn new(variant: ModelVariant) -> Self {
+        Self {
+            variant,
+            cost: 1.0,
+            label: "reid",
+        }
+    }
+
+    /// OpenReid-class small network (App 1 calibration).
+    pub fn small() -> Self {
+        Self::new(ModelVariant::CrSmall).labeled("reid-small")
+    }
+
+    /// The deeper CR DNN (~1.63x slower per frame, App 2/4).
+    pub fn large() -> Self {
+        Self::new(ModelVariant::CrLarge)
+            .with_cost(1.63)
+            .labeled("reid-large")
+    }
+
+    /// BoxCars-class vehicle re-id (App 3).
+    pub fn vehicle() -> Self {
+        Self::new(ModelVariant::CrSmall)
+            .with_cost(1.2)
+            .labeled("reid-vehicle")
+    }
+
+    pub fn with_cost(mut self, cost: f64) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn labeled(mut self, label: &'static str) -> Self {
+        self.label = label;
+        self
+    }
+}
+
+impl ContentionResolver for SimReid {
+    fn step_sim(&mut self, events: &mut [Event], ctx: &mut SimCtx<'_>) {
+        for ev in events.iter_mut() {
+            if let Payload::Candidate {
+                entity_present,
+                score,
+            } = ev.payload
+            {
+                let candidate = score > 0.5;
+                let detected = if entity_present && candidate {
+                    ctx.rng.bool(ctx.sem.cr_tp)
+                } else {
+                    candidate && ctx.rng.bool(ctx.sem.cr_fp)
+                };
+                if detected {
+                    // Positive matches must not be dropped (§4.3.3).
+                    ev.header.avoid_drop = true;
+                }
+                ev.payload = Payload::Detection {
+                    detected,
+                    confidence: if detected { 0.95 } else { 0.05 },
+                };
+            }
+        }
+    }
+
+    fn apply_scores(
+        &mut self,
+        events: &mut [Event],
+        scores: &[f32],
+        params: &ScoreParams,
+    ) {
+        for (ev, &score) in events.iter_mut().zip(scores) {
+            let detected = match ev.payload {
+                // Service front: VA's score gates the CR verdict.
+                Payload::Candidate {
+                    score: va_score, ..
+                } => va_score > 0.5 && score > params.threshold,
+                // Live engine: the pixels went straight through VA.
+                _ => score > params.threshold,
+            };
+            if detected {
+                ev.header.avoid_drop = true;
+            }
+            ev.payload = Payload::Detection {
+                detected,
+                confidence: score,
+            };
+        }
+    }
+
+    fn variant(&self) -> ModelVariant {
+        self.variant
+    }
+
+    fn cost(&self) -> f64 {
+        self.cost
+    }
+
+    fn label(&self) -> &'static str {
+        self.label
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Query Fusion
+// ---------------------------------------------------------------------------
+
+/// No query fusion (Table-1 apps 1, 3, 4).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoFusion;
+
+impl QueryFusion for NoFusion {
+    fn label(&self) -> &'static str {
+        "none"
+    }
+}
+
+/// App 2's RNN-style fusion: fold high-confidence detections into a
+/// running query embedding with exponential decay. Deterministic and
+/// RNG-free, so enabling it never perturbs the engines' seeded draws —
+/// fusion refines the embedding, the tuning triangle is untouched.
+#[derive(Debug, Clone)]
+pub struct RnnFusion {
+    momentum: f32,
+    min_confidence: f32,
+    state: Vec<f32>,
+    updates: u64,
+}
+
+impl RnnFusion {
+    pub fn new(dim: usize, momentum: f32, min_confidence: f32) -> Self {
+        Self {
+            momentum,
+            min_confidence,
+            state: vec![0.0; dim.max(1)],
+            updates: 0,
+        }
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+impl Default for RnnFusion {
+    fn default() -> Self {
+        Self::new(8, 0.9, 0.9)
+    }
+}
+
+impl QueryFusion for RnnFusion {
+    fn on_detection(&mut self, ev: &Event) -> bool {
+        let Payload::Detection {
+            detected: true,
+            confidence,
+        } = ev.payload
+        else {
+            return false;
+        };
+        if confidence < self.min_confidence {
+            return false;
+        }
+        // Pseudo-embedding of the sighting: a camera-seeded direction
+        // scaled by confidence (the live QF model replaces this).
+        let cam = ev.header.camera as u64;
+        for (i, s) in self.state.iter_mut().enumerate() {
+            let mut h = cam
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(i as u64);
+            h ^= h >> 33;
+            let feat =
+                (h as f64 / u64::MAX as f64) as f32 * confidence;
+            *s = self.momentum * *s + (1.0 - self.momentum) * feat;
+        }
+        self.updates += 1;
+        true
+    }
+
+    fn embedding(&self) -> Option<&[f32]> {
+        Some(&self.state)
+    }
+
+    fn fuses(&self) -> bool {
+        true
+    }
+
+    fn label(&self) -> &'static str {
+        "rnn-fusion"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::SINGLE_QUERY;
+
+    #[test]
+    fn active_flag_follows_tl() {
+        let mut fc = ActiveFlagFc;
+        assert!(fc.admit(SINGLE_QUERY, 3, 0, 0, true));
+        assert!(!fc.admit(SINGLE_QUERY, 3, 1, 0, false));
+    }
+
+    #[test]
+    fn frame_rate_stride_decimates() {
+        let mut fc = FrameRateFc {
+            stride: 3,
+            ..FrameRateFc::vehicle()
+        };
+        let admitted = (0..9u64)
+            .filter(|&f| fc.admit(SINGLE_QUERY, 0, f, 0, true))
+            .count();
+        assert_eq!(admitted, 3);
+        // Table-1 calibration forwards everything.
+        let mut fc1 = FrameRateFc::vehicle();
+        assert!((0..9u64).all(|f| fc1.admit(SINGLE_QUERY, 0, f, 0, true)));
+    }
+
+    #[test]
+    fn frame_rate_tunes_vehicle_workload() {
+        let mut w = WorkloadConfig::default();
+        let mut peak = 4.0;
+        FrameRateFc::vehicle().tune_workload(&mut w, &mut peak);
+        assert!(w.entity_speed_mps >= 8.0);
+        assert!(peak >= 14.0);
+    }
+
+    #[test]
+    fn adaptive_rate_warms_up_then_decimates() {
+        let mut fc = AdaptiveRateFc::new(4, 3);
+        // First 3 frames after activation always admitted.
+        assert!(fc.admit(0, 7, 1, 0, true));
+        assert!(fc.admit(0, 7, 2, 0, true));
+        assert!(fc.admit(0, 7, 3, 0, true));
+        // Steady state: only multiples of the stride.
+        assert!(fc.admit(0, 7, 4, 0, true) == (4 % 4 == 0));
+        assert!(!fc.admit(0, 7, 5, 0, true));
+        // Deactivation resets the warm-up window.
+        assert!(!fc.admit(0, 7, 6, 0, false));
+        assert!(fc.admit(0, 7, 7, 0, true));
+    }
+
+    #[test]
+    fn reid_scores_gate_on_va_and_threshold() {
+        let mut cr = SimReid::small();
+        let mut evs = vec![
+            Event {
+                header: crate::dataflow::Header::new(0, 0, 0, 0),
+                payload: Payload::Candidate {
+                    entity_present: true,
+                    score: 0.9,
+                },
+            },
+            Event {
+                header: crate::dataflow::Header::new(1, 0, 0, 0),
+                payload: Payload::Candidate {
+                    entity_present: true,
+                    score: 0.1, // VA said no: CR cannot confirm
+                },
+            },
+        ];
+        cr.apply_scores(
+            &mut evs,
+            &[0.8, 0.8],
+            &ScoreParams { threshold: 0.5 },
+        );
+        assert!(matches!(
+            evs[0].payload,
+            Payload::Detection { detected: true, .. }
+        ));
+        assert!(evs[0].header.avoid_drop);
+        assert!(matches!(
+            evs[1].payload,
+            Payload::Detection {
+                detected: false,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn rnn_fusion_updates_on_confident_detections() {
+        let mut qf = RnnFusion::default();
+        let det = Event {
+            header: crate::dataflow::Header::new(0, 4, 0, 0),
+            payload: Payload::Detection {
+                detected: true,
+                confidence: 0.95,
+            },
+        };
+        let neg = Event {
+            header: crate::dataflow::Header::new(1, 4, 0, 0),
+            payload: Payload::Detection {
+                detected: false,
+                confidence: 0.05,
+            },
+        };
+        assert!(qf.on_detection(&det));
+        assert!(!qf.on_detection(&neg));
+        assert_eq!(qf.updates(), 1);
+        assert!(qf.fuses());
+        let emb = qf.embedding().unwrap().to_vec();
+        assert!(emb.iter().any(|&x| x != 0.0));
+        // Deterministic: same inputs, same embedding.
+        let mut qf2 = RnnFusion::default();
+        qf2.on_detection(&det);
+        assert_eq!(qf2.embedding().unwrap(), &emb[..]);
+    }
+
+    #[test]
+    fn no_fusion_is_inert() {
+        let mut qf = NoFusion;
+        let det = Event {
+            header: crate::dataflow::Header::new(0, 4, 0, 0),
+            payload: Payload::Detection {
+                detected: true,
+                confidence: 0.95,
+            },
+        };
+        assert!(!qf.on_detection(&det));
+        assert!(!qf.fuses());
+        assert!(qf.embedding().is_none());
+    }
+}

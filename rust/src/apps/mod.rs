@@ -1,134 +1,476 @@
-//! The four illustrative tracking applications (Table 1).
+//! Application composition: the §2.2 programming model made concrete.
 //!
-//! Each app is a composition of user logic over the fixed dataflow:
+//! An application is five UDF blocks ([`crate::dataflow`] traits)
+//! composed by [`AppBuilder`] into an [`AppDefinition`]. The engines
+//! accept any `AppDefinition` — stock or user-built — and drive the
+//! blocks only through the traits; *which* app is running never appears
+//! in engine code.
+//!
+//! The Table-1 applications are ~25-line compositions over the
+//! [`blocks`] library:
 //!
 //! | App | FC | VA | CR | TL | QF |
 //! |-----|----|----|----|----|----|
-//! | 1 | Active? | HoG-like features | Re-id (small) | WBFS | — |
-//! | 2 | Active? | HoG-like features | Re-id (large) | BFS | RNN-fusion |
-//! | 3 | FrameRate | YOLO-like (cars) | Car re-id | WBFS w/ speed | — |
-//! | 4 | Active? | Re-id (small) | Re-id (large) | Probabilistic | — |
+//! | 1 | active-flag | HoG detector | re-id (small) | WBFS | — |
+//! | 2 | active-flag | HoG detector | re-id (large) | BFS | RNN-fusion |
+//! | 3 | frame-rate | YOLO detector | vehicle re-id | WBFS w/ speed | — |
+//! | 4 | active-flag | re-id (small) | re-id (large) | Probabilistic | — |
+//! | 5 | adaptive-rate | small detector | vehicle re-id | WBFS w/ speed | — |
 //!
-//! [`AppSpec::apply`] configures an [`ExperimentConfig`] for the DES
-//! engine; the `*_variant` names select AOT artifacts for the live
-//! engine.
+//! App 5 is ours, beyond the paper: a DeepScale-style adaptive
+//! frame-rate FC (full rate while reacquiring, decimated in steady
+//! state) over a vehicle re-id CR — and it exercises only the public
+//! block API, the proof that a user can add App N without touching
+//! engine code (see `examples/custom_app.rs` for an app built entirely
+//! outside the crate).
+//!
+//! Model variants are typed ([`ModelVariant`]), so a composition that
+//! names a nonexistent artifact fails at build time with a clear error
+//! instead of a silent name mismatch inside the PJRT runtime.
+//!
+//! [`AppDefinition::apply`] configures an [`ExperimentConfig`] (cost
+//! scaling, workload tuning, default TL) exactly like the figures in
+//! §5 expect; [`resolve`] maps a config back to its stock composition
+//! for the preset/CLI paths.
+
+pub mod blocks;
+
+pub use blocks::{
+    ActiveFlagFc, AdaptiveRateFc, FrameRateFc, NoFusion, RnnFusion,
+    SimDetector, SimReid,
+};
+
+use std::sync::Arc;
 
 use crate::config::{AppKind, ExperimentConfig, TlKind};
+use crate::coordinator::tl::stock_tl;
+use crate::dataflow::{
+    ContentionResolver, FilterControl, ModelVariant, QueryFusion, TlEnv,
+    TlFactory, TrackingLogic, VideoAnalytics,
+};
 
-/// Composition of one tracking application.
-#[derive(Debug, Clone)]
-pub struct AppSpec {
-    pub kind: AppKind,
-    pub name: &'static str,
-    pub description: &'static str,
-    /// FC user logic: simple active flag vs frame-rate control.
-    pub fc_logic: &'static str,
-    /// AOT model variant the live VA stage runs.
-    pub va_variant: &'static str,
-    /// AOT model variant the live CR stage runs.
-    pub cr_variant: &'static str,
-    /// Default tracking logic.
-    pub tl: TlKind,
-    /// Whether query fusion runs on high-confidence detections.
-    pub qf: bool,
-    /// CR per-frame cost multiplier relative to App 1's CR (the paper
-    /// reports App 2's CR at ~1.63x).
-    pub cr_cost: f64,
-    /// VA cost multiplier (App 4 runs a DNN in VA, not HoG).
+type FcFactory = Arc<dyn Fn() -> Box<dyn FilterControl> + Send + Sync>;
+type VaFactory = Arc<dyn Fn() -> Box<dyn VideoAnalytics> + Send + Sync>;
+type CrFactory =
+    Arc<dyn Fn() -> Box<dyn ContentionResolver> + Send + Sync>;
+type QfFactory = Arc<dyn Fn() -> Box<dyn QueryFusion> + Send + Sync>;
+
+/// A composed tracking application: factories for the five blocks plus
+/// the composition metadata the platform needs at configuration time
+/// (cost model scaling, typed model variants, the Table-1 identity when
+/// there is one). Engines mint block instances per worker / per query
+/// through the `make_*` methods and never look inside them.
+pub struct AppDefinition {
+    pub name: String,
+    pub description: String,
+    /// Table-1 identity for stock compositions (`None` for user apps).
+    pub kind: Option<AppKind>,
+    /// Default TL strategy, when the TL is a stock spotlight; the §5
+    /// experiments sweep `cfg.tl` independent of the app through this.
+    pub default_tl: Option<TlKind>,
+    /// AOT model the VA block executes on the live path.
+    pub va_variant: ModelVariant,
+    /// AOT model the CR block executes on the live path.
+    pub cr_variant: ModelVariant,
+    /// VA service-cost multiplier relative to App 1's profile.
     pub va_cost: f64,
+    /// CR service-cost multiplier (the paper reports App 2 at ~1.63x).
+    pub cr_cost: f64,
+    /// Whether the QF block refines query embeddings.
+    pub qf_enabled: bool,
+    pub fc_label: &'static str,
+    pub va_label: &'static str,
+    pub cr_label: &'static str,
+    pub qf_label: &'static str,
+    pub tl_label: String,
+    fc: FcFactory,
+    va: VaFactory,
+    cr: CrFactory,
+    qf: QfFactory,
+    tl: TlFactory,
 }
 
-/// Table-1 composition for an application.
-pub fn spec(kind: AppKind) -> AppSpec {
-    match kind {
-        AppKind::App1 => AppSpec {
-            kind,
-            name: "App1-person",
-            description: "Missing-person tracking: HoG VA, OpenReid-class \
-                          CR, weighted-BFS spotlight.",
-            fc_logic: "active-flag",
-            va_variant: "va",
-            cr_variant: "cr_small",
-            tl: TlKind::Wbfs,
-            qf: false,
-            cr_cost: 1.0,
-            va_cost: 1.0,
-        },
-        AppKind::App2 => AppSpec {
-            kind,
-            name: "App2-person-fusion",
-            description: "Person tracking with a deeper CR DNN and \
-                          RNN-style query fusion.",
-            fc_logic: "active-flag",
-            va_variant: "va",
-            cr_variant: "cr_large",
-            tl: TlKind::Bfs,
-            qf: true,
-            cr_cost: 1.63,
-            va_cost: 1.0,
-        },
-        AppKind::App3 => AppSpec {
-            kind,
-            name: "App3-vehicle",
-            description: "Stolen-vehicle tracking: YOLO-class VA, BoxCars \
-                          CR, speed-aware WBFS with FC frame-rate control.",
-            fc_logic: "frame-rate",
-            va_variant: "va",
-            cr_variant: "cr_small",
-            tl: TlKind::WbfsSpeed,
-            qf: false,
-            cr_cost: 1.2,
-            va_cost: 2.5, // YOLO-class detector is heavier than HoG
-        },
-        AppKind::App4 => AppSpec {
-            kind,
-            name: "App4-two-stage",
-            description: "Two-stage re-id (small model in VA, large in CR) \
-                          with Naive-Bayes path-likelihood TL.",
-            fc_logic: "active-flag",
-            va_variant: "cr_small",
-            cr_variant: "cr_large",
-            tl: TlKind::Probabilistic,
-            qf: false,
-            cr_cost: 1.63,
-            va_cost: 3.0,
-        },
+impl AppDefinition {
+    /// Mint a fresh FC block (one per engine / feed loop).
+    pub fn make_fc(&self) -> Box<dyn FilterControl> {
+        (self.fc)()
     }
-}
 
-impl AppSpec {
-    /// Configure an experiment for this application: tracking logic and
-    /// the per-stage service-cost scaling relative to App 1's profile.
-    ///
-    /// Leaves `cfg.tl` alone if the caller already overrode it (the §5
-    /// experiments sweep TL independent of the app).
+    /// Mint a fresh VA block (one per executor worker).
+    pub fn make_va(&self) -> Box<dyn VideoAnalytics> {
+        (self.va)()
+    }
+
+    /// Mint a fresh CR block (one per executor worker).
+    pub fn make_cr(&self) -> Box<dyn ContentionResolver> {
+        (self.cr)()
+    }
+
+    /// Mint a fresh QF block (one per sink).
+    pub fn make_qf(&self) -> Box<dyn QueryFusion> {
+        (self.qf)()
+    }
+
+    /// Mint a fresh TL block (one per tracking query).
+    pub fn make_tl(&self, env: &TlEnv<'_>) -> Box<dyn TrackingLogic> {
+        (self.tl)(env)
+    }
+
+    /// Share of the TL factory (the service front builds per-query TLs
+    /// from worker threads).
+    pub fn tl_factory(&self) -> TlFactory {
+        Arc::clone(&self.tl)
+    }
+
+    /// Replace the TL with the stock spotlight for `kind` — how the
+    /// engines honor a config-level `cfg.tl` override.
+    pub fn with_tl_kind(mut self, kind: TlKind) -> Self {
+        self.default_tl = Some(kind);
+        self.tl_label = format!("{kind:?}");
+        self.tl = Arc::new(move |env: &TlEnv<'_>| stock_tl(kind, env));
+        self
+    }
+
+    /// Configure an experiment for this application: per-stage
+    /// service-cost scaling relative to App 1's profile, the FC block's
+    /// workload tuning, and (when `override_tl`) the app's default
+    /// tracking logic. Leaves `cfg.tl` alone otherwise — the §5
+    /// experiments sweep TL independent of the app.
     pub fn apply(&self, cfg: &mut ExperimentConfig, override_tl: bool) {
-        cfg.app = self.kind;
+        if let Some(kind) = self.kind {
+            cfg.app = kind;
+        }
         if override_tl {
-            cfg.tl = self.tl;
+            if let Some(tl) = self.default_tl {
+                cfg.tl = tl;
+            }
         }
         cfg.service.cr_alpha_ms *= self.cr_cost;
         cfg.service.cr_beta_ms *= self.cr_cost;
         cfg.service.va_alpha_ms *= self.va_cost;
         cfg.service.va_beta_ms *= self.va_cost;
-        if matches!(self.fc_logic, "frame-rate") {
-            // App 3's FC throttles the frame rate for slow targets; the
-            // entity defaults to vehicle speeds in that app.
-            cfg.workload.entity_speed_mps =
-                cfg.workload.entity_speed_mps.max(8.0);
-            cfg.tl_peak_speed_mps = cfg.tl_peak_speed_mps.max(14.0);
+        self.make_fc()
+            .tune_workload(&mut cfg.workload, &mut cfg.tl_peak_speed_mps);
+    }
+}
+
+/// Compose an [`AppDefinition`] from blocks. Unset blocks default to
+/// App 1's calibration (active-flag FC, HoG detector, small re-id,
+/// WBFS spotlight, no fusion).
+///
+/// Blocks are passed by value and must be `Clone` (the builder turns
+/// them into factories so engines can mint per-worker / per-query
+/// instances); non-`Clone` blocks plug in through the `*_with` factory
+/// variants.
+pub struct AppBuilder {
+    name: String,
+    description: String,
+    kind: Option<AppKind>,
+    fc: Option<FcFactory>,
+    va: Option<VaFactory>,
+    cr: Option<CrFactory>,
+    qf: Option<QfFactory>,
+    tl: Option<(TlFactory, Option<TlKind>, String)>,
+}
+
+impl AppBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            description: String::new(),
+            kind: None,
+            fc: None,
+            va: None,
+            cr: None,
+            qf: None,
+            tl: None,
+        }
+    }
+
+    pub fn describe(mut self, text: impl Into<String>) -> Self {
+        self.description = text.into();
+        self
+    }
+
+    /// Claim a Table-1 identity (stock compositions only).
+    pub fn table_kind(mut self, kind: AppKind) -> Self {
+        self.kind = Some(kind);
+        self
+    }
+
+    pub fn filter_control<B>(mut self, block: B) -> Self
+    where
+        B: FilterControl + Clone + 'static,
+    {
+        self.fc = Some(Arc::new(move || {
+            Box::new(block.clone()) as Box<dyn FilterControl>
+        }));
+        self
+    }
+
+    pub fn filter_control_with<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Box<dyn FilterControl> + Send + Sync + 'static,
+    {
+        self.fc = Some(Arc::new(factory));
+        self
+    }
+
+    pub fn video_analytics<B>(mut self, block: B) -> Self
+    where
+        B: VideoAnalytics + Clone + 'static,
+    {
+        self.va = Some(Arc::new(move || {
+            Box::new(block.clone()) as Box<dyn VideoAnalytics>
+        }));
+        self
+    }
+
+    pub fn video_analytics_with<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Box<dyn VideoAnalytics> + Send + Sync + 'static,
+    {
+        self.va = Some(Arc::new(factory));
+        self
+    }
+
+    pub fn contention_resolver<B>(mut self, block: B) -> Self
+    where
+        B: ContentionResolver + Clone + 'static,
+    {
+        self.cr = Some(Arc::new(move || {
+            Box::new(block.clone()) as Box<dyn ContentionResolver>
+        }));
+        self
+    }
+
+    pub fn contention_resolver_with<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Box<dyn ContentionResolver> + Send + Sync + 'static,
+    {
+        self.cr = Some(Arc::new(factory));
+        self
+    }
+
+    pub fn query_fusion<B>(mut self, block: B) -> Self
+    where
+        B: QueryFusion + Clone + 'static,
+    {
+        self.qf = Some(Arc::new(move || {
+            Box::new(block.clone()) as Box<dyn QueryFusion>
+        }));
+        self
+    }
+
+    pub fn query_fusion_with<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> Box<dyn QueryFusion> + Send + Sync + 'static,
+    {
+        self.qf = Some(Arc::new(factory));
+        self
+    }
+
+    /// Use the stock spotlight tracker with this strategy.
+    pub fn tracking_logic(mut self, kind: TlKind) -> Self {
+        self.tl = Some((
+            Arc::new(move |env: &TlEnv<'_>| stock_tl(kind, env)),
+            Some(kind),
+            format!("{kind:?}"),
+        ));
+        self
+    }
+
+    /// Supply a custom TL factory (one instance minted per query).
+    pub fn tracking_logic_with<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&TlEnv<'_>) -> Box<dyn TrackingLogic> + Send + Sync + 'static,
+    {
+        self.tl = Some((Arc::new(factory), None, "custom".into()));
+        self
+    }
+
+    pub fn build(self) -> AppDefinition {
+        let fc = self
+            .fc
+            .unwrap_or_else(|| {
+                Arc::new(|| Box::new(ActiveFlagFc) as Box<dyn FilterControl>)
+            });
+        let va = self
+            .va
+            .unwrap_or_else(|| {
+                Arc::new(|| {
+                    Box::new(SimDetector::hog()) as Box<dyn VideoAnalytics>
+                })
+            });
+        let cr = self
+            .cr
+            .unwrap_or_else(|| {
+                Arc::new(|| {
+                    Box::new(SimReid::small()) as Box<dyn ContentionResolver>
+                })
+            });
+        let qf = self
+            .qf
+            .unwrap_or_else(|| {
+                Arc::new(|| Box::new(NoFusion) as Box<dyn QueryFusion>)
+            });
+        let (tl, default_tl, tl_label) = self.tl.unwrap_or_else(|| {
+            (
+                Arc::new(|env: &TlEnv<'_>| stock_tl(TlKind::Wbfs, env))
+                    as TlFactory,
+                Some(TlKind::Wbfs),
+                format!("{:?}", TlKind::Wbfs),
+            )
+        });
+        // Cache the composition metadata off one minted instance each,
+        // so reports and the live engines never re-mint just to ask.
+        let (va_variant, va_cost, va_label) = {
+            let b = va();
+            (b.variant(), b.cost(), b.label())
+        };
+        let (cr_variant, cr_cost, cr_label) = {
+            let b = cr();
+            (b.variant(), b.cost(), b.label())
+        };
+        let (qf_enabled, qf_label) = {
+            let b = qf();
+            (b.fuses(), b.label())
+        };
+        let fc_label = fc().label();
+        AppDefinition {
+            name: self.name,
+            description: self.description,
+            kind: self.kind,
+            default_tl,
+            va_variant,
+            cr_variant,
+            va_cost,
+            cr_cost,
+            qf_enabled,
+            fc_label,
+            va_label,
+            cr_label,
+            qf_label,
+            tl_label,
+            fc,
+            va,
+            cr,
+            qf,
+            tl,
         }
     }
 }
 
-/// All four app specs.
-pub fn all() -> Vec<AppSpec> {
-    vec![
-        spec(AppKind::App1),
-        spec(AppKind::App2),
-        spec(AppKind::App3),
-        spec(AppKind::App4),
-    ]
+/// App 1 — missing-person tracking: HoG VA, OpenReid-class CR,
+/// weighted-BFS spotlight.
+pub fn app1() -> AppDefinition {
+    AppBuilder::new("App1-person")
+        .describe(
+            "Missing-person tracking: HoG VA, OpenReid-class CR, \
+             weighted-BFS spotlight.",
+        )
+        .table_kind(AppKind::App1)
+        .filter_control(ActiveFlagFc)
+        .video_analytics(SimDetector::hog())
+        .contention_resolver(SimReid::small())
+        .tracking_logic(TlKind::Wbfs)
+        .build()
+}
+
+/// App 2 — person tracking with the deeper CR DNN and RNN-style query
+/// fusion.
+pub fn app2() -> AppDefinition {
+    AppBuilder::new("App2-person-fusion")
+        .describe(
+            "Person tracking with a deeper CR DNN and RNN-style query \
+             fusion.",
+        )
+        .table_kind(AppKind::App2)
+        .filter_control(ActiveFlagFc)
+        .video_analytics(SimDetector::hog())
+        .contention_resolver(SimReid::large())
+        .tracking_logic(TlKind::Bfs)
+        .query_fusion(RnnFusion::default())
+        .build()
+}
+
+/// App 3 — stolen-vehicle tracking: YOLO-class VA, BoxCars CR,
+/// speed-aware WBFS with FC frame-rate control.
+pub fn app3() -> AppDefinition {
+    AppBuilder::new("App3-vehicle")
+        .describe(
+            "Stolen-vehicle tracking: YOLO-class VA, BoxCars CR, \
+             speed-aware WBFS with FC frame-rate control.",
+        )
+        .table_kind(AppKind::App3)
+        .filter_control(FrameRateFc::vehicle())
+        .video_analytics(SimDetector::yolo())
+        .contention_resolver(SimReid::vehicle())
+        .tracking_logic(TlKind::WbfsSpeed)
+        .build()
+}
+
+/// App 4 — two-stage re-id (small model in VA, large in CR) with
+/// Naive-Bayes path-likelihood TL.
+pub fn app4() -> AppDefinition {
+    AppBuilder::new("App4-two-stage")
+        .describe(
+            "Two-stage re-id (small model in VA, large in CR) with \
+             Naive-Bayes path-likelihood TL.",
+        )
+        .table_kind(AppKind::App4)
+        .filter_control(ActiveFlagFc)
+        .video_analytics(SimDetector::reid_small())
+        .contention_resolver(SimReid::large())
+        .tracking_logic(TlKind::Probabilistic)
+        .build()
+}
+
+/// App 5 — ours, beyond the paper: DeepScale-style adaptive frame-rate
+/// FC (full rate while reacquiring, 1-in-4 frames in steady state) over
+/// a cheap small-input detector and a vehicle re-id CR, with the
+/// speed-adaptive spotlight. Composed purely from the public block API.
+pub fn app5() -> AppDefinition {
+    AppBuilder::new("App5-adaptive-vehicle")
+        .describe(
+            "Adaptive-rate vehicle tracking (DeepScale-style): full \
+             frame rate during reacquisition, decimated steady state, \
+             small-input detector, vehicle re-id CR.",
+        )
+        .filter_control(AdaptiveRateFc::new(4, 3))
+        .video_analytics(
+            SimDetector::new(ModelVariant::Va)
+                .with_cost(0.6)
+                .labeled("detector-small"),
+        )
+        .contention_resolver(SimReid::vehicle())
+        .tracking_logic(TlKind::WbfsSpeed)
+        .build()
+}
+
+/// Table-1 composition for a config-level application kind.
+pub fn table1(kind: AppKind) -> AppDefinition {
+    match kind {
+        AppKind::App1 => app1(),
+        AppKind::App2 => app2(),
+        AppKind::App3 => app3(),
+        AppKind::App4 => app4(),
+    }
+}
+
+/// The stock composition a config describes: the Table-1 app for
+/// `cfg.app`, tracking with the spotlight `cfg.tl` selects (the config
+/// keeps TL authority so the §5 sweeps work unchanged). Custom apps
+/// skip this entirely and hand their [`AppDefinition`] to
+/// [`crate::coordinator::des::run_app`] (or the other engines'
+/// `with_app` constructors).
+pub fn resolve(cfg: &ExperimentConfig) -> AppDefinition {
+    table1(cfg.app).with_tl_kind(cfg.tl)
+}
+
+/// All stock app definitions: the four Table-1 apps plus App 5.
+pub fn all() -> Vec<AppDefinition> {
+    vec![app1(), app2(), app3(), app4(), app5()]
 }
 
 #[cfg(test)]
@@ -137,48 +479,121 @@ mod tests {
 
     #[test]
     fn table1_compositions() {
-        let a1 = spec(AppKind::App1);
-        assert_eq!(a1.cr_variant, "cr_small");
-        assert_eq!(a1.tl, TlKind::Wbfs);
-        assert!(!a1.qf);
+        let a1 = app1();
+        assert_eq!(a1.cr_variant, ModelVariant::CrSmall);
+        assert_eq!(a1.default_tl, Some(TlKind::Wbfs));
+        assert!(!a1.qf_enabled);
+        assert_eq!(a1.kind, Some(AppKind::App1));
 
-        let a2 = spec(AppKind::App2);
-        assert_eq!(a2.cr_variant, "cr_large");
-        assert!(a2.qf);
+        let a2 = app2();
+        assert_eq!(a2.cr_variant, ModelVariant::CrLarge);
+        assert!(a2.qf_enabled);
         assert!((a2.cr_cost - 1.63).abs() < 1e-9);
+        assert_eq!(a2.default_tl, Some(TlKind::Bfs));
 
-        let a3 = spec(AppKind::App3);
-        assert_eq!(a3.fc_logic, "frame-rate");
-        assert_eq!(a3.tl, TlKind::WbfsSpeed);
+        let a3 = app3();
+        assert_eq!(a3.fc_label, "frame-rate");
+        assert_eq!(a3.default_tl, Some(TlKind::WbfsSpeed));
+        assert!((a3.va_cost - 2.5).abs() < 1e-9);
 
-        let a4 = spec(AppKind::App4);
-        assert_eq!(a4.va_variant, "cr_small"); // small re-id in VA
-        assert_eq!(a4.tl, TlKind::Probabilistic);
+        let a4 = app4();
+        assert_eq!(a4.va_variant, ModelVariant::CrSmall); // small re-id in VA
+        assert_eq!(a4.default_tl, Some(TlKind::Probabilistic));
+        assert!((a4.va_cost - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn app5_is_a_public_api_composition() {
+        let a5 = app5();
+        assert_eq!(a5.kind, None, "App 5 is beyond Table 1");
+        assert_eq!(a5.fc_label, "adaptive-rate");
+        assert_eq!(a5.cr_variant, ModelVariant::CrSmall);
+        assert!((a5.va_cost - 0.6).abs() < 1e-9);
+        assert_eq!(a5.default_tl, Some(TlKind::WbfsSpeed));
     }
 
     #[test]
     fn apply_scales_service_model() {
         let mut cfg = ExperimentConfig::default();
         let base_cr = cfg.service.cr_alpha_ms + cfg.service.cr_beta_ms;
-        spec(AppKind::App2).apply(&mut cfg, true);
+        app2().apply(&mut cfg, true);
         let new_cr = cfg.service.cr_alpha_ms + cfg.service.cr_beta_ms;
         assert!((new_cr / base_cr - 1.63).abs() < 1e-9);
         assert_eq!(cfg.tl, TlKind::Bfs);
+        assert_eq!(cfg.app, AppKind::App2);
     }
 
     #[test]
     fn apply_respects_tl_override() {
         let mut cfg = ExperimentConfig::default();
         cfg.tl = TlKind::Base;
-        spec(AppKind::App1).apply(&mut cfg, false);
+        app1().apply(&mut cfg, false);
         assert_eq!(cfg.tl, TlKind::Base);
     }
 
     #[test]
     fn app3_is_vehicle_speed() {
         let mut cfg = ExperimentConfig::default();
-        spec(AppKind::App3).apply(&mut cfg, true);
+        app3().apply(&mut cfg, true);
         assert!(cfg.workload.entity_speed_mps >= 8.0);
         assert!(cfg.tl_peak_speed_mps >= 14.0);
+    }
+
+    #[test]
+    fn builder_defaults_are_app1_calibration() {
+        let app = AppBuilder::new("bare").build();
+        assert_eq!(app.fc_label, "active-flag");
+        assert_eq!(app.va_variant, ModelVariant::Va);
+        assert_eq!(app.cr_variant, ModelVariant::CrSmall);
+        assert!((app.va_cost - 1.0).abs() < 1e-9);
+        assert!((app.cr_cost - 1.0).abs() < 1e-9);
+        assert!(!app.qf_enabled);
+        assert_eq!(app.default_tl, Some(TlKind::Wbfs));
+    }
+
+    #[test]
+    fn factories_mint_independent_instances() {
+        use crate::config::WorkloadConfig;
+        use crate::roadnet::{generate, place_cameras};
+
+        let app = app1();
+        let g = generate(&WorkloadConfig::default(), 5);
+        let cams = place_cameras(&g, 100, 0, 40.0);
+        let env = TlEnv {
+            peak_speed_mps: 4.0,
+            mean_road_m: 84.5,
+            fov_m: 40.0,
+            cameras: &cams,
+        };
+        let mut tl_a = app.make_tl(&env);
+        let mut tl_b = app.make_tl(&env);
+        tl_a.on_detection(3, 1_000_000, true);
+        // Independent state: only tl_a has a sighting.
+        assert!(tl_a.last_seen().is_some());
+        assert!(tl_b.last_seen().is_none());
+        let mut out = Vec::new();
+        tl_b.active_set_into(&g, 2_000_000, &mut out);
+        assert_eq!(out.len(), 100, "tl_b still bootstraps all-active");
+    }
+
+    #[test]
+    fn with_tl_kind_overrides_the_spotlight() {
+        let app = app1().with_tl_kind(TlKind::Base);
+        assert_eq!(app.default_tl, Some(TlKind::Base));
+        use crate::config::WorkloadConfig;
+        use crate::roadnet::{generate, place_cameras};
+        let g = generate(&WorkloadConfig::default(), 5);
+        let cams = place_cameras(&g, 50, 0, 40.0);
+        let env = TlEnv {
+            peak_speed_mps: 4.0,
+            mean_road_m: 84.5,
+            fov_m: 40.0,
+            cameras: &cams,
+        };
+        let mut tl = app.make_tl(&env);
+        tl.on_detection(0, 1, true);
+        let mut out = Vec::new();
+        tl.active_set_into(&g, 10, &mut out);
+        assert_eq!(out.len(), 50, "Base keeps everything active");
     }
 }

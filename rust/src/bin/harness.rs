@@ -153,15 +153,18 @@ fn print_summary_row(label: &str, r: &RunResult) {
 
 fn table1() {
     println!("== Table 1: module mappings for illustrative tracking apps ==");
-    for spec in anveshak::apps::all() {
+    println!("   (App 5 is ours, composed on the public block API)");
+    for app in anveshak::apps::all() {
         println!(
-            "  {:<18} FC: {:<11} VA: {:<9} CR: {:<9} TL: {:?}{}",
-            spec.name,
-            spec.fc_logic,
-            spec.va_variant,
-            spec.cr_variant,
-            spec.tl,
-            if spec.qf { "  QF: fusion" } else { "" }
+            "  {:<22} FC: {:<13} VA: {:<14} ({:<8}) CR: {:<12} ({:<8}) TL: {:<13}{}",
+            app.name,
+            app.fc_label,
+            app.va_label,
+            app.va_variant.artifact_name(),
+            app.cr_label,
+            app.cr_variant.artifact_name(),
+            app.tl_label,
+            if app.qf_enabled { "  QF: fusion" } else { "" }
         );
     }
 }

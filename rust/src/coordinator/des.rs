@@ -6,13 +6,25 @@
 //! and service-time models, in virtual time. The paper's 600-second,
 //! 1000-camera experiments replay in seconds of wall-clock, exercising
 //! exactly the same tuning code the live engine uses.
+//!
+//! All application logic enters through the [`crate::dataflow`] UDF
+//! traits of an [`AppDefinition`]: the engine never branches on which
+//! app is running. Block dispatch is hoisted out of the per-event loop
+//! — VA/CR blocks step once per executed *batch* (`step_sim` over the
+//! engine's scratch slice), so the trait-object indirection costs one
+//! virtual call per batch and the zero-allocation hot path from the
+//! performance work is preserved.
 
 use crate::util::FastMap;
 
+use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig};
-use crate::coordinator::tl::TrackingLogic;
 use crate::coordinator::topology::Topology;
-use crate::dataflow::{Event, Payload, Stage};
+use crate::dataflow::{
+    ContentionResolver, Event, FilterControl, Payload, QueryFusion,
+    QueryId, SimCtx, Stage, TlEnv, TrackingLogic, TruthSource,
+    VideoAnalytics, SINGLE_QUERY,
+};
 use crate::engine::EventCore;
 use crate::metrics::{Ledger, Summary, Timeline};
 use crate::roadnet::{generate, place_cameras, Graph};
@@ -81,6 +93,9 @@ pub struct RunResult {
     pub detections: u64,
     /// Peak size of the TL active set.
     pub peak_active: usize,
+    /// Query-embedding refinements performed by the app's QF block
+    /// (0 unless the composition enables fusion).
+    pub fusion_updates: u64,
     /// Total simulation events dispatched by the shared
     /// [`EventCore`] — the numerator of the events/sec throughput
     /// metric reported by `benches/hotpath.rs`.
@@ -95,7 +110,13 @@ pub struct DesEngine {
     gt: GroundTruth,
     net: NetModel,
     skews: ClockSkews,
-    tl: TrackingLogic,
+    /// Application blocks (UDFs): the engine only talks to them through
+    /// the dataflow traits.
+    fc: Box<dyn FilterControl>,
+    va: Box<dyn VideoAnalytics>,
+    cr: Box<dyn ContentionResolver>,
+    qf: Box<dyn QueryFusion>,
+    tl: Box<dyn TrackingLogic>,
     tasks: Vec<TaskState>,
     fc_active: Vec<bool>,
     fc_budget: Vec<BudgetManager>,
@@ -111,20 +132,48 @@ pub struct DesEngine {
     sink_batches: FastMap<u64, (usize, Micros, u64, Micros)>,
     detections: u64,
     peak_active: usize,
+    fusion_updates: u64,
     rng: Rng,
     now: Micros,
     /// Reusable buffers for the per-batch hot path (drop filtering,
-    /// outgoing transmissions) and the TL tick (active set + wanted
-    /// cameras): allocations circulate instead of being re-made per
-    /// batch/tick.
+    /// staged post-exec events + their (u, π) meta, outgoing
+    /// transmissions) and the TL tick (active set + wanted cameras):
+    /// allocations circulate instead of being re-made per batch/tick.
     kept_scratch: Vec<QueuedEvent<Event>>,
+    staged_scratch: Vec<Event>,
+    meta_scratch: Vec<(Micros, Micros, usize)>,
     outgoing_scratch: Vec<Event>,
     active_scratch: Vec<usize>,
     want_scratch: Vec<bool>,
 }
 
+/// Single-query ground-truth view for the VA block: one walk, source
+/// timestamps are already on the ground-truth clock.
+struct SingleTruth<'a>(&'a GroundTruth);
+
+impl TruthSource for SingleTruth<'_> {
+    fn interval_index(
+        &self,
+        _query: QueryId,
+        camera: usize,
+        captured: Micros,
+    ) -> Option<usize> {
+        self.0.interval_index(camera, captured)
+    }
+}
+
 impl DesEngine {
+    /// Build the engine for the stock application the config describes
+    /// (`cfg.app` composition, `cfg.tl` spotlight).
     pub fn new(cfg: ExperimentConfig) -> Self {
+        let app = crate::apps::resolve(&cfg);
+        Self::with_app(cfg, &app)
+    }
+
+    /// Build the engine for an arbitrary [`AppDefinition`] — the
+    /// public composition path; `cfg` keeps platform authority
+    /// (batching, drops, budgets), the app supplies every block.
+    pub fn with_app(cfg: ExperimentConfig, app: &AppDefinition) -> Self {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
             &graph,
@@ -156,13 +205,12 @@ impl DesEngine {
             topo.head_node, // ...and source clocks are the edge devices
             cfg.seed,
         );
-        let mut tl = TrackingLogic::new(
-            cfg.tl,
-            cfg.tl_peak_speed_mps,
-            cfg.workload.mean_road_m,
-            cfg.workload.fov_m,
-            &cams,
-        );
+        let mut tl = app.make_tl(&TlEnv {
+            peak_speed_mps: cfg.tl_peak_speed_mps,
+            mean_road_m: cfg.workload.mean_road_m,
+            fov_m: cfg.workload.fov_m,
+            cameras: &cams,
+        });
         if cfg.seed_last_seen {
             // The query includes where the entity was last seen (Fig 1:
             // only C_A starts active). Camera 0 sits on the walk's
@@ -238,6 +286,10 @@ impl DesEngine {
             gt,
             net,
             skews,
+            fc: app.make_fc(),
+            va: app.make_va(),
+            cr: app.make_cr(),
+            qf: app.make_qf(),
             tl,
             tasks,
             fc_active: vec![true; num_cameras],
@@ -252,9 +304,12 @@ impl DesEngine {
             sink_batches: FastMap::default(),
             detections: 0,
             peak_active: num_cameras,
+            fusion_updates: 0,
             rng: rng(seed, 0xDE5),
             now: 0,
             kept_scratch: Vec::new(),
+            staged_scratch: Vec::new(),
+            meta_scratch: Vec::new(),
             outgoing_scratch: Vec::new(),
             active_scratch: Vec::new(),
             want_scratch: Vec::new(),
@@ -314,6 +369,7 @@ impl DesEngine {
             timeline: self.timeline,
             detections: self.detections,
             peak_active: self.peak_active,
+            fusion_updates: self.fusion_updates,
             core_events: self.core.dispatched(),
         }
     }
@@ -368,15 +424,25 @@ impl DesEngine {
         } else {
             return;
         }
-        // FC user-logic: forward only when the TL has this camera active.
-        if !self.fc_active[cam] {
+        // FC user-logic: the block decides whether this frame enters
+        // the dataflow, given TL's activation flag. The counter
+        // advances per *tick* (not per admitted frame), so stride-based
+        // FCs see monotonically increasing frame numbers.
+        let frame_no = self.frame_counters[cam];
+        self.frame_counters[cam] += 1;
+        if !self.fc.admit(
+            SINGLE_QUERY,
+            cam,
+            frame_no,
+            t,
+            self.fc_active[cam],
+        ) {
             return;
         }
         let id = self.next_event_id;
         self.next_event_id += 1;
         let present = self.gt.visible(cam, t);
-        let mut ev = Event::frame(id, cam, self.frame_counters[cam], t, present);
-        self.frame_counters[cam] += 1;
+        let mut ev = Event::frame(id, cam, frame_no, t, present);
         self.ledger.generated(id, present);
 
         // FC drop point 1 (u = 0 at the source task): rejects new frames
@@ -589,12 +655,14 @@ impl DesEngine {
             mean_q + actual,
         );
 
-        // First pass: per-event bookkeeping + semantics + drop point 3.
-        // Survivors land in engine-owned scratch; the emptied batch vec
-        // is recycled into the batcher, so the steady state circulates
-        // two buffers instead of allocating per batch.
-        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
-        outgoing.clear();
+        // First pass: per-event bookkeeping (budget 3-tuples, header
+        // accumulators) into engine-owned scratch; the emptied batch
+        // vec is recycled into the batcher, so the steady state
+        // circulates buffers instead of allocating per batch.
+        let mut staged = std::mem::take(&mut self.staged_scratch);
+        let mut meta = std::mem::take(&mut self.meta_scratch);
+        staged.clear();
+        meta.clear();
         for qe in batch.drain(..) {
             let mut ev = qe.item;
             let cam = ev.header.camera;
@@ -614,11 +682,35 @@ impl DesEngine {
             );
             ev.header.sum_exec += xi_est;
             ev.header.sum_queue += q;
+            staged.push(ev);
+            meta.push((u, pi, slot));
+        }
+        self.tasks[task].batcher.recycle(batch);
 
-            // Module user-logic (semantics).
-            self.apply_semantics(stage, &mut ev);
+        // Module user-logic: one virtual call for the whole batch (the
+        // block steps events in arrival order, so the engine RNG stream
+        // is identical to per-event dispatch).
+        {
+            let truth = SingleTruth(&self.gt);
+            let mut ctx = SimCtx {
+                rng: &mut self.rng,
+                truth: &truth,
+                sem: &self.cfg.semantics,
+                seed: self.cfg.seed,
+            };
+            match stage {
+                Stage::Va => self.va.step_sim(&mut staged, &mut ctx),
+                Stage::Cr => self.cr.step_sim(&mut staged, &mut ctx),
+                _ => {}
+            }
+        }
 
-            // Drop point 3 (per-downstream budget).
+        // Drop point 3 (per-downstream budget); survivors move to the
+        // outgoing scratch.
+        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
+        outgoing.clear();
+        for (i, ev) in staged.drain(..).enumerate() {
+            let (u, pi, slot) = meta[i];
             let exempt = ev.header.avoid_drop || ev.header.probe;
             if self.cfg.drops_enabled {
                 let budget = self.tasks[task].budget.budget_for(slot);
@@ -632,7 +724,8 @@ impl DesEngine {
             }
             outgoing.push(ev);
         }
-        self.tasks[task].batcher.recycle(batch);
+        self.staged_scratch = staged;
+        self.meta_scratch = meta;
 
         // Second pass: transmit (batch tag tells the sink the surviving
         // size so accept logic can find the slowest member).
@@ -690,75 +783,6 @@ impl DesEngine {
 
         // The executor is free: form the next batch.
         self.try_form_batch(task);
-    }
-
-    /// VA/CR user-logic over the ground-truth labels (the live engine
-    /// replaces this with real PJRT model execution).
-    fn apply_semantics(&mut self, stage: Stage, ev: &mut Event) {
-        let sem = &self.cfg.semantics;
-        match stage {
-            Stage::Va => {
-                if let Payload::Frame { entity_present } = ev.payload {
-                    // Whole-transit misses: a deterministic per-(camera,
-                    // transit) coin models re-id failing an entire track
-                    // (occlusion/pose), which is what creates the
-                    // paper's long blind-spot spells.
-                    let transit_missed = entity_present
-                        && self
-                            .gt
-                            .interval_index(
-                                ev.header.camera,
-                                ev.header.captured,
-                            )
-                            .map(|idx| {
-                                let mut h = self.cfg.seed
-                                    ^ (ev.header.camera as u64)
-                                        .wrapping_mul(0x9E37_79B9)
-                                    ^ (idx as u64).wrapping_mul(0xC2B2_AE35);
-                                h ^= h >> 33;
-                                h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
-                                h ^= h >> 33;
-                                (h as f64 / u64::MAX as f64)
-                                    < sem.transit_miss
-                            })
-                            .unwrap_or(false);
-                    let flagged = if entity_present && !transit_missed {
-                        self.rng.bool(sem.va_tp)
-                    } else if entity_present {
-                        false // transit missed entirely
-                    } else {
-                        self.rng.bool(sem.va_fp)
-                    };
-                    ev.payload = Payload::Candidate {
-                        entity_present,
-                        score: if flagged { 0.9 } else { 0.1 },
-                    };
-                }
-            }
-            Stage::Cr => {
-                if let Payload::Candidate {
-                    entity_present,
-                    score,
-                } = ev.payload
-                {
-                    let candidate = score > 0.5;
-                    let detected = if entity_present && candidate {
-                        self.rng.bool(sem.cr_tp)
-                    } else {
-                        candidate && self.rng.bool(sem.cr_fp)
-                    };
-                    if detected {
-                        // Positive matches must not be dropped (§4.3.3).
-                        ev.header.avoid_drop = true;
-                    }
-                    ev.payload = Payload::Detection {
-                        detected,
-                        confidence: if detected { 0.95 } else { 0.05 },
-                    };
-                }
-            }
-            _ => {}
-        }
     }
 
     // ---- drops + signals ---------------------------------------------------
@@ -868,6 +892,11 @@ impl DesEngine {
         if detected && ev.payload.entity_present() == Some(true) {
             self.detections += 1;
         }
+        if detected && self.qf.on_detection(&ev) {
+            // QF user-logic refines the query embedding; metric-neutral
+            // by contract (the tuning triangle never consults QF).
+            self.fusion_updates += 1;
+        }
         self.ledger
             .completed(ev.header.id, latency, gamma, detected);
         self.timeline.completed(self.now, latency);
@@ -963,9 +992,16 @@ impl DesEngine {
     }
 }
 
-/// Convenience: run a config end to end.
+/// Convenience: run a config end to end with the stock application it
+/// describes.
 pub fn run(cfg: ExperimentConfig) -> RunResult {
     DesEngine::new(cfg).run()
+}
+
+/// Run a user-composed application end to end — the public §2.2 entry
+/// point: `cfg` keeps the platform knobs, `app` supplies the blocks.
+pub fn run_app(cfg: ExperimentConfig, app: &AppDefinition) -> RunResult {
+    DesEngine::with_app(cfg, app).run()
 }
 
 /// Multi-query experiment mode: N tracking queries arriving as a

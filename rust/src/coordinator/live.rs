@@ -22,9 +22,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig};
-use crate::coordinator::tl::TrackingLogic;
-use crate::dataflow::{Event, Header, Partitioner, Payload, Stage};
+use crate::dataflow::{
+    AnalyticsBlock, Event, FilterControl, Header, Partitioner, Payload,
+    ScoreParams, Stage, TlEnv, TrackingLogic, SINGLE_QUERY,
+};
 use crate::metrics::{Ledger, Summary};
 use crate::roadnet::{generate, place_cameras};
 use crate::runtime::{ModelOutput, ModelPool};
@@ -200,15 +203,20 @@ fn now_us(start: Instant) -> Micros {
     start.elapsed().as_micros() as Micros
 }
 
-/// A VA/CR worker: batcher + budgets + real model execution.
+/// A VA/CR worker: batcher + budgets + real model execution, with the
+/// app's analytics block owning the score-to-payload transformation.
 struct Worker {
     stage: Stage,
+    block: AnalyticsBlock,
     batcher: Batcher<Event>,
     budget: BudgetManager,
     xi: XiModel,
     score_threshold: f32,
     /// Reusable image gather buffer (batch × IMG_DIM floats).
     img_scratch: Vec<f32>,
+    /// Reusable post-exec staging buffer (events between bookkeeping
+    /// and the block's score transformation).
+    staged: Vec<Event>,
 }
 
 struct Shared {
@@ -220,26 +228,25 @@ struct Shared {
     start: Instant,
 }
 
-/// The live serving engine.
+/// The live serving engine. Runs one [`AppDefinition`]: the app's
+/// typed model variants pick the AOT artifacts, its blocks own FC
+/// gating, score-to-payload transformation and the spotlight policy.
 pub struct LiveEngine {
     cfg: ExperimentConfig,
     artifacts_dir: std::path::PathBuf,
-    va_variant: String,
-    cr_variant: String,
+    app: AppDefinition,
 }
 
 impl LiveEngine {
     pub fn new(
         cfg: ExperimentConfig,
         artifacts_dir: std::path::PathBuf,
-        va_variant: &str,
-        cr_variant: &str,
+        app: AppDefinition,
     ) -> Self {
         Self {
             cfg,
             artifacts_dir,
-            va_variant: va_variant.to_string(),
-            cr_variant: cr_variant.to_string(),
+            app,
         }
     }
 
@@ -285,10 +292,15 @@ impl LiveEngine {
                 b
             }
         };
+        // Typed model handles resolve to artifact names here — a bad
+        // composition fails at build time, not as a missing-file lookup
+        // mid-serve.
+        let va_variant = self.app.va_variant.artifact_name();
+        let cr_variant = self.app.cr_variant.artifact_name();
         let (service, init) = ModelService::spawn(
             self.artifacts_dir.clone(),
-            &self.va_variant,
-            &self.cr_variant,
+            va_variant,
+            cr_variant,
             buckets,
         )?;
         let (va_xi, cr_xi) = (init.va_xi, init.cr_xi);
@@ -318,12 +330,16 @@ impl LiveEngine {
         for i in 0..n_cr {
             let (tx, rx) = mpsc::channel::<Msg>();
             cr_tx.push(tx);
-            let mut w = self.mk_worker(Stage::Cr, &cr_xi);
+            let mut w = self.mk_worker(
+                Stage::Cr,
+                AnalyticsBlock::Cr(self.app.make_cr()),
+                &cr_xi,
+            );
             w.score_threshold = 0.6;
             let sh = Arc::clone(&shared);
             let uv = uv_tx.clone();
             let tl = tl_tx.clone();
-            let variant = self.cr_variant.clone();
+            let variant = cr_variant.to_string();
             let svc = service.clone();
             cr_handles.push(std::thread::spawn(move || {
                 worker_loop(w, rx, sh, svc, variant, move |ev| {
@@ -346,12 +362,16 @@ impl LiveEngine {
         for i in 0..n_va {
             let (tx, rx) = mpsc::channel::<Msg>();
             va_tx.push(tx);
-            let mut w = self.mk_worker(Stage::Va, &va_xi);
+            let mut w = self.mk_worker(
+                Stage::Va,
+                AnalyticsBlock::Va(self.app.make_va()),
+                &va_xi,
+            );
             w.score_threshold = 0.0; // VA forwards everything (1:1)
             let sh = Arc::clone(&shared);
             let crs = cr_tx.clone();
             let part = cr_part;
-            let variant = self.va_variant.clone();
+            let variant = va_variant.to_string();
             let svc = service.clone();
             va_handles.push(std::thread::spawn(move || {
                 worker_loop(w, rx, sh, svc, variant, move |ev| {
@@ -365,19 +385,19 @@ impl LiveEngine {
         // ---- TL thread ----------------------------------------------------
         let tl_handle = {
             let sh = Arc::clone(&shared);
-            let mut tl_logic = TrackingLogic::new(
-                cfg.tl,
-                cfg.tl_peak_speed_mps,
-                cfg.workload.mean_road_m,
-                cfg.workload.fov_m,
-                &cams,
-            );
+            let mut tl_logic = self.app.make_tl(&TlEnv {
+                peak_speed_mps: cfg.tl_peak_speed_mps,
+                mean_road_m: cfg.workload.mean_road_m,
+                fov_m: cfg.workload.fov_m,
+                cameras: &cams,
+            });
             if cfg.seed_last_seen {
                 tl_logic.on_detection(0, 0, true);
             }
             let graph = graph.clone();
             std::thread::spawn(move || {
                 let mut peak = 0usize;
+                let mut active: Vec<usize> = Vec::new();
                 let mut last_eval = Instant::now();
                 loop {
                     match tl_rx.recv_timeout(Duration::from_millis(200)) {
@@ -390,11 +410,11 @@ impl LiveEngine {
                     if last_eval.elapsed() >= Duration::from_millis(500) {
                         last_eval = Instant::now();
                         let t = now_us(sh.start);
-                        let active = tl_logic.active_set(&graph, t);
+                        tl_logic.active_set_into(&graph, t, &mut active);
                         peak = peak.max(active.len());
                         let mut want =
                             vec![false; sh.fc_active.len()];
-                        for c in active {
+                        for &c in &active {
                             want[c] = true;
                         }
                         for (c, w) in want.iter().enumerate() {
@@ -462,6 +482,9 @@ impl LiveEngine {
         // ---- feed loop (main thread) -----------------------------------------
         let mut next_id = 0u64;
         let mut frame_no = vec![0u64; cfg.num_cameras];
+        // FC user-logic: the block decides which frames enter, given
+        // TL's activation flags.
+        let mut fc = self.app.make_fc();
         // Identity embeddings recur (the entity + a bounded background
         // pool): memoise them instead of recomputing per frame.
         let mut gallery = IdentityGallery::new();
@@ -472,21 +495,27 @@ impl LiveEngine {
             < Duration::from_secs_f64(cfg.duration_secs)
         {
             for cam in 0..cfg.num_cameras {
-                if !shared.fc_active[cam].load(Ordering::Relaxed) {
+                let t = now_us(shared.start);
+                let active =
+                    shared.fc_active[cam].load(Ordering::Relaxed);
+                // The counter advances per tick (not per admitted
+                // frame), so stride-based FCs see monotonically
+                // increasing frame numbers.
+                let fno = frame_no[cam];
+                frame_no[cam] += 1;
+                if !fc.admit(SINGLE_QUERY, cam, fno, t, active) {
                     continue;
                 }
-                let t = now_us(shared.start);
                 let present = gt.visible(cam, t);
                 // Real pixels: entity frames use the entity identity;
                 // negatives use a per-camera/frame background identity.
                 let ident = if present {
                     ENTITY_IDENTITY
                 } else {
-                    1_000 + ((cam as u64) * 131 + frame_no[cam]) % 5_000
+                    1_000 + ((cam as u64) * 131 + fno) % 5_000
                 };
-                let img = gallery.image(ident, frame_no[cam], 0.25);
-                let header =
-                    Header::new(next_id, cam, frame_no[cam], t);
+                let img = gallery.image(ident, fno, 0.25);
+                let header = Header::new(next_id, cam, fno, t);
                 shared
                     .ledger
                     .lock()
@@ -499,7 +528,6 @@ impl LiveEngine {
                 let _ =
                     va_tx[va_part.route(cam)].send(Msg::Ev(ev));
                 next_id += 1;
-                frame_no[cam] += 1;
             }
             next_fire += period;
             let now = Instant::now();
@@ -541,7 +569,12 @@ impl LiveEngine {
         })
     }
 
-    fn mk_worker(&self, stage: Stage, xi: &XiModel) -> Worker {
+    fn mk_worker(
+        &self,
+        stage: Stage,
+        block: AnalyticsBlock,
+        xi: &XiModel,
+    ) -> Worker {
         let cfg = &self.cfg;
         let batcher = match cfg.batching {
             BatchingKind::Static { size } => Batcher::fixed(size),
@@ -557,11 +590,13 @@ impl LiveEngine {
         };
         Worker {
             stage,
+            block,
             batcher,
             budget: BudgetManager::new(1, m_max, 2048),
             xi: xi.clone().with_ema(0.1),
             score_threshold: 0.5,
             img_scratch: Vec::new(),
+            staged: Vec::new(),
         }
     }
 }
@@ -745,7 +780,12 @@ fn exec_batch(
     w.xi.observe(b, actual);
     let xi_est = w.xi.xi(b);
 
-    for (i, qe) in batch.into_iter().enumerate() {
+    // Per-event bookkeeping into the worker's staging buffers, then one
+    // virtual call hands the whole batch + its model scores to the
+    // app's block for the payload transformation.
+    let mut staged = std::mem::take(&mut w.staged);
+    staged.clear();
+    for qe in batch {
         let mut ev = qe.item;
         let q = start - qe.arrival;
         let u = qe.arrival - ev.header.src_arrival;
@@ -760,28 +800,17 @@ fn exec_batch(
         );
         ev.header.sum_exec += xi_est;
         ev.header.sum_queue += q;
-        let score = out.scores[i];
-        match w.stage {
-            Stage::Va => {
-                // 1:1 selectivity: every frame flows on, carrying the
-                // match score for CR.
-                if let Payload::FrameData(img) = &ev.payload {
-                    let img = Arc::clone(img);
-                    ev.payload = Payload::FrameData(img);
-                }
-            }
-            Stage::Cr => {
-                let detected = score > w.score_threshold;
-                if detected {
-                    ev.header.avoid_drop = true;
-                }
-                ev.payload = Payload::Detection {
-                    detected,
-                    confidence: score,
-                };
-            }
-            _ => {}
-        }
+        staged.push(ev);
+    }
+    w.block.apply_scores(
+        &mut staged,
+        &out.scores,
+        &ScoreParams {
+            threshold: w.score_threshold,
+        },
+    );
+    for ev in staged.drain(..) {
         forward(ev);
     }
+    w.staged = staged;
 }

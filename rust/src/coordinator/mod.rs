@@ -1,6 +1,7 @@
 //! The Anveshak coordinator: deployment topology (Master/Scheduler),
-//! the tracking-logic state machine, and two execution engines sharing
-//! the same module and tuning logic:
+//! the stock tracking-logic blocks, and two execution engines sharing
+//! the same module and tuning logic — both driving the application's
+//! UDF blocks exclusively through the [`crate::dataflow`] traits:
 //!
 //! * [`des`] — virtual-time discrete-event engine (experiment harness),
 //!   with a multi-query mode ([`des::run_multi`]) multiplexing many
@@ -17,5 +18,5 @@ pub mod topology;
 
 pub use des::{DesEngine, RunResult};
 pub use live::{LiveEngine, LiveReport, ModelService, ENTITY_IDENTITY};
-pub use tl::TrackingLogic;
+pub use tl::{stock_tl, KeepAllActive, SpotlightPolicy, SpotlightTracker};
 pub use topology::{TaskInfo, Topology};

@@ -1,22 +1,133 @@
-//! Tracking Logic — the spotlight state machine (§2.2.4, Alg 1 TL_WBFS).
+//! Stock Tracking-Logic blocks — the spotlight state machine (§2.2.4,
+//! Alg 1 TL_WBFS) and the everything-on baseline.
 //!
-//! Consumes CR detections, maintains the last-seen location/time, and
-//! computes the set of cameras that should be active: contracting to the
-//! sighting camera on a positive detection, expanding the spotlight
-//! (BFS/WBFS/probabilistic over the road network) while the entity is in
-//! a blind-spot. Engine-agnostic: both the DES and the live engine feed
-//! it detections and ask for the active set.
+//! Both implement the [`TrackingLogic`] UDF trait from
+//! [`crate::dataflow`]; the engines only ever hold `Box<dyn
+//! TrackingLogic>`, so a user-defined policy slots in the same way.
+//!
+//! * [`SpotlightTracker`] consumes CR detections, maintains the
+//!   last-seen location/time, and computes the set of cameras that
+//!   should be active: contracting to the sighting camera on a positive
+//!   detection, expanding the spotlight over the road network
+//!   ([`SpotlightPolicy`]: BFS / WBFS / speed-adaptive WBFS /
+//!   probabilistic) while the entity is in a blind-spot.
+//! * [`KeepAllActive`] keeps every camera on all the time — the
+//!   contemporary baseline the paper compares against. It is a total
+//!   implementation of the trait, **not** a panic path: the old
+//!   `TlKind::Base => unreachable!()` arm is structurally gone because
+//!   [`SpotlightPolicy`] has no `Base` variant.
+//!
+//! [`stock_tl`] maps a config-level [`TlKind`] to a boxed stock block;
+//! custom applications bypass it entirely via
+//! [`crate::apps::AppBuilder::tracking_logic_with`].
 
 use crate::config::TlKind;
+use crate::dataflow::{TlEnv, TrackingLogic};
 use crate::roadnet::{
     bfs_spotlight_into, probabilistic_spotlight_into, wbfs_spotlight_into,
     Camera, Graph, SpotlightWorkspace, VertexId,
 };
 use crate::util::{FastMap, Micros, SEC};
 
+/// Spotlight expansion policy of a [`SpotlightTracker`]. Deliberately
+/// has no "keep everything on" variant — that is [`KeepAllActive`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpotlightPolicy {
+    /// BFS ball with a fixed assumed road length.
+    Bfs,
+    /// Weighted BFS (Dijkstra ball) with exact road lengths.
+    Wbfs,
+    /// WBFS that adapts the radius to the entity's observed speed.
+    WbfsSpeed,
+    /// Naive-Bayes path-likelihood activation (App 4).
+    Probabilistic,
+}
+
+/// Build the stock [`TrackingLogic`] for a config-level [`TlKind`].
+/// Total over the enum: `Base` yields [`KeepAllActive`].
+pub fn stock_tl(kind: TlKind, env: &TlEnv<'_>) -> Box<dyn TrackingLogic> {
+    let policy = match kind {
+        TlKind::Base => {
+            // Vertex-aware variant: `last_seen()` reports real road
+            // vertices, matching the spotlight trackers.
+            return Box::new(KeepAllActive::with_cameras(env.cameras));
+        }
+        TlKind::Bfs => SpotlightPolicy::Bfs,
+        TlKind::Wbfs => SpotlightPolicy::Wbfs,
+        TlKind::WbfsSpeed => SpotlightPolicy::WbfsSpeed,
+        TlKind::Probabilistic => SpotlightPolicy::Probabilistic,
+    };
+    Box::new(SpotlightTracker::new(
+        policy,
+        env.peak_speed_mps,
+        env.mean_road_m,
+        env.fov_m,
+        env.cameras,
+    ))
+}
+
+/// The contemporary baseline: every camera active all the time. Still
+/// tracks sightings so reports can show the last-seen location.
+pub struct KeepAllActive {
+    num_cameras: usize,
+    last_seen: Option<(usize, Micros)>,
+    cam_vertex: Vec<usize>,
+}
+
+impl KeepAllActive {
+    pub fn new(num_cameras: usize) -> Self {
+        Self {
+            num_cameras,
+            last_seen: None,
+            cam_vertex: Vec::new(),
+        }
+    }
+
+    /// Variant that records sighting vertices (for `last_seen`).
+    pub fn with_cameras(cameras: &[Camera]) -> Self {
+        Self {
+            num_cameras: cameras.len(),
+            last_seen: None,
+            cam_vertex: cameras.iter().map(|c| c.vertex).collect(),
+        }
+    }
+}
+
+impl TrackingLogic for KeepAllActive {
+    fn on_detection(
+        &mut self,
+        camera: usize,
+        captured: Micros,
+        detected: bool,
+    ) {
+        if detected {
+            let vertex =
+                self.cam_vertex.get(camera).copied().unwrap_or(camera);
+            match self.last_seen {
+                Some((_, t)) if captured < t => {}
+                _ => self.last_seen = Some((vertex, captured)),
+            }
+        }
+    }
+
+    fn active_set_into(
+        &mut self,
+        _g: &Graph,
+        _now: Micros,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        out.extend(0..self.num_cameras);
+    }
+
+    fn last_seen(&self) -> Option<(usize, Micros)> {
+        self.last_seen
+    }
+}
+
 /// Spotlight tracking state.
-pub struct TrackingLogic {
-    kind: TlKind,
+pub struct SpotlightTracker {
+    policy: SpotlightPolicy,
     /// Configured peak entity speed `es` (m/s) — the expansion rate.
     es_mps: f64,
     /// Fixed road length assumed by TL-BFS (the paper uses the network
@@ -40,9 +151,9 @@ pub struct TrackingLogic {
     verts: Vec<VertexId>,
 }
 
-impl TrackingLogic {
+impl SpotlightTracker {
     pub fn new(
-        kind: TlKind,
+        policy: SpotlightPolicy,
         es_mps: f64,
         fixed_len_m: f64,
         fov_m: f64,
@@ -53,7 +164,7 @@ impl TrackingLogic {
             cam_at.entry(c.vertex).or_default().push(c.id);
         }
         Self {
-            kind,
+            policy,
             es_mps,
             fixed_len_m,
             fov_m,
@@ -67,10 +178,35 @@ impl TrackingLogic {
         }
     }
 
+    /// Whether the entity was visible at the last evaluation.
+    pub fn visible(&self) -> bool {
+        self.visible
+    }
+
+    /// Estimated entity speed from the last two sightings (m/s).
+    fn observed_speed(&self, g: &Graph) -> Option<f64> {
+        let (v1, t1) = self.last_seen?;
+        let (v0, t0) = self.prev_seen?;
+        if t1 <= t0 {
+            return None;
+        }
+        let d = g.euclid(v0, v1);
+        Some(d / ((t1 - t0) as f64 / SEC as f64))
+    }
+
+    /// Convenience wrapper over the trait's `active_set_into`.
+    pub fn active_set(&mut self, g: &Graph, now: Micros) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.active_set_into(g, now, &mut out);
+        out
+    }
+}
+
+impl TrackingLogic for SpotlightTracker {
     /// Feed a CR detection for the frame captured by `camera` at
     /// `captured` (source timestamps, so late events can't corrupt the
     /// sighting order).
-    pub fn on_detection(
+    fn on_detection(
         &mut self,
         camera: usize,
         captured: Micros,
@@ -101,50 +237,25 @@ impl TrackingLogic {
         }
     }
 
-    /// Last positive sighting (vertex, time), if any.
-    pub fn last_seen(&self) -> Option<(usize, Micros)> {
+    fn last_seen(&self) -> Option<(usize, Micros)> {
         self.last_seen
     }
 
-    /// Estimated entity speed from the last two sightings (m/s).
-    fn observed_speed(&self, g: &Graph) -> Option<f64> {
-        let (v1, t1) = self.last_seen?;
-        let (v0, t0) = self.prev_seen?;
-        if t1 <= t0 {
-            return None;
-        }
-        let d = g.euclid(v0, v1);
-        Some(d / ((t1 - t0) as f64 / SEC as f64))
-    }
-
-    /// The camera ids that should be active at time `now` (convenience
-    /// wrapper over [`Self::active_set_into`]).
-    pub fn active_set(&mut self, g: &Graph, now: Micros) -> Vec<usize> {
-        let mut out = Vec::new();
-        self.active_set_into(g, now, &mut out);
-        out
-    }
-
     /// Compute the active camera ids at time `now` into `out` (sorted,
-    /// deduplicated), reusing the TL's spotlight workspace — the
+    /// deduplicated), reusing the tracker's spotlight workspace — the
     /// engines call this every blind-spot tick, so the expansion
     /// allocates nothing in steady state.
     ///
     /// Expansion (§ Fig 1): while in a blind-spot the spotlight radius
     /// grows as `es * time-since-last-seen + fov`; on a sighting it
     /// contracts to the camera(s) at the sighting vertex.
-    pub fn active_set_into(
+    fn active_set_into(
         &mut self,
         g: &Graph,
         now: Micros,
         out: &mut Vec<usize>,
     ) {
         out.clear();
-        if matches!(self.kind, TlKind::Base) {
-            // Baseline: every camera active all the time.
-            out.extend(0..self.cameras.len());
-            return;
-        }
         let Some((vertex, seen_at)) = self.last_seen else {
             // Entity never seen: keep the whole network live so the
             // first sighting can happen (paper bootstraps all-active).
@@ -159,8 +270,8 @@ impl TrackingLogic {
             return;
         }
         let blind_s = ((now - seen_at).max(0)) as f64 / SEC as f64;
-        let radius = match self.kind {
-            TlKind::WbfsSpeed => {
+        let radius = match self.policy {
+            SpotlightPolicy::WbfsSpeed => {
                 // Speed-aware: expand with the *observed* speed (capped
                 // by the configured peak) instead of always the peak.
                 let sp = self
@@ -172,8 +283,8 @@ impl TrackingLogic {
             _ => self.es_mps * blind_s + self.fov_m,
         };
         let mut verts = std::mem::take(&mut self.verts);
-        match self.kind {
-            TlKind::Bfs => bfs_spotlight_into(
+        match self.policy {
+            SpotlightPolicy::Bfs => bfs_spotlight_into(
                 g,
                 vertex,
                 radius,
@@ -181,14 +292,16 @@ impl TrackingLogic {
                 &mut self.ws,
                 &mut verts,
             ),
-            TlKind::Wbfs | TlKind::WbfsSpeed => wbfs_spotlight_into(
-                g,
-                vertex,
-                radius,
-                &mut self.ws,
-                &mut verts,
-            ),
-            TlKind::Probabilistic => probabilistic_spotlight_into(
+            SpotlightPolicy::Wbfs | SpotlightPolicy::WbfsSpeed => {
+                wbfs_spotlight_into(
+                    g,
+                    vertex,
+                    radius,
+                    &mut self.ws,
+                    &mut verts,
+                )
+            }
+            SpotlightPolicy::Probabilistic => probabilistic_spotlight_into(
                 g,
                 vertex,
                 self.es_mps,
@@ -197,7 +310,6 @@ impl TrackingLogic {
                 &mut self.ws,
                 &mut verts,
             ),
-            TlKind::Base => unreachable!(),
         }
         for v in &verts {
             if let Some(cams) = self.cam_at.get(v) {
@@ -217,24 +329,42 @@ mod tests {
     use crate::roadnet::{generate, place_cameras};
     use crate::util::secs;
 
-    fn setup(kind: TlKind) -> (Graph, TrackingLogic) {
+    fn setup(kind: TlKind) -> (Graph, Box<dyn TrackingLogic>) {
         let g = generate(&WorkloadConfig::default(), 5);
         let cams = place_cameras(&g, 1000, 0, 40.0);
-        let tl = TrackingLogic::new(kind, 4.0, 84.5, 40.0, &cams);
+        let tl = stock_tl(
+            kind,
+            &TlEnv {
+                peak_speed_mps: 4.0,
+                mean_road_m: 84.5,
+                fov_m: 40.0,
+                cameras: &cams,
+            },
+        );
         (g, tl)
+    }
+
+    fn active(
+        tl: &mut Box<dyn TrackingLogic>,
+        g: &Graph,
+        t: Micros,
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        tl.active_set_into(g, t, &mut out);
+        out
     }
 
     #[test]
     fn bootstrap_all_active() {
         let (g, mut tl) = setup(TlKind::Bfs);
-        assert_eq!(tl.active_set(&g, 0).len(), 1000);
+        assert_eq!(active(&mut tl, &g, 0).len(), 1000);
     }
 
     #[test]
     fn positive_detection_contracts_to_camera() {
         let (g, mut tl) = setup(TlKind::Bfs);
         tl.on_detection(5, secs(10.0), true);
-        let act = tl.active_set(&g, secs(10.5));
+        let act = active(&mut tl, &g, secs(10.5));
         assert!(act.contains(&5));
         assert!(act.len() <= 3, "contracted set: {act:?}");
     }
@@ -244,9 +374,9 @@ mod tests {
         let (g, mut tl) = setup(TlKind::Bfs);
         tl.on_detection(5, secs(10.0), true);
         tl.on_detection(5, secs(11.0), false); // left FOV
-        let a = tl.active_set(&g, secs(15.0)).len();
-        let b = tl.active_set(&g, secs(40.0)).len();
-        let c = tl.active_set(&g, secs(90.0)).len();
+        let a = active(&mut tl, &g, secs(15.0)).len();
+        let b = active(&mut tl, &g, secs(40.0)).len();
+        let c = active(&mut tl, &g, secs(90.0)).len();
         assert!(a < b && b < c, "sawtooth growth: {a} {b} {c}");
     }
 
@@ -255,9 +385,9 @@ mod tests {
         let (g, mut tl) = setup(TlKind::Wbfs);
         tl.on_detection(5, secs(10.0), true);
         tl.on_detection(5, secs(11.0), false);
-        assert!(tl.active_set(&g, secs(60.0)).len() > 5);
+        assert!(active(&mut tl, &g, secs(60.0)).len() > 5);
         tl.on_detection(9, secs(61.0), true);
-        let act = tl.active_set(&g, secs(61.5));
+        let act = active(&mut tl, &g, secs(61.5));
         assert!(act.contains(&9));
         assert!(act.len() <= 3);
     }
@@ -268,9 +398,22 @@ mod tests {
         tl.on_detection(5, secs(20.0), true);
         tl.on_detection(7, secs(10.0), true); // older capture
         assert_eq!(tl.last_seen().unwrap().1, secs(20.0));
-        // A stale negative cannot flip visibility either.
+    }
+
+    #[test]
+    fn stale_negative_cannot_flip_visibility() {
+        let g = generate(&WorkloadConfig::default(), 5);
+        let cams = place_cameras(&g, 1000, 0, 40.0);
+        let mut tl = SpotlightTracker::new(
+            SpotlightPolicy::Bfs,
+            4.0,
+            84.5,
+            40.0,
+            &cams,
+        );
+        tl.on_detection(5, secs(20.0), true);
         tl.on_detection(5, secs(15.0), false);
-        assert!(tl.visible);
+        assert!(tl.visible());
     }
 
     #[test]
@@ -287,8 +430,8 @@ mod tests {
         // Average over several blind-spot durations.
         let (mut nb, mut nw) = (0usize, 0usize);
         for s in [30.0, 60.0, 90.0, 120.0] {
-            nb += tl_b.active_set(&g, secs(s)).len();
-            nw += tl_w.active_set(&g, secs(s)).len();
+            nb += active(&mut tl_b, &g, secs(s)).len();
+            nw += active(&mut tl_w, &g, secs(s)).len();
         }
         assert!(
             nw <= nb,
@@ -297,10 +440,15 @@ mod tests {
     }
 
     #[test]
-    fn base_keeps_everything_active() {
+    fn base_keeps_everything_active_without_panicking() {
+        // TlKind::Base is a total stock block now: detections feed it
+        // and every evaluation returns the full network — there is no
+        // unreachable arm left to hit.
         let (g, mut tl) = setup(TlKind::Base);
         tl.on_detection(5, secs(10.0), true);
-        assert_eq!(tl.active_set(&g, secs(20.0)).len(), 1000);
+        tl.on_detection(5, secs(11.0), false);
+        assert_eq!(active(&mut tl, &g, secs(20.0)).len(), 1000);
+        assert!(tl.last_seen().is_some());
     }
 
     #[test]
@@ -308,7 +456,7 @@ mod tests {
         let (g, mut tl) = setup(TlKind::Probabilistic);
         tl.on_detection(0, secs(10.0), true);
         tl.on_detection(0, secs(11.0), false);
-        let act = tl.active_set(&g, secs(41.0));
+        let act = active(&mut tl, &g, secs(41.0));
         assert!(!act.is_empty());
         assert!(act.len() < 1000);
     }

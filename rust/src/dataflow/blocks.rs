@@ -1,0 +1,365 @@
+//! The user-definable block (UDF) traits of the §2.2 programming model.
+//!
+//! A tracking application is the composition of five user-supplied
+//! blocks over the fixed FC → VA → CR → {TL, QF, UV} dataflow. Each
+//! block is a trait here; the platform (the engines in
+//! [`crate::coordinator`] and [`crate::service`]) owns grouping,
+//! batching, dropping, routing and budget adaptation, and calls the
+//! blocks only through these traits — like MapReduce fixes the dataflow
+//! and the user fills in Map/Reduce.
+//!
+//! Design constraints, inherited from the hot-path work the engines sit
+//! on:
+//!
+//! * **Object-safe**: engines hold `Box<dyn Block>` so an application
+//!   compiled outside this crate plugs in without generics leaking
+//!   through the engine types.
+//! * **`&mut self` step methods over caller buffers**: blocks write
+//!   into the engine's scratch (`&mut [Event]`, `&mut Vec<usize>`),
+//!   never allocate per event, and hold their own reusable state.
+//! * **Batch-hoisted dispatch**: the VA/CR step methods take a whole
+//!   batch slice, so trait-object indirection costs one virtual call
+//!   per *batch*, not per event — the zero-allocation dispatch loop of
+//!   the engines is untouched by the indirection.
+//!
+//! The stock implementations (Table 1's building blocks) live in
+//! [`crate::apps`]; [`crate::apps::AppBuilder`] composes blocks into an
+//! [`crate::apps::AppDefinition`] that every engine accepts.
+
+use std::sync::Arc;
+
+use crate::config::{SemanticsConfig, WorkloadConfig};
+use crate::dataflow::{Event, QueryId};
+use crate::roadnet::{Camera, Graph};
+use crate::util::{Micros, Rng};
+
+/// Typed handle to an AOT-exported model artifact. Replaces the old
+/// stringly `va_variant`/`cr_variant` app fields: a block names its
+/// model with a variant that is checked at *build* time instead of a
+/// free-form `&str` that only fails (or silently mismatches) when the
+/// live engine tries to load the artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelVariant {
+    /// The HoG/YOLO-class detector network.
+    Va,
+    /// The small re-identification network.
+    CrSmall,
+    /// The large (~1.63x slower) re-identification network.
+    CrLarge,
+    /// The query-fusion embedding network.
+    Qf,
+}
+
+impl ModelVariant {
+    /// All known variants, in manifest order.
+    pub const ALL: [ModelVariant; 4] = [
+        ModelVariant::Va,
+        ModelVariant::CrSmall,
+        ModelVariant::CrLarge,
+        ModelVariant::Qf,
+    ];
+
+    /// Name of the artifact in `artifacts/manifest.json`.
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            ModelVariant::Va => "va",
+            ModelVariant::CrSmall => "cr_small",
+            ModelVariant::CrLarge => "cr_large",
+            ModelVariant::Qf => "qf",
+        }
+    }
+
+    /// Resolve an artifact name; errors name the valid set so a typo
+    /// fails loudly at composition time rather than as a missing-file
+    /// lookup deep inside the PJRT runtime.
+    pub fn from_artifact(name: &str) -> Result<Self, String> {
+        Self::ALL
+            .into_iter()
+            .find(|v| v.artifact_name() == name)
+            .ok_or_else(|| {
+                format!(
+                    "unknown model variant {name:?}; known variants: {}",
+                    Self::ALL
+                        .into_iter()
+                        .map(|v| v.artifact_name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+/// Per-query ground-truth access for the simulated VA path. The DES
+/// engines expose their (per-query) [`crate::sim::GroundTruth`] through
+/// this so a block never needs to know how queries map to walks.
+pub trait TruthSource {
+    /// Index of the FOV-transit interval containing `captured` at
+    /// `camera` for `query`, or `None` when the entity was not visible
+    /// (or the query is unknown/finished).
+    fn interval_index(
+        &self,
+        query: QueryId,
+        camera: usize,
+        captured: Micros,
+    ) -> Option<usize>;
+}
+
+/// Platform context handed to VA/CR blocks on the simulated (DES) path:
+/// the engine's deterministic RNG, ground-truth access and detection
+/// semantics. Blocks draw from `rng` in event order, which keeps runs
+/// bit-reproducible per seed.
+pub struct SimCtx<'a> {
+    pub rng: &'a mut Rng,
+    pub truth: &'a dyn TruthSource,
+    pub sem: &'a SemanticsConfig,
+    /// Experiment seed, for blocks that hash per-(query, camera,
+    /// transit) coins (e.g. whole-transit miss modelling).
+    pub seed: u64,
+}
+
+/// Platform parameters for the live scoring path.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreParams {
+    /// Detection threshold the engine is running this block at.
+    pub threshold: f32,
+}
+
+/// FC — Filter Controls (§2.2.1): the per-camera ingress gate. The
+/// platform tells the block whether TL currently wants the camera
+/// active; the block decides whether this frame enters the dataflow
+/// (frame-rate control, duty-cycling, adaptive sampling).
+pub trait FilterControl: Send {
+    /// Admit `camera`'s frame `frame_no` (captured at `now`) for
+    /// `query`? `active` is the TL spotlight's activation flag.
+    fn admit(
+        &mut self,
+        query: QueryId,
+        camera: usize,
+        frame_no: u64,
+        now: Micros,
+        active: bool,
+    ) -> bool;
+
+    /// Build-time workload tuning (e.g. a vehicle-tracking FC raises
+    /// the entity/expansion speeds). Called by
+    /// [`crate::apps::AppDefinition::apply`], never on the hot path.
+    fn tune_workload(
+        &self,
+        _workload: &mut WorkloadConfig,
+        _tl_peak_speed_mps: &mut f64,
+    ) {
+    }
+
+    /// A query finished (completed/cancelled): drop any per-query
+    /// state. The multi-query engines call this so stateful FCs (e.g.
+    /// per-(query, camera) warm-up windows) cannot leak across a
+    /// long-running service's query churn.
+    fn forget_query(&mut self, _query: QueryId) {}
+
+    /// Short descriptor for reports (Table-1 style).
+    fn label(&self) -> &'static str {
+        "fc"
+    }
+}
+
+/// VA — Video Analytics (§2.2.2): per-frame detection and feature
+/// extraction. One trait serves both execution paths:
+///
+/// * [`VideoAnalytics::step_sim`] — the DES engines call it once per
+///   executed batch with the engine's [`SimCtx`]; the block turns
+///   `Frame` payloads into `Candidate`s.
+/// * [`VideoAnalytics::apply_scores`] — the live engines run the
+///   block's [`ModelVariant`] through the model backend and hand the
+///   scores back; the block owns the payload transformation.
+pub trait VideoAnalytics: Send {
+    /// Simulated step over one executed batch (in arrival order).
+    fn step_sim(&mut self, events: &mut [Event], ctx: &mut SimCtx<'_>);
+
+    /// Live step: `scores[i]` is the backend's score for `events[i]`.
+    fn apply_scores(
+        &mut self,
+        events: &mut [Event],
+        scores: &[f32],
+        params: &ScoreParams,
+    );
+
+    /// The AOT model this block executes on the live path.
+    fn variant(&self) -> ModelVariant {
+        ModelVariant::Va
+    }
+
+    /// Service-cost multiplier relative to App 1's VA profile; scales
+    /// the ξ(b) model at composition time.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+
+    fn label(&self) -> &'static str {
+        "va"
+    }
+}
+
+/// CR — Contention Resolution (§2.2.3): cross-camera re-identification
+/// of VA candidates against the query identity. Same two-path shape as
+/// [`VideoAnalytics`].
+pub trait ContentionResolver: Send {
+    fn step_sim(&mut self, events: &mut [Event], ctx: &mut SimCtx<'_>);
+
+    fn apply_scores(
+        &mut self,
+        events: &mut [Event],
+        scores: &[f32],
+        params: &ScoreParams,
+    );
+
+    fn variant(&self) -> ModelVariant {
+        ModelVariant::CrSmall
+    }
+
+    /// Service-cost multiplier relative to App 1's CR profile.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+
+    fn label(&self) -> &'static str {
+        "cr"
+    }
+}
+
+/// TL — Tracking Logic (§2.2.4): the spotlight policy. Consumes CR
+/// detections (source-timestamped), maintains sighting state, and
+/// computes the active camera set over the CSR road network — writing
+/// into the engine's reusable buffer so per-tick evaluation allocates
+/// nothing in steady state.
+///
+/// Stock implementations: [`crate::coordinator::tl::SpotlightTracker`]
+/// (BFS / WBFS / speed-adaptive / probabilistic expansion) and
+/// [`crate::coordinator::tl::KeepAllActive`] (the contemporary
+/// everything-on baseline — a total implementation, not a panic path).
+pub trait TrackingLogic: Send {
+    /// Feed a CR verdict for the frame captured by `camera` at
+    /// `captured` (source clock, so late events cannot corrupt the
+    /// sighting order).
+    fn on_detection(&mut self, camera: usize, captured: Micros, detected: bool);
+
+    /// Camera ids that should be active at `now`, written into `out`
+    /// (sorted, deduplicated).
+    fn active_set_into(
+        &mut self,
+        g: &Graph,
+        now: Micros,
+        out: &mut Vec<usize>,
+    );
+
+    /// Last positive sighting (vertex, capture time), if tracked.
+    fn last_seen(&self) -> Option<(usize, Micros)> {
+        None
+    }
+}
+
+/// QF — Query Fusion (§2.2.5): refine the query embedding from
+/// high-confidence detections. Must be side-effect free with respect to
+/// the dataflow metrics: the engines count refinements but the tuning
+/// triangle never consults QF state.
+pub trait QueryFusion: Send {
+    /// Observe a sink-side detection event; return `true` when the
+    /// query embedding was refined by it.
+    fn on_detection(&mut self, _ev: &Event) -> bool {
+        false
+    }
+
+    /// The current fused embedding, if this block maintains one.
+    fn embedding(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Whether this block refines embeddings at all (Table-1 QF column).
+    fn fuses(&self) -> bool {
+        false
+    }
+
+    fn label(&self) -> &'static str {
+        "qf"
+    }
+}
+
+/// Either analytics block, for engines whose executor workers are
+/// stage-generic (the live worker loop is one function serving VA and
+/// CR): dispatch stays one virtual call per batch.
+pub enum AnalyticsBlock {
+    Va(Box<dyn VideoAnalytics>),
+    Cr(Box<dyn ContentionResolver>),
+}
+
+impl AnalyticsBlock {
+    pub fn apply_scores(
+        &mut self,
+        events: &mut [Event],
+        scores: &[f32],
+        params: &ScoreParams,
+    ) {
+        match self {
+            AnalyticsBlock::Va(b) => b.apply_scores(events, scores, params),
+            AnalyticsBlock::Cr(b) => b.apply_scores(events, scores, params),
+        }
+    }
+
+    pub fn variant(&self) -> ModelVariant {
+        match self {
+            AnalyticsBlock::Va(b) => b.variant(),
+            AnalyticsBlock::Cr(b) => b.variant(),
+        }
+    }
+}
+
+/// Environment the platform supplies when instantiating a per-query
+/// [`TrackingLogic`]: the configured expansion speed and road/FOV
+/// geometry plus the camera placement.
+pub struct TlEnv<'a> {
+    /// Configured peak entity speed `es` (m/s) — the expansion rate.
+    pub peak_speed_mps: f64,
+    /// Mean road length (the fixed length TL-BFS assumes).
+    pub mean_road_m: f64,
+    /// Camera FOV radius (spotlight slack).
+    pub fov_m: f64,
+    pub cameras: &'a [Camera],
+}
+
+/// Factory minting a fresh [`TrackingLogic`] per query — every tracking
+/// query owns its own spotlight state machine.
+pub type TlFactory =
+    Arc<dyn Fn(&TlEnv<'_>) -> Box<dyn TrackingLogic> + Send + Sync>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_variant_round_trips() {
+        for v in ModelVariant::ALL {
+            assert_eq!(
+                ModelVariant::from_artifact(v.artifact_name()).unwrap(),
+                v
+            );
+        }
+    }
+
+    #[test]
+    fn model_variant_typo_is_a_clear_error() {
+        let err = ModelVariant::from_artifact("cr_sma11").unwrap_err();
+        assert!(err.contains("cr_sma11"), "{err}");
+        assert!(err.contains("cr_small"), "lists valid names: {err}");
+        assert!(err.contains("cr_large"), "lists valid names: {err}");
+    }
+
+    #[test]
+    fn traits_are_object_safe() {
+        // Compile-time proof: every block trait can be boxed.
+        fn _fc(_: Box<dyn FilterControl>) {}
+        fn _va(_: Box<dyn VideoAnalytics>) {}
+        fn _cr(_: Box<dyn ContentionResolver>) {}
+        fn _tl(_: Box<dyn TrackingLogic>) {}
+        fn _qf(_: Box<dyn QueryFusion>) {}
+        fn _truth(_: &dyn TruthSource) {}
+    }
+}

@@ -3,14 +3,36 @@
 //! A tracking application is a fixed dataflow of six module types —
 //! Filter Controls (FC), Video Analytics (VA), Contention Resolution
 //! (CR), Tracking Logic (TL), Query Fusion (QF) and User Visualization
-//! (UV) — for which the user supplies functional logic; the platform
-//! owns grouping, batching, dropping and routing (like MapReduce fixes
-//! the dataflow and the user fills in Map/Reduce).
+//! (UV) — for which the **user supplies the functional logic** and the
+//! platform owns grouping, batching, dropping and routing (like
+//! MapReduce fixes the dataflow and the user fills in Map/Reduce).
+//!
+//! That contract is expressed as traits in [`blocks`]: an application
+//! implements (or picks stock implementations of) [`FilterControl`],
+//! [`VideoAnalytics`], [`ContentionResolver`], [`TrackingLogic`] and
+//! [`QueryFusion`], composes them with
+//! [`crate::apps::AppBuilder`] into an
+//! [`crate::apps::AppDefinition`], and every execution engine — the
+//! single-query DES ([`crate::coordinator::des`]), the multi-query DES
+//! ([`crate::service::engine`]) and the live engines
+//! ([`crate::coordinator::live`], [`crate::service::front`]) — drives
+//! the blocks exclusively through those traits. No engine branches on
+//! *which* application is running.
+//!
+//! The rest of this module is the data plane the blocks see:
+//! [`Event`]s (key-value pairs with the §4 tuning header), the
+//! [`Stage`] pipeline and the key [`Partitioner`].
 
+mod blocks;
 mod event;
 mod partition;
 mod stage;
 
+pub use blocks::{
+    AnalyticsBlock, ContentionResolver, FilterControl, ModelVariant,
+    QueryFusion, ScoreParams, SimCtx, TlEnv, TlFactory, TrackingLogic,
+    TruthSource, VideoAnalytics,
+};
 pub use event::{
     Event, EventId, Header, Payload, QueryId, SINGLE_QUERY,
 };

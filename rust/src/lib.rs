@@ -58,6 +58,49 @@
 //! (Poisson query arrivals over the road network; used by `harness mq`
 //! and the `multi_query` bench/example) and [`service::TrackingService`]
 //! (runtime submit/cancel over shared wall-clock workers).
+//!
+//! ## Writing your own tracking app
+//!
+//! The §2.2 programming model is a set of traits in [`dataflow`]:
+//! [`dataflow::FilterControl`], [`dataflow::VideoAnalytics`],
+//! [`dataflow::ContentionResolver`], [`dataflow::TrackingLogic`] and
+//! [`dataflow::QueryFusion`]. You implement (or pick stock versions
+//! of) the blocks, compose them with [`apps::AppBuilder`], and hand
+//! the resulting [`apps::AppDefinition`] to any engine — the platform
+//! owns batching, dropping, routing and budget adaptation; your code
+//! is never on an engine-specific path. App 5
+//! ([`apps::app5`]) is the worked example: a DeepScale-style
+//! adaptive frame-rate FC over a vehicle re-id CR, built entirely from
+//! the public API:
+//!
+//! ```no_run
+//! use anveshak::apps::{AdaptiveRateFc, AppBuilder, SimDetector, SimReid};
+//! use anveshak::config::{ExperimentConfig, TlKind};
+//! use anveshak::coordinator::des;
+//! use anveshak::dataflow::ModelVariant;
+//!
+//! // Compose the app: full frame rate while reacquiring the vehicle,
+//! // 1-in-4 frames in steady state, cheap small-input detector,
+//! // vehicle re-id CR, speed-adaptive spotlight.
+//! let app = AppBuilder::new("my-adaptive-vehicle")
+//!     .filter_control(AdaptiveRateFc::new(4, 3))
+//!     .video_analytics(SimDetector::new(ModelVariant::Va).with_cost(0.6))
+//!     .contention_resolver(SimReid::vehicle())
+//!     .tracking_logic(TlKind::WbfsSpeed)
+//!     .build();
+//!
+//! // The platform config stays yours: cameras, batching, drops, γ.
+//! let mut cfg = ExperimentConfig::default();
+//! app.apply(&mut cfg, true); // cost model + workload tuning + TL
+//! let report = des::run_app(cfg, &app);
+//! println!("detections: {}", report.detections);
+//! ```
+//!
+//! Custom blocks are ordinary trait impls — see
+//! `examples/custom_app.rs`, which defines its own FC and TL outside
+//! the crate and runs them through the same engines. Model handles are
+//! typed ([`dataflow::ModelVariant`]), so a composition that names a
+//! nonexistent AOT artifact fails at build time with a clear error.
 
 pub mod apps;
 pub mod config;

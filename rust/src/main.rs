@@ -104,21 +104,18 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     if let Some(s) = flag_value(args, "--secs") {
         cfg.duration_secs = s.parse()?;
     }
-    let spec = anveshak::apps::spec(cfg.app);
+    // The config names a stock composition; the engine only sees its
+    // AppDefinition (custom apps pass their own to LiveEngine::new).
+    let app = anveshak::apps::resolve(&cfg);
     println!(
         "serving {} for {:.0}s: {} cameras, VA={} CR={} (real PJRT models)",
-        spec.name,
+        app.name,
         cfg.duration_secs,
         cfg.num_cameras,
-        spec.va_variant,
-        spec.cr_variant
+        app.va_variant.artifact_name(),
+        app.cr_variant.artifact_name()
     );
-    let eng = LiveEngine::new(
-        cfg,
-        default_dir(),
-        spec.va_variant,
-        spec.cr_variant,
-    );
+    let eng = LiveEngine::new(cfg, default_dir(), app);
     let r = eng.run()?;
     println!(
         "wall {:.1}s | throughput {:.1} fps | generated {} on-time {} delayed {} dropped {}",

@@ -18,10 +18,14 @@
 //! TL (de)activation commands apply at evaluation time rather than
 //! after a control-message latency.
 
+use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig, MultiQueryConfig};
-use crate::coordinator::tl::TrackingLogic;
 use crate::coordinator::topology::Topology;
-use crate::dataflow::{Event, Payload, QueryId, Stage};
+use crate::dataflow::{
+    ContentionResolver, Event, FilterControl, Payload, QueryFusion,
+    QueryId, SimCtx, Stage, TlEnv, TlFactory, TrackingLogic, TruthSource,
+    VideoAnalytics,
+};
 use crate::engine::EventCore;
 use crate::metrics::{QueryLedgers, Summary};
 use crate::roadnet::{generate, place_cameras, Camera, Graph};
@@ -101,10 +105,28 @@ struct QueryCtx {
     /// starting here).
     t0: Micros,
     gt: GroundTruth,
-    tl: TrackingLogic,
+    tl: Box<dyn TrackingLogic>,
     active_cams: Vec<bool>,
     detections: u64,
     peak_active: usize,
+}
+
+/// Per-query ground-truth view for the VA block: each query's walk
+/// runs on a clock starting at its activation time.
+struct MqTruth<'a> {
+    ctx: &'a FastMap<QueryId, QueryCtx>,
+}
+
+impl TruthSource for MqTruth<'_> {
+    fn interval_index(
+        &self,
+        query: QueryId,
+        camera: usize,
+        captured: Micros,
+    ) -> Option<usize> {
+        let c = self.ctx.get(&query)?;
+        c.gt.interval_index(camera, captured - c.t0)
+    }
 }
 
 /// Result of a multi-query DES run.
@@ -120,6 +142,9 @@ pub struct MultiQueryResult {
     pub rejected: usize,
     /// Queries that were wait-listed at least once.
     pub queued: usize,
+    /// Query-embedding refinements performed by the app's QF block
+    /// across all queries (0 unless the composition enables fusion).
+    pub fusion_updates: u64,
     /// Total simulation events dispatched by the shared
     /// [`EventCore`] — the numerator of the events/sec throughput
     /// metric reported by `benches/hotpath.rs`.
@@ -140,6 +165,14 @@ pub struct MultiQueryDes {
     graph: Graph,
     cams: Vec<Camera>,
     net: NetModel,
+    /// Application blocks (UDFs): shared FC/VA/CR/QF instances plus a
+    /// TL factory minting one spotlight per query. The engine only
+    /// talks to them through the dataflow traits.
+    fc: Box<dyn FilterControl>,
+    va: Box<dyn VideoAnalytics>,
+    cr: Box<dyn ContentionResolver>,
+    qf: Box<dyn QueryFusion>,
+    tl_factory: TlFactory,
     registry: QueryRegistry,
     admission: AdmissionController,
     /// Active query contexts (insertion-ordered id list for iteration
@@ -165,19 +198,35 @@ pub struct MultiQueryDes {
         FastMap<u64, (usize, Micros, u64, Micros, QueryId, usize)>,
     peak_concurrent: usize,
     ever_queued: u64,
+    fusion_updates: u64,
     m_max: usize,
     rng: Rng,
     now: Micros,
-    /// Reusable hot-path buffers (drop filtering, outgoing
-    /// transmissions, per-query spotlight refresh) — allocations
-    /// circulate instead of being re-made per batch/tick.
+    /// Reusable hot-path buffers (drop filtering, staged post-exec
+    /// events + their (u, π) meta, outgoing transmissions, per-query
+    /// spotlight refresh) — allocations circulate instead of being
+    /// re-made per batch/tick.
     kept_scratch: Vec<QueuedEvent<Event>>,
+    staged_scratch: Vec<Event>,
+    meta_scratch: Vec<(Micros, Micros, usize)>,
     outgoing_scratch: Vec<Event>,
     active_scratch: Vec<usize>,
 }
 
 impl MultiQueryDes {
+    /// Build the engine for the stock application the config describes
+    /// (`cfg.app` composition, `cfg.tl` spotlight).
     pub fn new(cfg: ExperimentConfig, mq: MultiQueryConfig) -> Self {
+        let app = crate::apps::resolve(&cfg);
+        Self::with_app(cfg, mq, &app)
+    }
+
+    /// Build the engine for an arbitrary [`AppDefinition`].
+    pub fn with_app(
+        cfg: ExperimentConfig,
+        mq: MultiQueryConfig,
+        app: &AppDefinition,
+    ) -> Self {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
             &graph,
@@ -264,6 +313,11 @@ impl MultiQueryDes {
             graph,
             cams,
             net,
+            fc: app.make_fc(),
+            va: app.make_va(),
+            cr: app.make_cr(),
+            qf: app.make_qf(),
+            tl_factory: app.tl_factory(),
             registry: QueryRegistry::new(),
             admission: AdmissionController::new(policy),
             ctx: FastMap::default(),
@@ -282,10 +336,13 @@ impl MultiQueryDes {
             sink_batches: FastMap::default(),
             peak_concurrent: 0,
             ever_queued: 0,
+            fusion_updates: 0,
             m_max: m_max.max(1),
             rng: rng(seed, 0x3DE5),
             now: 0,
             kept_scratch: Vec::new(),
+            staged_scratch: Vec::new(),
+            meta_scratch: Vec::new(),
             outgoing_scratch: Vec::new(),
             active_scratch: Vec::new(),
         }
@@ -447,15 +504,15 @@ impl MultiQueryDes {
             lifetime + 60 * SEC,
             200_000,
         );
-        let mut tl = TrackingLogic::new(
-            self.cfg.tl,
-            self.cfg.tl_peak_speed_mps,
-            self.cfg.workload.mean_road_m,
-            self.cfg.workload.fov_m,
-            &self.cams,
-        );
+        let mut tl = (self.tl_factory)(&TlEnv {
+            peak_speed_mps: self.cfg.tl_peak_speed_mps,
+            mean_road_m: self.cfg.workload.mean_road_m,
+            fov_m: self.cfg.workload.fov_m,
+            cameras: &self.cams,
+        });
         tl.on_detection(start_cam, self.now, true);
-        let active_set = tl.active_set(&self.graph, self.now);
+        let mut active_set = Vec::new();
+        tl.active_set_into(&self.graph, self.now, &mut active_set);
         let mut active_cams = vec![false; self.cfg.num_cameras];
         for cam in &active_set {
             active_cams[*cam] = true;
@@ -516,6 +573,8 @@ impl MultiQueryDes {
         for cam in 0..self.fc_budget.len() {
             self.fc_budget[cam].remove(&query);
         }
+        // Drop the FC block's per-query state with the query.
+        self.fc.forget_query(query);
         // Capacity freed: promote wait-listed queries that now fit.
         while let Some(next) = self.registry.next_pending() {
             let decision = {
@@ -556,15 +615,22 @@ impl MultiQueryDes {
         // the loop body never mutates `self.active`.
         for qi in 0..self.active.len() {
             let q = self.active[qi];
-            let (present, wants) = match self.ctx.get(&q) {
-                Some(ctx) if ctx.active_cams[cam] => {
-                    (ctx.gt.visible(cam, t - ctx.t0), true)
-                }
-                _ => (false, false),
-            };
-            if !wants {
+            // FC user-logic: the block decides whether this (query,
+            // camera) frame enters the dataflow, given the query's
+            // spotlight activation flag.
+            let wants = self
+                .ctx
+                .get(&q)
+                .map(|ctx| ctx.active_cams[cam])
+                .unwrap_or(false);
+            if !self.fc.admit(q, cam, frame_no, t, wants) {
                 continue;
             }
+            let present = self
+                .ctx
+                .get(&q)
+                .map(|ctx| ctx.gt.visible(cam, t - ctx.t0))
+                .unwrap_or(false);
             let id = self.next_event_id;
             self.next_event_id += 1;
             let mut ev = Event::frame(id, cam, frame_no, t, present);
@@ -818,10 +884,14 @@ impl MultiQueryDes {
         let batch_seq = self.next_batch_seq;
         self.next_batch_seq += 1;
 
-        // Survivors land in engine-owned scratch; the emptied batch
-        // vec is recycled into the batcher (no per-batch allocation).
-        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
-        outgoing.clear();
+        // First pass: per-event bookkeeping (per-query budget 3-tuples,
+        // header accumulators) into engine-owned scratch; the emptied
+        // batch vec is recycled into the batcher (no per-batch
+        // allocation).
+        let mut staged = std::mem::take(&mut self.staged_scratch);
+        let mut meta = std::mem::take(&mut self.meta_scratch);
+        staged.clear();
+        meta.clear();
         for qe in batch.drain(..) {
             let mut ev = qe.item;
             let q = ev.header.query;
@@ -846,12 +916,38 @@ impl MultiQueryDes {
             }
             ev.header.sum_exec += xi_est;
             ev.header.sum_queue += qdur;
+            staged.push(ev);
+            meta.push((u, pi, slot));
+        }
+        self.tasks[task].batcher.recycle(batch);
 
-            self.apply_semantics(stage, &mut ev);
+        // Module user-logic: one virtual call for the whole cross-query
+        // batch (events stay in arrival order, so the engine RNG stream
+        // is identical to per-event dispatch).
+        {
+            let truth = MqTruth { ctx: &self.ctx };
+            let mut sim = SimCtx {
+                rng: &mut self.rng,
+                truth: &truth,
+                sem: &self.cfg.semantics,
+                seed: self.cfg.seed,
+            };
+            match stage {
+                Stage::Va => self.va.step_sim(&mut staged, &mut sim),
+                Stage::Cr => self.cr.step_sim(&mut staged, &mut sim),
+                _ => {}
+            }
+        }
 
-            // Drop point 3 against this query's per-downstream budget.
+        // Drop point 3 against each event's per-query downstream
+        // budget; survivors move to the outgoing scratch.
+        let mut outgoing = std::mem::take(&mut self.outgoing_scratch);
+        outgoing.clear();
+        for (i, ev) in staged.drain(..).enumerate() {
+            let (u, pi, slot) = meta[i];
             let exempt = ev.header.avoid_drop || ev.header.probe;
             if self.cfg.drops_enabled {
+                let q = ev.header.query;
                 let budget = self.task_budget_for(task, q, slot);
                 if budget < BUDGET_INF
                     && drop_at_transmit(exempt, u, pi, budget)
@@ -863,7 +959,8 @@ impl MultiQueryDes {
             }
             outgoing.push(ev);
         }
-        self.tasks[task].batcher.recycle(batch);
+        self.staged_scratch = staged;
+        self.meta_scratch = meta;
 
         let out_n = outgoing.len();
         let src_node = self.topo.node_of(task);
@@ -919,77 +1016,6 @@ impl MultiQueryDes {
         self.outgoing_scratch = outgoing;
 
         self.try_form_batch(task);
-    }
-
-    /// VA/CR user-logic over per-query ground truth.
-    fn apply_semantics(&mut self, stage: Stage, ev: &mut Event) {
-        let sem = &self.cfg.semantics;
-        let q = ev.header.query;
-        match stage {
-            Stage::Va => {
-                if let Payload::Frame { entity_present } = ev.payload {
-                    let transit_missed = entity_present
-                        && self
-                            .ctx
-                            .get(&q)
-                            .and_then(|ctx| {
-                                ctx.gt.interval_index(
-                                    ev.header.camera,
-                                    ev.header.captured - ctx.t0,
-                                )
-                            })
-                            .map(|idx| {
-                                let mut h = self.cfg.seed
-                                    ^ (q as u64).wrapping_mul(0xB5297A4D)
-                                    ^ (ev.header.camera as u64)
-                                        .wrapping_mul(0x9E37_79B9)
-                                    ^ (idx as u64)
-                                        .wrapping_mul(0xC2B2_AE35);
-                                h ^= h >> 33;
-                                h = h.wrapping_mul(
-                                    0xFF51_AFD7_ED55_8CCD,
-                                );
-                                h ^= h >> 33;
-                                (h as f64 / u64::MAX as f64)
-                                    < sem.transit_miss
-                            })
-                            .unwrap_or(false);
-                    let flagged = if entity_present && !transit_missed {
-                        self.rng.bool(sem.va_tp)
-                    } else if entity_present {
-                        false
-                    } else {
-                        self.rng.bool(sem.va_fp)
-                    };
-                    ev.payload = Payload::Candidate {
-                        entity_present,
-                        score: if flagged { 0.9 } else { 0.1 },
-                    };
-                }
-            }
-            Stage::Cr => {
-                if let Payload::Candidate {
-                    entity_present,
-                    score,
-                } = ev.payload
-                {
-                    let candidate = score > 0.5;
-                    let detected = if entity_present && candidate {
-                        self.rng.bool(sem.cr_tp)
-                    } else {
-                        candidate && self.rng.bool(sem.cr_fp)
-                    };
-                    if detected {
-                        ev.header.avoid_drop = true;
-                    }
-                    ev.payload = Payload::Detection {
-                        detected,
-                        confidence: if detected { 0.95 } else { 0.05 },
-                    };
-                }
-            }
-            _ => {}
-        }
     }
 
     // ---- drops + signals -------------------------------------------------
@@ -1092,6 +1118,11 @@ impl MultiQueryDes {
         if detected {
             if let Some(ctx) = self.ctx.get_mut(&q) {
                 ctx.detections += 1;
+            }
+            if self.qf.on_detection(&ev) {
+                // QF user-logic refines the query embedding;
+                // metric-neutral by contract.
+                self.fusion_updates += 1;
             }
         }
         self.ledgers
@@ -1212,17 +1243,29 @@ impl MultiQueryDes {
             peak_concurrent: self.peak_concurrent,
             rejected,
             queued: self.ever_queued as usize,
+            fusion_updates: self.fusion_updates,
             core_events: self.core.dispatched(),
         }
     }
 }
 
-/// Convenience: run a multi-query experiment end to end.
+/// Convenience: run a multi-query experiment end to end with the stock
+/// application the config describes.
 pub fn run(
     cfg: ExperimentConfig,
     mq: MultiQueryConfig,
 ) -> MultiQueryResult {
     MultiQueryDes::new(cfg, mq).run()
+}
+
+/// Run a user-composed application in multi-query mode — the public
+/// §2.2 entry point for the service layer.
+pub fn run_app(
+    cfg: ExperimentConfig,
+    mq: MultiQueryConfig,
+    app: &AppDefinition,
+) -> MultiQueryResult {
+    MultiQueryDes::with_app(cfg, mq, app).run()
 }
 
 #[cfg(test)]

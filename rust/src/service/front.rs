@@ -24,7 +24,7 @@
 //! signals) is exercised in the engines; the front keeps the static
 //! γ-bound deadline.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -32,10 +32,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::apps::AppDefinition;
 use crate::config::ExperimentConfig;
-use crate::coordinator::tl::TrackingLogic;
 use crate::dataflow::{
-    Event, Header, Partitioner, Payload, QueryId, Stage,
+    AnalyticsBlock, Event, FilterControl, Header, Partitioner, Payload,
+    QueryFusion, QueryId, ScoreParams, Stage, TlEnv, TlFactory,
+    TrackingLogic,
 };
 use crate::metrics::{QueryLedgers, Summary};
 use crate::roadnet::{generate, place_cameras, Camera, Graph};
@@ -169,7 +171,7 @@ struct LiveCtx {
     t0: Micros,
     end: Micros,
     gt: Arc<GroundTruth>,
-    tl: TrackingLogic,
+    tl: Box<dyn TrackingLogic>,
     active_cams: Vec<bool>,
     detections: u64,
     peak_active: usize,
@@ -226,6 +228,10 @@ struct Inner {
     graph: Graph,
     cams: Vec<Camera>,
     admission: AdmissionController,
+    /// Mints one TL block per query (the app's factory).
+    tl_factory: TlFactory,
+    /// Query-embedding refinements by the app's QF block (sink-side).
+    fusion_updates: AtomicU64,
     state: Mutex<State>,
     start: Instant,
     stopping: AtomicBool,
@@ -294,15 +300,15 @@ fn build_ctx(
         lifetime + 10 * SEC,
         100_000,
     );
-    let mut tl = TrackingLogic::new(
-        inner.cfg.tl,
-        inner.cfg.tl_peak_speed_mps,
-        inner.cfg.workload.mean_road_m,
-        inner.cfg.workload.fov_m,
-        &inner.cams,
-    );
+    let mut tl = (inner.tl_factory)(&TlEnv {
+        peak_speed_mps: inner.cfg.tl_peak_speed_mps,
+        mean_road_m: inner.cfg.workload.mean_road_m,
+        fov_m: inner.cfg.workload.fov_m,
+        cameras: &inner.cams,
+    });
     tl.on_detection(start_cam, now, true);
-    let active_set = tl.active_set(&inner.graph, now);
+    let mut active_set = Vec::new();
+    tl.active_set_into(&inner.graph, now, &mut active_set);
     let mut active_cams = vec![false; inner.cfg.num_cameras];
     for cam in &active_set {
         active_cams[*cam] = true;
@@ -381,6 +387,8 @@ pub struct ServiceReport {
     pub queries: Vec<QueryReport>,
     pub aggregate: Summary,
     pub peak_concurrent: usize,
+    /// Query-embedding refinements by the app's QF block.
+    pub fusion_updates: u64,
     pub wall_secs: f64,
 }
 
@@ -402,13 +410,28 @@ pub struct TrackingService {
 }
 
 impl TrackingService {
-    /// Start the shared workers and the feed loop; returns immediately.
-    /// `cfg` describes the camera network and worker counts; queries
-    /// are then submitted at runtime.
+    /// Start the service for the stock application the config
+    /// describes (`cfg.app` composition, `cfg.tl` spotlight).
     pub fn start(
         cfg: ExperimentConfig,
         policy: AdmissionPolicy,
         backend: Arc<dyn ScoreBackend>,
+    ) -> Result<Self> {
+        let app = crate::apps::resolve(&cfg);
+        Self::start_with_app(cfg, policy, backend, &app)
+    }
+
+    /// Start the shared workers and the feed loop for an arbitrary
+    /// [`AppDefinition`]; returns immediately. `cfg` describes the
+    /// camera network and worker counts; queries are then submitted at
+    /// runtime. Each worker thread owns its own minted VA/CR block, the
+    /// feed loop owns the FC block, the sink owns QF, and the app's TL
+    /// factory builds one spotlight per admitted query.
+    pub fn start_with_app(
+        cfg: ExperimentConfig,
+        policy: AdmissionPolicy,
+        backend: Arc<dyn ScoreBackend>,
+        app: &AppDefinition,
     ) -> Result<Self> {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
@@ -419,6 +442,8 @@ impl TrackingService {
         );
         let inner = Arc::new(Inner {
             admission: AdmissionController::new(policy),
+            tl_factory: app.tl_factory(),
+            fusion_updates: AtomicU64::new(0),
             state: Mutex::new(State {
                 registry: QueryRegistry::new(),
                 ledgers: QueryLedgers::new(),
@@ -454,12 +479,21 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
+            let block = AnalyticsBlock::Cr(app.make_cr());
             cr_workers.push(std::thread::spawn(move || {
-                worker_loop(Stage::Cr, rx, inner_c, backend_c, delay, {
-                    move |ev| {
-                        let _ = out.send(Msg::Ev(ev));
-                    }
-                });
+                worker_loop(
+                    Stage::Cr,
+                    block,
+                    rx,
+                    inner_c,
+                    backend_c,
+                    delay,
+                    {
+                        move |ev| {
+                            let _ = out.send(Msg::Ev(ev));
+                        }
+                    },
+                );
             }));
         }
 
@@ -473,13 +507,22 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
+            let block = AnalyticsBlock::Va(app.make_va());
             va_workers.push(std::thread::spawn(move || {
-                worker_loop(Stage::Va, rx, inner_c, backend_c, delay, {
-                    move |ev| {
-                        let _ = crs[cr_part.route(ev.header.camera)]
-                            .send(Msg::Ev(ev));
-                    }
-                });
+                worker_loop(
+                    Stage::Va,
+                    block,
+                    rx,
+                    inner_c,
+                    backend_c,
+                    delay,
+                    {
+                        move |ev| {
+                            let _ = crs[cr_part.route(ev.header.camera)]
+                                .send(Msg::Ev(ev));
+                        }
+                    },
+                );
             }));
         }
 
@@ -487,20 +530,22 @@ impl TrackingService {
         worker_tx.extend(va_tx.iter().cloned());
         worker_tx.extend(cr_tx.iter().cloned());
 
-        // Sink thread: completion accounting + TL updates.
+        // Sink thread: completion accounting + TL updates + QF.
         let sink = {
             let inner_c = Arc::clone(&inner);
-            std::thread::spawn(move || sink_loop(inner_c, sink_rx))
+            let qf = app.make_qf();
+            std::thread::spawn(move || sink_loop(inner_c, sink_rx, qf))
         };
 
-        // Feed thread: frame generation, expiry, spotlight refresh,
-        // wait-queue promotion.
+        // Feed thread: FC gating, frame generation, expiry, spotlight
+        // refresh, wait-queue promotion.
         let feed = {
             let inner_c = Arc::clone(&inner);
             let vas = va_tx.clone();
             let all = worker_tx.clone();
+            let fc = app.make_fc();
             std::thread::spawn(move || {
-                feed_loop(inner_c, vas, va_part, all)
+                feed_loop(inner_c, fc, vas, va_part, all)
             })
         };
 
@@ -621,6 +666,8 @@ impl TrackingService {
             let _ = h.join();
         }
         let wall = self.inner.start.elapsed().as_secs_f64();
+        let fusion_updates =
+            self.inner.fusion_updates.load(Ordering::Relaxed);
         let st = self.inner.state.lock().unwrap();
         let mut queries = Vec::new();
         for rec in st.registry.records() {
@@ -645,16 +692,19 @@ impl TrackingService {
             queries,
             aggregate: st.ledgers.aggregate(),
             peak_concurrent: st.peak_concurrent,
+            fusion_updates,
             wall_secs: wall,
         }
     }
 }
 
-/// Frame generation: one event per (active query, active camera) at
-/// the configured fps; also expires elapsed queries (promoting
-/// wait-listed ones) and refreshes per-query spotlights.
+/// Frame generation: one event per (active query, active camera) that
+/// the FC block admits, at the configured fps; also expires elapsed
+/// queries (promoting wait-listed ones) and refreshes per-query
+/// spotlights.
 fn feed_loop(
     inner: Arc<Inner>,
+    mut fc: Box<dyn FilterControl>,
     va_tx: Vec<Sender<Msg>>,
     va_part: Partitioner,
     all_tx: Vec<Sender<Msg>>,
@@ -662,6 +712,7 @@ fn feed_loop(
     let cfg = &inner.cfg;
     let period = Duration::from_micros((1e6 / cfg.fps.max(0.1)) as u64);
     let mut frame_no: u64 = 0;
+    let mut active_buf: Vec<usize> = Vec::new();
     let mut next_fire = Instant::now();
     while !inner.stopping.load(Ordering::SeqCst) {
         let now = inner.now_us();
@@ -671,7 +722,7 @@ fn feed_loop(
             QueryId,
             Micros,
             Arc<GroundTruth>,
-            Vec<usize>,
+            Vec<bool>,
         )> = Vec::new();
         {
             let mut st = inner.state.lock().unwrap();
@@ -690,6 +741,8 @@ fn feed_loop(
                         (ctx.detections, ctx.peak_active),
                     ));
                 }
+                // Drop the FC's per-query state with the query.
+                fc.forget_query(*q);
                 for tx in &all_tx {
                     let _ = tx.send(Msg::Deregister(*q));
                 }
@@ -702,31 +755,39 @@ fn feed_loop(
             // needs; the O(queries × cameras) ground-truth scan runs
             // *outside* the lock so workers and the sink keep flowing.
             for (_, ctx) in st.ctx.iter_mut() {
-                let active = ctx.tl.active_set(&inner.graph, now);
-                ctx.peak_active = ctx.peak_active.max(active.len());
+                ctx.tl.active_set_into(
+                    &inner.graph,
+                    now,
+                    &mut active_buf,
+                );
+                ctx.peak_active =
+                    ctx.peak_active.max(active_buf.len());
                 for a in ctx.active_cams.iter_mut() {
                     *a = false;
                 }
-                for cam in active {
+                for &cam in &active_buf {
                     ctx.active_cams[cam] = true;
                 }
             }
             for (q, ctx) in st.ctx.iter() {
-                let cams: Vec<usize> = (0..cfg.num_cameras)
-                    .filter(|&cam| ctx.active_cams[cam])
-                    .collect();
                 snapshots.push((
                     *q,
                     ctx.t0,
                     Arc::clone(&ctx.gt),
-                    cams,
+                    ctx.active_cams.clone(),
                 ));
             }
         }
-        // Visibility lookups, lock-free.
+        // FC admission + visibility lookups, lock-free: the FC block
+        // sees every (query, camera) pair with the spotlight's real
+        // activation flag — inactive cameras included, so stateful FCs
+        // (warm-up windows, duty cycles) observe deactivations too.
         let mut frames: Vec<(QueryId, usize, bool)> = Vec::new();
-        for (q, t0, gt, cams) in &snapshots {
-            for &cam in cams {
+        for (q, t0, gt, active_cams) in &snapshots {
+            for (cam, &act) in active_cams.iter().enumerate() {
+                if !fc.admit(*q, cam, frame_no, now, act) {
+                    continue;
+                }
                 frames.push((*q, cam, gt.visible(cam, now - t0)));
             }
         }
@@ -768,9 +829,11 @@ fn feed_loop(
     }
 }
 
-/// Shared executor loop: fair-share batching + backend scoring.
+/// Shared executor loop: fair-share batching + backend scoring, with
+/// the app's VA/CR block owning the payload transformation.
 fn worker_loop(
     stage: Stage,
+    mut block: AnalyticsBlock,
     rx: Receiver<Msg>,
     inner: Arc<Inner>,
     backend: Arc<dyn ScoreBackend>,
@@ -868,6 +931,7 @@ fn worker_loop(
                 let spare = exec_batch(
                     stage,
                     batch,
+                    &mut block,
                     backend.as_ref(),
                     &xi,
                     &mut scratch,
@@ -942,6 +1006,7 @@ fn worker_loop(
                 let spare = exec_batch(
                     stage,
                     batch,
+                    &mut block,
                     backend.as_ref(),
                     &xi,
                     &mut scratch,
@@ -966,11 +1031,13 @@ struct BatchScratch {
 
 /// Execute one cross-query batch: one shared execution sleep for the
 /// whole batch, then per-query-group scoring (each query carries its
-/// own embedding) and forwarding. Returns the emptied batch vec for
-/// the caller to recycle into its batcher.
+/// own embedding), the app block's score-to-payload transformation,
+/// and forwarding. Returns the emptied batch vec for the caller to
+/// recycle into its batcher.
 fn exec_batch(
     stage: Stage,
     mut batch: Vec<QueuedEvent<Event>>,
+    block: &mut AnalyticsBlock,
     backend: &dyn ScoreBackend,
     xi: &XiModel,
     scratch: &mut BatchScratch,
@@ -1003,42 +1070,21 @@ fn exec_batch(
         debug_assert_eq!(scores.len(), end, "one score per event");
         start = end;
     }
-    for (i, mut ev) in events.drain(..).enumerate() {
-        let score = scores[i];
-        match stage {
-            Stage::Va => {
-                if let Payload::Frame { entity_present } = ev.payload {
-                    ev.payload = Payload::Candidate {
-                        entity_present,
-                        score,
-                    };
-                }
-            }
-            Stage::Cr => {
-                if let Payload::Candidate {
-                    entity_present: _,
-                    score: va_score,
-                } = ev.payload
-                {
-                    let detected = va_score > 0.5 && score > 0.5;
-                    if detected {
-                        ev.header.avoid_drop = true;
-                    }
-                    ev.payload = Payload::Detection {
-                        detected,
-                        confidence: score,
-                    };
-                }
-            }
-            _ => {}
-        }
+    // One virtual call transforms the whole batch (the block sees the
+    // scores in event order); forwarding order is unchanged.
+    block.apply_scores(events, scores, &ScoreParams { threshold: 0.5 });
+    for ev in events.drain(..) {
         forward(ev);
     }
     batch
 }
 
-/// Sink: completion accounting + per-query TL updates.
-fn sink_loop(inner: Arc<Inner>, rx: Receiver<Msg>) {
+/// Sink: completion accounting + per-query TL updates + QF.
+fn sink_loop(
+    inner: Arc<Inner>,
+    rx: Receiver<Msg>,
+    mut qf: Box<dyn QueryFusion>,
+) {
     let gamma = inner.cfg.gamma();
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
@@ -1053,23 +1099,31 @@ fn sink_loop(inner: Arc<Inner>, rx: Receiver<Msg>) {
                     ev.payload,
                     Payload::Detection { detected: true, .. }
                 );
-                let mut st = inner.state.lock().unwrap();
-                st.ledgers.completed(
-                    q,
-                    ev.header.id,
-                    latency,
-                    gamma,
-                    detected,
-                );
-                if let Some(ctx) = st.ctx_of(q) {
-                    if detected {
-                        ctx.detections += 1;
-                    }
-                    ctx.tl.on_detection(
-                        ev.header.camera,
-                        ev.header.captured,
+                {
+                    let mut st = inner.state.lock().unwrap();
+                    st.ledgers.completed(
+                        q,
+                        ev.header.id,
+                        latency,
+                        gamma,
                         detected,
                     );
+                    if let Some(ctx) = st.ctx_of(q) {
+                        if detected {
+                            ctx.detections += 1;
+                        }
+                        ctx.tl.on_detection(
+                            ev.header.camera,
+                            ev.header.captured,
+                            detected,
+                        );
+                    }
+                }
+                // QF user-logic, outside the state lock.
+                if detected && qf.on_detection(&ev) {
+                    inner
+                        .fusion_updates
+                        .fetch_add(1, Ordering::Relaxed);
                 }
             }
             Ok(Msg::Stop) => break,

@@ -29,6 +29,13 @@
 //!   (submit/cancel while serving) over shared workers, scoring
 //!   through a pluggable [`front::ScoreBackend`].
 //!
+//! Like the single-query engines, both service execution paths drive
+//! application logic exclusively through the [`crate::dataflow`] UDF
+//! traits of an [`crate::apps::AppDefinition`] (engine `with_app` /
+//! `run_app`, front `TrackingService::start_with_app`); the `start` /
+//! `run` conveniences resolve the stock composition the config
+//! describes.
+//!
 //! Mapping to the paper: each query still owns the single-query
 //! dataflow semantics (FC → VA → CR → {TL, QF, UV}); the service layer
 //! multiplexes many such logical dataflows onto one physical deployment

@@ -1,8 +1,9 @@
-//! Integration: the four Table-1 applications compose and run end to
-//! end on the DES engine, and their distinguishing characteristics show
+//! Integration: the stock applications (Table 1 plus App 5) compose
+//! and run end to end on the DES engine through the public
+//! `AppDefinition` API, and their distinguishing characteristics show
 //! up in the outcomes.
 
-use anveshak::apps::{all, spec};
+use anveshak::apps::{all, table1};
 use anveshak::config::{AppKind, BatchingKind, ExperimentConfig, TlKind};
 use anveshak::coordinator::des;
 
@@ -18,10 +19,13 @@ fn base_cfg() -> ExperimentConfig {
 
 #[test]
 fn all_apps_run_and_track() {
+    // All five stock apps (including App 5, which has no AppKind and
+    // exists only as a block composition) run through the same trait
+    // path: `run_app` with their own blocks.
     for app in all() {
         let mut cfg = base_cfg();
         app.apply(&mut cfg, true);
-        let r = des::run(cfg);
+        let r = des::run_app(cfg, &app);
         assert!(r.summary.conserved(), "{}: {:?}", app.name, r.summary);
         assert!(
             r.detections > 0,
@@ -42,9 +46,9 @@ fn app2_cr_is_heavier_than_app1() {
     // Same workload; App 2's CR is ~63% slower per frame, so its CR
     // batches take longer and the median latency rises.
     let mut c1 = base_cfg();
-    spec(AppKind::App1).apply(&mut c1, false); // keep TL identical (Bfs)
+    table1(AppKind::App1).apply(&mut c1, false); // keep TL identical (Bfs)
     let mut c2 = base_cfg();
-    spec(AppKind::App2).apply(&mut c2, false);
+    table1(AppKind::App2).apply(&mut c2, false);
     let r1 = des::run(c1);
     let r2 = des::run(c2);
     let x1 = r1.summary.latency.median;
@@ -58,7 +62,7 @@ fn app2_cr_is_heavier_than_app1() {
 #[test]
 fn app3_tracks_fast_vehicles() {
     let mut cfg = base_cfg();
-    spec(AppKind::App3).apply(&mut cfg, true);
+    table1(AppKind::App3).apply(&mut cfg, true);
     assert!(cfg.workload.entity_speed_mps >= 8.0);
     assert_eq!(cfg.tl, TlKind::WbfsSpeed);
     let r = des::run(cfg);
@@ -71,7 +75,7 @@ fn app3_tracks_fast_vehicles() {
 #[test]
 fn app4_probabilistic_tl_bounds_active_set() {
     let mut cfg = base_cfg();
-    spec(AppKind::App4).apply(&mut cfg, true);
+    table1(AppKind::App4).apply(&mut cfg, true);
     let r = des::run(cfg);
     assert!(r.detections > 0);
     // The 90%-mass likelihood spotlight never needs the whole network.

@@ -25,7 +25,9 @@ fn live_cfg() -> ExperimentConfig {
 
 #[test]
 fn live_engine_serves_and_tracks() {
-    let eng = LiveEngine::new(live_cfg(), default_dir(), "va", "cr_small");
+    let cfg = live_cfg();
+    let app = anveshak::apps::resolve(&cfg);
+    let eng = LiveEngine::new(cfg, default_dir(), app);
     let r = eng.run().expect("live run");
     // Frames flowed through the whole pipeline.
     assert!(r.summary.generated > 10, "{:?}", r.summary);
@@ -41,7 +43,8 @@ fn live_engine_serves_and_tracks() {
 fn live_engine_static_batching_runs() {
     let mut c = live_cfg();
     c.batching = BatchingKind::Static { size: 2 };
-    let r = LiveEngine::new(c, default_dir(), "va", "cr_small")
+    let app = anveshak::apps::resolve(&c);
+    let r = LiveEngine::new(c, default_dir(), app)
         .run()
         .expect("live run");
     assert!(r.summary.on_time + r.summary.delayed > 0, "{:?}", r.summary);
