@@ -54,11 +54,12 @@
 
 use std::time::Instant;
 
+use anveshak::apps;
 use anveshak::config::{
-    BatchingKind, ExperimentConfig, TlKind, WorkloadConfig,
+    AppKind, BatchingKind, ExperimentConfig, TlKind, WorkloadConfig,
 };
 use anveshak::coordinator::des::DesEngine;
-use anveshak::dataflow::{Event, Partitioner, Stage};
+use anveshak::dataflow::{Event, ModelVariant, Partitioner, Stage};
 use anveshak::engine::EventCore;
 use anveshak::roadnet::{
     bfs_spotlight, bfs_spotlight_into, generate, probabilistic_spotlight,
@@ -67,7 +68,7 @@ use anveshak::roadnet::{
 };
 use anveshak::runtime::{default_dir, ModelPool};
 use anveshak::service::engine::MultiQueryDes;
-use anveshak::service::{ScoreBackend, SimBackend};
+use anveshak::service::{ScoreBackend, ScoreCtx, SimBackend};
 use anveshak::sim::{
     identity_embedding, identity_image, identity_image_into,
     IdentityGallery,
@@ -237,6 +238,41 @@ fn run_des(report: &mut Report, name: &str, cfg: ExperimentConfig) {
         r.core_events,
         r.core_events as f64 / wall.max(1e-9),
         r.summary.generated,
+    );
+    report.des.push((
+        name.to_string(),
+        setup_s,
+        wall,
+        r.core_events,
+        r.summary.generated,
+    ));
+}
+
+/// Run a single-query DES workload through an explicit
+/// [`apps::AppDefinition`]; reports the fusion-update count alongside
+/// throughput (the fusion-on/off section holds everything but the QF
+/// block fixed).
+fn run_des_app(
+    report: &mut Report,
+    name: &str,
+    cfg: ExperimentConfig,
+    app: &apps::AppDefinition,
+) {
+    let setup = Instant::now();
+    let engine = DesEngine::with_app(cfg, app);
+    let setup_s = setup.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let r = engine.run();
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "{name:<34} setup {setup_s:>5.2}s  run {wall:>6.2}s  \
+         {:>9} core events  {:>9.0} ev/s  ({} frames, {} detections, \
+         {} refinements)",
+        r.core_events,
+        r.core_events as f64 / wall.max(1e-9),
+        r.summary.generated,
+        r.detections,
+        r.fusion_updates,
     );
     report.des.push((
         name.to_string(),
@@ -482,13 +518,19 @@ fn main() {
             .map(|i| Event::frame(i, i as usize % 8, i, 0, i % 3 == 0))
             .collect();
         let mut scores: Vec<f32> = Vec::new();
+        let ctx = ScoreCtx {
+            stage: Stage::Va,
+            variant: ModelVariant::Va,
+            query: 0,
+            refined: None,
+        };
         let per_batch = bench(
             rp,
             "simbackend.score_b25.batch",
             it(200_000),
             || {
                 scores.clear();
-                backend.score_into(Stage::Va, 0, &events, &mut scores);
+                backend.score_into(&ctx, &events, &mut scores);
                 std::hint::black_box(scores.len());
             },
         );
@@ -520,6 +562,30 @@ fn main() {
     for queries in [1usize, 4, 8] {
         let c = mq_cfg(smoke, queries);
         run_mq(rp, &format!("mq.1000cam.wbfs.{queries}q"), c);
+    }
+
+    println!(
+        "\n== Query-fusion feedback loop (DES, App 2, fusion on/off) =="
+    );
+    {
+        // Same composition (large CR, BFS spotlight) with the QF block
+        // as the only difference: `fusion_on` routes RnnFusion
+        // refinements back to VA/CR (refined queries score with
+        // sharpened error rates), `fusion_off` swaps in NoFusion. The
+        // delta is the recall-vs-throughput price of closing the
+        // feedback loop.
+        let mut c = des_cfg(smoke);
+        c.tl = TlKind::Bfs;
+        c.app = AppKind::App2;
+        let on = apps::table1(AppKind::App2).with_tl_kind(c.tl);
+        let off = apps::AppBuilder::new("app2-fusion-off")
+            .filter_control(apps::ActiveFlagFc)
+            .video_analytics(apps::SimDetector::hog())
+            .contention_resolver(apps::SimReid::large())
+            .tracking_logic(c.tl)
+            .build();
+        run_des_app(rp, "des.1000cam.app2.fusion_on", c.clone(), &on);
+        run_des_app(rp, "des.1000cam.app2.fusion_off", c, &off);
     }
 
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");

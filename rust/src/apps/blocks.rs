@@ -9,8 +9,9 @@
 //! [`SimCtx`] — runs stay bit-reproducible per seed.
 
 use crate::dataflow::{
-    ContentionResolver, Event, FilterControl, ModelVariant, Payload,
-    QueryFusion, QueryId, ScoreParams, SimCtx, VideoAnalytics,
+    boosted_rates, boosted_residual, ContentionResolver, Event,
+    FilterControl, ModelVariant, Payload, QueryFusion, QueryId,
+    ScoreParams, SimCtx, VideoAnalytics,
 };
 use crate::config::WorkloadConfig;
 use crate::util::{FastMap, Micros};
@@ -240,6 +241,23 @@ impl VideoAnalytics for SimDetector {
     fn step_sim(&mut self, events: &mut [Event], ctx: &mut SimCtx<'_>) {
         for ev in events.iter_mut() {
             if let Payload::Frame { entity_present } = ev.payload {
+                // The feedback edge: once QF has refined this query's
+                // embedding, whole-transit misses become rarer (the
+                // sharper target survives occlusion/pose changes). The
+                // transit coin is a hash, not an RNG draw, so the
+                // refined threshold never shifts the engine RNG stream.
+                let miss_p = if ctx
+                    .feedback
+                    .refined(ev.header.query)
+                    .is_some()
+                {
+                    boosted_residual(
+                        ctx.sem.fusion_boost,
+                        ctx.sem.transit_miss,
+                    )
+                } else {
+                    ctx.sem.transit_miss
+                };
                 let transit_missed = entity_present
                     && ctx
                         .truth
@@ -254,7 +272,7 @@ impl VideoAnalytics for SimDetector {
                                 ev.header.query,
                                 ev.header.camera,
                                 idx,
-                            ) < ctx.sem.transit_miss
+                            ) < miss_p
                         })
                         .unwrap_or(false);
                 let flagged = if entity_present && !transit_missed {
@@ -368,10 +386,27 @@ impl ContentionResolver for SimReid {
             } = ev.payload
             {
                 let candidate = score > 0.5;
-                let detected = if entity_present && candidate {
-                    ctx.rng.bool(ctx.sem.cr_tp)
+                // Feedback edge: a refined query embedding shrinks the
+                // residual re-id error rates by `fusion_boost`. Same
+                // draw count either way (only the thresholds move), so
+                // non-refined queries keep the exact RNG stream.
+                let (tp, fp) = if ctx
+                    .feedback
+                    .refined(ev.header.query)
+                    .is_some()
+                {
+                    boosted_rates(
+                        ctx.sem.fusion_boost,
+                        ctx.sem.cr_tp,
+                        ctx.sem.cr_fp,
+                    )
                 } else {
-                    candidate && ctx.rng.bool(ctx.sem.cr_fp)
+                    (ctx.sem.cr_tp, ctx.sem.cr_fp)
+                };
+                let detected = if entity_present && candidate {
+                    ctx.rng.bool(tp)
+                } else {
+                    candidate && ctx.rng.bool(fp)
                 };
                 if detected {
                     // Positive matches must not be dropped (§4.3.3).

@@ -59,7 +59,11 @@ type QfFactory = Arc<dyn Fn() -> Box<dyn QueryFusion> + Send + Sync>;
 /// the composition metadata the platform needs at configuration time
 /// (cost model scaling, typed model variants, the Table-1 identity when
 /// there is one). Engines mint block instances per worker / per query
-/// through the `make_*` methods and never look inside them.
+/// through the `make_*` methods and never look inside them. In the
+/// multi-query engines every query gets its **own** FC/VA/CR/QF/TL
+/// instances minted from *its* app (see [`AppCatalog`]) — block state
+/// never leaks across tenants.
+#[derive(Clone)]
 pub struct AppDefinition {
     pub name: String,
     pub description: String,
@@ -473,6 +477,75 @@ pub fn all() -> Vec<AppDefinition> {
     vec![app1(), app2(), app3(), app4(), app5()]
 }
 
+/// Per-kind application catalog for the multi-query engines: resolves
+/// each query's [`crate::service::QuerySpec::app`] to the
+/// [`AppDefinition`] whose blocks that query runs, so concurrent
+/// queries can run *different* compositions over the shared workers.
+///
+/// The engine-level default app (possibly a custom composition handed
+/// to `with_app`/`start_with_app`) serves queries naming its kind — a
+/// custom app with no Table-1 identity is registered under the config's
+/// `cfg.app` kind. Every other kind resolves to its stock Table-1
+/// composition with the config's TL override (the config keeps TL
+/// authority, exactly like [`resolve`]).
+pub struct AppCatalog {
+    default_kind: AppKind,
+    apps: [Arc<AppDefinition>; 4],
+}
+
+impl AppCatalog {
+    /// Build the catalog. `fallback_kind`/`tl` come from the engine
+    /// config (`cfg.app`, `cfg.tl`).
+    pub fn new(
+        default_app: AppDefinition,
+        fallback_kind: AppKind,
+        tl: TlKind,
+    ) -> Self {
+        let default_kind = default_app.kind.unwrap_or(fallback_kind);
+        let default_app = Arc::new(default_app);
+        let mk = |kind: AppKind| -> Arc<AppDefinition> {
+            if kind == default_kind {
+                Arc::clone(&default_app)
+            } else {
+                Arc::new(table1(kind).with_tl_kind(tl))
+            }
+        };
+        Self {
+            default_kind,
+            apps: [
+                mk(AppKind::App1),
+                mk(AppKind::App2),
+                mk(AppKind::App3),
+                mk(AppKind::App4),
+            ],
+        }
+    }
+
+    fn idx(kind: AppKind) -> usize {
+        match kind {
+            AppKind::App1 => 0,
+            AppKind::App2 => 1,
+            AppKind::App3 => 2,
+            AppKind::App4 => 3,
+        }
+    }
+
+    /// The application a query of `kind` runs.
+    pub fn get(&self, kind: AppKind) -> &Arc<AppDefinition> {
+        &self.apps[Self::idx(kind)]
+    }
+
+    /// The engine-level default application.
+    pub fn default_app(&self) -> &Arc<AppDefinition> {
+        &self.apps[Self::idx(self.default_kind)]
+    }
+
+    /// The kind the default application is registered under.
+    pub fn default_kind(&self) -> AppKind {
+        self.default_kind
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -574,6 +647,32 @@ mod tests {
         let mut out = Vec::new();
         tl_b.active_set_into(&g, 2_000_000, &mut out);
         assert_eq!(out.len(), 100, "tl_b still bootstraps all-active");
+    }
+
+    #[test]
+    fn catalog_resolves_per_query_apps() {
+        // Stock default: its kind's slot is the default app itself.
+        let cat =
+            AppCatalog::new(app2(), AppKind::App1, TlKind::Wbfs);
+        assert_eq!(cat.default_kind(), AppKind::App2);
+        assert!(cat.get(AppKind::App2).qf_enabled);
+        assert_eq!(cat.get(AppKind::App2).name, "App2-person-fusion");
+        // Other kinds resolve to stock compositions with the config TL.
+        assert_eq!(cat.get(AppKind::App3).fc_label, "frame-rate");
+        assert_eq!(
+            cat.get(AppKind::App3).default_tl,
+            Some(TlKind::Wbfs),
+            "config keeps TL authority over non-default apps"
+        );
+        // A custom app (no Table-1 identity) registers under the
+        // config's kind.
+        let custom = AppBuilder::new("custom").build();
+        let cat =
+            AppCatalog::new(custom, AppKind::App4, TlKind::Bfs);
+        assert_eq!(cat.default_kind(), AppKind::App4);
+        assert_eq!(cat.get(AppKind::App4).name, "custom");
+        assert_eq!(cat.default_app().name, "custom");
+        assert_eq!(cat.get(AppKind::App1).name, "App1-person");
     }
 
     #[test]

@@ -386,9 +386,9 @@ fn multi_query(out: &Path) {
 
     let mut j = Vec::new();
     println!(
-        "  {:<6} {:<4} {:<10} {:>8} {:>8} {:>8} {:>7} {:>9} {:>9} {:>6}",
-        "query", "prio", "status", "gen", "on-time", "dropped",
-        "recall", "median-s", "p99-s", "cams"
+        "  {:<6} {:<5} {:<4} {:<10} {:>8} {:>8} {:>8} {:>7} {:>9} {:>9} {:>6} {:>7}",
+        "query", "app", "prio", "status", "gen", "on-time", "dropped",
+        "recall", "median-s", "p99-s", "cams", "fusion"
     );
     for q in &r.queries {
         let (gen, on_time, dropped, median, p99) = match &q.summary {
@@ -402,8 +402,9 @@ fn multi_query(out: &Path) {
             None => (0, 0, 0, 0.0, 0.0),
         };
         println!(
-            "  {:<6} {:<4} {:<10} {:>8} {:>8} {:>8} {:>6.1}% {:>9.2} {:>9.2} {:>6}",
+            "  {:<6} {:<5} {:<4} {:<10} {:>8} {:>8} {:>8} {:>6.1}% {:>9.2} {:>9.2} {:>6} {:>7}",
             q.label,
+            format!("{:?}", q.app),
             q.priority,
             format!("{:?}", q.status),
             gen,
@@ -412,10 +413,12 @@ fn multi_query(out: &Path) {
             100.0 * q.recall(),
             median,
             p99,
-            q.peak_active
+            q.peak_active,
+            q.fusion_updates
         );
         j.push(obj([
             ("label", q.label.as_str().into()),
+            ("app", format!("{:?}", q.app).as_str().into()),
             ("priority", (q.priority as i64).into()),
             ("status", format!("{:?}", q.status).as_str().into()),
             ("generated", (gen as i64).into()),
@@ -425,6 +428,7 @@ fn multi_query(out: &Path) {
             ("median_latency_s", median.into()),
             ("p99_latency_s", p99.into()),
             ("peak_active_cams", q.peak_active.into()),
+            ("fusion_updates", (q.fusion_updates as i64).into()),
         ]));
     }
     let agg = &r.aggregate;

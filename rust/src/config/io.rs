@@ -79,6 +79,7 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ("cr_tp", c.semantics.cr_tp.into()),
                 ("cr_fp", c.semantics.cr_fp.into()),
                 ("transit_miss", c.semantics.transit_miss.into()),
+                ("fusion_boost", c.semantics.fusion_boost.into()),
             ]),
         ),
         (
@@ -207,6 +208,7 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         set_f64(v, "cr_tp", &mut c.semantics.cr_tp);
         set_f64(v, "cr_fp", &mut c.semantics.cr_fp);
         set_f64(v, "transit_miss", &mut c.semantics.transit_miss);
+        set_f64(v, "fusion_boost", &mut c.semantics.fusion_boost);
     }
     if let Some(v) = j.get("workload") {
         set_usize(v, "vertices", &mut c.workload.vertices);

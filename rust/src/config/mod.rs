@@ -168,6 +168,15 @@ pub struct SemanticsConfig {
     /// whole tracks (occlusion, pose), which is what produces the
     /// paper's long blind-spot spells and 100+ camera spotlights.
     pub transit_miss: f64,
+    /// How much a QF refinement sharpens the simulated analytics once
+    /// the feedback edge has delivered a fused embedding (§2.2,
+    /// Fig. 2): for a refined query the residual error rates shrink by
+    /// this fraction — `cr_tp ← cr_tp + boost·(1 − cr_tp)`,
+    /// `cr_fp ← cr_fp·(1 − boost)`,
+    /// `transit_miss ← transit_miss·(1 − boost)`. 0 disables the
+    /// effect; non-fusing apps are unaffected either way (no
+    /// refinement is ever applied).
+    pub fusion_boost: f64,
 }
 
 impl Default for SemanticsConfig {
@@ -178,6 +187,7 @@ impl Default for SemanticsConfig {
             cr_tp: 0.99,
             cr_fp: 0.0,
             transit_miss: 0.05,
+            fusion_boost: 0.5,
         }
     }
 }

@@ -15,15 +15,17 @@
 //! virtual call per batch and the zero-allocation hot path from the
 //! performance work is preserved.
 
+use std::sync::Arc;
+
 use crate::util::FastMap;
 
 use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig};
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{
-    ContentionResolver, Event, FilterControl, Payload, QueryFusion,
-    QueryId, SimCtx, Stage, TlEnv, TrackingLogic, TruthSource,
-    VideoAnalytics, SINGLE_QUERY,
+    ContentionResolver, Event, FeedbackRouter, FeedbackState,
+    FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
+    TrackingLogic, TruthSource, VideoAnalytics, SINGLE_QUERY,
 };
 use crate::engine::EventCore;
 use crate::metrics::{Ledger, Summary, Timeline};
@@ -82,6 +84,10 @@ struct TaskState {
     busy: bool,
     timer_seq: u64,
     drop_count: u64,
+    /// QF refinements this executor has applied (the feedback edge);
+    /// each task receives its own [`Payload::QueryUpdate`] copy after
+    /// its own network delay and discards stale deliveries.
+    feedback: FeedbackState,
 }
 
 /// Results of a DES run.
@@ -133,6 +139,9 @@ pub struct DesEngine {
     detections: u64,
     peak_active: usize,
     fusion_updates: u64,
+    /// Stamps QF refinements with per-query update sequence numbers
+    /// before they are routed upstream (the feedback edge).
+    router: FeedbackRouter,
     rng: Rng,
     now: Micros,
     /// Reusable buffers for the per-batch hot path (drop filtering,
@@ -264,6 +273,7 @@ impl DesEngine {
                 busy: false,
                 timer_seq: 0,
                 drop_count: 0,
+                feedback: FeedbackState::new(),
             });
         }
 
@@ -305,6 +315,7 @@ impl DesEngine {
             detections: 0,
             peak_active: num_cameras,
             fusion_updates: 0,
+            router: FeedbackRouter::new(),
             rng: rng(seed, 0xDE5),
             now: 0,
             kept_scratch: Vec::new(),
@@ -500,6 +511,18 @@ impl DesEngine {
         match self.tasks[task].stage {
             Stage::Uv => self.on_sink_arrive(ev, batch),
             Stage::Va | Stage::Cr => {
+                // Feedback edge: a QueryUpdate is consumed here — the
+                // executor swaps its scoring target (iff the update is
+                // fresher than the last applied one) and the event
+                // never touches the batcher, budgets or drop points.
+                if let Payload::QueryUpdate(emb) = &ev.payload {
+                    self.tasks[task].feedback.apply(
+                        ev.header.query,
+                        ev.header.update_seq,
+                        Arc::clone(emb),
+                    );
+                    return;
+                }
                 let t_obs = self.observe(task);
                 let u = t_obs - ev.header.src_arrival;
                 let exempt = ev.header.avoid_drop || ev.header.probe;
@@ -697,6 +720,7 @@ impl DesEngine {
                 truth: &truth,
                 sem: &self.cfg.semantics,
                 seed: self.cfg.seed,
+                feedback: &self.tasks[task].feedback,
             };
             match stage {
                 Stage::Va => self.va.step_sim(&mut staged, &mut ctx),
@@ -893,9 +917,11 @@ impl DesEngine {
             self.detections += 1;
         }
         if detected && self.qf.on_detection(&ev) {
-            // QF user-logic refines the query embedding; metric-neutral
-            // by contract (the tuning triangle never consults QF).
+            // QF user-logic refined the query embedding: close the
+            // feedback loop (§2.2, Fig. 2) by routing the fused
+            // embedding back to every VA/CR executor.
             self.fusion_updates += 1;
+            self.route_refinement(ev.header.id, ev.header.camera);
         }
         self.ledger
             .completed(ev.header.id, latency, gamma, detected);
@@ -925,6 +951,37 @@ impl DesEngine {
                     self.send_accepts(&probe_ev, eps, sum_exec);
                 }
             }
+        }
+    }
+
+    /// Route the QF block's current embedding upstream as a
+    /// seq-stamped [`Payload::QueryUpdate`], one copy per VA/CR
+    /// executor, each after a control-message network delay. Arrival
+    /// order is deterministic (task index, then [`EventCore`] sequence
+    /// numbers), so seeded runs stay bit-reproducible.
+    fn route_refinement(&mut self, trigger: u64, camera: usize) {
+        let Some(emb) = self.qf.embedding() else {
+            return; // counting-only QF blocks refine nothing routable
+        };
+        let refinement = self
+            .router
+            .refine(SINGLE_QUERY, Arc::new(emb.to_vec()));
+        let lat = self
+            .net
+            .transfer_estimate(self.net.meta_bytes, self.now);
+        for task in 0..self.tasks.len() {
+            if !matches!(self.tasks[task].stage, Stage::Va | Stage::Cr)
+            {
+                continue;
+            }
+            self.push(
+                self.now + lat,
+                Ev::Arrive {
+                    task,
+                    ev: refinement.into_event(trigger, camera, self.now),
+                    batch: None,
+                },
+            );
         }
     }
 

@@ -25,8 +25,9 @@ use anyhow::Result;
 use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig};
 use crate::dataflow::{
-    AnalyticsBlock, Event, FilterControl, Header, Partitioner, Payload,
-    ScoreParams, Stage, TlEnv, TrackingLogic, SINGLE_QUERY,
+    AnalyticsBlock, Event, FeedbackRouter, FeedbackState, FilterControl,
+    Header, Partitioner, Payload, QueryFusion, ScoreParams, Stage,
+    TlEnv, TrackingLogic, SINGLE_QUERY,
 };
 use crate::metrics::{Ledger, Summary};
 use crate::roadnet::{generate, place_cameras};
@@ -44,10 +45,14 @@ use crate::util::{Micros, SEC};
 /// A request to the model-service thread. The reply returns the image
 /// buffer alongside the output so callers can reuse it (one gather
 /// buffer round-trips per worker instead of reallocating
-/// `batch × IMG_DIM` floats per execution).
+/// `batch × IMG_DIM` floats per execution). Each request carries the
+/// caller's *current* query embedding — workers swap it when a QF
+/// refinement reaches them (the feedback edge), so scoring follows the
+/// refined target without restarting the service.
 struct ModelReq {
     variant: String,
     images: Vec<f32>,
+    query: Arc<Vec<f32>>,
     reply: Sender<(Result<ModelOutput>, Vec<f32>)>,
 }
 
@@ -100,11 +105,16 @@ impl ModelService {
             };
             match setup() {
                 Ok((pool, query, va_xi, cr_xi)) => {
-                    let q = query.clone();
                     let _ = init_tx.send(Ok((query, va_xi, cr_xi)));
                     for req in rx {
-                        let out =
-                            pool.execute(&req.variant, &req.images, &q);
+                        // Score against the embedding the caller holds
+                        // *now* (possibly QF-refined), not the
+                        // bootstrap one.
+                        let out = pool.execute(
+                            &req.variant,
+                            &req.images,
+                            &req.query,
+                        );
                         let _ = req.reply.send((out, req.images));
                     }
                 }
@@ -127,12 +137,15 @@ impl ModelService {
         ))
     }
 
+    /// Execute against `query` (the caller's current — possibly
+    /// QF-refined — embedding).
     pub fn execute(
         &self,
         variant: &str,
         images: Vec<f32>,
+        query: Arc<Vec<f32>>,
     ) -> Result<ModelOutput> {
-        self.execute_reusing(variant, images).0
+        self.execute_reusing(variant, images, query).0
     }
 
     /// Execute and hand the (emptied-of-purpose) image buffer back so
@@ -141,6 +154,7 @@ impl ModelService {
         &self,
         variant: &str,
         images: Vec<f32>,
+        query: Arc<Vec<f32>>,
     ) -> (Result<ModelOutput>, Vec<f32>) {
         let (reply, rx) = mpsc::channel();
         if self
@@ -148,6 +162,7 @@ impl ModelService {
             .send(ModelReq {
                 variant: variant.to_string(),
                 images,
+                query,
                 reply,
             })
             .is_err()
@@ -170,7 +185,14 @@ impl ModelService {
         self.img_dim
     }
 
+    /// The bootstrap query embedding (from the query image).
     pub fn query(&self) -> &[f32] {
+        &self.query
+    }
+
+    /// Shared handle to the bootstrap embedding — workers start from
+    /// this and swap in QF refinements as they arrive.
+    pub fn query_arc(&self) -> &Arc<Vec<f32>> {
         &self.query
     }
 }
@@ -180,6 +202,31 @@ enum Msg {
     Ev(Event),
     Sig(Signal),
     Stop,
+}
+
+/// Adapt a QF refinement to the model's feature dimension. A
+/// full-dimension embedding (a live QF model's output) replaces the
+/// scoring target outright; a lower-dimensional pseudo-embedding (the
+/// stock `RnnFusion` keeps an 8-float state) *nudges* the bootstrap
+/// target instead — each bootstrap coordinate is shifted by a small
+/// multiple of the tiled refinement signal, so the broadcast embedding
+/// always satisfies `ModelPool::execute`'s dimension check while still
+/// measurably (and deterministically) changing post-refinement scores.
+fn fuse_embedding(bootstrap: &[f32], refined: &[f32]) -> Vec<f32> {
+    if refined.is_empty() {
+        // A refinement with no embedding content keeps the bootstrap
+        // target (broadcast as a valid update, not silently lost).
+        return bootstrap.to_vec();
+    }
+    if refined.len() == bootstrap.len() {
+        return refined.to_vec();
+    }
+    const NUDGE: f32 = 0.1;
+    bootstrap
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| b + NUDGE * refined[i % refined.len()])
+        .collect()
 }
 
 /// Output of a live run.
@@ -194,6 +241,10 @@ pub struct LiveReport {
     pub throughput: f64,
     /// Peak TL active-set size observed.
     pub peak_active: usize,
+    /// Query-embedding refinements performed by the app's QF block and
+    /// routed back to the VA/CR workers (0 unless the composition
+    /// fuses).
+    pub fusion_updates: u64,
 }
 
 /// Identity used for the tracked entity's frames.
@@ -205,6 +256,10 @@ fn now_us(start: Instant) -> Micros {
 
 /// A VA/CR worker: batcher + budgets + real model execution, with the
 /// app's analytics block owning the score-to-payload transformation.
+/// The model it runs is the *block's* typed variant
+/// ([`AnalyticsBlock::variant`]) — chosen per block, not per engine —
+/// and it scores against `query_emb`, which QF refinements swap at
+/// runtime (the feedback edge).
 struct Worker {
     stage: Stage,
     block: AnalyticsBlock,
@@ -212,6 +267,11 @@ struct Worker {
     budget: BudgetManager,
     xi: XiModel,
     score_threshold: f32,
+    /// Current query embedding (bootstrap, then the latest applied QF
+    /// refinement).
+    query_emb: Arc<Vec<f32>>,
+    /// Stale-update discard for incoming [`Payload::QueryUpdate`]s.
+    feedback: FeedbackState,
     /// Reusable image gather buffer (batch × IMG_DIM floats).
     img_scratch: Vec<f32>,
     /// Reusable post-exec staging buffer (events between bookkeeping
@@ -222,6 +282,7 @@ struct Worker {
 struct Shared {
     ledger: Mutex<Ledger>,
     detections: AtomicU64,
+    fusion_updates: AtomicU64,
     fc_active: Vec<AtomicBool>,
     gamma: Micros,
     drops_enabled: bool,
@@ -308,6 +369,7 @@ impl LiveEngine {
         let shared = Arc::new(Shared {
             ledger: Mutex::new(Ledger::new()),
             detections: AtomicU64::new(0),
+            fusion_updates: AtomicU64::new(0),
             fc_active: (0..cfg.num_cameras)
                 .map(|_| AtomicBool::new(true))
                 .collect(),
@@ -336,13 +398,13 @@ impl LiveEngine {
                 &cr_xi,
             );
             w.score_threshold = 0.6;
+            w.query_emb = Arc::clone(service.query_arc());
             let sh = Arc::clone(&shared);
             let uv = uv_tx.clone();
             let tl = tl_tx.clone();
-            let variant = cr_variant.to_string();
             let svc = service.clone();
             cr_handles.push(std::thread::spawn(move || {
-                worker_loop(w, rx, sh, svc, variant, move |ev| {
+                worker_loop(w, rx, sh, svc, move |ev| {
                     if let Payload::Detection { detected, .. } = ev.payload
                     {
                         let _ = tl.send((
@@ -368,13 +430,13 @@ impl LiveEngine {
                 &va_xi,
             );
             w.score_threshold = 0.0; // VA forwards everything (1:1)
+            w.query_emb = Arc::clone(service.query_arc());
             let sh = Arc::clone(&shared);
             let crs = cr_tx.clone();
             let part = cr_part;
-            let variant = va_variant.to_string();
             let svc = service.clone();
             va_handles.push(std::thread::spawn(move || {
-                worker_loop(w, rx, sh, svc, variant, move |ev| {
+                worker_loop(w, rx, sh, svc, move |ev| {
                     let _ = crs[part.route(ev.header.camera)]
                         .send(Msg::Ev(ev));
                 });
@@ -428,6 +490,16 @@ impl LiveEngine {
         };
 
         // ---- UV sink thread -------------------------------------------------
+        // The sink owns the app's QF block: refinements are stamped by
+        // the FeedbackRouter and broadcast to *every* VA/CR worker as
+        // QueryUpdate events (each worker applies the freshest one and
+        // scores subsequent batches against it — the feedback edge).
+        // QF embeddings that already have the model's feature
+        // dimension replace the scoring target wholesale; sim-
+        // calibrated pseudo-embeddings (e.g. the stock RnnFusion's
+        // 8-dim state) are folded into the bootstrap embedding by
+        // [`fuse_embedding`] so the broadcast target always scores
+        // through `ModelPool::execute`.
         let uv_handle = {
             let sh = Arc::clone(&shared);
             let va_sig = va_tx.clone();
@@ -435,46 +507,85 @@ impl LiveEngine {
             let va_part_c = va_part;
             let cr_part_c = cr_part;
             let eps_max = crate::util::millis(cfg.eps_max_ms);
-            std::thread::spawn(move || loop {
-                match uv_rx.recv_timeout(Duration::from_millis(200)) {
-                    Ok(Msg::Ev(ev)) => {
-                        let t = now_us(sh.start);
-                        let latency = t - ev.header.src_arrival;
-                        if ev.header.probe {
-                            continue;
+            let qf = self.app.make_qf();
+            let bootstrap = Arc::clone(service.query_arc());
+            std::thread::spawn(move || {
+                let mut qf = qf;
+                let mut router = FeedbackRouter::new();
+                loop {
+                    match uv_rx.recv_timeout(Duration::from_millis(200))
+                    {
+                        Ok(Msg::Ev(ev)) => {
+                            let t = now_us(sh.start);
+                            let latency = t - ev.header.src_arrival;
+                            if ev.header.probe {
+                                continue;
+                            }
+                            let detected = matches!(
+                                ev.payload,
+                                Payload::Detection {
+                                    detected: true,
+                                    ..
+                                }
+                            );
+                            if detected {
+                                sh.detections
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                            sh.ledger.lock().unwrap().completed(
+                                ev.header.id,
+                                latency,
+                                sh.gamma,
+                                detected,
+                            );
+                            if detected && qf.on_detection(&ev) {
+                                sh.fusion_updates
+                                    .fetch_add(1, Ordering::Relaxed);
+                                if let Some(emb) = qf.embedding() {
+                                    let fused = fuse_embedding(
+                                        &bootstrap, emb,
+                                    );
+                                    let r = router.refine(
+                                        SINGLE_QUERY,
+                                        Arc::new(fused),
+                                    );
+                                    let upd = r.into_event(
+                                        ev.header.id,
+                                        ev.header.camera,
+                                        t,
+                                    );
+                                    for tx in va_sig
+                                        .iter()
+                                        .chain(cr_sig.iter())
+                                    {
+                                        let _ = tx
+                                            .send(Msg::Ev(upd.clone()));
+                                    }
+                                }
+                            }
+                            // Accept signals on comfortably-early
+                            // arrivals.
+                            let eps = sh.gamma - latency;
+                            if eps > eps_max {
+                                let sig = Signal::Accept {
+                                    event: ev.header.id,
+                                    eps,
+                                    sum_exec: ev
+                                        .header
+                                        .sum_exec
+                                        .max(1),
+                                };
+                                let cam = ev.header.camera;
+                                let _ = va_sig[va_part_c.route(cam)]
+                                    .send(Msg::Sig(sig));
+                                let _ = cr_sig[cr_part_c.route(cam)]
+                                    .send(Msg::Sig(sig));
+                            }
                         }
-                        let detected = matches!(
-                            ev.payload,
-                            Payload::Detection { detected: true, .. }
-                        );
-                        if detected {
-                            sh.detections
-                                .fetch_add(1, Ordering::Relaxed);
-                        }
-                        sh.ledger.lock().unwrap().completed(
-                            ev.header.id,
-                            latency,
-                            sh.gamma,
-                            detected,
-                        );
-                        // Accept signals on comfortably-early arrivals.
-                        let eps = sh.gamma - latency;
-                        if eps > eps_max {
-                            let sig = Signal::Accept {
-                                event: ev.header.id,
-                                eps,
-                                sum_exec: ev.header.sum_exec.max(1),
-                            };
-                            let cam = ev.header.camera;
-                            let _ = va_sig[va_part_c.route(cam)]
-                                .send(Msg::Sig(sig));
-                            let _ = cr_sig[cr_part_c.route(cam)]
-                                .send(Msg::Sig(sig));
-                        }
+                        Ok(_) => {}
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
                     }
-                    Ok(_) => {}
-                    Err(RecvTimeoutError::Timeout) => {}
-                    Err(RecvTimeoutError::Disconnected) => break,
                 }
             })
         };
@@ -565,6 +676,9 @@ impl LiveEngine {
             throughput: processed as f64 / wall,
             wall_secs: wall,
             peak_active,
+            fusion_updates: shared
+                .fusion_updates
+                .load(Ordering::Relaxed),
             summary,
         })
     }
@@ -595,22 +709,27 @@ impl LiveEngine {
             budget: BudgetManager::new(1, m_max, 2048),
             xi: xi.clone().with_ema(0.1),
             score_threshold: 0.5,
+            // Callers swap in the model service's bootstrap embedding.
+            query_emb: Arc::new(Vec::new()),
+            feedback: FeedbackState::new(),
             img_scratch: Vec::new(),
             staged: Vec::new(),
         }
     }
 }
 
-/// The executor loop shared by VA and CR workers.
+/// The executor loop shared by VA and CR workers. The AOT model it
+/// executes is the block's own typed variant — chosen per
+/// [`AnalyticsBlock::variant`], not per engine stage.
 fn worker_loop(
     mut w: Worker,
     rx: Receiver<Msg>,
     sh: Arc<Shared>,
     svc: ModelService,
-    variant: String,
     mut forward: impl FnMut(Event),
 ) {
     let img_dim = svc.img_dim();
+    let variant = w.block.variant().artifact_name();
     'outer: loop {
         // Drive the batcher.
         let now = now_us(sh.start);
@@ -621,7 +740,7 @@ fn worker_loop(
         match poll {
             BatcherPoll::Ready(batch) => {
                 exec_batch(
-                    &mut w, batch, &sh, &svc, &variant, img_dim,
+                    &mut w, batch, &sh, &svc, variant, img_dim,
                     &mut forward,
                 );
                 continue;
@@ -669,7 +788,7 @@ fn worker_loop(
                 batch,
                 &sh,
                 &svc,
-                &variant,
+                variant,
                 img_dim,
                 &mut forward,
             ),
@@ -687,6 +806,26 @@ fn handle_msg(w: &mut Worker, msg: Msg, sh: &Arc<Shared>) -> bool {
             true
         }
         Msg::Ev(ev) => {
+            // Feedback edge: consume QueryUpdates here — swap the
+            // scoring target iff the update is fresher than the last
+            // applied one; never batched, budgeted or dropped. The
+            // sink adapts every broadcast to the model's feature
+            // dimension ([`fuse_embedding`]), so the length guard is
+            // defence in depth: a mis-sized update (a custom broadcast
+            // path) is sequenced but cannot reach
+            // `ModelPool::execute`, whose dimension check would
+            // otherwise panic the worker mid-serve.
+            if let Payload::QueryUpdate(emb) = &ev.payload {
+                if w.feedback.apply(
+                    ev.header.query,
+                    ev.header.update_seq,
+                    Arc::clone(emb),
+                ) && emb.len() == w.query_emb.len()
+                {
+                    w.query_emb = Arc::clone(emb);
+                }
+                return true;
+            }
             let now = now_us(sh.start);
             let u = now - ev.header.src_arrival;
             let exempt = ev.header.avoid_drop || ev.header.probe;
@@ -772,7 +911,11 @@ fn exec_batch(
         }
     }
 
-    let (out, buf) = svc.execute_reusing(variant, images);
+    let (out, buf) = svc.execute_reusing(
+        variant,
+        images,
+        Arc::clone(&w.query_emb),
+    );
     w.img_scratch = buf;
     let out = out.expect("model execution");
     let end = now_us(sh.start);

@@ -29,7 +29,7 @@
 use std::sync::Arc;
 
 use crate::config::{SemanticsConfig, WorkloadConfig};
-use crate::dataflow::{Event, QueryId};
+use crate::dataflow::{Event, FeedbackState, QueryId};
 use crate::roadnet::{Camera, Graph};
 use crate::util::{Micros, Rng};
 
@@ -115,6 +115,14 @@ pub struct SimCtx<'a> {
     /// Experiment seed, for blocks that hash per-(query, camera,
     /// transit) coins (e.g. whole-transit miss modelling).
     pub seed: u64,
+    /// This executor's applied QF refinements (the §2.2 feedback
+    /// edge). Blocks that model a refined query — e.g. the stock CR
+    /// boosting its re-id accuracy once fusion has sharpened the
+    /// target — consult [`FeedbackState::refined`] per event. Queries
+    /// with no applied refinement (always the case under `NoFusion`)
+    /// see `None`, and consulting it never draws from `rng`, so
+    /// non-fusing runs stay bit-identical.
+    pub feedback: &'a FeedbackState,
 }
 
 /// Platform parameters for the live scoring path.
@@ -258,12 +266,20 @@ pub trait TrackingLogic: Send {
 }
 
 /// QF — Query Fusion (§2.2.5): refine the query embedding from
-/// high-confidence detections. Must be side-effect free with respect to
-/// the dataflow metrics: the engines count refinements but the tuning
-/// triangle never consults QF state.
+/// high-confidence detections. When [`QueryFusion::on_detection`]
+/// reports a refinement, the engine reads [`QueryFusion::embedding`],
+/// stamps it through its [`crate::dataflow::FeedbackRouter`] and routes
+/// it back to every VA/CR executor as a
+/// [`crate::dataflow::Payload::QueryUpdate`] event — the §2.2 feedback
+/// edge. Fusion therefore *does* influence the dataflow (refined
+/// queries score better, which moves detections, the TL spotlight and
+/// ultimately which frames are generated); the tuning triangle itself
+/// (budgets, drops, batching) still never consults QF state, and a
+/// never-refining QF is exactly metric-neutral.
 pub trait QueryFusion: Send {
     /// Observe a sink-side detection event; return `true` when the
-    /// query embedding was refined by it.
+    /// query embedding was refined by it (the engine then broadcasts
+    /// [`QueryFusion::embedding`] upstream, if one is maintained).
     fn on_detection(&mut self, _ev: &Event) -> bool {
         false
     }

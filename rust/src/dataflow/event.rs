@@ -50,6 +50,13 @@ pub struct Header {
     /// Probe events traverse the pipeline without being dropped so the
     /// sink can re-open collapsed budgets (§4.5.2).
     pub probe: bool,
+    /// Update sequence number of a [`Payload::QueryUpdate`] refinement
+    /// (0 on data events). Stamped per query by the engine's
+    /// [`crate::dataflow::FeedbackRouter`]; VA/CR executors apply an
+    /// update iff it is fresher than the last one they saw, so
+    /// duplicate/out-of-order deliveries are discarded
+    /// deterministically.
+    pub update_seq: u32,
 }
 
 impl Header {
@@ -70,6 +77,7 @@ impl Header {
             sum_queue: 0,
             avoid_drop: false,
             probe: false,
+            update_seq: 0,
         }
     }
 
@@ -93,7 +101,11 @@ pub enum Payload {
     Candidate { entity_present: bool, score: f32 },
     /// CR output: confirmed detection verdict (CR → UV/TL/QF).
     Detection { detected: bool, confidence: f32 },
-    /// QF output: an updated query embedding (QF → VA/CR).
+    /// QF output: an updated query embedding routed back to VA/CR (the
+    /// §2.2 feedback edge). The per-query update sequence number rides
+    /// on [`Header::update_seq`]; executors apply the freshest update
+    /// through [`crate::dataflow::FeedbackState`] and discard stale
+    /// deliveries.
     QueryUpdate(Arc<Vec<f32>>),
 }
 

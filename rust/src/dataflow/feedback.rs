@@ -1,0 +1,228 @@
+//! The QF → VA/CR feedback edge (§2.2, Fig. 2).
+//!
+//! Query Fusion *refines the query*: when a sink-side QF block folds a
+//! high-confidence detection into its embedding, the fused embedding
+//! flows **back upstream** so VA/CR score subsequent frames against an
+//! improved target — the loop DeepScale exploits for online adaptation
+//! (see PAPERS.md). This module is the typed plumbing of that edge:
+//!
+//! * [`QueryRefinement`] — one refinement: the query it belongs to, a
+//!   per-query **update sequence number**, and the fused embedding.
+//! * [`FeedbackRouter`] — sink-side: stamps refinements with a
+//!   monotonically increasing per-query sequence number. The engines
+//!   wrap each refinement in a [`Payload::QueryUpdate`] event (the
+//!   sequence number rides on [`Header::update_seq`]) and route one
+//!   copy to every VA/CR executor.
+//! * [`FeedbackState`] — consumer-side: each executor (task / worker)
+//!   keeps one and applies updates **iff fresher** than the last one it
+//!   saw for that query. Duplicate or out-of-order deliveries (N tasks
+//!   each receive every refinement, at different network delays) are
+//!   discarded deterministically, so a refinement changes an executor's
+//!   scoring target exactly once.
+//!
+//! Determinism contract: refinements are ordinary events — in the DES
+//! engines they arrive through the same [`crate::engine::EventCore`]
+//! ordering as data events, so seeded runs remain bit-reproducible.
+//! Apps whose QF never refines (the stock `NoFusion`) mint no
+//! refinements at all, leaving every RNG draw and event identical to a
+//! build without the feedback edge.
+//!
+//! [`Payload::QueryUpdate`]: crate::dataflow::Payload::QueryUpdate
+//! [`Header::update_seq`]: crate::dataflow::Header::update_seq
+
+use std::sync::Arc;
+
+use crate::dataflow::{Event, EventId, Header, Payload, QueryId};
+use crate::util::{FastMap, Micros};
+
+/// The refinement model shared by every simulated scorer: once a query
+/// scores against a fused embedding, its residual error shrinks by
+/// `boost` — `tp ← tp + boost·(1 − tp)`, `fp ← fp·(1 − boost)`. One
+/// definition so the DES blocks and the live front cannot drift apart
+/// (see `SemanticsConfig::fusion_boost` / `SimBackend::fusion_boost`).
+pub fn boosted_rates(boost: f64, tp: f64, fp: f64) -> (f64, f64) {
+    (tp + boost * (1.0 - tp), boosted_residual(boost, fp))
+}
+
+/// A residual error probability under a refined query: shrunk by
+/// `boost` (used for `fp` and `transit_miss`).
+pub fn boosted_residual(boost: f64, p: f64) -> f64 {
+    p * (1.0 - boost)
+}
+
+/// One query-embedding refinement emitted by a QF block, stamped with
+/// its per-query update sequence number (1-based; 0 on a [`Header`]
+/// means "not a refinement").
+#[derive(Debug, Clone)]
+pub struct QueryRefinement {
+    pub query: QueryId,
+    /// Update sequence number assigned by the [`FeedbackRouter`];
+    /// strictly increasing per query.
+    pub seq: u32,
+    /// The fused query embedding.
+    pub embedding: Arc<Vec<f32>>,
+}
+
+impl QueryRefinement {
+    /// Wrap this refinement in a routable [`Payload::QueryUpdate`]
+    /// event. `id`/`camera` identify the triggering detection (for
+    /// traceability only — update events are consumed at the executor,
+    /// never ledgered, batched or dropped).
+    pub fn into_event(
+        &self,
+        id: EventId,
+        camera: usize,
+        now: Micros,
+    ) -> Event {
+        let mut header =
+            Header::new(id, camera, 0, now).with_query(self.query);
+        header.update_seq = self.seq;
+        Event {
+            header,
+            payload: Payload::QueryUpdate(Arc::clone(&self.embedding)),
+        }
+    }
+}
+
+/// Sink-side sequencer: one per engine. Stamps each QF refinement with
+/// the next per-query sequence number so consumers can discard stale
+/// deliveries deterministically.
+#[derive(Debug, Default)]
+pub struct FeedbackRouter {
+    seqs: FastMap<QueryId, u32>,
+}
+
+impl FeedbackRouter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mint the next refinement for `query`.
+    pub fn refine(
+        &mut self,
+        query: QueryId,
+        embedding: Arc<Vec<f32>>,
+    ) -> QueryRefinement {
+        let seq = self.seqs.entry(query).or_insert(0);
+        *seq += 1;
+        QueryRefinement {
+            query,
+            seq: *seq,
+            embedding,
+        }
+    }
+
+    /// Number of refinements minted for `query` so far.
+    pub fn minted(&self, query: QueryId) -> u32 {
+        self.seqs.get(&query).copied().unwrap_or(0)
+    }
+
+    /// Drop a finished query's sequence state.
+    pub fn forget(&mut self, query: QueryId) {
+        self.seqs.remove(&query);
+    }
+}
+
+/// Consumer-side refinement state: the latest applied update per query.
+/// Each VA/CR executor owns one; scoring consults [`Self::refined`] to
+/// get the current (possibly refined) target.
+#[derive(Debug, Default)]
+pub struct FeedbackState {
+    applied: FastMap<QueryId, (u32, Arc<Vec<f32>>)>,
+}
+
+impl FeedbackState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Apply an update iff it is fresher than the last applied one for
+    /// `query`. Returns whether it was applied — `false` means the
+    /// delivery was stale (or a duplicate) and was discarded, so a
+    /// given refinement changes this executor's scores exactly once.
+    pub fn apply(
+        &mut self,
+        query: QueryId,
+        seq: u32,
+        embedding: Arc<Vec<f32>>,
+    ) -> bool {
+        match self.applied.get(&query) {
+            Some((last, _)) if *last >= seq => false,
+            _ => {
+                self.applied.insert(query, (seq, embedding));
+                true
+            }
+        }
+    }
+
+    /// The refined embedding for `query`, if any update was applied.
+    pub fn refined(&self, query: QueryId) -> Option<&[f32]> {
+        self.applied.get(&query).map(|(_, e)| e.as_slice())
+    }
+
+    /// Sequence number of the last applied update (0 = none).
+    pub fn last_seq(&self, query: QueryId) -> u32 {
+        self.applied.get(&query).map(|(s, _)| *s).unwrap_or(0)
+    }
+
+    /// Drop a finished query's state.
+    pub fn forget(&mut self, query: QueryId) {
+        self.applied.remove(&query);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_stamps_monotone_per_query_seqs() {
+        let mut r = FeedbackRouter::new();
+        let a1 = r.refine(1, Arc::new(vec![0.1]));
+        let b1 = r.refine(2, Arc::new(vec![0.2]));
+        let a2 = r.refine(1, Arc::new(vec![0.3]));
+        assert_eq!((a1.query, a1.seq), (1, 1));
+        assert_eq!((b1.query, b1.seq), (2, 1));
+        assert_eq!((a2.query, a2.seq), (1, 2));
+        assert_eq!(r.minted(1), 2);
+        r.forget(1);
+        assert_eq!(r.minted(1), 0);
+        assert_eq!(r.refine(1, Arc::new(vec![])).seq, 1);
+    }
+
+    #[test]
+    fn state_applies_each_refinement_exactly_once() {
+        let mut st = FeedbackState::new();
+        assert_eq!(st.refined(7), None);
+        let e1 = Arc::new(vec![1.0f32]);
+        assert!(st.apply(7, 1, Arc::clone(&e1)));
+        // A duplicate delivery of the same seq is discarded.
+        assert!(!st.apply(7, 1, Arc::clone(&e1)));
+        assert_eq!(st.refined(7), Some(&[1.0f32][..]));
+        assert_eq!(st.last_seq(7), 1);
+        // A fresher update applies; an out-of-order older one does not.
+        assert!(st.apply(7, 3, Arc::new(vec![3.0])));
+        assert!(!st.apply(7, 2, Arc::new(vec![2.0])));
+        assert_eq!(st.refined(7), Some(&[3.0f32][..]));
+        assert_eq!(st.last_seq(7), 3);
+        st.forget(7);
+        assert_eq!(st.refined(7), None);
+        assert_eq!(st.last_seq(7), 0);
+    }
+
+    #[test]
+    fn refinement_event_carries_seq_on_header() {
+        let mut r = FeedbackRouter::new();
+        let rf = r.refine(4, Arc::new(vec![0.5, 0.6]));
+        let ev = rf.into_event(99, 12, 1_000_000);
+        assert_eq!(ev.header.query, 4);
+        assert_eq!(ev.header.update_seq, 1);
+        assert_eq!(ev.header.camera, 12);
+        match &ev.payload {
+            Payload::QueryUpdate(e) => {
+                assert_eq!(e.as_slice(), &[0.5, 0.6])
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -21,10 +21,15 @@
 //!
 //! The rest of this module is the data plane the blocks see:
 //! [`Event`]s (key-value pairs with the §4 tuning header), the
-//! [`Stage`] pipeline and the key [`Partitioner`].
+//! [`Stage`] pipeline, the key [`Partitioner`], and the QF → VA/CR
+//! **feedback edge**: sink-side refinements are stamped with per-query
+//! update sequence numbers by a [`FeedbackRouter`], routed upstream as
+//! [`Payload::QueryUpdate`] events, and applied by each executor's
+//! [`FeedbackState`] with deterministic stale-update discard.
 
 mod blocks;
 mod event;
+mod feedback;
 mod partition;
 mod stage;
 
@@ -35,6 +40,10 @@ pub use blocks::{
 };
 pub use event::{
     Event, EventId, Header, Payload, QueryId, SINGLE_QUERY,
+};
+pub use feedback::{
+    boosted_rates, boosted_residual, FeedbackRouter, FeedbackState,
+    QueryRefinement,
 };
 pub use partition::Partitioner;
 pub use stage::Stage;

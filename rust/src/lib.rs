@@ -67,13 +67,15 @@
 //! [`dataflow::QueryFusion`]. You implement (or pick stock versions
 //! of) the blocks, compose them with [`apps::AppBuilder`], and hand
 //! the resulting [`apps::AppDefinition`] to any engine — the platform
-//! owns batching, dropping, routing and budget adaptation; your code
-//! is never on an engine-specific path. App 5
-//! ([`apps::app5`]) is the worked example: a DeepScale-style
-//! adaptive frame-rate FC over a vehicle re-id CR, built entirely from
-//! the public API:
+//! owns batching, dropping, routing, budget adaptation and the QF →
+//! VA/CR feedback edge; your code is never on an engine-specific
+//! path. App 5 ([`apps::app5`]) is the worked example: a
+//! DeepScale-style adaptive frame-rate FC over a vehicle re-id CR,
+//! built entirely from the public API (this example *runs* under
+//! `cargo test --doc`, on a small network so it finishes in
+//! milliseconds):
 //!
-//! ```no_run
+//! ```
 //! use anveshak::apps::{AdaptiveRateFc, AppBuilder, SimDetector, SimReid};
 //! use anveshak::config::{ExperimentConfig, TlKind};
 //! use anveshak::coordinator::des;
@@ -91,16 +93,67 @@
 //!
 //! // The platform config stays yours: cameras, batching, drops, γ.
 //! let mut cfg = ExperimentConfig::default();
+//! cfg.num_cameras = 40;
+//! cfg.workload.vertices = 40;
+//! cfg.workload.edges = 100;
+//! cfg.duration_secs = 20.0;
 //! app.apply(&mut cfg, true); // cost model + workload tuning + TL
 //! let report = des::run_app(cfg, &app);
+//! assert!(report.summary.generated > 0);
 //! println!("detections: {}", report.detections);
 //! ```
 //!
-//! Custom blocks are ordinary trait impls — see
-//! `examples/custom_app.rs`, which defines its own FC and TL outside
-//! the crate and runs them through the same engines. Model handles are
-//! typed ([`dataflow::ModelVariant`]), so a composition that names a
-//! nonexistent AOT artifact fails at build time with a clear error.
+//! Custom blocks are ordinary trait impls. A Filter Control that
+//! halves every camera's frame rate is a dozen lines, and plugs into
+//! the same engines:
+//!
+//! ```
+//! use anveshak::apps::AppBuilder;
+//! use anveshak::config::{ExperimentConfig, TlKind};
+//! use anveshak::coordinator::des;
+//! use anveshak::dataflow::{FilterControl, QueryId};
+//! use anveshak::util::Micros;
+//!
+//! #[derive(Clone)]
+//! struct HalfRateFc;
+//!
+//! impl FilterControl for HalfRateFc {
+//!     fn admit(
+//!         &mut self,
+//!         _query: QueryId,
+//!         _camera: usize,
+//!         frame_no: u64,
+//!         _now: Micros,
+//!         active: bool,
+//!     ) -> bool {
+//!         active && frame_no % 2 == 0
+//!     }
+//!     fn label(&self) -> &'static str {
+//!         "half-rate"
+//!     }
+//! }
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.num_cameras = 40;
+//! cfg.workload.vertices = 40;
+//! cfg.workload.edges = 100;
+//! cfg.duration_secs = 20.0;
+//! let app = AppBuilder::new("half-rate")
+//!     .filter_control(HalfRateFc)
+//!     .tracking_logic(TlKind::Wbfs)
+//!     .build();
+//! let report = des::run_app(cfg, &app);
+//! assert!(report.summary.conserved());
+//! ```
+//!
+//! `examples/custom_app.rs` goes further (a custom TL as well). Model
+//! handles are typed ([`dataflow::ModelVariant`]), so a composition
+//! that names a nonexistent AOT artifact fails at build time with a
+//! clear error. Since the feedback edge went live, a composition
+//! whose QF refines ([`apps::RnnFusion`]) has its fused embedding
+//! routed back into VA/CR automatically — see
+//! [`dataflow::FeedbackRouter`] / [`dataflow::FeedbackState`] and
+//! `docs/ARCHITECTURE.md` for the loop's determinism contract.
 
 pub mod apps;
 pub mod config;

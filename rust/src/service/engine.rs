@@ -18,13 +18,17 @@
 //! TL (de)activation commands apply at evaluation time rather than
 //! after a control-message latency.
 
-use crate::apps::AppDefinition;
-use crate::config::{BatchingKind, ExperimentConfig, MultiQueryConfig};
+use std::sync::Arc;
+
+use crate::apps::{AppCatalog, AppDefinition};
+use crate::config::{
+    AppKind, BatchingKind, ExperimentConfig, MultiQueryConfig,
+};
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{
-    ContentionResolver, Event, FilterControl, Payload, QueryFusion,
-    QueryId, SimCtx, Stage, TlEnv, TlFactory, TrackingLogic, TruthSource,
-    VideoAnalytics,
+    ContentionResolver, Event, FeedbackRouter, FeedbackState,
+    FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
+    TrackingLogic, TruthSource, VideoAnalytics,
 };
 use crate::engine::EventCore;
 use crate::metrics::{QueryLedgers, Summary};
@@ -97,6 +101,38 @@ struct MqTask {
     busy: bool,
     timer_seq: u64,
     drop_count: u64,
+    /// Applied QF refinements, per query (the feedback edge); each
+    /// executor receives its own [`Payload::QueryUpdate`] copies and
+    /// discards stale deliveries.
+    feedback: FeedbackState,
+}
+
+/// The UDF blocks one query runs, minted from *its* app's
+/// [`AppDefinition`] at activation ([`QuerySpec::app`] →
+/// [`AppCatalog`]) — concurrent queries can run different
+/// compositions over the shared workers. Blocks are kept for the whole
+/// run (late in-flight events of a finished query still step through
+/// the same block, preserving the engine RNG stream).
+struct QueryBlocks {
+    fc: Box<dyn FilterControl>,
+    va: Box<dyn VideoAnalytics>,
+    cr: Box<dyn ContentionResolver>,
+    qf: Box<dyn QueryFusion>,
+    /// Refinements this query's QF block performed.
+    fusion_updates: u64,
+}
+
+impl QueryBlocks {
+    /// Mint a fresh per-query block set from an application.
+    fn mint(app: &AppDefinition) -> Self {
+        Self {
+            fc: app.make_fc(),
+            va: app.make_va(),
+            cr: app.make_cr(),
+            qf: app.make_qf(),
+            fusion_updates: 0,
+        }
+    }
 }
 
 /// Per-query runtime state while active.
@@ -165,14 +201,13 @@ pub struct MultiQueryDes {
     graph: Graph,
     cams: Vec<Camera>,
     net: NetModel,
-    /// Application blocks (UDFs): shared FC/VA/CR/QF instances plus a
-    /// TL factory minting one spotlight per query. The engine only
-    /// talks to them through the dataflow traits.
-    fc: Box<dyn FilterControl>,
-    va: Box<dyn VideoAnalytics>,
-    cr: Box<dyn ContentionResolver>,
-    qf: Box<dyn QueryFusion>,
-    tl_factory: TlFactory,
+    /// Resolves each query's `QuerySpec.app` to the composition it
+    /// runs; per-query FC/VA/CR/QF/TL instances are minted from it at
+    /// activation. The engine only talks to blocks through the
+    /// dataflow traits.
+    catalog: AppCatalog,
+    /// Per-query block instances, insertion keyed by [`QueryId`].
+    blocks: FastMap<QueryId, QueryBlocks>,
     registry: QueryRegistry,
     admission: AdmissionController,
     /// Active query contexts (insertion-ordered id list for iteration
@@ -199,6 +234,8 @@ pub struct MultiQueryDes {
     peak_concurrent: usize,
     ever_queued: u64,
     fusion_updates: u64,
+    /// Stamps QF refinements with per-query update sequence numbers.
+    router: FeedbackRouter,
     m_max: usize,
     rng: Rng,
     now: Micros,
@@ -270,8 +307,17 @@ impl MultiQueryDes {
                 busy: false,
                 timer_seq: 0,
                 drop_count: 0,
+                feedback: FeedbackState::new(),
             });
         }
+
+        // Per-query app resolution: the schedule stamps every spec
+        // with the kind the *passed* app is registered under (so a
+        // custom/explicit `with_app` composition actually runs —
+        // `cfg.app` alone would silently resolve to a stock app when
+        // the two disagree). `set_app_cycle` overrides this for
+        // heterogeneous mixes.
+        let catalog = AppCatalog::new(app.clone(), cfg.app, cfg.tl);
 
         // Poisson arrival schedule with cycling priorities and random
         // start cameras (every query is seeded with a last-seen camera;
@@ -290,7 +336,7 @@ impl MultiQueryDes {
             schedule.push((
                 t,
                 QuerySpec {
-                    app: cfg.app,
+                    app: catalog.default_kind(),
                     label: format!("q{i}"),
                     start_camera: Some(start_camera),
                     priority: (i as u8 % levels) + 1,
@@ -313,11 +359,8 @@ impl MultiQueryDes {
             graph,
             cams,
             net,
-            fc: app.make_fc(),
-            va: app.make_va(),
-            cr: app.make_cr(),
-            qf: app.make_qf(),
-            tl_factory: app.tl_factory(),
+            catalog,
+            blocks: FastMap::default(),
             registry: QueryRegistry::new(),
             admission: AdmissionController::new(policy),
             ctx: FastMap::default(),
@@ -337,6 +380,7 @@ impl MultiQueryDes {
             peak_concurrent: 0,
             ever_queued: 0,
             fusion_updates: 0,
+            router: FeedbackRouter::new(),
             m_max: m_max.max(1),
             rng: rng(seed, 0x3DE5),
             now: 0,
@@ -352,6 +396,21 @@ impl MultiQueryDes {
 
     fn push(&mut self, t: Micros, ev: Ev) {
         self.core.schedule(t, ev);
+    }
+
+    /// Override which application each scheduled query runs, cycling
+    /// through `kinds` in submission order. The Poisson schedule
+    /// defaults every query to the engine-level app; this is how an
+    /// experiment runs a *heterogeneous* query mix (each admitted
+    /// query then gets blocks minted from its own composition). Call
+    /// before [`Self::run`].
+    pub fn set_app_cycle(&mut self, kinds: &[AppKind]) {
+        if kinds.is_empty() {
+            return;
+        }
+        for (i, (_, spec)) in self.schedule.iter_mut().enumerate() {
+            spec.app = kinds[i % kinds.len()];
+        }
     }
 
     /// Run to completion: all arrivals, all lifetimes, plus a drain of
@@ -478,7 +537,7 @@ impl MultiQueryDes {
             .expect("admission checked the transition");
         // Copy the scalar spec fields out instead of cloning the whole
         // spec (the label `String` is the only heap part).
-        let (lifetime, start_cam, weight) = {
+        let (lifetime, start_cam, weight, kind) = {
             let spec = &self.registry.record(id).unwrap().spec;
             (
                 secs(spec.lifetime_secs),
@@ -486,8 +545,16 @@ impl MultiQueryDes {
                     .unwrap_or(0)
                     .min(self.cams.len().saturating_sub(1)),
                 spec.weight(),
+                spec.app,
             )
         };
+        // Mint this query's own blocks from *its* application — the
+        // heterogeneous many-tenant path: concurrent queries may run
+        // different compositions over the shared workers. (ξ service
+        // models stay the engine-level calibration; per-app cost
+        // scaling is a config-time `apply` concern.)
+        let app = Arc::clone(self.catalog.get(kind));
+        self.blocks.insert(id, QueryBlocks::mint(&app));
         let start_vertex = self.cams[start_cam].vertex;
         let walk = EntityWalk::simulate(
             &self.graph,
@@ -504,7 +571,7 @@ impl MultiQueryDes {
             lifetime + 60 * SEC,
             200_000,
         );
-        let mut tl = (self.tl_factory)(&TlEnv {
+        let mut tl = app.make_tl(&TlEnv {
             peak_speed_mps: self.cfg.tl_peak_speed_mps,
             mean_road_m: self.cfg.workload.mean_road_m,
             fov_m: self.cfg.workload.fov_m,
@@ -569,12 +636,19 @@ impl MultiQueryDes {
                 self.ledgers.dropped(query, qe.item.header.id, stage);
             }
             self.tasks[ti].budgets.remove(&query);
+            // Applied refinements die with the query.
+            self.tasks[ti].feedback.forget(query);
         }
+        self.router.forget(query);
         for cam in 0..self.fc_budget.len() {
             self.fc_budget[cam].remove(&query);
         }
-        // Drop the FC block's per-query state with the query.
-        self.fc.forget_query(query);
+        // Fire the FC lifecycle hook (the per-query block instance is
+        // kept — late in-flight events still step through it — but any
+        // per-query state it holds is dropped now).
+        if let Some(qb) = self.blocks.get_mut(&query) {
+            qb.fc.forget_query(query);
+        }
         // Capacity freed: promote wait-listed queries that now fit.
         while let Some(next) = self.registry.next_pending() {
             let decision = {
@@ -615,15 +689,20 @@ impl MultiQueryDes {
         // the loop body never mutates `self.active`.
         for qi in 0..self.active.len() {
             let q = self.active[qi];
-            // FC user-logic: the block decides whether this (query,
-            // camera) frame enters the dataflow, given the query's
-            // spotlight activation flag.
+            // FC user-logic: the query's own FC block decides whether
+            // this (query, camera) frame enters the dataflow, given
+            // the query's spotlight activation flag.
             let wants = self
                 .ctx
                 .get(&q)
                 .map(|ctx| ctx.active_cams[cam])
                 .unwrap_or(false);
-            if !self.fc.admit(q, cam, frame_no, t, wants) {
+            let admitted = self
+                .blocks
+                .get_mut(&q)
+                .map(|b| b.fc.admit(q, cam, frame_no, t, wants))
+                .unwrap_or(false);
+            if !admitted {
                 continue;
             }
             let present = self
@@ -735,6 +814,24 @@ impl MultiQueryDes {
         match self.tasks[task].stage {
             Stage::Uv => self.on_sink_arrive(ev, batch),
             Stage::Va | Stage::Cr => {
+                // Feedback edge: a QueryUpdate swaps this executor's
+                // scoring target for the query (iff fresher than the
+                // last applied update) and is consumed here — it never
+                // touches the fair-share batcher, budgets or drops.
+                // Updates for finished queries are dropped: an
+                // in-flight delivery arriving after the query's
+                // cleanup must not re-insert forgotten state.
+                if let Payload::QueryUpdate(emb) = &ev.payload {
+                    let q = ev.header.query;
+                    if self.ctx.contains_key(&q) {
+                        self.tasks[task].feedback.apply(
+                            q,
+                            ev.header.update_seq,
+                            Arc::clone(emb),
+                        );
+                    }
+                    return;
+                }
                 let now = self.now;
                 let q = ev.header.query;
                 let u = now - ev.header.src_arrival;
@@ -921,9 +1018,11 @@ impl MultiQueryDes {
         }
         self.tasks[task].batcher.recycle(batch);
 
-        // Module user-logic: one virtual call for the whole cross-query
-        // batch (events stay in arrival order, so the engine RNG stream
-        // is identical to per-event dispatch).
+        // Module user-logic: dispatch each maximal run of same-query
+        // events to *that query's* block, in arrival order — one
+        // virtual call per run, and because every block draws from the
+        // shared engine RNG in event order, the RNG stream is identical
+        // to whole-batch dispatch when all queries run the same app.
         {
             let truth = MqTruth { ctx: &self.ctx };
             let mut sim = SimCtx {
@@ -931,11 +1030,47 @@ impl MultiQueryDes {
                 truth: &truth,
                 sem: &self.cfg.semantics,
                 seed: self.cfg.seed,
+                feedback: &self.tasks[task].feedback,
             };
-            match stage {
-                Stage::Va => self.va.step_sim(&mut staged, &mut sim),
-                Stage::Cr => self.cr.step_sim(&mut staged, &mut sim),
-                _ => {}
+            let mut i = 0;
+            while i < staged.len() {
+                let q = staged[i].header.query;
+                let mut j = i + 1;
+                while j < staged.len()
+                    && staged[j].header.query == q
+                {
+                    j += 1;
+                }
+                // Blocks are minted at activation and kept for the
+                // whole run, so any in-flight event finds its block;
+                // a missing entry (unreachable in practice) re-mints
+                // from the query's own spec — deterministically, and
+                // preserving the per-query-app invariant.
+                if !self.blocks.contains_key(&q) {
+                    debug_assert!(
+                        false,
+                        "query {q} stepped before activation minted \
+                         its blocks"
+                    );
+                    let kind = self
+                        .registry
+                        .record(q)
+                        .map(|r| r.spec.app)
+                        .unwrap_or(self.catalog.default_kind());
+                    let app = Arc::clone(self.catalog.get(kind));
+                    self.blocks.insert(q, QueryBlocks::mint(&app));
+                }
+                let qb = self.blocks.get_mut(&q).unwrap();
+                match stage {
+                    Stage::Va => {
+                        qb.va.step_sim(&mut staged[i..j], &mut sim)
+                    }
+                    Stage::Cr => {
+                        qb.cr.step_sim(&mut staged[i..j], &mut sim)
+                    }
+                    _ => {}
+                }
+                i = j;
             }
         }
 
@@ -1119,10 +1254,33 @@ impl MultiQueryDes {
             if let Some(ctx) = self.ctx.get_mut(&q) {
                 ctx.detections += 1;
             }
-            if self.qf.on_detection(&ev) {
-                // QF user-logic refines the query embedding;
-                // metric-neutral by contract.
-                self.fusion_updates += 1;
+            // This query's own QF block observes the detection; when
+            // it refines, close the feedback loop for this query only.
+            // Gated on the query still being active — late in-flight
+            // detections of a completed query must not keep fusing
+            // (the front's sink drops the QF block at deregistration;
+            // this is the DES equivalent), and the router's sequence
+            // state for the query is already gone.
+            let active = self.ctx.contains_key(&q);
+            let refined = match self.blocks.get_mut(&q) {
+                Some(qb) if active => {
+                    if qb.qf.on_detection(&ev) {
+                        qb.fusion_updates += 1;
+                        self.fusion_updates += 1;
+                        qb.qf.embedding().map(|e| Arc::new(e.to_vec()))
+                    } else {
+                        None
+                    }
+                }
+                _ => None,
+            };
+            if let Some(emb) = refined {
+                self.route_refinement(
+                    q,
+                    emb,
+                    ev.header.id,
+                    ev.header.camera,
+                );
             }
         }
         self.ledgers
@@ -1149,6 +1307,37 @@ impl MultiQueryDes {
                     self.send_accepts(sq, scam, slowest_id, eps, sum_exec);
                 }
             }
+        }
+    }
+
+    /// Route a query's fused embedding upstream as a seq-stamped
+    /// [`Payload::QueryUpdate`], one copy per VA/CR executor, each
+    /// after a control-message network delay (deterministic arrival
+    /// order: task index, then event-core sequence).
+    fn route_refinement(
+        &mut self,
+        q: QueryId,
+        embedding: Arc<Vec<f32>>,
+        trigger: u64,
+        camera: usize,
+    ) {
+        let refinement = self.router.refine(q, embedding);
+        let lat = self
+            .net
+            .transfer_estimate(self.net.meta_bytes, self.now);
+        for task in 0..self.tasks.len() {
+            if !matches!(self.tasks[task].stage, Stage::Va | Stage::Cr)
+            {
+                continue;
+            }
+            self.push(
+                self.now + lat,
+                Ev::Arrive {
+                    task,
+                    ev: refinement.into_event(trigger, camera, self.now),
+                    batch: None,
+                },
+            );
         }
     }
 
@@ -1224,6 +1413,11 @@ impl MultiQueryDes {
         for rec in self.registry.records() {
             let mut r = QueryReport::from_record(rec);
             r.summary = self.ledgers.summary(rec.id);
+            r.fusion_updates = self
+                .blocks
+                .get(&rec.id)
+                .map(|b| b.fusion_updates)
+                .unwrap_or(0);
             if let Some(&(d, p)) = self.finished_stats.get(&rec.id) {
                 r.detections = d;
                 r.peak_active = p;

@@ -10,6 +10,15 @@
 //! [`AdmissionController`] policy as the DES mode, and wait-listed
 //! queries are promoted when capacity frees up (completion or cancel).
 //!
+//! Each admitted query runs **its own application**: `QuerySpec.app`
+//! resolves through an [`AppCatalog`] and the query's blocks (per-
+//! worker VA/CR, sink-side QF, control-plane FC + TL) are minted from
+//! that composition — concurrent queries may run different apps over
+//! one physical deployment. The sink also closes the §2.2 **feedback
+//! loop**: QF refinements are seq-stamped and broadcast to every
+//! worker as [`Payload::QueryUpdate`] events, and workers score each
+//! query's subsequent batches against its refined embedding.
+//!
 //! Scoring is pluggable through [`ScoreBackend`]: the bundled
 //! [`SimBackend`] scores deterministically from ground-truth labels (so
 //! the service layer is fully testable without PJRT), while a
@@ -32,11 +41,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::apps::AppDefinition;
-use crate::config::ExperimentConfig;
+use crate::apps::{AppCatalog, AppDefinition};
+use crate::config::{ExperimentConfig, SemanticsConfig};
 use crate::dataflow::{
-    AnalyticsBlock, Event, FilterControl, Header, Partitioner, Payload,
-    QueryFusion, QueryId, ScoreParams, Stage, TlEnv, TlFactory,
+    boosted_rates, AnalyticsBlock, Event, FeedbackRouter,
+    FeedbackState, FilterControl, Header, ModelVariant, Partitioner,
+    Payload, QueryFusion, QueryId, ScoreParams, Stage, TlEnv,
     TrackingLogic,
 };
 use crate::metrics::{QueryLedgers, Summary};
@@ -51,30 +61,41 @@ use crate::service::scheduler::FairShareBatcher;
 use crate::sim::{EntityWalk, GroundTruth};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{drop_at_queue, BatcherPoll, QueuedEvent, XiModel};
-use crate::util::{millis, secs, Micros, SEC};
+use crate::util::{millis, secs, FastMap, Micros, SEC};
+
+/// What one scoring call is scoring: the pipeline stage, the *block's*
+/// typed model variant (chosen per [`AnalyticsBlock::variant`], not per
+/// engine — App 4 runs a re-id model inside VA), the query the group
+/// belongs to, and the latest QF-refined embedding the worker has
+/// applied for that query (the §2.2 feedback edge; `None` until a
+/// refinement arrives).
+pub struct ScoreCtx<'a> {
+    pub stage: Stage,
+    pub variant: ModelVariant,
+    pub query: QueryId,
+    pub refined: Option<&'a [f32]>,
+}
 
 /// Pluggable model execution for the service front.
 pub trait ScoreBackend: Send + Sync {
     /// Score every event of one query's group within a batch (one score
     /// per event, higher = better match against this query).
-    fn score(
-        &self,
-        stage: Stage,
-        query: QueryId,
-        events: &[Event],
-    ) -> Vec<f32> {
+    fn score(&self, ctx: &ScoreCtx<'_>, events: &[Event]) -> Vec<f32> {
         let mut out = Vec::with_capacity(events.len());
-        self.score_into(stage, query, events, &mut out);
+        self.score_into(ctx, events, &mut out);
         out
     }
 
     /// Append one score per event to `out` — the workers score whole
     /// batches into one reusable columnar buffer, so backends should
-    /// implement this (the hot variant) and inherit `score`.
+    /// implement this (the hot variant) and inherit `score`. A
+    /// PJRT-backed deployment executes `ctx.variant` against
+    /// `ctx.refined` (falling back to the query's bootstrap embedding);
+    /// the bundled [`SimBackend`] models the refinement as sharpened
+    /// error rates.
     fn score_into(
         &self,
-        stage: Stage,
-        query: QueryId,
+        ctx: &ScoreCtx<'_>,
         events: &[Event],
         out: &mut Vec<f32>,
     );
@@ -92,6 +113,15 @@ pub struct SimBackend {
     pub tp: f64,
     /// P(score high | entity absent).
     pub fp: f64,
+    /// Once a query's embedding has been QF-refined, its residual
+    /// error rates shrink by this fraction (`tp ← tp + boost·(1−tp)`,
+    /// `fp ← fp·(1−boost)`) — a refinement measurably changes
+    /// subsequent scores, deterministically. This is the live-front
+    /// counterpart of [`SemanticsConfig::fusion_boost`] (same default);
+    /// build the backend with [`SimBackend::from_semantics`] when a
+    /// config should govern both engines identically — a bare
+    /// `SimBackend::default()` does **not** read the config.
+    pub fusion_boost: f64,
     /// VA/CR per-batch service models (small, so tests stay fast).
     pub va_xi: XiModel,
     pub cr_xi: XiModel,
@@ -103,6 +133,7 @@ impl Default for SimBackend {
             seed: 2019,
             tp: 0.97,
             fp: 0.01,
+            fusion_boost: 0.5,
             va_xi: XiModel::affine_ms(1.0, 0.3),
             cr_xi: XiModel::affine_ms(2.0, 0.5),
         }
@@ -110,6 +141,20 @@ impl Default for SimBackend {
 }
 
 impl SimBackend {
+    /// Calibrate the backend from an experiment's simulated-detection
+    /// semantics, so a DES run and a live-front run of the same config
+    /// share one set of per-stage error rates and one `fusion_boost`
+    /// (a bare `Default` keeps its own fixed rates and ignores the
+    /// config).
+    pub fn from_semantics(sem: &SemanticsConfig) -> Self {
+        Self {
+            tp: sem.va_tp.min(sem.cr_tp),
+            fp: sem.va_fp.max(sem.cr_fp),
+            fusion_boost: sem.fusion_boost,
+            ..Self::default()
+        }
+    }
+
     /// Per-(event, query, stage) coin — the stage salt makes VA and CR
     /// draws independent, so the pipeline's combined error rates are
     /// tp² / fp², not a single shared draw.
@@ -132,15 +177,24 @@ impl SimBackend {
 impl ScoreBackend for SimBackend {
     fn score_into(
         &self,
-        stage: Stage,
-        query: QueryId,
+        ctx: &ScoreCtx<'_>,
         events: &[Event],
         out: &mut Vec<f32>,
     ) {
+        // The feedback edge: a refined query scores with sharpened
+        // error rates (the shared [`boosted_rates`] model). Same
+        // per-event coin either way — only the threshold moves — so
+        // exactly the coins that fall between the two thresholds flip,
+        // deterministically.
+        let (tp, fp) = if ctx.refined.is_some() {
+            boosted_rates(self.fusion_boost, self.tp, self.fp)
+        } else {
+            (self.tp, self.fp)
+        };
         out.extend(events.iter().map(|ev| {
             let present = ev.payload.entity_present() == Some(true);
-            let p = if present { self.tp } else { self.fp };
-            if self.coin(ev, query, stage) < p {
+            let p = if present { tp } else { fp };
+            if self.coin(ev, ctx.query, ctx.stage) < p {
                 0.9
             } else {
                 0.1
@@ -156,17 +210,24 @@ impl ScoreBackend for SimBackend {
     }
 }
 
-/// Worker inbox messages.
+/// Worker/sink inbox messages. `Register` carries the per-(query,
+/// worker) analytics block minted from *that query's* app —
+/// heterogeneous queries run their own compositions over the shared
+/// workers. `RegisterQf` is the sink-side counterpart (one QF block
+/// per query).
 enum Msg {
     Ev(Event),
-    Register(QueryId, u32),
+    Register(QueryId, u32, AnalyticsBlock),
+    RegisterQf(QueryId, Box<dyn QueryFusion>),
     Deregister(QueryId),
     Stop,
 }
 
 /// Per-query runtime state owned by the control plane. Ground truth is
 /// behind an `Arc` so the feed loop can snapshot it and compute
-/// visibility *outside* the state lock.
+/// visibility *outside* the state lock. (The query's FC block lives in
+/// the feed thread, not here — FC admission and ground-truth scans
+/// both run lock-free on the snapshot.)
 struct LiveCtx {
     t0: Micros,
     end: Micros,
@@ -188,6 +249,8 @@ struct State {
     /// admissions cannot overshoot `max_active_cameras` in the window.
     reserved_cameras: Vec<(QueryId, usize)>,
     finished_stats: Vec<(QueryId, (u64, usize))>,
+    /// Per-query QF refinement counts (updated by the sink).
+    fusion_counts: FastMap<QueryId, u64>,
     next_event_id: u64,
     peak_concurrent: usize,
 }
@@ -228,9 +291,10 @@ struct Inner {
     graph: Graph,
     cams: Vec<Camera>,
     admission: AdmissionController,
-    /// Mints one TL block per query (the app's factory).
-    tl_factory: TlFactory,
-    /// Query-embedding refinements by the app's QF block (sink-side).
+    /// Resolves each query's `QuerySpec.app` to the composition whose
+    /// blocks it runs (per-query FC/VA/CR/QF/TL instances).
+    catalog: AppCatalog,
+    /// Query-embedding refinements across all queries (sink-side).
     fusion_updates: AtomicU64,
     state: Mutex<State>,
     start: Instant,
@@ -243,14 +307,55 @@ impl Inner {
     }
 }
 
-/// Phase A of activation — the registry transition plus worker
-/// registration. Caller holds the state lock; the expensive runtime
+/// The service's worker/sink inboxes, grouped so registration can mint
+/// stage-appropriate per-query blocks (VA workers get VA blocks, CR
+/// workers CR blocks, the sink gets the QF block).
+#[derive(Clone)]
+struct Channels {
+    va: Vec<Sender<Msg>>,
+    cr: Vec<Sender<Msg>>,
+    sink: Sender<Msg>,
+}
+
+impl Channels {
+    /// Announce a freshly admitted query everywhere, minting one block
+    /// per worker from the query's own app.
+    fn register(&self, app: &AppDefinition, id: QueryId, weight: u32) {
+        for tx in &self.va {
+            let _ = tx.send(Msg::Register(
+                id,
+                weight,
+                AnalyticsBlock::Va(app.make_va()),
+            ));
+        }
+        for tx in &self.cr {
+            let _ = tx.send(Msg::Register(
+                id,
+                weight,
+                AnalyticsBlock::Cr(app.make_cr()),
+            ));
+        }
+        let _ = self.sink.send(Msg::RegisterQf(id, app.make_qf()));
+    }
+
+    /// Retire a finished/cancelled query everywhere.
+    fn deregister(&self, id: QueryId) {
+        for tx in self.va.iter().chain(self.cr.iter()) {
+            let _ = tx.send(Msg::Deregister(id));
+        }
+        let _ = self.sink.send(Msg::Deregister(id));
+    }
+}
+
+/// Phase A of activation — the registry transition plus worker/sink
+/// registration (each worker receives its own block minted from the
+/// query's app). Caller holds the state lock; the expensive runtime
 /// context ([`build_ctx`]) is deliberately **not** built here, so a
 /// submit cannot stall the dataflow behind the lock.
 fn admit_locked(
     inner: &Inner,
     st: &mut State,
-    worker_tx: &[Sender<Msg>],
+    channels: &Channels,
     id: QueryId,
     now: Micros,
 ) {
@@ -266,9 +371,8 @@ fn admit_locked(
         id,
         spec.initial_camera_estimate(inner.cfg.num_cameras),
     ));
-    for tx in worker_tx {
-        let _ = tx.send(Msg::Register(id, spec.weight()));
-    }
+    let app = inner.catalog.get(spec.app);
+    channels.register(app, id, spec.weight());
 }
 
 /// Phase B — build the query's runtime context (entity walk, ground
@@ -300,7 +404,10 @@ fn build_ctx(
         lifetime + 10 * SEC,
         100_000,
     );
-    let mut tl = (inner.tl_factory)(&TlEnv {
+    // The query's own app supplies its TL spotlight (its FC gate is
+    // minted by the feed thread).
+    let app = inner.catalog.get(spec.app);
+    let mut tl = app.make_tl(&TlEnv {
         peak_speed_mps: inner.cfg.tl_peak_speed_mps,
         mean_road_m: inner.cfg.workload.mean_road_m,
         fov_m: inner.cfg.workload.fov_m,
@@ -358,7 +465,7 @@ fn finish_activation(
 fn promote_locked(
     inner: &Inner,
     st: &mut State,
-    worker_tx: &[Sender<Msg>],
+    channels: &Channels,
     now: Micros,
 ) -> Vec<(QueryId, QuerySpec, Micros)> {
     let mut admitted = Vec::new();
@@ -372,7 +479,7 @@ fn promote_locked(
             inner.cfg.num_cameras,
         );
         if decision == Admission::Admit {
-            admit_locked(inner, st, worker_tx, next, now);
+            admit_locked(inner, st, channels, next, now);
             admitted.push((next, spec, now));
         } else {
             break;
@@ -395,17 +502,15 @@ pub struct ServiceReport {
 /// The running multi-query service.
 pub struct TrackingService {
     inner: Arc<Inner>,
-    /// All worker inboxes (VA then CR) for registration broadcasts.
-    worker_tx: Vec<Sender<Msg>>,
-    va_tx: Vec<Sender<Msg>>,
-    cr_tx: Vec<Sender<Msg>>,
+    /// Worker + sink inboxes, grouped by stage so per-query blocks are
+    /// minted stage-appropriately at registration.
+    channels: Channels,
     feed: Option<JoinHandle<()>>,
     /// VA and CR worker handles, kept separate so shutdown can be
     /// staged upstream-first (VA flushes into live CR workers).
     va_workers: Vec<JoinHandle<()>>,
     cr_workers: Vec<JoinHandle<()>>,
     sink: Option<JoinHandle<()>>,
-    sink_tx: Sender<Msg>,
     max_batch_delay: Micros,
 }
 
@@ -424,9 +529,11 @@ impl TrackingService {
     /// Start the shared workers and the feed loop for an arbitrary
     /// [`AppDefinition`]; returns immediately. `cfg` describes the
     /// camera network and worker counts; queries are then submitted at
-    /// runtime. Each worker thread owns its own minted VA/CR block, the
-    /// feed loop owns the FC block, the sink owns QF, and the app's TL
-    /// factory builds one spotlight per admitted query.
+    /// runtime. Every admitted query gets its **own** blocks minted
+    /// from *its* app (`QuerySpec.app` resolved through an
+    /// [`AppCatalog`] whose default is `app`): per-worker VA/CR
+    /// blocks, a sink-side QF, and per-query FC + TL in the control
+    /// plane — concurrent queries may run different compositions.
     pub fn start_with_app(
         cfg: ExperimentConfig,
         policy: AdmissionPolicy,
@@ -440,9 +547,11 @@ impl TrackingService {
             0,
             cfg.workload.fov_m,
         );
+        let catalog =
+            AppCatalog::new(app.clone(), cfg.app, cfg.tl);
         let inner = Arc::new(Inner {
             admission: AdmissionController::new(policy),
-            tl_factory: app.tl_factory(),
+            catalog,
             fusion_updates: AtomicU64::new(0),
             state: Mutex::new(State {
                 registry: QueryRegistry::new(),
@@ -450,6 +559,7 @@ impl TrackingService {
                 ctx: Vec::new(),
                 reserved_cameras: Vec::new(),
                 finished_stats: Vec::new(),
+                fusion_counts: FastMap::default(),
                 next_event_id: 0,
                 peak_concurrent: 0,
             }),
@@ -469,7 +579,9 @@ impl TrackingService {
 
         let (sink_tx, sink_rx) = mpsc::channel::<Msg>();
 
-        // CR workers → sink.
+        // CR workers → sink. Each worker's *default* block (late
+        // events of already-retired queries) comes from the default
+        // app; per-query blocks arrive via Msg::Register.
         let mut cr_tx = Vec::new();
         let mut cr_workers = Vec::new();
         for _ in 0..n_cr {
@@ -479,7 +591,9 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
-            let block = AnalyticsBlock::Cr(app.make_cr());
+            let block = AnalyticsBlock::Cr(
+                inner.catalog.default_app().make_cr(),
+            );
             cr_workers.push(std::thread::spawn(move || {
                 worker_loop(
                     Stage::Cr,
@@ -507,7 +621,9 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
-            let block = AnalyticsBlock::Va(app.make_va());
+            let block = AnalyticsBlock::Va(
+                inner.catalog.default_app().make_va(),
+            );
             va_workers.push(std::thread::spawn(move || {
                 worker_loop(
                     Stage::Va,
@@ -526,39 +642,45 @@ impl TrackingService {
             }));
         }
 
-        let mut worker_tx: Vec<Sender<Msg>> = Vec::new();
-        worker_tx.extend(va_tx.iter().cloned());
-        worker_tx.extend(cr_tx.iter().cloned());
-
-        // Sink thread: completion accounting + TL updates + QF.
-        let sink = {
-            let inner_c = Arc::clone(&inner);
-            let qf = app.make_qf();
-            std::thread::spawn(move || sink_loop(inner_c, sink_rx, qf))
+        let channels = Channels {
+            va: va_tx.clone(),
+            cr: cr_tx.clone(),
+            sink: sink_tx,
         };
 
-        // Feed thread: FC gating, frame generation, expiry, spotlight
-        // refresh, wait-queue promotion.
+        // Sink thread: completion accounting + TL updates + per-query
+        // QF, broadcasting refinements back to every worker (the
+        // feedback edge).
+        let sink = {
+            let inner_c = Arc::clone(&inner);
+            let workers: Vec<Sender<Msg>> = va_tx
+                .iter()
+                .chain(cr_tx.iter())
+                .cloned()
+                .collect();
+            std::thread::spawn(move || {
+                sink_loop(inner_c, sink_rx, workers)
+            })
+        };
+
+        // Feed thread: per-query FC gating, frame generation, expiry,
+        // spotlight refresh, wait-queue promotion.
         let feed = {
             let inner_c = Arc::clone(&inner);
             let vas = va_tx.clone();
-            let all = worker_tx.clone();
-            let fc = app.make_fc();
+            let chans = channels.clone();
             std::thread::spawn(move || {
-                feed_loop(inner_c, fc, vas, va_part, all)
+                feed_loop(inner_c, vas, va_part, chans)
             })
         };
 
         Ok(Self {
             inner,
-            worker_tx,
-            va_tx,
-            cr_tx,
+            channels,
             feed: Some(feed),
             va_workers,
             cr_workers,
             sink: Some(sink),
-            sink_tx,
             max_batch_delay,
         })
     }
@@ -584,7 +706,7 @@ impl TrackingService {
                 admit_locked(
                     &self.inner,
                     &mut st,
-                    &self.worker_tx,
+                    &self.channels,
                     id,
                     now,
                 );
@@ -617,11 +739,9 @@ impl TrackingService {
             st.finished_stats
                 .push((id, (ctx.detections, ctx.peak_active)));
         }
-        for tx in &self.worker_tx {
-            let _ = tx.send(Msg::Deregister(id));
-        }
+        self.channels.deregister(id);
         let admitted =
-            promote_locked(&self.inner, &mut st, &self.worker_tx, now);
+            promote_locked(&self.inner, &mut st, &self.channels, now);
         drop(st);
         finish_activation(&self.inner, admitted);
         Ok(())
@@ -649,19 +769,19 @@ impl TrackingService {
         if let Some(h) = self.feed.take() {
             let _ = h.join();
         }
-        for tx in &self.va_tx {
+        for tx in &self.channels.va {
             let _ = tx.send(Msg::Stop);
         }
         for h in self.va_workers.drain(..) {
             let _ = h.join();
         }
-        for tx in &self.cr_tx {
+        for tx in &self.channels.cr {
             let _ = tx.send(Msg::Stop);
         }
         for h in self.cr_workers.drain(..) {
             let _ = h.join();
         }
-        let _ = self.sink_tx.send(Msg::Stop);
+        let _ = self.channels.sink.send(Msg::Stop);
         if let Some(h) = self.sink.take() {
             let _ = h.join();
         }
@@ -673,6 +793,11 @@ impl TrackingService {
         for rec in st.registry.records() {
             let mut r = QueryReport::from_record(rec);
             r.summary = st.ledgers.summary(rec.id);
+            r.fusion_updates = st
+                .fusion_counts
+                .get(&rec.id)
+                .copied()
+                .unwrap_or(0);
             if let Some((_, (d, p))) = st
                 .finished_stats
                 .iter()
@@ -699,27 +824,37 @@ impl TrackingService {
 }
 
 /// Frame generation: one event per (active query, active camera) that
-/// the FC block admits, at the configured fps; also expires elapsed
-/// queries (promoting wait-listed ones) and refreshes per-query
-/// spotlights.
+/// the query's own FC block admits, at the configured fps; also
+/// expires elapsed queries (promoting wait-listed ones) and refreshes
+/// per-query spotlights. The per-query FC blocks live *in this
+/// thread* (minted from each query's app on first sight, dropped when
+/// the query disappears), so both FC admission and the ground-truth
+/// visibility scan — the O(queries × cameras) work — run lock-free on
+/// a snapshot; the state lock is held only for spotlight refresh and
+/// bookkeeping.
 fn feed_loop(
     inner: Arc<Inner>,
-    mut fc: Box<dyn FilterControl>,
     va_tx: Vec<Sender<Msg>>,
     va_part: Partitioner,
-    all_tx: Vec<Sender<Msg>>,
+    channels: Channels,
 ) {
     let cfg = &inner.cfg;
     let period = Duration::from_micros((1e6 / cfg.fps.max(0.1)) as u64);
     let mut frame_no: u64 = 0;
     let mut active_buf: Vec<usize> = Vec::new();
+    // Each query's FC block — feed-thread-owned.
+    let mut fcs: FastMap<QueryId, Box<dyn FilterControl>> =
+        FastMap::default();
     let mut next_fire = Instant::now();
     while !inner.stopping.load(Ordering::SeqCst) {
         let now = inner.now_us();
         let mut outgoing: Vec<Event> = Vec::new();
         let mut admitted = Vec::new();
+        // Per query: (id, app kind, t0, ground truth, activation
+        // flags) — everything the lock-free FC/visibility pass needs.
         let mut snapshots: Vec<(
             QueryId,
+            crate::config::AppKind,
             Micros,
             Arc<GroundTruth>,
             Vec<bool>,
@@ -741,20 +876,15 @@ fn feed_loop(
                         (ctx.detections, ctx.peak_active),
                     ));
                 }
-                // Drop the FC's per-query state with the query.
-                fc.forget_query(*q);
-                for tx in &all_tx {
-                    let _ = tx.send(Msg::Deregister(*q));
-                }
+                channels.deregister(*q);
             }
             if !expired.is_empty() {
                 admitted =
-                    promote_locked(&inner, &mut st, &all_tx, now);
+                    promote_locked(&inner, &mut st, &channels, now);
             }
-            // Refresh spotlights and snapshot what frame generation
-            // needs; the O(queries × cameras) ground-truth scan runs
-            // *outside* the lock so workers and the sink keep flowing.
-            for (_, ctx) in st.ctx.iter_mut() {
+            // Refresh spotlights and snapshot what the lock-free pass
+            // needs.
+            for (q, ctx) in st.ctx.iter_mut() {
                 ctx.tl.active_set_into(
                     &inner.graph,
                     now,
@@ -770,20 +900,30 @@ fn feed_loop(
                 }
             }
             for (q, ctx) in st.ctx.iter() {
+                let kind = st
+                    .registry
+                    .record(*q)
+                    .map(|r| r.spec.app)
+                    .unwrap_or(inner.catalog.default_kind());
                 snapshots.push((
                     *q,
+                    kind,
                     ctx.t0,
                     Arc::clone(&ctx.gt),
                     ctx.active_cams.clone(),
                 ));
             }
         }
-        // FC admission + visibility lookups, lock-free: the FC block
-        // sees every (query, camera) pair with the spotlight's real
-        // activation flag — inactive cameras included, so stateful FCs
-        // (warm-up windows, duty cycles) observe deactivations too.
+        // FC admission + visibility lookups, lock-free: each query's
+        // own FC block sees every camera with the spotlight's real
+        // activation flag — inactive cameras included, so stateful
+        // FCs (warm-up windows, duty cycles) observe deactivations.
         let mut frames: Vec<(QueryId, usize, bool)> = Vec::new();
-        for (q, t0, gt, active_cams) in &snapshots {
+        for (q, kind, t0, gt, active_cams) in &snapshots {
+            // First sight of this query: mint its FC from its own app.
+            let fc = fcs.entry(*q).or_insert_with(|| {
+                inner.catalog.get(*kind).make_fc()
+            });
             for (cam, &act) in active_cams.iter().enumerate() {
                 if !fc.admit(*q, cam, frame_no, now, act) {
                     continue;
@@ -791,6 +931,15 @@ fn feed_loop(
                 frames.push((*q, cam, gt.visible(cam, now - t0)));
             }
         }
+        // Drop FC blocks of queries that disappeared (completed or
+        // cancelled), firing the lifecycle hook first.
+        fcs.retain(|id, fc| {
+            let live = snapshots.iter().any(|(q, ..)| q == id);
+            if !live {
+                fc.forget_query(*id);
+            }
+            live
+        });
         // Short second critical section: allocate ids + ledger.
         {
             let mut st = inner.state.lock().unwrap();
@@ -829,11 +978,24 @@ fn feed_loop(
     }
 }
 
+/// Per-worker runtime state the message handler mutates: the
+/// fair-share batcher, the per-query analytics blocks (minted from
+/// each query's app and delivered via `Msg::Register`), and the
+/// applied QF refinements.
+struct WorkerState {
+    batcher: FairShareBatcher<Event>,
+    /// Each query's block on this worker; removed at deregistration.
+    blocks: FastMap<QueryId, AnalyticsBlock>,
+    /// Stale-discarding view of routed QF refinements.
+    feedback: FeedbackState,
+}
+
 /// Shared executor loop: fair-share batching + backend scoring, with
-/// the app's VA/CR block owning the payload transformation.
+/// each query's own VA/CR block owning its payload transformation
+/// (`default_block` serves late events of already-retired queries).
 fn worker_loop(
     stage: Stage,
-    mut block: AnalyticsBlock,
+    mut default_block: AnalyticsBlock,
     rx: Receiver<Msg>,
     inner: Arc<Inner>,
     backend: Arc<dyn ScoreBackend>,
@@ -851,15 +1013,18 @@ fn worker_loop(
         crate::config::BatchingKind::Dynamic { max }
         | crate::config::BatchingKind::Nob { max } => max,
     };
-    let mut batcher: FairShareBatcher<Event> =
-        FairShareBatcher::new(m_max.max(1));
+    let mut ws = WorkerState {
+        batcher: FairShareBatcher::new(m_max.max(1)),
+        blocks: FastMap::default(),
+        feedback: FeedbackState::new(),
+    };
     let mut scratch = BatchScratch::default();
 
     fn handle(
         msg: Msg,
         stage: Stage,
         inner: &Inner,
-        batcher: &mut FairShareBatcher<Event>,
+        ws: &mut WorkerState,
         xi: &XiModel,
         gamma: Micros,
         drops_enabled: bool,
@@ -867,21 +1032,42 @@ fn worker_loop(
     ) -> bool {
         match msg {
             Msg::Stop => false,
-            Msg::Register(q, w) => {
-                batcher.register(q, w);
+            Msg::Register(q, w, block) => {
+                ws.batcher.register(q, w);
+                ws.blocks.insert(q, block);
                 true
             }
+            Msg::RegisterQf(..) => true, // sink-only
             Msg::Deregister(q) => {
-                let left = batcher.deregister(q);
+                let left = ws.batcher.deregister(q);
                 if !left.is_empty() {
                     let mut st = inner.state.lock().unwrap();
                     for qe in left {
                         st.ledgers.dropped(q, qe.item.header.id, stage);
                     }
                 }
+                ws.blocks.remove(&q);
+                ws.feedback.forget(q);
                 true
             }
             Msg::Ev(ev) => {
+                // Feedback edge: a QueryUpdate swaps this worker's
+                // scoring target for the query (iff fresher than the
+                // last applied update) and is consumed here. Updates
+                // for queries this worker no longer serves are dropped
+                // — a late delivery racing Deregister must not
+                // re-insert forgotten per-query state.
+                if let Payload::QueryUpdate(emb) = &ev.payload {
+                    let q = ev.header.query;
+                    if ws.blocks.contains_key(&q) {
+                        ws.feedback.apply(
+                            q,
+                            ev.header.update_seq,
+                            Arc::clone(emb),
+                        );
+                    }
+                    return true;
+                }
                 let now = inner.now_us();
                 let q = ev.header.query;
                 let u = now - ev.header.src_arrival;
@@ -899,7 +1085,7 @@ fn worker_loop(
                 }
                 let deadline = ev.header.src_arrival + deadline_window;
                 let id = ev.header.id;
-                let rejected = batcher.push(
+                let rejected = ws.batcher.push(
                     q,
                     QueuedEvent {
                         item: ev,
@@ -926,18 +1112,20 @@ fn worker_loop(
 
     'outer: loop {
         let now = inner.now_us();
-        match batcher.poll(now, &xi) {
+        match ws.batcher.poll(now, &xi) {
             BatcherPoll::Ready(batch) => {
                 let spare = exec_batch(
                     stage,
                     batch,
-                    &mut block,
+                    &mut ws.blocks,
+                    &mut default_block,
+                    &ws.feedback,
                     backend.as_ref(),
                     &xi,
                     &mut scratch,
                     &mut forward,
                 );
-                batcher.recycle(spare);
+                ws.batcher.recycle(spare);
                 continue;
             }
             BatcherPoll::Timer(at) => {
@@ -950,7 +1138,7 @@ fn worker_loop(
                             msg,
                             stage,
                             &inner,
-                            &mut batcher,
+                            &mut ws,
                             &xi,
                             gamma,
                             drops_enabled,
@@ -970,7 +1158,7 @@ fn worker_loop(
                             msg,
                             stage,
                             &inner,
-                            &mut batcher,
+                            &mut ws,
                             &xi,
                             gamma,
                             drops_enabled,
@@ -989,7 +1177,7 @@ fn worker_loop(
                 msg,
                 stage,
                 &inner,
-                &mut batcher,
+                &mut ws,
                 &xi,
                 gamma,
                 drops_enabled,
@@ -1001,18 +1189,20 @@ fn worker_loop(
     }
     // Final flush: execute whatever is still queued.
     loop {
-        match batcher.poll(BUDGET_INF / 2, &xi) {
+        match ws.batcher.poll(BUDGET_INF / 2, &xi) {
             BatcherPoll::Ready(batch) => {
                 let spare = exec_batch(
                     stage,
                     batch,
-                    &mut block,
+                    &mut ws.blocks,
+                    &mut default_block,
+                    &ws.feedback,
                     backend.as_ref(),
                     &xi,
                     &mut scratch,
                     &mut forward,
                 );
-                batcher.recycle(spare);
+                ws.batcher.recycle(spare);
             }
             _ => break,
         }
@@ -1020,9 +1210,9 @@ fn worker_loop(
 }
 
 /// Reusable per-worker batch buffers: the batch's events regrouped by
-/// query plus one columnar score buffer for the whole batch — the
-/// per-group `Vec<Event>`/`Vec<f32>` allocations the old grouping made
-/// are gone.
+/// query plus one score buffer reused across the per-query groups —
+/// the per-group `Vec<Event>`/`Vec<f32>` allocations the old grouping
+/// made are gone.
 #[derive(Default)]
 struct BatchScratch {
     events: Vec<Event>,
@@ -1030,14 +1220,18 @@ struct BatchScratch {
 }
 
 /// Execute one cross-query batch: one shared execution sleep for the
-/// whole batch, then per-query-group scoring (each query carries its
-/// own embedding), the app block's score-to-payload transformation,
-/// and forwarding. Returns the emptied batch vec for the caller to
-/// recycle into its batcher.
+/// whole batch, then per-query-group scoring and payload
+/// transformation — each group is scored by the backend under *its*
+/// block's model variant and its latest applied QF refinement, and
+/// transformed by *that query's own* block (heterogeneous apps share
+/// one physical batch). Returns the emptied batch vec for the caller
+/// to recycle into its batcher.
 fn exec_batch(
     stage: Stage,
     mut batch: Vec<QueuedEvent<Event>>,
-    block: &mut AnalyticsBlock,
+    blocks: &mut FastMap<QueryId, AnalyticsBlock>,
+    default_block: &mut AnalyticsBlock,
+    feedback: &FeedbackState,
     backend: &dyn ScoreBackend,
     xi: &XiModel,
     scratch: &mut BatchScratch,
@@ -1051,14 +1245,13 @@ fn exec_batch(
     std::thread::sleep(Duration::from_micros(dur as u64));
 
     // Group events by query — a stable sort preserves per-query FIFO
-    // order — then score each query group into one shared columnar
-    // buffer (`scores[i]` belongs to `events[i]`).
+    // order — then score + transform each query group with its own
+    // block (scores reuse one columnar scratch buffer per group).
     let events = &mut scratch.events;
     events.clear();
     events.extend(batch.drain(..).map(|qe| qe.item));
     events.sort_by_key(|ev| ev.header.query);
     let scores = &mut scratch.scores;
-    scores.clear();
     let mut start = 0;
     while start < events.len() {
         let q = events[start].header.query;
@@ -1066,26 +1259,54 @@ fn exec_batch(
         while end < events.len() && events[end].header.query == q {
             end += 1;
         }
-        backend.score_into(stage, q, &events[start..end], scores);
-        debug_assert_eq!(scores.len(), end, "one score per event");
+        let block = match blocks.get_mut(&q) {
+            Some(b) => b,
+            None => &mut *default_block,
+        };
+        scores.clear();
+        let ctx = ScoreCtx {
+            stage,
+            variant: block.variant(),
+            query: q,
+            refined: feedback.refined(q),
+        };
+        backend.score_into(&ctx, &events[start..end], scores);
+        debug_assert_eq!(
+            scores.len(),
+            end - start,
+            "one score per event"
+        );
+        block.apply_scores(
+            &mut events[start..end],
+            scores,
+            &ScoreParams { threshold: 0.5 },
+        );
         start = end;
     }
-    // One virtual call transforms the whole batch (the block sees the
-    // scores in event order); forwarding order is unchanged.
-    block.apply_scores(events, scores, &ScoreParams { threshold: 0.5 });
     for ev in events.drain(..) {
         forward(ev);
     }
     batch
 }
 
-/// Sink: completion accounting + per-query TL updates + QF.
+/// Sink: completion accounting + per-query TL updates + per-query QF.
+/// When a query's QF refines its embedding, the refinement is stamped
+/// by the [`FeedbackRouter`] and broadcast to every worker as a
+/// [`Payload::QueryUpdate`] — closing the feedback loop at runtime.
 fn sink_loop(
     inner: Arc<Inner>,
     rx: Receiver<Msg>,
-    mut qf: Box<dyn QueryFusion>,
+    workers: Vec<Sender<Msg>>,
 ) {
     let gamma = inner.cfg.gamma();
+    // One QF block per query, minted from its app at registration.
+    let mut qfs: FastMap<QueryId, Box<dyn QueryFusion>> =
+        FastMap::default();
+    let mut router = FeedbackRouter::new();
+    // Per-query refinement counts stay sink-local on the hot path and
+    // fold into the shared state at deregistration / shutdown, so a
+    // refinement burst never contends on the state mutex.
+    let mut counts: FastMap<QueryId, u64> = FastMap::default();
     loop {
         match rx.recv_timeout(Duration::from_millis(50)) {
             Ok(Msg::Ev(ev)) => {
@@ -1119,17 +1340,62 @@ fn sink_loop(
                         );
                     }
                 }
-                // QF user-logic, outside the state lock.
-                if detected && qf.on_detection(&ev) {
+                // QF user-logic, outside the state lock. One lookup
+                // serves both the refinement check and the embedding
+                // read.
+                let mut refinement: Option<Arc<Vec<f32>>> = None;
+                let mut refined = false;
+                if detected {
+                    if let Some(qf) = qfs.get_mut(&q) {
+                        if qf.on_detection(&ev) {
+                            refined = true;
+                            refinement = qf
+                                .embedding()
+                                .map(|e| Arc::new(e.to_vec()));
+                        }
+                    }
+                }
+                if refined {
                     inner
                         .fusion_updates
                         .fetch_add(1, Ordering::Relaxed);
+                    *counts.entry(q).or_insert(0) += 1;
+                    if let Some(emb) = refinement {
+                        let r = router.refine(q, emb);
+                        let upd = r.into_event(
+                            ev.header.id,
+                            ev.header.camera,
+                            now,
+                        );
+                        for tx in &workers {
+                            let _ = tx.send(Msg::Ev(upd.clone()));
+                        }
+                    }
+                }
+            }
+            Ok(Msg::RegisterQf(q, qf)) => {
+                qfs.insert(q, qf);
+            }
+            Ok(Msg::Deregister(q)) => {
+                qfs.remove(&q);
+                router.forget(q);
+                if let Some(n) = counts.remove(&q) {
+                    let mut st = inner.state.lock().unwrap();
+                    *st.fusion_counts.entry(q).or_insert(0) += n;
                 }
             }
             Ok(Msg::Stop) => break,
             Ok(_) => {}
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Shutdown: fold the remaining (still-registered) counts so the
+    // final report sees every refinement.
+    if !counts.is_empty() {
+        let mut st = inner.state.lock().unwrap();
+        for (q, n) in counts {
+            *st.fusion_counts.entry(q).or_insert(0) += n;
         }
     }
 }
@@ -1164,6 +1430,39 @@ mod tests {
             lifetime_secs: secs,
             ..QuerySpec::new(label, cam)
         }
+    }
+
+    #[test]
+    fn sim_backend_calibrates_from_semantics() {
+        let mut sem = crate::config::SemanticsConfig::default();
+        sem.fusion_boost = 0.0;
+        sem.cr_tp = 0.9;
+        let b = SimBackend::from_semantics(&sem);
+        assert_eq!(b.fusion_boost, 0.0, "config governs the boost");
+        assert!((b.tp - 0.9).abs() < 1e-12);
+        // boost 0: refined scoring is identical to unrefined.
+        let events: Vec<Event> =
+            (0..16).map(|i| Event::frame(i, 0, i, 0, true)).collect();
+        let emb = [0.5f32; 4];
+        let plain = b.score(
+            &ScoreCtx {
+                stage: Stage::Cr,
+                variant: crate::dataflow::ModelVariant::CrSmall,
+                query: 1,
+                refined: None,
+            },
+            &events,
+        );
+        let refined = b.score(
+            &ScoreCtx {
+                stage: Stage::Cr,
+                variant: crate::dataflow::ModelVariant::CrSmall,
+                query: 1,
+                refined: Some(&emb),
+            },
+            &events,
+        );
+        assert_eq!(plain, refined, "boost 0 disables the effect");
     }
 
     #[test]

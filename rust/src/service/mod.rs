@@ -34,7 +34,11 @@
 //! traits of an [`crate::apps::AppDefinition`] (engine `with_app` /
 //! `run_app`, front `TrackingService::start_with_app`); the `start` /
 //! `run` conveniences resolve the stock composition the config
-//! describes.
+//! describes. Each query runs **its own** composition: `QuerySpec.app`
+//! resolves through an [`crate::apps::AppCatalog`] and every admitted
+//! query gets its own FC/VA/CR/QF/TL block instances — a heterogeneous
+//! many-tenant platform, with the QF → VA/CR feedback edge
+//! ([`crate::dataflow::FeedbackRouter`]) closed per query.
 //!
 //! Mapping to the paper: each query still owns the single-query
 //! dataflow semantics (FC → VA → CR → {TL, QF, UV}); the service layer
@@ -51,7 +55,9 @@ pub mod scheduler;
 
 pub use admission::{Admission, AdmissionController, AdmissionPolicy};
 pub use engine::{MultiQueryDes, MultiQueryResult};
-pub use front::{ScoreBackend, ServiceReport, SimBackend, TrackingService};
+pub use front::{
+    ScoreBackend, ScoreCtx, ServiceReport, SimBackend, TrackingService,
+};
 pub use query::{
     Priority, QueryRecord, QueryRegistry, QueryReport, QuerySpec,
     QueryStatus,

@@ -245,6 +245,9 @@ impl QueryRegistry {
 pub struct QueryReport {
     pub id: QueryId,
     pub label: String,
+    /// Application composition this query ran (its own blocks were
+    /// minted from it — concurrent queries may run different apps).
+    pub app: AppKind,
     pub priority: Priority,
     pub status: QueryStatus,
     pub submitted_s: f64,
@@ -257,6 +260,9 @@ pub struct QueryReport {
     pub detections: u64,
     /// Peak spotlight size of this query.
     pub peak_active: usize,
+    /// Query-embedding refinements performed by this query's own QF
+    /// block (0 for non-fusing compositions).
+    pub fusion_updates: u64,
 }
 
 impl QueryReport {
@@ -264,6 +270,7 @@ impl QueryReport {
         Self {
             id: rec.id,
             label: rec.spec.label.clone(),
+            app: rec.spec.app,
             priority: rec.spec.priority,
             status: rec.status,
             submitted_s: to_secs(rec.submitted),
@@ -272,6 +279,7 @@ impl QueryReport {
             summary: None,
             detections: 0,
             peak_active: 0,
+            fusion_updates: 0,
         }
     }
 

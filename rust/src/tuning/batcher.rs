@@ -152,7 +152,12 @@ impl<T> Batcher<T> {
             Kind::Static { size } => {
                 let size = *size;
                 if self.pending.len() >= size {
-                    let batch = self.pending.drain(..size).collect();
+                    // Drain into the recycled buffer (`current` is
+                    // otherwise unused by the static strategy), so the
+                    // steady state circulates one allocation just like
+                    // the deadline path.
+                    let mut batch = std::mem::take(&mut self.current);
+                    batch.extend(self.pending.drain(..size));
                     BatcherPoll::Ready(batch)
                 } else {
                     // Static batching never times out — exactly the
@@ -163,7 +168,8 @@ impl<T> Batcher<T> {
             Kind::Nob { table, max, rate_ema, .. } => {
                 let target = table.lookup(*rate_ema).clamp(1, *max);
                 if self.pending.len() >= target {
-                    let batch = self.pending.drain(..target).collect();
+                    let mut batch = std::mem::take(&mut self.current);
+                    batch.extend(self.pending.drain(..target));
                     BatcherPoll::Ready(batch)
                 } else {
                     BatcherPoll::Idle
@@ -321,6 +327,49 @@ mod tests {
             BatcherPoll::Timer(at) => assert_eq!(at, 10 * SEC - x.xi(2)),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn static_and_nob_reuse_recycled_capacity() {
+        // A recycled spare's allocation must seed the next batch on
+        // the Static/NOB paths (previously `drain().collect()`
+        // allocated per batch).
+        let mut b: Batcher<u64> = Batcher::fixed(2);
+        let spare: Vec<QueuedEvent<u64>> = Vec::with_capacity(64);
+        b.recycle(spare);
+        b.push(qe(0, 0, BUDGET_INF));
+        b.push(qe(1, 0, BUDGET_INF));
+        match b.poll(0, &xi()) {
+            BatcherPoll::Ready(batch) => {
+                assert_eq!(batch.len(), 2);
+                assert!(
+                    batch.capacity() >= 64,
+                    "recycled capacity reused: {}",
+                    batch.capacity()
+                );
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let x = XiModel::affine_ms(100.0, 10.0);
+        let table = NobTable::build(&x, 100.0, 10.0, 32);
+        let mut b = Batcher::nob(table, 32);
+        let spare: Vec<QueuedEvent<u64>> = Vec::with_capacity(64);
+        b.recycle(spare);
+        let mut t = 0;
+        for k in 0..10 {
+            b.push(qe(k, t, BUDGET_INF));
+            if let BatcherPoll::Ready(batch) = b.poll(t, &x) {
+                assert!(
+                    batch.capacity() >= 64,
+                    "NOB reuses recycled capacity: {}",
+                    batch.capacity()
+                );
+                return;
+            }
+            t += 50 * MS;
+        }
+        panic!("NOB never formed a batch");
     }
 
     #[test]

@@ -162,29 +162,57 @@ fn trait_path_runs_are_deterministic() {
     assert_eq!(a.core_events, b.core_events);
 }
 
-/// App 2's fusion block refines embeddings without perturbing the
-/// dataflow metrics (QF is metric-neutral by contract).
+/// App 2's fusion block refines embeddings and (since the feedback
+/// edge went live) those refinements flow back into VA/CR — so a
+/// fusing run is *deterministic* but no longer contractually identical
+/// to a fusion-less one. A QF that never refines (here: a fusing block
+/// with an unreachable confidence bar) must still be exactly
+/// metric-neutral: the plumbing itself costs nothing.
 #[test]
-fn query_fusion_is_metric_neutral() {
+fn query_fusion_refines_and_inert_qf_is_metric_neutral() {
     let mut cfg = base_cfg(2019);
     apps::table1(AppKind::App2).apply(&mut cfg, true);
     let with_qf = des::run_app(
         cfg.clone(),
         &apps::table1(AppKind::App2).with_tl_kind(cfg.tl),
     );
-    // Identical composition except fusion disabled.
+    assert!(with_qf.fusion_updates > 0, "App 2 fuses on detections");
+    // Determinism through the live feedback loop.
+    let again = des::run_app(
+        cfg.clone(),
+        &apps::table1(AppKind::App2).with_tl_kind(cfg.tl),
+    );
+    assert_eq!(with_qf.summary.generated, again.summary.generated);
+    assert_eq!(with_qf.detections, again.detections);
+    assert_eq!(with_qf.fusion_updates, again.fusion_updates);
+    assert_eq!(with_qf.core_events, again.core_events);
+
+    // Identical composition except fusion disabled…
     let no_qf = AppBuilder::new("app2-no-qf")
         .video_analytics(SimDetector::hog())
         .contention_resolver(SimReid::large())
         .tracking_logic(cfg.tl)
         .build();
-    let without = des::run_app(cfg, &no_qf);
-    assert!(with_qf.fusion_updates > 0, "App 2 fuses on detections");
+    let without = des::run_app(cfg.clone(), &no_qf);
     assert_eq!(without.fusion_updates, 0);
-    assert_eq!(with_qf.summary.generated, without.summary.generated);
-    assert_eq!(with_qf.summary.on_time, without.summary.on_time);
-    assert_eq!(with_qf.detections, without.detections);
-    assert_eq!(with_qf.core_events, without.core_events);
+    // …and the same again with a QF that *fuses* but can never reach
+    // its confidence bar: no refinement is minted, so the feedback
+    // plumbing must leave every metric bit-identical.
+    let inert = AppBuilder::new("app2-inert-qf")
+        .video_analytics(SimDetector::hog())
+        .contention_resolver(SimReid::large())
+        .query_fusion(anveshak::apps::RnnFusion::new(8, 0.9, 2.0))
+        .tracking_logic(cfg.tl)
+        .build();
+    let inert_run = des::run_app(cfg, &inert);
+    assert_eq!(inert_run.fusion_updates, 0);
+    assert_eq!(
+        inert_run.summary.generated,
+        without.summary.generated
+    );
+    assert_eq!(inert_run.summary.on_time, without.summary.on_time);
+    assert_eq!(inert_run.detections, without.detections);
+    assert_eq!(inert_run.core_events, without.core_events);
 }
 
 /// Heterogeneous boxed blocks — the engines' actual usage pattern.
