@@ -56,7 +56,8 @@ use std::time::Instant;
 
 use anveshak::apps;
 use anveshak::config::{
-    AppKind, BatchingKind, ExperimentConfig, TlKind, WorkloadConfig,
+    AppKind, BatchingKind, ComputeEvent, ExperimentConfig, TlKind,
+    WorkloadConfig,
 };
 use anveshak::coordinator::des::DesEngine;
 use anveshak::dataflow::{Event, ModelVariant, Partitioner, Stage};
@@ -586,6 +587,39 @@ fn main() {
             .build();
         run_des_app(rp, "des.1000cam.app2.fusion_on", c.clone(), &on);
         run_des_app(rp, "des.1000cam.app2.fusion_off", c, &off);
+    }
+
+    println!(
+        "\n== Compute dynamism (4x mid-run node slowdown, frozen vs online xi) =="
+    );
+    {
+        // Identical workload and seed; the only difference is whether
+        // executors feed observed durations back into their ξ models.
+        // The frozen run prices batches/drops against a model 4x too
+        // optimistic after the step — the events/sec *and* the
+        // on-time/dropped mix move; online ξ re-tunes within seconds.
+        let mk = |online: bool| {
+            let mut c = des_cfg(smoke);
+            c.tl = TlKind::Base;
+            c.service.online_xi = online;
+            c.service.compute_events.push(ComputeEvent {
+                // Mid-run: des_cfg is 60 s full / 10 s smoke.
+                at_sec: if smoke { 5.0 } else { 30.0 },
+                node: None,
+                factor: 4.0,
+            });
+            c
+        };
+        run_des(
+            rp,
+            "des.1000cam.varying_compute.frozen_xi",
+            mk(false),
+        );
+        run_des(
+            rp,
+            "des.1000cam.varying_compute.online_xi",
+            mk(true),
+        );
     }
 
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");

@@ -522,12 +522,7 @@ impl AppCatalog {
     }
 
     fn idx(kind: AppKind) -> usize {
-        match kind {
-            AppKind::App1 => 0,
-            AppKind::App2 => 1,
-            AppKind::App3 => 2,
-            AppKind::App4 => 3,
-        }
+        kind.index()
     }
 
     /// The application a query of `kind` runs.

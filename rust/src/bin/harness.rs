@@ -8,6 +8,10 @@
 //!   harness mq                  # multi-query service run (beyond the
 //!                               # paper: concurrent queries over the
 //!                               # shared 1000-camera deployment)
+//!   harness compute             # compute dynamism: 4x node slowdown
+//!                               # at t=300s, frozen vs online xi on
+//!                               # both DES engines (Fig 9's missing
+//!                               # half)
 //!   harness --out DIR figN ...  # custom output directory
 //!
 //! Each figure writes CSV series under the output directory and prints
@@ -31,7 +35,7 @@ fn main() {
     }
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute ..."
         );
         std::process::exit(2);
     }
@@ -70,6 +74,9 @@ fn main() {
     }
     if want("mq") {
         multi_query(&out_dir);
+    }
+    if want("compute") {
+        compute_dynamism(&out_dir, &mut cache);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -448,6 +455,89 @@ fn multi_query(out: &Path) {
         ("queries", Json::Arr(j)),
     ]);
     std::fs::write(out.join("mq.json"), doc.to_string()).unwrap();
+}
+
+/// Compute dynamism (Fig 9's missing half): every compute node slows
+/// 4x at t = 300 s. A/B of frozen config-time ξ vs the online-ξ
+/// calibration loop, on both DES engines — frozen ξ keeps batching
+/// and dropping against a cost model 4x too optimistic, online ξ
+/// re-estimates and re-tunes within seconds of the step.
+fn compute_dynamism(
+    out: &Path,
+    cache: &mut BTreeMap<String, RunResult>,
+) {
+    println!(
+        "\n== Compute dynamism: 4x node slowdown at t=300s (frozen vs online xi) =="
+    );
+    for (label, name) in [
+        ("DB-25 frozen-xi", "fig9_compute_frozen"),
+        ("DB-25 online-xi", "fig9_compute_online"),
+    ] {
+        let r = get(cache, name);
+        print_summary_row(label, r);
+        let rows = r.timeline.rows();
+        let (mut pre, mut post) = (0usize, 0usize);
+        for (s, row) in rows.iter().enumerate() {
+            if row.mean_latency_s > 15.0 {
+                if s < 300 {
+                    pre += 1
+                } else {
+                    post += 1
+                }
+            }
+        }
+        println!(
+            "    seconds with avg latency > gamma: pre-slowdown {pre}, post-slowdown {post}"
+        );
+        write_timeline(out, &format!("compute_{name}"), r);
+    }
+
+    // The multi-query engine under the same schedule: 6 concurrent
+    // queries over the shared deployment, frozen vs online ξ.
+    use anveshak::coordinator::des::run_multi;
+    println!("  -- multi-query engine, same slowdown --");
+    let mut j = Vec::new();
+    for (label, name) in [
+        ("mq frozen-xi", "fig9_compute_frozen"),
+        ("mq online-xi", "fig9_compute_online"),
+    ] {
+        let mut cfg = preset(name);
+        cfg.multi_query.num_queries = 6;
+        cfg.multi_query.mean_interarrival_secs = 30.0;
+        cfg.multi_query.lifetime_secs = 240.0;
+        cfg.multi_query.max_active = 16;
+        cfg.multi_query.max_active_cameras = 8_000;
+        eprintln!("[run] {name} (mq) ...");
+        let start = std::time::Instant::now();
+        let r = run_multi(cfg);
+        eprintln!(
+            "[run] {name} (mq) done in {:.1}s",
+            start.elapsed().as_secs_f64()
+        );
+        let s = &r.aggregate;
+        println!(
+            "  {label:<22} gen {:>7}  on-time {:>7}  delayed {:>6} ({:>5.1}%)  dropped {:>6} ({:>5.1}%)  conserved {}",
+            s.generated,
+            s.on_time,
+            s.delayed,
+            100.0 * s.delay_rate(),
+            s.dropped,
+            100.0 * s.drop_rate(),
+            s.conserved()
+        );
+        j.push(obj([
+            ("label", label.into()),
+            ("generated", (s.generated as i64).into()),
+            ("on_time", (s.on_time as i64).into()),
+            ("delayed", (s.delayed as i64).into()),
+            ("dropped", (s.dropped as i64).into()),
+        ]));
+    }
+    std::fs::write(
+        out.join("compute_mq.json"),
+        Json::Arr(j).to_string(),
+    )
+    .unwrap();
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

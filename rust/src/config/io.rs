@@ -69,6 +69,28 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ("cr_beta_ms", c.service.cr_beta_ms.into()),
                 ("tl_ms", c.service.tl_ms.into()),
                 ("jitter", c.service.jitter.into()),
+                ("online_xi", c.service.online_xi.into()),
+                (
+                    "compute_events",
+                    Json::Arr(
+                        c.service
+                            .compute_events
+                            .iter()
+                            .map(|e| match e.node {
+                                Some(n) => obj([
+                                    ("at_sec", e.at_sec.into()),
+                                    ("node", n.into()),
+                                    ("factor", e.factor.into()),
+                                ]),
+                                // `node` omitted = all nodes.
+                                None => obj([
+                                    ("at_sec", e.at_sec.into()),
+                                    ("factor", e.factor.into()),
+                                ]),
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
         (
@@ -201,6 +223,51 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         set_f64(v, "cr_beta_ms", &mut c.service.cr_beta_ms);
         set_f64(v, "tl_ms", &mut c.service.tl_ms);
         set_f64(v, "jitter", &mut c.service.jitter);
+        if let Some(b) = v.get("online_xi").and_then(Json::as_bool) {
+            c.service.online_xi = b;
+        }
+        if let Some(evs) = v.get("compute_events").and_then(Json::as_arr)
+        {
+            c.service.compute_events = evs
+                .iter()
+                .map(|e| {
+                    // `node` is validated explicitly: a malformed value
+                    // must not silently become "all nodes" (absent) or
+                    // node 0 (negative saturating through `as usize`).
+                    let node = match e.get("node") {
+                        None | Some(Json::Null) => None,
+                        Some(n) => {
+                            let n = n.as_f64().ok_or(
+                                "compute event node must be a number",
+                            )?;
+                            if n < 0.0 || n.fract() != 0.0 {
+                                return Err(format!(
+                                    "compute event node must be a non-negative integer, got {n}"
+                                ));
+                            }
+                            Some(n as usize)
+                        }
+                    };
+                    let factor = e
+                        .get("factor")
+                        .and_then(Json::as_f64)
+                        .ok_or("compute event missing factor")?;
+                    if !(factor.is_finite() && factor > 0.0) {
+                        return Err(format!(
+                            "compute event factor must be finite and > 0, got {factor}"
+                        ));
+                    }
+                    Ok(ComputeEvent {
+                        at_sec: e
+                            .get("at_sec")
+                            .and_then(Json::as_f64)
+                            .ok_or("compute event missing at_sec")?,
+                        node,
+                        factor,
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+        }
     }
     if let Some(v) = j.get("semantics") {
         set_f64(v, "va_tp", &mut c.semantics.va_tp);
@@ -380,6 +447,51 @@ mod tests {
     }
 
     #[test]
+    fn compute_events_round_trip() {
+        let mut c = ExperimentConfig::default();
+        c.service.online_xi = true;
+        c.service.compute_events = vec![
+            ComputeEvent {
+                at_sec: 300.0,
+                node: None,
+                factor: 4.0,
+            },
+            ComputeEvent {
+                at_sec: 450.0,
+                node: Some(3),
+                factor: 1.0,
+            },
+        ];
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert!(c2.service.online_xi);
+        assert_eq!(c2.service.compute_events.len(), 2);
+        assert_eq!(c2.service.compute_events[0].node, None);
+        assert!((c2.service.compute_events[0].factor - 4.0).abs() < 1e-9);
+        assert!((c2.service.compute_events[0].at_sec - 300.0).abs() < 1e-9);
+        assert_eq!(c2.service.compute_events[1].node, Some(3));
+        // A partial config keeps the static defaults.
+        let c3 = config_from_json("{}").unwrap();
+        assert!(c3.service.compute_events.is_empty());
+        assert!(!c3.service.online_xi);
+        // A malformed event is an error, not a silent default.
+        assert!(config_from_json(
+            r#"{"service": {"compute_events": [{"at_sec": 10.0}]}}"#
+        )
+        .is_err());
+        // …including a non-numeric node (must not become "all nodes"),
+        // a negative node (must not saturate to node 0), and a
+        // non-positive factor.
+        for bad in [
+            r#"{"service": {"compute_events": [{"at_sec": 1.0, "node": "3", "factor": 4.0}]}}"#,
+            r#"{"service": {"compute_events": [{"at_sec": 1.0, "node": -1, "factor": 4.0}]}}"#,
+            r#"{"service": {"compute_events": [{"at_sec": 1.0, "factor": 0.0}]}}"#,
+        ] {
+            assert!(config_from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
     fn every_preset_round_trips() {
         for name in super::super::PRESETS {
             let c = preset(name);
@@ -392,6 +504,11 @@ mod tests {
             assert_eq!(c2.num_cameras, c.num_cameras);
             assert_eq!(c2.drops_enabled, c.drops_enabled);
             assert_eq!(c2.network.events.len(), c.network.events.len());
+            assert_eq!(
+                c2.service.compute_events.len(),
+                c.service.compute_events.len()
+            );
+            assert_eq!(c2.service.online_xi, c.service.online_xi);
             assert!(
                 (c2.service.cr_alpha_ms - c.service.cr_alpha_ms).abs()
                     < 1e-9

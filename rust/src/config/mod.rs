@@ -24,6 +24,20 @@ pub enum AppKind {
     App4,
 }
 
+impl AppKind {
+    /// Dense index (0..4) — used wherever per-app state lives in a
+    /// fixed array (the `AppCatalog`, the multi-query engine's per-app
+    /// ξ multipliers).
+    pub fn index(self) -> usize {
+        match self {
+            AppKind::App1 => 0,
+            AppKind::App2 => 1,
+            AppKind::App3 => 2,
+            AppKind::App4 => 3,
+        }
+    }
+}
+
 /// Tracking-Logic strategy (the "scalability" knob of the tuning triangle).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TlKind {
@@ -90,6 +104,19 @@ pub struct BandwidthEvent {
     pub bandwidth_bps: f64,
 }
 
+/// A scheduled change to a node's compute speed — the compute half of
+/// the §6 dynamism story, mirroring [`BandwidthEvent`]. From `at_sec`
+/// onward, batches executing on `node` take `factor` times their
+/// nominal duration (4.0 = a 4x slowdown; 1.0 restores full speed).
+/// `node: None` applies the step to every cluster node.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeEvent {
+    pub at_sec: f64,
+    /// Target node index, or `None` for all nodes.
+    pub node: Option<usize>,
+    pub factor: f64,
+}
+
 /// MAN/WAN model between cluster nodes.
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -135,6 +162,18 @@ pub struct ServiceConfig {
     pub tl_ms: f64,
     /// Multiplicative jitter bound on actual vs estimated execution time.
     pub jitter: f64,
+    /// Scheduled per-node compute slowdowns (the Fig 9-style dynamism
+    /// scenario, compute edition) — see [`crate::sim::ComputeModel`].
+    pub compute_events: Vec<ComputeEvent>,
+    /// Close the ξ calibration loop online: DES executors feed observed
+    /// (slowdown-scaled) batch durations into [`XiModel::observe`]
+    /// (EMA), so deadline math, NOB lookups and drop gates track the
+    /// *current* machine instead of the config-time benchmark — the
+    /// same loop the live engine always runs. `false` keeps the frozen
+    /// config-time ξ as the comparison baseline.
+    ///
+    /// [`XiModel::observe`]: crate::tuning::XiModel::observe
+    pub online_xi: bool,
 }
 
 impl Default for ServiceConfig {
@@ -148,6 +187,8 @@ impl Default for ServiceConfig {
             cr_beta_ms: 67.5,
             tl_ms: 1.0,
             jitter: 0.05,
+            compute_events: vec![],
+            online_xi: false,
         }
     }
 }

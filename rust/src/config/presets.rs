@@ -8,9 +8,10 @@ use super::*;
 /// All preset names, in paper order.
 pub const ALL: &[&str] = &[
     "fig7a", "fig7b", "fig7c", "fig7d", "fig6b_sb1", "fig6b_sb20",
-    "fig6b_db25", "fig9_anv", "fig9_nob", "fig10_wbfs_sb1",
-    "fig10_base_100", "fig10_base_200", "fig11_nodrops", "fig11_drops",
-    "fig12_sb20", "fig12_db25", "fig12_wbfs_sb20", "fig12_es6_db25",
+    "fig6b_db25", "fig9_anv", "fig9_nob", "fig9_compute_frozen",
+    "fig9_compute_online", "fig10_wbfs_sb1", "fig10_base_100",
+    "fig10_base_200", "fig11_nodrops", "fig11_drops", "fig12_sb20",
+    "fig12_db25", "fig12_wbfs_sb20", "fig12_es6_db25",
     "fig12_es6_drops",
 ];
 
@@ -56,6 +57,18 @@ pub fn preset(name: &str) -> ExperimentConfig {
             c.network.events.push(BandwidthEvent {
                 at_sec: 300.0,
                 bandwidth_bps: 30e6,
+            });
+        }
+        // ---- Compute dynamism (Fig 9-style, compute edition): every
+        // compute node slows 4x at t = 300 s; frozen vs online ξ ----
+        "fig9_compute_frozen" | "fig9_compute_online" => {
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.drops_enabled = true;
+            c.service.online_xi = name.ends_with("online");
+            c.service.compute_events.push(ComputeEvent {
+                at_sec: 300.0,
+                node: None,
+                factor: 4.0,
             });
         }
         // ---- Fig 10: tracking-logic knob ----
@@ -145,6 +158,21 @@ mod tests {
         let x1 = a1.service.cr_alpha_ms + a1.service.cr_beta_ms;
         let x2 = a2.service.cr_alpha_ms + a2.service.cr_beta_ms;
         assert!((x2 / x1 - 1.63).abs() < 0.01);
+    }
+
+    #[test]
+    fn compute_presets_differ_only_in_online_xi() {
+        let f = preset("fig9_compute_frozen");
+        let o = preset("fig9_compute_online");
+        for c in [&f, &o] {
+            assert_eq!(c.service.compute_events.len(), 1);
+            assert_eq!(c.service.compute_events[0].node, None);
+            assert!((c.service.compute_events[0].factor - 4.0).abs() < 1e-9);
+            assert!((c.service.compute_events[0].at_sec - 300.0).abs() < 1e-9);
+            assert!(c.drops_enabled);
+        }
+        assert!(!f.service.online_xi);
+        assert!(o.service.online_xi);
     }
 
     #[test]

@@ -30,11 +30,14 @@ use crate::dataflow::{
 use crate::engine::EventCore;
 use crate::metrics::{Ledger, Summary, Timeline};
 use crate::roadnet::{generate, place_cameras, Graph};
-use crate::sim::{ClockSkews, EntityWalk, GroundTruth, NetModel};
+use crate::sim::{
+    ClockSkews, ComputeModel, EntityWalk, GroundTruth, NetModel,
+};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, drop_at_transmit, Batcher, BatcherPoll,
     BudgetManager, EventRecord, NobTable, QueuedEvent, Signal, XiModel,
+    NOB_MAX_RATE, NOB_RATE_STEP, ONLINE_XI_EMA,
 };
 use crate::util::{millis, rng, Micros, Rng, SEC};
 
@@ -80,7 +83,16 @@ struct TaskState {
     node: usize,
     batcher: Batcher<Event>,
     budget: BudgetManager,
+    /// ξ *estimator*: drives deadlines, drop gates, NOB lookups and
+    /// budget math. Refined online from observed durations when
+    /// `online_xi` is set; equal to [`Self::xi_true`] otherwise.
     xi: XiModel,
+    /// Frozen nominal cost model — the simulated hardware's ground
+    /// truth. *Actual* batch durations are always generated from this
+    /// (× jitter × compute slowdown), never from the estimator, so
+    /// online refinement converges to (nominal × slowdown) instead of
+    /// chasing its own inflated estimates.
+    xi_true: XiModel,
     busy: bool,
     timer_seq: u64,
     drop_count: u64,
@@ -115,6 +127,13 @@ pub struct DesEngine {
     graph: Graph,
     gt: GroundTruth,
     net: NetModel,
+    /// Per-node time-varying execution slowdown — scales the *actual*
+    /// duration of every batch (the estimate side only follows when
+    /// `online_xi` feeds observations back into the task ξ models).
+    compute: ComputeModel,
+    /// `cfg.service.online_xi`, hoisted: executors observe actual batch
+    /// durations (and retune NOB tables) when set.
+    online_xi: bool,
     skews: ClockSkews,
     /// Application blocks (UDFs): the engine only talks to them through
     /// the dataflow traits.
@@ -227,14 +246,30 @@ impl DesEngine {
             tl.on_detection(0, 0, true);
         }
 
-        let va_xi = XiModel::affine_ms(
+        // Online ξ: executor *estimators* carry an EMA so observed
+        // batch durations refine them — the same calibration loop the
+        // live engine always runs (`coordinator/live.rs`). Frozen
+        // estimators (the baseline) ignore observations entirely. The
+        // nominal base models stay untouched either way: they are the
+        // simulated hardware, from which actual durations are drawn.
+        let online_xi = cfg.service.online_xi;
+        let mk_xi = |x: &XiModel| {
+            if online_xi {
+                x.clone().with_ema(ONLINE_XI_EMA)
+            } else {
+                x.clone()
+            }
+        };
+        let va_base = XiModel::affine_ms(
             cfg.service.va_alpha_ms,
             cfg.service.va_beta_ms,
         );
-        let cr_xi = XiModel::affine_ms(
+        let cr_base = XiModel::affine_ms(
             cfg.service.cr_alpha_ms,
             cfg.service.cr_beta_ms,
         );
+        let va_xi = mk_xi(&va_base);
+        let cr_xi = mk_xi(&cr_base);
         let fc_xi = XiModel::affine_ms(cfg.service.fc_ms, 0.01);
 
         let mk_batcher = |xi: &XiModel| -> Batcher<Event> {
@@ -242,7 +277,7 @@ impl DesEngine {
                 BatchingKind::Static { size } => Batcher::fixed(size),
                 BatchingKind::Dynamic { max } => Batcher::dynamic(max),
                 BatchingKind::Nob { max } => Batcher::nob(
-                    NobTable::build(xi, 1000.0, 10.0, max),
+                    NobTable::build(xi, NOB_MAX_RATE, NOB_RATE_STEP, max),
                     max,
                 ),
             }
@@ -255,21 +290,25 @@ impl DesEngine {
 
         let mut tasks = Vec::with_capacity(topo.tasks.len());
         for (i, info) in topo.tasks.iter().enumerate() {
-            let xi = match info.stage {
-                Stage::Va => va_xi.clone(),
-                Stage::Cr => cr_xi.clone(),
-                _ => fc_xi.clone(),
+            let (xi, xi_true) = match info.stage {
+                Stage::Va => (va_xi.clone(), va_base.clone()),
+                Stage::Cr => (cr_xi.clone(), cr_base.clone()),
+                _ => (fc_xi.clone(), fc_xi.clone()),
             };
             tasks.push(TaskState {
                 stage: info.stage,
                 node: info.node,
                 batcher: mk_batcher(&xi),
+                // Prime record capacity: event ids reaching one task
+                // stride by the active-camera count, so a power-of-two
+                // ring would collapse to capacity/gcd usable slots.
                 budget: BudgetManager::new(
                     topo.downstream_count(i),
                     m_max,
-                    4096,
+                    4093,
                 ),
                 xi,
+                xi_true,
                 busy: false,
                 timer_seq: 0,
                 drop_count: 0,
@@ -282,19 +321,23 @@ impl DesEngine {
                 BudgetManager::new(
                     topo.va_part.instances(),
                     m_max,
-                    256,
+                    251, // prime, for the same stride reason as above
                 )
             })
             .collect();
 
         let num_cameras = cfg.num_cameras;
         let seed = cfg.seed;
+        let compute =
+            ComputeModel::new(&cfg.service.compute_events, topo.nodes);
         Self {
             cfg,
             topo,
             graph,
             gt,
             net,
+            compute,
+            online_xi,
             skews,
             fc: app.make_fc(),
             va: app.make_va(),
@@ -626,14 +669,29 @@ impl DesEngine {
                         continue; // try to form the next batch
                     }
                     let b = batch.len();
-                    let (xi_est, jitter) = {
+                    let (xi_est, xi_true, jitter, node) = {
                         let ts = &self.tasks[task];
-                        (ts.xi.xi(b), self.cfg.service.jitter)
+                        (
+                            ts.xi.xi(b),
+                            ts.xi_true.xi(b),
+                            self.cfg.service.jitter,
+                            ts.node,
+                        )
                     };
                     let factor =
                         1.0 + self.rng.range_f64(-jitter, jitter);
-                    let actual =
-                        ((xi_est as f64) * factor).round() as Micros;
+                    // Compute dynamism: the *actual* duration is drawn
+                    // from the frozen nominal model (the simulated
+                    // hardware), scaled by the node's slowdown at
+                    // execution start — never from the ξ̂ estimator,
+                    // which may itself have been refined online (a
+                    // self-referential loop would compound the
+                    // slowdown geometrically). Factor 1.0 (no events)
+                    // is a bit-exact identity, and the RNG draw count
+                    // is unchanged either way.
+                    let slow = self.compute.factor_at(node, self.now);
+                    let actual = ((xi_true as f64) * factor * slow)
+                        .round() as Micros;
                     self.tasks[task].busy = true;
                     self.push(
                         self.now + actual.max(1),
@@ -664,6 +722,18 @@ impl DesEngine {
         let stage = self.tasks[task].stage;
         let batch_seq = self.next_batch_seq;
         self.next_batch_seq += 1;
+
+        // Online ξ recalibration (§4.2): feed the observed
+        // (slowdown-scaled) duration into this executor's model and
+        // retune its NOB table on material drift — the DES mirror of
+        // the live engine's observe call. Deadline math, rate lookups
+        // and drop gates all read this model, so they now track the
+        // current machine.
+        if self.online_xi {
+            let ts = &mut self.tasks[task];
+            ts.xi.observe(b, actual);
+            ts.batcher.retune_nob(&ts.xi);
+        }
 
         // Timeline: mean queue+exec latency for this batch.
         let mean_q: Micros = batch

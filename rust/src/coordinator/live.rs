@@ -38,7 +38,8 @@ use crate::sim::{
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, Batcher, BatcherPoll, BudgetManager,
-    EventRecord, NobTable, QueuedEvent, Signal, XiModel,
+    EventRecord, NobTable, QueuedEvent, Signal, XiModel, NOB_MAX_RATE,
+    NOB_RATE_STEP, ONLINE_XI_EMA,
 };
 use crate::util::{Micros, SEC};
 
@@ -693,9 +694,10 @@ impl LiveEngine {
         let batcher = match cfg.batching {
             BatchingKind::Static { size } => Batcher::fixed(size),
             BatchingKind::Dynamic { max } => Batcher::dynamic(max),
-            BatchingKind::Nob { max } => {
-                Batcher::nob(NobTable::build(xi, 1000.0, 10.0, max), max)
-            }
+            BatchingKind::Nob { max } => Batcher::nob(
+                NobTable::build(xi, NOB_MAX_RATE, NOB_RATE_STEP, max),
+                max,
+            ),
         };
         let m_max = match cfg.batching {
             BatchingKind::Static { size } => size,
@@ -706,8 +708,8 @@ impl LiveEngine {
             stage,
             block,
             batcher,
-            budget: BudgetManager::new(1, m_max, 2048),
-            xi: xi.clone().with_ema(0.1),
+            budget: BudgetManager::new(1, m_max, 2039), // prime ring
+            xi: xi.clone().with_ema(ONLINE_XI_EMA),
             score_threshold: 0.5,
             // Callers swap in the model service's bootstrap embedding.
             query_emb: Arc::new(Vec::new()),
@@ -921,6 +923,9 @@ fn exec_batch(
     let end = now_us(sh.start);
     let actual = end - start;
     w.xi.observe(b, actual);
+    // ξ drifted (e.g. the node slowed down)? The NOB table's rate →
+    // batch lookup follows the refreshed model, like the DES engines.
+    w.batcher.retune_nob(&w.xi);
     let xi_est = w.xi.xi(b);
 
     // Per-event bookkeeping into the worker's staging buffers, then one

@@ -9,8 +9,10 @@
 //! executors form **cross-query batches** under weighted fair sharing
 //! ([`FairShareBatcher`]). The tuning triangle is keyed per query —
 //! per-(task, query) [`BudgetManager`]s, per-query drop/probe state,
-//! per-query ledgers — so one query collapsing its completion budget
-//! cannot starve or mis-account the rest.
+//! per-query ledgers, and per-(stage, app) ξ cost models (each query
+//! batches/drops under *its* app's service cost, scaled off the
+//! executor's online hardware calibration) — so one query collapsing
+//! its completion budget cannot starve or mis-account the rest.
 //!
 //! Modelling simplifications relative to [`crate::coordinator::des`]
 //! (documented, deliberate): device clocks are unskewed (the skew
@@ -40,11 +42,12 @@ use crate::service::query::{
     QueryRegistry, QueryReport, QuerySpec, QueryStatus,
 };
 use crate::service::scheduler::FairShareBatcher;
-use crate::sim::{EntityWalk, GroundTruth, NetModel};
+use crate::sim::{ComputeModel, EntityWalk, GroundTruth, NetModel};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, drop_at_transmit, BatcherPoll,
     BudgetManager, EventRecord, QueuedEvent, Signal, XiModel,
+    ONLINE_XI_EMA,
 };
 use crate::util::{millis, rng, secs, FastMap, Micros, Rng, SEC};
 
@@ -72,6 +75,9 @@ enum Ev {
         start: Micros,
         xi_est: Micros,
         actual: Micros,
+        /// Σ of per-app cost multipliers over `batch` (its effective
+        /// size), computed once at formation.
+        rel_sum: f64,
     },
     /// A budget signal for one query arrives at `task`.
     SignalAt {
@@ -97,7 +103,22 @@ struct MqTask {
     node: usize,
     batcher: FairShareBatcher<Event>,
     budgets: FastMap<QueryId, BudgetManager>,
+    /// Engine-level stage calibration — the *estimator*, refined
+    /// online when `online_xi` is set. Per-application ξ models are
+    /// `xi.scaled(rel[kind])` snapshots: hardware drift is shared
+    /// across tenants, app cost ratios are static composition facts.
     xi: XiModel,
+    /// Frozen nominal cost model — the simulated hardware's ground
+    /// truth, from which *actual* durations are generated (× jitter ×
+    /// compute slowdown). Never the estimator: observing durations
+    /// derived from the model being refined would compound any
+    /// slowdown geometrically.
+    xi_true: XiModel,
+    /// Per-app service-cost multipliers relative to the engine-level
+    /// calibration (the default app's slot is exactly 1.0), indexed by
+    /// [`AppKind::index`]. Minted from the [`AppCatalog`]'s va/cr cost
+    /// metadata at construction.
+    rel: [f64; 4],
     busy: bool,
     timer_seq: u64,
     drop_count: u64,
@@ -105,6 +126,15 @@ struct MqTask {
     /// executor receives its own [`Payload::QueryUpdate`] copies and
     /// discards stale deliveries.
     feedback: FeedbackState,
+}
+
+impl MqTask {
+    /// This task's ξ model for an application: the hardware calibration
+    /// scaled by the app's cost multiplier. For the default app this is
+    /// a bit-exact copy (rel = 1.0).
+    fn app_xi(&self, kind: AppKind) -> XiModel {
+        self.xi.scaled(self.rel[kind.index()])
+    }
 }
 
 /// The UDF blocks one query runs, minted from *its* app's
@@ -222,6 +252,10 @@ pub struct MultiQueryDes {
     tasks: Vec<MqTask>,
     fc_budget: Vec<FastMap<QueryId, BudgetManager>>,
     fc_xi: XiModel,
+    /// Per-node time-varying execution slowdown (compute dynamism).
+    compute: ComputeModel,
+    /// `cfg.service.online_xi`, hoisted.
+    online_xi: bool,
     core: EventCore<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
@@ -274,14 +308,36 @@ impl MultiQueryDes {
         let topo = Topology::schedule(&cfg);
         let net = NetModel::new(&cfg.network, topo.nodes);
 
-        let va_xi = XiModel::affine_ms(
+        // Per-query app resolution: the schedule stamps every spec
+        // with the kind the *passed* app is registered under (so a
+        // custom/explicit `with_app` composition actually runs —
+        // `cfg.app` alone would silently resolve to a stock app when
+        // the two disagree). `set_app_cycle` overrides this for
+        // heterogeneous mixes.
+        let catalog = AppCatalog::new(app.clone(), cfg.app, cfg.tl);
+
+        // Online ξ: the engine-level stage *estimators* carry an EMA
+        // so observed batch durations refine them (frozen otherwise);
+        // the nominal base models — the simulated hardware — stay
+        // untouched either way.
+        let online_xi = cfg.service.online_xi;
+        let mk_xi = |x: &XiModel| {
+            if online_xi {
+                x.clone().with_ema(ONLINE_XI_EMA)
+            } else {
+                x.clone()
+            }
+        };
+        let va_base = XiModel::affine_ms(
             cfg.service.va_alpha_ms,
             cfg.service.va_beta_ms,
         );
-        let cr_xi = XiModel::affine_ms(
+        let cr_base = XiModel::affine_ms(
             cfg.service.cr_alpha_ms,
             cfg.service.cr_beta_ms,
         );
+        let va_xi = mk_xi(&va_base);
+        let cr_xi = mk_xi(&cr_base);
         let fc_xi = XiModel::affine_ms(cfg.service.fc_ms, 0.01);
 
         let m_max = match cfg.batching {
@@ -291,12 +347,40 @@ impl MultiQueryDes {
             }
         };
 
+        // Per-(stage, app) ξ: each app's service cost *relative to the
+        // engine-level calibration* (which is the default app's — so
+        // its multiplier is exactly 1.0 and homogeneous runs are
+        // bit-identical to an engine without per-app ξ). A query's
+        // drop gates, deadlines and budget math then price its own
+        // composition instead of one engine-wide cost model.
+        let stage_rel = |stage: Stage| -> [f64; 4] {
+            let cost = |kind: AppKind| {
+                let a = catalog.get(kind);
+                match stage {
+                    Stage::Va => a.va_cost,
+                    Stage::Cr => a.cr_cost,
+                    _ => 1.0,
+                }
+            };
+            let base = cost(catalog.default_kind()).max(1e-9);
+            let mut rel = [1.0; 4];
+            for kind in [
+                AppKind::App1,
+                AppKind::App2,
+                AppKind::App3,
+                AppKind::App4,
+            ] {
+                rel[kind.index()] = cost(kind) / base;
+            }
+            rel
+        };
+
         let mut tasks = Vec::with_capacity(topo.tasks.len());
         for info in topo.tasks.iter() {
-            let xi = match info.stage {
-                Stage::Va => va_xi.clone(),
-                Stage::Cr => cr_xi.clone(),
-                _ => fc_xi.clone(),
+            let (xi, xi_true) = match info.stage {
+                Stage::Va => (va_xi.clone(), va_base.clone()),
+                Stage::Cr => (cr_xi.clone(), cr_base.clone()),
+                _ => (fc_xi.clone(), fc_xi.clone()),
             };
             tasks.push(MqTask {
                 stage: info.stage,
@@ -304,20 +388,14 @@ impl MultiQueryDes {
                 batcher: FairShareBatcher::new(m_max.max(1)),
                 budgets: FastMap::default(),
                 xi,
+                xi_true,
+                rel: stage_rel(info.stage),
                 busy: false,
                 timer_seq: 0,
                 drop_count: 0,
                 feedback: FeedbackState::new(),
             });
         }
-
-        // Per-query app resolution: the schedule stamps every spec
-        // with the kind the *passed* app is registered under (so a
-        // custom/explicit `with_app` composition actually runs —
-        // `cfg.app` alone would silently resolve to a stock app when
-        // the two disagree). `set_app_cycle` overrides this for
-        // heterogeneous mixes.
-        let catalog = AppCatalog::new(app.clone(), cfg.app, cfg.tl);
 
         // Poisson arrival schedule with cycling priorities and random
         // start cameras (every query is seeded with a last-seen camera;
@@ -353,6 +431,8 @@ impl MultiQueryDes {
         let num_cameras = cfg.num_cameras;
         let policy = AdmissionPolicy::from(&mq);
         let seed = cfg.seed;
+        let compute =
+            ComputeModel::new(&cfg.service.compute_events, topo.nodes);
         Self {
             cfg,
             topo,
@@ -371,6 +451,8 @@ impl MultiQueryDes {
             tasks,
             fc_budget: (0..num_cameras).map(|_| FastMap::default()).collect(),
             fc_xi,
+            compute,
+            online_xi,
             core: EventCore::new(),
             next_event_id: 0,
             next_batch_seq: 0,
@@ -462,11 +544,16 @@ impl MultiQueryDes {
                 start,
                 xi_est,
                 actual,
-            } => self.on_exec_done(task, batch, start, xi_est, actual),
+                rel_sum,
+            } => self
+                .on_exec_done(task, batch, start, xi_est, actual, rel_sum),
             Ev::SignalAt { task, query, sig } => {
+                // λ̄/λ⃗ caps derive from *this query's* cost model.
+                let kind = self.query_app(query);
                 let t = &mut self.tasks[task];
                 if let Some(bm) = t.budgets.get_mut(&query) {
-                    bm.apply(sig, &t.xi);
+                    let xi = t.xi.scaled(t.rel[kind.index()]);
+                    bm.apply(sig, &xi);
                 }
             }
             Ev::TlTick => self.on_tl_tick(),
@@ -550,9 +637,10 @@ impl MultiQueryDes {
         };
         // Mint this query's own blocks from *its* application — the
         // heterogeneous many-tenant path: concurrent queries may run
-        // different compositions over the shared workers. (ξ service
-        // models stay the engine-level calibration; per-app cost
-        // scaling is a config-time `apply` concern.)
+        // different compositions over the shared workers. ξ pricing is
+        // per-app too: every executor holds per-app cost multipliers
+        // (`MqTask::rel`) over its online hardware calibration, so this
+        // query batches, drops and budgets under its own cost model.
         let app = Arc::clone(self.catalog.get(kind));
         self.blocks.insert(id, QueryBlocks::mint(&app));
         let start_vertex = self.cams[start_cam].vertex;
@@ -740,7 +828,7 @@ impl MultiQueryDes {
                     BudgetManager::new(
                         self.topo.va_part.instances(),
                         self.m_max,
-                        256,
+                        251, // prime (see task_budget)
                     )
                 })
                 .record(
@@ -774,6 +862,33 @@ impl MultiQueryDes {
 
     // ---- shared executors (VA / CR) --------------------------------------
 
+    /// The application kind a query runs (from its submitted spec;
+    /// O(1) — the registry is id-indexed). Falls back to the engine
+    /// default for ids the registry has never seen.
+    fn query_app(&self, q: QueryId) -> AppKind {
+        self.registry
+            .record(q)
+            .map(|r| r.spec.app)
+            .unwrap_or_else(|| self.catalog.default_kind())
+    }
+
+    /// Σ of per-app cost multipliers over a batch — the effective
+    /// batch size the §4.4 pricing uses at this task (exactly the
+    /// member count for a homogeneous default-app batch).
+    fn batch_relsum(
+        &self,
+        task: usize,
+        batch: &[QueuedEvent<Event>],
+    ) -> f64 {
+        let rel = &self.tasks[task].rel;
+        batch
+            .iter()
+            .map(|qe| {
+                rel[self.query_app(qe.item.header.query).index()]
+            })
+            .sum()
+    }
+
     /// Per-(task, query) budget, created on first use. Only call for
     /// queries that are still active (creation for a finished query
     /// would leak state); use [`Self::task_budget_for`] for lookups.
@@ -784,10 +899,13 @@ impl MultiQueryDes {
     ) -> &mut BudgetManager {
         let n_down = self.topo.downstream_count(task);
         let m_max = self.m_max;
+        // Prime record capacity: a (task, query)'s event ids stride by
+        // the query's active-camera count, so a power-of-two ring
+        // would collapse to capacity/gcd usable slots.
         self.tasks[task]
             .budgets
             .entry(q)
-            .or_insert_with(|| BudgetManager::new(n_down, m_max, 4096))
+            .or_insert_with(|| BudgetManager::new(n_down, m_max, 4093))
     }
 
     /// Read-only per-(task, query) budget toward `slot`;
@@ -839,7 +957,11 @@ impl MultiQueryDes {
                 let slot = self
                     .topo
                     .downstream_slot(task, ev.header.camera);
-                let xi1 = self.tasks[task].xi.xi(1);
+                // Drop point 1 prices the event under *its* app's ξ.
+                let xi1 = {
+                    let kind = self.query_app(q);
+                    self.tasks[task].app_xi(kind).xi(1)
+                };
                 let budget = self.task_budget_for(task, q, slot);
                 if self.cfg.drops_enabled
                     && budget < BUDGET_INF
@@ -886,9 +1008,21 @@ impl MultiQueryDes {
     fn try_form_batch(&mut self, task: usize) {
         loop {
             let now = self.now;
+            // Batch formation prices each candidate under its own
+            // app's cost multiplier (ξ of the Σ of multipliers) — a
+            // heterogeneous mix batches under each app's cost model.
             let poll = {
+                let reg = &self.registry;
+                let default_kind = self.catalog.default_kind();
+                let rel = self.tasks[task].rel;
                 let ts = &mut self.tasks[task];
-                ts.batcher.poll(now, &ts.xi)
+                ts.batcher.poll_costed(now, &ts.xi, |q| {
+                    let kind = reg
+                        .record(q)
+                        .map(|r| r.spec.app)
+                        .unwrap_or(default_kind);
+                    rel[kind.index()]
+                })
             };
             match poll {
                 BatcherPoll::Idle => return,
@@ -905,8 +1039,9 @@ impl MultiQueryDes {
                     // buffer is engine-owned scratch, so the filter
                     // allocates nothing in steady state.
                     if self.cfg.drops_enabled {
-                        let b = batch.len();
-                        let xib = self.tasks[task].xi.xi(b);
+                        let xib = self.tasks[task].xi.xi_eff(
+                            self.batch_relsum(task, &batch),
+                        );
                         let mut kept =
                             std::mem::take(&mut self.kept_scratch);
                         kept.clear();
@@ -941,15 +1076,28 @@ impl MultiQueryDes {
                         self.tasks[task].batcher.recycle(batch);
                         continue;
                     }
-                    let b = batch.len();
-                    let (xi_est, jitter) = {
+                    let relsum = self.batch_relsum(task, &batch);
+                    let (xi_est, xi_true, jitter, node) = {
                         let ts = &self.tasks[task];
-                        (ts.xi.xi(b), self.cfg.service.jitter)
+                        (
+                            ts.xi.xi_eff(relsum),
+                            ts.xi_true.xi_eff(relsum),
+                            self.cfg.service.jitter,
+                            ts.node,
+                        )
                     };
                     let factor =
                         1.0 + self.rng.range_f64(-jitter, jitter);
-                    let actual =
-                        ((xi_est as f64) * factor).round() as Micros;
+                    // Compute dynamism: the *actual* duration is drawn
+                    // from the frozen nominal model (the simulated
+                    // hardware), scaled by the node's slowdown — never
+                    // from the online-refined estimator (that loop
+                    // would compound the slowdown geometrically).
+                    // Factor 1.0 is a bit-exact identity and the RNG
+                    // draw count is unchanged.
+                    let slow = self.compute.factor_at(node, now);
+                    let actual = ((xi_true as f64) * factor * slow)
+                        .round() as Micros;
                     self.tasks[task].busy = true;
                     self.push(
                         now + actual.max(1),
@@ -959,6 +1107,7 @@ impl MultiQueryDes {
                             start: now,
                             xi_est,
                             actual,
+                            rel_sum: relsum,
                         },
                     );
                     return;
@@ -974,12 +1123,21 @@ impl MultiQueryDes {
         start: Micros,
         xi_est: Micros,
         actual: Micros,
+        rel_sum: f64,
     ) {
         self.tasks[task].busy = false;
         let b = batch.len();
         let stage = self.tasks[task].stage;
         let batch_seq = self.next_batch_seq;
         self.next_batch_seq += 1;
+
+        // Online ξ recalibration: the observed (slowdown-scaled)
+        // duration refines the task's estimator at the batch's
+        // effective size (computed once at formation), so every app's
+        // scaled snapshot tracks the current machine together.
+        if self.online_xi {
+            self.tasks[task].xi.observe_eff(rel_sum, actual);
+        }
 
         // First pass: per-event bookkeeping (per-query budget 3-tuples,
         // header accumulators) into engine-owned scratch; the emptied
@@ -1548,6 +1706,49 @@ mod tests {
             .filter(|&&s| s == QueryStatus::Completed)
             .count();
         assert!(completed >= 2, "{statuses:?}");
+    }
+
+    #[test]
+    fn heterogeneous_mix_prices_per_app_xi() {
+        // Apps 1/2/3 differ in VA/CR cost (CR 1.63x for App 2, VA 2.5x
+        // for App 3), so this exercises rel ≠ 1.0 on every per-app ξ
+        // path: batch pricing (poll_costed), drop gates, budget-signal
+        // caps — under drops, online ξ and a mid-run compute slowdown
+        // at once. The invariants: per-query conservation and per-seed
+        // determinism.
+        use crate::config::ComputeEvent;
+        let mut cfg = base_cfg();
+        cfg.cluster.cr_instances = 3;
+        cfg.drops_enabled = true;
+        cfg.service.online_xi = true;
+        cfg.service.compute_events.push(ComputeEvent {
+            at_sec: 30.0,
+            node: None,
+            factor: 3.0,
+        });
+        let mq = mq_cfg(4);
+        let run_once = || {
+            let mut e =
+                MultiQueryDes::new(cfg.clone(), mq.clone());
+            e.set_app_cycle(&[
+                AppKind::App1,
+                AppKind::App2,
+                AppKind::App3,
+            ]);
+            e.run()
+        };
+        let r = run_once();
+        assert!(r.aggregate.conserved(), "{:?}", r.aggregate);
+        for q in r.activated() {
+            let s = q.summary.as_ref().unwrap();
+            assert!(s.conserved(), "query {}: {:?}", q.id, s);
+        }
+        assert_eq!(r.queries[1].app, AppKind::App2);
+        assert_eq!(r.queries[2].app, AppKind::App3);
+        let r2 = run_once();
+        assert_eq!(r.aggregate.generated, r2.aggregate.generated);
+        assert_eq!(r.aggregate.on_time, r2.aggregate.on_time);
+        assert_eq!(r.aggregate.dropped, r2.aggregate.dropped);
     }
 
     #[test]

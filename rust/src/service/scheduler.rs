@@ -25,6 +25,10 @@ pub struct FairShareBatcher<T> {
     current: Vec<QueuedEvent<T>>,
     /// Δₚ: earliest deadline among `current`.
     cur_deadline: Micros,
+    /// Effective cost of `current`: Σ per-event cost multipliers (see
+    /// [`Self::poll_costed`]); exactly `current.len()` when every
+    /// query runs the calibration app.
+    cur_relsum: f64,
     max: usize,
 }
 
@@ -35,6 +39,7 @@ impl<T> FairShareBatcher<T> {
             share: FairShare::new(),
             current: Vec::new(),
             cur_deadline: BUDGET_INF,
+            cur_relsum: 0.0,
             max: max.max(1),
         }
     }
@@ -108,6 +113,7 @@ impl<T> FairShareBatcher<T> {
 
     fn take_current(&mut self) -> Vec<QueuedEvent<T>> {
         self.cur_deadline = BUDGET_INF;
+        self.cur_relsum = 0.0;
         std::mem::take(&mut self.current)
     }
 
@@ -135,11 +141,29 @@ impl<T> FairShareBatcher<T> {
     }
 
     /// Drive batch formation at time `now` — same contract as
-    /// [`crate::tuning::Batcher::poll`].
+    /// [`crate::tuning::Batcher::poll`]. Every event costs 1 (the
+    /// homogeneous case); use [`Self::poll_costed`] when queries run
+    /// different applications.
     pub fn poll(
         &mut self,
         now: Micros,
         xi: &XiModel,
+    ) -> BatcherPoll<T> {
+        self.poll_costed(now, xi, |_| 1.0)
+    }
+
+    /// [`Self::poll`] with per-query service-cost multipliers: an
+    /// event of query `q` contributes `cost(q)` effective batch slots
+    /// to the §4.4 deadline test, so the grown-batch estimate is
+    /// `ξ(Σ costs)` rather than `ξ(count)` — a heterogeneous mix (say
+    /// an App 2 query whose CR is 1.63x App 1's) batches under each
+    /// app's cost model. `cost(q) = 1.0` for every query reproduces
+    /// [`Self::poll`] bit-exactly (Σ of ones is an exact integer).
+    pub fn poll_costed(
+        &mut self,
+        now: Micros,
+        xi: &XiModel,
+        cost: impl Fn(QueryId) -> f64,
     ) -> BatcherPoll<T> {
         loop {
             if self.current.len() >= self.max {
@@ -161,9 +185,9 @@ impl<T> FairShareBatcher<T> {
                 if self.current.is_empty() {
                     return BatcherPoll::Idle;
                 }
-                let m = self.current.len();
-                let submit_at =
-                    self.cur_deadline.saturating_sub(xi.xi(m));
+                let submit_at = self
+                    .cur_deadline
+                    .saturating_sub(xi.xi_eff(self.cur_relsum));
                 if now >= submit_at {
                     return BatcherPoll::Ready(self.take_current());
                 }
@@ -180,12 +204,13 @@ impl<T> FairShareBatcher<T> {
                 let head = self.pop_head(q);
                 return BatcherPoll::Ready(vec![head]);
             }
-            let m = self.current.len();
-            let fits = now + xi.xi(m + 1)
+            let grown = self.cur_relsum + cost(q);
+            let fits = now + xi.xi_eff(grown)
                 <= self.cur_deadline.min(head_deadline);
             if fits {
                 let head = self.pop_head(q);
                 self.cur_deadline = self.cur_deadline.min(head.deadline);
+                self.cur_relsum = grown;
                 self.current.push(head);
             } else if !self.current.is_empty() {
                 return BatcherPoll::Ready(self.take_current());
@@ -369,6 +394,35 @@ mod tests {
         // the caller to account — they must not resurrect the query.
         assert!(b.push(5, qe(5, 9, 60 * SEC)).is_some());
         assert!(matches!(b.poll(0, &xi()), BatcherPoll::Idle));
+    }
+
+    #[test]
+    fn poll_costed_prices_expensive_queries() {
+        let x = xi();
+        // The deadline admits an effective batch size of 3, not 4.
+        let dl = x.xi(3) + 1;
+        // Homogeneous unit cost: three events fit…
+        let mut b = FairShareBatcher::new(25);
+        b.register(1, 1);
+        for k in 0..5 {
+            push_ok(&mut b, 1, qe(1, k, dl));
+        }
+        assert_eq!(ready(b.poll_costed(0, &x, |_| 1.0)).len(), 3);
+        // …and unit cost is exactly `poll`.
+        let mut b2 = FairShareBatcher::new(25);
+        b2.register(1, 1);
+        for k in 0..5 {
+            push_ok(&mut b2, 1, qe(1, k, dl));
+        }
+        assert_eq!(ready(b2.poll(0, &x)).len(), 3);
+        // A 1.5x-cost app fills the same deadline with two events
+        // (Σ costs 3.0); a third would price at ξ(4.5) and miss.
+        let mut b3 = FairShareBatcher::new(25);
+        b3.register(1, 1);
+        for k in 0..5 {
+            push_ok(&mut b3, 1, qe(1, k, dl));
+        }
+        assert_eq!(ready(b3.poll_costed(0, &x, |_| 1.5)).len(), 2);
     }
 
     #[test]

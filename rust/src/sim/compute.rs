@@ -1,0 +1,136 @@
+//! Time-varying compute capacity of the cluster nodes.
+//!
+//! The paper's §6 dynamism claim is two-sided: the platform must ride
+//! out variability in the *network* ([`super::NetModel`]'s bandwidth
+//! schedule, Fig 9) **and** in the *compute* resources — a fog node
+//! that gets co-tenanted, thermally throttled or migrated mid-run.
+//! [`ComputeModel`] mirrors the bandwidth schedule for execution
+//! speed: per-node `(time, slowdown factor)` steps
+//! ([`crate::config::ComputeEvent`]) that scale the *actual* duration
+//! of every batch executed on that node from the step onward. The ξ
+//! estimators never see this model directly — they only see its effect
+//! through observed durations, which is exactly what the online-ξ
+//! calibration loop (`ServiceConfig::online_xi`) re-estimates and the
+//! frozen-ξ baseline mispredicts.
+
+use crate::config::ComputeEvent;
+use crate::util::{secs, Micros};
+
+/// Per-node execution-slowdown schedule.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Per-node `(effective_from, factor)` steps, sorted by time.
+    schedules: Vec<Vec<(Micros, f64)>>,
+    /// No events at all: `factor_at` short-circuits to 1.0 so static
+    /// runs pay nothing (and stay bit-identical by construction).
+    is_static: bool,
+}
+
+impl ComputeModel {
+    /// Build the model for `nodes` cluster nodes. An event with
+    /// `node: None` applies to every node (the "all fog nodes slow
+    /// down" scenario); an out-of-range node index is ignored.
+    pub fn new(events: &[ComputeEvent], nodes: usize) -> Self {
+        let mut schedules = vec![vec![(0, 1.0)]; nodes];
+        for ev in events {
+            match ev.node {
+                Some(n) => {
+                    if let Some(s) = schedules.get_mut(n) {
+                        s.push((secs(ev.at_sec), ev.factor));
+                    }
+                }
+                None => {
+                    for s in schedules.iter_mut() {
+                        s.push((secs(ev.at_sec), ev.factor));
+                    }
+                }
+            }
+        }
+        for s in schedules.iter_mut() {
+            s.sort_by_key(|&(t, _)| t);
+        }
+        Self {
+            schedules,
+            is_static: events.is_empty(),
+        }
+    }
+
+    /// Slowdown factor in effect on `node` at time `t` (1.0 = nominal
+    /// speed, 4.0 = four times slower).
+    pub fn factor_at(&self, node: usize, t: Micros) -> f64 {
+        if self.is_static {
+            return 1.0;
+        }
+        self.schedules
+            .get(node)
+            .and_then(|s| {
+                s.iter().rev().find(|&&(from, _)| from <= t)
+            })
+            .map(|&(_, f)| f)
+            .unwrap_or(1.0)
+    }
+
+    /// True when no compute events are scheduled (every factor is 1.0).
+    pub fn is_static(&self) -> bool {
+        self.is_static
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SEC;
+
+    fn ev(at_sec: f64, node: Option<usize>, factor: f64) -> ComputeEvent {
+        ComputeEvent {
+            at_sec,
+            node,
+            factor,
+        }
+    }
+
+    #[test]
+    fn static_model_is_unit() {
+        let m = ComputeModel::new(&[], 4);
+        assert!(m.is_static());
+        for node in 0..4 {
+            assert_eq!(m.factor_at(node, 0), 1.0);
+            assert_eq!(m.factor_at(node, 1000 * SEC), 1.0);
+        }
+    }
+
+    #[test]
+    fn scheduled_slowdown_applies_from_its_step() {
+        let m = ComputeModel::new(&[ev(300.0, None, 4.0)], 3);
+        assert_eq!(m.factor_at(1, 299 * SEC), 1.0);
+        assert_eq!(m.factor_at(1, 300 * SEC), 4.0);
+        assert_eq!(m.factor_at(2, 500 * SEC), 4.0);
+    }
+
+    #[test]
+    fn per_node_events_are_scoped() {
+        let m = ComputeModel::new(&[ev(100.0, Some(1), 2.0)], 3);
+        assert_eq!(m.factor_at(0, 200 * SEC), 1.0);
+        assert_eq!(m.factor_at(1, 200 * SEC), 2.0);
+        assert_eq!(m.factor_at(2, 200 * SEC), 1.0);
+        // Out-of-range node indices are ignored, not a panic.
+        let m = ComputeModel::new(&[ev(100.0, Some(99), 2.0)], 3);
+        assert_eq!(m.factor_at(0, 200 * SEC), 1.0);
+    }
+
+    #[test]
+    fn recovery_steps_restore_speed() {
+        let m = ComputeModel::new(
+            &[ev(100.0, None, 4.0), ev(200.0, None, 1.0)],
+            2,
+        );
+        assert_eq!(m.factor_at(0, 150 * SEC), 4.0);
+        assert_eq!(m.factor_at(0, 250 * SEC), 1.0);
+    }
+
+    #[test]
+    fn unknown_node_queries_are_unit() {
+        let m = ComputeModel::new(&[ev(0.0, None, 3.0)], 1);
+        assert_eq!(m.factor_at(7, SEC), 1.0);
+    }
+}

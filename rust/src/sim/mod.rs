@@ -1,14 +1,17 @@
 //! Workload simulation substrate: the entity's random walk, per-camera
 //! ground-truth visibility, synthetic identity images (CUHK03
-//! substitute), the MAN/WAN network model and skewed device clocks.
+//! substitute), the MAN/WAN network model, time-varying per-node
+//! compute capacity and skewed device clocks.
 
 mod clock;
+mod compute;
 mod feeds;
 mod images;
 mod netmodel;
 mod walk;
 
 pub use clock::ClockSkews;
+pub use compute::ComputeModel;
 pub use feeds::{visibility_of, FrameTruth, GroundTruth};
 pub use images::{
     identity_embedding, identity_image, identity_image_into,

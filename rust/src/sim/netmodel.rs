@@ -54,6 +54,38 @@ impl NetModel {
             .unwrap_or(self.bw_schedule[0].1)
     }
 
+    /// Serialize `bytes` onto a link starting at `start`, honouring
+    /// every scheduled bandwidth step the transfer straddles: the
+    /// portion before each boundary serializes at that segment's rate,
+    /// the remainder at the next. (Sampling the rate once at `start`
+    /// would let a transfer beginning just before a throttle finish
+    /// entirely at the stale fast rate.) Returns the serialization
+    /// finish time.
+    fn serialized_until(&self, start: Micros, bytes: usize) -> Micros {
+        let mut remaining_bits = bytes as f64 * 8.0;
+        let mut t = start;
+        loop {
+            let bw = self.bandwidth_at(t);
+            let need =
+                (remaining_bits / bw * 1e6).ceil().max(0.0) as Micros;
+            // Smallest scheduled step strictly after `t` (the schedule
+            // is sorted by time).
+            let next = self
+                .bw_schedule
+                .iter()
+                .map(|&(from, _)| from)
+                .find(|&from| from > t);
+            match next {
+                Some(boundary) if t + need > boundary => {
+                    let sent = (boundary - t) as f64 * bw / 1e6;
+                    remaining_bits = (remaining_bits - sent).max(0.0);
+                    t = boundary;
+                }
+                _ => return t + need,
+            }
+        }
+    }
+
     /// Enqueue a transfer of `bytes` from `src` to `dst` starting at `t`;
     /// returns the arrival time at `dst`. Same-node transfers (IPC via
     /// the Worker's router) cost only a fixed small overhead.
@@ -69,22 +101,20 @@ impl NetModel {
         }
         if let Some(fabric_free) = self.shared {
             let start = fabric_free.max(t);
-            let bw = self.bandwidth_at(start);
-            let ser = (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros;
-            self.shared = Some(start + ser);
-            return start + ser + self.latency;
+            let done = self.serialized_until(start, bytes);
+            self.shared = Some(done);
+            return done + self.latency;
         }
         let start = self.nic_free[src].max(t);
-        let bw = self.bandwidth_at(start);
-        let ser = (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros;
-        self.nic_free[src] = start + ser;
-        start + ser + self.latency
+        let done = self.serialized_until(start, bytes);
+        self.nic_free[src] = done;
+        done + self.latency
     }
 
-    /// Non-mutating estimate of a transfer duration (no queueing).
+    /// Non-mutating estimate of a transfer duration (no queueing; the
+    /// schedule-boundary split still applies).
     pub fn transfer_estimate(&self, bytes: usize, t: Micros) -> Micros {
-        let bw = self.bandwidth_at(t);
-        (bytes as f64 * 8.0 / bw * 1e6).ceil() as Micros + self.latency
+        self.serialized_until(t, bytes) - t + self.latency
     }
 }
 
@@ -155,6 +185,45 @@ mod tests {
     fn same_node_is_ipc() {
         let mut n = NetModel::new(&cfg(), 2);
         assert_eq!(n.transfer(1, 1, 5_000_000, 100), 150);
+    }
+
+    #[test]
+    fn transfer_straddling_throttle_splits_at_boundary() {
+        // Regression: serialization used to sample the bandwidth once
+        // at `start`, so a transfer beginning just before the 300 s
+        // throttle serialized *entirely* at the stale 1 Gbps. 25 MB
+        // (200 Mbit) starting 0.1 s before the step: 100 Mbit fit at
+        // 1 Gbps, the remaining 100 Mbit take ~3.33 s at 30 Mbps.
+        let mut n = NetModel::new(&cfg(), 2);
+        let start = 300 * SEC - SEC / 10;
+        let end = n.transfer(0, 1, 25_000_000, start);
+        assert!(
+            end > 303 * SEC,
+            "remainder serialized at the stale fast rate: end={end}"
+        );
+        assert!(
+            end < 304 * SEC,
+            "pre-boundary portion over-throttled: end={end}"
+        );
+        // The NIC is busy until serialization completes.
+        let follow = n.transfer(0, 1, 1, 300 * SEC);
+        assert!(follow >= end - 1000, "follow={follow} end={end}");
+
+        // A transfer entirely inside one segment is unchanged relative
+        // to the single-sample model.
+        let mut m = NetModel::new(&cfg(), 2);
+        let e2 = m.transfer(0, 1, 2_900, 0);
+        let ser = (2_900f64 * 8.0 / 1e9 * 1e6).ceil() as Micros;
+        assert_eq!(e2, ser + millis(0.5));
+
+        // The shared-fabric path splits at the boundary too.
+        let mut s = NetModel::new(&cfg_shared(), 2);
+        let end = s.transfer(0, 1, 25_000_000, start);
+        assert!(end > 303 * SEC, "shared fabric: end={end}");
+
+        // The non-mutating estimate honours the split as well.
+        let est = m.transfer_estimate(25_000_000, start);
+        assert!(est > 3 * SEC, "estimate ignored the boundary: {est}");
     }
 
     #[test]

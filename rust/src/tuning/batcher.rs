@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 
 use super::budget::BUDGET_INF;
-use super::nob::NobTable;
+use super::nob::{NobTable, NOB_MAX_RATE, NOB_RATE_STEP};
 use super::xi::XiModel;
 use crate::util::Micros;
 
@@ -51,6 +51,11 @@ enum Kind {
         max: usize,
         rate_ema: f64,
         last_arrival: Option<Micros>,
+        /// `(α, β)` the table was last built from — lets
+        /// [`Batcher::retune_nob`] rebuild only on material ξ drift.
+        /// `None` until the first retune call (frozen-ξ runs never
+        /// retune, keeping the §5.1 one-time-benchmark semantics).
+        cal: Option<(f64, f64)>,
     },
 }
 
@@ -78,6 +83,7 @@ impl<T> Batcher<T> {
             max: max.max(1),
             rate_ema: 0.0,
             last_arrival: None,
+            cal: None,
         })
     }
 
@@ -144,6 +150,37 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Rebuild the NOB rate → batch-size table from the *current* ξ
+    /// estimate — the online-ξ counterpart of the table's one-time
+    /// §5.1 benchmark, called by the engines after each
+    /// [`XiModel::observe`] when `online_xi` is on. The first call
+    /// rebuilds unconditionally (the config-time table may already be
+    /// stale under a from-start slowdown); after that, only a material
+    /// drift (> 5 % on either coefficient) triggers a rebuild, so the
+    /// per-batch call is a cheap comparison in steady state. No-op for
+    /// the Static/Dynamic strategies.
+    pub fn retune_nob(&mut self, xi: &XiModel) {
+        if let Kind::Nob {
+            table, max, cal, ..
+        } = &mut self.kind
+        {
+            let (a, b) = (xi.alpha_us(), xi.beta_us());
+            let drifted = match *cal {
+                None => true,
+                Some((ca, cb)) => {
+                    let da = (a - ca).abs() / ca.abs().max(1.0);
+                    let db = (b - cb).abs() / cb.abs().max(1.0);
+                    da.max(db) > 0.05
+                }
+            };
+            if drifted {
+                *table =
+                    NobTable::build(xi, NOB_MAX_RATE, NOB_RATE_STEP, *max);
+                *cal = Some((a, b));
+            }
+        }
+    }
+
     /// Drive batch formation at time `now`. Call when the executor is
     /// free, after each `push`, and when a previously returned timer
     /// fires.
@@ -166,7 +203,18 @@ impl<T> Batcher<T> {
                 }
             }
             Kind::Nob { table, max, rate_ema, .. } => {
-                let target = table.lookup(*rate_ema).clamp(1, *max);
+                // §5.1 bootstrap: the rate EMA needs two arrivals
+                // before it holds a real estimate ([`Self::push`]
+                // seeds it from the first inter-arrival gap). Until
+                // then, stream b = 1 — looking up a batch size "for
+                // rate 0" would pick the lowest table rate's target
+                // and could hold the very first event hostage to a
+                // batch that never fills at low input rates.
+                let target = if *rate_ema <= 0.0 {
+                    1
+                } else {
+                    table.lookup(*rate_ema).clamp(1, *max)
+                };
                 if self.pending.len() >= target {
                     let mut batch = std::mem::take(&mut self.current);
                     batch.extend(self.pending.drain(..target));
@@ -377,18 +425,92 @@ mod tests {
         let x = XiModel::affine_ms(100.0, 10.0);
         let table = NobTable::build(&x, 100.0, 10.0, 32);
         let mut b = Batcher::nob(table, 32);
+        // First arrival: no rate estimate yet — bootstrap streams b=1.
+        b.push(qe(0, 0, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(0, &x)), vec![0]);
         // 20 events/s arrivals -> target batch 3 (see nob tests).
         let mut t = 0;
         let mut got = None;
-        for k in 0..10 {
+        for k in 1..12 {
+            t += 50 * MS; // 20 events/s
             b.push(qe(k, t, BUDGET_INF));
             if let BatcherPoll::Ready(batch) = b.poll(t, &x) {
                 got = Some(batch.len());
                 break;
             }
-            t += 50 * MS; // 20 events/s
         }
         assert_eq!(got, Some(3));
+    }
+
+    #[test]
+    fn nob_cold_start_streams_until_rate_is_real() {
+        // Regression: until the second arrival `rate_ema` is 0.0 and
+        // the old poll looked up a batch size "for rate 0" (the
+        // nearest table rate), so a lone first event at a low input
+        // rate waited indefinitely for companions. The §5.1 bootstrap
+        // contract is streaming (b = 1) until the estimate is real.
+        let x = XiModel::affine_ms(52.5, 67.5);
+        let table = NobTable::build(&x, 1000.0, 10.0, 25);
+        assert!(
+            table.lookup(0.0) > 1,
+            "precondition: the rate-0 lookup would not stream"
+        );
+        let mut b = Batcher::nob(table, 25);
+        b.push(qe(7, 0, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(0, &x)), vec![7]);
+        assert_eq!(b.rate_estimate(), 0.0);
+        // The EMA seeds from the first inter-arrival gap (10 s -> 0.1/s).
+        b.push(qe(8, 10 * SEC, BUDGET_INF));
+        assert!((b.rate_estimate() - 0.1).abs() < 1e-9);
+        // With a real (tiny) rate the lookup takes over again; the
+        // nearest table rate is 10/s, whose target at this ξ is 2.
+        assert!(matches!(b.poll(10 * SEC, &x), BatcherPoll::Idle));
+        b.push(qe(9, 20 * SEC, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(20 * SEC, &x)), vec![8, 9]);
+    }
+
+    #[test]
+    fn retune_nob_tracks_drifted_xi() {
+        let x = XiModel::affine_ms(100.0, 10.0);
+        let table = NobTable::build(&x, 100.0, 10.0, 32);
+        let mut b: Batcher<u64> = Batcher::nob(table, 32);
+        // Bootstrap stream, then seed a steady 10 events/s EMA.
+        b.push(qe(0, 0, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(0, &x)), vec![0]);
+        let mut t = 0;
+        b.push(qe(1, t + 100 * MS, BUDGET_INF));
+        b.push(qe(2, t + 200 * MS, BUDGET_INF));
+        t += 200 * MS;
+        // At 10/s the config-time table targets b = 2.
+        assert_eq!(ready_ids(b.poll(t, &x)).len(), 2);
+        // The machine got 4x slower; online ξ observed it. Retuning
+        // rebuilds the table: at 10/s the target is now 7
+        // (b / (0.4 s + 0.04 s · b) ≥ 10 ⇒ b ≥ 6.67).
+        let slow = XiModel::affine_ms(400.0, 40.0);
+        b.retune_nob(&slow);
+        for k in 3..10 {
+            t += 100 * MS;
+            b.push(qe(k, t, BUDGET_INF));
+            if k < 9 {
+                assert!(
+                    matches!(b.poll(t, &slow), BatcherPoll::Idle),
+                    "target should have grown past {}",
+                    k - 2
+                );
+            }
+        }
+        assert_eq!(ready_ids(b.poll(t, &slow)).len(), 7);
+        // No material drift -> retune is a no-op comparison.
+        b.retune_nob(&slow);
+    }
+
+    #[test]
+    fn retune_nob_is_inert_for_other_strategies() {
+        let x = XiModel::affine_ms(52.5, 67.5);
+        let mut b: Batcher<u64> = Batcher::dynamic(25);
+        b.retune_nob(&XiModel::affine_ms(500.0, 500.0));
+        b.push(qe(0, 0, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(0, &x)), vec![0]);
     }
 
     #[test]

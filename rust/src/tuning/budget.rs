@@ -6,10 +6,12 @@
 //! (accept signal, §4.5.2). The task stores a 3-tuple ⟨dᵏ, qᵏ, mᵏ⟩ per
 //! processed event so late signals can be resolved; `min`/`max` against
 //! the previous budget makes updates resilient to out-of-order signals.
-
-use std::collections::VecDeque;
-
-use crate::util::FastMap;
+//!
+//! The 3-tuple store is a fixed ring keyed by event id (ids are
+//! engine-assigned and monotonically increasing, so a slot collision
+//! evicts the record `capacity` ids older — approximately the oldest).
+//! No hashing, no per-record allocation, and re-recording an id
+//! overwrites in place without evicting an unrelated record.
 
 use super::xi::XiModel;
 use crate::util::Micros;
@@ -57,19 +59,27 @@ pub struct BudgetManager {
     /// Per-downstream budget; `None` until the first signal arrives
     /// (bootstrap: "no budgets assigned", streaming b=1).
     budgets: Vec<Option<Micros>>,
-    records: FastMap<u64, EventRecord>,
-    order: VecDeque<u64>,
+    /// Fixed ring of ⟨event id, 3-tuple⟩ records, indexed by
+    /// `id % capacity`. Allocated lazily on the first record so idle
+    /// managers (e.g. per-camera FC budgets of inactive cameras) cost
+    /// nothing.
+    slots: Vec<Option<(u64, EventRecord)>>,
     capacity: usize,
     m_max: usize,
 }
 
 impl BudgetManager {
+    /// `capacity` bounds the record ring. Ids land in slot
+    /// `id % capacity`, so callers whose event ids arrive with a
+    /// regular stride (per-camera/per-query managers see ids strided
+    /// by the active-camera count) should pick a capacity coprime to
+    /// any plausible stride — in practice a prime — or the ring
+    /// collapses to `capacity / gcd(stride, capacity)` usable slots.
     pub fn new(n_downstream: usize, m_max: usize, capacity: usize) -> Self {
         Self {
             budgets: vec![None; n_downstream.max(1)],
-            records: FastMap::default(),
-            order: VecDeque::new(),
-            capacity,
+            slots: Vec::new(),
+            capacity: capacity.max(1),
             m_max,
         }
     }
@@ -104,20 +114,24 @@ impl BudgetManager {
         self.budgets.iter().any(|b| b.is_some())
     }
 
-    /// Store the 3-tuple for a processed event (bounded; oldest evicted).
+    /// Store the 3-tuple for a processed event. Bounded: the ring slot
+    /// `event % capacity` is overwritten, which evicts the record
+    /// exactly `capacity` ids older (ids increase monotonically), and
+    /// nothing else — re-recording a live id replaces it in place.
     pub fn record(&mut self, event: u64, rec: EventRecord) {
-        if self.records.len() >= self.capacity {
-            if let Some(old) = self.order.pop_front() {
-                self.records.remove(&old);
-            }
+        if self.slots.is_empty() {
+            self.slots.resize(self.capacity, None);
         }
-        if self.records.insert(event, rec).is_none() {
-            self.order.push_back(event);
-        }
+        let idx = (event % self.capacity as u64) as usize;
+        self.slots[idx] = Some((event, rec));
     }
 
     pub fn get_record(&self, event: u64) -> Option<&EventRecord> {
-        self.records.get(&event)
+        let idx = (event % self.capacity as u64) as usize;
+        match self.slots.get(idx) {
+            Some(Some((id, rec))) if *id == event => Some(rec),
+            _ => None,
+        }
     }
 
     /// Apply an upstream-travelling signal. Returns the new budget for
@@ -129,7 +143,7 @@ impl BudgetManager {
                 eps,
                 sum_queue,
             } => {
-                let rec = *self.records.get(&event)?;
+                let rec = *self.get_record(event)?;
                 // λ̄ = min(ε·qᵏ/Σq, ξ(mᵏ) − ξ(1))   (§4.5.1)
                 let ratio = if sum_queue > 0 {
                     rec.queue as f64 / sum_queue as f64
@@ -156,7 +170,7 @@ impl BudgetManager {
                 eps,
                 sum_exec,
             } => {
-                let rec = *self.records.get(&event)?;
+                let rec = *self.get_record(event)?;
                 // λ⃗ = min(ε·ξ(mᵏ)/Σξ,
                 //          (mᵐᵃˣ−mᵏ)·qᵏ/mᵏ + ξ(mᵐᵃˣ) − ξ(mᵏ))  (§4.5.2)
                 let xi_m = xi.xi(rec.batch);
@@ -374,5 +388,52 @@ mod tests {
         assert!(b.get_record(0).is_none());
         assert!(b.get_record(1).is_none());
         assert!(b.get_record(5).is_some());
+    }
+
+    #[test]
+    fn re_recording_an_id_evicts_nothing() {
+        // Regression: the old FastMap+VecDeque store at capacity
+        // evicted its oldest record even when the inserted id was
+        // already present (no growth!), and the replaced id kept a
+        // stale slot in the eviction order. The ring overwrites in
+        // place.
+        let mut b = BudgetManager::new(1, 25, 4);
+        for k in 0..4u64 {
+            b.record(k, rec(SEC, SEC, 1));
+        }
+        for _ in 0..10 {
+            b.record(2, rec(7 * SEC, 2 * SEC, 5));
+        }
+        // Every id is still resolvable…
+        for k in 0..4u64 {
+            assert!(b.get_record(k).is_some(), "id {k} evicted");
+        }
+        // …and the re-record replaced the live slot.
+        let r = b.get_record(2).unwrap();
+        assert_eq!(r.departure, 7 * SEC);
+        assert_eq!(r.batch, 5);
+        // Signals against the refreshed record use the new 3-tuple.
+        let new = b
+            .apply(
+                Signal::Reject {
+                    event: 2,
+                    eps: SEC,
+                    sum_queue: 4 * SEC,
+                },
+                &xi(),
+            )
+            .unwrap();
+        assert!(new < 7 * SEC);
+    }
+
+    #[test]
+    fn ring_keyed_lookup_rejects_colliding_ids() {
+        // Ids `capacity` apart share a slot: the newer one wins and
+        // the older is reported gone (never a wrong record).
+        let mut b = BudgetManager::new(1, 25, 4);
+        b.record(1, rec(SEC, SEC, 1));
+        b.record(5, rec(2 * SEC, SEC, 2)); // 5 % 4 == 1 % 4
+        assert!(b.get_record(1).is_none());
+        assert_eq!(b.get_record(5).unwrap().departure, 2 * SEC);
     }
 }

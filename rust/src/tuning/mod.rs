@@ -30,6 +30,6 @@ pub use drops::{
     drop_at_exec, drop_at_queue, drop_at_transmit, drop_before_exec,
     drop_before_queue, drop_before_transmit,
 };
-pub use nob::NobTable;
+pub use nob::{NobTable, NOB_MAX_RATE, NOB_RATE_STEP};
 pub use share::FairShare;
-pub use xi::XiModel;
+pub use xi::{XiModel, ONLINE_XI_EMA};

@@ -9,6 +9,13 @@
 
 use super::xi::XiModel;
 
+/// Highest input rate (events/s) the engines' NOB tables cover — the
+/// paper benchmarks 1–1000 events/s.
+pub const NOB_MAX_RATE: f64 = 1000.0;
+
+/// Rate step (events/s) between NOB table entries.
+pub const NOB_RATE_STEP: f64 = 10.0;
+
 /// Rate → batch-size lookup table.
 #[derive(Debug, Clone)]
 pub struct NobTable {

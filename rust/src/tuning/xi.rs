@@ -9,6 +9,11 @@
 
 use crate::util::{Micros, MS};
 
+/// EMA smoothing factor the engines use for online ξ recalibration
+/// (`ServiceConfig::online_xi`); matches the live engine's calibration
+/// loop so the DES and wall-clock paths drift-track identically.
+pub const ONLINE_XI_EMA: f64 = 0.1;
+
 /// Affine batch execution-time model with optional online refinement.
 #[derive(Debug, Clone)]
 pub struct XiModel {
@@ -72,18 +77,46 @@ impl XiModel {
         (self.alpha + self.beta * b as f64).round() as Micros
     }
 
+    /// ξ at a *fractional* effective batch size. The multi-query engine
+    /// prices a cross-application batch as `α + β·Σᵢ relᵢ` where each
+    /// event contributes its app's relative cost multiplier instead of
+    /// 1 — for a homogeneous batch of the calibration app this is
+    /// bit-identical to [`Self::xi`] (`Σ 1.0` over `b` events is
+    /// exactly `b`).
+    pub fn xi_eff(&self, b_eff: f64) -> Micros {
+        (self.alpha + self.beta * b_eff).round() as Micros
+    }
+
+    /// A snapshot of this calibration with both coefficients multiplied
+    /// by `factor` — a per-application cost scaling (affine models
+    /// scale linearly: `m·ξ(b) = m·α + m·β·b`). The snapshot never
+    /// observes online; drift tracking stays with the base model.
+    pub fn scaled(&self, factor: f64) -> Self {
+        Self {
+            alpha: self.alpha * factor,
+            beta: self.beta * factor,
+            ema: 0.0,
+        }
+    }
+
     /// Record an observed `(batch, actual_duration)`; nudges α and β by
     /// splitting the residual between them (EMA).
     pub fn observe(&mut self, b: usize, actual: Micros) {
-        if self.ema <= 0.0 {
+        self.observe_eff(b as f64, actual);
+    }
+
+    /// [`Self::observe`] at a fractional effective batch size (the
+    /// cross-application counterpart, paired with [`Self::xi_eff`]).
+    pub fn observe_eff(&mut self, b_eff: f64, actual: Micros) {
+        if self.ema <= 0.0 || b_eff <= 0.0 {
             return;
         }
-        let est = self.alpha + self.beta * b as f64;
+        let est = self.alpha + self.beta * b_eff;
         let resid = actual as f64 - est;
         // Attribute residual half to overhead, half to marginal cost.
         self.alpha = (self.alpha + self.ema * resid * 0.5).max(0.0);
         self.beta =
-            (self.beta + self.ema * resid * 0.5 / b as f64).max(1.0);
+            (self.beta + self.ema * resid * 0.5 / b_eff).max(1.0);
     }
 
     /// Per-event service capacity at batch size `b` (events/sec).
@@ -156,6 +189,46 @@ mod tests {
         let est = m.xi(10) as f64;
         let target = 2.0 * (50.0 + 700.0) * MS as f64;
         assert!((est - target).abs() / target < 0.15, "est {est}");
+    }
+
+    #[test]
+    fn scaled_snapshot_is_linear_and_frozen() {
+        let m = XiModel::affine_ms(52.5, 67.5).with_ema(0.3);
+        let s = m.scaled(1.63);
+        for b in [1, 5, 25] {
+            assert_eq!(
+                s.xi(b),
+                ((m.xi(b) as f64) * 1.63).round() as Micros
+            );
+        }
+        // Factor 1.0 is bit-exact (×1.0 is an f64 identity).
+        let id = m.scaled(1.0);
+        assert_eq!(id.xi(17), m.xi(17));
+        // Snapshots never observe.
+        let mut s2 = m.scaled(2.0);
+        let before = s2.xi(10);
+        s2.observe(10, 10 * before);
+        assert_eq!(s2.xi(10), before);
+    }
+
+    #[test]
+    fn xi_eff_matches_xi_at_whole_sizes() {
+        let m = XiModel::affine_ms(52.5, 67.5);
+        for b in 1..=32usize {
+            // Σ of b copies of 1.0 is exactly b — the homogeneous
+            // cross-query batch path must price like the count path.
+            let mut relsum = 0.0;
+            for _ in 0..b {
+                relsum += 1.0;
+            }
+            assert_eq!(m.xi_eff(relsum), m.xi(b));
+        }
+        // Fractional sizes interpolate the affine model.
+        assert_eq!(
+            m.xi_eff(2.5),
+            (52.5 * MS as f64 + 2.5 * 67.5 * MS as f64).round()
+                as Micros
+        );
     }
 
     #[test]
