@@ -62,6 +62,7 @@ use anveshak::config::{
 use anveshak::coordinator::des::DesEngine;
 use anveshak::dataflow::{Event, ModelVariant, Partitioner, Stage};
 use anveshak::engine::EventCore;
+use anveshak::obs::{NullSink, ObsSink, RingSink};
 use anveshak::roadnet::{
     bfs_spotlight, bfs_spotlight_into, generate, probabilistic_spotlight,
     probabilistic_spotlight_into, wbfs_spotlight, wbfs_spotlight_into,
@@ -229,6 +230,39 @@ fn bench<F: FnMut()>(
 fn run_des(report: &mut Report, name: &str, cfg: ExperimentConfig) {
     let setup = Instant::now();
     let engine = DesEngine::new(cfg);
+    let setup_s = setup.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let r = engine.run();
+    let wall = start.elapsed().as_secs_f64();
+    println!(
+        "{name:<34} setup {setup_s:>5.2}s  run {wall:>6.2}s  \
+         {:>9} core events  {:>9.0} ev/s  ({} frames)",
+        r.core_events,
+        r.core_events as f64 / wall.max(1e-9),
+        r.summary.generated,
+    );
+    report.des.push((
+        name.to_string(),
+        setup_s,
+        wall,
+        r.core_events,
+        r.summary.generated,
+    ));
+}
+
+/// Run a single-query DES workload with an explicit trace sink: the
+/// observability-overhead A/B rows (NullSink must cost nothing over
+/// the plain build; the RingSink delta prices the always-on flight
+/// recorder).
+fn run_des_sink<S: ObsSink>(
+    report: &mut Report,
+    name: &str,
+    cfg: ExperimentConfig,
+    sink: S,
+) {
+    let setup = Instant::now();
+    let app = apps::resolve(&cfg);
+    let engine = DesEngine::with_app_sink(cfg, &app, sink);
     let setup_s = setup.elapsed().as_secs_f64();
     let start = Instant::now();
     let r = engine.run();
@@ -559,6 +593,17 @@ fn main() {
         let mut c = des_cfg(smoke);
         c.tl = TlKind::Base;
         run_des(rp, "des.1000cam.base.1q", c);
+    }
+    {
+        // Observability A/B on the same max-load workload: NullSink is
+        // the default build (the two wall clocks should be
+        // indistinguishable — the property tests prove the *results*
+        // identical, this row prices the residual branch); the ring
+        // row is the always-on flight recorder.
+        let mut c = des_cfg(smoke);
+        c.tl = TlKind::Base;
+        run_des_sink(rp, "des.1000cam.obs.null", c.clone(), NullSink);
+        run_des_sink(rp, "des.1000cam.obs.ring", c, RingSink::new(4093));
     }
     for queries in [1usize, 4, 8] {
         let c = mq_cfg(smoke, queries);

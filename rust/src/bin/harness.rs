@@ -12,6 +12,11 @@
 //!                               # at t=300s, frozen vs online xi on
 //!                               # both DES engines (Fig 9's missing
 //!                               # half)
+//!   harness trace [--smoke]     # flight recorder: run with the JSONL
+//!                               # trace sink, schema-validate the
+//!                               # trace, reconcile it with the ledger
+//!                               # and print drop explanations + the
+//!                               # hot-path profiling breakdown
 //!   harness --out DIR figN ...  # custom output directory
 //!
 //! Each figure writes CSV series under the output directory and prints
@@ -24,6 +29,7 @@ use std::path::{Path, PathBuf};
 use anveshak::config::preset;
 use anveshak::coordinator::des::{run, RunResult};
 use anveshak::dataflow::Stage;
+use anveshak::obs::{render_rows, ReportRow};
 use anveshak::util::json::{obj, Json};
 
 fn main() {
@@ -33,9 +39,17 @@ fn main() {
         args.remove(i);
         out_dir = PathBuf::from(args.remove(i));
     }
+    let smoke = if let Some(i) =
+        args.iter().position(|a| a == "--smoke")
+    {
+        args.remove(i);
+        true
+    } else {
+        false
+    };
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace [--smoke] ..."
         );
         std::process::exit(2);
     }
@@ -77,6 +91,9 @@ fn main() {
     }
     if want("compute") {
         compute_dynamism(&out_dir, &mut cache);
+    }
+    if want("trace") {
+        trace(&out_dir, smoke);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -391,12 +408,11 @@ fn multi_query(out: &Path) {
         r.peak_concurrent
     );
 
+    // One reporting function for every path: per-query rows from the
+    // per-query ledgers, the aggregate row straight from the metrics
+    // registry snapshot, all through obs::render_rows.
     let mut j = Vec::new();
-    println!(
-        "  {:<6} {:<5} {:<4} {:<10} {:>8} {:>8} {:>8} {:>7} {:>9} {:>9} {:>6} {:>7}",
-        "query", "app", "prio", "status", "gen", "on-time", "dropped",
-        "recall", "median-s", "p99-s", "cams", "fusion"
-    );
+    let mut rows = Vec::new();
     for q in &r.queries {
         let (gen, on_time, dropped, median, p99) = match &q.summary {
             Some(s) => (
@@ -408,21 +424,19 @@ fn multi_query(out: &Path) {
             ),
             None => (0, 0, 0, 0.0, 0.0),
         };
-        println!(
-            "  {:<6} {:<5} {:<4} {:<10} {:>8} {:>8} {:>8} {:>6.1}% {:>9.2} {:>9.2} {:>6} {:>7}",
-            q.label,
-            format!("{:?}", q.app),
+        let row = match &q.summary {
+            Some(s) => ReportRow::from_summary(&q.label, s),
+            None => ReportRow::new(&q.label),
+        };
+        rows.push(row.with_extra(format!(
+            "{:?} prio {} {:?} recall {:.1}% cams {} fusion {}",
+            q.app,
             q.priority,
-            format!("{:?}", q.status),
-            gen,
-            on_time,
-            dropped,
+            q.status,
             100.0 * q.recall(),
-            median,
-            p99,
             q.peak_active,
             q.fusion_updates
-        );
+        )));
         j.push(obj([
             ("label", q.label.as_str().into()),
             ("app", format!("{:?}", q.app).as_str().into()),
@@ -438,16 +452,16 @@ fn multi_query(out: &Path) {
             ("fusion_updates", (q.fusion_updates as i64).into()),
         ]));
     }
-    let agg = &r.aggregate;
-    println!(
-        "  peak concurrent queries: {} | aggregate: gen {} on-time {} delayed {} dropped {} | conserved: {}",
-        r.peak_concurrent,
-        agg.generated,
-        agg.on_time,
-        agg.delayed,
-        agg.dropped,
-        agg.conserved()
+    rows.push(
+        ReportRow::from_snapshot("aggregate", &r.metrics).with_extra(
+            format!(
+                "peak concurrent {} | conserved {}",
+                r.peak_concurrent,
+                r.aggregate.conserved()
+            ),
+        ),
     );
+    print!("{}", render_rows(&rows));
     let doc = obj([
         ("peak_concurrent", r.peak_concurrent.into()),
         ("rejected", (r.rejected as i64).into()),
@@ -497,6 +511,7 @@ fn compute_dynamism(
     use anveshak::coordinator::des::run_multi;
     println!("  -- multi-query engine, same slowdown --");
     let mut j = Vec::new();
+    let mut rows = Vec::new();
     for (label, name) in [
         ("mq frozen-xi", "fig9_compute_frozen"),
         ("mq online-xi", "fig9_compute_online"),
@@ -515,15 +530,12 @@ fn compute_dynamism(
             start.elapsed().as_secs_f64()
         );
         let s = &r.aggregate;
-        println!(
-            "  {label:<22} gen {:>7}  on-time {:>7}  delayed {:>6} ({:>5.1}%)  dropped {:>6} ({:>5.1}%)  conserved {}",
-            s.generated,
-            s.on_time,
-            s.delayed,
-            100.0 * s.delay_rate(),
-            s.dropped,
-            100.0 * s.drop_rate(),
-            s.conserved()
+        // Same shared reporting function as `harness mq` and the live
+        // service: row built from the run's metrics snapshot.
+        rows.push(
+            ReportRow::from_snapshot(label, &r.metrics).with_extra(
+                format!("conserved {}", s.conserved()),
+            ),
         );
         j.push(obj([
             ("label", label.into()),
@@ -533,11 +545,161 @@ fn compute_dynamism(
             ("dropped", (s.dropped as i64).into()),
         ]));
     }
+    print!("{}", render_rows(&rows));
     std::fs::write(
         out.join("compute_mq.json"),
         Json::Arr(j).to_string(),
     )
     .unwrap();
+}
+
+/// Flight recorder: run one DES preset with the JSONL trace sink,
+/// schema-validate the trace, reconcile its counts *exactly* against
+/// the run's ledger, and print the human-readable drop explanations
+/// plus the stage-attributed wall-clock profiling breakdown.
+/// `--smoke` swaps in a 60-camera/60-second config so CI can do all of
+/// the above in seconds.
+fn trace(out: &Path, smoke: bool) {
+    use anveshak::config::ExperimentConfig;
+    use anveshak::coordinator::des::run_with_sink;
+    use anveshak::obs::{validate_trace, JsonlSink};
+
+    println!("\n== Flight recorder: schema-versioned JSONL trace ==");
+    let cfg = if smoke {
+        let mut c = ExperimentConfig::default();
+        c.name = "trace_smoke".into();
+        c.num_cameras = 60;
+        c.workload.vertices = 60;
+        c.workload.edges = 160;
+        c.duration_secs = 60.0;
+        c.drops_enabled = true;
+        c
+    } else {
+        preset("fig11_drops")
+    };
+    let name = cfg.name.clone();
+    let path = out.join("trace.jsonl");
+    let sink = JsonlSink::create(&path).expect("create trace file");
+    eprintln!("[run] trace ({name}) ...");
+    let start = std::time::Instant::now();
+    let r = run_with_sink(cfg, sink.clone());
+    sink.flush();
+    eprintln!(
+        "[run] trace ({name}) done in {:.1}s ({} trace lines)",
+        start.elapsed().as_secs_f64(),
+        sink.lines()
+    );
+
+    let text =
+        std::fs::read_to_string(&path).expect("read trace back");
+    let check = match validate_trace(&text) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("trace FAILED schema validation: {e}");
+            std::process::exit(1);
+        }
+    };
+    // Exact reconciliation against the run's ledger: the trace is the
+    // flight recorder, so every counter it implies must equal what the
+    // authoritative accounting saw.
+    let s = &r.summary;
+    let mut ok = true;
+    {
+        let mut expect = |what: &str, got: u64, want: u64| {
+            if got != want {
+                eprintln!(
+                    "  MISMATCH {what}: trace {got} != ledger {want}"
+                );
+                ok = false;
+            }
+        };
+        expect("generated", check.generated, s.generated);
+        expect("completed", check.completed, s.on_time + s.delayed);
+        expect("on_time", check.on_time, s.on_time);
+        expect("dropped", check.dropped_total(), s.dropped);
+        expect("in_flight", check.unterminated(), s.in_flight);
+        expect("detections", check.detections, r.detections);
+    }
+    let viol = check.violations();
+    if !viol.is_empty() {
+        eprintln!(
+            "  MISMATCH conservation: {} violation(s), first {:?}",
+            viol.len(),
+            viol[0]
+        );
+        ok = false;
+    }
+    if !ok {
+        eprintln!("trace FAILED ledger reconciliation");
+        std::process::exit(1);
+    }
+    println!(
+        "  trace OK: {} lines reconcile with the ledger (gen {}, completed {}, dropped {}, in-flight {})",
+        check.lines,
+        check.generated,
+        check.completed,
+        check.dropped_total(),
+        check.unterminated()
+    );
+
+    // Drop explanations (§4.3): where the gates fired, then the first
+    // few verdicts spelled out the way a human would ask about them
+    // (slack = xi_us - eps_us is what the gate compared against ξ(b)).
+    println!(
+        "  drops by gate: drain {} | gate1-queue {} | gate2-exec {} | gate3-transmit {} | exemptions {}",
+        check.drops_gate[0],
+        check.drops_gate[1],
+        check.drops_gate[2],
+        check.drops_gate[3],
+        check.exempted
+    );
+    let mut shown = 0usize;
+    for line in text.lines().skip(1) {
+        if shown >= 5 {
+            break;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        if j.at("ev").as_str() != Some("drop") {
+            continue;
+        }
+        let gate = j.at("gate").as_usize().unwrap_or(0);
+        if gate == 0 {
+            continue; // drain drops carry no budget arithmetic
+        }
+        let ev = j.at("event").as_usize().unwrap_or(0);
+        let b = j.at("batch").as_usize().unwrap_or(1);
+        let eps = j.at("eps_us").as_f64().unwrap_or(0.0);
+        let xi = j.at("xi_us").as_f64().unwrap_or(0.0);
+        let stage = j.at("stage").as_str().unwrap_or("?");
+        println!(
+            "    event {ev} dropped at gate {gate} ({stage}): slack {:.1}ms < xi(b={b})={:.1}ms, not exempt",
+            (xi - eps) / 1e3,
+            xi / 1e3
+        );
+        shown += 1;
+    }
+    if check.dropped_total() == 0 {
+        println!("    (no drops this run)");
+    }
+
+    // Delivery table from the metrics registry — the same rows the
+    // multi-query and live paths report through.
+    println!("  delivery (metrics registry):");
+    print!(
+        "{}",
+        render_rows(&[ReportRow::from_snapshot(name, &r.metrics)
+            .with_extra(format!(
+                "xi-observations {}",
+                r.metrics.xi_observations
+            ))])
+    );
+
+    // Stage-attributed wall-clock breakdown from the profiling spans.
+    let spans = sink.spans().render();
+    if !spans.is_empty() {
+        println!("  hot-path wall-clock breakdown:");
+        print!("{spans}");
+    }
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

@@ -144,6 +144,16 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ),
             ]),
         ),
+        (
+            "obs",
+            obj([
+                ("ring_capacity", c.obs.ring_capacity.into()),
+                (
+                    "per_second_metrics",
+                    c.obs.per_second_metrics.into(),
+                ),
+            ]),
+        ),
     ])
 }
 
@@ -302,6 +312,14 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         if let Some(p) = v.get("priority_levels").and_then(Json::as_usize)
         {
             c.multi_query.priority_levels = p.min(255) as u8;
+        }
+    }
+    if let Some(v) = j.get("obs") {
+        set_usize(v, "ring_capacity", &mut c.obs.ring_capacity);
+        if let Some(b) =
+            v.get("per_second_metrics").and_then(Json::as_bool)
+        {
+            c.obs.per_second_metrics = b;
         }
     }
     Ok(c)
@@ -489,6 +507,21 @@ mod tests {
         ] {
             assert!(config_from_json(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn obs_round_trips() {
+        let mut c = ExperimentConfig::default();
+        c.obs.ring_capacity = 251;
+        c.obs.per_second_metrics = false;
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert_eq!(c2.obs.ring_capacity, 251);
+        assert!(!c2.obs.per_second_metrics);
+        // Omitting the section keeps the defaults.
+        let c3 = config_from_json("{}").unwrap();
+        assert_eq!(c3.obs.ring_capacity, 4093);
+        assert!(c3.obs.per_second_metrics);
     }
 
     #[test]

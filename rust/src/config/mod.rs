@@ -299,6 +299,25 @@ impl Default for MultiQueryConfig {
     }
 }
 
+/// Observability knobs (see [`crate::obs`]). These configure the
+/// *recording* sinks only — the default `NullSink` path ignores them
+/// entirely, which is what keeps the determinism contract trivial.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Flight-recorder capacity for [`crate::obs::RingSink`]. Must be
+    /// prime (the `BudgetManager` ring lesson).
+    pub ring_capacity: usize,
+    /// Dump cumulative [`crate::obs::MetricsRegistry`] rows once per
+    /// simulated second in the DES engines (alongside `Timeline`).
+    pub per_second_metrics: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { ring_capacity: 4093, per_second_metrics: true }
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -334,6 +353,8 @@ pub struct ExperimentConfig {
     /// Multi-query service parameters (used by the `service` layer and
     /// the engines' multi-query modes; ignored by single-query runs).
     pub multi_query: MultiQueryConfig,
+    /// Observability knobs (recording sinks only).
+    pub obs: ObsConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -359,6 +380,7 @@ impl Default for ExperimentConfig {
             semantics: SemanticsConfig::default(),
             workload: WorkloadConfig::default(),
             multi_query: MultiQueryConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }

@@ -29,6 +29,10 @@ use crate::dataflow::{
 };
 use crate::engine::EventCore;
 use crate::metrics::{Ledger, Summary, Timeline};
+use crate::obs::{
+    span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
+    NullSink, ObsSink, QueryPhase, Scope, TraceEvent,
+};
 use crate::roadnet::{generate, place_cameras, Graph};
 use crate::sim::{
     ClockSkews, ComputeModel, EntityWalk, GroundTruth, NetModel,
@@ -118,10 +122,20 @@ pub struct RunResult {
     /// [`EventCore`] — the numerator of the events/sec throughput
     /// metric reported by `benches/hotpath.rs`.
     pub core_events: u64,
+    /// End-of-run metrics registry snapshot (sink-independent: the
+    /// registry records identically under every [`ObsSink`]).
+    pub metrics: MetricsSnapshot,
+    /// Engine RNG draws consumed — the observability determinism
+    /// contract asserts this is identical across sinks per seed.
+    pub rng_draws: u64,
 }
 
-/// The discrete-event simulation engine.
-pub struct DesEngine {
+/// The discrete-event simulation engine, generic over the trace sink.
+/// The [`NullSink`] default monomorphizes every observability hook to
+/// nothing — trace-event construction is guarded by
+/// `obs.enabled()` (a constant `false` that inlines away), so the
+/// default engine is bit-identical to the pre-observability one.
+pub struct DesEngine<S: ObsSink = NullSink> {
     cfg: ExperimentConfig,
     topo: Topology,
     graph: Graph,
@@ -163,6 +177,14 @@ pub struct DesEngine {
     router: FeedbackRouter,
     rng: Rng,
     now: Micros,
+    /// Trace sink (default [`NullSink`]: compiles to nothing).
+    obs: S,
+    /// Always-on metrics registry — atomic counters are
+    /// sink-independent, so recording them never perturbs determinism.
+    metrics: MetricsRegistry,
+    /// Last spotlight size emitted as a [`TraceEvent::Spotlight`]
+    /// resize (recording sinks only).
+    last_spotlight: usize,
     /// Reusable buffers for the per-batch hot path (drop filtering,
     /// staged post-exec events + their (u, π) meta, outgoing
     /// transmissions) and the TL tick (active set + wanted cameras):
@@ -202,6 +224,18 @@ impl DesEngine {
     /// public composition path; `cfg` keeps platform authority
     /// (batching, drops, budgets), the app supplies every block.
     pub fn with_app(cfg: ExperimentConfig, app: &AppDefinition) -> Self {
+        Self::with_app_sink(cfg, app, NullSink)
+    }
+}
+
+impl<S: ObsSink> DesEngine<S> {
+    /// Build the engine with an explicit trace sink (flight recorder,
+    /// JSONL export); [`DesEngine::with_app`] is this with [`NullSink`].
+    pub fn with_app_sink(
+        cfg: ExperimentConfig,
+        app: &AppDefinition,
+        sink: S,
+    ) -> Self {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
             &graph,
@@ -361,6 +395,9 @@ impl DesEngine {
             router: FeedbackRouter::new(),
             rng: rng(seed, 0xDE5),
             now: 0,
+            obs: sink,
+            metrics: MetricsRegistry::new(),
+            last_spotlight: usize::MAX,
             kept_scratch: Vec::new(),
             staged_scratch: Vec::new(),
             meta_scratch: Vec::new(),
@@ -411,11 +448,52 @@ impl DesEngine {
             self.push(phase, Ev::FrameTick { cam });
         }
         self.push(SEC, Ev::TlTick);
+        self.metrics.set_active_queries(1);
+
+        if self.obs.enabled() {
+            // The configured dynamism schedule, stamped at its
+            // scheduled virtual times (emitted up front: the steps are
+            // known before the run starts).
+            self.obs.emit(
+                0,
+                &TraceEvent::QueryLifecycle {
+                    query: SINGLE_QUERY,
+                    phase: QueryPhase::Activated,
+                },
+            );
+            for e in &self.cfg.service.compute_events {
+                self.obs.emit(
+                    crate::util::secs(e.at_sec),
+                    &TraceEvent::ComputeFactor {
+                        node: e.node.map_or(-1, |n| n as i64),
+                        factor: e.factor,
+                    },
+                );
+            }
+            for e in &self.cfg.network.events {
+                self.obs.emit(
+                    crate::util::secs(e.at_sec),
+                    &TraceEvent::Bandwidth { bps: e.bandwidth_bps },
+                );
+            }
+        }
 
         let horizon = self.cfg.duration() + 2 * self.cfg.gamma();
         while let Some((t, ev)) = self.core.pop_until(horizon) {
             self.now = t;
+            let sp = span_begin(&self.obs);
             self.dispatch(ev);
+            span_end(&self.obs, Scope::Dispatch, sp);
+        }
+
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::QueryLifecycle {
+                    query: SINGLE_QUERY,
+                    phase: QueryPhase::Completed,
+                },
+            );
         }
 
         RunResult {
@@ -425,6 +503,8 @@ impl DesEngine {
             peak_active: self.peak_active,
             fusion_updates: self.fusion_updates,
             core_events: self.core.dispatched(),
+            metrics: self.metrics.snapshot(),
+            rng_draws: self.rng.draws(),
         }
     }
 
@@ -498,6 +578,17 @@ impl DesEngine {
         let present = self.gt.visible(cam, t);
         let mut ev = Event::frame(id, cam, frame_no, t, present);
         self.ledger.generated(id, present);
+        self.metrics.generated();
+        if self.obs.enabled() {
+            self.obs.emit(
+                t,
+                &TraceEvent::Generated {
+                    event: id,
+                    query: SINGLE_QUERY,
+                    camera: cam as u32,
+                },
+            );
+        }
 
         // FC drop point 1 (u = 0 at the source task): rejects new frames
         // the moment downstream budgets collapse — the paper's "τ1
@@ -506,10 +597,10 @@ impl DesEngine {
         let slot = self.topo.downstream_slot(fc_task, cam);
         if self.cfg.drops_enabled {
             let budget = self.fc_budget[cam].budget_max();
-            if budget < BUDGET_INF
-                && drop_at_queue(false, 0, self.fc_xi.xi(1), budget)
+            let xi1 = self.fc_xi.xi(1);
+            if budget < BUDGET_INF && drop_at_queue(false, 0, xi1, budget)
             {
-                self.record_drop(cam, id, Stage::Fc, 0, self.fc_xi.xi(1));
+                self.record_drop(id, xi1 - budget, xi1);
                 return;
             }
         }
@@ -583,8 +674,34 @@ impl DesEngine {
                         && drop_at_queue(exempt, u, xi1, budget)
                     {
                         let eps = (u + xi1) - budget;
-                        self.drop_event(task, ev, eps);
+                        self.drop_event(
+                            task,
+                            ev,
+                            Gate::Queue,
+                            eps,
+                            xi1,
+                            1,
+                        );
                         return;
+                    }
+                    // The §4.3.3 exemption observed in the wild: an
+                    // avoid-drop/probe event survived a verdict that
+                    // would have dropped it.
+                    if self.obs.enabled()
+                        && exempt
+                        && budget < BUDGET_INF
+                        && drop_at_queue(false, u, xi1, budget)
+                    {
+                        let stage = self.tasks[task].stage;
+                        self.obs.emit(
+                            self.now,
+                            &TraceEvent::Exempted {
+                                gate: Gate::Queue,
+                                stage,
+                                event: ev.header.id,
+                                query: SINGLE_QUERY,
+                            },
+                        );
                     }
                 }
                 let deadline = if budget >= BUDGET_INF {
@@ -610,10 +727,12 @@ impl DesEngine {
     fn try_form_batch(&mut self, task: usize) {
         loop {
             let t_obs = self.observe(task);
+            let sp = span_begin(&self.obs);
             let poll = {
                 let ts = &mut self.tasks[task];
                 ts.batcher.poll(t_obs, &ts.xi)
             };
+            span_end(&self.obs, Scope::BatchPoll, sp);
             match poll {
                 BatcherPoll::Idle => return,
                 BatcherPoll::Timer(at_obs) => {
@@ -656,8 +775,33 @@ impl DesEngine {
                                 && drop_at_exec(exempt, u, q, xib, budget)
                             {
                                 let eps = (u + q + xib) - budget;
-                                self.drop_event(task, qe.item, eps);
+                                self.drop_event(
+                                    task,
+                                    qe.item,
+                                    Gate::Exec,
+                                    eps,
+                                    xib,
+                                    b as u32,
+                                );
                             } else {
+                                if self.obs.enabled()
+                                    && exempt
+                                    && budget < BUDGET_INF
+                                    && drop_at_exec(
+                                        false, u, q, xib, budget,
+                                    )
+                                {
+                                    let stage = self.tasks[task].stage;
+                                    self.obs.emit(
+                                        self.now,
+                                        &TraceEvent::Exempted {
+                                            gate: Gate::Exec,
+                                            stage,
+                                            event: qe.item.header.id,
+                                            query: SINGLE_QUERY,
+                                        },
+                                    );
+                                }
                                 kept.push(qe);
                             }
                         }
@@ -678,6 +822,17 @@ impl DesEngine {
                             ts.node,
                         )
                     };
+                    if self.obs.enabled() {
+                        let stage = self.tasks[task].stage;
+                        self.obs.emit(
+                            self.now,
+                            &TraceEvent::BatchFormed {
+                                stage,
+                                task: task as u32,
+                                size: b as u32,
+                            },
+                        );
+                    }
                     let factor =
                         1.0 + self.rng.range_f64(-jitter, jitter);
                     // Compute dynamism: the *actual* duration is drawn
@@ -733,6 +888,30 @@ impl DesEngine {
             let ts = &mut self.tasks[task];
             ts.xi.observe(b, actual);
             ts.batcher.retune_nob(&ts.xi);
+            self.metrics.xi_observed();
+            self.metrics.nob_retune();
+            if self.obs.enabled() {
+                let (alpha_us, beta_us) =
+                    (ts.xi.alpha_us(), ts.xi.beta_us());
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::XiObserved {
+                        stage,
+                        task: task as u32,
+                        b_eff: b as f64,
+                        actual_us: actual,
+                        alpha_us,
+                        beta_us,
+                    },
+                );
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::NobRetune {
+                        stage,
+                        task: task as u32,
+                    },
+                );
+            }
         }
 
         // Timeline: mean queue+exec latency for this batch.
@@ -747,6 +926,19 @@ impl DesEngine {
             b,
             mean_q + actual,
         );
+        self.metrics.batch_executed(stage, b, mean_q);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::BatchExecuted {
+                    stage,
+                    task: task as u32,
+                    size: b as u32,
+                    est_us: xi_est,
+                    actual_us: actual,
+                },
+            );
+        }
 
         // First pass: per-event bookkeeping (budget 3-tuples, header
         // accumulators) into engine-owned scratch; the emptied batch
@@ -783,6 +975,7 @@ impl DesEngine {
         // Module user-logic: one virtual call for the whole batch (the
         // block steps events in arrival order, so the engine RNG stream
         // is identical to per-event dispatch).
+        let sp = span_begin(&self.obs);
         {
             let truth = SingleTruth(&self.gt);
             let mut ctx = SimCtx {
@@ -798,6 +991,7 @@ impl DesEngine {
                 _ => {}
             }
         }
+        span_end(&self.obs, Scope::Scoring, sp);
 
         // Drop point 3 (per-downstream budget); survivors move to the
         // outgoing scratch.
@@ -812,8 +1006,30 @@ impl DesEngine {
                     && drop_at_transmit(exempt, u, pi, budget)
                 {
                     let eps = (u + pi) - budget;
-                    self.drop_event(task, ev, eps);
+                    self.drop_event(
+                        task,
+                        ev,
+                        Gate::Transmit,
+                        eps,
+                        pi,
+                        b as u32,
+                    );
                     continue;
+                }
+                if self.obs.enabled()
+                    && exempt
+                    && budget < BUDGET_INF
+                    && drop_at_transmit(false, u, pi, budget)
+                {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::Exempted {
+                            gate: Gate::Transmit,
+                            stage,
+                            event: ev.header.id,
+                            query: SINGLE_QUERY,
+                        },
+                    );
                 }
             }
             outgoing.push(ev);
@@ -881,25 +1097,61 @@ impl DesEngine {
 
     // ---- drops + signals ---------------------------------------------------
 
-    fn record_drop(
-        &mut self,
-        _cam: usize,
-        id: u64,
-        stage: Stage,
-        _u: Micros,
-        _xi1: Micros,
-    ) {
-        self.ledger.dropped(id, stage);
+    /// Ledger + trace a source-side drop (FC, gate 1: `u = 0`, so
+    /// `eps = ξ_fc(1) − budget`).
+    fn record_drop(&mut self, id: u64, eps: Micros, xi1: Micros) {
+        self.ledger.dropped(id, Stage::Fc);
         self.timeline.dropped(self.now);
+        self.metrics.dropped(Gate::Queue);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Drop {
+                    gate: Gate::Queue,
+                    stage: Stage::Fc,
+                    event: id,
+                    query: SINGLE_QUERY,
+                    batch: 1,
+                    eps_us: eps,
+                    xi_us: xi1,
+                },
+            );
+        }
     }
 
     /// Drop an event at `task`, ledger it, send reject signals upstream
     /// and forward every k-th drop as a probe (§4.5.2). Takes the event
     /// by value: probes reuse the dropped event instead of cloning it.
-    fn drop_event(&mut self, task: usize, ev: Event, eps: Micros) {
+    /// `gate`/`xi_us`/`batch` describe the verdict for the trace: the
+    /// gate charged `xi_us` against the budget at batch size `batch`
+    /// and came up `eps` short.
+    fn drop_event(
+        &mut self,
+        task: usize,
+        ev: Event,
+        gate: Gate,
+        eps: Micros,
+        xi_us: Micros,
+        batch: u32,
+    ) {
         let stage = self.tasks[task].stage;
         self.ledger.dropped(ev.header.id, stage);
         self.timeline.dropped(self.now);
+        self.metrics.dropped(gate);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Drop {
+                    gate,
+                    stage,
+                    event: ev.header.id,
+                    query: SINGLE_QUERY,
+                    batch,
+                    eps_us: eps,
+                    xi_us,
+                },
+            );
+        }
         self.tasks[task].drop_count += 1;
 
         let cam = ev.header.camera;
@@ -985,6 +1237,7 @@ impl DesEngine {
         );
         if detected && ev.payload.entity_present() == Some(true) {
             self.detections += 1;
+            self.metrics.detection();
         }
         if detected && self.qf.on_detection(&ev) {
             // QF user-logic refined the query embedding: close the
@@ -996,6 +1249,19 @@ impl DesEngine {
         self.ledger
             .completed(ev.header.id, latency, gamma, detected);
         self.timeline.completed(self.now, latency);
+        self.metrics.completed(latency <= gamma);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Completed {
+                    event: ev.header.id,
+                    query: SINGLE_QUERY,
+                    latency_us: latency,
+                    on_time: latency <= gamma,
+                    detected,
+                },
+            );
+        }
 
         // Accept logic (§4.5.2): track the slowest event per CR batch;
         // when the batch completes, grow budgets if even the slowest
@@ -1036,6 +1302,16 @@ impl DesEngine {
         let refinement = self
             .router
             .refine(SINGLE_QUERY, Arc::new(emb.to_vec()));
+        self.metrics.refinement();
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::RefinementApplied {
+                    query: SINGLE_QUERY,
+                    seq: refinement.seq,
+                },
+            );
+        }
         let lat = self
             .net
             .transfer_estimate(self.net.meta_bytes, self.now);
@@ -1083,6 +1359,9 @@ impl DesEngine {
             self.push(self.now + SEC, Ev::TlTick);
         }
         self.apply_active_set();
+        if self.cfg.obs.per_second_metrics {
+            self.metrics.mark_second(self.now / SEC);
+        }
     }
 
     fn apply_active_set(&mut self) {
@@ -1090,9 +1369,22 @@ impl DesEngine {
         // the active/wanted buffers are engine scratch — the per-tick
         // allocations this used to make are gone.
         let mut active = std::mem::take(&mut self.active_scratch);
+        let sp = span_begin(&self.obs);
         self.tl.active_set_into(&self.graph, self.now, &mut active);
+        span_end(&self.obs, Scope::SpotlightExpand, sp);
         self.peak_active = self.peak_active.max(active.len());
         self.timeline.sample_active(self.now, active.len());
+        self.metrics.set_active_cameras(active.len());
+        if self.obs.enabled() && active.len() != self.last_spotlight {
+            self.last_spotlight = active.len();
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Spotlight {
+                    query: SINGLE_QUERY,
+                    active: active.len() as u32,
+                },
+            );
+        }
         let mut want = std::mem::take(&mut self.want_scratch);
         want.clear();
         want.resize(self.cfg.num_cameras, false);
@@ -1129,6 +1421,18 @@ pub fn run(cfg: ExperimentConfig) -> RunResult {
 /// point: `cfg` keeps the platform knobs, `app` supplies the blocks.
 pub fn run_app(cfg: ExperimentConfig, app: &AppDefinition) -> RunResult {
     DesEngine::with_app(cfg, app).run()
+}
+
+/// Run the stock application with an explicit trace sink (flight
+/// recorder / JSONL export). Pass a clone of the sink and keep the
+/// original: `run` consumes the engine, so readback goes through your
+/// retained handle.
+pub fn run_with_sink<S: ObsSink>(
+    cfg: ExperimentConfig,
+    sink: S,
+) -> RunResult {
+    let app = crate::apps::resolve(&cfg);
+    DesEngine::with_app_sink(cfg, &app, sink).run()
 }
 
 /// Multi-query experiment mode: N tracking queries arriving as a
@@ -1228,6 +1532,39 @@ mod tests {
         assert_eq!(a.summary.on_time, b.summary.on_time);
         assert_eq!(a.summary.dropped, b.summary.dropped);
         assert_eq!(a.detections, b.detections);
+    }
+
+    #[test]
+    fn metrics_registry_agrees_with_ledger() {
+        let mut c = small_cfg();
+        c.cluster.cr_instances = 2;
+        c.tl = TlKind::Base;
+        c.batching = BatchingKind::Dynamic { max: 25 };
+        c.drops_enabled = true;
+        let r = run(c);
+        let m = &r.metrics;
+        assert_eq!(m.generated, r.summary.generated);
+        assert_eq!(m.on_time, r.summary.on_time);
+        assert_eq!(m.delayed, r.summary.delayed);
+        assert_eq!(m.dropped_total(), r.summary.dropped);
+        assert_eq!(m.detections, r.detections);
+        assert!(m.batches[0] > 0, "no VA batches recorded");
+        assert!(m.batch_hist[0].total() == m.batches[0]);
+        assert!(r.rng_draws > 0);
+        // Per-second rows were dumped (once per TL tick) and are
+        // cumulative; the knob turns them off.
+        assert!(r.metrics.seconds.len() >= 59, "{}", r.metrics.seconds.len());
+        assert!(r
+            .metrics
+            .seconds
+            .windows(2)
+            .all(|w| w[1].generated >= w[0].generated));
+        let r2 = {
+            let mut c = small_cfg();
+            c.obs.per_second_metrics = false;
+            run(c)
+        };
+        assert!(r2.metrics.seconds.is_empty());
     }
 
     #[test]

@@ -30,6 +30,10 @@ use crate::dataflow::{
     TlEnv, TrackingLogic, SINGLE_QUERY,
 };
 use crate::metrics::{Ledger, Summary};
+use crate::obs::{
+    span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
+    NullSink, ObsSink, Scope, TraceEvent,
+};
 use crate::roadnet::{generate, place_cameras};
 use crate::runtime::{ModelOutput, ModelPool};
 use crate::sim::{
@@ -246,6 +250,8 @@ pub struct LiveReport {
     /// routed back to the VA/CR workers (0 unless the composition
     /// fuses).
     pub fusion_updates: u64,
+    /// Final metrics-registry snapshot (always-on counters/gauges).
+    pub metrics: MetricsSnapshot,
 }
 
 /// Identity used for the tracked entity's frames.
@@ -263,6 +269,8 @@ fn now_us(start: Instant) -> Micros {
 /// runtime (the feedback edge).
 struct Worker {
     stage: Stage,
+    /// Executor index within the stage (trace attribution).
+    task: u32,
     block: AnalyticsBlock,
     batcher: Batcher<Event>,
     budget: BudgetManager,
@@ -288,6 +296,11 @@ struct Shared {
     gamma: Micros,
     drops_enabled: bool,
     start: Instant,
+    /// Shared trace sink (every thread holds `Shared`, so one dyn
+    /// handle serves the feed loop, the workers, TL and the UV sink).
+    obs: Arc<dyn ObsSink>,
+    /// Always-on counters/gauges/histograms.
+    metrics: MetricsRegistry,
 }
 
 /// The live serving engine. Runs one [`AppDefinition`]: the app's
@@ -297,6 +310,7 @@ pub struct LiveEngine {
     cfg: ExperimentConfig,
     artifacts_dir: std::path::PathBuf,
     app: AppDefinition,
+    obs: Arc<dyn ObsSink>,
 }
 
 impl LiveEngine {
@@ -309,7 +323,14 @@ impl LiveEngine {
             cfg,
             artifacts_dir,
             app,
+            obs: Arc::new(NullSink),
         }
+    }
+
+    /// Attach a trace sink (the default [`NullSink`] records nothing).
+    pub fn with_sink(mut self, sink: Arc<dyn ObsSink>) -> Self {
+        self.obs = sink;
+        self
     }
 
     /// Run the tracking application for `cfg.duration_secs` of wall
@@ -377,6 +398,8 @@ impl LiveEngine {
             gamma: cfg.gamma(),
             drops_enabled: cfg.drops_enabled,
             start: Instant::now(),
+            obs: Arc::clone(&self.obs),
+            metrics: MetricsRegistry::new(),
         });
 
         // ---- channel topology -------------------------------------------
@@ -399,6 +422,7 @@ impl LiveEngine {
                 &cr_xi,
             );
             w.score_threshold = 0.6;
+            w.task = i as u32;
             w.query_emb = Arc::clone(service.query_arc());
             let sh = Arc::clone(&shared);
             let uv = uv_tx.clone();
@@ -431,6 +455,7 @@ impl LiveEngine {
                 &va_xi,
             );
             w.score_threshold = 0.0; // VA forwards everything (1:1)
+            w.task = i as u32;
             w.query_emb = Arc::clone(service.query_arc());
             let sh = Arc::clone(&shared);
             let crs = cr_tx.clone();
@@ -473,8 +498,25 @@ impl LiveEngine {
                     if last_eval.elapsed() >= Duration::from_millis(500) {
                         last_eval = Instant::now();
                         let t = now_us(sh.start);
+                        let prior = active.len();
+                        let sp = span_begin(&*sh.obs);
                         tl_logic.active_set_into(&graph, t, &mut active);
+                        span_end(
+                            &*sh.obs,
+                            Scope::SpotlightExpand,
+                            sp,
+                        );
                         peak = peak.max(active.len());
+                        sh.metrics.set_active_cameras(active.len());
+                        if sh.obs.enabled() && active.len() != prior {
+                            sh.obs.emit(
+                                t,
+                                &TraceEvent::Spotlight {
+                                    query: SINGLE_QUERY,
+                                    active: active.len() as u32,
+                                },
+                            );
+                        }
                         let mut want =
                             vec![false; sh.fc_active.len()];
                         for &c in &active {
@@ -532,6 +574,7 @@ impl LiveEngine {
                             if detected {
                                 sh.detections
                                     .fetch_add(1, Ordering::Relaxed);
+                                sh.metrics.detection();
                             }
                             sh.ledger.lock().unwrap().completed(
                                 ev.header.id,
@@ -539,6 +582,20 @@ impl LiveEngine {
                                 sh.gamma,
                                 detected,
                             );
+                            sh.metrics
+                                .completed(latency <= sh.gamma);
+                            if sh.obs.enabled() {
+                                sh.obs.emit(
+                                    t,
+                                    &TraceEvent::Completed {
+                                        event: ev.header.id,
+                                        query: SINGLE_QUERY,
+                                        latency_us: latency,
+                                        on_time: latency <= sh.gamma,
+                                        detected,
+                                    },
+                                );
+                            }
                             if detected && qf.on_detection(&ev) {
                                 sh.fusion_updates
                                     .fetch_add(1, Ordering::Relaxed);
@@ -550,6 +607,16 @@ impl LiveEngine {
                                         SINGLE_QUERY,
                                         Arc::new(fused),
                                     );
+                                    sh.metrics.refinement();
+                                    if sh.obs.enabled() {
+                                        sh.obs.emit(
+                                            t,
+                                            &TraceEvent::RefinementApplied {
+                                                query: SINGLE_QUERY,
+                                                seq: r.seq,
+                                            },
+                                        );
+                                    }
                                     let upd = r.into_event(
                                         ev.header.id,
                                         ev.header.camera,
@@ -633,6 +700,17 @@ impl LiveEngine {
                     .lock()
                     .unwrap()
                     .generated(next_id, present);
+                shared.metrics.generated();
+                if shared.obs.enabled() {
+                    shared.obs.emit(
+                        t,
+                        &TraceEvent::Generated {
+                            event: next_id,
+                            query: SINGLE_QUERY,
+                            camera: cam as u32,
+                        },
+                    );
+                }
                 let ev = Event {
                     header,
                     payload: Payload::FrameData(Arc::new(img)),
@@ -680,6 +758,7 @@ impl LiveEngine {
             fusion_updates: shared
                 .fusion_updates
                 .load(Ordering::Relaxed),
+            metrics: shared.metrics.snapshot(),
             summary,
         })
     }
@@ -706,6 +785,7 @@ impl LiveEngine {
         };
         Worker {
             stage,
+            task: 0,
             block,
             batcher,
             budget: BudgetManager::new(1, m_max, 2039), // prime ring
@@ -735,10 +815,12 @@ fn worker_loop(
     'outer: loop {
         // Drive the batcher.
         let now = now_us(sh.start);
+        let sp = span_begin(&*sh.obs);
         let poll = {
             let xi = w.xi.clone();
             w.batcher.poll(now, &xi)
         };
+        span_end(&*sh.obs, Scope::BatchPoll, sp);
         match poll {
             BatcherPoll::Ready(batch) => {
                 exec_batch(
@@ -833,14 +915,45 @@ fn handle_msg(w: &mut Worker, msg: Msg, sh: &Arc<Shared>) -> bool {
             let exempt = ev.header.avoid_drop || ev.header.probe;
             if sh.drops_enabled {
                 let budget = w.budget.budget_max();
+                let xi1 = w.xi.xi(1);
                 if budget < BUDGET_INF
-                    && drop_at_queue(exempt, u, w.xi.xi(1), budget)
+                    && drop_at_queue(exempt, u, xi1, budget)
                 {
                     sh.ledger
                         .lock()
                         .unwrap()
                         .dropped(ev.header.id, w.stage);
+                    sh.metrics.dropped(Gate::Queue);
+                    if sh.obs.enabled() {
+                        sh.obs.emit(
+                            now,
+                            &TraceEvent::Drop {
+                                gate: Gate::Queue,
+                                stage: w.stage,
+                                event: ev.header.id,
+                                query: ev.header.query,
+                                batch: 1,
+                                eps_us: (u + xi1) - budget,
+                                xi_us: xi1,
+                            },
+                        );
+                    }
                     return true;
+                }
+                if sh.obs.enabled()
+                    && exempt
+                    && budget < BUDGET_INF
+                    && drop_at_queue(false, u, xi1, budget)
+                {
+                    sh.obs.emit(
+                        now,
+                        &TraceEvent::Exempted {
+                            gate: Gate::Queue,
+                            stage: w.stage,
+                            event: ev.header.id,
+                            query: ev.header.query,
+                        },
+                    );
                 }
             }
             let deadline = {
@@ -877,6 +990,7 @@ fn exec_batch(
     if sh.drops_enabled {
         let budget = w.budget.budget_max();
         if budget < BUDGET_INF {
+            let b0 = batch.len() as u32;
             let xib = w.xi.xi(batch.len());
             let mut kept = Vec::with_capacity(batch.len());
             for qe in batch {
@@ -889,7 +1003,36 @@ fn exec_batch(
                         .lock()
                         .unwrap()
                         .dropped(qe.item.header.id, w.stage);
+                    sh.metrics.dropped(Gate::Exec);
+                    if sh.obs.enabled() {
+                        sh.obs.emit(
+                            start,
+                            &TraceEvent::Drop {
+                                gate: Gate::Exec,
+                                stage: w.stage,
+                                event: qe.item.header.id,
+                                query: qe.item.header.query,
+                                batch: b0,
+                                eps_us: (u + q + xib) - budget,
+                                xi_us: xib,
+                            },
+                        );
+                    }
                 } else {
+                    if sh.obs.enabled()
+                        && exempt
+                        && drop_at_exec(false, u, q, xib, budget)
+                    {
+                        sh.obs.emit(
+                            start,
+                            &TraceEvent::Exempted {
+                                gate: Gate::Exec,
+                                stage: w.stage,
+                                event: qe.item.header.id,
+                                query: qe.item.header.query,
+                            },
+                        );
+                    }
                     kept.push(qe);
                 }
             }
@@ -900,6 +1043,18 @@ fn exec_batch(
         return;
     }
     let b = batch.len();
+    let queue_sum: Micros =
+        batch.iter().map(|qe| (start - qe.arrival).max(0)).sum();
+    if sh.obs.enabled() {
+        sh.obs.emit(
+            start,
+            &TraceEvent::BatchFormed {
+                stage: w.stage,
+                task: w.task,
+                size: b as u32,
+            },
+        );
+    }
 
     // Gather pixels into the worker's reusable buffer and run the real
     // model; the buffer round-trips through the service thread.
@@ -926,7 +1081,44 @@ fn exec_batch(
     // ξ drifted (e.g. the node slowed down)? The NOB table's rate →
     // batch lookup follows the refreshed model, like the DES engines.
     w.batcher.retune_nob(&w.xi);
+    sh.metrics.xi_observed();
+    sh.metrics.nob_retune();
     let xi_est = w.xi.xi(b);
+    sh.metrics.batch_executed(
+        w.stage,
+        b,
+        queue_sum / (b.max(1) as Micros),
+    );
+    if sh.obs.enabled() {
+        sh.obs.emit(
+            end,
+            &TraceEvent::BatchExecuted {
+                stage: w.stage,
+                task: w.task,
+                size: b as u32,
+                est_us: xi_est,
+                actual_us: actual,
+            },
+        );
+        sh.obs.emit(
+            end,
+            &TraceEvent::XiObserved {
+                stage: w.stage,
+                task: w.task,
+                b_eff: b as f64,
+                actual_us: actual,
+                alpha_us: w.xi.alpha_us(),
+                beta_us: w.xi.beta_us(),
+            },
+        );
+        sh.obs.emit(
+            end,
+            &TraceEvent::NobRetune {
+                stage: w.stage,
+                task: w.task,
+            },
+        );
+    }
 
     // Per-event bookkeeping into the worker's staging buffers, then one
     // virtual call hands the whole batch + its model scores to the
@@ -950,6 +1142,7 @@ fn exec_batch(
         ev.header.sum_queue += q;
         staged.push(ev);
     }
+    let sp = span_begin(&*sh.obs);
     w.block.apply_scores(
         &mut staged,
         &out.scores,
@@ -957,6 +1150,7 @@ fn exec_batch(
             threshold: w.score_threshold,
         },
     );
+    span_end(&*sh.obs, Scope::Scoring, sp);
     for ev in staged.drain(..) {
         forward(ev);
     }

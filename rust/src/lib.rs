@@ -161,6 +161,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod engine;
 pub mod metrics;
+pub mod obs;
 pub mod roadnet;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,452 @@
+//! Schema-versioned JSONL trace export and its validator.
+//!
+//! The first line of a trace is a header object carrying
+//! [`TRACE_SCHEMA`]; every following line is one [`TraceEvent`]
+//! serialized via [`TraceEvent::to_json`]. [`validate_trace`] is the
+//! inverse contract: it re-parses a trace with the hand-rolled codec,
+//! checks the schema version and the per-kind required fields, and
+//! returns the counts (`TraceCheck`) that `harness trace`, CI and the
+//! property tests reconcile against `Ledger`/`QueryLedgers`.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{Gate, ObsSink, Scope, SpanStats, TraceEvent, TRACE_SCHEMA};
+use crate::util::json::obj;
+use crate::util::{Json, Micros};
+
+enum Out {
+    File(BufWriter<File>),
+    Mem(Vec<u8>),
+}
+
+struct Inner {
+    out: Out,
+    /// Event lines written (excludes the header).
+    lines: u64,
+}
+
+impl Inner {
+    fn write_line(&mut self, j: &Json) {
+        let line = j.to_string();
+        match &mut self.out {
+            Out::File(w) => {
+                let _ = writeln!(w, "{line}");
+            }
+            Out::Mem(v) => {
+                v.extend_from_slice(line.as_bytes());
+                v.push(b'\n');
+            }
+        }
+    }
+}
+
+/// JSONL trace writer. Cheap to clone (shared `Arc` innards); the
+/// in-memory variant backs the property tests and `--smoke` runs, the
+/// file variant backs `harness trace`.
+#[derive(Clone)]
+pub struct JsonlSink {
+    inner: Arc<Mutex<Inner>>,
+    spans: Arc<SpanStats>,
+}
+
+impl JsonlSink {
+    fn with_out(out: Out) -> Self {
+        let mut inner = Inner { out, lines: 0 };
+        inner.write_line(&obj([("schema", TRACE_SCHEMA.into())]));
+        Self {
+            inner: Arc::new(Mutex::new(inner)),
+            spans: Arc::new(SpanStats::default()),
+        }
+    }
+
+    /// Open a trace file, writing the schema header line.
+    pub fn create(path: &Path) -> std::io::Result<Self> {
+        let f = File::create(path)?;
+        Ok(Self::with_out(Out::File(BufWriter::new(f))))
+    }
+
+    /// An in-memory trace (read back with [`JsonlSink::contents`]).
+    pub fn in_memory() -> Self {
+        Self::with_out(Out::Mem(Vec::new()))
+    }
+
+    /// Event lines written so far (excluding the header).
+    pub fn lines(&self) -> u64 {
+        self.inner.lock().unwrap().lines
+    }
+
+    /// The buffered trace text (in-memory sinks only; `None` for file
+    /// sinks — read the file instead).
+    pub fn contents(&self) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        match &inner.out {
+            Out::Mem(v) => {
+                Some(String::from_utf8_lossy(v).into_owned())
+            }
+            Out::File(_) => None,
+        }
+    }
+
+    /// Flush buffered output (file sinks).
+    pub fn flush(&self) {
+        if let Out::File(w) = &mut self.inner.lock().unwrap().out {
+            let _ = w.flush();
+        }
+    }
+
+    /// The profiling span accumulators (shared with clones).
+    pub fn spans(&self) -> &SpanStats {
+        &self.spans
+    }
+}
+
+impl ObsSink for JsonlSink {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&self, t: Micros, ev: &TraceEvent) {
+        let j = ev.to_json(t);
+        let mut inner = self.inner.lock().unwrap();
+        inner.write_line(&j);
+        inner.lines += 1;
+    }
+
+    fn profiled(&self) -> bool {
+        true
+    }
+
+    fn record_span(&self, scope: Scope, ns: u64) {
+        self.spans.record(scope, ns);
+    }
+}
+
+/// Validation result: schema-checked counts for reconciliation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceCheck {
+    /// Event lines (header excluded).
+    pub lines: u64,
+    pub generated: u64,
+    pub completed: u64,
+    pub on_time: u64,
+    pub detections: u64,
+    /// Indexed by `Gate::id()`.
+    pub drops_gate: [u64; 4],
+    pub exempted: u64,
+    pub batches_executed: u64,
+    /// Line count per `ev` kind.
+    pub kinds: BTreeMap<String, u64>,
+    /// `(query, event) -> (generated count, terminal count)` where a
+    /// terminal is a completion or a drop. Conservation holds when
+    /// every generated pair has exactly one terminal and no terminal
+    /// lacks a generation.
+    pub per_event: BTreeMap<(u32, u64), (u32, u32)>,
+}
+
+impl TraceCheck {
+    pub fn dropped_total(&self) -> u64 {
+        self.drops_gate.iter().sum()
+    }
+
+    /// Generated events with no terminal yet (in flight at trace end —
+    /// legitimate for truncated/live traces, zero for full DES runs
+    /// whose ledgers conserve).
+    pub fn unterminated(&self) -> u64 {
+        self.per_event
+            .values()
+            .filter(|&&(g, t)| g > 0 && t == 0)
+            .count() as u64
+    }
+
+    /// Conservation violations: events terminated more than once, or
+    /// terminated without ever being generated. Empty on a sound
+    /// trace.
+    pub fn violations(&self) -> Vec<((u32, u64), (u32, u32))> {
+        self.per_event
+            .iter()
+            .filter(|(_, &(g, t))| t > g.max(1) || (g == 0 && t > 0))
+            .map(|(&k, &v)| (k, v))
+            .collect()
+    }
+}
+
+fn num(j: &Json, key: &str) -> Result<f64, String> {
+    j.at(key)
+        .as_f64()
+        .ok_or_else(|| format!("missing/non-numeric field `{key}`"))
+}
+
+fn st(j: &Json, key: &str) -> Result<String, String> {
+    Ok(j.at(key)
+        .as_str()
+        .ok_or_else(|| format!("missing/non-string field `{key}`"))?
+        .to_string())
+}
+
+fn boolean(j: &Json, key: &str) -> Result<bool, String> {
+    j.at(key)
+        .as_bool()
+        .ok_or_else(|| format!("missing/non-bool field `{key}`"))
+}
+
+const STAGES: [&str; 6] = ["fc", "va", "cr", "tl", "qf", "uv"];
+
+fn stage_field(j: &Json) -> Result<(), String> {
+    let s = st(j, "stage")?;
+    if STAGES.contains(&s.as_str()) {
+        Ok(())
+    } else {
+        Err(format!("unknown stage `{s}`"))
+    }
+}
+
+/// Validate a JSONL trace: header schema, per-line JSON
+/// well-formedness, per-kind required fields. Returns the reconciled
+/// counts or a message naming the first offending line.
+pub fn validate_trace(text: &str) -> Result<TraceCheck, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines
+        .next()
+        .ok_or_else(|| "empty trace: no header line".to_string())?;
+    let h = Json::parse(header)
+        .map_err(|e| format!("line 1: bad header JSON: {e}"))?;
+    match h.at("schema").as_str() {
+        Some(s) if s == TRACE_SCHEMA => {}
+        Some(s) => {
+            return Err(format!(
+                "schema mismatch: got `{s}`, want `{TRACE_SCHEMA}`"
+            ))
+        }
+        None => return Err("header missing `schema` field".into()),
+    }
+
+    let mut c = TraceCheck::default();
+    for (i, line) in lines {
+        let lineno = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| format!("line {lineno}: bad JSON: {e}"))?;
+        let err = |e: String| format!("line {lineno}: {e}");
+        num(&j, "t_us").map_err(err)?;
+        let kind = st(&j, "ev").map_err(|e| format!("line {lineno}: {e}"))?;
+        let err = |e: String| format!("line {lineno}: [{kind}] {e}");
+        c.lines += 1;
+        *c.kinds.entry(kind.clone()).or_insert(0) += 1;
+        match kind.as_str() {
+            "generated" => {
+                let ev = num(&j, "event").map_err(err)? as u64;
+                let q = num(&j, "query").map_err(err)? as u32;
+                num(&j, "camera").map_err(err)?;
+                c.generated += 1;
+                c.per_event.entry((q, ev)).or_insert((0, 0)).0 += 1;
+            }
+            "drop" => {
+                let gate = num(&j, "gate").map_err(err)? as u8;
+                Gate::from_id(gate).ok_or_else(|| {
+                    err(format!("bad gate id {gate}"))
+                })?;
+                stage_field(&j).map_err(err)?;
+                let ev = num(&j, "event").map_err(err)? as u64;
+                let q = num(&j, "query").map_err(err)? as u32;
+                num(&j, "batch").map_err(err)?;
+                num(&j, "eps_us").map_err(err)?;
+                num(&j, "xi_us").map_err(err)?;
+                c.drops_gate[gate as usize] += 1;
+                c.per_event.entry((q, ev)).or_insert((0, 0)).1 += 1;
+            }
+            "exempted" => {
+                let gate = num(&j, "gate").map_err(err)? as u8;
+                Gate::from_id(gate).ok_or_else(|| {
+                    err(format!("bad gate id {gate}"))
+                })?;
+                stage_field(&j).map_err(err)?;
+                num(&j, "event").map_err(err)?;
+                num(&j, "query").map_err(err)?;
+                c.exempted += 1;
+            }
+            "batch_formed" => {
+                stage_field(&j).map_err(err)?;
+                num(&j, "task").map_err(err)?;
+                num(&j, "size").map_err(err)?;
+            }
+            "batch_executed" => {
+                stage_field(&j).map_err(err)?;
+                num(&j, "task").map_err(err)?;
+                num(&j, "size").map_err(err)?;
+                num(&j, "est_us").map_err(err)?;
+                num(&j, "actual_us").map_err(err)?;
+                c.batches_executed += 1;
+            }
+            "xi_observed" => {
+                stage_field(&j).map_err(err)?;
+                num(&j, "task").map_err(err)?;
+                num(&j, "b_eff").map_err(err)?;
+                num(&j, "actual_us").map_err(err)?;
+                num(&j, "alpha_us").map_err(err)?;
+                num(&j, "beta_us").map_err(err)?;
+            }
+            "nob_retune" => {
+                stage_field(&j).map_err(err)?;
+                num(&j, "task").map_err(err)?;
+            }
+            "refinement" => {
+                num(&j, "query").map_err(err)?;
+                num(&j, "seq").map_err(err)?;
+            }
+            "query" => {
+                num(&j, "query").map_err(err)?;
+                st(&j, "phase").map_err(err)?;
+            }
+            "spotlight" => {
+                num(&j, "query").map_err(err)?;
+                num(&j, "active").map_err(err)?;
+            }
+            "compute_factor" => {
+                num(&j, "node").map_err(err)?;
+                num(&j, "factor").map_err(err)?;
+            }
+            "bandwidth" => {
+                num(&j, "bps").map_err(err)?;
+            }
+            "completed" => {
+                let ev = num(&j, "event").map_err(err)? as u64;
+                let q = num(&j, "query").map_err(err)? as u32;
+                num(&j, "latency_us").map_err(err)?;
+                let on_time = boolean(&j, "on_time").map_err(err)?;
+                let detected = boolean(&j, "detected").map_err(err)?;
+                c.completed += 1;
+                if on_time {
+                    c.on_time += 1;
+                }
+                if detected {
+                    c.detections += 1;
+                }
+                c.per_event.entry((q, ev)).or_insert((0, 0)).1 += 1;
+            }
+            other => {
+                return Err(format!(
+                    "line {lineno}: unknown event kind `{other}`"
+                ))
+            }
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Stage;
+
+    #[test]
+    fn in_memory_trace_round_trips() {
+        let s = JsonlSink::in_memory();
+        s.emit(
+            10,
+            &TraceEvent::Generated { event: 1, query: 0, camera: 3 },
+        );
+        s.emit(
+            999,
+            &TraceEvent::Completed {
+                event: 1,
+                query: 0,
+                latency_us: 989,
+                on_time: true,
+                detected: false,
+            },
+        );
+        assert_eq!(s.lines(), 2);
+        let text = s.contents().unwrap();
+        let check = validate_trace(&text).unwrap();
+        assert_eq!(check.lines, 2);
+        assert_eq!(check.generated, 1);
+        assert_eq!(check.completed, 1);
+        assert_eq!(check.on_time, 1);
+        assert_eq!(check.unterminated(), 0);
+        assert!(check.violations().is_empty());
+    }
+
+    #[test]
+    fn drop_and_conservation_accounting() {
+        let s = JsonlSink::in_memory();
+        for ev in 0..3u64 {
+            s.emit(
+                0,
+                &TraceEvent::Generated { event: ev, query: 2, camera: 0 },
+            );
+        }
+        s.emit(
+            5,
+            &TraceEvent::Drop {
+                gate: Gate::Exec,
+                stage: Stage::Cr,
+                event: 0,
+                query: 2,
+                batch: 4,
+                eps_us: 6_000,
+                xi_us: 18_000,
+            },
+        );
+        s.emit(
+            6,
+            &TraceEvent::Completed {
+                event: 1,
+                query: 2,
+                latency_us: 6,
+                on_time: true,
+                detected: true,
+            },
+        );
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.generated, 3);
+        assert_eq!(check.drops_gate[Gate::Exec.id() as usize], 1);
+        assert_eq!(check.dropped_total(), 1);
+        assert_eq!(check.detections, 1);
+        assert_eq!(check.unterminated(), 1); // event 2 in flight
+        assert!(check.violations().is_empty());
+    }
+
+    #[test]
+    fn schema_mismatch_and_bad_lines_rejected() {
+        assert!(validate_trace("").is_err());
+        assert!(validate_trace("{\"schema\":\"bogus-v9\"}\n").is_err());
+        let bad_kind =
+            format!("{{\"schema\":\"{TRACE_SCHEMA}\"}}\n{{\"t_us\":1,\"ev\":\"nope\"}}\n");
+        assert!(validate_trace(&bad_kind).unwrap_err().contains("nope"));
+        let missing_field = format!(
+            "{{\"schema\":\"{TRACE_SCHEMA}\"}}\n{{\"t_us\":1,\"ev\":\"generated\",\"event\":4}}\n"
+        );
+        let e = validate_trace(&missing_field).unwrap_err();
+        assert!(e.contains("query"), "{e}");
+    }
+
+    #[test]
+    fn double_termination_is_a_violation() {
+        let s = JsonlSink::in_memory();
+        s.emit(
+            0,
+            &TraceEvent::Generated { event: 9, query: 0, camera: 0 },
+        );
+        for _ in 0..2 {
+            s.emit(
+                1,
+                &TraceEvent::Completed {
+                    event: 9,
+                    query: 0,
+                    latency_us: 1,
+                    on_time: true,
+                    detected: false,
+                },
+            );
+        }
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.violations(), vec![((0, 9), (1, 2))]);
+    }
+}

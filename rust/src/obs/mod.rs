@@ -1,0 +1,570 @@
+//! In-repo observability: structured trace events, a metrics registry,
+//! and wall-clock profiling spans — the flight recorder behind
+//! `harness trace` and the per-stage breakdowns.
+//!
+//! The offline build has no `tracing`/`metrics` crates, so the layer is
+//! hand-rolled in the vendored-`anyhow` spirit: a compact [`TraceEvent`]
+//! enum, an [`ObsSink`] trait threaded through all four execution paths
+//! (both DES engines, the live engine, the multi-query front), and
+//! three sinks:
+//!
+//! * [`NullSink`] — the default. `enabled()` returns a constant `false`
+//!   and every call site guards event *construction* behind it, so the
+//!   whole layer inlines to nothing: per-seed bit-identity and RNG draw
+//!   counts are provably untouched (`prop_obs` asserts this against
+//!   [`crate::util::Rng::draws`]).
+//! * [`RingSink`] — a fixed-capacity in-memory flight recorder holding
+//!   the newest events (prime capacity, per the `BudgetManager` ring
+//!   lesson).
+//! * [`JsonlSink`] — schema-versioned JSONL export ([`TRACE_SCHEMA`]),
+//!   hand-rolled over [`crate::util::Json`] like `config/io.rs`.
+//!
+//! The metrics side ([`MetricsRegistry`]) is plain atomics behind a
+//! cheaply clonable handle: counters, gauges and fixed-bucket
+//! histograms for the tuning triangle, snapshotable mid-run from the
+//! live service and dumped per simulated second by the DES engines.
+
+pub mod jsonl;
+pub mod registry;
+pub mod report;
+pub mod ring;
+
+pub use jsonl::{validate_trace, JsonlSink, TraceCheck};
+pub use registry::{
+    HistSnapshot, MetricsRegistry, MetricsSnapshot, QueryCounters,
+    SecondRow,
+};
+pub use report::{render_rows, ReportRow};
+pub use ring::RingSink;
+
+use std::time::Instant;
+
+use crate::dataflow::{QueryId, Stage};
+use crate::util::json::obj;
+use crate::util::{Json, Micros};
+
+/// Trace schema identifier written as the first JSONL line and checked
+/// by CI's trace-validation step. Bump on any breaking field change.
+pub const TRACE_SCHEMA: &str = "anveshak-trace-v1";
+
+/// Which of the three §4.3 drop points produced a verdict (plus the
+/// teardown pseudo-gate for events drained without a budget decision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gate {
+    /// Engine teardown: a query ended while events were still queued —
+    /// no budget arithmetic was involved.
+    Drain,
+    /// Drop point 1 — on arrival, before queueing (the FC source gate
+    /// uses the same arithmetic with u = 0).
+    Queue,
+    /// Drop point 2 — the batch-formation filter.
+    Exec,
+    /// Drop point 3 — post-execution, before transmit.
+    Transmit,
+}
+
+impl Gate {
+    /// Stable numeric id (0 = drain, 1..=3 = the paper's drop points).
+    pub fn id(self) -> u8 {
+        match self {
+            Gate::Drain => 0,
+            Gate::Queue => 1,
+            Gate::Exec => 2,
+            Gate::Transmit => 3,
+        }
+    }
+
+    pub fn from_id(id: u8) -> Option<Gate> {
+        match id {
+            0 => Some(Gate::Drain),
+            1 => Some(Gate::Queue),
+            2 => Some(Gate::Exec),
+            3 => Some(Gate::Transmit),
+            _ => None,
+        }
+    }
+}
+
+/// Query lifecycle phases traced by the multi-query paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryPhase {
+    Submitted,
+    Admitted,
+    Queued,
+    Rejected,
+    Activated,
+    Completed,
+    Cancelled,
+}
+
+impl QueryPhase {
+    pub fn label(self) -> &'static str {
+        match self {
+            QueryPhase::Submitted => "submitted",
+            QueryPhase::Admitted => "admitted",
+            QueryPhase::Queued => "queued",
+            QueryPhase::Rejected => "rejected",
+            QueryPhase::Activated => "activated",
+            QueryPhase::Completed => "completed",
+            QueryPhase::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Profiled hot-path scopes (wall-clock attribution, never virtual
+/// time — spans exist for the human reading `harness` output and are
+/// invisible to the simulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// TL spotlight expansion (`active_set_into`).
+    SpotlightExpand,
+    /// VA/CR scoring / simulated block stepping over a batch.
+    Scoring,
+    /// Batcher poll loop (form/timer decisions).
+    BatchPoll,
+    /// Engine event dispatch (one simulation event or worker message).
+    Dispatch,
+}
+
+/// All scopes, in display order.
+pub const SCOPES: [Scope; 4] = [
+    Scope::Dispatch,
+    Scope::BatchPoll,
+    Scope::Scoring,
+    Scope::SpotlightExpand,
+];
+
+impl Scope {
+    pub fn index(self) -> usize {
+        match self {
+            Scope::Dispatch => 0,
+            Scope::BatchPoll => 1,
+            Scope::Scoring => 2,
+            Scope::SpotlightExpand => 3,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Scope::Dispatch => "dispatch",
+            Scope::BatchPoll => "batch_poll",
+            Scope::Scoring => "scoring",
+            Scope::SpotlightExpand => "spotlight_expand",
+        }
+    }
+}
+
+fn stage_str(s: Stage) -> &'static str {
+    match s {
+        Stage::Fc => "fc",
+        Stage::Va => "va",
+        Stage::Cr => "cr",
+        Stage::Tl => "tl",
+        Stage::Qf => "qf",
+        Stage::Uv => "uv",
+    }
+}
+
+/// One structured trace event. Compact by design: fixed-size fields
+/// only (the ring sink stores millions without allocation churn).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A source event entered the dataflow.
+    Generated { event: u64, query: QueryId, camera: u32 },
+    /// A drop gate fired. `eps_us` is the lateness that triggered the
+    /// verdict and `xi_us` the ξ estimate used, so the human
+    /// explanation is reconstructible: slack = `xi_us - eps_us` was
+    /// smaller than ξ(b). `batch` is the b the gate priced (1 at gate
+    /// 1/3).
+    Drop {
+        gate: Gate,
+        stage: Stage,
+        event: u64,
+        query: QueryId,
+        batch: u32,
+        eps_us: Micros,
+        xi_us: Micros,
+    },
+    /// An exempt (avoid-drop/probe) event survived a gate that would
+    /// have dropped it — the §4.3.3 exemption observed in the wild.
+    Exempted { gate: Gate, stage: Stage, event: u64, query: QueryId },
+    /// A batch left the batcher for execution.
+    BatchFormed { stage: Stage, task: u32, size: u32 },
+    /// A batch finished executing (estimated vs actual duration).
+    BatchExecuted {
+        stage: Stage,
+        task: u32,
+        size: u32,
+        est_us: Micros,
+        actual_us: Micros,
+    },
+    /// Online ξ recalibration consumed an observation; `alpha_us` and
+    /// `beta_us` are the refined coefficients after the EMA step.
+    XiObserved {
+        stage: Stage,
+        task: u32,
+        b_eff: f64,
+        actual_us: Micros,
+        alpha_us: f64,
+        beta_us: f64,
+    },
+    /// The executor retuned its NOB lookup table against refreshed ξ.
+    NobRetune { stage: Stage, task: u32 },
+    /// A QF refinement was routed back upstream (the feedback edge).
+    RefinementApplied { query: QueryId, seq: u32 },
+    /// Query lifecycle transition (multi-query paths).
+    QueryLifecycle { query: QueryId, phase: QueryPhase },
+    /// TL spotlight resize: the active camera set changed size.
+    Spotlight { query: QueryId, active: u32 },
+    /// Scheduled compute dynamism step (node = -1 means all nodes).
+    ComputeFactor { node: i64, factor: f64 },
+    /// Scheduled network bandwidth step.
+    Bandwidth { bps: f64 },
+    /// An event reached the sink.
+    Completed {
+        event: u64,
+        query: QueryId,
+        latency_us: Micros,
+        on_time: bool,
+        detected: bool,
+    },
+}
+
+impl TraceEvent {
+    /// Stable kind tag (the JSONL `ev` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Generated { .. } => "generated",
+            TraceEvent::Drop { .. } => "drop",
+            TraceEvent::Exempted { .. } => "exempted",
+            TraceEvent::BatchFormed { .. } => "batch_formed",
+            TraceEvent::BatchExecuted { .. } => "batch_executed",
+            TraceEvent::XiObserved { .. } => "xi_observed",
+            TraceEvent::NobRetune { .. } => "nob_retune",
+            TraceEvent::RefinementApplied { .. } => "refinement",
+            TraceEvent::QueryLifecycle { .. } => "query",
+            TraceEvent::Spotlight { .. } => "spotlight",
+            TraceEvent::ComputeFactor { .. } => "compute_factor",
+            TraceEvent::Bandwidth { .. } => "bandwidth",
+            TraceEvent::Completed { .. } => "completed",
+        }
+    }
+
+    /// JSONL line body (timestamp + kind + per-kind fields), in the
+    /// `config/io.rs` hand-rolled style.
+    pub fn to_json(&self, t: Micros) -> Json {
+        let base = [("t_us", Json::from(t)), ("ev", self.kind().into())];
+        let mut m = match obj(base) {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        let mut put = |k: &str, v: Json| {
+            m.insert(k.to_string(), v);
+        };
+        match self {
+            TraceEvent::Generated { event, query, camera } => {
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+                put("camera", (*camera as i64).into());
+            }
+            TraceEvent::Drop {
+                gate,
+                stage,
+                event,
+                query,
+                batch,
+                eps_us,
+                xi_us,
+            } => {
+                put("gate", (gate.id() as i64).into());
+                put("stage", stage_str(*stage).into());
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+                put("batch", (*batch as i64).into());
+                put("eps_us", (*eps_us).into());
+                put("xi_us", (*xi_us).into());
+            }
+            TraceEvent::Exempted { gate, stage, event, query } => {
+                put("gate", (gate.id() as i64).into());
+                put("stage", stage_str(*stage).into());
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+            }
+            TraceEvent::BatchFormed { stage, task, size } => {
+                put("stage", stage_str(*stage).into());
+                put("task", (*task as i64).into());
+                put("size", (*size as i64).into());
+            }
+            TraceEvent::BatchExecuted {
+                stage,
+                task,
+                size,
+                est_us,
+                actual_us,
+            } => {
+                put("stage", stage_str(*stage).into());
+                put("task", (*task as i64).into());
+                put("size", (*size as i64).into());
+                put("est_us", (*est_us).into());
+                put("actual_us", (*actual_us).into());
+            }
+            TraceEvent::XiObserved {
+                stage,
+                task,
+                b_eff,
+                actual_us,
+                alpha_us,
+                beta_us,
+            } => {
+                put("stage", stage_str(*stage).into());
+                put("task", (*task as i64).into());
+                put("b_eff", (*b_eff).into());
+                put("actual_us", (*actual_us).into());
+                put("alpha_us", (*alpha_us).into());
+                put("beta_us", (*beta_us).into());
+            }
+            TraceEvent::NobRetune { stage, task } => {
+                put("stage", stage_str(*stage).into());
+                put("task", (*task as i64).into());
+            }
+            TraceEvent::RefinementApplied { query, seq } => {
+                put("query", (*query as i64).into());
+                put("seq", (*seq as i64).into());
+            }
+            TraceEvent::QueryLifecycle { query, phase } => {
+                put("query", (*query as i64).into());
+                put("phase", phase.label().into());
+            }
+            TraceEvent::Spotlight { query, active } => {
+                put("query", (*query as i64).into());
+                put("active", (*active as i64).into());
+            }
+            TraceEvent::ComputeFactor { node, factor } => {
+                put("node", (*node).into());
+                put("factor", (*factor).into());
+            }
+            TraceEvent::Bandwidth { bps } => {
+                put("bps", (*bps).into());
+            }
+            TraceEvent::Completed {
+                event,
+                query,
+                latency_us,
+                on_time,
+                detected,
+            } => {
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+                put("latency_us", (*latency_us).into());
+                put("on_time", (*on_time).into());
+                put("detected", (*detected).into());
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+/// A trace sink. Implementations must be cheap clonable handles
+/// (`Arc` innards) so the live paths can share one recorder across
+/// worker threads; the DES engines are generic over `S: ObsSink`, so
+/// the [`NullSink`] default monomorphizes every hook away.
+pub trait ObsSink: Send + Sync {
+    /// Fast guard: call sites skip event *construction* when false.
+    fn enabled(&self) -> bool;
+
+    /// Record one trace event at virtual (DES) or wall (live) time `t`.
+    fn emit(&self, t: Micros, ev: &TraceEvent);
+
+    /// Whether wall-clock profiling spans should be timed at all.
+    fn profiled(&self) -> bool {
+        false
+    }
+
+    /// Attribute `ns` nanoseconds of wall-clock to `scope`.
+    fn record_span(&self, scope: Scope, ns: u64) {
+        let _ = (scope, ns);
+    }
+
+    /// RAII scope timer: times from construction to drop, reporting
+    /// through [`ObsSink::record_span`]. A no-op (no clock read) when
+    /// `profiled()` is false.
+    fn span(&self, scope: Scope) -> SpanGuard<'_>
+    where
+        Self: Sized,
+    {
+        SpanGuard::start(self, scope)
+    }
+}
+
+/// The default sink: everything compiles to nothing. The determinism
+/// contract (per-seed bit-identity, fixed RNG draw counts) is stated —
+/// and property-tested — against this sink.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl ObsSink for NullSink {
+    #[inline(always)]
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    fn emit(&self, _t: Micros, _ev: &TraceEvent) {}
+}
+
+/// RAII scope timer (see [`ObsSink::span`]).
+pub struct SpanGuard<'a> {
+    sink: &'a dyn ObsSink,
+    scope: Scope,
+    start: Option<Instant>,
+}
+
+impl<'a> SpanGuard<'a> {
+    pub fn start(sink: &'a dyn ObsSink, scope: Scope) -> Self {
+        let start = sink.profiled().then(Instant::now);
+        Self { sink, scope, start }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            self.sink
+                .record_span(self.scope, t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Manual span start for `&mut self` hot paths where an RAII guard
+/// would hold a whole-struct borrow: returns a clock reading only when
+/// the sink profiles. Pair with [`span_end`].
+#[inline]
+pub fn span_begin(sink: &dyn ObsSink) -> Option<Instant> {
+    sink.profiled().then(Instant::now)
+}
+
+/// Close a [`span_begin`] reading, attributing the elapsed wall-clock.
+#[inline]
+pub fn span_end(sink: &dyn ObsSink, scope: Scope, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        sink.record_span(scope, t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Per-scope wall-clock accumulators shared by the recording sinks.
+#[derive(Debug, Default)]
+pub struct SpanStats {
+    counts: [std::sync::atomic::AtomicU64; SCOPES.len()],
+    total_ns: [std::sync::atomic::AtomicU64; SCOPES.len()],
+}
+
+impl SpanStats {
+    pub fn record(&self, scope: Scope, ns: u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        let i = scope.index();
+        self.counts[i].fetch_add(1, Relaxed);
+        self.total_ns[i].fetch_add(ns, Relaxed);
+    }
+
+    /// `(scope, invocations, total ns)` rows in display order.
+    pub fn rows(&self) -> Vec<(Scope, u64, u64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        SCOPES
+            .iter()
+            .map(|&s| {
+                (
+                    s,
+                    self.counts[s.index()].load(Relaxed),
+                    self.total_ns[s.index()].load(Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Human-readable stage-attributed breakdown (the `harness`
+    /// profiling table). Empty string when nothing was recorded.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let rows = self.rows();
+        if rows.iter().all(|&(_, n, _)| n == 0) {
+            return String::new();
+        }
+        let mut out = String::from(
+            "  scope              calls        total      mean\n",
+        );
+        for (scope, n, ns) in rows {
+            if n == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "  {:<16} {:>8}  {:>9.3} s  {:>6.1} us",
+                scope.label(),
+                n,
+                ns as f64 / 1e9,
+                ns as f64 / 1e3 / n as f64,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_ids_round_trip() {
+        for g in [Gate::Drain, Gate::Queue, Gate::Exec, Gate::Transmit]
+        {
+            assert_eq!(Gate::from_id(g.id()), Some(g));
+        }
+        assert_eq!(Gate::from_id(9), None);
+    }
+
+    #[test]
+    fn null_sink_is_disabled_and_span_free() {
+        let s = NullSink;
+        assert!(!s.enabled());
+        assert!(!s.profiled());
+        // No clock read happens: the guard's start stays None.
+        let g = s.span(Scope::Dispatch);
+        assert!(g.start.is_none());
+        assert!(span_begin(&s).is_none());
+    }
+
+    #[test]
+    fn trace_event_json_has_kind_and_time() {
+        let ev = TraceEvent::Drop {
+            gate: Gate::Exec,
+            stage: Stage::Cr,
+            event: 42,
+            query: 0,
+            batch: 4,
+            eps_us: 6_000,
+            xi_us: 18_000,
+        };
+        let j = ev.to_json(1_500_000);
+        assert_eq!(j.at("ev").as_str(), Some("drop"));
+        assert_eq!(j.at("t_us").as_usize(), Some(1_500_000));
+        assert_eq!(j.at("gate").as_usize(), Some(2));
+        assert_eq!(j.at("stage").as_str(), Some("cr"));
+        // Round-trips through the hand-rolled codec.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.at("xi_us").as_usize(), Some(18_000));
+    }
+
+    #[test]
+    fn span_stats_accumulate_and_render() {
+        let st = SpanStats::default();
+        st.record(Scope::BatchPoll, 1_000);
+        st.record(Scope::BatchPoll, 3_000);
+        let rows = st.rows();
+        let bp = rows
+            .iter()
+            .find(|(s, _, _)| *s == Scope::BatchPoll)
+            .unwrap();
+        assert_eq!((bp.1, bp.2), (2, 4_000));
+        assert!(st.render().contains("batch_poll"));
+    }
+}

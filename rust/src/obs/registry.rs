@@ -1,0 +1,565 @@
+//! The metrics registry: plain-atomics counters, gauges and
+//! fixed-bucket histograms behind a cheaply clonable handle.
+//!
+//! Both DES engines and both live paths update the same registry
+//! surface, so one snapshot schema covers all four execution paths:
+//! per-stage batch-size and queue-delay histograms, per-gate drop
+//! counters, the active-camera/active-query gauges, per-app ξ gauges,
+//! and per-query in-time completion counters. The handle is `Arc`
+//! innards — clone it out of an engine before `run(self)` consumes the
+//! engine, or share it across live worker threads.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::dataflow::{QueryId, Stage};
+use crate::obs::Gate;
+use crate::util::json::obj;
+use crate::util::{Json, Micros, MS, SEC};
+
+/// Batch-size histogram bucket upper bounds (inclusive); one overflow
+/// bucket follows.
+pub const BATCH_BOUNDS: [usize; 8] = [1, 2, 4, 8, 12, 16, 20, 25];
+
+/// Queue-delay histogram bucket upper bounds in µs (inclusive); one
+/// overflow bucket follows.
+pub const DELAY_BOUNDS_US: [Micros; 8] = [
+    MS,
+    10 * MS,
+    100 * MS,
+    500 * MS,
+    SEC,
+    5 * SEC,
+    10 * SEC,
+    15 * SEC,
+];
+
+/// Number of per-app slots (matches `AppKind::index()`).
+const APPS: usize = 4;
+/// Stages with executor metrics: 0 = VA, 1 = CR.
+const EXEC_STAGES: usize = 2;
+
+fn stage_slot(stage: Stage) -> Option<usize> {
+    match stage {
+        Stage::Va => Some(0),
+        Stage::Cr => Some(1),
+        _ => None,
+    }
+}
+
+#[derive(Default)]
+struct AtomicHist<const N: usize> {
+    counts: [AtomicU64; N],
+    overflow: AtomicU64,
+}
+
+impl<const N: usize> AtomicHist<N> {
+    fn observe_at(&self, idx: Option<usize>) {
+        match idx {
+            Some(i) => self.counts[i].fetch_add(1, Relaxed),
+            None => self.overflow.fetch_add(1, Relaxed),
+        };
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        let mut v: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Relaxed)).collect();
+        v.push(self.overflow.load(Relaxed));
+        v
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    generated: AtomicU64,
+    on_time: AtomicU64,
+    delayed: AtomicU64,
+    detections: AtomicU64,
+    drops_gate: [AtomicU64; 4], // indexed by Gate::id()
+    batches: [AtomicU64; EXEC_STAGES],
+    batch_events: [AtomicU64; EXEC_STAGES],
+    batch_hist: [AtomicHist<{ BATCH_BOUNDS.len() }>; EXEC_STAGES],
+    delay_hist: [AtomicHist<{ DELAY_BOUNDS_US.len() }>; EXEC_STAGES],
+    xi_observations: AtomicU64,
+    nob_retunes: AtomicU64,
+    refinements: AtomicU64,
+    active_cameras: AtomicI64,
+    active_queries: AtomicI64,
+    /// ξ(1) in µs per (app, stage) — the per-app pricing gauges; 0
+    /// means "never priced".
+    xi_app_us: [[AtomicI64; EXEC_STAGES]; APPS],
+    per_query: Mutex<Vec<(QueryId, QueryCounters)>>,
+    seconds: Mutex<Vec<SecondRow>>,
+}
+
+/// Per-query in-time completion counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryCounters {
+    pub generated: u64,
+    pub on_time: u64,
+    pub delayed: u64,
+    pub dropped: u64,
+}
+
+/// One per-simulated-second cumulative row (dumped by the DES engines
+/// alongside the `Timeline`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SecondRow {
+    pub sec: i64,
+    pub generated: u64,
+    pub on_time: u64,
+    pub delayed: u64,
+    pub dropped: u64,
+    pub batches_va: u64,
+    pub batches_cr: u64,
+    pub active_cameras: i64,
+}
+
+/// Cheap clonable handle over the shared atomics.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsRegistry")
+            .field("snapshot", &self.snapshot())
+            .finish()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ---- counters --------------------------------------------------------
+
+    pub fn generated(&self) {
+        self.inner.generated.fetch_add(1, Relaxed);
+    }
+
+    pub fn completed(&self, on_time: bool) {
+        if on_time {
+            self.inner.on_time.fetch_add(1, Relaxed);
+        } else {
+            self.inner.delayed.fetch_add(1, Relaxed);
+        }
+    }
+
+    pub fn detection(&self) {
+        self.inner.detections.fetch_add(1, Relaxed);
+    }
+
+    pub fn dropped(&self, gate: Gate) {
+        self.inner.drops_gate[gate.id() as usize].fetch_add(1, Relaxed);
+    }
+
+    /// A batch of `size` events executed at `stage` with mean queue
+    /// delay `mean_queue_us` — feeds the count, the batch-size
+    /// histogram and the queue-delay histogram.
+    pub fn batch_executed(
+        &self,
+        stage: Stage,
+        size: usize,
+        mean_queue_us: Micros,
+    ) {
+        let Some(s) = stage_slot(stage) else { return };
+        self.inner.batches[s].fetch_add(1, Relaxed);
+        self.inner.batch_events[s].fetch_add(size as u64, Relaxed);
+        self.inner.batch_hist[s].observe_at(
+            BATCH_BOUNDS.iter().position(|&b| size <= b),
+        );
+        self.inner.delay_hist[s].observe_at(
+            DELAY_BOUNDS_US.iter().position(|&b| mean_queue_us <= b),
+        );
+    }
+
+    pub fn xi_observed(&self) {
+        self.inner.xi_observations.fetch_add(1, Relaxed);
+    }
+
+    pub fn nob_retune(&self) {
+        self.inner.nob_retunes.fetch_add(1, Relaxed);
+    }
+
+    pub fn refinement(&self) {
+        self.inner.refinements.fetch_add(1, Relaxed);
+    }
+
+    // ---- gauges ----------------------------------------------------------
+
+    pub fn set_active_cameras(&self, n: usize) {
+        self.inner.active_cameras.store(n as i64, Relaxed);
+    }
+
+    pub fn set_active_queries(&self, n: usize) {
+        self.inner.active_queries.store(n as i64, Relaxed);
+    }
+
+    /// Publish the ξ(1) price (µs) a path charges `app` at `stage` —
+    /// the per-app ξ gauges behind the live front's multiplier port.
+    pub fn set_app_xi(&self, app_index: usize, stage: Stage, xi1_us: Micros) {
+        let Some(s) = stage_slot(stage) else { return };
+        if app_index < APPS {
+            self.inner.xi_app_us[app_index][s].store(xi1_us, Relaxed);
+        }
+    }
+
+    // ---- per-query counters ---------------------------------------------
+
+    fn with_query<F: FnOnce(&mut QueryCounters)>(&self, q: QueryId, f: F) {
+        let mut per = self.inner.per_query.lock().unwrap();
+        match per.iter_mut().find(|(id, _)| *id == q) {
+            Some((_, c)) => f(c),
+            None => {
+                let mut c = QueryCounters::default();
+                f(&mut c);
+                per.push((q, c));
+            }
+        }
+    }
+
+    pub fn query_generated(&self, q: QueryId) {
+        self.with_query(q, |c| c.generated += 1);
+    }
+
+    pub fn query_completed(&self, q: QueryId, on_time: bool) {
+        self.with_query(q, |c| {
+            if on_time {
+                c.on_time += 1
+            } else {
+                c.delayed += 1
+            }
+        });
+    }
+
+    pub fn query_dropped(&self, q: QueryId) {
+        self.with_query(q, |c| c.dropped += 1);
+    }
+
+    // ---- per-second dump -------------------------------------------------
+
+    /// Record the cumulative counters as of simulated second `sec`
+    /// (DES engines call this once per simulated second, alongside
+    /// `Timeline::sample_active`).
+    pub fn mark_second(&self, sec: i64) {
+        let row = SecondRow {
+            sec,
+            generated: self.inner.generated.load(Relaxed),
+            on_time: self.inner.on_time.load(Relaxed),
+            delayed: self.inner.delayed.load(Relaxed),
+            dropped: self
+                .inner
+                .drops_gate
+                .iter()
+                .map(|c| c.load(Relaxed))
+                .sum(),
+            batches_va: self.inner.batches[0].load(Relaxed),
+            batches_cr: self.inner.batches[1].load(Relaxed),
+            active_cameras: self.inner.active_cameras.load(Relaxed),
+        };
+        self.inner.seconds.lock().unwrap().push(row);
+    }
+
+    /// The per-second rows recorded so far.
+    pub fn seconds(&self) -> Vec<SecondRow> {
+        self.inner.seconds.lock().unwrap().clone()
+    }
+
+    // ---- snapshot --------------------------------------------------------
+
+    /// A consistent-enough point-in-time copy (individual atomics are
+    /// read independently; exactness holds whenever the engine is
+    /// quiescent, e.g. at end of run or between live batches).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let i = &self.inner;
+        MetricsSnapshot {
+            generated: i.generated.load(Relaxed),
+            on_time: i.on_time.load(Relaxed),
+            delayed: i.delayed.load(Relaxed),
+            detections: i.detections.load(Relaxed),
+            drops_gate: [
+                i.drops_gate[0].load(Relaxed),
+                i.drops_gate[1].load(Relaxed),
+                i.drops_gate[2].load(Relaxed),
+                i.drops_gate[3].load(Relaxed),
+            ],
+            batches: [i.batches[0].load(Relaxed), i.batches[1].load(Relaxed)],
+            batch_events: [
+                i.batch_events[0].load(Relaxed),
+                i.batch_events[1].load(Relaxed),
+            ],
+            batch_hist: [
+                HistSnapshot {
+                    bounds: BATCH_BOUNDS.iter().map(|&b| b as i64).collect(),
+                    counts: i.batch_hist[0].snapshot(),
+                },
+                HistSnapshot {
+                    bounds: BATCH_BOUNDS.iter().map(|&b| b as i64).collect(),
+                    counts: i.batch_hist[1].snapshot(),
+                },
+            ],
+            delay_hist: [
+                HistSnapshot {
+                    bounds: DELAY_BOUNDS_US.to_vec(),
+                    counts: i.delay_hist[0].snapshot(),
+                },
+                HistSnapshot {
+                    bounds: DELAY_BOUNDS_US.to_vec(),
+                    counts: i.delay_hist[1].snapshot(),
+                },
+            ],
+            xi_observations: i.xi_observations.load(Relaxed),
+            nob_retunes: i.nob_retunes.load(Relaxed),
+            refinements: i.refinements.load(Relaxed),
+            active_cameras: i.active_cameras.load(Relaxed),
+            active_queries: i.active_queries.load(Relaxed),
+            xi_app_us: std::array::from_fn(|a| {
+                std::array::from_fn(|s| i.xi_app_us[a][s].load(Relaxed))
+            }),
+            per_query: i.per_query.lock().unwrap().clone(),
+            seconds: i.seconds.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Snapshot of one histogram: `counts.len() == bounds.len() + 1` (the
+/// final count is the overflow bucket).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub bounds: Vec<i64>,
+    pub counts: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    fn to_json(&self) -> Json {
+        obj([
+            (
+                "bounds",
+                Json::Arr(
+                    self.bounds.iter().map(|&b| Json::from(b)).collect(),
+                ),
+            ),
+            (
+                "counts",
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|&c| Json::from(c as i64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Plain point-in-time copy of every registry metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub generated: u64,
+    pub on_time: u64,
+    pub delayed: u64,
+    pub detections: u64,
+    /// Indexed by `Gate::id()` (0 = drain, 1..=3 = drop points).
+    pub drops_gate: [u64; 4],
+    /// `[va, cr]` batch counts.
+    pub batches: [u64; 2],
+    pub batch_events: [u64; 2],
+    pub batch_hist: [HistSnapshot; 2],
+    pub delay_hist: [HistSnapshot; 2],
+    pub xi_observations: u64,
+    pub nob_retunes: u64,
+    pub refinements: u64,
+    pub active_cameras: i64,
+    pub active_queries: i64,
+    pub xi_app_us: [[i64; 2]; 4],
+    pub per_query: Vec<(QueryId, QueryCounters)>,
+    /// Cumulative per-simulated-second rows (empty when
+    /// `obs.per_second_metrics` is off or on live paths).
+    pub seconds: Vec<SecondRow>,
+}
+
+impl MetricsSnapshot {
+    pub fn dropped_total(&self) -> u64 {
+        self.drops_gate.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pq: Vec<Json> = self
+            .per_query
+            .iter()
+            .map(|(q, c)| {
+                obj([
+                    ("query", (*q as i64).into()),
+                    ("generated", (c.generated as i64).into()),
+                    ("on_time", (c.on_time as i64).into()),
+                    ("delayed", (c.delayed as i64).into()),
+                    ("dropped", (c.dropped as i64).into()),
+                ])
+            })
+            .collect();
+        obj([
+            ("generated", (self.generated as i64).into()),
+            ("on_time", (self.on_time as i64).into()),
+            ("delayed", (self.delayed as i64).into()),
+            ("detections", (self.detections as i64).into()),
+            (
+                "drops_gate",
+                Json::Arr(
+                    self.drops_gate
+                        .iter()
+                        .map(|&d| Json::from(d as i64))
+                        .collect(),
+                ),
+            ),
+            ("batches_va", (self.batches[0] as i64).into()),
+            ("batches_cr", (self.batches[1] as i64).into()),
+            ("batch_events_va", (self.batch_events[0] as i64).into()),
+            ("batch_events_cr", (self.batch_events[1] as i64).into()),
+            ("batch_hist_va", self.batch_hist[0].to_json()),
+            ("batch_hist_cr", self.batch_hist[1].to_json()),
+            ("delay_hist_va", self.delay_hist[0].to_json()),
+            ("delay_hist_cr", self.delay_hist[1].to_json()),
+            ("xi_observations", (self.xi_observations as i64).into()),
+            ("nob_retunes", (self.nob_retunes as i64).into()),
+            ("refinements", (self.refinements as i64).into()),
+            ("active_cameras", self.active_cameras.into()),
+            ("active_queries", self.active_queries.into()),
+            (
+                "xi_app_us",
+                Json::Arr(
+                    self.xi_app_us
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(
+                                row.iter()
+                                    .map(|&v| Json::from(v))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("per_query", Json::Arr(pq)),
+            (
+                "seconds",
+                Json::Arr(
+                    self.seconds
+                        .iter()
+                        .map(|s| {
+                            obj([
+                                ("sec", s.sec.into()),
+                                (
+                                    "generated",
+                                    (s.generated as i64).into(),
+                                ),
+                                ("on_time", (s.on_time as i64).into()),
+                                ("delayed", (s.delayed as i64).into()),
+                                ("dropped", (s.dropped as i64).into()),
+                                (
+                                    "batches_va",
+                                    (s.batches_va as i64).into(),
+                                ),
+                                (
+                                    "batches_cr",
+                                    (s.batches_cr as i64).into(),
+                                ),
+                                (
+                                    "active_cameras",
+                                    s.active_cameras.into(),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gates() {
+        let m = MetricsRegistry::new();
+        m.generated();
+        m.generated();
+        m.completed(true);
+        m.dropped(Gate::Exec);
+        m.dropped(Gate::Exec);
+        m.dropped(Gate::Queue);
+        let s = m.snapshot();
+        assert_eq!(s.generated, 2);
+        assert_eq!(s.on_time, 1);
+        assert_eq!(s.drops_gate[Gate::Exec.id() as usize], 2);
+        assert_eq!(s.drops_gate[Gate::Queue.id() as usize], 1);
+        assert_eq!(s.dropped_total(), 3);
+    }
+
+    #[test]
+    fn batch_histograms_bucket_correctly() {
+        let m = MetricsRegistry::new();
+        m.batch_executed(Stage::Va, 1, 500);
+        m.batch_executed(Stage::Va, 25, 20 * SEC); // delay overflows
+        m.batch_executed(Stage::Va, 40, MS); // size overflows
+        m.batch_executed(Stage::Cr, 8, 2 * SEC);
+        m.batch_executed(Stage::Fc, 3, 0); // ignored: not an exec stage
+        let s = m.snapshot();
+        assert_eq!(s.batches, [3, 1]);
+        assert_eq!(s.batch_events, [66, 8]);
+        let va = &s.batch_hist[0];
+        assert_eq!(va.counts[0], 1); // b=1
+        assert_eq!(va.counts[BATCH_BOUNDS.len() - 1], 1); // b=25
+        assert_eq!(*va.counts.last().unwrap(), 1); // b=40 overflow
+        assert_eq!(va.total(), 3);
+        assert_eq!(*s.delay_hist[0].counts.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn per_query_counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.query_generated(3);
+        m.query_generated(3);
+        m.query_completed(3, true);
+        m.query_dropped(7);
+        let s = m.snapshot();
+        assert_eq!(s.per_query.len(), 2);
+        let q3 = s.per_query.iter().find(|(q, _)| *q == 3).unwrap().1;
+        assert_eq!((q3.generated, q3.on_time), (2, 1));
+    }
+
+    #[test]
+    fn second_rows_are_cumulative() {
+        let m = MetricsRegistry::new();
+        m.generated();
+        m.set_active_cameras(5);
+        m.mark_second(0);
+        m.generated();
+        m.mark_second(1);
+        let rows = m.seconds();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].generated, 1);
+        assert_eq!(rows[1].generated, 2);
+        assert_eq!(rows[0].active_cameras, 5);
+    }
+
+    #[test]
+    fn app_xi_gauges() {
+        let m = MetricsRegistry::new();
+        m.set_app_xi(1, Stage::Cr, 195_600);
+        let s = m.snapshot();
+        assert_eq!(s.xi_app_us[1][1], 195_600);
+        assert_eq!(s.xi_app_us[0][0], 0);
+        // Snapshot JSON round-trips through the codec.
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.at("generated").as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,188 @@
+//! One reporting function for every path.
+//!
+//! `harness mq`, `harness compute` and the live `TrackingService`
+//! previously each hand-rolled their own summary printer. All three now
+//! build [`ReportRow`]s — from a [`MetricsSnapshot`], per-query
+//! counters, or an end-of-run `Summary` — and render through
+//! [`render_rows`], so the columns (and the percentages in them) can
+//! never drift apart between the live and DES paths.
+
+use std::fmt::Write as _;
+
+use crate::metrics::Summary;
+use crate::obs::{MetricsSnapshot, QueryCounters};
+
+/// One row of the shared delivery report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReportRow {
+    pub label: String,
+    pub generated: u64,
+    pub on_time: u64,
+    pub delayed: u64,
+    pub dropped: u64,
+    /// Latency columns are optional: mid-run metrics snapshots don't
+    /// carry percentile state, end-of-run summaries do.
+    pub median_latency_s: Option<f64>,
+    pub p99_latency_s: Option<f64>,
+    /// Free-form trailing cell (status, peak cams, fusion count, ...).
+    pub extra: String,
+}
+
+impl ReportRow {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), ..Self::default() }
+    }
+
+    /// Row from a registry snapshot (mid-run or end-of-run; any path).
+    pub fn from_snapshot(
+        label: impl Into<String>,
+        s: &MetricsSnapshot,
+    ) -> Self {
+        Self {
+            label: label.into(),
+            generated: s.generated,
+            on_time: s.on_time,
+            delayed: s.delayed,
+            dropped: s.dropped_total(),
+            ..Self::default()
+        }
+    }
+
+    /// Row from one query's counters in a snapshot.
+    pub fn from_query(
+        label: impl Into<String>,
+        c: &QueryCounters,
+    ) -> Self {
+        Self {
+            label: label.into(),
+            generated: c.generated,
+            on_time: c.on_time,
+            delayed: c.delayed,
+            dropped: c.dropped,
+            ..Self::default()
+        }
+    }
+
+    /// Row from an end-of-run ledger summary (has latency percentiles).
+    pub fn from_summary(label: impl Into<String>, s: &Summary) -> Self {
+        Self {
+            label: label.into(),
+            generated: s.generated,
+            on_time: s.on_time,
+            delayed: s.delayed,
+            dropped: s.dropped,
+            median_latency_s: Some(s.latency.median),
+            p99_latency_s: Some(s.latency.p99),
+            extra: String::new(),
+        }
+    }
+
+    pub fn with_extra(mut self, extra: impl Into<String>) -> Self {
+        self.extra = extra.into();
+        self
+    }
+
+    pub fn delay_rate(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.delayed as f64 / self.generated as f64
+        }
+    }
+
+    pub fn drop_rate(&self) -> f64 {
+        if self.generated == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.generated as f64
+        }
+    }
+}
+
+/// Render rows as the shared aligned table (header included). Latency
+/// columns print `-` when a row has no percentile state.
+pub fn render_rows(rows: &[ReportRow]) -> String {
+    let label_w = rows
+        .iter()
+        .map(|r| r.label.len())
+        .max()
+        .unwrap_or(0)
+        .max("query".len());
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "  {:<label_w$} {:>8} {:>8} {:>8}({:>5}) {:>8}({:>5}) {:>8} {:>8}  {}",
+        "query",
+        "gen",
+        "on-time",
+        "delayed",
+        "%",
+        "dropped",
+        "%",
+        "median-s",
+        "p99-s",
+        "notes"
+    );
+    for r in rows {
+        let med = r
+            .median_latency_s
+            .map(|v| format!("{v:.2}"))
+            .unwrap_or_else(|| "-".into());
+        let p99 = r
+            .p99_latency_s
+            .map(|v| format!("{v:.2}"))
+            .unwrap_or_else(|| "-".into());
+        let _ = writeln!(
+            out,
+            "  {:<label_w$} {:>8} {:>8} {:>8}({:>4.1}%) {:>8}({:>4.1}%) {:>8} {:>8}  {}",
+            r.label,
+            r.generated,
+            r.on_time,
+            r.delayed,
+            100.0 * r.delay_rate(),
+            r.dropped,
+            100.0 * r.drop_rate(),
+            med,
+            p99,
+            r.extra
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_render_aligned_with_optional_latency() {
+        let rows = vec![
+            ReportRow {
+                label: "q0-app1".into(),
+                generated: 100,
+                on_time: 90,
+                delayed: 5,
+                dropped: 5,
+                median_latency_s: Some(1.25),
+                p99_latency_s: Some(9.5),
+                extra: "active".into(),
+            },
+            ReportRow::new("mid-run").with_extra("snapshot"),
+        ];
+        let t = render_rows(&rows);
+        assert!(t.contains("q0-app1"));
+        assert!(t.contains("1.25"));
+        assert!(t.contains("snapshot"));
+        // No-latency row prints dashes, not zeros.
+        let mid = t.lines().find(|l| l.contains("mid-run")).unwrap();
+        assert!(mid.contains('-'));
+        assert!(t.lines().count() == 3); // header + 2 rows
+    }
+
+    #[test]
+    fn rates_guard_division_by_zero() {
+        let r = ReportRow::new("empty");
+        assert_eq!(r.delay_rate(), 0.0);
+        assert_eq!(r.drop_rate(), 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! The flight recorder: a fixed-capacity ring of the newest trace
+//! events.
+//!
+//! Capacity is required to be prime — the same lesson the
+//! `BudgetManager` rings encode (4093/251/2039): a prime capacity
+//! cannot resonate with any periodic event pattern, so systematic
+//! strides never alias onto the same slots. The default matches the
+//! coordinator task ring (4093).
+
+use std::sync::{Arc, Mutex};
+
+use crate::obs::{ObsSink, Scope, SpanStats, TraceEvent};
+use crate::util::Micros;
+
+/// Default ring capacity (prime; mirrors `BudgetManager`'s task ring).
+pub const DEFAULT_RING_CAPACITY: usize = 4093;
+
+fn is_prime(n: usize) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+struct Ring {
+    /// Slot storage; grows to capacity then stays fixed.
+    slots: Vec<(Micros, TraceEvent)>,
+    /// Next write position once `slots` is full.
+    head: usize,
+    /// Total events ever emitted (≥ `slots.len()`).
+    total: u64,
+}
+
+/// Fixed-capacity in-memory flight recorder. Cheap to clone (shared
+/// `Arc` innards); keeps the newest `capacity` events and all profiling
+/// spans.
+#[derive(Clone)]
+pub struct RingSink {
+    ring: Arc<Mutex<Ring>>,
+    capacity: usize,
+    spans: Arc<SpanStats>,
+}
+
+impl Default for RingSink {
+    fn default() -> Self {
+        Self::new(DEFAULT_RING_CAPACITY)
+    }
+}
+
+impl RingSink {
+    /// Create a recorder holding the newest `capacity` events.
+    /// Panics unless `capacity` is prime (see module docs).
+    pub fn new(capacity: usize) -> Self {
+        assert!(
+            is_prime(capacity),
+            "RingSink capacity must be prime, got {capacity}"
+        );
+        Self {
+            ring: Arc::new(Mutex::new(Ring {
+                slots: Vec::with_capacity(capacity),
+                head: 0,
+                total: 0,
+            })),
+            capacity,
+            spans: Arc::new(SpanStats::default()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total events ever emitted (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.ring.lock().unwrap().total
+    }
+
+    /// The retained events, oldest first, newest last. Never more than
+    /// `capacity` entries; once full, always exactly the newest
+    /// `capacity` events in emission order.
+    pub fn events(&self) -> Vec<(Micros, TraceEvent)> {
+        let r = self.ring.lock().unwrap();
+        if r.slots.len() < self.capacity {
+            r.slots.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.capacity);
+            out.extend_from_slice(&r.slots[r.head..]);
+            out.extend_from_slice(&r.slots[..r.head]);
+            out
+        }
+    }
+
+    /// The profiling span accumulators (shared with clones).
+    pub fn spans(&self) -> &SpanStats {
+        &self.spans
+    }
+}
+
+impl ObsSink for RingSink {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&self, t: Micros, ev: &TraceEvent) {
+        let mut r = self.ring.lock().unwrap();
+        r.total += 1;
+        if r.slots.len() < self.capacity {
+            r.slots.push((t, ev.clone()));
+        } else {
+            let head = r.head;
+            r.slots[head] = (t, ev.clone());
+            r.head = (head + 1) % self.capacity;
+        }
+    }
+
+    fn profiled(&self) -> bool {
+        true
+    }
+
+    fn record_span(&self, scope: Scope, ns: u64) {
+        self.spans.record(scope, ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(event: u64) -> TraceEvent {
+        TraceEvent::Generated { event, query: 0, camera: 0 }
+    }
+
+    #[test]
+    fn primality_check() {
+        for p in [2, 3, 5, 251, 2039, 4093] {
+            assert!(is_prime(p), "{p} is prime");
+        }
+        for c in [0, 1, 4, 9, 4095, 4096] {
+            assert!(!is_prime(c), "{c} is composite");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must be prime")]
+    fn composite_capacity_rejected() {
+        RingSink::new(4096);
+    }
+
+    #[test]
+    fn below_capacity_keeps_everything_in_order() {
+        let s = RingSink::new(7);
+        for i in 0..5 {
+            s.emit(i as Micros, &gen(i));
+        }
+        let evs = s.events();
+        assert_eq!(evs.len(), 5);
+        assert_eq!(s.total(), 5);
+        for (i, (t, ev)) in evs.iter().enumerate() {
+            assert_eq!(*t, i as Micros);
+            assert_eq!(*ev, gen(i as u64));
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_in_order() {
+        let s = RingSink::new(7);
+        for i in 0..23 {
+            s.emit(i as Micros, &gen(i));
+        }
+        let evs = s.events();
+        assert_eq!(evs.len(), 7);
+        assert_eq!(s.total(), 23);
+        // Exactly the newest 7, oldest first.
+        for (k, (t, ev)) in evs.iter().enumerate() {
+            let want = 16 + k as u64;
+            assert_eq!(*t, want as Micros);
+            assert_eq!(*ev, gen(want));
+        }
+    }
+
+    #[test]
+    fn clones_share_the_recorder() {
+        let s = RingSink::new(5);
+        let c = s.clone();
+        s.emit(1, &gen(1));
+        c.emit(2, &gen(2));
+        assert_eq!(s.total(), 2);
+        assert_eq!(c.events().len(), 2);
+        c.record_span(Scope::Scoring, 10);
+        assert_eq!(s.spans().rows()[Scope::Scoring.index()].1, 1);
+    }
+}

@@ -34,6 +34,10 @@ use crate::dataflow::{
 };
 use crate::engine::EventCore;
 use crate::metrics::{QueryLedgers, Summary};
+use crate::obs::{
+    span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
+    NullSink, ObsSink, QueryPhase, Scope, TraceEvent,
+};
 use crate::roadnet::{generate, place_cameras, Camera, Graph};
 use crate::service::admission::{
     Admission, AdmissionController, AdmissionPolicy,
@@ -215,6 +219,12 @@ pub struct MultiQueryResult {
     /// [`EventCore`] — the numerator of the events/sec throughput
     /// metric reported by `benches/hotpath.rs`.
     pub core_events: u64,
+    /// End-of-run snapshot of the engine's metrics registry (always
+    /// recorded — counters are sink-independent).
+    pub metrics: MetricsSnapshot,
+    /// Raw `next_u64` draws the engine RNG made — the determinism
+    /// probe the obs property tests compare across sinks.
+    pub rng_draws: u64,
 }
 
 impl MultiQueryResult {
@@ -224,8 +234,11 @@ impl MultiQueryResult {
     }
 }
 
-/// The multi-query discrete-event engine.
-pub struct MultiQueryDes {
+/// The multi-query discrete-event engine, generic over the trace sink
+/// (the [`NullSink`] default monomorphizes every emission away; the
+/// metrics registry stays on either way — atomics never touch the RNG
+/// or the event order).
+pub struct MultiQueryDes<S: ObsSink = NullSink> {
     cfg: ExperimentConfig,
     topo: Topology,
     graph: Graph,
@@ -282,6 +295,8 @@ pub struct MultiQueryDes {
     meta_scratch: Vec<(Micros, Micros, usize)>,
     outgoing_scratch: Vec<Event>,
     active_scratch: Vec<usize>,
+    obs: S,
+    metrics: MetricsRegistry,
 }
 
 impl MultiQueryDes {
@@ -297,6 +312,19 @@ impl MultiQueryDes {
         cfg: ExperimentConfig,
         mq: MultiQueryConfig,
         app: &AppDefinition,
+    ) -> Self {
+        Self::with_app_sink(cfg, mq, app, NullSink)
+    }
+}
+
+impl<S: ObsSink> MultiQueryDes<S> {
+    /// Build the engine for an arbitrary application *and* trace sink
+    /// — the flight-recorder entry point.
+    pub fn with_app_sink(
+        cfg: ExperimentConfig,
+        mq: MultiQueryConfig,
+        app: &AppDefinition,
+        sink: S,
     ) -> Self {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
@@ -433,6 +461,20 @@ impl MultiQueryDes {
         let seed = cfg.seed;
         let compute =
             ComputeModel::new(&cfg.service.compute_events, topo.nodes);
+        // Publish the initial per-(app, stage) ξ(1) prices; refreshed
+        // whenever online calibration moves the estimator.
+        let metrics = MetricsRegistry::new();
+        for t in &tasks {
+            if matches!(t.stage, Stage::Va | Stage::Cr) {
+                for k in 0..t.rel.len() {
+                    metrics.set_app_xi(
+                        k,
+                        t.stage,
+                        t.xi.scaled(t.rel[k]).xi(1),
+                    );
+                }
+            }
+        }
         Self {
             cfg,
             topo,
@@ -471,6 +513,8 @@ impl MultiQueryDes {
             meta_scratch: Vec::new(),
             outgoing_scratch: Vec::new(),
             active_scratch: Vec::new(),
+            obs: sink,
+            metrics,
         }
     }
 
@@ -510,6 +554,27 @@ impl MultiQueryDes {
         }
         self.push(SEC, Ev::TlTick);
 
+        if self.obs.enabled() {
+            // The configured dynamism schedule, stamped at its
+            // scheduled virtual times (emitted up front: the steps are
+            // known before the run starts).
+            for e in &self.cfg.service.compute_events {
+                self.obs.emit(
+                    secs(e.at_sec),
+                    &TraceEvent::ComputeFactor {
+                        node: e.node.map_or(-1, |n| n as i64),
+                        factor: e.factor,
+                    },
+                );
+            }
+            for e in &self.cfg.network.events {
+                self.obs.emit(
+                    secs(e.at_sec),
+                    &TraceEvent::Bandwidth { bps: e.bandwidth_bps },
+                );
+            }
+        }
+
         // Horizon re-evaluated each step: promotions extend
         // `service_end` mid-run.
         loop {
@@ -518,7 +583,9 @@ impl MultiQueryDes {
                 break;
             };
             self.now = t;
+            let sp = span_begin(&self.obs);
             self.dispatch(ev);
+            span_end(&self.obs, Scope::Dispatch, sp);
         }
         self.report()
     }
@@ -602,6 +669,15 @@ impl MultiQueryDes {
             self.active_cameras_total(),
             self.cfg.num_cameras,
         );
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::QueryLifecycle {
+                    query: id,
+                    phase: QueryPhase::Submitted,
+                },
+            );
+        }
         match decision {
             Admission::Admit => self.activate_query(id),
             Admission::Queue => {
@@ -609,11 +685,29 @@ impl MultiQueryDes {
                 self.registry
                     .enqueue(id)
                     .expect("submitted query can queue");
+                if self.obs.enabled() {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::QueryLifecycle {
+                            query: id,
+                            phase: QueryPhase::Queued,
+                        },
+                    );
+                }
             }
             Admission::Reject(_) => {
                 self.registry
                     .reject(id, self.now)
                     .expect("submitted query can be rejected");
+                if self.obs.enabled() {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::QueryLifecycle {
+                            query: id,
+                            phase: QueryPhase::Rejected,
+                        },
+                    );
+                }
             }
         }
     }
@@ -687,6 +781,16 @@ impl MultiQueryDes {
         self.active.push(id);
         self.peak_concurrent =
             self.peak_concurrent.max(self.active.len());
+        self.metrics.set_active_queries(self.active.len());
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::QueryLifecycle {
+                    query: id,
+                    phase: QueryPhase::Activated,
+                },
+            );
+        }
         // Wait-listed queries promoted late run past the static
         // schedule end: extend the service window (frame ticks and the
         // run horizon both follow it dynamically).
@@ -708,12 +812,23 @@ impl MultiQueryDes {
             .complete(query, self.now)
             .expect("status checked");
         self.active.retain(|&q| q != query);
+        self.metrics.set_active_queries(self.active.len());
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::QueryLifecycle {
+                    query,
+                    phase: QueryPhase::Completed,
+                },
+            );
+        }
         if let Some(ctx) = self.ctx.remove(&query) {
             self.finished_stats
                 .insert(query, (ctx.detections, ctx.peak_active));
         }
         // Drain the query's leftover worker-queue events (ledgered as
-        // dropped at the owning stage: they will never complete).
+        // dropped at the owning stage: they will never complete —
+        // traced at the teardown pseudo-gate, [`Gate::Drain`]).
         for ti in 0..self.tasks.len() {
             if !matches!(self.tasks[ti].stage, Stage::Va | Stage::Cr) {
                 continue;
@@ -722,6 +837,22 @@ impl MultiQueryDes {
             let stage = self.tasks[ti].stage;
             for qe in left {
                 self.ledgers.dropped(query, qe.item.header.id, stage);
+                self.metrics.dropped(Gate::Drain);
+                self.metrics.query_dropped(query);
+                if self.obs.enabled() {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::Drop {
+                            gate: Gate::Drain,
+                            stage,
+                            event: qe.item.header.id,
+                            query,
+                            batch: 1,
+                            eps_us: 0,
+                            xi_us: 0,
+                        },
+                    );
+                }
             }
             self.tasks[ti].budgets.remove(&query);
             // Applied refinements die with the query.
@@ -803,6 +934,18 @@ impl MultiQueryDes {
             let mut ev = Event::frame(id, cam, frame_no, t, present);
             ev.header = ev.header.with_query(q);
             self.ledgers.generated(q, id, present);
+            self.metrics.generated();
+            self.metrics.query_generated(q);
+            if self.obs.enabled() {
+                self.obs.emit(
+                    t,
+                    &TraceEvent::Generated {
+                        event: id,
+                        query: q,
+                        camera: cam as u32,
+                    },
+                );
+            }
 
             // FC drop point 1 against this query's FC budget.
             let slot = self
@@ -818,6 +961,22 @@ impl MultiQueryDes {
                     && drop_at_queue(false, 0, fc_xi1, budget)
                 {
                     self.ledgers.dropped(q, id, Stage::Fc);
+                    self.metrics.dropped(Gate::Queue);
+                    self.metrics.query_dropped(q);
+                    if self.obs.enabled() {
+                        self.obs.emit(
+                            t,
+                            &TraceEvent::Drop {
+                                gate: Gate::Queue,
+                                stage: Stage::Fc,
+                                event: id,
+                                query: q,
+                                batch: 1,
+                                eps_us: fc_xi1 - budget,
+                                xi_us: fc_xi1,
+                            },
+                        );
+                    }
                     continue;
                 }
             }
@@ -968,8 +1127,33 @@ impl MultiQueryDes {
                     && drop_at_queue(exempt, u, xi1, budget)
                 {
                     let eps = (u + xi1) - budget;
-                    self.drop_event(task, ev, eps);
+                    self.drop_event(
+                        task,
+                        ev,
+                        Gate::Queue,
+                        eps,
+                        xi1,
+                        1,
+                    );
                     return;
+                }
+                if self.obs.enabled()
+                    && exempt
+                    && self.cfg.drops_enabled
+                    && budget < BUDGET_INF
+                    && drop_at_queue(false, u, xi1, budget)
+                {
+                    // The raw predicate fired but the event was
+                    // exempt (probe / avoid_drop): record the save.
+                    self.obs.emit(
+                        now,
+                        &TraceEvent::Exempted {
+                            gate: Gate::Queue,
+                            stage: self.tasks[task].stage,
+                            event: ev.header.id,
+                            query: q,
+                        },
+                    );
                 }
                 let deadline = if budget >= BUDGET_INF {
                     BUDGET_INF
@@ -995,6 +1179,22 @@ impl MultiQueryDes {
                     let stage = self.tasks[task].stage;
                     self.ledgers
                         .dropped(q, qe.item.header.id, stage);
+                    self.metrics.dropped(Gate::Drain);
+                    self.metrics.query_dropped(q);
+                    if self.obs.enabled() {
+                        self.obs.emit(
+                            now,
+                            &TraceEvent::Drop {
+                                gate: Gate::Drain,
+                                stage,
+                                event: qe.item.header.id,
+                                query: q,
+                                batch: 1,
+                                eps_us: 0,
+                                xi_us: 0,
+                            },
+                        );
+                    }
                     return;
                 }
                 if !self.tasks[task].busy {
@@ -1012,17 +1212,20 @@ impl MultiQueryDes {
             // app's cost multiplier (ξ of the Σ of multipliers) — a
             // heterogeneous mix batches under each app's cost model.
             let poll = {
+                let sp = span_begin(&self.obs);
                 let reg = &self.registry;
                 let default_kind = self.catalog.default_kind();
                 let rel = self.tasks[task].rel;
                 let ts = &mut self.tasks[task];
-                ts.batcher.poll_costed(now, &ts.xi, |q| {
+                let poll = ts.batcher.poll_costed(now, &ts.xi, |q| {
                     let kind = reg
                         .record(q)
                         .map(|r| r.spec.app)
                         .unwrap_or(default_kind);
                     rel[kind.index()]
-                })
+                });
+                span_end(&self.obs, Scope::BatchPoll, sp);
+                poll
             };
             match poll {
                 BatcherPoll::Idle => return,
@@ -1039,6 +1242,7 @@ impl MultiQueryDes {
                     // buffer is engine-owned scratch, so the filter
                     // allocates nothing in steady state.
                     if self.cfg.drops_enabled {
+                        let b0 = batch.len() as u32;
                         let xib = self.tasks[task].xi.xi_eff(
                             self.batch_relsum(task, &batch),
                         );
@@ -1064,8 +1268,33 @@ impl MultiQueryDes {
                                 )
                             {
                                 let eps = (u + qdur + xib) - budget;
-                                self.drop_event(task, qe.item, eps);
+                                self.drop_event(
+                                    task,
+                                    qe.item,
+                                    Gate::Exec,
+                                    eps,
+                                    xib,
+                                    b0,
+                                );
                             } else {
+                                if self.obs.enabled()
+                                    && exempt
+                                    && budget < BUDGET_INF
+                                    && drop_at_exec(
+                                        false, u, qdur, xib, budget,
+                                    )
+                                {
+                                    self.obs.emit(
+                                        now,
+                                        &TraceEvent::Exempted {
+                                            gate: Gate::Exec,
+                                            stage: self.tasks[task]
+                                                .stage,
+                                            event: qe.item.header.id,
+                                            query: q,
+                                        },
+                                    );
+                                }
                                 kept.push(qe);
                             }
                         }
@@ -1086,6 +1315,16 @@ impl MultiQueryDes {
                             ts.node,
                         )
                     };
+                    if self.obs.enabled() {
+                        self.obs.emit(
+                            now,
+                            &TraceEvent::BatchFormed {
+                                stage: self.tasks[task].stage,
+                                task: task as u32,
+                                size: batch.len() as u32,
+                            },
+                        );
+                    }
                     let factor =
                         1.0 + self.rng.range_f64(-jitter, jitter);
                     // Compute dynamism: the *actual* duration is drawn
@@ -1137,6 +1376,28 @@ impl MultiQueryDes {
         // scaled snapshot tracks the current machine together.
         if self.online_xi {
             self.tasks[task].xi.observe_eff(rel_sum, actual);
+            self.metrics.xi_observed();
+            let ts = &self.tasks[task];
+            for k in 0..ts.rel.len() {
+                self.metrics.set_app_xi(
+                    k,
+                    stage,
+                    ts.xi.scaled(ts.rel[k]).xi(1),
+                );
+            }
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::XiObserved {
+                        stage,
+                        task: task as u32,
+                        b_eff: rel_sum,
+                        actual_us: actual,
+                        alpha_us: ts.xi.alpha_us(),
+                        beta_us: ts.xi.beta_us(),
+                    },
+                );
+            }
         }
 
         // First pass: per-event bookkeeping (per-query budget 3-tuples,
@@ -1147,11 +1408,13 @@ impl MultiQueryDes {
         let mut meta = std::mem::take(&mut self.meta_scratch);
         staged.clear();
         meta.clear();
+        let mut queue_sum: Micros = 0;
         for qe in batch.drain(..) {
             let mut ev = qe.item;
             let q = ev.header.query;
             let cam = ev.header.camera;
             let qdur = start - qe.arrival;
+            queue_sum += qdur;
             let u = qe.arrival - ev.header.src_arrival;
             let pi = qdur + actual;
             let slot = self.topo.downstream_slot(task, cam);
@@ -1175,6 +1438,23 @@ impl MultiQueryDes {
             meta.push((u, pi, slot));
         }
         self.tasks[task].batcher.recycle(batch);
+        self.metrics.batch_executed(
+            stage,
+            b,
+            queue_sum / (b.max(1) as Micros),
+        );
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::BatchExecuted {
+                    stage,
+                    task: task as u32,
+                    size: b as u32,
+                    est_us: xi_est,
+                    actual_us: actual,
+                },
+            );
+        }
 
         // Module user-logic: dispatch each maximal run of same-query
         // events to *that query's* block, in arrival order — one
@@ -1182,6 +1462,7 @@ impl MultiQueryDes {
         // shared engine RNG in event order, the RNG stream is identical
         // to whole-batch dispatch when all queries run the same app.
         {
+            let sp = span_begin(&self.obs);
             let truth = MqTruth { ctx: &self.ctx };
             let mut sim = SimCtx {
                 rng: &mut self.rng,
@@ -1230,6 +1511,7 @@ impl MultiQueryDes {
                 }
                 i = j;
             }
+            span_end(&self.obs, Scope::Scoring, sp);
         }
 
         // Drop point 3 against each event's per-query downstream
@@ -1246,8 +1528,30 @@ impl MultiQueryDes {
                     && drop_at_transmit(exempt, u, pi, budget)
                 {
                     let eps = (u + pi) - budget;
-                    self.drop_event(task, ev, eps);
+                    self.drop_event(
+                        task,
+                        ev,
+                        Gate::Transmit,
+                        eps,
+                        pi,
+                        b as u32,
+                    );
                     continue;
+                }
+                if self.obs.enabled()
+                    && exempt
+                    && budget < BUDGET_INF
+                    && drop_at_transmit(false, u, pi, budget)
+                {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::Exempted {
+                            gate: Gate::Transmit,
+                            stage,
+                            event: ev.header.id,
+                            query: ev.header.query,
+                        },
+                    );
                 }
             }
             outgoing.push(ev);
@@ -1317,10 +1621,37 @@ impl MultiQueryDes {
     /// signals upstream (scoped to the same query) and forward every
     /// k-th drop as a probe. Takes the event by value: probes reuse
     /// the dropped event instead of cloning it.
-    fn drop_event(&mut self, task: usize, ev: Event, eps: Micros) {
+    /// `gate`/`xi_us`/`batch` describe the verdict for the trace: the
+    /// gate charged `xi_us` against the budget at batch size `batch`
+    /// and came up `eps` short.
+    fn drop_event(
+        &mut self,
+        task: usize,
+        ev: Event,
+        gate: Gate,
+        eps: Micros,
+        xi_us: Micros,
+        batch: u32,
+    ) {
         let stage = self.tasks[task].stage;
         let q = ev.header.query;
         self.ledgers.dropped(q, ev.header.id, stage);
+        self.metrics.dropped(gate);
+        self.metrics.query_dropped(q);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Drop {
+                    gate,
+                    stage,
+                    event: ev.header.id,
+                    query: q,
+                    batch,
+                    eps_us: eps,
+                    xi_us,
+                },
+            );
+        }
         self.tasks[task].drop_count += 1;
 
         let cam = ev.header.camera;
@@ -1409,6 +1740,7 @@ impl MultiQueryDes {
             Payload::Detection { detected: true, .. }
         );
         if detected {
+            self.metrics.detection();
             if let Some(ctx) = self.ctx.get_mut(&q) {
                 ctx.detections += 1;
             }
@@ -1443,6 +1775,20 @@ impl MultiQueryDes {
         }
         self.ledgers
             .completed(q, ev.header.id, latency, gamma, detected);
+        self.metrics.completed(latency <= gamma);
+        self.metrics.query_completed(q, latency <= gamma);
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Completed {
+                    event: ev.header.id,
+                    query: q,
+                    latency_us: latency,
+                    on_time: latency <= gamma,
+                    detected,
+                },
+            );
+        }
 
         if let Some((seq, size)) = batch {
             let entry = self
@@ -1480,6 +1826,16 @@ impl MultiQueryDes {
         camera: usize,
     ) {
         let refinement = self.router.refine(q, embedding);
+        self.metrics.refinement();
+        if self.obs.enabled() {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::RefinementApplied {
+                    query: q,
+                    seq: refinement.seq,
+                },
+            );
+        }
         let lat = self
             .net
             .transfer_estimate(self.net.meta_bytes, self.now);
@@ -1547,12 +1903,27 @@ impl MultiQueryDes {
             let q = self.active[qi];
             self.refresh_active_set(q);
         }
+        self.metrics
+            .set_active_cameras(self.active_cameras_total());
+        if self.cfg.obs.per_second_metrics {
+            self.metrics.mark_second(self.now / SEC);
+        }
     }
 
     fn refresh_active_set(&mut self, q: QueryId) {
         let mut active = std::mem::take(&mut self.active_scratch);
+        let mut spotlight_changed = None;
         if let Some(ctx) = self.ctx.get_mut(&q) {
+            // Count the query's prior activation only when a sink will
+            // actually see the Spotlight event.
+            let prior = if self.obs.enabled() {
+                ctx.active_cams.iter().filter(|&&a| a).count()
+            } else {
+                usize::MAX
+            };
+            let sp = span_begin(&self.obs);
             ctx.tl.active_set_into(&self.graph, self.now, &mut active);
+            span_end(&self.obs, Scope::SpotlightExpand, sp);
             ctx.peak_active = ctx.peak_active.max(active.len());
             for a in ctx.active_cams.iter_mut() {
                 *a = false;
@@ -1560,6 +1931,15 @@ impl MultiQueryDes {
             for &cam in &active {
                 ctx.active_cams[cam] = true;
             }
+            if self.obs.enabled() && active.len() != prior {
+                spotlight_changed = Some(active.len() as u32);
+            }
+        }
+        if let Some(n) = spotlight_changed {
+            self.obs.emit(
+                self.now,
+                &TraceEvent::Spotlight { query: q, active: n },
+            );
         }
         self.active_scratch = active;
     }
@@ -1597,6 +1977,8 @@ impl MultiQueryDes {
             queued: self.ever_queued as usize,
             fusion_updates: self.fusion_updates,
             core_events: self.core.dispatched(),
+            metrics: self.metrics.snapshot(),
+            rng_draws: self.rng.draws(),
         }
     }
 }
@@ -1618,6 +2000,17 @@ pub fn run_app(
     app: &AppDefinition,
 ) -> MultiQueryResult {
     MultiQueryDes::with_app(cfg, mq, app).run()
+}
+
+/// Run the stock application with an explicit trace sink — the
+/// flight-recorder entry point (`harness trace`, obs property tests).
+pub fn run_with_sink<S: ObsSink>(
+    cfg: ExperimentConfig,
+    mq: MultiQueryConfig,
+    sink: S,
+) -> MultiQueryResult {
+    let app = crate::apps::resolve(&cfg);
+    MultiQueryDes::with_app_sink(cfg, mq, &app, sink).run()
 }
 
 #[cfg(test)]
@@ -1749,6 +2142,56 @@ mod tests {
         assert_eq!(r.aggregate.generated, r2.aggregate.generated);
         assert_eq!(r.aggregate.on_time, r2.aggregate.on_time);
         assert_eq!(r.aggregate.dropped, r2.aggregate.dropped);
+    }
+
+    #[test]
+    fn mq_metrics_agree_with_ledgers() {
+        let mut cfg = base_cfg();
+        cfg.cluster.cr_instances = 2;
+        cfg.drops_enabled = true;
+        let r = run(cfg, mq_cfg(4));
+        let m = &r.metrics;
+        assert_eq!(m.generated, r.aggregate.generated);
+        assert_eq!(m.on_time, r.aggregate.on_time);
+        assert_eq!(m.delayed, r.aggregate.delayed);
+        assert_eq!(m.dropped_total(), r.aggregate.dropped);
+        assert!(r.rng_draws > 0);
+        // Per-query counters reconcile with the per-query ledgers.
+        for q in r.activated() {
+            let s = q.summary.as_ref().unwrap();
+            let (_, c) = m
+                .per_query
+                .iter()
+                .find(|(id, _)| *id == q.id)
+                .expect("activated query has metric counters");
+            assert_eq!(c.generated, s.generated, "query {}", q.id);
+            assert_eq!(c.on_time, s.on_time, "query {}", q.id);
+            assert_eq!(c.delayed, s.delayed, "query {}", q.id);
+            assert_eq!(c.dropped, s.dropped, "query {}", q.id);
+        }
+        // Per-second rows are cumulative and cover the service window.
+        assert!(m.seconds.len() > 30, "{}", m.seconds.len());
+        for w in m.seconds.windows(2) {
+            assert!(w[1].generated >= w[0].generated);
+        }
+    }
+
+    #[test]
+    fn ring_sink_run_is_bit_identical_to_null() {
+        use crate::obs::RingSink;
+        let mut cfg = base_cfg();
+        cfg.drops_enabled = true;
+        let base = run(cfg.clone(), mq_cfg(3));
+        let ring = RingSink::default();
+        let traced =
+            super::run_with_sink(cfg, mq_cfg(3), ring.clone());
+        assert_eq!(base.aggregate.generated, traced.aggregate.generated);
+        assert_eq!(base.aggregate.on_time, traced.aggregate.on_time);
+        assert_eq!(base.aggregate.delayed, traced.aggregate.delayed);
+        assert_eq!(base.aggregate.dropped, traced.aggregate.dropped);
+        assert_eq!(base.rng_draws, traced.rng_draws);
+        assert_eq!(base.core_events, traced.core_events);
+        assert!(ring.total() > 0, "recorder saw the run");
     }
 
     #[test]

@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::apps::{AppCatalog, AppDefinition};
-use crate::config::{ExperimentConfig, SemanticsConfig};
+use crate::config::{AppKind, ExperimentConfig, SemanticsConfig};
 use crate::dataflow::{
     boosted_rates, AnalyticsBlock, Event, FeedbackRouter,
     FeedbackState, FilterControl, Header, ModelVariant, Partitioner,
@@ -50,6 +50,10 @@ use crate::dataflow::{
     TrackingLogic,
 };
 use crate::metrics::{QueryLedgers, Summary};
+use crate::obs::{
+    span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
+    NullSink, ObsSink, QueryPhase, Scope, TraceEvent,
+};
 use crate::roadnet::{generate, place_cameras, Camera, Graph};
 use crate::service::admission::{
     Admission, AdmissionController, AdmissionPolicy,
@@ -217,7 +221,11 @@ impl ScoreBackend for SimBackend {
 /// per query).
 enum Msg {
     Ev(Event),
-    Register(QueryId, u32, AnalyticsBlock),
+    /// `(query, weight, app index, ξ cost multiplier, block)` — the
+    /// multiplier is the query's app service cost relative to the
+    /// engine default at this worker's stage (exactly 1.0 for the
+    /// default app), ported from the DES engines' per-app ξ pricing.
+    Register(QueryId, u32, usize, f64, AnalyticsBlock),
     RegisterQf(QueryId, Box<dyn QueryFusion>),
     Deregister(QueryId),
     Stop,
@@ -299,6 +307,12 @@ struct Inner {
     state: Mutex<State>,
     start: Instant,
     stopping: AtomicBool,
+    /// Shared trace sink (threads hold the service's `Inner`, so one
+    /// dyn handle serves the feed loop, every worker and the sink).
+    obs: Arc<dyn ObsSink>,
+    /// Always-on counters/gauges/histograms, snapshotable mid-run via
+    /// [`TrackingService::metrics_snapshot`].
+    metrics: MetricsRegistry,
 }
 
 impl Inner {
@@ -319,12 +333,28 @@ struct Channels {
 
 impl Channels {
     /// Announce a freshly admitted query everywhere, minting one block
-    /// per worker from the query's own app.
-    fn register(&self, app: &AppDefinition, id: QueryId, weight: u32) {
+    /// per worker from the query's own app. Each worker also learns
+    /// the query's ξ cost multiplier at its stage (the app's service
+    /// cost relative to the catalog default — the same `stage_rel`
+    /// scaling the DES engines price per-app ξ with), so the live gate
+    /// and batch pricing charge this query's own composition.
+    fn register(
+        &self,
+        catalog: &AppCatalog,
+        kind: AppKind,
+        id: QueryId,
+        weight: u32,
+    ) {
+        let app = catalog.get(kind);
+        let default = catalog.get(catalog.default_kind());
+        let rel_va = app.va_cost / default.va_cost.max(1e-9);
+        let rel_cr = app.cr_cost / default.cr_cost.max(1e-9);
         for tx in &self.va {
             let _ = tx.send(Msg::Register(
                 id,
                 weight,
+                kind.index(),
+                rel_va,
                 AnalyticsBlock::Va(app.make_va()),
             ));
         }
@@ -332,6 +362,8 @@ impl Channels {
             let _ = tx.send(Msg::Register(
                 id,
                 weight,
+                kind.index(),
+                rel_cr,
                 AnalyticsBlock::Cr(app.make_cr()),
             ));
         }
@@ -371,8 +403,17 @@ fn admit_locked(
         id,
         spec.initial_camera_estimate(inner.cfg.num_cameras),
     ));
-    let app = inner.catalog.get(spec.app);
-    channels.register(app, id, spec.weight());
+    channels.register(&inner.catalog, spec.app, id, spec.weight());
+    inner.metrics.set_active_queries(st.registry.num_active());
+    if inner.obs.enabled() {
+        inner.obs.emit(
+            now,
+            &TraceEvent::QueryLifecycle {
+                query: id,
+                phase: QueryPhase::Activated,
+            },
+        );
+    }
 }
 
 /// Phase B — build the query's runtime context (entity walk, ground
@@ -497,6 +538,9 @@ pub struct ServiceReport {
     /// Query-embedding refinements by the app's QF block.
     pub fusion_updates: u64,
     pub wall_secs: f64,
+    /// Final metrics-registry snapshot (also observable mid-run via
+    /// [`TrackingService::metrics_snapshot`]).
+    pub metrics: MetricsSnapshot,
 }
 
 /// The running multi-query service.
@@ -526,6 +570,18 @@ impl TrackingService {
         Self::start_with_app(cfg, policy, backend, &app)
     }
 
+    /// Start the service with an explicit trace sink — the
+    /// flight-recorder entry point for the live path.
+    pub fn start_with_sink(
+        cfg: ExperimentConfig,
+        policy: AdmissionPolicy,
+        backend: Arc<dyn ScoreBackend>,
+        sink: Arc<dyn ObsSink>,
+    ) -> Result<Self> {
+        let app = crate::apps::resolve(&cfg);
+        Self::start_inner(cfg, policy, backend, &app, sink)
+    }
+
     /// Start the shared workers and the feed loop for an arbitrary
     /// [`AppDefinition`]; returns immediately. `cfg` describes the
     /// camera network and worker counts; queries are then submitted at
@@ -539,6 +595,16 @@ impl TrackingService {
         policy: AdmissionPolicy,
         backend: Arc<dyn ScoreBackend>,
         app: &AppDefinition,
+    ) -> Result<Self> {
+        Self::start_inner(cfg, policy, backend, app, Arc::new(NullSink))
+    }
+
+    fn start_inner(
+        cfg: ExperimentConfig,
+        policy: AdmissionPolicy,
+        backend: Arc<dyn ScoreBackend>,
+        app: &AppDefinition,
+        obs: Arc<dyn ObsSink>,
     ) -> Result<Self> {
         let graph = generate(&cfg.workload, cfg.seed);
         let cams = place_cameras(
@@ -568,6 +634,8 @@ impl TrackingService {
             graph,
             cams,
             cfg,
+            obs,
+            metrics: MetricsRegistry::new(),
         });
         let cfg = &inner.cfg;
         let max_batch_delay = millis(250.0).min(cfg.gamma());
@@ -584,7 +652,7 @@ impl TrackingService {
         // app; per-query blocks arrive via Msg::Register.
         let mut cr_tx = Vec::new();
         let mut cr_workers = Vec::new();
-        for _ in 0..n_cr {
+        for wi in 0..n_cr {
             let (tx, rx) = mpsc::channel::<Msg>();
             cr_tx.push(tx);
             let out = sink_tx.clone();
@@ -597,6 +665,7 @@ impl TrackingService {
             cr_workers.push(std::thread::spawn(move || {
                 worker_loop(
                     Stage::Cr,
+                    wi as u32,
                     block,
                     rx,
                     inner_c,
@@ -614,7 +683,7 @@ impl TrackingService {
         // VA workers → CR workers.
         let mut va_tx = Vec::new();
         let mut va_workers = Vec::new();
-        for _ in 0..n_va {
+        for wi in 0..n_va {
             let (tx, rx) = mpsc::channel::<Msg>();
             va_tx.push(tx);
             let crs = cr_tx.clone();
@@ -627,6 +696,7 @@ impl TrackingService {
             va_workers.push(std::thread::spawn(move || {
                 worker_loop(
                     Stage::Va,
+                    wi as u32,
                     block,
                     rx,
                     inner_c,
@@ -701,6 +771,15 @@ impl TrackingService {
             st.active_cameras_total(),
             self.inner.cfg.num_cameras,
         );
+        if self.inner.obs.enabled() {
+            self.inner.obs.emit(
+                now,
+                &TraceEvent::QueryLifecycle {
+                    query: id,
+                    phase: QueryPhase::Submitted,
+                },
+            );
+        }
         match decision {
             Admission::Admit => {
                 admit_locked(
@@ -719,13 +798,38 @@ impl TrackingService {
             }
             Admission::Queue => {
                 st.registry.enqueue(id).map_err(|e| anyhow!(e))?;
+                if self.inner.obs.enabled() {
+                    self.inner.obs.emit(
+                        now,
+                        &TraceEvent::QueryLifecycle {
+                            query: id,
+                            phase: QueryPhase::Queued,
+                        },
+                    );
+                }
                 Ok((id, QueryStatus::Queued))
             }
             Admission::Reject(_reason) => {
                 st.registry.reject(id, now).map_err(|e| anyhow!(e))?;
+                if self.inner.obs.enabled() {
+                    self.inner.obs.emit(
+                        now,
+                        &TraceEvent::QueryLifecycle {
+                            query: id,
+                            phase: QueryPhase::Rejected,
+                        },
+                    );
+                }
                 Ok((id, QueryStatus::Rejected))
             }
         }
+    }
+
+    /// Point-in-time snapshot of the service's metrics registry —
+    /// observable while the service is running (counters are plain
+    /// atomics; no lock is taken and no worker is stalled).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.inner.metrics.snapshot()
     }
 
     /// Cancel a submitted/queued/active query; frees its capacity and
@@ -735,6 +839,18 @@ impl TrackingService {
         let mut st = self.inner.state.lock().unwrap();
         st.registry.cancel(id, now).map_err(|e| anyhow!(e))?;
         st.release_reservation(id);
+        self.inner
+            .metrics
+            .set_active_queries(st.registry.num_active());
+        if self.inner.obs.enabled() {
+            self.inner.obs.emit(
+                now,
+                &TraceEvent::QueryLifecycle {
+                    query: id,
+                    phase: QueryPhase::Cancelled,
+                },
+            );
+        }
         if let Some(ctx) = st.take_ctx(id) {
             st.finished_stats
                 .push((id, (ctx.detections, ctx.peak_active)));
@@ -819,6 +935,7 @@ impl TrackingService {
             peak_concurrent: st.peak_concurrent,
             fusion_updates,
             wall_secs: wall,
+            metrics: self.inner.metrics.snapshot(),
         }
     }
 }
@@ -877,19 +994,39 @@ fn feed_loop(
                     ));
                 }
                 channels.deregister(*q);
+                if inner.obs.enabled() {
+                    inner.obs.emit(
+                        now,
+                        &TraceEvent::QueryLifecycle {
+                            query: *q,
+                            phase: QueryPhase::Completed,
+                        },
+                    );
+                }
             }
             if !expired.is_empty() {
+                inner
+                    .metrics
+                    .set_active_queries(st.registry.num_active());
                 admitted =
                     promote_locked(&inner, &mut st, &channels, now);
             }
             // Refresh spotlights and snapshot what the lock-free pass
             // needs.
+            let mut cams_total = 0usize;
             for (q, ctx) in st.ctx.iter_mut() {
+                let prior = if inner.obs.enabled() {
+                    ctx.active_cams.iter().filter(|&&a| a).count()
+                } else {
+                    usize::MAX
+                };
+                let sp = span_begin(&*inner.obs);
                 ctx.tl.active_set_into(
                     &inner.graph,
                     now,
                     &mut active_buf,
                 );
+                span_end(&*inner.obs, Scope::SpotlightExpand, sp);
                 ctx.peak_active =
                     ctx.peak_active.max(active_buf.len());
                 for a in ctx.active_cams.iter_mut() {
@@ -898,7 +1035,18 @@ fn feed_loop(
                 for &cam in &active_buf {
                     ctx.active_cams[cam] = true;
                 }
+                cams_total += active_buf.len();
+                if inner.obs.enabled() && active_buf.len() != prior {
+                    inner.obs.emit(
+                        now,
+                        &TraceEvent::Spotlight {
+                            query: *q,
+                            active: active_buf.len() as u32,
+                        },
+                    );
+                }
             }
+            inner.metrics.set_active_cameras(cams_total);
             for (q, ctx) in st.ctx.iter() {
                 let kind = st
                     .registry
@@ -952,6 +1100,18 @@ fn feed_loop(
                 let header = Header::new(id, cam, frame_no, now)
                     .with_query(q);
                 st.ledgers.generated(q, id, present);
+                inner.metrics.generated();
+                inner.metrics.query_generated(q);
+                if inner.obs.enabled() {
+                    inner.obs.emit(
+                        now,
+                        &TraceEvent::Generated {
+                            event: id,
+                            query: q,
+                            camera: cam as u32,
+                        },
+                    );
+                }
                 outgoing.push(Event {
                     header,
                     payload: Payload::Frame {
@@ -988,6 +1148,12 @@ struct WorkerState {
     blocks: FastMap<QueryId, AnalyticsBlock>,
     /// Stale-discarding view of routed QF refinements.
     feedback: FeedbackState,
+    /// Each query's ξ cost multiplier at this worker's stage (its
+    /// app's service cost relative to the default app; 1.0 for
+    /// unknown/late queries) — the live port of the DES engines'
+    /// per-app ξ pricing. Drives both the admission drop gate and the
+    /// effective batch duration.
+    rels: FastMap<QueryId, f64>,
 }
 
 /// Shared executor loop: fair-share batching + backend scoring, with
@@ -995,6 +1161,7 @@ struct WorkerState {
 /// (`default_block` serves late events of already-retired queries).
 fn worker_loop(
     stage: Stage,
+    task: u32,
     mut default_block: AnalyticsBlock,
     rx: Receiver<Msg>,
     inner: Arc<Inner>,
@@ -1017,6 +1184,7 @@ fn worker_loop(
         batcher: FairShareBatcher::new(m_max.max(1)),
         blocks: FastMap::default(),
         feedback: FeedbackState::new(),
+        rels: FastMap::default(),
     };
     let mut scratch = BatchScratch::default();
 
@@ -1032,22 +1200,48 @@ fn worker_loop(
     ) -> bool {
         match msg {
             Msg::Stop => false,
-            Msg::Register(q, w, block) => {
+            Msg::Register(q, w, app_idx, rel, block) => {
                 ws.batcher.register(q, w);
                 ws.blocks.insert(q, block);
+                ws.rels.insert(q, rel);
+                // Publish the ξ(1) price this stage charges the app —
+                // the per-app ξ gauges.
+                inner.metrics.set_app_xi(
+                    app_idx,
+                    stage,
+                    ((xi.xi(1) as f64) * rel).round() as Micros,
+                );
                 true
             }
             Msg::RegisterQf(..) => true, // sink-only
             Msg::Deregister(q) => {
                 let left = ws.batcher.deregister(q);
                 if !left.is_empty() {
+                    let now = inner.now_us();
                     let mut st = inner.state.lock().unwrap();
                     for qe in left {
                         st.ledgers.dropped(q, qe.item.header.id, stage);
+                        inner.metrics.dropped(Gate::Drain);
+                        inner.metrics.query_dropped(q);
+                        if inner.obs.enabled() {
+                            inner.obs.emit(
+                                now,
+                                &TraceEvent::Drop {
+                                    gate: Gate::Drain,
+                                    stage,
+                                    event: qe.item.header.id,
+                                    query: q,
+                                    batch: 1,
+                                    eps_us: 0,
+                                    xi_us: 0,
+                                },
+                            );
+                        }
                     }
                 }
                 ws.blocks.remove(&q);
                 ws.feedback.forget(q);
+                ws.rels.remove(&q);
                 true
             }
             Msg::Ev(ev) => {
@@ -1072,8 +1266,14 @@ fn worker_loop(
                 let q = ev.header.query;
                 let u = now - ev.header.src_arrival;
                 let exempt = ev.header.avoid_drop || ev.header.probe;
+                // Gate 1 prices the event under *its* app's ξ — the
+                // engine-level stage model scaled by the query's
+                // registered cost multiplier (1.0 for the default app
+                // and for late events of retired queries).
+                let rel = ws.rels.get(&q).copied().unwrap_or(1.0);
+                let xi1 = ((xi.xi(1) as f64) * rel).round() as Micros;
                 if drops_enabled
-                    && drop_at_queue(exempt, u, xi.xi(1), gamma)
+                    && drop_at_queue(exempt, u, xi1, gamma)
                 {
                     inner
                         .state
@@ -1081,7 +1281,38 @@ fn worker_loop(
                         .unwrap()
                         .ledgers
                         .dropped(q, ev.header.id, stage);
+                    inner.metrics.dropped(Gate::Queue);
+                    inner.metrics.query_dropped(q);
+                    if inner.obs.enabled() {
+                        inner.obs.emit(
+                            now,
+                            &TraceEvent::Drop {
+                                gate: Gate::Queue,
+                                stage,
+                                event: ev.header.id,
+                                query: q,
+                                batch: 1,
+                                eps_us: (u + xi1) - gamma,
+                                xi_us: xi1,
+                            },
+                        );
+                    }
                     return true;
+                }
+                if inner.obs.enabled()
+                    && exempt
+                    && drops_enabled
+                    && drop_at_queue(false, u, xi1, gamma)
+                {
+                    inner.obs.emit(
+                        now,
+                        &TraceEvent::Exempted {
+                            gate: Gate::Queue,
+                            stage,
+                            event: ev.header.id,
+                            query: q,
+                        },
+                    );
                 }
                 let deadline = ev.header.src_arrival + deadline_window;
                 let id = ev.header.id;
@@ -1104,6 +1335,22 @@ fn worker_loop(
                         .unwrap()
                         .ledgers
                         .dropped(q, qe.item.header.id, stage);
+                    inner.metrics.dropped(Gate::Drain);
+                    inner.metrics.query_dropped(q);
+                    if inner.obs.enabled() {
+                        inner.obs.emit(
+                            now,
+                            &TraceEvent::Drop {
+                                gate: Gate::Drain,
+                                stage,
+                                event: qe.item.header.id,
+                                query: q,
+                                batch: 1,
+                                eps_us: 0,
+                                xi_us: 0,
+                            },
+                        );
+                    }
                 }
                 true
             }
@@ -1112,16 +1359,22 @@ fn worker_loop(
 
     'outer: loop {
         let now = inner.now_us();
-        match ws.batcher.poll(now, &xi) {
+        let sp = span_begin(&*inner.obs);
+        let poll = ws.batcher.poll(now, &xi);
+        span_end(&*inner.obs, Scope::BatchPoll, sp);
+        match poll {
             BatcherPoll::Ready(batch) => {
                 let spare = exec_batch(
                     stage,
+                    task,
                     batch,
                     &mut ws.blocks,
                     &mut default_block,
                     &ws.feedback,
+                    &ws.rels,
                     backend.as_ref(),
                     &xi,
+                    &inner,
                     &mut scratch,
                     &mut forward,
                 );
@@ -1193,12 +1446,15 @@ fn worker_loop(
             BatcherPoll::Ready(batch) => {
                 let spare = exec_batch(
                     stage,
+                    task,
                     batch,
                     &mut ws.blocks,
                     &mut default_block,
                     &ws.feedback,
+                    &ws.rels,
                     backend.as_ref(),
                     &xi,
+                    &inner,
                     &mut scratch,
                     &mut forward,
                 );
@@ -1228,12 +1484,15 @@ struct BatchScratch {
 /// to recycle into its batcher.
 fn exec_batch(
     stage: Stage,
+    task: u32,
     mut batch: Vec<QueuedEvent<Event>>,
     blocks: &mut FastMap<QueryId, AnalyticsBlock>,
     default_block: &mut AnalyticsBlock,
     feedback: &FeedbackState,
+    rels: &FastMap<QueryId, f64>,
     backend: &dyn ScoreBackend,
     xi: &XiModel,
+    inner: &Inner,
     scratch: &mut BatchScratch,
     forward: &mut impl FnMut(Event),
 ) -> Vec<QueuedEvent<Event>> {
@@ -1241,12 +1500,42 @@ fn exec_batch(
         return batch;
     }
     let b = batch.len();
-    let dur = xi.xi(b).clamp(0, 50_000);
+    let now = inner.now_us();
+    // Effective batch size: Σ of per-app cost multipliers (exactly b
+    // for a homogeneous default-app batch) — the same §4.4 pricing the
+    // DES engines use.
+    let relsum: f64 = batch
+        .iter()
+        .map(|qe| {
+            rels.get(&qe.item.header.query).copied().unwrap_or(1.0)
+        })
+        .sum();
+    let queue_sum: Micros = batch
+        .iter()
+        .map(|qe| (now - qe.arrival).max(0))
+        .sum();
+    if inner.obs.enabled() {
+        inner.obs.emit(
+            now,
+            &TraceEvent::BatchFormed {
+                stage,
+                task,
+                size: b as u32,
+            },
+        );
+    }
+    let dur = xi.xi_eff(relsum).clamp(0, 50_000);
     std::thread::sleep(Duration::from_micros(dur as u64));
+    inner.metrics.batch_executed(
+        stage,
+        b,
+        queue_sum / (b.max(1) as Micros),
+    );
 
     // Group events by query — a stable sort preserves per-query FIFO
     // order — then score + transform each query group with its own
     // block (scores reuse one columnar scratch buffer per group).
+    let sp = span_begin(&*inner.obs);
     let events = &mut scratch.events;
     events.clear();
     events.extend(batch.drain(..).map(|qe| qe.item));
@@ -1282,6 +1571,19 @@ fn exec_batch(
             &ScoreParams { threshold: 0.5 },
         );
         start = end;
+    }
+    span_end(&*inner.obs, Scope::Scoring, sp);
+    if inner.obs.enabled() {
+        inner.obs.emit(
+            now,
+            &TraceEvent::BatchExecuted {
+                stage,
+                task,
+                size: b as u32,
+                est_us: dur,
+                actual_us: dur,
+            },
+        );
     }
     for ev in events.drain(..) {
         forward(ev);
@@ -1340,6 +1642,23 @@ fn sink_loop(
                         );
                     }
                 }
+                inner.metrics.completed(latency <= gamma);
+                inner.metrics.query_completed(q, latency <= gamma);
+                if detected {
+                    inner.metrics.detection();
+                }
+                if inner.obs.enabled() {
+                    inner.obs.emit(
+                        now,
+                        &TraceEvent::Completed {
+                            event: ev.header.id,
+                            query: q,
+                            latency_us: latency,
+                            on_time: latency <= gamma,
+                            detected,
+                        },
+                    );
+                }
                 // QF user-logic, outside the state lock. One lookup
                 // serves both the refinement check and the embedding
                 // read.
@@ -1362,6 +1681,16 @@ fn sink_loop(
                     *counts.entry(q).or_insert(0) += 1;
                     if let Some(emb) = refinement {
                         let r = router.refine(q, emb);
+                        inner.metrics.refinement();
+                        if inner.obs.enabled() {
+                            inner.obs.emit(
+                                now,
+                                &TraceEvent::RefinementApplied {
+                                    query: q,
+                                    seq: r.seq,
+                                },
+                            );
+                        }
                         let upd = r.into_event(
                             ev.header.id,
                             ev.header.camera,
@@ -1511,6 +1840,33 @@ mod tests {
         assert_eq!(svc.status(b), Some(QueryStatus::Active));
         let report = svc.stop();
         assert_eq!(report.peak_concurrent, 1);
+    }
+
+    #[test]
+    fn metrics_snapshot_reconciles_with_report() {
+        let svc = TrackingService::start(
+            small_cfg(),
+            policy(8, 4),
+            Arc::new(SimBackend::default()),
+        )
+        .unwrap();
+        let (_a, _) = svc.submit(spec("alpha", 0, 0.6)).unwrap();
+        std::thread::sleep(Duration::from_millis(900));
+        // Mid-run snapshot must be available without stalling workers.
+        let mid = svc.metrics_snapshot();
+        let report = svc.stop();
+        let m = &report.metrics;
+        let s = &report.aggregate;
+        assert_eq!(m.generated, s.generated);
+        assert_eq!(m.on_time, s.on_time);
+        assert_eq!(m.delayed, s.delayed);
+        assert_eq!(m.dropped_total(), s.dropped);
+        assert!(mid.generated <= m.generated);
+        // The live front charges the default app rel = 1.0, so its
+        // published ξ(1) gauge equals the backend's engine-level price.
+        let backend = SimBackend::default();
+        assert_eq!(m.xi_app_us[0][0], backend.va_xi.xi(1));
+        assert_eq!(m.xi_app_us[0][1], backend.cr_xi.xi(1));
     }
 
     #[test]

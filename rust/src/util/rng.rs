@@ -11,6 +11,10 @@ pub struct Rng {
     s: [u64; 4],
     /// Cached second Box-Muller sample.
     gauss_spare: Option<f64>,
+    /// Raw `next_u64` invocations since seeding — the observability
+    /// determinism contract ("NullSink/RingSink runs draw exactly as
+    /// often as a no-obs run") is asserted against this counter.
+    draws: u64,
 }
 
 fn splitmix64(state: &mut u64) -> u64 {
@@ -33,10 +37,17 @@ impl Rng {
                 splitmix64(&mut sm),
             ],
             gauss_spare: None,
+            draws: 0,
         }
     }
 
+    /// Number of raw `next_u64` draws since seeding.
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
     pub fn next_u64(&mut self) -> u64 {
+        self.draws += 1;
         let result = self.s[1]
             .wrapping_mul(5)
             .rotate_left(7)
@@ -116,6 +127,20 @@ mod tests {
         }
         let mut c = Rng::seed_from_u64(8);
         assert_ne!(Rng::seed_from_u64(7).next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn draw_counter_counts_raw_draws() {
+        let mut r = Rng::seed_from_u64(11);
+        assert_eq!(r.draws(), 0);
+        r.next_u64();
+        r.f64();
+        assert_eq!(r.draws(), 2);
+        // gauss draws two uniforms, then serves the spare for free.
+        r.gauss();
+        assert_eq!(r.draws(), 4);
+        r.gauss();
+        assert_eq!(r.draws(), 4);
     }
 
     #[test]

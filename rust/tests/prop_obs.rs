@@ -1,0 +1,289 @@
+//! Property tests over the observability layer (hand-rolled generator
+//! loops; see `prop_tuning.rs` for the house style).
+//!
+//! The contract under test is the flight recorder's reason for
+//! existing: *observation must not perturb the observed run*.
+//!
+//! * Attaching `NullSink` (the default) or a `RingSink` flight
+//!   recorder to either DES engine leaves the run bit-identical per
+//!   seed — every summary field, the detection count, the core
+//!   event count and the RNG draw count all equal the plain build's.
+//! * A JSONL trace reconciles *exactly* with the run's ledger:
+//!   trace-implied generated/completed/dropped/in-flight counts equal
+//!   the `Ledger`/`QueryLedgers` totals, and conservation holds per
+//!   event (exactly one terminal per generated event, never two).
+//! * `RingSink` wraparound never aliases slots or loses the newest
+//!   events, for any emission count and any (prime) capacity.
+
+use anveshak::config::{BatchingKind, ExperimentConfig, TlKind};
+use anveshak::coordinator::des;
+use anveshak::metrics::Summary;
+use anveshak::obs::{
+    validate_trace, JsonlSink, NullSink, RingSink, TraceEvent,
+};
+use anveshak::service::engine;
+use anveshak::util::{rng, Micros, Rng};
+
+fn cases(seed: u64, n: usize) -> impl Iterator<Item = Rng> {
+    (0..n).map(move |i| rng(seed, i as u64))
+}
+
+/// A small-but-busy single-query workload: big enough to exercise
+/// batching, drops and the budget loop, small enough to run many
+/// seeds in a test.
+fn small_cfg(seed: u64, drops: bool) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = format!("prop_obs_{seed}");
+    c.seed = seed;
+    c.num_cameras = 50;
+    c.workload.vertices = 50;
+    c.workload.edges = 140;
+    c.duration_secs = 30.0;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c.drops_enabled = drops;
+    c
+}
+
+fn mq_cfg(seed: u64) -> ExperimentConfig {
+    let mut c = small_cfg(seed, true);
+    c.tl = TlKind::Wbfs;
+    c.multi_query.num_queries = 3;
+    c.multi_query.mean_interarrival_secs = 5.0;
+    c.multi_query.lifetime_secs = 15.0;
+    c.multi_query.max_active = 8;
+    c.multi_query.max_active_cameras = 10_000;
+    c
+}
+
+/// `Summary` carries floats and no `PartialEq`; the determinism claim
+/// is *bit* identity, so every field — percentiles included — must
+/// compare exactly equal.
+fn assert_summaries_eq(a: &Summary, b: &Summary, ctx: &str) {
+    assert_eq!(a.generated, b.generated, "{ctx}: generated");
+    assert_eq!(a.on_time, b.on_time, "{ctx}: on_time");
+    assert_eq!(a.delayed, b.delayed, "{ctx}: delayed");
+    assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+    assert_eq!(a.in_flight, b.in_flight, "{ctx}: in_flight");
+    assert_eq!(
+        a.true_positives, b.true_positives,
+        "{ctx}: true_positives"
+    );
+    assert_eq!(
+        a.positives_dropped, b.positives_dropped,
+        "{ctx}: positives_dropped"
+    );
+    assert_eq!(
+        a.positives_generated, b.positives_generated,
+        "{ctx}: positives_generated"
+    );
+    assert_eq!(a.latency.median, b.latency.median, "{ctx}: median");
+    assert_eq!(a.latency.p25, b.latency.p25, "{ctx}: p25");
+    assert_eq!(a.latency.p75, b.latency.p75, "{ctx}: p75");
+    assert_eq!(a.latency.p99, b.latency.p99, "{ctx}: p99");
+    assert_eq!(a.latency.max, b.latency.max, "{ctx}: max");
+}
+
+// ---------------------------------------------------------------------------
+// (a) Observation does not perturb the observed run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sinks_do_not_perturb_single_query_des() {
+    for seed in [11u64, 29] {
+        for drops in [false, true] {
+            let base = des::run(small_cfg(seed, drops));
+            let null =
+                des::run_with_sink(small_cfg(seed, drops), NullSink);
+            let recorder = RingSink::new(251);
+            let ring = des::run_with_sink(
+                small_cfg(seed, drops),
+                recorder.clone(),
+            );
+            for (label, r) in [("null", &null), ("ring", &ring)] {
+                let ctx = format!("seed {seed} drops {drops} {label}");
+                assert_summaries_eq(&base.summary, &r.summary, &ctx);
+                assert_eq!(base.detections, r.detections, "{ctx}");
+                assert_eq!(base.peak_active, r.peak_active, "{ctx}");
+                assert_eq!(
+                    base.fusion_updates, r.fusion_updates,
+                    "{ctx}"
+                );
+                assert_eq!(base.core_events, r.core_events, "{ctx}");
+                assert_eq!(base.rng_draws, r.rng_draws, "{ctx}");
+            }
+            // The recorder really observed the run it didn't perturb.
+            assert!(recorder.total() > 0, "ring recorded nothing");
+        }
+    }
+}
+
+#[test]
+fn prop_sinks_do_not_perturb_multi_query_des() {
+    for seed in [7u64, 19] {
+        let cfg = mq_cfg(seed);
+        let base = des::run_multi(cfg.clone());
+        let null = engine::run_with_sink(
+            cfg.clone(),
+            cfg.multi_query.clone(),
+            NullSink,
+        );
+        let recorder = RingSink::new(251);
+        let ring = engine::run_with_sink(
+            cfg.clone(),
+            cfg.multi_query.clone(),
+            recorder.clone(),
+        );
+        for (label, r) in [("null", &null), ("ring", &ring)] {
+            let ctx = format!("seed {seed} mq {label}");
+            assert_summaries_eq(&base.aggregate, &r.aggregate, &ctx);
+            assert_eq!(base.queries.len(), r.queries.len(), "{ctx}");
+            for (bq, rq) in base.queries.iter().zip(&r.queries) {
+                match (&bq.summary, &rq.summary) {
+                    (Some(a), Some(b)) => assert_summaries_eq(
+                        a,
+                        b,
+                        &format!("{ctx} query {}", bq.label),
+                    ),
+                    (None, None) => {}
+                    _ => panic!(
+                        "{ctx}: query {} summary presence differs",
+                        bq.label
+                    ),
+                }
+            }
+            assert_eq!(
+                base.peak_concurrent, r.peak_concurrent,
+                "{ctx}"
+            );
+            assert_eq!(base.rejected, r.rejected, "{ctx}");
+            assert_eq!(base.queued, r.queued, "{ctx}");
+            assert_eq!(base.fusion_updates, r.fusion_updates, "{ctx}");
+            assert_eq!(base.core_events, r.core_events, "{ctx}");
+            assert_eq!(base.rng_draws, r.rng_draws, "{ctx}");
+        }
+        assert!(recorder.total() > 0, "ring recorded nothing");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) The trace reconciles exactly with the ledger.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_trace_reconciles_with_single_query_ledger() {
+    for seed in [5u64, 23] {
+        for drops in [false, true] {
+            let sink = JsonlSink::in_memory();
+            let r = des::run_with_sink(
+                small_cfg(seed, drops),
+                sink.clone(),
+            );
+            let text = sink.contents().unwrap();
+            let check = validate_trace(&text)
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let ctx = format!("seed {seed} drops {drops}");
+            let s = &r.summary;
+            assert_eq!(check.generated, s.generated, "{ctx}");
+            assert_eq!(
+                check.completed,
+                s.on_time + s.delayed,
+                "{ctx}"
+            );
+            assert_eq!(check.on_time, s.on_time, "{ctx}");
+            assert_eq!(check.dropped_total(), s.dropped, "{ctx}");
+            assert_eq!(check.unterminated(), s.in_flight, "{ctx}");
+            assert_eq!(check.detections, r.detections, "{ctx}");
+            assert!(
+                check.violations().is_empty(),
+                "{ctx}: conservation violations {:?}",
+                check.violations()
+            );
+            if drops && s.dropped > 0 {
+                assert!(
+                    check.drops_gate.iter().sum::<u64>() > 0,
+                    "{ctx}: drops not attributed to gates"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_trace_reconciles_with_multi_query_ledgers() {
+    for seed in [13u64, 31] {
+        let cfg = mq_cfg(seed);
+        let sink = JsonlSink::in_memory();
+        let r = engine::run_with_sink(
+            cfg.clone(),
+            cfg.multi_query.clone(),
+            sink.clone(),
+        );
+        let text = sink.contents().unwrap();
+        let check = validate_trace(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let ctx = format!("seed {seed} mq");
+        let s = &r.aggregate;
+        assert_eq!(check.generated, s.generated, "{ctx}");
+        assert_eq!(check.completed, s.on_time + s.delayed, "{ctx}");
+        assert_eq!(check.on_time, s.on_time, "{ctx}");
+        assert_eq!(check.dropped_total(), s.dropped, "{ctx}");
+        assert_eq!(check.unterminated(), s.in_flight, "{ctx}");
+        assert!(
+            check.violations().is_empty(),
+            "{ctx}: conservation violations {:?}",
+            check.violations()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) RingSink wraparound: no aliasing, no lost newest events.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_ring_wraparound_never_aliases_or_loses_newest() {
+    const PRIMES: [usize; 8] = [2, 3, 5, 7, 13, 31, 97, 251];
+    for mut r in cases(7, 200) {
+        let cap = PRIMES[r.range_u(0, PRIMES.len())];
+        let n = r.range_u(0, 4 * cap + 2) as u64;
+        let s = RingSink::new(cap);
+        for i in 0..n {
+            s.emit(
+                i as Micros,
+                &TraceEvent::Generated {
+                    event: i,
+                    query: 0,
+                    camera: (i % 7) as u32,
+                },
+            );
+        }
+        assert_eq!(s.total(), n, "cap {cap} n {n}: total");
+        let evs = s.events();
+        assert_eq!(
+            evs.len(),
+            (n as usize).min(cap),
+            "cap {cap} n {n}: retained count"
+        );
+        // Exactly the newest min(n, cap) events, oldest first,
+        // consecutive — any aliasing or loss breaks the sequence.
+        let first = n.saturating_sub(cap as u64);
+        for (k, (t, ev)) in evs.iter().enumerate() {
+            let want = first + k as u64;
+            assert_eq!(*t, want as Micros, "cap {cap} n {n} slot {k}");
+            match ev {
+                TraceEvent::Generated { event, camera, .. } => {
+                    assert_eq!(
+                        *event, want,
+                        "cap {cap} n {n} slot {k}: event id"
+                    );
+                    assert_eq!(
+                        *camera,
+                        (want % 7) as u32,
+                        "cap {cap} n {n} slot {k}: payload"
+                    );
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+    }
+}
