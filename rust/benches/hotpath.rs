@@ -56,8 +56,8 @@ use std::time::Instant;
 
 use anveshak::apps;
 use anveshak::config::{
-    AppKind, BatchingKind, ComputeEvent, ExperimentConfig, TlKind,
-    WorkloadConfig,
+    AppKind, BatchingKind, ComputeEvent, ExperimentConfig, FaultEvent,
+    FaultKind, TlKind, WorkloadConfig,
 };
 use anveshak::coordinator::des::DesEngine;
 use anveshak::dataflow::{Event, ModelVariant, Partitioner, Stage};
@@ -665,6 +665,37 @@ fn main() {
             "des.1000cam.varying_compute.online_xi",
             mk(true),
         );
+    }
+
+    println!(
+        "\n== Fault injection (mid-run node crash, recovery on/off) =="
+    );
+    {
+        // Same max-load workload and seed. The `none` row is the
+        // zero-fault control — it prices the fault-model plumbing
+        // itself and should be indistinguishable from
+        // des.1000cam.base.1q; the crash rows differ only in the
+        // recovery switch (retry/backoff + orphan re-dispatch vs
+        // write-off as lost_to_fault).
+        let mk = |crash: bool, recovery: bool| {
+            let mut c = des_cfg(smoke);
+            c.tl = TlKind::Base;
+            if crash {
+                c.service.fault_events.push(FaultEvent {
+                    // Mid-run: des_cfg is 60 s full / 10 s smoke.
+                    at_sec: if smoke { 5.0 } else { 30.0 },
+                    kind: FaultKind::NodeCrash {
+                        node: 1,
+                        down_secs: None,
+                    },
+                });
+            }
+            c.service.recovery.enabled = recovery;
+            c
+        };
+        run_des(rp, "des.1000cam.faults.none", mk(false, true));
+        run_des(rp, "des.1000cam.faults.recovery_on", mk(true, true));
+        run_des(rp, "des.1000cam.faults.recovery_off", mk(true, false));
     }
 
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");

@@ -15,8 +15,15 @@
 //!   harness trace [--smoke]     # flight recorder: run with the JSONL
 //!                               # trace sink, schema-validate the
 //!                               # trace, reconcile it with the ledger
+//!                               # (single- and multi-query engines)
 //!                               # and print drop explanations + the
 //!                               # hot-path profiling breakdown
+//!   harness faults [--smoke]    # fault-injection A/B: node 1 crashes
+//!                               # mid-run with recovery on vs off at
+//!                               # the same seed; traces of both arms
+//!                               # must reconcile (incl. lost_to_fault)
+//!                               # and recovery-on must complete
+//!                               # strictly more on-time events
 //!   harness --out DIR figN ...  # custom output directory
 //!
 //! Each figure writes CSV series under the output directory and prints
@@ -49,7 +56,7 @@ fn main() {
     };
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace [--smoke] ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults [--smoke] ..."
         );
         std::process::exit(2);
     }
@@ -94,6 +101,9 @@ fn main() {
     }
     if want("trace") {
         trace(&out_dir, smoke);
+    }
+    if want("faults") {
+        faults(&out_dir, smoke);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -144,6 +154,7 @@ fn summary_json(r: &RunResult) -> Json {
         ("on_time", (s.on_time as i64).into()),
         ("delayed", (s.delayed as i64).into()),
         ("dropped", (s.dropped as i64).into()),
+        ("lost_to_fault", (s.lost_to_fault as i64).into()),
         ("in_flight", (s.in_flight as i64).into()),
         ("median_latency_s", s.latency.median.into()),
         ("p25_latency_s", s.latency.p25.into()),
@@ -159,8 +170,13 @@ fn summary_json(r: &RunResult) -> Json {
 
 fn print_summary_row(label: &str, r: &RunResult) {
     let s = &r.summary;
+    let lost = if s.lost_to_fault > 0 {
+        format!("  lost-to-fault {:>6}", s.lost_to_fault)
+    } else {
+        String::new()
+    };
     println!(
-        "  {label:<22} gen {:>7}  on-time {:>7}  delayed {:>6} ({:>5.1}%)  dropped {:>6} ({:>5.1}%)  median {:.2}s  p99 {:.2}s  peak-cams {}",
+        "  {label:<22} gen {:>7}  on-time {:>7}  delayed {:>6} ({:>5.1}%)  dropped {:>6} ({:>5.1}%){lost}  median {:.2}s  p99 {:.2}s  peak-cams {}",
         s.generated,
         s.on_time,
         s.delayed,
@@ -617,6 +633,7 @@ fn trace(out: &Path, smoke: bool) {
         expect("completed", check.completed, s.on_time + s.delayed);
         expect("on_time", check.on_time, s.on_time);
         expect("dropped", check.dropped_total(), s.dropped);
+        expect("lost_to_fault", check.lost_to_fault, s.lost_to_fault);
         expect("in_flight", check.unterminated(), s.in_flight);
         expect("detections", check.detections, r.detections);
     }
@@ -700,6 +717,237 @@ fn trace(out: &Path, smoke: bool) {
         println!("  hot-path wall-clock breakdown:");
         print!("{spans}");
     }
+
+    // The multi-query engine under the same flight recorder: trace a
+    // service run and reconcile it against the per-query ledgers'
+    // aggregate, exactly as `tests/prop_obs.rs` does.
+    println!("  -- multi-query engine, same recorder --");
+    let mut mcfg = if smoke {
+        let mut c = ExperimentConfig::default();
+        c.name = "trace_mq_smoke".into();
+        c.num_cameras = 60;
+        c.workload.vertices = 60;
+        c.workload.edges = 160;
+        c.duration_secs = 60.0;
+        c.drops_enabled = true;
+        c.multi_query.num_queries = 3;
+        c.multi_query.mean_interarrival_secs = 5.0;
+        c.multi_query.lifetime_secs = 20.0;
+        c
+    } else {
+        let mut c = ExperimentConfig::default();
+        c.name = "trace_mq".into();
+        c.drops_enabled = true;
+        c.multi_query.num_queries = 6;
+        c.multi_query.mean_interarrival_secs = 20.0;
+        c.multi_query.lifetime_secs = 180.0;
+        c.multi_query.max_active_cameras = 8_000;
+        c
+    };
+    mcfg.multi_query.max_active = 8;
+    let mname = mcfg.name.clone();
+    let mpath = out.join("trace_mq.jsonl");
+    let msink = JsonlSink::create(&mpath).expect("create trace file");
+    eprintln!("[run] trace ({mname}) ...");
+    let start = std::time::Instant::now();
+    let mr = anveshak::service::engine::run_with_sink(
+        mcfg.clone(),
+        mcfg.multi_query.clone(),
+        msink.clone(),
+    );
+    msink.flush();
+    eprintln!(
+        "[run] trace ({mname}) done in {:.1}s ({} trace lines)",
+        start.elapsed().as_secs_f64(),
+        msink.lines()
+    );
+    let mtext =
+        std::fs::read_to_string(&mpath).expect("read trace back");
+    let mcheck = match validate_trace(&mtext) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("mq trace FAILED schema validation: {e}");
+            std::process::exit(1);
+        }
+    };
+    let a = &mr.aggregate;
+    let mut ok = true;
+    {
+        let mut expect = |what: &str, got: u64, want: u64| {
+            if got != want {
+                eprintln!(
+                    "  MISMATCH mq {what}: trace {got} != ledgers {want}"
+                );
+                ok = false;
+            }
+        };
+        expect("generated", mcheck.generated, a.generated);
+        expect("completed", mcheck.completed, a.on_time + a.delayed);
+        expect("on_time", mcheck.on_time, a.on_time);
+        expect("dropped", mcheck.dropped_total(), a.dropped);
+        expect("lost_to_fault", mcheck.lost_to_fault, a.lost_to_fault);
+        expect("in_flight", mcheck.unterminated(), a.in_flight);
+    }
+    let mviol = mcheck.violations();
+    if !mviol.is_empty() {
+        eprintln!(
+            "  MISMATCH mq conservation: {} violation(s), first {:?}",
+            mviol.len(),
+            mviol[0]
+        );
+        ok = false;
+    }
+    if !ok {
+        eprintln!("mq trace FAILED ledger reconciliation");
+        std::process::exit(1);
+    }
+    println!(
+        "  mq trace OK: {} lines reconcile with {} query ledgers (gen {}, completed {}, dropped {}, in-flight {})",
+        mcheck.lines,
+        mr.queries.len(),
+        mcheck.generated,
+        mcheck.completed,
+        mcheck.dropped_total(),
+        mcheck.unterminated()
+    );
+}
+
+/// Fault-injection A/B (`harness faults`): the `faults_recovery_on` /
+/// `faults_recovery_off` presets differ only in the recovery switch —
+/// same seed, same workload, same mid-run permanent crash of compute
+/// node 1. Both arms run under the JSONL flight recorder teed into a
+/// crash-dump ring; each trace must reconcile exactly with its ledger
+/// (including the `lost_to_fault` terminal class), the offered load
+/// must be identical across the arms, and recovery-on must complete
+/// strictly more on-time events than recovery-off, else exit 1.
+/// `--smoke` shrinks to 60 cameras / 60 s with the crash at t = 20 s
+/// so CI can run the whole A/B in seconds.
+fn faults(out: &Path, smoke: bool) {
+    use anveshak::coordinator::des::run_with_sink;
+    use anveshak::obs::{validate_trace, JsonlSink, RingSink};
+
+    println!(
+        "\n== Fault injection A/B: node 1 crashes mid-run, recovery on vs off =="
+    );
+    // Crash forensics: buffer the newest trace events in a ring and
+    // dump them to stderr if the harness itself dies mid-run — the
+    // flight recorder earning its name.
+    let ring = RingSink::new(4096);
+    ring.install_dump_on_panic();
+
+    let mut results: Vec<(&str, RunResult)> = Vec::new();
+    for name in ["faults_recovery_on", "faults_recovery_off"] {
+        let mut cfg = preset(name);
+        if smoke {
+            cfg.num_cameras = 60;
+            cfg.workload.vertices = 60;
+            cfg.workload.edges = 160;
+            cfg.duration_secs = 60.0;
+            cfg.service.fault_events[0].at_sec = 20.0;
+        }
+        let arm = name.trim_start_matches("faults_");
+        let path = out.join(format!("faults_{arm}.jsonl"));
+        let sink = JsonlSink::create(&path).expect("create trace file");
+        eprintln!(
+            "[run] {name}{} ...",
+            if smoke { " (smoke)" } else { "" }
+        );
+        let start = std::time::Instant::now();
+        let r = run_with_sink(cfg, (sink.clone(), ring.clone()));
+        sink.flush();
+        eprintln!(
+            "[run] {name} done in {:.1}s ({} trace lines)",
+            start.elapsed().as_secs_f64(),
+            sink.lines()
+        );
+
+        let text =
+            std::fs::read_to_string(&path).expect("read trace back");
+        let check = match validate_trace(&text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{arm}: trace FAILED schema validation: {e}");
+                std::process::exit(1);
+            }
+        };
+        let s = &r.summary;
+        let mut ok = true;
+        {
+            let mut expect = |what: &str, got: u64, want: u64| {
+                if got != want {
+                    eprintln!(
+                        "  MISMATCH {arm} {what}: trace {got} != ledger {want}"
+                    );
+                    ok = false;
+                }
+            };
+            expect("generated", check.generated, s.generated);
+            expect("completed", check.completed, s.on_time + s.delayed);
+            expect("on_time", check.on_time, s.on_time);
+            expect("dropped", check.dropped_total(), s.dropped);
+            expect(
+                "lost_to_fault",
+                check.lost_to_fault,
+                s.lost_to_fault,
+            );
+            expect("in_flight", check.unterminated(), s.in_flight);
+            expect("detections", check.detections, r.detections);
+        }
+        let viol = check.violations();
+        if !viol.is_empty() {
+            eprintln!(
+                "  MISMATCH {arm} conservation: {} violation(s), first {:?}",
+                viol.len(),
+                viol[0]
+            );
+            ok = false;
+        }
+        if !ok {
+            eprintln!("{arm}: trace FAILED ledger reconciliation");
+            std::process::exit(1);
+        }
+        print_summary_row(arm, &r);
+        let m = &r.metrics;
+        println!(
+            "    faults {} | retries {} | redispatched {} | node-restarts {} | trace reconciles ({} lines)",
+            m.faults_injected,
+            m.fault_retries,
+            m.redispatched,
+            m.node_restarts,
+            check.lines
+        );
+        results.push((arm, r));
+    }
+
+    let on = &results[0].1;
+    let off = &results[1].1;
+    if on.summary.generated != off.summary.generated {
+        eprintln!(
+            "FAIL: offered load differs across arms: on {} vs off {}",
+            on.summary.generated, off.summary.generated
+        );
+        std::process::exit(1);
+    }
+    if on.summary.on_time <= off.summary.on_time {
+        eprintln!(
+            "FAIL: recovery must strictly help: on-time with recovery {} <= without {}",
+            on.summary.on_time, off.summary.on_time
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "  recovery wins: +{} on-time events, {} fewer lost to faults",
+        on.summary.on_time - off.summary.on_time,
+        off.summary
+            .lost_to_fault
+            .saturating_sub(on.summary.lost_to_fault)
+    );
+    let doc = obj([
+        ("smoke", smoke.into()),
+        ("recovery_on", summary_json(on)),
+        ("recovery_off", summary_json(off)),
+    ]);
+    std::fs::write(out.join("faults.json"), doc.to_string()).unwrap();
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

@@ -91,6 +91,31 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                             .collect(),
                     ),
                 ),
+                (
+                    "fault_events",
+                    Json::Arr(
+                        c.service
+                            .fault_events
+                            .iter()
+                            .map(fault_event_to_json)
+                            .collect(),
+                    ),
+                ),
+                (
+                    "recovery",
+                    obj([
+                        ("enabled", c.service.recovery.enabled.into()),
+                        (
+                            "max_retries",
+                            (c.service.recovery.max_retries as usize)
+                                .into(),
+                        ),
+                        (
+                            "backoff_base_ms",
+                            c.service.recovery.backoff_base_ms.into(),
+                        ),
+                    ]),
+                ),
             ]),
         ),
         (
@@ -278,6 +303,36 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
                 })
                 .collect::<Result<_, String>>()?;
         }
+        if let Some(evs) = v.get("fault_events").and_then(Json::as_arr) {
+            c.service.fault_events = evs
+                .iter()
+                .map(fault_event_from_json)
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(r) = v.get("recovery") {
+            if let Some(b) = r.get("enabled").and_then(Json::as_bool) {
+                c.service.recovery.enabled = b;
+            }
+            if let Some(n) = r.get("max_retries").and_then(Json::as_f64)
+            {
+                if n < 0.0 || n.fract() != 0.0 {
+                    return Err(format!(
+                        "recovery max_retries must be a non-negative integer, got {n}"
+                    ));
+                }
+                c.service.recovery.max_retries = n as u32;
+            }
+            if let Some(b) =
+                r.get("backoff_base_ms").and_then(Json::as_f64)
+            {
+                if !(b.is_finite() && b > 0.0) {
+                    return Err(format!(
+                        "recovery backoff_base_ms must be finite and > 0, got {b}"
+                    ));
+                }
+                c.service.recovery.backoff_base_ms = b;
+            }
+        }
     }
     if let Some(v) = j.get("semantics") {
         set_f64(v, "va_tp", &mut c.semantics.va_tp);
@@ -323,6 +378,128 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         }
     }
     Ok(c)
+}
+
+fn fault_event_to_json(e: &FaultEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> =
+        vec![("at_sec", e.at_sec.into())];
+    match e.kind {
+        FaultKind::NodeCrash { node, down_secs } => {
+            fields.push(("kind", "node_crash".into()));
+            fields.push(("node", node.into()));
+            // `down_secs` omitted = permanent.
+            if let Some(d) = down_secs {
+                fields.push(("down_secs", d.into()));
+            }
+        }
+        FaultKind::CameraOutage { camera, down_secs } => {
+            fields.push(("kind", "camera_outage".into()));
+            fields.push(("camera", camera.into()));
+            if let Some(d) = down_secs {
+                fields.push(("down_secs", d.into()));
+            }
+        }
+        FaultKind::LinkPartition { a, b, down_secs } => {
+            fields.push(("kind", "link_partition".into()));
+            fields.push(("a", a.into()));
+            fields.push(("b", b.into()));
+            if let Some(d) = down_secs {
+                fields.push(("down_secs", d.into()));
+            }
+        }
+        FaultKind::MessageLoss { prob, dur_secs } => {
+            fields.push(("kind", "message_loss".into()));
+            fields.push(("prob", prob.into()));
+            if let Some(d) = dur_secs {
+                fields.push(("dur_secs", d.into()));
+            }
+        }
+    }
+    obj(fields)
+}
+
+/// A strictly-validated index field: a malformed value must not
+/// silently become index 0 (negative saturating through `as usize`).
+fn fault_index(e: &Json, key: &str) -> Result<usize, String> {
+    let n = e
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("fault event missing {key}"))?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(format!(
+            "fault event {key} must be a non-negative integer, got {n}"
+        ));
+    }
+    Ok(n as usize)
+}
+
+/// An optional duration field; present values must be finite and > 0
+/// (a zero-length window would be a no-op masquerading as a fault).
+fn fault_duration(e: &Json, key: &str) -> Result<Option<f64>, String> {
+    match e.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(d) => {
+            let d = d
+                .as_f64()
+                .ok_or_else(|| format!("fault event {key} must be a number"))?;
+            if !(d.is_finite() && d > 0.0) {
+                return Err(format!(
+                    "fault event {key} must be finite and > 0, got {d}"
+                ));
+            }
+            Ok(Some(d))
+        }
+    }
+}
+
+fn fault_event_from_json(e: &Json) -> Result<FaultEvent, String> {
+    let at_sec = e
+        .get("at_sec")
+        .and_then(Json::as_f64)
+        .ok_or("fault event missing at_sec")?;
+    if !(at_sec.is_finite() && at_sec >= 0.0) {
+        return Err(format!(
+            "fault event at_sec must be finite and >= 0, got {at_sec}"
+        ));
+    }
+    let kind = match e
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("fault event missing kind")?
+    {
+        "node_crash" => FaultKind::NodeCrash {
+            node: fault_index(e, "node")?,
+            down_secs: fault_duration(e, "down_secs")?,
+        },
+        "camera_outage" => FaultKind::CameraOutage {
+            camera: fault_index(e, "camera")?,
+            down_secs: fault_duration(e, "down_secs")?,
+        },
+        "link_partition" => FaultKind::LinkPartition {
+            a: fault_index(e, "a")?,
+            b: fault_index(e, "b")?,
+            down_secs: fault_duration(e, "down_secs")?,
+        },
+        "message_loss" => {
+            let prob = e
+                .get("prob")
+                .and_then(Json::as_f64)
+                .ok_or("message_loss fault missing prob")?;
+            if !(prob.is_finite() && (0.0..=1.0).contains(&prob)) {
+                return Err(format!(
+                    "message_loss prob must be in [0, 1], got {prob}"
+                ));
+            }
+            FaultKind::MessageLoss {
+                prob,
+                dur_secs: fault_duration(e, "dur_secs")?,
+            }
+        }
+        other => {
+            return Err(format!("unknown fault kind {other:?}"))
+        }
+    };
+    Ok(FaultEvent { at_sec, kind })
 }
 
 fn set_f64(j: &Json, key: &str, out: &mut f64) {
@@ -504,6 +681,75 @@ mod tests {
             r#"{"service": {"compute_events": [{"at_sec": 1.0, "node": "3", "factor": 4.0}]}}"#,
             r#"{"service": {"compute_events": [{"at_sec": 1.0, "node": -1, "factor": 4.0}]}}"#,
             r#"{"service": {"compute_events": [{"at_sec": 1.0, "factor": 0.0}]}}"#,
+        ] {
+            assert!(config_from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fault_events_round_trip() {
+        let mut c = ExperimentConfig::default();
+        c.service.fault_events = vec![
+            FaultEvent {
+                at_sec: 120.0,
+                kind: FaultKind::NodeCrash {
+                    node: 3,
+                    down_secs: Some(60.0),
+                },
+            },
+            FaultEvent {
+                at_sec: 200.0,
+                kind: FaultKind::NodeCrash {
+                    node: 1,
+                    down_secs: None,
+                },
+            },
+            FaultEvent {
+                at_sec: 10.0,
+                kind: FaultKind::CameraOutage {
+                    camera: 17,
+                    down_secs: Some(5.0),
+                },
+            },
+            FaultEvent {
+                at_sec: 30.0,
+                kind: FaultKind::LinkPartition {
+                    a: 0,
+                    b: 4,
+                    down_secs: Some(15.0),
+                },
+            },
+            FaultEvent {
+                at_sec: 50.0,
+                kind: FaultKind::MessageLoss {
+                    prob: 0.1,
+                    dur_secs: None,
+                },
+            },
+        ];
+        c.service.recovery = RecoveryConfig {
+            enabled: false,
+            max_retries: 5,
+            backoff_base_ms: 125.0,
+        };
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert_eq!(c2.service.fault_events, c.service.fault_events);
+        assert_eq!(c2.service.recovery, c.service.recovery);
+        // A partial config keeps the failure-free defaults.
+        let c3 = config_from_json("{}").unwrap();
+        assert!(c3.service.fault_events.is_empty());
+        assert!(c3.service.recovery.enabled);
+        // Malformed events are errors, not silent defaults.
+        for bad in [
+            r#"{"service": {"fault_events": [{"at_sec": 1.0}]}}"#,
+            r#"{"service": {"fault_events": [{"at_sec": 1.0, "kind": "volcano"}]}}"#,
+            r#"{"service": {"fault_events": [{"at_sec": 1.0, "kind": "node_crash", "node": -1}]}}"#,
+            r#"{"service": {"fault_events": [{"at_sec": 1.0, "kind": "node_crash", "node": 2, "down_secs": 0.0}]}}"#,
+            r#"{"service": {"fault_events": [{"at_sec": 1.0, "kind": "message_loss", "prob": 1.5}]}}"#,
+            r#"{"service": {"fault_events": [{"at_sec": 1.0, "kind": "link_partition", "a": 0}]}}"#,
+            r#"{"service": {"recovery": {"max_retries": -2}}}"#,
+            r#"{"service": {"recovery": {"backoff_base_ms": 0.0}}}"#,
         ] {
             assert!(config_from_json(bad).is_err(), "{bad}");
         }

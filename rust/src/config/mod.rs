@@ -117,6 +117,71 @@ pub struct ComputeEvent {
     pub factor: f64,
 }
 
+/// What kind of failure a [`FaultEvent`] injects. Each is the limiting
+/// case of the PR 5 dynamism machinery — a resource whose
+/// compute/bandwidth factor has gone to ∞ — so pricing, ξ and the drop
+/// gates compose with it unchanged; the engines model the limit as
+/// aliveness checks plus recovery machinery instead of a literal
+/// infinite duration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A cluster node crashes. `down_secs: None` is a permanent crash;
+    /// `Some(d)` restarts the node after a `d`-second downtime window.
+    NodeCrash { node: usize, down_secs: Option<f64> },
+    /// A camera goes dark (stops producing frames). `down_secs: None`
+    /// is permanent; `Some(d)` is a dropout/flap that heals after `d`
+    /// seconds.
+    CameraOutage { camera: usize, down_secs: Option<f64> },
+    /// The inter-node link between nodes `a` and `b` partitions
+    /// (bidirectionally). `down_secs: None` is permanent; `Some(d)`
+    /// heals after `d` seconds.
+    LinkPartition { a: usize, b: usize, down_secs: Option<f64> },
+    /// Every inter-node message is independently lost with probability
+    /// `prob` while the window is open. `dur_secs: None` keeps the
+    /// lossy regime for the rest of the run.
+    MessageLoss { prob: f64, dur_secs: Option<f64> },
+}
+
+/// A scheduled fault injection, mirroring [`ComputeEvent`] /
+/// [`BandwidthEvent`]: from `at_sec` onward the fault in `kind` is in
+/// effect (until its own downtime window closes, if any). Schedules are
+/// data, not randomness: the same `fault_events` under the same seed
+/// produce bit-identical runs, and an empty schedule is guaranteed to
+/// leave the engines bit-identical to a build without the fault
+/// machinery at all (property-tested).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub at_sec: f64,
+    pub kind: FaultKind,
+}
+
+/// Recovery policy applied when [`FaultEvent`]s fire. With `enabled:
+/// false` the platform takes every fault at face value (in-flight work
+/// on a dead node is lost, partitioned messages vanish) — the A/B
+/// baseline for `harness faults`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    /// Master switch for all recovery machinery (retry, re-dispatch,
+    /// TL degradation). Faults still fire when false.
+    pub enabled: bool,
+    /// Bounded retry count for in-flight batches on a dead node and
+    /// for lost/partitioned messages.
+    pub max_retries: u32,
+    /// Base of the exponential backoff between retries (attempt k
+    /// waits `backoff_base_ms * 2^k`).
+    pub backoff_base_ms: f64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            max_retries: 3,
+            backoff_base_ms: 250.0,
+        }
+    }
+}
+
 /// MAN/WAN model between cluster nodes.
 #[derive(Debug, Clone)]
 pub struct NetworkConfig {
@@ -174,6 +239,13 @@ pub struct ServiceConfig {
     ///
     /// [`XiModel::observe`]: crate::tuning::XiModel::observe
     pub online_xi: bool,
+    /// Scheduled fault injections (node crashes, camera dropouts,
+    /// link partitions, message loss) — see [`crate::sim::FaultModel`].
+    /// Empty = the failure-free contract: bit-identical per seed to a
+    /// build without the fault machinery.
+    pub fault_events: Vec<FaultEvent>,
+    /// Recovery policy when `fault_events` fire (ignored when empty).
+    pub recovery: RecoveryConfig,
 }
 
 impl Default for ServiceConfig {
@@ -189,6 +261,8 @@ impl Default for ServiceConfig {
             jitter: 0.05,
             compute_events: vec![],
             online_xi: false,
+            fault_events: vec![],
+            recovery: RecoveryConfig::default(),
         }
     }
 }

@@ -12,7 +12,7 @@ pub const ALL: &[&str] = &[
     "fig9_compute_online", "fig10_wbfs_sb1", "fig10_base_100",
     "fig10_base_200", "fig11_nodrops", "fig11_drops", "fig12_sb20",
     "fig12_db25", "fig12_wbfs_sb20", "fig12_es6_db25",
-    "fig12_es6_drops",
+    "fig12_es6_drops", "faults_recovery_on", "faults_recovery_off",
 ];
 
 /// Build the named preset. Panics on unknown names (the harness validates
@@ -95,6 +95,26 @@ pub fn preset(name: &str) -> ExperimentConfig {
             c.tl_peak_speed_mps = 7.0;
             c.batching = BatchingKind::Dynamic { max: 25 };
             c.drops_enabled = name == "fig11_drops";
+        }
+        // ---- Robustness A/B ("harness faults"): node 1 crashes for
+        // good at t = 300 s; the only difference between the pair is
+        // the recovery switch. Base TL at 200 cameras keeps the whole
+        // network active, so the offered load is identical across the
+        // arms and the on-time comparison is apples to apples. ----
+        "faults_recovery_on" | "faults_recovery_off" => {
+            c.tl = TlKind::Base;
+            c.num_cameras = 200;
+            c.workload.vertices = 200;
+            c.workload.edges = 563;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.service.fault_events.push(FaultEvent {
+                at_sec: 300.0,
+                kind: FaultKind::NodeCrash {
+                    node: 1,
+                    down_secs: None,
+                },
+            });
+            c.service.recovery.enabled = name.ends_with("_on");
         }
         // ---- Fig 12: App 2 (large CR) ----
         "fig12_sb20" => {
@@ -181,6 +201,24 @@ mod tests {
         assert_eq!(c.num_cameras, 100);
         assert_eq!(c.workload.vertices, 100);
         assert!(matches!(c.tl, TlKind::Base));
+    }
+
+    #[test]
+    fn fault_presets_are_an_ab_pair() {
+        let on = preset("faults_recovery_on");
+        let off = preset("faults_recovery_off");
+        for c in [&on, &off] {
+            assert_eq!(c.service.fault_events.len(), 1);
+            assert!((c.service.fault_events[0].at_sec - 300.0).abs()
+                < 1e-9);
+            assert!(matches!(
+                c.service.fault_events[0].kind,
+                FaultKind::NodeCrash { node: 1, down_secs: None }
+            ));
+            assert!(matches!(c.tl, TlKind::Base));
+        }
+        assert!(on.service.recovery.enabled);
+        assert!(!off.service.recovery.enabled);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::apps::AppDefinition;
-use crate::config::{BatchingKind, ExperimentConfig};
+use crate::config::{BatchingKind, ExperimentConfig, RecoveryConfig};
 use crate::dataflow::{
     AnalyticsBlock, Event, FeedbackRouter, FeedbackState, FilterControl,
     Header, Partitioner, Payload, QueryFusion, ScoreParams, Stage,
@@ -37,7 +37,8 @@ use crate::obs::{
 use crate::roadnet::{generate, place_cameras};
 use crate::runtime::{ModelOutput, ModelPool};
 use crate::sim::{
-    identity_image, EntityWalk, GroundTruth, IdentityGallery,
+    backoff_delay, identity_image, EntityWalk, GroundTruth,
+    IdentityGallery,
 };
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
@@ -295,6 +296,10 @@ struct Shared {
     fc_active: Vec<AtomicBool>,
     gamma: Micros,
     drops_enabled: bool,
+    /// Bounded-retry policy for model-service calls (a transient
+    /// failure backs off and retries; a dead service loses the batch
+    /// to `lost_to_fault` instead of panicking the worker).
+    recovery: RecoveryConfig,
     start: Instant,
     /// Shared trace sink (every thread holds `Shared`, so one dyn
     /// handle serves the feed loop, the workers, TL and the UV sink).
@@ -397,6 +402,7 @@ impl LiveEngine {
                 .collect(),
             gamma: cfg.gamma(),
             drops_enabled: cfg.drops_enabled,
+            recovery: cfg.service.recovery,
             start: Instant::now(),
             obs: Arc::clone(&self.obs),
             metrics: MetricsRegistry::new(),
@@ -673,6 +679,7 @@ impl LiveEngine {
         while shared.start.elapsed()
             < Duration::from_secs_f64(cfg.duration_secs)
         {
+            let iter_sp = span_begin(&*shared.obs);
             for cam in 0..cfg.num_cameras {
                 let t = now_us(shared.start);
                 let active =
@@ -719,6 +726,7 @@ impl LiveEngine {
                     va_tx[va_part.route(cam)].send(Msg::Ev(ev));
                 next_id += 1;
             }
+            span_end(&*shared.obs, Scope::FeedLoop, iter_sp);
             next_fire += period;
             let now = Instant::now();
             if next_fire > now {
@@ -1068,13 +1076,79 @@ fn exec_batch(
         }
     }
 
-    let (out, buf) = svc.execute_reusing(
-        variant,
-        images,
-        Arc::clone(&w.query_emb),
-    );
-    w.img_scratch = buf;
-    let out = out.expect("model execution");
+    // Real model execution, under bounded retry with exponential
+    // backoff: a transient model-service failure is retried up to
+    // `recovery.max_retries` times; if every attempt fails the batch
+    // is accounted `lost_to_fault` (never silently vanished, never a
+    // worker panic). On an execution error the image buffer
+    // round-trips back through the reply, so retries re-use the same
+    // gather.
+    let sp = span_begin(&*sh.obs);
+    let max_attempts = if sh.recovery.enabled {
+        sh.recovery.max_retries + 1
+    } else {
+        1
+    };
+    let mut images = Some(images);
+    let mut result: Option<ModelOutput> = None;
+    for attempt in 0..max_attempts {
+        if attempt > 0 {
+            sh.metrics.fault_retry();
+            if sh.obs.enabled() {
+                sh.obs.emit(
+                    now_us(sh.start),
+                    &TraceEvent::FaultRetry {
+                        event: batch[0].item.header.id,
+                        query: batch[0].item.header.query,
+                        attempt: attempt - 1,
+                    },
+                );
+            }
+            std::thread::sleep(Duration::from_micros(
+                backoff_delay(&sh.recovery, attempt - 1) as u64,
+            ));
+        }
+        let (out, buf) = svc.execute_reusing(
+            variant,
+            images.take().unwrap_or_default(),
+            Arc::clone(&w.query_emb),
+        );
+        match out {
+            Ok(o) => {
+                w.img_scratch = buf;
+                result = Some(o);
+                break;
+            }
+            // `buf` is the original gather unless the service thread
+            // itself is gone (then it is empty — and so is any hope
+            // of a different outcome, but the bounded loop still
+            // terminates promptly).
+            Err(_) => images = Some(buf),
+        }
+    }
+    span_end(&*sh.obs, Scope::ModelExec, sp);
+    let out = match result {
+        Some(o) => o,
+        None => {
+            let t = now_us(sh.start);
+            let mut led = sh.ledger.lock().unwrap();
+            for qe in &batch {
+                led.lost_to_fault(qe.item.header.id, w.stage);
+                sh.metrics.lost_to_fault();
+                if sh.obs.enabled() {
+                    sh.obs.emit(
+                        t,
+                        &TraceEvent::LostToFault {
+                            event: qe.item.header.id,
+                            query: qe.item.header.query,
+                            stage: w.stage,
+                        },
+                    );
+                }
+            }
+            return;
+        }
+    };
     let end = now_us(sh.start);
     let actual = end - start;
     w.xi.observe(b, actual);

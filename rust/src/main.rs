@@ -68,12 +68,13 @@ fn cmd_sim(args: &[String]) -> anyhow::Result<()> {
     let r = des::run(cfg);
     let s = &r.summary;
     println!(
-        "done in {:.1}s wall: generated {} | on-time {} | delayed {} | dropped {} | in-flight {}",
+        "done in {:.1}s wall: generated {} | on-time {} | delayed {} | dropped {} | lost-to-fault {} | in-flight {}",
         start.elapsed().as_secs_f64(),
         s.generated,
         s.on_time,
         s.delayed,
         s.dropped,
+        s.lost_to_fault,
         s.in_flight
     );
     println!(
@@ -118,13 +119,14 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let eng = LiveEngine::new(cfg, default_dir(), app);
     let r = eng.run()?;
     println!(
-        "wall {:.1}s | throughput {:.1} fps | generated {} on-time {} delayed {} dropped {}",
+        "wall {:.1}s | throughput {:.1} fps | generated {} on-time {} delayed {} dropped {} lost-to-fault {}",
         r.wall_secs,
         r.throughput,
         r.summary.generated,
         r.summary.on_time,
         r.summary.delayed,
-        r.summary.dropped
+        r.summary.dropped,
+        r.summary.lost_to_fault
     );
     println!(
         "latency median {:.2}s p99 {:.2}s | detections {} | peak active {}",

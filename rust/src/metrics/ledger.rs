@@ -2,9 +2,10 @@
 //!
 //! Every source event (camera frame entering the dataflow) is accounted
 //! for exactly once: processed within γ, processed but delayed, dropped
-//! at some stage, or still in flight at shutdown — the categories of
-//! Fig 6. Conservation (`generated = on_time + delayed + dropped +
-//! in_flight`) is asserted by the property suite.
+//! at some stage, lost to an injected fault, or still in flight at
+//! shutdown — the categories of Fig 6 plus the failure-model class.
+//! Conservation (`generated = on_time + delayed + dropped +
+//! lost_to_fault + in_flight`) is asserted by the property suite.
 
 use crate::dataflow::Stage;
 use crate::util::{Micros, Stats};
@@ -16,6 +17,11 @@ pub enum Outcome {
     OnTime { latency: Micros },
     Delayed { latency: Micros },
     Dropped { stage: Stage },
+    /// Consumed by an injected fault (node crash, partition, message
+    /// loss) rather than a budget verdict — the recovery machinery's
+    /// accounting class, distinct from gate drops so the A/B harness
+    /// can tell "the gate said no" from "the fault ate it".
+    LostToFault { stage: Stage },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -44,6 +50,9 @@ pub struct Summary {
     pub on_time: u64,
     pub delayed: u64,
     pub dropped: u64,
+    /// Events consumed by injected faults (crash/partition/loss) —
+    /// never charged to a drop gate.
+    pub lost_to_fault: u64,
     pub in_flight: u64,
     /// Latency stats (seconds) over completed (on-time + delayed) events.
     pub latency: Stats,
@@ -103,6 +112,15 @@ impl Ledger {
         }
     }
 
+    /// The event was lost to an injected fault at `stage`.
+    pub fn lost_to_fault(&mut self, id: u64, stage: Stage) {
+        if let Some(Some(e)) = self.entries.get_mut(id as usize) {
+            if matches!(e.outcome, Outcome::InFlight) {
+                e.outcome = Outcome::LostToFault { stage };
+            }
+        }
+    }
+
     pub fn outcome(&self, id: u64) -> Option<Outcome> {
         self.entries
             .get(id as usize)
@@ -120,6 +138,7 @@ impl Ledger {
             on_time: 0,
             delayed: 0,
             dropped: 0,
+            lost_to_fault: 0,
             in_flight: 0,
             latency: Stats::default(),
             true_positives: 0,
@@ -153,6 +172,12 @@ impl Ledger {
                         s.positives_dropped += 1;
                     }
                 }
+                Outcome::LostToFault { .. } => {
+                    s.lost_to_fault += 1;
+                    if e.entity_present {
+                        s.positives_dropped += 1;
+                    }
+                }
             }
         }
         s.latency = Stats::from(lats);
@@ -161,10 +186,15 @@ impl Ledger {
 }
 
 impl Summary {
-    /// Conservation law over the run.
+    /// Conservation law over the run: generated = delivered +
+    /// dropped-at-gate + lost-to-fault + in-flight.
     pub fn conserved(&self) -> bool {
         self.generated
-            == self.on_time + self.delayed + self.dropped + self.in_flight
+            == self.on_time
+                + self.delayed
+                + self.dropped
+                + self.lost_to_fault
+                + self.in_flight
     }
 
     pub fn drop_rate(&self) -> f64 {
@@ -207,6 +237,29 @@ mod tests {
         assert_eq!(s.in_flight, 7);
         assert!(s.conserved());
         assert_eq!(l.outcome(2), Some(Outcome::Dropped { stage: Stage::Cr }));
+    }
+
+    #[test]
+    fn lost_to_fault_is_a_distinct_terminal() {
+        let mut l = Ledger::new();
+        for id in 0..4u64 {
+            l.generated(id, id == 0);
+        }
+        l.lost_to_fault(0, Stage::Va);
+        l.lost_to_fault(0, Stage::Cr); // double-loss ignored
+        l.dropped(1, Stage::Cr);
+        l.lost_to_fault(1, Stage::Va); // first outcome wins
+        l.completed(2, SEC, 15 * SEC, false);
+        let s = l.summary();
+        assert_eq!(s.lost_to_fault, 1);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.in_flight, 1);
+        assert!(s.conserved());
+        assert_eq!(s.positives_dropped, 1, "lost positive counted");
+        assert_eq!(
+            l.outcome(0),
+            Some(Outcome::LostToFault { stage: Stage::Va })
+        );
     }
 
     #[test]

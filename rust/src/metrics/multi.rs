@@ -56,6 +56,12 @@ impl QueryLedgers {
         self.global.dropped(id, stage);
     }
 
+    /// Query `q`'s event was lost to an injected fault at `stage`.
+    pub fn lost_to_fault(&mut self, q: QueryId, id: u64, stage: Stage) {
+        self.ledger_mut(q).lost_to_fault(id, stage);
+        self.global.lost_to_fault(id, stage);
+    }
+
     /// Summary for one query (None if the query never generated events).
     pub fn summary(&self, q: QueryId) -> Option<Summary> {
         self.per.get(&q).map(Ledger::summary)

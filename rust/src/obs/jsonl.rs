@@ -139,12 +139,16 @@ pub struct TraceCheck {
     pub drops_gate: [u64; 4],
     pub exempted: u64,
     pub batches_executed: u64,
+    /// Events consumed by injected faults — the third terminal class.
+    pub lost_to_fault: u64,
+    /// Recovery retries observed (`fault_retry` lines).
+    pub fault_retries: u64,
     /// Line count per `ev` kind.
     pub kinds: BTreeMap<String, u64>,
     /// `(query, event) -> (generated count, terminal count)` where a
-    /// terminal is a completion or a drop. Conservation holds when
-    /// every generated pair has exactly one terminal and no terminal
-    /// lacks a generation.
+    /// terminal is a completion, a drop, or a fault loss. Conservation
+    /// holds when every generated pair has exactly one terminal and no
+    /// terminal lacks a generation.
     pub per_event: BTreeMap<(u32, u64), (u32, u32)>,
 }
 
@@ -330,6 +334,33 @@ pub fn validate_trace(text: &str) -> Result<TraceCheck, String> {
                 }
                 c.per_event.entry((q, ev)).or_insert((0, 0)).1 += 1;
             }
+            "node_fault" => {
+                num(&j, "node").map_err(err)?;
+                boolean(&j, "up").map_err(err)?;
+            }
+            "camera_fault" => {
+                num(&j, "camera").map_err(err)?;
+                boolean(&j, "up").map_err(err)?;
+            }
+            "lost_to_fault" => {
+                let ev = num(&j, "event").map_err(err)? as u64;
+                let q = num(&j, "query").map_err(err)? as u32;
+                stage_field(&j).map_err(err)?;
+                c.lost_to_fault += 1;
+                c.per_event.entry((q, ev)).or_insert((0, 0)).1 += 1;
+            }
+            "fault_retry" => {
+                num(&j, "event").map_err(err)?;
+                num(&j, "query").map_err(err)?;
+                num(&j, "attempt").map_err(err)?;
+                c.fault_retries += 1;
+            }
+            "redispatch" => {
+                stage_field(&j).map_err(err)?;
+                num(&j, "from_task").map_err(err)?;
+                num(&j, "to_task").map_err(err)?;
+                num(&j, "events").map_err(err)?;
+            }
             other => {
                 return Err(format!(
                     "line {lineno}: unknown event kind `{other}`"
@@ -411,6 +442,58 @@ mod tests {
         assert_eq!(check.detections, 1);
         assert_eq!(check.unterminated(), 1); // event 2 in flight
         assert!(check.violations().is_empty());
+    }
+
+    #[test]
+    fn lost_to_fault_is_a_terminal() {
+        let s = JsonlSink::in_memory();
+        for ev in 0..2u64 {
+            s.emit(
+                0,
+                &TraceEvent::Generated { event: ev, query: 1, camera: 0 },
+            );
+        }
+        s.emit(1, &TraceEvent::NodeFault { node: 2, up: false });
+        s.emit(
+            2,
+            &TraceEvent::FaultRetry { event: 0, query: 1, attempt: 0 },
+        );
+        s.emit(
+            3,
+            &TraceEvent::LostToFault {
+                event: 0,
+                query: 1,
+                stage: Stage::Va,
+            },
+        );
+        s.emit(
+            4,
+            &TraceEvent::Redispatch {
+                stage: Stage::Va,
+                from_task: 3,
+                to_task: 4,
+                events: 1,
+            },
+        );
+        s.emit(5, &TraceEvent::CameraFault { camera: 7, up: true });
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.lost_to_fault, 1);
+        assert_eq!(check.fault_retries, 1);
+        assert_eq!(check.unterminated(), 1); // event 1 in flight
+        assert!(check.violations().is_empty());
+        // A lost event cannot also complete: that's a violation.
+        s.emit(
+            6,
+            &TraceEvent::Completed {
+                event: 0,
+                query: 1,
+                latency_us: 6,
+                on_time: true,
+                detected: false,
+            },
+        );
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.violations(), vec![((1, 0), (1, 2))]);
     }
 
     #[test]

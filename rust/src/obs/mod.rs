@@ -45,7 +45,10 @@ use crate::util::{Json, Micros};
 
 /// Trace schema identifier written as the first JSONL line and checked
 /// by CI's trace-validation step. Bump on any breaking field change.
-pub const TRACE_SCHEMA: &str = "anveshak-trace-v1";
+/// v2: fault-injection kinds (`node_fault`, `camera_fault`,
+/// `lost_to_fault`, `fault_retry`, `redispatch`) — `lost_to_fault` is a
+/// new *terminal*, so a v1 validator would miscount conservation.
+pub const TRACE_SCHEMA: &str = "anveshak-trace-v2";
 
 /// Which of the three §4.3 drop points produced a verdict (plus the
 /// teardown pseudo-gate for events drained without a budget decision).
@@ -124,14 +127,20 @@ pub enum Scope {
     BatchPoll,
     /// Engine event dispatch (one simulation event or worker message).
     Dispatch,
+    /// PJRT / score-backend model execution (live paths).
+    ModelExec,
+    /// One live feed-loop iteration (frame generation + FC + dispatch).
+    FeedLoop,
 }
 
 /// All scopes, in display order.
-pub const SCOPES: [Scope; 4] = [
+pub const SCOPES: [Scope; 6] = [
     Scope::Dispatch,
     Scope::BatchPoll,
     Scope::Scoring,
     Scope::SpotlightExpand,
+    Scope::ModelExec,
+    Scope::FeedLoop,
 ];
 
 impl Scope {
@@ -141,6 +150,8 @@ impl Scope {
             Scope::BatchPoll => 1,
             Scope::Scoring => 2,
             Scope::SpotlightExpand => 3,
+            Scope::ModelExec => 4,
+            Scope::FeedLoop => 5,
         }
     }
 
@@ -150,6 +161,8 @@ impl Scope {
             Scope::BatchPoll => "batch_poll",
             Scope::Scoring => "scoring",
             Scope::SpotlightExpand => "spotlight_expand",
+            Scope::ModelExec => "model_exec",
+            Scope::FeedLoop => "feed_loop",
         }
     }
 }
@@ -228,6 +241,24 @@ pub enum TraceEvent {
         on_time: bool,
         detected: bool,
     },
+    /// A cluster node crashed (`up: false`) or restarted (`up: true`).
+    NodeFault { node: u32, up: bool },
+    /// A camera went dark (`up: false`) or came back (`up: true`).
+    CameraFault { camera: u32, up: bool },
+    /// A source event was consumed by an injected fault — the new
+    /// conservation terminal next to `drop` and `completed`.
+    LostToFault { event: u64, query: QueryId, stage: Stage },
+    /// Recovery retried a fault-hit event (bounded exponential
+    /// backoff); `attempt` is 0-based.
+    FaultRetry { event: u64, query: QueryId, attempt: u32 },
+    /// Recovery re-dispatched orphaned events from a dead executor to
+    /// a surviving one.
+    Redispatch {
+        stage: Stage,
+        from_task: u32,
+        to_task: u32,
+        events: u32,
+    },
 }
 
 impl TraceEvent {
@@ -247,6 +278,11 @@ impl TraceEvent {
             TraceEvent::ComputeFactor { .. } => "compute_factor",
             TraceEvent::Bandwidth { .. } => "bandwidth",
             TraceEvent::Completed { .. } => "completed",
+            TraceEvent::NodeFault { .. } => "node_fault",
+            TraceEvent::CameraFault { .. } => "camera_fault",
+            TraceEvent::LostToFault { .. } => "lost_to_fault",
+            TraceEvent::FaultRetry { .. } => "fault_retry",
+            TraceEvent::Redispatch { .. } => "redispatch",
         }
     }
 
@@ -359,6 +395,35 @@ impl TraceEvent {
                 put("on_time", (*on_time).into());
                 put("detected", (*detected).into());
             }
+            TraceEvent::NodeFault { node, up } => {
+                put("node", (*node as i64).into());
+                put("up", (*up).into());
+            }
+            TraceEvent::CameraFault { camera, up } => {
+                put("camera", (*camera as i64).into());
+                put("up", (*up).into());
+            }
+            TraceEvent::LostToFault { event, query, stage } => {
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+                put("stage", stage_str(*stage).into());
+            }
+            TraceEvent::FaultRetry { event, query, attempt } => {
+                put("event", (*event as i64).into());
+                put("query", (*query as i64).into());
+                put("attempt", (*attempt as i64).into());
+            }
+            TraceEvent::Redispatch {
+                stage,
+                from_task,
+                to_task,
+                events,
+            } => {
+                put("stage", stage_str(*stage).into());
+                put("from_task", (*from_task as i64).into());
+                put("to_task", (*to_task as i64).into());
+                put("events", (*events as i64).into());
+            }
         }
         Json::Obj(m)
     }
@@ -410,6 +475,39 @@ impl ObsSink for NullSink {
 
     #[inline(always)]
     fn emit(&self, _t: Micros, _ev: &TraceEvent) {}
+}
+
+/// Tee: fan one trace out to two sinks. `(JsonlSink, RingSink)` gives
+/// the harness a durable on-disk trace *and* a crash-forensics ring
+/// (see [`RingSink::install_dump_on_panic`]) from a single run.
+/// Profiling spans go to the first sink that profiles, so a pair never
+/// double-counts wall-clock.
+impl<A: ObsSink, B: ObsSink> ObsSink for (A, B) {
+    #[inline]
+    fn enabled(&self) -> bool {
+        self.0.enabled() || self.1.enabled()
+    }
+
+    fn emit(&self, t: Micros, ev: &TraceEvent) {
+        if self.0.enabled() {
+            self.0.emit(t, ev);
+        }
+        if self.1.enabled() {
+            self.1.emit(t, ev);
+        }
+    }
+
+    fn profiled(&self) -> bool {
+        self.0.profiled() || self.1.profiled()
+    }
+
+    fn record_span(&self, scope: Scope, ns: u64) {
+        if self.0.profiled() {
+            self.0.record_span(scope, ns);
+        } else {
+            self.1.record_span(scope, ns);
+        }
+    }
 }
 
 /// RAII scope timer (see [`ObsSink::span`]).

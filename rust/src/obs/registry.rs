@@ -83,8 +83,16 @@ struct Inner {
     xi_observations: AtomicU64,
     nob_retunes: AtomicU64,
     refinements: AtomicU64,
+    // Fault / recovery counters (all zero on failure-free runs).
+    faults_injected: AtomicU64,
+    lost_to_fault: AtomicU64,
+    fault_retries: AtomicU64,
+    redispatched: AtomicU64,
+    node_restarts: AtomicU64,
+    worker_restarts: AtomicU64,
     active_cameras: AtomicI64,
     active_queries: AtomicI64,
+    nodes_down: AtomicI64,
     /// ξ(1) in µs per (app, stage) — the per-app pricing gauges; 0
     /// means "never priced".
     xi_app_us: [[AtomicI64; EXEC_STAGES]; APPS],
@@ -99,6 +107,7 @@ pub struct QueryCounters {
     pub on_time: u64,
     pub delayed: u64,
     pub dropped: u64,
+    pub lost_to_fault: u64,
 }
 
 /// One per-simulated-second cumulative row (dumped by the DES engines
@@ -188,7 +197,43 @@ impl MetricsRegistry {
         self.inner.refinements.fetch_add(1, Relaxed);
     }
 
+    // ---- faults / recovery -----------------------------------------------
+
+    /// A scheduled fault transition fired (node/camera/link/loss edge).
+    pub fn fault_injected(&self) {
+        self.inner.faults_injected.fetch_add(1, Relaxed);
+    }
+
+    /// An event was consumed by a fault (the `lost_to_fault` terminal).
+    pub fn lost_to_fault(&self) {
+        self.inner.lost_to_fault.fetch_add(1, Relaxed);
+    }
+
+    /// Recovery retried a fault-hit event/batch member.
+    pub fn fault_retry(&self) {
+        self.inner.fault_retries.fetch_add(1, Relaxed);
+    }
+
+    /// Recovery re-dispatched `n` orphaned events to a survivor.
+    pub fn redispatched(&self, n: u64) {
+        self.inner.redispatched.fetch_add(n, Relaxed);
+    }
+
+    /// A crashed node restarted (its downtime window closed).
+    pub fn node_restart(&self) {
+        self.inner.node_restarts.fetch_add(1, Relaxed);
+    }
+
+    /// A live worker thread was restarted by its supervisor.
+    pub fn worker_restart(&self) {
+        self.inner.worker_restarts.fetch_add(1, Relaxed);
+    }
+
     // ---- gauges ----------------------------------------------------------
+
+    pub fn set_nodes_down(&self, n: usize) {
+        self.inner.nodes_down.store(n as i64, Relaxed);
+    }
 
     pub fn set_active_cameras(&self, n: usize) {
         self.inner.active_cameras.store(n as i64, Relaxed);
@@ -237,6 +282,10 @@ impl MetricsRegistry {
 
     pub fn query_dropped(&self, q: QueryId) {
         self.with_query(q, |c| c.dropped += 1);
+    }
+
+    pub fn query_lost_to_fault(&self, q: QueryId) {
+        self.with_query(q, |c| c.lost_to_fault += 1);
     }
 
     // ---- per-second dump -------------------------------------------------
@@ -314,8 +363,15 @@ impl MetricsRegistry {
             xi_observations: i.xi_observations.load(Relaxed),
             nob_retunes: i.nob_retunes.load(Relaxed),
             refinements: i.refinements.load(Relaxed),
+            faults_injected: i.faults_injected.load(Relaxed),
+            lost_to_fault: i.lost_to_fault.load(Relaxed),
+            fault_retries: i.fault_retries.load(Relaxed),
+            redispatched: i.redispatched.load(Relaxed),
+            node_restarts: i.node_restarts.load(Relaxed),
+            worker_restarts: i.worker_restarts.load(Relaxed),
             active_cameras: i.active_cameras.load(Relaxed),
             active_queries: i.active_queries.load(Relaxed),
+            nodes_down: i.nodes_down.load(Relaxed),
             xi_app_us: std::array::from_fn(|a| {
                 std::array::from_fn(|s| i.xi_app_us[a][s].load(Relaxed))
             }),
@@ -376,8 +432,18 @@ pub struct MetricsSnapshot {
     pub xi_observations: u64,
     pub nob_retunes: u64,
     pub refinements: u64,
+    /// Fault transitions fired (0 on failure-free runs).
+    pub faults_injected: u64,
+    /// Events consumed by faults — mirrors `Summary::lost_to_fault`.
+    pub lost_to_fault: u64,
+    pub fault_retries: u64,
+    pub redispatched: u64,
+    pub node_restarts: u64,
+    /// Live-front worker threads restarted after a panic.
+    pub worker_restarts: u64,
     pub active_cameras: i64,
     pub active_queries: i64,
+    pub nodes_down: i64,
     pub xi_app_us: [[i64; 2]; 4],
     pub per_query: Vec<(QueryId, QueryCounters)>,
     /// Cumulative per-simulated-second rows (empty when
@@ -401,6 +467,10 @@ impl MetricsSnapshot {
                     ("on_time", (c.on_time as i64).into()),
                     ("delayed", (c.delayed as i64).into()),
                     ("dropped", (c.dropped as i64).into()),
+                    (
+                        "lost_to_fault",
+                        (c.lost_to_fault as i64).into(),
+                    ),
                 ])
             })
             .collect();
@@ -429,8 +499,15 @@ impl MetricsSnapshot {
             ("xi_observations", (self.xi_observations as i64).into()),
             ("nob_retunes", (self.nob_retunes as i64).into()),
             ("refinements", (self.refinements as i64).into()),
+            ("faults_injected", (self.faults_injected as i64).into()),
+            ("lost_to_fault", (self.lost_to_fault as i64).into()),
+            ("fault_retries", (self.fault_retries as i64).into()),
+            ("redispatched", (self.redispatched as i64).into()),
+            ("node_restarts", (self.node_restarts as i64).into()),
+            ("worker_restarts", (self.worker_restarts as i64).into()),
             ("active_cameras", self.active_cameras.into()),
             ("active_queries", self.active_queries.into()),
+            ("nodes_down", self.nodes_down.into()),
             (
                 "xi_app_us",
                 Json::Arr(
@@ -549,6 +626,32 @@ mod tests {
         assert_eq!(rows[0].generated, 1);
         assert_eq!(rows[1].generated, 2);
         assert_eq!(rows[0].active_cameras, 5);
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.fault_injected();
+        m.lost_to_fault();
+        m.lost_to_fault();
+        m.fault_retry();
+        m.redispatched(5);
+        m.node_restart();
+        m.worker_restart();
+        m.set_nodes_down(2);
+        m.query_lost_to_fault(4);
+        let s = m.snapshot();
+        assert_eq!(s.faults_injected, 1);
+        assert_eq!(s.lost_to_fault, 2);
+        assert_eq!(s.fault_retries, 1);
+        assert_eq!(s.redispatched, 5);
+        assert_eq!(s.node_restarts, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.nodes_down, 2);
+        let q4 = s.per_query.iter().find(|(q, _)| *q == 4).unwrap().1;
+        assert_eq!(q4.lost_to_fault, 1);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.at("lost_to_fault").as_usize(), Some(2));
     }
 
     #[test]

@@ -12,6 +12,9 @@ use std::sync::{Arc, Mutex};
 use crate::obs::{ObsSink, Scope, SpanStats, TraceEvent};
 use crate::util::Micros;
 
+/// How many of the newest ring events a panic dump prints.
+const PANIC_DUMP_TAIL: usize = 64;
+
 /// Default ring capacity (prime; mirrors `BudgetManager`'s task ring).
 pub const DEFAULT_RING_CAPACITY: usize = 4093;
 
@@ -104,6 +107,39 @@ impl RingSink {
     pub fn spans(&self) -> &SpanStats {
         &self.spans
     }
+
+    /// Render the newest ring events as one human-readable block — the
+    /// "black box" read-out printed when something dies.
+    pub fn dump_tail(&self, max: usize) -> String {
+        let evs = self.events();
+        let skip = evs.len().saturating_sub(max);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "--- flight recorder: newest {} of {} events ---\n",
+            evs.len() - skip,
+            self.total()
+        ));
+        for (t, ev) in &evs[skip..] {
+            out.push_str(&format!("  [{t:>12}us] {}\n", ev.to_json(*t).to_string()));
+        }
+        out
+    }
+
+    /// Chain a panic hook that dumps the newest ring events to stderr
+    /// before the default hook runs. Crash forensics for the harness
+    /// and the live-path worker supervisor: whatever the process was
+    /// doing in its last few thousand events survives the panic.
+    ///
+    /// The clone registered here shares the recorder, so events emitted
+    /// after installation are visible to the dump.
+    pub fn install_dump_on_panic(&self) {
+        let ring = self.clone();
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            eprintln!("{}", ring.dump_tail(PANIC_DUMP_TAIL));
+            prev(info);
+        }));
+    }
 }
 
 impl ObsSink for RingSink {
@@ -186,6 +222,21 @@ mod tests {
             let want = 16 + k as u64;
             assert_eq!(*t, want as Micros);
             assert_eq!(*ev, gen(want));
+        }
+    }
+
+    #[test]
+    fn dump_tail_renders_newest_events() {
+        let s = RingSink::new(7);
+        for i in 0..10 {
+            s.emit(i as Micros, &gen(i));
+        }
+        let d = s.dump_tail(3);
+        assert!(d.contains("newest 3 of 10 events"));
+        // Only the last three survive the tail cut.
+        assert!(!d.contains("\"event\":6"));
+        for want in ["\"event\":7", "\"event\":8", "\"event\":9"] {
+            assert!(d.contains(want), "missing {want} in {d}");
         }
     }
 

@@ -46,7 +46,10 @@ use crate::service::query::{
     QueryRegistry, QueryReport, QuerySpec, QueryStatus,
 };
 use crate::service::scheduler::FairShareBatcher;
-use crate::sim::{ComputeModel, EntityWalk, GroundTruth, NetModel};
+use crate::sim::{
+    backoff_delay, ComputeModel, EntityWalk, FaultModel, GroundTruth,
+    NetModel,
+};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, drop_at_transmit, BatcherPoll,
@@ -54,6 +57,11 @@ use crate::tuning::{
     ONLINE_XI_EMA,
 };
 use crate::util::{millis, rng, secs, FastMap, Micros, Rng, SEC};
+
+/// How far ahead the TL spotlight horizon is pushed while any of a
+/// query's active cameras is dark (graceful degradation: the entity may
+/// travel unobserved, so the plausible region widens).
+const FAULT_WIDEN: Micros = 2 * SEC;
 
 /// Simulation events, ordered by time then sequence.
 enum Ev {
@@ -91,6 +99,9 @@ enum Ev {
     },
     /// Periodic per-query TL spotlight evaluation.
     TlTick,
+    /// A scheduled fault transition instant (node/camera aliveness may
+    /// have flipped).
+    FaultTick,
     /// A detection (metadata) reaches a query's TL.
     TlDetection {
         query: QueryId,
@@ -269,6 +280,26 @@ pub struct MultiQueryDes<S: ObsSink = NullSink> {
     compute: ComputeModel,
     /// `cfg.service.online_xi`, hoisted.
     online_xi: bool,
+    /// Scheduled fault injection (node crashes, link partitions,
+    /// camera dropouts, message loss). Static when
+    /// `cfg.service.fault_events` is empty — every hook then
+    /// short-circuits and the engine is bit-identical to a build
+    /// without the fault machinery.
+    faults: FaultModel,
+    /// Dedicated RNG stream for message-loss draws; never advanced
+    /// unless the schedule has loss windows, so `rng_draws` stays
+    /// untouched on loss-free runs.
+    fault_rng: Rng,
+    /// Per-event re-dispatch attempts after batch voiding (bounded by
+    /// `recovery.max_retries`).
+    retry_counts: FastMap<u64, u32>,
+    /// Where arrivals addressed to each task actually land (identity
+    /// until a permanent crash installs a redirect to a survivor).
+    task_redirect: Vec<usize>,
+    /// Last-observed node aliveness (diffed at each fault tick).
+    node_was_up: Vec<bool>,
+    /// Last-observed camera aliveness.
+    cam_was_up: Vec<bool>,
     core: EventCore<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
@@ -461,6 +492,13 @@ impl<S: ObsSink> MultiQueryDes<S> {
         let seed = cfg.seed;
         let compute =
             ComputeModel::new(&cfg.service.compute_events, topo.nodes);
+        let faults = FaultModel::new(
+            &cfg.service.fault_events,
+            topo.nodes,
+            num_cameras,
+        );
+        let nodes = topo.nodes;
+        let task_redirect: Vec<usize> = (0..topo.tasks.len()).collect();
         // Publish the initial per-(app, stage) ξ(1) prices; refreshed
         // whenever online calibration moves the estimator.
         let metrics = MetricsRegistry::new();
@@ -495,6 +533,12 @@ impl<S: ObsSink> MultiQueryDes<S> {
             fc_xi,
             compute,
             online_xi,
+            faults,
+            fault_rng: rng(seed, 0x3FA17),
+            retry_counts: FastMap::default(),
+            task_redirect,
+            node_was_up: vec![true; nodes],
+            cam_was_up: vec![true; num_cameras],
             core: EventCore::new(),
             next_event_id: 0,
             next_batch_seq: 0,
@@ -553,6 +597,15 @@ impl<S: ObsSink> MultiQueryDes<S> {
             self.push(at, Ev::QueryArrive { idx });
         }
         self.push(SEC, Ev::TlTick);
+        if !self.faults.is_static() {
+            // Transition instants are schedule data, known up front;
+            // the horizon grows with late promotions, so every tick is
+            // scheduled — ones past the final horizon never pop.
+            let ticks: Vec<Micros> = self.faults.transitions().to_vec();
+            for at in ticks {
+                self.push(at, Ev::FaultTick);
+            }
+        }
 
         if self.obs.enabled() {
             // The configured dynamism schedule, stamped at its
@@ -624,6 +677,7 @@ impl<S: ObsSink> MultiQueryDes<S> {
                 }
             }
             Ev::TlTick => self.on_tl_tick(),
+            Ev::FaultTick => self.on_fault_tick(),
             Ev::TlDetection {
                 query,
                 camera,
@@ -901,6 +955,11 @@ impl<S: ObsSink> MultiQueryDes<S> {
         if self.active.is_empty() {
             return;
         }
+        // A dark camera captures nothing: no events are generated (and
+        // none ledgered) while its outage window is open.
+        if !self.faults.camera_alive(cam, t) {
+            return;
+        }
         let frame_no = self.frame_counters[cam];
         self.frame_counters[cam] += 1;
         // One logical event per query that has this camera active.
@@ -1002,19 +1061,15 @@ impl<S: ObsSink> MultiQueryDes<S> {
             ev.header.sum_exec += fc_dur;
             let fc_task = self.topo.fc_task(cam);
             let va = self.topo.va_task(cam);
-            let arrive = self.net.transfer(
+            let frame_bytes = self.net.frame_bytes;
+            self.send_data(
                 self.topo.node_of(fc_task),
-                self.topo.node_of(va),
-                self.net.frame_bytes,
+                va,
+                frame_bytes,
                 t + fc_dur,
-            );
-            self.push(
-                arrive,
-                Ev::Arrive {
-                    task: va,
-                    ev,
-                    batch: None,
-                },
+                ev,
+                None,
+                Stage::Fc,
             );
         }
     }
@@ -1088,6 +1143,9 @@ impl<S: ObsSink> MultiQueryDes<S> {
         ev: Event,
         batch: Option<(u64, usize)>,
     ) {
+        // Follow any crash redirect: events pushed before the redirect
+        // was installed still land at the surviving executor.
+        let task = self.route(task);
         match self.tasks[task].stage {
             Stage::Uv => self.on_sink_arrive(ev, batch),
             Stage::Va | Stage::Cr => {
@@ -1206,6 +1264,11 @@ impl<S: ObsSink> MultiQueryDes<S> {
     }
 
     fn try_form_batch(&mut self, task: usize) {
+        // A dead executor forms no batches; its queue waits in place
+        // (revival tick) or is orphaned (permanent crash).
+        if !self.faults.node_alive(self.tasks[task].node, self.now) {
+            return;
+        }
         loop {
             let now = self.now;
             // Batch formation prices each candidate under its own
@@ -1365,6 +1428,16 @@ impl<S: ObsSink> MultiQueryDes<S> {
         rel_sum: f64,
     ) {
         self.tasks[task].busy = false;
+        // The executor died mid-execution: nothing the batch computed
+        // survives. Members retry (bounded, with backoff) or terminate
+        // as lost_to_fault.
+        if self
+            .faults
+            .node_down_during(self.tasks[task].node, start, self.now)
+        {
+            self.void_batch(task, batch);
+            return;
+        }
         let b = batch.len();
         let stage = self.tasks[task].stage;
         let batch_seq = self.next_batch_seq;
@@ -1573,41 +1646,36 @@ impl<S: ObsSink> MultiQueryDes<S> {
             };
             if stage == Stage::Cr {
                 if let Payload::Detection { detected, .. } = ev.payload {
-                    let tl_arrive = self.net.transfer(
-                        src_node,
-                        self.topo.node_of(self.topo.tl),
-                        self.net.meta_bytes,
-                        self.now,
-                    );
-                    self.push(
-                        tl_arrive,
-                        Ev::TlDetection {
-                            query: q,
-                            camera: cam,
-                            captured: ev.header.captured,
-                            detected,
-                        },
-                    );
+                    // Control-plane fork to the query's TL: best-effort
+                    // (no retransmit, no ledger — the data-plane copy
+                    // below carries the event's accounting).
+                    let tl_node = self.topo.node_of(self.topo.tl);
+                    if self.channel_ok(src_node, tl_node, self.now) {
+                        let tl_arrive = self.net.transfer(
+                            src_node,
+                            tl_node,
+                            self.net.meta_bytes,
+                            self.now,
+                        );
+                        self.push(
+                            tl_arrive,
+                            Ev::TlDetection {
+                                query: q,
+                                camera: cam,
+                                captured: ev.header.captured,
+                                detected,
+                            },
+                        );
+                    }
                 }
             }
-            let arrive = self.net.transfer(
-                src_node,
-                self.topo.node_of(next_task),
-                bytes,
-                self.now,
-            );
             let tag = if stage == Stage::Cr {
                 Some((batch_seq, out_n))
             } else {
                 None
             };
-            self.push(
-                arrive,
-                Ev::Arrive {
-                    task: next_task,
-                    ev,
-                    batch: tag,
-                },
+            self.send_data(
+                src_node, next_task, bytes, self.now, ev, tag, stage,
             );
         }
         self.outgoing_scratch = outgoing;
@@ -1698,21 +1766,345 @@ impl<S: ObsSink> MultiQueryDes<S> {
                 Stage::Cr => (self.topo.uv, self.net.meta_bytes),
                 _ => return,
             };
-            let arrive = self.net.transfer(
-                self.tasks[task].node,
-                self.topo.node_of(next_task),
-                bytes,
+            // Probes are control-plane: best-effort through the fault
+            // domains, no retransmit (the event is already ledgered as
+            // dropped — losing the probe costs signal, not accounting).
+            let next_task = self.route(next_task);
+            let src = self.tasks[task].node;
+            let dst = self.topo.node_of(next_task);
+            if self.channel_ok(src, dst, self.now) {
+                let arrive =
+                    self.net.transfer(src, dst, bytes, self.now);
+                self.push(
+                    arrive,
+                    Ev::Arrive {
+                        task: next_task,
+                        ev: probe,
+                        batch: None,
+                    },
+                );
+            }
+        }
+    }
+
+    // ---- faults + recovery -----------------------------------------------
+
+    /// Where arrivals addressed to `task` actually land (identity until
+    /// a permanent crash installs a redirect).
+    #[inline]
+    fn route(&self, task: usize) -> usize {
+        if self.faults.is_static() {
+            task
+        } else {
+            self.task_redirect[task]
+        }
+    }
+
+    /// Can a message sent `src → dst` at `t` get through the fault
+    /// domains? Consults link partitions and — only when loss windows
+    /// exist — draws from the dedicated fault RNG stream, so fault-free
+    /// (and loss-free) schedules never touch any RNG.
+    fn channel_ok(&mut self, src: usize, dst: usize, t: Micros) -> bool {
+        if self.faults.is_static() {
+            return true;
+        }
+        if !self.faults.link_up(src, dst, t) {
+            return false;
+        }
+        if self.faults.has_loss() {
+            let p = self.faults.loss_prob(t);
+            if p > 0.0 && self.fault_rng.range_f64(0.0, 1.0) < p {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Transmit a ledgered data event towards `dst_task`, through the
+    /// fault domains. With recovery on, a failed send retransmits with
+    /// exponential backoff — the channel is re-evaluated at each
+    /// attempt's send time (all draws made now, keeping the schedule
+    /// deterministic); once attempts are exhausted, or immediately with
+    /// recovery off, the event terminates as `lost_to_fault` *for its
+    /// query* at the sending stage. The fault-free fast path is one
+    /// branch and bit-identical to the pre-fault engine.
+    #[allow(clippy::too_many_arguments)]
+    fn send_data(
+        &mut self,
+        src_node: usize,
+        dst_task: usize,
+        bytes: usize,
+        at: Micros,
+        ev: Event,
+        batch: Option<(u64, usize)>,
+        stage: Stage,
+    ) {
+        let dst_task = self.route(dst_task);
+        let dst_node = self.topo.node_of(dst_task);
+        if self.faults.is_static() {
+            let arrive =
+                self.net.transfer(src_node, dst_node, bytes, at);
+            self.push(arrive, Ev::Arrive { task: dst_task, ev, batch });
+            return;
+        }
+        let rec = self.cfg.service.recovery;
+        let attempts = if rec.enabled { rec.max_retries + 1 } else { 1 };
+        let mut t = at;
+        for k in 0..attempts {
+            if self.channel_ok(src_node, dst_node, t) {
+                if k > 0 {
+                    self.metrics.fault_retry();
+                    if self.obs.enabled() {
+                        self.obs.emit(
+                            self.now,
+                            &TraceEvent::FaultRetry {
+                                event: ev.header.id,
+                                query: ev.header.query,
+                                attempt: k,
+                            },
+                        );
+                    }
+                }
+                let arrive =
+                    self.net.transfer(src_node, dst_node, bytes, t);
+                self.push(
+                    arrive,
+                    Ev::Arrive { task: dst_task, ev, batch },
+                );
+                return;
+            }
+            t += backoff_delay(&rec, k);
+        }
+        let q = ev.header.query;
+        self.lose_event(q, ev.header.id, stage);
+    }
+
+    /// Terminal fault accounting for one query's event: a distinct
+    /// outcome class from gate drops — per-query conservation becomes
+    /// generated = on-time + delayed + dropped + lost-to-fault +
+    /// in-flight.
+    fn lose_event(&mut self, q: QueryId, id: u64, stage: Stage) {
+        self.ledgers.lost_to_fault(q, id, stage);
+        self.metrics.lost_to_fault();
+        self.metrics.query_lost_to_fault(q);
+        if self.obs.enabled() {
+            self.obs.emit(
                 self.now,
-            );
-            self.push(
-                arrive,
-                Ev::Arrive {
-                    task: next_task,
-                    ev: probe,
-                    batch: None,
+                &TraceEvent::LostToFault {
+                    event: id,
+                    query: q,
+                    stage,
                 },
             );
         }
+    }
+
+    /// The executor died while this batch was in flight: nothing it
+    /// computed survives. With recovery on, members re-arrive at the
+    /// (possibly redirected) task after exponential backoff, bounded by
+    /// `max_retries` per event; otherwise — or once retries are
+    /// exhausted — each terminates as `lost_to_fault` against its own
+    /// query.
+    fn void_batch(
+        &mut self,
+        task: usize,
+        mut batch: Vec<QueuedEvent<Event>>,
+    ) {
+        let stage = self.tasks[task].stage;
+        let rec = self.cfg.service.recovery;
+        for qe in batch.drain(..) {
+            let ev = qe.item;
+            let id = ev.header.id;
+            let q = ev.header.query;
+            let attempt =
+                self.retry_counts.get(&id).copied().unwrap_or(0);
+            if rec.enabled && attempt < rec.max_retries {
+                self.retry_counts.insert(id, attempt + 1);
+                self.metrics.fault_retry();
+                if self.obs.enabled() {
+                    self.obs.emit(
+                        self.now,
+                        &TraceEvent::FaultRetry {
+                            event: id,
+                            query: q,
+                            attempt: attempt + 1,
+                        },
+                    );
+                }
+                let to = self.route(task);
+                self.push(
+                    self.now + backoff_delay(&rec, attempt),
+                    Ev::Arrive { task: to, ev, batch: None },
+                );
+            } else {
+                self.lose_event(q, id, stage);
+            }
+        }
+        self.tasks[task].batcher.recycle(batch);
+        // If the node already revived mid-execution, whatever queued up
+        // during the outage resumes now (the call gates on aliveness).
+        self.try_form_batch(task);
+    }
+
+    /// A scheduled node/camera transition instant: diff aliveness
+    /// against the last tick, emit each flip exactly once, and apply
+    /// the consequences (orphan drains and redirects on crash, resumed
+    /// batch formation on revival, spotlight refresh over dark
+    /// cameras for every active query).
+    fn on_fault_tick(&mut self) {
+        for node in 0..self.node_was_up.len() {
+            let up = self.faults.node_alive(node, self.now);
+            if up == self.node_was_up[node] {
+                continue;
+            }
+            self.node_was_up[node] = up;
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::NodeFault { node: node as u32, up },
+                );
+            }
+            if up {
+                self.metrics.node_restart();
+                // Revival: whatever queued up during the outage
+                // resumes batch formation immediately.
+                for task in 0..self.tasks.len() {
+                    if self.tasks[task].node == node
+                        && !self.tasks[task].busy
+                    {
+                        self.try_form_batch(task);
+                    }
+                }
+            } else {
+                self.metrics.fault_injected();
+                self.on_node_down(node);
+            }
+        }
+        let down = self.node_was_up.iter().filter(|&&u| !u).count();
+        self.metrics.set_nodes_down(down);
+        for cam in 0..self.cfg.num_cameras {
+            let up = self.faults.camera_alive(cam, self.now);
+            if up == self.cam_was_up[cam] {
+                continue;
+            }
+            self.cam_was_up[cam] = up;
+            if !up {
+                self.metrics.fault_injected();
+            }
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::CameraFault {
+                        camera: cam as u32,
+                        up,
+                    },
+                );
+            }
+        }
+        // Every query's spotlight reacts at the transition instant,
+        // not the next periodic TL tick.
+        for qi in 0..self.active.len() {
+            let q = self.active[qi];
+            self.refresh_active_set(q);
+        }
+        self.metrics
+            .set_active_cameras(self.active_cameras_total());
+    }
+
+    /// Crash consequences for every executor on `node`. A task that
+    /// will revive keeps its queues in place (formation resumes at the
+    /// revival tick); a *permanently* dead task's backlog is orphaned —
+    /// re-dispatched to a surviving same-stage peer when recovery is
+    /// on (every active query is registered with every executor's
+    /// fair-share batcher, so the survivor accepts them), written off
+    /// as `lost_to_fault` otherwise. In-flight batches are voided
+    /// separately when their completion pops
+    /// ([`FaultModel::node_down_during`]).
+    fn on_node_down(&mut self, node: usize) {
+        let permanent =
+            self.faults.node_revives_at(node, self.now).is_none();
+        if !permanent {
+            return;
+        }
+        for task in 0..self.tasks.len() {
+            if self.tasks[task].node != node
+                || !matches!(
+                    self.tasks[task].stage,
+                    Stage::Va | Stage::Cr
+                )
+            {
+                continue;
+            }
+            let stage = self.tasks[task].stage;
+            let target = self.pick_survivor(task, stage);
+            let recover = self.cfg.service.recovery.enabled;
+            if recover {
+                if let Some(to) = target {
+                    self.task_redirect[task] = to;
+                    // Repair chains: traffic already redirected at the
+                    // dead task follows it to the survivor.
+                    for r in self.task_redirect.iter_mut() {
+                        if *r == task {
+                            *r = to;
+                        }
+                    }
+                }
+            }
+            let mut orphans = std::mem::take(&mut self.kept_scratch);
+            orphans.clear();
+            self.tasks[task].batcher.drain_into(&mut orphans);
+            match (recover, target) {
+                (true, Some(to)) if !orphans.is_empty() => {
+                    self.metrics.redispatched(orphans.len() as u64);
+                    if self.obs.enabled() {
+                        self.obs.emit(
+                            self.now,
+                            &TraceEvent::Redispatch {
+                                stage,
+                                from_task: task as u32,
+                                to_task: to as u32,
+                                events: orphans.len() as u32,
+                            },
+                        );
+                    }
+                    // The service re-dispatches from its own copy (the
+                    // dead node cannot send): one control-message
+                    // latency, arrival order preserved.
+                    let lat = self.net.transfer_estimate(
+                        self.net.meta_bytes,
+                        self.now,
+                    );
+                    for qe in orphans.drain(..) {
+                        self.push(
+                            self.now + lat,
+                            Ev::Arrive {
+                                task: to,
+                                ev: qe.item,
+                                batch: None,
+                            },
+                        );
+                    }
+                }
+                _ => {
+                    for qe in orphans.drain(..) {
+                        let q = qe.item.header.query;
+                        self.lose_event(q, qe.id, stage);
+                    }
+                }
+            }
+            self.kept_scratch = orphans;
+        }
+    }
+
+    /// First alive executor of `stage` other than `task`, if any.
+    fn pick_survivor(&self, task: usize, stage: Stage) -> Option<usize> {
+        (0..self.tasks.len()).find(|&t| {
+            t != task
+                && self.tasks[t].stage == stage
+                && self
+                    .faults
+                    .node_alive(self.tasks[t].node, self.now)
+        })
     }
 
     // ---- sink (UV) -------------------------------------------------------
@@ -1924,6 +2316,22 @@ impl<S: ObsSink> MultiQueryDes<S> {
             let sp = span_begin(&self.obs);
             ctx.tl.active_set_into(&self.graph, self.now, &mut active);
             span_end(&self.obs, Scope::SpotlightExpand, sp);
+            // Graceful degradation: while any of this query's active
+            // cameras is dark, re-expand at a pushed-forward horizon —
+            // the entity may travel unobserved, so the plausible region
+            // widens over the outage instead of tunnel-visioning on it.
+            if !self.faults.is_static()
+                && self.cfg.service.recovery.enabled
+                && active
+                    .iter()
+                    .any(|&c| !self.faults.camera_alive(c, self.now))
+            {
+                ctx.tl.active_set_into(
+                    &self.graph,
+                    self.now + FAULT_WIDEN,
+                    &mut active,
+                );
+            }
             ctx.peak_active = ctx.peak_active.max(active.len());
             for a in ctx.active_cams.iter_mut() {
                 *a = false;
@@ -2192,6 +2600,99 @@ mod tests {
         assert_eq!(base.rng_draws, traced.rng_draws);
         assert_eq!(base.core_events, traced.core_events);
         assert!(ring.total() > 0, "recorder saw the run");
+    }
+
+    #[test]
+    fn mq_node_crash_ab_conserves_per_query() {
+        use crate::config::{FaultEvent, FaultKind};
+        let mk = |enabled: bool| {
+            let mut cfg = base_cfg();
+            cfg.cluster.cr_instances = 2;
+            cfg.service.fault_events.push(FaultEvent {
+                at_sec: 20.0,
+                kind: FaultKind::NodeCrash {
+                    node: 1,
+                    down_secs: None,
+                },
+            });
+            cfg.service.recovery.enabled = enabled;
+            run(cfg, mq_cfg(3))
+        };
+        let on = mk(true);
+        let off = mk(false);
+        for r in [&on, &off] {
+            assert!(r.aggregate.conserved(), "{:?}", r.aggregate);
+            assert!(r.metrics.faults_injected > 0);
+            assert_eq!(
+                r.metrics.lost_to_fault,
+                r.aggregate.lost_to_fault,
+            );
+            for q in r.activated() {
+                let s = q.summary.as_ref().unwrap();
+                assert!(s.conserved(), "query {}: {:?}", q.id, s);
+                let (_, c) = r
+                    .metrics
+                    .per_query
+                    .iter()
+                    .find(|(id, _)| *id == q.id)
+                    .unwrap();
+                assert_eq!(
+                    c.lost_to_fault, s.lost_to_fault,
+                    "query {}",
+                    q.id
+                );
+            }
+        }
+        // Recovery re-dispatches and retries instead of writing work
+        // off: it never loses more than the fail-stop baseline.
+        assert!(
+            on.aggregate.lost_to_fault <= off.aggregate.lost_to_fault,
+            "on={} off={}",
+            on.aggregate.lost_to_fault,
+            off.aggregate.lost_to_fault,
+        );
+    }
+
+    #[test]
+    fn mq_camera_outage_is_deterministic_and_conserved() {
+        use crate::config::{FaultEvent, FaultKind};
+        let mk = || {
+            let mut cfg = base_cfg();
+            cfg.service.fault_events.push(FaultEvent {
+                at_sec: 10.0,
+                kind: FaultKind::CameraOutage {
+                    camera: 3,
+                    down_secs: Some(20.0),
+                },
+            });
+            run(cfg, mq_cfg(3))
+        };
+        let a = mk();
+        let b = mk();
+        assert!(a.aggregate.conserved(), "{:?}", a.aggregate);
+        // An outage alone loses nothing: frames are simply never
+        // captured (no loss windows, no crashes).
+        assert_eq!(a.aggregate.lost_to_fault, 0);
+        assert_eq!(a.aggregate.generated, b.aggregate.generated);
+        assert_eq!(a.aggregate.on_time, b.aggregate.on_time);
+        assert_eq!(a.rng_draws, b.rng_draws);
+        assert_eq!(a.core_events, b.core_events);
+    }
+
+    #[test]
+    fn mq_empty_fault_schedule_is_bit_identical() {
+        // The recovery flag alone (no schedule) must not perturb the
+        // run: every fault hook short-circuits on the static model.
+        let base = run(base_cfg(), mq_cfg(3));
+        let mut cfg = base_cfg();
+        cfg.service.recovery.enabled = false;
+        let toggled = run(cfg, mq_cfg(3));
+        assert_eq!(base.aggregate.generated, toggled.aggregate.generated);
+        assert_eq!(base.aggregate.on_time, toggled.aggregate.on_time);
+        assert_eq!(base.aggregate.dropped, toggled.aggregate.dropped);
+        assert_eq!(base.aggregate.lost_to_fault, 0);
+        assert_eq!(base.rng_draws, toggled.rng_draws);
+        assert_eq!(base.core_events, toggled.core_events);
     }
 
     #[test]

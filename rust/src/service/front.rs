@@ -304,6 +304,12 @@ struct Inner {
     catalog: AppCatalog,
     /// Query-embedding refinements across all queries (sink-side).
     fusion_updates: AtomicU64,
+    /// Latest routed refinement per query `(seq, embedding)` — the
+    /// sink's replay table. A restarted worker replays these through
+    /// its fresh [`FeedbackState`], whose seq-stamping makes the
+    /// re-delivery exactly-once: a stale or duplicate entry is
+    /// discarded, a missed one is recovered.
+    refinements: Mutex<FastMap<QueryId, (u32, Arc<Vec<f32>>)>>,
     state: Mutex<State>,
     start: Instant,
     stopping: AtomicBool,
@@ -619,6 +625,7 @@ impl TrackingService {
             admission: AdmissionController::new(policy),
             catalog,
             fusion_updates: AtomicU64::new(0),
+            refinements: Mutex::new(FastMap::default()),
             state: Mutex::new(State {
                 registry: QueryRegistry::new(),
                 ledgers: QueryLedgers::new(),
@@ -659,14 +666,10 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
-            let block = AnalyticsBlock::Cr(
-                inner.catalog.default_app().make_cr(),
-            );
             cr_workers.push(std::thread::spawn(move || {
-                worker_loop(
+                supervised_worker(
                     Stage::Cr,
                     wi as u32,
-                    block,
                     rx,
                     inner_c,
                     backend_c,
@@ -690,14 +693,10 @@ impl TrackingService {
             let inner_c = Arc::clone(&inner);
             let backend_c = Arc::clone(&backend);
             let delay = max_batch_delay;
-            let block = AnalyticsBlock::Va(
-                inner.catalog.default_app().make_va(),
-            );
             va_workers.push(std::thread::spawn(move || {
-                worker_loop(
+                supervised_worker(
                     Stage::Va,
                     wi as u32,
-                    block,
                     rx,
                     inner_c,
                     backend_c,
@@ -964,6 +963,7 @@ fn feed_loop(
         FastMap::default();
     let mut next_fire = Instant::now();
     while !inner.stopping.load(Ordering::SeqCst) {
+        let iter_sp = span_begin(&*inner.obs);
         let now = inner.now_us();
         let mut outgoing: Vec<Event> = Vec::new();
         let mut admitted = Vec::new();
@@ -1127,6 +1127,7 @@ fn feed_loop(
         // Promoted queries' contexts are built outside the lock; their
         // frames start on the next tick.
         finish_activation(&inner, admitted);
+        span_end(&*inner.obs, Scope::FeedLoop, iter_sp);
         frame_no += 1;
         next_fire += period;
         let now_i = Instant::now();
@@ -1156,18 +1157,144 @@ struct WorkerState {
     rels: FastMap<QueryId, f64>,
 }
 
-/// Shared executor loop: fair-share batching + backend scoring, with
-/// each query's own VA/CR block owning its payload transformation
-/// (`default_block` serves late events of already-retired queries).
-fn worker_loop(
+/// Max automatic restarts per worker before the supervisor gives up —
+/// a deterministically-broken backend or block must not spin the
+/// thread forever.
+const MAX_WORKER_RESTARTS: u32 = 8;
+
+/// Run [`worker_loop`] under a supervisor: user logic (a per-query
+/// block or the score backend) panicking kills one *incarnation* of
+/// the worker, not its inbox — the `Receiver` is owned out here, so
+/// registrations and events sent after the panic are delivered to the
+/// restarted loop. Each restart re-mints the worker's per-query state
+/// from the control plane ([`reregister_worker`]) and bumps the
+/// `worker_restarts` counter. Events queued in the dying incarnation's
+/// batcher are lost with it and remain `in_flight` in the ledgers
+/// (conservation still holds — they are accounted, just unterminated).
+///
+/// Pairs with [`crate::obs::RingSink::install_dump_on_panic`]: the
+/// panic hook runs *before* the unwind reaches our catch, so the
+/// flight-recorder tail is dumped first and then the worker recovers.
+///
+/// The supervised region never holds the state mutex (batching and
+/// scoring run lock-free), so a caught panic cannot poison it.
+fn supervised_worker(
     stage: Stage,
     task: u32,
-    mut default_block: AnalyticsBlock,
     rx: Receiver<Msg>,
     inner: Arc<Inner>,
     backend: Arc<dyn ScoreBackend>,
     max_batch_delay: Micros,
     mut forward: impl FnMut(Event),
+) {
+    let mut restarts = 0u32;
+    loop {
+        let resume = restarts > 0;
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || {
+                    worker_loop(
+                        stage,
+                        task,
+                        &rx,
+                        &inner,
+                        backend.as_ref(),
+                        max_batch_delay,
+                        &mut forward,
+                        resume,
+                    )
+                },
+            ));
+        match caught {
+            Ok(()) => return,
+            Err(_) => {
+                inner.metrics.worker_restart();
+                eprintln!(
+                    "[{stage:?} worker {task}] panicked; \
+                     restarting (restart #{})",
+                    restarts + 1
+                );
+                restarts += 1;
+                // A panic during the post-Stop final flush must not
+                // resurrect the worker (its Stop is already consumed
+                // and shutdown would hang on join); same once the
+                // restart budget is spent.
+                if inner.stopping.load(Ordering::SeqCst)
+                    || restarts > MAX_WORKER_RESTARTS
+                {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Rebuild a restarted worker's per-query state from the control
+/// plane: re-mint each active query's block from its own app, restore
+/// fair-share weights and ξ cost multipliers (the same pricing
+/// [`Channels::register`] ships), then replay the sink's latest QF
+/// refinements through the fresh seq-stamped [`FeedbackState`] —
+/// stale or duplicate deliveries are discarded, so replay composes
+/// with in-flight `QueryUpdate`s to exactly-once application.
+fn reregister_worker(
+    stage: Stage,
+    inner: &Inner,
+    ws: &mut WorkerState,
+    xi: &XiModel,
+) {
+    {
+        let st = inner.state.lock().unwrap();
+        let default =
+            inner.catalog.get(inner.catalog.default_kind());
+        for rec in st.registry.records() {
+            if rec.status != QueryStatus::Active {
+                continue;
+            }
+            let app = inner.catalog.get(rec.spec.app);
+            let (rel, block) = match stage {
+                Stage::Cr => (
+                    app.cr_cost / default.cr_cost.max(1e-9),
+                    AnalyticsBlock::Cr(app.make_cr()),
+                ),
+                _ => (
+                    app.va_cost / default.va_cost.max(1e-9),
+                    AnalyticsBlock::Va(app.make_va()),
+                ),
+            };
+            ws.batcher.register(rec.id, rec.spec.weight());
+            ws.blocks.insert(rec.id, block);
+            ws.rels.insert(rec.id, rel);
+            inner.metrics.set_app_xi(
+                rec.spec.app.index(),
+                stage,
+                ((xi.xi(1) as f64) * rel).round() as Micros,
+            );
+        }
+    }
+    for (q, (seq, emb)) in
+        inner.refinements.lock().unwrap().iter()
+    {
+        if ws.blocks.contains_key(q) {
+            ws.feedback.apply(*q, *seq, Arc::clone(emb));
+        }
+    }
+}
+
+/// Shared executor loop: fair-share batching + backend scoring, with
+/// each query's own VA/CR block owning its payload transformation
+/// (`default_block` serves late events of already-retired queries).
+/// `resume` marks a post-panic incarnation, whose per-query state is
+/// rebuilt from the control plane before any message is processed.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    stage: Stage,
+    task: u32,
+    rx: &Receiver<Msg>,
+    inner: &Arc<Inner>,
+    backend: &dyn ScoreBackend,
+    max_batch_delay: Micros,
+    forward: &mut impl FnMut(Event),
+    resume: bool,
 ) {
     let xi = backend.xi(stage);
     let gamma = inner.cfg.gamma();
@@ -1180,12 +1307,23 @@ fn worker_loop(
         crate::config::BatchingKind::Dynamic { max }
         | crate::config::BatchingKind::Nob { max } => max,
     };
+    let mut default_block = match stage {
+        Stage::Cr => AnalyticsBlock::Cr(
+            inner.catalog.default_app().make_cr(),
+        ),
+        _ => AnalyticsBlock::Va(
+            inner.catalog.default_app().make_va(),
+        ),
+    };
     let mut ws = WorkerState {
         batcher: FairShareBatcher::new(m_max.max(1)),
         blocks: FastMap::default(),
         feedback: FeedbackState::new(),
         rels: FastMap::default(),
     };
+    if resume {
+        reregister_worker(stage, inner, &mut ws, &xi);
+    }
     let mut scratch = BatchScratch::default();
 
     fn handle(
@@ -1372,11 +1510,11 @@ fn worker_loop(
                     &mut default_block,
                     &ws.feedback,
                     &ws.rels,
-                    backend.as_ref(),
+                    backend,
                     &xi,
-                    &inner,
+                    inner,
                     &mut scratch,
-                    &mut forward,
+                    forward,
                 );
                 ws.batcher.recycle(spare);
                 continue;
@@ -1390,7 +1528,7 @@ fn worker_loop(
                         if !handle(
                             msg,
                             stage,
-                            &inner,
+                            inner,
                             &mut ws,
                             &xi,
                             gamma,
@@ -1410,7 +1548,7 @@ fn worker_loop(
                         if !handle(
                             msg,
                             stage,
-                            &inner,
+                            inner,
                             &mut ws,
                             &xi,
                             gamma,
@@ -1429,7 +1567,7 @@ fn worker_loop(
             if !handle(
                 msg,
                 stage,
-                &inner,
+                inner,
                 &mut ws,
                 &xi,
                 gamma,
@@ -1452,11 +1590,11 @@ fn worker_loop(
                     &mut default_block,
                     &ws.feedback,
                     &ws.rels,
-                    backend.as_ref(),
+                    backend,
                     &xi,
-                    &inner,
+                    inner,
                     &mut scratch,
-                    &mut forward,
+                    forward,
                 );
                 ws.batcher.recycle(spare);
             }
@@ -1559,7 +1697,9 @@ fn exec_batch(
             query: q,
             refined: feedback.refined(q),
         };
+        let msp = span_begin(&*inner.obs);
         backend.score_into(&ctx, &events[start..end], scores);
+        span_end(&*inner.obs, Scope::ModelExec, msp);
         debug_assert_eq!(
             scores.len(),
             end - start,
@@ -1681,6 +1821,13 @@ fn sink_loop(
                     *counts.entry(q).or_insert(0) += 1;
                     if let Some(emb) = refinement {
                         let r = router.refine(q, emb);
+                        // Record the newest routed refinement so a
+                        // restarted worker can replay it into its
+                        // fresh FeedbackState.
+                        inner.refinements.lock().unwrap().insert(
+                            q,
+                            (r.seq, Arc::clone(&r.embedding)),
+                        );
                         inner.metrics.refinement();
                         if inner.obs.enabled() {
                             inner.obs.emit(
@@ -1708,6 +1855,7 @@ fn sink_loop(
             Ok(Msg::Deregister(q)) => {
                 qfs.remove(&q);
                 router.forget(q);
+                inner.refinements.lock().unwrap().remove(&q);
                 if let Some(n) = counts.remove(&q) {
                     let mut st = inner.state.lock().unwrap();
                     *st.fusion_counts.entry(q).or_insert(0) += n;
@@ -1867,6 +2015,59 @@ mod tests {
         let backend = SimBackend::default();
         assert_eq!(m.xi_app_us[0][0], backend.va_xi.xi(1));
         assert_eq!(m.xi_app_us[0][1], backend.cr_xi.xi(1));
+    }
+
+    /// Backend whose first scoring call panics (every later call
+    /// delegates) — exercises the worker supervisor end to end.
+    struct PanicOnceBackend {
+        delegate: SimBackend,
+        fired: AtomicBool,
+    }
+
+    impl ScoreBackend for PanicOnceBackend {
+        fn score_into(
+            &self,
+            ctx: &ScoreCtx<'_>,
+            events: &[Event],
+            out: &mut Vec<f32>,
+        ) {
+            if !self.fired.swap(true, Ordering::SeqCst) {
+                panic!("injected scoring fault");
+            }
+            self.delegate.score_into(ctx, events, out)
+        }
+
+        fn xi(&self, stage: Stage) -> XiModel {
+            self.delegate.xi(stage)
+        }
+    }
+
+    #[test]
+    fn worker_panic_restarts_and_service_recovers() {
+        let svc = TrackingService::start(
+            small_cfg(),
+            policy(8, 4),
+            Arc::new(PanicOnceBackend {
+                delegate: SimBackend::default(),
+                fired: AtomicBool::new(false),
+            }),
+        )
+        .unwrap();
+        let (a, st_a) = svc.submit(spec("alpha", 0, 0.8)).unwrap();
+        assert_eq!(st_a, QueryStatus::Active);
+        std::thread::sleep(Duration::from_millis(1_400));
+        assert_eq!(svc.status(a), Some(QueryStatus::Completed));
+        let report = svc.stop();
+        assert!(
+            report.metrics.worker_restarts >= 1,
+            "the panicked worker restarted"
+        );
+        let s = &report.aggregate;
+        assert!(s.generated > 0);
+        assert!(s.conserved(), "{s:?}");
+        // The pipeline kept completing events after the restart (the
+        // lost batch stays in_flight; everything else terminates).
+        assert!(s.on_time + s.delayed > 0, "{s:?}");
     }
 
     #[test]

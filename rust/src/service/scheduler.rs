@@ -69,6 +69,20 @@ impl<T> FairShareBatcher<T> {
         out
     }
 
+    /// Empty the forming batch and every per-query queue into `out`
+    /// (forming batch first, then queues in registration order —
+    /// per-query FIFO preserved). Registrations and fair-share weights
+    /// are kept: this orphans a dead executor's backlog for
+    /// re-dispatch, it does not cancel queries.
+    pub fn drain_into(&mut self, out: &mut Vec<QueuedEvent<T>>) {
+        out.append(&mut self.current);
+        self.cur_deadline = BUDGET_INF;
+        self.cur_relsum = 0.0;
+        for (_, dq) in self.queues.iter_mut() {
+            out.extend(dq.drain(..));
+        }
+    }
+
     fn queue_mut(
         &mut self,
         query: QueryId,

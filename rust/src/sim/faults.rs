@@ -1,0 +1,416 @@
+//! Deterministic fault injection: the failure-domain limit of the
+//! dynamism machinery.
+//!
+//! PR 5's [`super::ComputeModel`]/[`super::NetModel`] make resources
+//! *slower* on a schedule; [`FaultModel`] makes them *fail* on one —
+//! the factor → ∞ limiting case the ROADMAP's sharding north-star
+//! prices node-dark scenarios with. Faults are schedule-driven data
+//! ([`crate::config::FaultEvent`]), never sampled at injection time, so
+//! the determinism contract extends cleanly: the same `fault_events`
+//! under the same seed replay bit-identically, and an **empty** schedule
+//! short-circuits every query ([`FaultModel::is_static`]) so
+//! failure-free runs stay bit-identical to a build without the fault
+//! machinery at all (`prop_faults` asserts this).
+//!
+//! The model answers point-in-time and interval queries; the engines
+//! own the *consequences* (timeout + bounded-backoff retry, orphan
+//! re-dispatch, TL degradation, `lost_to_fault` accounting). A node
+//! crash is deliberately **not** a literal infinite execution duration
+//! — that would wedge the event heap — but an aliveness predicate the
+//! engines consult at batch formation and completion.
+
+use crate::config::{FaultEvent, FaultKind, RecoveryConfig};
+use crate::util::{millis, secs, Micros};
+
+/// Per-resource `(effective_from, down?)` step schedules compiled from
+/// a [`FaultEvent`] list. Overlapping windows on the same resource
+/// resolve last-step-wins (like the compute schedule); schedules are
+/// intended to be non-overlapping per resource.
+#[derive(Debug, Clone, Default)]
+pub struct FaultModel {
+    /// Per-node `(from, down)` steps, sorted by time.
+    node_steps: Vec<Vec<(Micros, bool)>>,
+    /// Per-camera `(from, down)` steps, sorted by time.
+    cam_steps: Vec<Vec<(Micros, bool)>>,
+    /// Partitioned links as `(min_node, max_node, from, until)`
+    /// half-open windows (`until = Micros::MAX` when permanent).
+    links: Vec<(usize, usize, Micros, Micros)>,
+    /// Message-loss windows `(from, until, prob)`.
+    loss: Vec<(Micros, Micros, f64)>,
+    /// Sorted, deduped times at which any node/camera flips state —
+    /// the engines schedule a fault tick at each so crash consequences
+    /// (orphan drains, restarts, TL refresh) happen at the right
+    /// virtual instant.
+    transitions: Vec<Micros>,
+    /// No events at all: every query short-circuits to "healthy" so
+    /// failure-free runs pay nothing and stay bit-identical.
+    is_static: bool,
+}
+
+impl FaultModel {
+    /// Compile the schedule for `nodes` cluster nodes and `cameras`
+    /// cameras. Out-of-range node/camera indices are ignored (like
+    /// [`super::ComputeModel`]).
+    pub fn new(
+        events: &[FaultEvent],
+        nodes: usize,
+        cameras: usize,
+    ) -> Self {
+        if events.is_empty() {
+            return Self {
+                is_static: true,
+                ..Self::default()
+            };
+        }
+        let mut m = Self {
+            node_steps: vec![Vec::new(); nodes],
+            cam_steps: vec![Vec::new(); cameras],
+            is_static: false,
+            ..Self::default()
+        };
+        for ev in events {
+            let at = secs(ev.at_sec);
+            match ev.kind {
+                FaultKind::NodeCrash { node, down_secs } => {
+                    if let Some(s) = m.node_steps.get_mut(node) {
+                        s.push((at, true));
+                        m.transitions.push(at);
+                        if let Some(d) = down_secs {
+                            let up = at + secs(d);
+                            s.push((up, false));
+                            m.transitions.push(up);
+                        }
+                    }
+                }
+                FaultKind::CameraOutage { camera, down_secs } => {
+                    if let Some(s) = m.cam_steps.get_mut(camera) {
+                        s.push((at, true));
+                        m.transitions.push(at);
+                        if let Some(d) = down_secs {
+                            let up = at + secs(d);
+                            s.push((up, false));
+                            m.transitions.push(up);
+                        }
+                    }
+                }
+                FaultKind::LinkPartition { a, b, down_secs } => {
+                    let until = down_secs
+                        .map(|d| at + secs(d))
+                        .unwrap_or(Micros::MAX);
+                    m.links.push((a.min(b), a.max(b), at, until));
+                }
+                FaultKind::MessageLoss { prob, dur_secs } => {
+                    let until = dur_secs
+                        .map(|d| at + secs(d))
+                        .unwrap_or(Micros::MAX);
+                    m.loss.push((at, until, prob.clamp(0.0, 1.0)));
+                }
+            }
+        }
+        for s in m.node_steps.iter_mut().chain(m.cam_steps.iter_mut())
+        {
+            s.sort_by_key(|&(t, _)| t);
+        }
+        m.transitions.sort_unstable();
+        m.transitions.dedup();
+        m
+    }
+
+    /// True when no faults are scheduled (every query is "healthy").
+    pub fn is_static(&self) -> bool {
+        self.is_static
+    }
+
+    /// Times at which any node or camera flips state — the engines'
+    /// fault-tick schedule.
+    pub fn transitions(&self) -> &[Micros] {
+        &self.transitions
+    }
+
+    fn steps_alive(steps: &[Vec<(Micros, bool)>], i: usize, t: Micros) -> bool {
+        match steps.get(i) {
+            None => true,
+            Some(s) => !s
+                .iter()
+                .rev()
+                .find(|&&(from, _)| from <= t)
+                .map(|&(_, down)| down)
+                .unwrap_or(false),
+        }
+    }
+
+    /// Is `node` up at time `t`?
+    pub fn node_alive(&self, node: usize, t: Micros) -> bool {
+        if self.is_static {
+            return true;
+        }
+        Self::steps_alive(&self.node_steps, node, t)
+    }
+
+    /// Is camera `cam` producing frames at time `t`?
+    pub fn camera_alive(&self, cam: usize, t: Micros) -> bool {
+        if self.is_static {
+            return true;
+        }
+        Self::steps_alive(&self.cam_steps, cam, t)
+    }
+
+    /// Was `node` down at any instant in the half-open window
+    /// `(from, to]`? This is the in-flight-batch question: a batch
+    /// dispatched at `from` whose completion pops at `to` is void if
+    /// its node died anywhere in between — even if it also restarted.
+    pub fn node_down_during(
+        &self,
+        node: usize,
+        from: Micros,
+        to: Micros,
+    ) -> bool {
+        if self.is_static {
+            return false;
+        }
+        if !self.node_alive(node, to) {
+            return true;
+        }
+        self.node_steps
+            .get(node)
+            .map(|s| {
+                s.iter().any(|&(t, down)| down && from < t && t <= to)
+            })
+            .unwrap_or(false)
+    }
+
+    /// The node's next restart time strictly after `t`, if any.
+    pub fn node_revives_at(
+        &self,
+        node: usize,
+        t: Micros,
+    ) -> Option<Micros> {
+        if self.is_static {
+            return None;
+        }
+        self.node_steps.get(node).and_then(|s| {
+            s.iter()
+                .find(|&&(from, down)| !down && from > t)
+                .map(|&(from, _)| from)
+        })
+    }
+
+    /// Is the (bidirectional) link between `a` and `b` up at `t`?
+    /// Intra-node traffic (`a == b`) never partitions.
+    pub fn link_up(&self, a: usize, b: usize, t: Micros) -> bool {
+        if self.is_static || a == b {
+            return true;
+        }
+        let key = (a.min(b), a.max(b));
+        !self.links.iter().any(|&(la, lb, from, until)| {
+            (la, lb) == key && from <= t && t < until
+        })
+    }
+
+    /// Message-loss probability in effect at `t` (max over open
+    /// windows; 0.0 when none — callers must skip their RNG draw then,
+    /// so loss-free schedules leave the fault RNG stream untouched).
+    pub fn loss_prob(&self, t: Micros) -> f64 {
+        if self.is_static {
+            return 0.0;
+        }
+        self.loss
+            .iter()
+            .filter(|&&(from, until, _)| from <= t && t < until)
+            .map(|&(_, _, p)| p)
+            .fold(0.0, f64::max)
+    }
+
+    /// True when any message-loss window is configured (used to decide
+    /// whether delivery must consult the fault RNG at all).
+    pub fn has_loss(&self) -> bool {
+        !self.loss.is_empty()
+    }
+}
+
+/// Exponential-backoff delay for retry attempt `k` (0-based) under
+/// `rc`: `backoff_base_ms * 2^k`, as Micros.
+pub fn backoff_delay(rc: &RecoveryConfig, attempt: u32) -> Micros {
+    millis(rc.backoff_base_ms * f64::powi(2.0, attempt.min(16) as i32))
+        .max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SEC;
+
+    fn ev(at_sec: f64, kind: FaultKind) -> FaultEvent {
+        FaultEvent { at_sec, kind }
+    }
+
+    #[test]
+    fn empty_schedule_is_static_and_healthy() {
+        let m = FaultModel::new(&[], 4, 10);
+        assert!(m.is_static());
+        assert!(m.node_alive(0, 500 * SEC));
+        assert!(m.camera_alive(9, 500 * SEC));
+        assert!(m.link_up(0, 3, 500 * SEC));
+        assert_eq!(m.loss_prob(500 * SEC), 0.0);
+        assert!(!m.has_loss());
+        assert!(m.transitions().is_empty());
+        assert!(!m.node_down_during(0, 0, 1000 * SEC));
+    }
+
+    #[test]
+    fn crash_restart_window() {
+        let m = FaultModel::new(
+            &[ev(
+                100.0,
+                FaultKind::NodeCrash { node: 1, down_secs: Some(50.0) },
+            )],
+            3,
+            0,
+        );
+        assert!(m.node_alive(1, 99 * SEC));
+        assert!(!m.node_alive(1, 100 * SEC));
+        assert!(!m.node_alive(1, 149 * SEC));
+        assert!(m.node_alive(1, 150 * SEC));
+        assert!(m.node_alive(0, 120 * SEC), "other nodes unaffected");
+        assert_eq!(m.node_revives_at(1, 100 * SEC), Some(150 * SEC));
+        assert_eq!(m.transitions(), &[100 * SEC, 150 * SEC]);
+        // The in-flight window question: down during (90, 110]; clean
+        // before and after the outage.
+        assert!(m.node_down_during(1, 90 * SEC, 110 * SEC));
+        assert!(!m.node_down_during(1, 10 * SEC, 90 * SEC));
+        assert!(!m.node_down_during(1, 151 * SEC, 200 * SEC));
+        // A window spanning the whole outage still saw the crash.
+        assert!(m.node_down_during(1, 90 * SEC, 200 * SEC));
+    }
+
+    #[test]
+    fn permanent_crash_never_revives() {
+        let m = FaultModel::new(
+            &[ev(
+                10.0,
+                FaultKind::NodeCrash { node: 0, down_secs: None },
+            )],
+            1,
+            0,
+        );
+        assert!(!m.node_alive(0, 9999 * SEC));
+        assert_eq!(m.node_revives_at(0, 10 * SEC), None);
+    }
+
+    #[test]
+    fn camera_flap() {
+        let m = FaultModel::new(
+            &[
+                ev(
+                    5.0,
+                    FaultKind::CameraOutage {
+                        camera: 2,
+                        down_secs: Some(3.0),
+                    },
+                ),
+                ev(
+                    20.0,
+                    FaultKind::CameraOutage {
+                        camera: 2,
+                        down_secs: Some(2.0),
+                    },
+                ),
+            ],
+            0,
+            4,
+        );
+        assert!(m.camera_alive(2, 4 * SEC));
+        assert!(!m.camera_alive(2, 6 * SEC));
+        assert!(m.camera_alive(2, 10 * SEC));
+        assert!(!m.camera_alive(2, 21 * SEC));
+        assert!(m.camera_alive(2, 22 * SEC));
+        assert_eq!(m.transitions().len(), 4);
+    }
+
+    #[test]
+    fn link_partition_is_symmetric_and_heals() {
+        let m = FaultModel::new(
+            &[ev(
+                50.0,
+                FaultKind::LinkPartition {
+                    a: 3,
+                    b: 1,
+                    down_secs: Some(25.0),
+                },
+            )],
+            4,
+            0,
+        );
+        assert!(m.link_up(1, 3, 49 * SEC));
+        assert!(!m.link_up(1, 3, 50 * SEC));
+        assert!(!m.link_up(3, 1, 60 * SEC), "symmetric");
+        assert!(m.link_up(3, 1, 75 * SEC));
+        assert!(m.link_up(0, 2, 60 * SEC), "other links unaffected");
+        assert!(m.link_up(1, 1, 60 * SEC), "loopback never partitions");
+    }
+
+    #[test]
+    fn loss_windows_and_clamping() {
+        let m = FaultModel::new(
+            &[
+                ev(
+                    10.0,
+                    FaultKind::MessageLoss {
+                        prob: 0.25,
+                        dur_secs: Some(10.0),
+                    },
+                ),
+                ev(
+                    15.0,
+                    FaultKind::MessageLoss {
+                        prob: 2.0,
+                        dur_secs: Some(1.0),
+                    },
+                ),
+            ],
+            1,
+            1,
+        );
+        assert!(m.has_loss());
+        assert_eq!(m.loss_prob(9 * SEC), 0.0);
+        assert_eq!(m.loss_prob(12 * SEC), 0.25);
+        assert_eq!(m.loss_prob(15 * SEC), 1.0, "clamped to 1");
+        assert_eq!(m.loss_prob(25 * SEC), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_indices_are_ignored() {
+        let m = FaultModel::new(
+            &[
+                ev(
+                    1.0,
+                    FaultKind::NodeCrash { node: 99, down_secs: None },
+                ),
+                ev(
+                    1.0,
+                    FaultKind::CameraOutage {
+                        camera: 99,
+                        down_secs: None,
+                    },
+                ),
+            ],
+            2,
+            2,
+        );
+        assert!(m.node_alive(0, 10 * SEC));
+        assert!(m.camera_alive(0, 10 * SEC));
+        assert!(m.transitions().is_empty());
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        let rc = RecoveryConfig {
+            enabled: true,
+            max_retries: 3,
+            backoff_base_ms: 250.0,
+        };
+        assert_eq!(backoff_delay(&rc, 0), millis(250.0));
+        assert_eq!(backoff_delay(&rc, 1), millis(500.0));
+        assert_eq!(backoff_delay(&rc, 2), millis(1000.0));
+    }
+}

@@ -1,10 +1,12 @@
 //! Workload simulation substrate: the entity's random walk, per-camera
 //! ground-truth visibility, synthetic identity images (CUHK03
 //! substitute), the MAN/WAN network model, time-varying per-node
-//! compute capacity and skewed device clocks.
+//! compute capacity, schedule-driven fault injection and skewed device
+//! clocks.
 
 mod clock;
 mod compute;
+mod faults;
 mod feeds;
 mod images;
 mod netmodel;
@@ -12,6 +14,7 @@ mod walk;
 
 pub use clock::ClockSkews;
 pub use compute::ComputeModel;
+pub use faults::{backoff_delay, FaultModel};
 pub use feeds::{visibility_of, FrameTruth, GroundTruth};
 pub use images::{
     identity_embedding, identity_image, identity_image_into,

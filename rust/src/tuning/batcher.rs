@@ -150,6 +150,17 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Pull every queued event — the forming batch, then the pending
+    /// FIFO, preserving arrival order — out of the batcher. The
+    /// failure-domain drain: a crashed executor's queue is either
+    /// re-dispatched to a surviving peer or written off as lost by the
+    /// engines; the batcher itself is left empty and reusable.
+    pub fn drain_into(&mut self, out: &mut Vec<QueuedEvent<T>>) {
+        out.extend(self.current.drain(..));
+        out.extend(self.pending.drain(..));
+        self.cur_deadline = BUDGET_INF;
+    }
+
     /// Rebuild the NOB rate → batch-size table from the *current* ξ
     /// estimate — the online-ξ counterpart of the table's one-time
     /// §5.1 benchmark, called by the engines after each
@@ -511,6 +522,33 @@ mod tests {
         b.retune_nob(&XiModel::affine_ms(500.0, 500.0));
         b.push(qe(0, 0, BUDGET_INF));
         assert_eq!(ready_ids(b.poll(0, &x)), vec![0]);
+    }
+
+    #[test]
+    fn drain_into_empties_current_then_pending() {
+        let mut b = Batcher::dynamic(25);
+        let x = xi();
+        // Two events join the forming batch (far deadlines), two more
+        // stay pending behind a Timer poll.
+        for k in 0..2 {
+            b.push(qe(k, 0, 60 * SEC));
+        }
+        assert!(matches!(b.poll(0, &x), BatcherPoll::Timer(_)));
+        b.push(qe(2, 0, 60 * SEC));
+        b.push(qe(3, 0, 60 * SEC));
+        let mut out = Vec::new();
+        b.drain_into(&mut out);
+        assert!(out.len() >= 2, "drained {} events", out.len());
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.current_len(), 0);
+        // Arrival order is preserved across the current/pending seam.
+        let ids: Vec<u64> = out.iter().map(|e| e.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        // The batcher stays usable after the drain.
+        b.push(qe(9, SEC, BUDGET_INF));
+        assert_eq!(ready_ids(b.poll(SEC, &x)), vec![9]);
     }
 
     #[test]

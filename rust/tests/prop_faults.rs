@@ -1,0 +1,292 @@
+//! Property tests over the fault-injection and recovery subsystem
+//! (hand-rolled generator loops; see `prop_tuning.rs` for the house
+//! style).
+//!
+//! The contract under test:
+//!
+//! * An EMPTY fault schedule leaves both DES engines bit-identical
+//!   per seed, with recovery enabled or disabled — the fault machinery
+//!   must cost zero determinism when unused.
+//! * Fault schedules are data, not randomness: the same schedule under
+//!   the same seed reruns bit-identically, on both engines, for every
+//!   fault class (crash, outage, partition, message loss).
+//! * Conservation survives every fault class: generated = on-time +
+//!   delayed + dropped + lost_to_fault + in-flight, and the metrics
+//!   registry agrees with the ledger on the fault losses.
+//! * Recovery never hurts: same seed, same mid-run node crash —
+//!   recovery-on completes at least as many events on time as
+//!   recovery-off, on exactly the same offered load.
+//! * The §4.3.3 exemption (avoid-drop/probe) is still honored while
+//!   faults fire: no event that earned an exemption is ever dropped.
+
+use anveshak::config::{
+    BatchingKind, ExperimentConfig, FaultEvent, FaultKind, TlKind,
+};
+use anveshak::coordinator::des;
+use anveshak::metrics::Summary;
+use anveshak::obs::{validate_trace, JsonlSink};
+use anveshak::util::{rng, Json, Rng};
+
+fn cases(seed: u64, n: usize) -> impl Iterator<Item = Rng> {
+    (0..n).map(move |i| rng(seed, i as u64))
+}
+
+/// Small-but-busy config: Base TL keeps the whole network generating,
+/// so injected faults always have in-flight work to hit.
+fn small_cfg(seed: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = format!("prop_faults_{seed}");
+    c.seed = seed;
+    c.num_cameras = 50;
+    c.workload.vertices = 50;
+    c.workload.edges = 140;
+    c.duration_secs = 40.0;
+    c.tl = TlKind::Base;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c
+}
+
+fn with_mq(mut c: ExperimentConfig) -> ExperimentConfig {
+    c.multi_query.num_queries = 3;
+    c.multi_query.mean_interarrival_secs = 5.0;
+    c.multi_query.lifetime_secs = 25.0;
+    c.multi_query.max_active = 8;
+    c.multi_query.max_active_cameras = 10_000;
+    c
+}
+
+/// Bit-identity over every summary field (floats included — the claim
+/// is identity, not tolerance).
+fn assert_summaries_eq(a: &Summary, b: &Summary, ctx: &str) {
+    assert_eq!(a.generated, b.generated, "{ctx}: generated");
+    assert_eq!(a.on_time, b.on_time, "{ctx}: on_time");
+    assert_eq!(a.delayed, b.delayed, "{ctx}: delayed");
+    assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+    assert_eq!(
+        a.lost_to_fault, b.lost_to_fault,
+        "{ctx}: lost_to_fault"
+    );
+    assert_eq!(a.in_flight, b.in_flight, "{ctx}: in_flight");
+    assert_eq!(a.latency.median, b.latency.median, "{ctx}: median");
+    assert_eq!(a.latency.p99, b.latency.p99, "{ctx}: p99");
+    assert_eq!(a.latency.max, b.latency.max, "{ctx}: max");
+}
+
+/// One random fault event drawn from all four fault classes.
+fn random_fault(r: &mut Rng, cams: usize) -> FaultEvent {
+    let at_sec = r.range_f64(5.0, 30.0);
+    let window = |r: &mut Rng| {
+        if r.bool(0.5) {
+            Some(r.range_f64(2.0, 10.0))
+        } else {
+            None
+        }
+    };
+    let kind = match r.range_u(0, 4) {
+        0 => FaultKind::NodeCrash {
+            node: r.range_u(0, 10),
+            down_secs: window(r),
+        },
+        1 => FaultKind::CameraOutage {
+            camera: r.range_u(0, cams),
+            down_secs: window(r),
+        },
+        2 => FaultKind::LinkPartition {
+            a: r.range_u(0, 10),
+            b: r.range_u(0, 10),
+            down_secs: window(r),
+        },
+        _ => FaultKind::MessageLoss {
+            prob: r.range_f64(0.05, 0.4),
+            dur_secs: window(r),
+        },
+    };
+    FaultEvent { at_sec, kind }
+}
+
+// ---------------------------------------------------------------------------
+// (a) Empty schedule => the fault machinery is invisible.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_empty_schedule_bit_identical_across_recovery_toggle() {
+    for seed in [3u64, 17, 41] {
+        let mk = |enabled: bool| {
+            let mut c = small_cfg(seed);
+            c.drops_enabled = seed % 3 == 0;
+            assert!(c.service.fault_events.is_empty());
+            c.service.recovery.enabled = enabled;
+            c
+        };
+        let a = des::run(mk(true));
+        let b = des::run(mk(false));
+        let ctx = format!("seed {seed} recovery toggle");
+        assert_summaries_eq(&a.summary, &b.summary, &ctx);
+        assert_eq!(a.summary.lost_to_fault, 0, "{ctx}");
+        assert_eq!(a.detections, b.detections, "{ctx}");
+        assert_eq!(a.core_events, b.core_events, "{ctx}");
+        assert_eq!(a.rng_draws, b.rng_draws, "{ctx}");
+        assert_eq!(a.metrics.faults_injected, 0, "{ctx}");
+
+        let ma = des::run_multi(with_mq(mk(true)));
+        let mb = des::run_multi(with_mq(mk(false)));
+        let ctx = format!("seed {seed} mq recovery toggle");
+        assert_summaries_eq(&ma.aggregate, &mb.aggregate, &ctx);
+        assert_eq!(ma.core_events, mb.core_events, "{ctx}");
+        assert_eq!(ma.rng_draws, mb.rng_draws, "{ctx}");
+        assert_eq!(ma.metrics.faults_injected, 0, "{ctx}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (b) Fault schedules are deterministic data + conservation holds.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fault_schedules_rerun_bit_identical_and_conserve() {
+    for (i, mut r) in cases(51, 6).enumerate() {
+        let mut cfg = small_cfg(500 + i as u64);
+        cfg.drops_enabled = r.bool(0.5);
+        let n = r.range_u(1, 4);
+        cfg.service.fault_events =
+            (0..n).map(|_| random_fault(&mut r, 50)).collect();
+        cfg.service.recovery.enabled = r.bool(0.5);
+        let ctx = format!(
+            "case {i} schedule {:?}",
+            cfg.service.fault_events
+        );
+
+        let a = des::run(cfg.clone());
+        let b = des::run(cfg.clone());
+        assert!(a.summary.conserved(), "{ctx}: {:?}", a.summary);
+        assert_summaries_eq(&a.summary, &b.summary, &ctx);
+        assert_eq!(a.detections, b.detections, "{ctx}");
+        assert_eq!(a.rng_draws, b.rng_draws, "{ctx}");
+        assert_eq!(
+            a.metrics.lost_to_fault, a.summary.lost_to_fault,
+            "{ctx}: registry and ledger disagree on fault losses"
+        );
+
+        let ma = des::run_multi(with_mq(cfg.clone()));
+        let mb = des::run_multi(with_mq(cfg));
+        assert!(ma.aggregate.conserved(), "{ctx}: {:?}", ma.aggregate);
+        assert_summaries_eq(&ma.aggregate, &mb.aggregate, &ctx);
+        assert_eq!(ma.rng_draws, mb.rng_draws, "{ctx}");
+        assert_eq!(
+            ma.metrics.lost_to_fault, ma.aggregate.lost_to_fault,
+            "{ctx}: mq registry and ledgers disagree on fault losses"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (c) Recovery never hurts at the same seed.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_recovery_never_completes_fewer_on_time() {
+    for seed in [9u64, 27] {
+        let mk = |enabled: bool| {
+            let mut c = small_cfg(seed);
+            c.service.fault_events = vec![FaultEvent {
+                at_sec: 15.0,
+                kind: FaultKind::NodeCrash {
+                    node: 1,
+                    down_secs: None,
+                },
+            }];
+            c.service.recovery.enabled = enabled;
+            c
+        };
+        let on = des::run(mk(true));
+        let off = des::run(mk(false));
+        assert!(on.summary.conserved(), "{:?}", on.summary);
+        assert!(off.summary.conserved(), "{:?}", off.summary);
+        assert_eq!(
+            on.summary.generated, off.summary.generated,
+            "seed {seed}: fault handling changed the offered load"
+        );
+        assert!(
+            on.summary.on_time >= off.summary.on_time,
+            "seed {seed}: recovery on {} < off {}",
+            on.summary.on_time,
+            off.summary.on_time
+        );
+        // The permanent crash orphans real work when recovery is off.
+        assert!(
+            off.summary.lost_to_fault > 0,
+            "seed {seed}: {:?}",
+            off.summary
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (d) The §4.3.3 exemption survives fault injection.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_exempt_events_never_dropped_under_faults() {
+    for seed in [12u64, 34] {
+        let mut cfg = small_cfg(seed);
+        cfg.drops_enabled = true;
+        cfg.service.fault_events = vec![
+            FaultEvent {
+                at_sec: 10.0,
+                kind: FaultKind::NodeCrash {
+                    node: 1,
+                    down_secs: Some(10.0),
+                },
+            },
+            FaultEvent {
+                at_sec: 20.0,
+                kind: FaultKind::MessageLoss {
+                    prob: 0.2,
+                    dur_secs: Some(10.0),
+                },
+            },
+        ];
+        let sink = JsonlSink::in_memory();
+        let r = des::run_with_sink(cfg, sink.clone());
+        let text = sink.contents().unwrap();
+        let check = validate_trace(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(
+            check.violations().is_empty(),
+            "seed {seed}: {:?}",
+            check.violations()
+        );
+        assert_eq!(
+            check.lost_to_fault, r.summary.lost_to_fault,
+            "seed {seed}"
+        );
+        // An event that earned an exemption (avoid_drop from a CR
+        // detection, or a probe) must never be dropped AFTERWARDS.
+        // Order matters: probes recycle the id of the drop that
+        // spawned them, so drop-then-exempted is legitimate — only
+        // exempted-then-drop violates §4.3.3. Trace lines are in time
+        // order, so one forward scan decides it.
+        let mut exempted = std::collections::BTreeSet::new();
+        let mut violations = Vec::new();
+        for line in text.lines().skip(1) {
+            let j = Json::parse(line).unwrap();
+            match j.at("ev").as_str() {
+                Some("exempted") => {
+                    exempted.insert(j.at("event").as_usize().unwrap());
+                }
+                Some("drop") => {
+                    let id = j.at("event").as_usize().unwrap();
+                    if exempted.contains(&id) {
+                        violations.push(id);
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(
+            violations.is_empty(),
+            "seed {seed}: exempt events dropped under faults: \
+             {violations:?}"
+        );
+    }
+}

@@ -63,6 +63,10 @@ fn assert_summaries_eq(a: &Summary, b: &Summary, ctx: &str) {
     assert_eq!(a.on_time, b.on_time, "{ctx}: on_time");
     assert_eq!(a.delayed, b.delayed, "{ctx}: delayed");
     assert_eq!(a.dropped, b.dropped, "{ctx}: dropped");
+    assert_eq!(
+        a.lost_to_fault, b.lost_to_fault,
+        "{ctx}: lost_to_fault"
+    );
     assert_eq!(a.in_flight, b.in_flight, "{ctx}: in_flight");
     assert_eq!(
         a.true_positives, b.true_positives,
@@ -191,6 +195,10 @@ fn prop_trace_reconciles_with_single_query_ledger() {
             );
             assert_eq!(check.on_time, s.on_time, "{ctx}");
             assert_eq!(check.dropped_total(), s.dropped, "{ctx}");
+            assert_eq!(
+                check.lost_to_fault, s.lost_to_fault,
+                "{ctx}"
+            );
             assert_eq!(check.unterminated(), s.in_flight, "{ctx}");
             assert_eq!(check.detections, r.detections, "{ctx}");
             assert!(
@@ -227,6 +235,7 @@ fn prop_trace_reconciles_with_multi_query_ledgers() {
         assert_eq!(check.completed, s.on_time + s.delayed, "{ctx}");
         assert_eq!(check.on_time, s.on_time, "{ctx}");
         assert_eq!(check.dropped_total(), s.dropped, "{ctx}");
+        assert_eq!(check.lost_to_fault, s.lost_to_fault, "{ctx}");
         assert_eq!(check.unterminated(), s.in_flight, "{ctx}");
         assert!(
             check.violations().is_empty(),

@@ -633,6 +633,52 @@ fn prop_compute_slowdown_runs_deterministic() {
 }
 
 #[test]
+fn prop_fault_schedule_composes_with_compute_dynamism() {
+    // Faults are the limiting case of the dynamism machinery
+    // (factor -> infinity): a run carrying BOTH a compute slowdown
+    // and a fault schedule stays per-seed deterministic and conserves
+    // through the lost_to_fault terminal.
+    use anveshak::config::{FaultEvent, FaultKind};
+    for (i, mut r) in cases(32, 3).enumerate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = 800 + i as u64;
+        cfg.num_cameras = 40;
+        cfg.workload.vertices = 40;
+        cfg.workload.edges = 100;
+        cfg.duration_secs = 40.0;
+        cfg.tl = TlKind::Base;
+        cfg.batching = BatchingKind::Dynamic { max: 25 };
+        cfg.drops_enabled = r.bool(0.5);
+        cfg.service.online_xi = r.bool(0.5);
+        cfg.service.compute_events.push(ComputeEvent {
+            at_sec: 10.0,
+            node: None,
+            factor: r.range_f64(1.5, 3.0),
+        });
+        cfg.service.fault_events.push(FaultEvent {
+            at_sec: 20.0,
+            kind: FaultKind::NodeCrash {
+                node: r.range_u(0, 10),
+                down_secs: Some(10.0),
+            },
+        });
+        let a = des::run(cfg.clone());
+        let b = des::run(cfg);
+        assert!(a.summary.conserved(), "{:?}", a.summary);
+        assert_eq!(a.summary.generated, b.summary.generated);
+        assert_eq!(a.summary.on_time, b.summary.on_time);
+        assert_eq!(a.summary.delayed, b.summary.delayed);
+        assert_eq!(a.summary.dropped, b.summary.dropped);
+        assert_eq!(
+            a.summary.lost_to_fault,
+            b.summary.lost_to_fault
+        );
+        assert_eq!(a.rng_draws, b.rng_draws);
+        assert_eq!(a.detections, b.detections);
+    }
+}
+
+#[test]
 fn unit_factor_compute_schedule_is_bit_identical_to_none() {
     // A scheduled factor of exactly 1.0 multiplies every duration by
     // 1.0 — an f64 identity — so the run must match a schedule-free
