@@ -24,6 +24,10 @@
 //!                               # must reconcile (incl. lost_to_fault)
 //!                               # and recovery-on must complete
 //!                               # strictly more on-time events
+//!   harness lint                # repo-invariant static-analysis pass
+//!                               # over rust/src (trace gating,
+//!                               # wall-clock bans, map determinism);
+//!                               # exits non-zero on any violation
 //!   harness --out DIR figN ...  # custom output directory
 //!
 //! Each figure writes CSV series under the output directory and prints
@@ -56,9 +60,30 @@ fn main() {
     };
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults [--smoke] ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults|lint [--smoke] ..."
         );
         std::process::exit(2);
+    }
+    // `lint` is a standalone pass: no output dir, no run cache, and a
+    // process exit code CI can block on.
+    if args.iter().any(|a| a == "lint") {
+        let report = anveshak::check::lint_repo();
+        for v in &report.violations {
+            eprintln!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        }
+        if report.is_clean() {
+            println!(
+                "harness lint: OK ({} files scanned, 0 violations)",
+                report.files_scanned
+            );
+            std::process::exit(0);
+        }
+        eprintln!(
+            "harness lint: {} violation(s) across {} files scanned",
+            report.violations.len(),
+            report.files_scanned
+        );
+        std::process::exit(1);
     }
     std::fs::create_dir_all(&out_dir).expect("create output dir");
 

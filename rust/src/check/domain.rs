@@ -1,0 +1,490 @@
+//! Domain generators: [`Strategy`] implementations over the platform's
+//! own input space.
+//!
+//! Each generator shrinks toward a *canonical do-nothing* value rather
+//! than a numeric floor: fault windows become permanent (`None`),
+//! compute factors become `1.0` (identity), bandwidth steps return to
+//! full speed, arrival orders sort toward the identity permutation, and
+//! mutated [`ServiceConfig`]s reset fields back to their base one at a
+//! time. A minimal counterexample therefore reads as "the one deviation
+//! that matters", which is the whole point of shrinking.
+
+use super::strategy::{vec_of, Strategy, VecOf};
+use crate::config::{BandwidthEvent, ComputeEvent, FaultEvent, FaultKind, ServiceConfig};
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Fault schedules
+// ---------------------------------------------------------------------------
+
+/// One random [`FaultEvent`] across all four fault classes, mirroring
+/// the hand-rolled generator the `prop_faults.rs` suite used.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultEvents {
+    cams: usize,
+    nodes: usize,
+}
+
+fn window(r: &mut Rng) -> Option<f64> {
+    if r.bool(0.5) {
+        Some(r.range_f64(2.0, 10.0))
+    } else {
+        None
+    }
+}
+
+impl Strategy for FaultEvents {
+    type Value = FaultEvent;
+
+    fn generate(&self, r: &mut Rng) -> FaultEvent {
+        let at_sec = r.range_f64(5.0, 30.0);
+        let kind = match r.range_u(0, 4) {
+            0 => FaultKind::NodeCrash {
+                node: r.range_u(0, self.nodes),
+                down_secs: window(r),
+            },
+            1 => FaultKind::CameraOutage {
+                camera: r.range_u(0, self.cams),
+                down_secs: window(r),
+            },
+            2 => FaultKind::LinkPartition {
+                a: r.range_u(0, self.nodes),
+                b: r.range_u(0, self.nodes),
+                down_secs: window(r),
+            },
+            _ => FaultKind::MessageLoss {
+                prob: r.range_f64(0.05, 0.4),
+                dur_secs: window(r),
+            },
+        };
+        FaultEvent { at_sec, kind }
+    }
+
+    fn shrink(&self, v: &FaultEvent) -> Vec<FaultEvent> {
+        let mut out = Vec::new();
+        // Canonical time: the earliest the generator produces.
+        if v.at_sec != 5.0 {
+            out.push(FaultEvent {
+                at_sec: 5.0,
+                kind: v.kind,
+            });
+        }
+        // Per-kind canonicalisation: permanent window, index 0,
+        // lowest loss probability. Each candidate changes one field.
+        let mut kinds = Vec::new();
+        match v.kind {
+            FaultKind::NodeCrash { node, down_secs } => {
+                if down_secs.is_some() {
+                    kinds.push(FaultKind::NodeCrash {
+                        node,
+                        down_secs: None,
+                    });
+                }
+                if node != 0 {
+                    kinds.push(FaultKind::NodeCrash {
+                        node: 0,
+                        down_secs,
+                    });
+                }
+            }
+            FaultKind::CameraOutage { camera, down_secs } => {
+                if down_secs.is_some() {
+                    kinds.push(FaultKind::CameraOutage {
+                        camera,
+                        down_secs: None,
+                    });
+                }
+                if camera != 0 {
+                    kinds.push(FaultKind::CameraOutage {
+                        camera: 0,
+                        down_secs,
+                    });
+                }
+            }
+            FaultKind::LinkPartition { a, b, down_secs } => {
+                if down_secs.is_some() {
+                    kinds.push(FaultKind::LinkPartition {
+                        a,
+                        b,
+                        down_secs: None,
+                    });
+                }
+                if a != 0 {
+                    kinds.push(FaultKind::LinkPartition { a: 0, b, down_secs });
+                }
+                if b != 0 {
+                    kinds.push(FaultKind::LinkPartition { a, b: 0, down_secs });
+                }
+            }
+            FaultKind::MessageLoss { prob, dur_secs } => {
+                if dur_secs.is_some() {
+                    kinds.push(FaultKind::MessageLoss {
+                        prob,
+                        dur_secs: None,
+                    });
+                }
+                if prob > 0.05 {
+                    kinds.push(FaultKind::MessageLoss {
+                        prob: 0.05,
+                        dur_secs,
+                    });
+                }
+            }
+        }
+        out.extend(kinds.into_iter().map(|kind| FaultEvent {
+            at_sec: v.at_sec,
+            kind,
+        }));
+        out
+    }
+}
+
+/// A fault schedule of up to `max_events` events over `cams` cameras
+/// and `nodes` cluster nodes; shrinks toward the empty schedule.
+pub fn fault_schedule(max_events: usize, cams: usize, nodes: usize) -> VecOf<FaultEvents> {
+    vec_of(FaultEvents { cams, nodes }, 0, max_events)
+}
+
+// ---------------------------------------------------------------------------
+// Compute / bandwidth dynamism schedules
+// ---------------------------------------------------------------------------
+
+/// One [`ComputeEvent`]; shrinks toward the identity step
+/// (`factor = 1.0`, all nodes, earliest time).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeEvents {
+    nodes: usize,
+}
+
+impl Strategy for ComputeEvents {
+    type Value = ComputeEvent;
+
+    fn generate(&self, r: &mut Rng) -> ComputeEvent {
+        ComputeEvent {
+            at_sec: r.range_f64(1.0, 40.0),
+            node: if r.bool(0.5) {
+                Some(r.range_u(0, self.nodes))
+            } else {
+                None
+            },
+            factor: r.range_f64(0.25, 8.0),
+        }
+    }
+
+    fn shrink(&self, v: &ComputeEvent) -> Vec<ComputeEvent> {
+        let mut out = Vec::new();
+        if v.factor != 1.0 {
+            out.push(ComputeEvent { factor: 1.0, ..*v });
+        }
+        if v.node.is_some() {
+            out.push(ComputeEvent { node: None, ..*v });
+        }
+        if v.at_sec != 1.0 {
+            out.push(ComputeEvent { at_sec: 1.0, ..*v });
+        }
+        out
+    }
+}
+
+/// A compute-dynamism schedule of up to `max_events` steps over
+/// `nodes` cluster nodes; shrinks toward the empty schedule.
+pub fn compute_schedule(max_events: usize, nodes: usize) -> VecOf<ComputeEvents> {
+    vec_of(ComputeEvents { nodes }, 0, max_events)
+}
+
+/// One [`BandwidthEvent`]; shrinks toward full fabric speed at the
+/// earliest time.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthEvents;
+
+impl Strategy for BandwidthEvents {
+    type Value = BandwidthEvent;
+
+    fn generate(&self, r: &mut Rng) -> BandwidthEvent {
+        BandwidthEvent {
+            at_sec: r.range_f64(1.0, 40.0),
+            bandwidth_bps: r.range_f64(1e7, 1e9),
+        }
+    }
+
+    fn shrink(&self, v: &BandwidthEvent) -> Vec<BandwidthEvent> {
+        let mut out = Vec::new();
+        if v.bandwidth_bps != 1e9 {
+            out.push(BandwidthEvent {
+                bandwidth_bps: 1e9,
+                ..*v
+            });
+        }
+        if v.at_sec != 1.0 {
+            out.push(BandwidthEvent { at_sec: 1.0, ..*v });
+        }
+        out
+    }
+}
+
+/// A bandwidth schedule of up to `max_events` steps; shrinks toward
+/// the empty schedule.
+pub fn bandwidth_schedule(max_events: usize) -> VecOf<BandwidthEvents> {
+    vec_of(BandwidthEvents, 0, max_events)
+}
+
+// ---------------------------------------------------------------------------
+// DRR weight sets
+// ---------------------------------------------------------------------------
+
+/// One DRR weight in `[1, max_weight]`; shrinks toward 1.
+#[derive(Debug, Clone, Copy)]
+pub struct Weight {
+    max_weight: u32,
+}
+
+impl Strategy for Weight {
+    type Value = u32;
+
+    fn generate(&self, r: &mut Rng) -> u32 {
+        r.range_u(1, self.max_weight as usize + 1) as u32
+    }
+
+    fn shrink(&self, v: &u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        if *v > 1 {
+            out.push(1);
+            let mid = 1 + (v - 1) / 2;
+            if mid != 1 && mid != *v {
+                out.push(mid);
+            }
+        }
+        out
+    }
+}
+
+/// A DRR weight set for `min_queries..=max_queries` queries with
+/// weights in `[1, max_weight]`; shrinks toward fewer queries with
+/// unit weights.
+pub fn drr_weights(min_queries: usize, max_queries: usize, max_weight: u32) -> VecOf<Weight> {
+    vec_of(Weight { max_weight }, min_queries, max_queries)
+}
+
+// ---------------------------------------------------------------------------
+// Event-arrival orders
+// ---------------------------------------------------------------------------
+
+/// A permutation of `0..n` modelling an arrival order; shrinks toward
+/// the identity permutation one transposition at a time.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalOrder {
+    n: usize,
+}
+
+/// Arrival-order strategy over `n` events.
+pub fn arrival_order(n: usize) -> ArrivalOrder {
+    ArrivalOrder { n }
+}
+
+impl Strategy for ArrivalOrder {
+    type Value = Vec<usize>;
+
+    fn generate(&self, r: &mut Rng) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..self.n).collect();
+        r.shuffle(&mut v);
+        v
+    }
+
+    fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+        let identity: Vec<usize> = (0..v.len()).collect();
+        if *v == identity {
+            return Vec::new();
+        }
+        let mut out = vec![identity];
+        // One transposition toward identity: put the smallest
+        // out-of-place value where it belongs. Each accepted step
+        // strictly increases the count of fixed points, so the walk
+        // terminates at the identity.
+        if let Some(i) = v.iter().enumerate().position(|(i, &x)| x != i) {
+            if let Some(j) = v.iter().position(|&x| x == i) {
+                let mut w = v.clone();
+                w.swap(i, j);
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ServiceConfig mutations
+// ---------------------------------------------------------------------------
+
+/// Random timing mutations of a base [`ServiceConfig`]: each ξ-model
+/// field is scaled by a factor in `[0.5, 2.0)` and jitter is drawn in
+/// `[0, 0.3)`. Shrinking resets one field at a time back to the base,
+/// so a minimal counterexample names the single knob that breaks the
+/// property.
+#[derive(Debug, Clone)]
+pub struct ServiceConfigMutations {
+    base: ServiceConfig,
+}
+
+/// Mutation strategy around `base`.
+pub fn service_config_mutations(base: ServiceConfig) -> ServiceConfigMutations {
+    ServiceConfigMutations { base }
+}
+
+impl Strategy for ServiceConfigMutations {
+    type Value = ServiceConfig;
+
+    fn generate(&self, r: &mut Rng) -> ServiceConfig {
+        let mut c = self.base.clone();
+        c.fc_ms = self.base.fc_ms * r.range_f64(0.5, 2.0);
+        c.va_alpha_ms = self.base.va_alpha_ms * r.range_f64(0.5, 2.0);
+        c.va_beta_ms = self.base.va_beta_ms * r.range_f64(0.5, 2.0);
+        c.cr_alpha_ms = self.base.cr_alpha_ms * r.range_f64(0.5, 2.0);
+        c.cr_beta_ms = self.base.cr_beta_ms * r.range_f64(0.5, 2.0);
+        c.tl_ms = self.base.tl_ms * r.range_f64(0.5, 2.0);
+        c.jitter = r.range_f64(0.0, 0.3);
+        c
+    }
+
+    fn shrink(&self, v: &ServiceConfig) -> Vec<ServiceConfig> {
+        let mut out = Vec::new();
+        let fields: [(fn(&ServiceConfig) -> f64, fn(&mut ServiceConfig, f64)); 7] = [
+            (|c| c.fc_ms, |c, x| c.fc_ms = x),
+            (|c| c.va_alpha_ms, |c, x| c.va_alpha_ms = x),
+            (|c| c.va_beta_ms, |c, x| c.va_beta_ms = x),
+            (|c| c.cr_alpha_ms, |c, x| c.cr_alpha_ms = x),
+            (|c| c.cr_beta_ms, |c, x| c.cr_beta_ms = x),
+            (|c| c.tl_ms, |c, x| c.tl_ms = x),
+            (|c| c.jitter, |c, x| c.jitter = x),
+        ];
+        for (get, set) in fields {
+            if get(v) != get(&self.base) {
+                let mut w = v.clone();
+                set(&mut w, get(&self.base));
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_shrinks_to_empty() {
+        let s = fault_schedule(4, 50, 10);
+        let a = s.generate(&mut rng(7, 0));
+        let b = s.generate(&mut rng(7, 0));
+        assert_eq!(a, b);
+        if !a.is_empty() {
+            assert_eq!(s.shrink(&a)[0], Vec::new());
+        }
+    }
+
+    #[test]
+    fn fault_event_shrink_canonicalises_one_field_per_candidate() {
+        let s = FaultEvents { cams: 50, nodes: 10 };
+        let v = FaultEvent {
+            at_sec: 22.5,
+            kind: FaultKind::NodeCrash {
+                node: 7,
+                down_secs: Some(4.0),
+            },
+        };
+        let cands = s.shrink(&v);
+        assert!(cands.contains(&FaultEvent {
+            at_sec: 5.0,
+            kind: v.kind
+        }));
+        assert!(cands.contains(&FaultEvent {
+            at_sec: 22.5,
+            kind: FaultKind::NodeCrash {
+                node: 7,
+                down_secs: None
+            }
+        }));
+        // Fully canonical event is minimal.
+        let min = FaultEvent {
+            at_sec: 5.0,
+            kind: FaultKind::NodeCrash {
+                node: 0,
+                down_secs: None,
+            },
+        };
+        assert!(s.shrink(&min).is_empty());
+    }
+
+    #[test]
+    fn compute_event_shrinks_toward_identity_factor() {
+        let s = ComputeEvents { nodes: 10 };
+        let v = ComputeEvent {
+            at_sec: 12.0,
+            node: Some(3),
+            factor: 4.0,
+        };
+        let cands = s.shrink(&v);
+        assert!((cands[0].factor - 1.0).abs() < 1e-12);
+        let min = ComputeEvent {
+            at_sec: 1.0,
+            node: None,
+            factor: 1.0,
+        };
+        assert!(s.shrink(&min).is_empty());
+    }
+
+    #[test]
+    fn arrival_order_is_a_permutation_and_sorts_toward_identity() {
+        let s = arrival_order(8);
+        let v = s.generate(&mut rng(3, 0));
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+        // Walk the one-transposition chain with an always-failing
+        // property (skipping the aggressive identity candidate): each
+        // step fixes at least one more point, so it reaches identity.
+        let identity: Vec<usize> = (0..8).collect();
+        let mut cur = v;
+        let mut steps = 0;
+        while cur != identity {
+            let cands = s.shrink(&cur);
+            cur = cands.last().unwrap().clone();
+            steps += 1;
+            assert!(steps <= 8, "transposition chain too long");
+        }
+        assert!(s.shrink(&identity).is_empty());
+    }
+
+    #[test]
+    fn service_config_shrink_resets_one_field_at_a_time() {
+        let base = ServiceConfig::default();
+        let s = service_config_mutations(base.clone());
+        let v = s.generate(&mut rng(11, 0));
+        for w in s.shrink(&v) {
+            let diffs = [
+                w.fc_ms != v.fc_ms,
+                w.va_alpha_ms != v.va_alpha_ms,
+                w.va_beta_ms != v.va_beta_ms,
+                w.cr_alpha_ms != v.cr_alpha_ms,
+                w.cr_beta_ms != v.cr_beta_ms,
+                w.tl_ms != v.tl_ms,
+                w.jitter != v.jitter,
+            ];
+            assert_eq!(diffs.iter().filter(|&&d| d).count(), 1);
+        }
+        // The base itself is minimal.
+        assert!(s.shrink(&base).is_empty());
+    }
+
+    #[test]
+    fn drr_weights_shrink_toward_unit() {
+        let s = drr_weights(2, 6, 5);
+        let v = s.generate(&mut rng(5, 0));
+        assert!(v.len() >= 2 && v.len() <= 6);
+        assert!(v.iter().all(|&w| (1..=5).contains(&w)));
+        let w = Weight { max_weight: 5 };
+        assert_eq!(w.shrink(&1), Vec::<u32>::new());
+        assert_eq!(w.shrink(&5)[0], 1);
+    }
+}

@@ -1,0 +1,375 @@
+//! Repo-invariant lint: a plain source scan over `rust/src/` enforcing
+//! rules rustc/clippy cannot express. Zero-dependency, like the rest of
+//! this module; run it as `harness lint` (CI runs it as a blocking
+//! job).
+//!
+//! The four rules:
+//!
+//! 1. **trace-gating** — every `TraceEvent` construction must sit
+//!    within 40 lines *after* an `enabled()` guard, so the flight
+//!    recorder's zero-cost-when-off contract cannot silently regress.
+//!    (`obs/` builds the events, `bin/` consumes finished traces, and
+//!    `check/` holds this scanner — all exempt.)
+//! 2. **wall-clock** — no `Instant::now` / `SystemTime` inside
+//!    DES-path modules: simulated time comes from the event core, and
+//!    a stray wall-clock read breaks per-seed bit-identity.
+//! 3. **map-order** — no raw `HashMap`/`HashSet` in DES-path modules
+//!    (use `util::FastMap`/`FastSet`): std's randomized iteration
+//!    order feeding dispatch would destroy determinism.
+//!    (`util/fastmap.rs`, which wraps the raw types, is exempt.)
+//! 4. **no-escape-hatch** — the keyword the `lib.rs` `forbid` header
+//!    bans stays banned everywhere under `rust/src/`, including build
+//!    scripts and binaries the header does not cover.
+//!
+//! The scan strips `//` and `/* */` comments before matching, so
+//! prose mentioning a banned name does not trip the rules. It does not
+//! parse string literals; a banned token smuggled inside one is flagged
+//! conservatively, which is the failure direction we want.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to the scanned source root (`/`-separated).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule id (`trace-gating`, `wall-clock`, `map-order`,
+    /// `no-escape-hatch`).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+/// Result of scanning a source tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All violations, in path order.
+    pub violations: Vec<Violation>,
+}
+
+impl LintReport {
+    /// True when no rule fired.
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Module prefixes that execute on the DES path — simulated time only,
+/// deterministic iteration only. Everything the engines touch per
+/// event lives under one of these.
+const DES_PATHS: &[&str] = &[
+    "apps/",
+    "config/",
+    "coordinator/des.rs",
+    "coordinator/tl.rs",
+    "coordinator/topology.rs",
+    "dataflow/",
+    "engine/",
+    "metrics/",
+    "roadnet/",
+    "service/admission.rs",
+    "service/engine.rs",
+    "service/query.rs",
+    "service/scheduler.rs",
+    "sim/",
+    "tuning/",
+    "util/",
+];
+
+/// How far (in lines) a `TraceEvent` construction may sit after its
+/// `enabled()` guard and still count as gated.
+const GATE_WINDOW: usize = 40;
+
+fn is_des_path(rel: &str) -> bool {
+    DES_PATHS.iter().any(|p| rel.starts_with(p))
+}
+
+/// Remove `//` line comments and `/* */` block comments (block state
+/// carries across lines). String literals are not parsed — see the
+/// module docs for why that bias is acceptable.
+fn strip_comments(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_block = false;
+    for line in text.lines() {
+        let cs: Vec<char> = line.chars().collect();
+        let mut s = String::new();
+        let mut i = 0;
+        while i < cs.len() {
+            if in_block {
+                if cs[i] == '*' && i + 1 < cs.len() && cs[i + 1] == '/' {
+                    in_block = false;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            if cs[i] == '/' && i + 1 < cs.len() {
+                if cs[i + 1] == '/' {
+                    break;
+                }
+                if cs[i + 1] == '*' {
+                    in_block = true;
+                    i += 2;
+                    continue;
+                }
+            }
+            s.push(cs[i]);
+            i += 1;
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// Does `line` contain the rule-4 keyword outside the one allowed
+/// position (the `lib.rs` forbid attribute, where it is followed by
+/// `_code`)?
+fn has_forbidden_keyword(line: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(needle) {
+        let abs = start + pos;
+        if !line[abs + needle.len()..].starts_with("_code") {
+            return true;
+        }
+        start = abs + needle.len();
+    }
+    false
+}
+
+fn lint_file(rel: &str, text: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let stripped = strip_comments(text);
+
+    // check/ holds the scanner itself (needle strings, fixtures);
+    // rules 1-3 never apply to it. Rule 4 applies everywhere, so its
+    // needle is assembled at runtime to keep this file clean.
+    let in_check = rel.starts_with("check/");
+    let rule1_applies = !in_check && !rel.starts_with("obs/") && !rel.starts_with("bin/");
+    let des = !in_check && is_des_path(rel);
+    let rule3_exempt = rel == "util/fastmap.rs";
+    let rule4_needle: String = ["uns", "afe"].concat();
+
+    let mut last_enabled: Option<usize> = None;
+    for (i, line) in stripped.iter().enumerate() {
+        let lineno = i + 1;
+        if line.contains("enabled()") {
+            last_enabled = Some(i);
+        }
+        if rule1_applies && line.contains("TraceEvent::") {
+            let gated = matches!(last_enabled, Some(j) if i - j <= GATE_WINDOW);
+            if !gated {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: lineno,
+                    rule: "trace-gating",
+                    msg: format!(
+                        "TraceEvent construction with no enabled() guard in the \
+                         preceding {GATE_WINDOW} lines"
+                    ),
+                });
+            }
+        }
+        if des && (line.contains("Instant::now") || line.contains("SystemTime")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "wall-clock",
+                msg: "wall-clock read in a DES-path module; simulated time must come \
+                      from the event core"
+                    .to_string(),
+            });
+        }
+        if des && !rule3_exempt && (line.contains("HashMap") || line.contains("HashSet")) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "map-order",
+                msg: "raw std map/set in a DES-path module; use util::FastMap / \
+                      util::FastSet for deterministic iteration"
+                    .to_string(),
+            });
+        }
+        if has_forbidden_keyword(line, &rule4_needle) {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: lineno,
+                rule: "no-escape-hatch",
+                msg: format!("`{rule4_needle}` is forbidden repo-wide"),
+            });
+        }
+    }
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Scan every `.rs` file under `src_root`, applying path-scoped rules
+/// relative to that root. Files are visited in sorted path order so
+/// reports are stable.
+pub fn lint_tree(src_root: &Path) -> LintReport {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files);
+    files.sort();
+    let mut report = LintReport::default();
+    for f in files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let Ok(text) = fs::read_to_string(&f) else {
+            continue;
+        };
+        report.files_scanned += 1;
+        report.violations.extend(lint_file(&rel, &text));
+    }
+    report
+}
+
+/// Scan this repository's own `rust/src/` tree (located via the
+/// compile-time manifest dir, so it works from any cwd in a checkout).
+pub fn lint_repo() -> LintReport {
+    lint_tree(&Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a throwaway fixture tree under `target/` (inside the
+    /// repo, gitignored) and return its root.
+    fn fixture_root(tag: &str) -> PathBuf {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("target")
+            .join("lint_fixtures")
+            .join(format!("{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        fs::create_dir_all(&root).unwrap();
+        root
+    }
+
+    fn write(root: &Path, rel: &str, content: &str) {
+        let p = root.join(rel);
+        fs::create_dir_all(p.parent().unwrap()).unwrap();
+        fs::write(p, content).unwrap();
+    }
+
+    #[test]
+    fn doctored_fixture_trips_every_rule_and_clean_tree_passes() {
+        let root = fixture_root("doctored");
+        write(
+            &root,
+            "engine/clean.rs",
+            "pub fn ok() -> u32 { 1 }\n// Instant::now in a comment is fine\n",
+        );
+        write(
+            &root,
+            "engine/bad_time.rs",
+            "pub fn t() -> u128 { std::time::Instant::now().elapsed().as_nanos() }\n",
+        );
+        write(
+            &root,
+            "engine/bad_map.rs",
+            "use std::collections::HashMap;\npub type M = HashMap<u32, u32>;\n",
+        );
+        write(
+            &root,
+            "apps/bad_trace.rs",
+            "pub fn emit(obs: &mut Vec<String>) {\n    obs.push(format!(\"{:?}\", TraceEvent::Generated));\n}\n",
+        );
+        let esc = ["uns", "afe"].concat();
+        write(
+            &root,
+            "sim/bad_escape.rs",
+            &format!("pub fn f() {{ {esc} {{ }} }}\n"),
+        );
+        // Wall-clock outside the DES paths is allowed.
+        write(
+            &root,
+            "obs/ok_time.rs",
+            "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n",
+        );
+        // The forbid attribute's own spelling is allowed.
+        write(&root, "lib.rs", &format!("#![forbid({esc}_code)]\n"));
+
+        let report = lint_tree(&root);
+        assert_eq!(report.files_scanned, 7);
+        let fired: Vec<(&str, &str)> = report
+            .violations
+            .iter()
+            .map(|v| (v.file.as_str(), v.rule))
+            .collect();
+        assert!(fired.contains(&("engine/bad_time.rs", "wall-clock")), "{fired:?}");
+        assert!(fired.contains(&("engine/bad_map.rs", "map-order")), "{fired:?}");
+        assert!(fired.contains(&("apps/bad_trace.rs", "trace-gating")), "{fired:?}");
+        assert!(
+            fired.contains(&("sim/bad_escape.rs", "no-escape-hatch")),
+            "{fired:?}"
+        );
+        assert!(
+            !fired.iter().any(|(f, _)| *f == "engine/clean.rs"
+                || *f == "obs/ok_time.rs"
+                || *f == "lib.rs"),
+            "{fired:?}"
+        );
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn enabled_gate_within_window_passes_and_outside_window_fails() {
+        let root = fixture_root("window");
+        let gated = "pub fn f(on: bool) {\n    if obs.enabled() {\n        emit(TraceEvent::Generated);\n    }\n}\n";
+        write(&root, "tuning/gated.rs", gated);
+        let mut far = String::from("pub fn g() {\n    if obs.enabled() { }\n");
+        for _ in 0..GATE_WINDOW + 1 {
+            far.push_str("    let _ = 0;\n");
+        }
+        far.push_str("    emit(TraceEvent::Generated);\n}\n");
+        write(&root, "tuning/far.rs", &far);
+
+        let report = lint_tree(&root);
+        let files: Vec<&str> = report.violations.iter().map(|v| v.file.as_str()).collect();
+        assert!(!files.contains(&"tuning/gated.rs"), "{files:?}");
+        assert!(files.contains(&"tuning/far.rs"), "{files:?}");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn block_comments_are_stripped_across_lines() {
+        let stripped = strip_comments("a /* x\ny */ b\nc");
+        assert_eq!(stripped, vec!["a ".to_string(), " b".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn forbidden_keyword_allows_only_the_attribute_spelling() {
+        let needle = ["uns", "afe"].concat();
+        assert!(!has_forbidden_keyword(
+            &format!("#![forbid({needle}_code)]"),
+            &needle
+        ));
+        assert!(has_forbidden_keyword(&format!("{needle} fn f()"), &needle));
+        assert!(has_forbidden_keyword(
+            &format!("#![forbid({needle}_code)] {needle} {{}}"),
+            &needle
+        ));
+        assert!(!has_forbidden_keyword("nothing here", &needle));
+    }
+}

@@ -1,0 +1,63 @@
+//! In-repo property-testing harness, runtime invariant checkers, and
+//! repo-invariant lint pass.
+//!
+//! Zero-dependency by design, following the `rust/vendor/anyhow` shim
+//! precedent: everything here is plain std + [`crate::util::Rng`], so
+//! the verification layer can never rot behind an unavailable crate.
+//! Three coupled pieces live in this module:
+//!
+//! 1. **Generators + shrinking** ([`strategy`], [`runner`], [`domain`]):
+//!    a proptest-style [`Strategy`] trait with combinators for ranges,
+//!    choices, vecs and tuples, plus domain generators for the
+//!    platform's own input space (fault schedules, compute/bandwidth
+//!    events, DRR weight sets, arrival orders, [`crate::config::ServiceConfig`]
+//!    mutations). On failure the [`runner`] greedily shrinks to a
+//!    *minimal* counterexample and prints a `seed`/`case` pair that
+//!    replays it deterministically; pairs worth keeping are persisted
+//!    under `rust/tests/regressions/` and replayed before every fresh
+//!    run.
+//!
+//! 2. **Runtime invariant checkers** behind the `strict-invariants`
+//!    feature: the [`strict_assert!`] macro guards `assert!`-grade
+//!    checks inside the hot engines (event-slab aliasing, budget-ring
+//!    key hygiene, drop-gate exemptions, feedback exactly-once, ledger
+//!    conservation). The checks compile in every build — `cfg!` keeps
+//!    them type-checked — but the branch is constant-false unless the
+//!    feature is on, so the default build pays nothing.
+//!
+//! 3. **Repo-invariant lint** ([`lint`]): a plain source scan over
+//!    `rust/src/` enforcing invariants rustc/clippy cannot express
+//!    (trace gating, wall-clock bans in DES paths, deterministic map
+//!    types, the no-`unsafe` rule). Run it as `harness lint`; CI runs
+//!    it as a blocking job.
+
+pub mod domain;
+pub mod lint;
+pub mod runner;
+pub mod strategy;
+
+pub use lint::{lint_repo, lint_tree, LintReport, Violation};
+pub use runner::{check, find_failure, generate_case, CheckConfig, Failure};
+pub use strategy::{
+    choice, just, range_f64, range_i64, range_u, vec_of, Choice, Just, RangeF64, RangeI64, RangeU,
+    Strategy, VecOf,
+};
+
+/// `assert!` that only fires when the `strict-invariants` feature is
+/// enabled.
+///
+/// Unlike an `#[cfg(...)]`-gated block, the body is *always* compiled
+/// and type-checked (`cfg!` is a const boolean, not conditional
+/// compilation), so the default CI build catches bit-rot in the check
+/// expressions; the optimizer removes the constant-false branch, so
+/// the default build pays nothing at runtime. Invoke as
+/// `crate::strict_assert!(cond, "message {}", detail)` from anywhere
+/// in the crate.
+#[macro_export]
+macro_rules! strict_assert {
+    ($($arg:tt)*) => {
+        if cfg!(feature = "strict-invariants") {
+            assert!($($arg)*);
+        }
+    };
+}

@@ -1,0 +1,303 @@
+//! Case runner: fresh generation, greedy shrinking, seed replay, and
+//! persisted regression seeds.
+//!
+//! Properties are `Fn(&Value) -> Result<(), String>` — `Err` carries
+//! the violation message, so the final report shows *why* the minimal
+//! counterexample fails, not just what it is. [`check`] is the
+//! test-facing entry point: it replays any persisted seeds for the
+//! property from `rust/tests/regressions/<name>.seeds`, then runs the
+//! configured number of fresh cases, shrinking and panicking with a
+//! replay recipe on the first failure. [`find_failure`] is the same
+//! loop without the panic, which is what the planted-bug self-tests
+//! use to inspect the minimal counterexample programmatically.
+
+use std::fmt::Debug;
+use std::path::{Path, PathBuf};
+
+use super::strategy::Strategy;
+use crate::util::rng;
+
+/// How many fresh cases to run and where the RNG streams start.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckConfig {
+    /// Number of fresh generated cases (`ANVESHAK_CHECK_CASES`
+    /// overrides).
+    pub cases: u64,
+    /// Base seed; case `i` draws from `util::rng(seed, i)`
+    /// (`ANVESHAK_CHECK_SEED` overrides).
+    pub seed: u64,
+    /// Cap on accepted shrink steps, a safety net on top of the
+    /// combinators' own termination guarantees.
+    pub max_shrink_steps: u64,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC43C_2019,
+            max_shrink_steps: 10_000,
+        }
+    }
+}
+
+impl CheckConfig {
+    /// A config with a different case count, keeping the default seed.
+    pub fn with_cases(cases: u64) -> Self {
+        Self {
+            cases,
+            ..Self::default()
+        }
+    }
+}
+
+/// A failing case, both as generated and after shrinking.
+#[derive(Debug, Clone)]
+pub struct Failure<T> {
+    /// Base seed of the run that found it.
+    pub seed: u64,
+    /// Case index within that run; `(seed, case)` replays it.
+    pub case: u64,
+    /// The value as generated, before any shrinking.
+    pub original: T,
+    /// Property error for the original value.
+    pub original_error: String,
+    /// The shrunk, minimal counterexample.
+    pub minimal: T,
+    /// Property error for the minimal counterexample.
+    pub minimal_error: String,
+    /// Number of accepted shrink steps between the two.
+    pub shrink_steps: u64,
+}
+
+/// Regenerate the exact value that `(seed, case)` produced — the
+/// deterministic-replay primitive behind the printed recipe.
+pub fn generate_case<S: Strategy>(strat: &S, seed: u64, case: u64) -> S::Value {
+    strat.generate(&mut rng(seed, case))
+}
+
+/// Greedily walk `strat`'s shrink candidates from a failing value to a
+/// fixpoint, keeping the first candidate that still fails.
+fn shrink_to_minimal<S, P>(
+    strat: &S,
+    value: S::Value,
+    error: String,
+    prop: &P,
+    max_steps: u64,
+) -> (S::Value, String, u64)
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut cur = value;
+    let mut cur_err = error;
+    let mut steps = 0u64;
+    'outer: while steps < max_steps {
+        for cand in strat.shrink(&cur) {
+            if let Err(e) = prop(&cand) {
+                cur = cand;
+                cur_err = e;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break; // every candidate passes: cur is minimal
+    }
+    (cur, cur_err, steps)
+}
+
+fn run_one<S, P>(
+    strat: &S,
+    prop: &P,
+    seed: u64,
+    case: u64,
+    max_shrink_steps: u64,
+) -> Option<Failure<S::Value>>
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    let value = generate_case(strat, seed, case);
+    match prop(&value) {
+        Ok(()) => None,
+        Err(e) => {
+            let (minimal, minimal_error, shrink_steps) =
+                shrink_to_minimal(strat, value.clone(), e.clone(), prop, max_shrink_steps);
+            Some(Failure {
+                seed,
+                case,
+                original: value,
+                original_error: e,
+                minimal,
+                minimal_error,
+                shrink_steps,
+            })
+        }
+    }
+}
+
+/// Run fresh cases and return the first (shrunk) failure, or `None` if
+/// every case passes. No panic, no regression replay — the primitive
+/// the planted-bug self-tests build on.
+pub fn find_failure<S, P>(cfg: &CheckConfig, strat: &S, prop: P) -> Option<Failure<S::Value>>
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        if let Some(f) = run_one(strat, &prop, cfg.seed, case, cfg.max_shrink_steps) {
+            return Some(f);
+        }
+    }
+    None
+}
+
+/// Directory holding persisted regression seeds, one
+/// `<property-name>.seeds` file per property.
+pub fn regressions_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/regressions")
+}
+
+/// Parse `<name>.seeds`: one `seed case` pair per line (decimal),
+/// `#`-comments and blank lines ignored. Missing file means no
+/// regressions, not an error.
+pub fn regression_seeds(name: &str) -> Vec<(u64, u64)> {
+    let path = regressions_dir().join(format!("{name}.seeds"));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match (
+            it.next().and_then(|s| s.parse::<u64>().ok()),
+            it.next().and_then(|s| s.parse::<u64>().ok()),
+        ) {
+            (Some(seed), Some(case)) => out.push((seed, case)),
+            _ => panic!("malformed line in {}: {line:?}", path.display()),
+        }
+    }
+    out
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok()?.trim().parse().ok()
+}
+
+fn report<T: Debug>(name: &str, f: &Failure<T>, from_regression: bool) -> String {
+    let source = if from_regression {
+        "persisted regression seed"
+    } else {
+        "fresh case"
+    };
+    format!(
+        "property `{name}` failed ({source})\n\
+         \x20 replay:   ANVESHAK_CHECK_SEED={} with case {} (or add `{} {}` to \
+         rust/tests/regressions/{name}.seeds)\n\
+         \x20 original: {:?}\n\
+         \x20           {}\n\
+         \x20 minimal:  {:?}  ({} shrink steps)\n\
+         \x20           {}",
+        f.seed, f.case, f.seed, f.case, f.original, f.original_error, f.minimal, f.shrink_steps,
+        f.minimal_error,
+    )
+}
+
+/// Test-facing entry point: replay persisted regression seeds for
+/// `name`, then run `cfg.cases` fresh cases; on any failure, shrink to
+/// a minimal counterexample and panic with a deterministic replay
+/// recipe. `ANVESHAK_CHECK_SEED` / `ANVESHAK_CHECK_CASES` override the
+/// config at run time.
+pub fn check<S, P>(name: &str, cfg: &CheckConfig, strat: &S, prop: P)
+where
+    S: Strategy,
+    P: Fn(&S::Value) -> Result<(), String>,
+{
+    let mut cfg = *cfg;
+    if let Some(seed) = env_u64("ANVESHAK_CHECK_SEED") {
+        cfg.seed = seed;
+    }
+    if let Some(cases) = env_u64("ANVESHAK_CHECK_CASES") {
+        cfg.cases = cases;
+    }
+    for (seed, case) in regression_seeds(name) {
+        if let Some(f) = run_one(strat, &prop, seed, case, cfg.max_shrink_steps) {
+            panic!("{}", report(name, &f, true));
+        }
+    }
+    if let Some(f) = find_failure(&cfg, strat, &prop) {
+        panic!("{}", report(name, &f, false));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::strategy::{range_u, vec_of};
+
+    // The textbook planted bug: "no element may reach 50". The unique
+    // minimal counterexample is the one-element vec [50]. The property
+    // signature must match `Fn(&S::Value)` exactly, hence `&Vec`.
+    #[allow(clippy::ptr_arg)]
+    fn no_element_reaches_50(v: &Vec<usize>) -> Result<(), String> {
+        match v.iter().find(|&&x| x >= 50) {
+            Some(x) => Err(format!("element {x} >= 50")),
+            None => Ok(()),
+        }
+    }
+
+    #[test]
+    fn shrinks_to_the_unique_minimal_counterexample() {
+        let strat = vec_of(range_u(0, 100), 0, 12);
+        let cfg = CheckConfig::default();
+        let f = find_failure(&cfg, &strat, no_element_reaches_50)
+            .expect("a >=50 element appears well within 64 cases");
+        assert_eq!(f.minimal, vec![50], "greedy shrink must reach [50]");
+        assert!(f.minimal_error.contains("50"));
+    }
+
+    #[test]
+    fn replay_regenerates_the_failing_case_bit_for_bit() {
+        let strat = vec_of(range_u(0, 100), 0, 12);
+        let cfg = CheckConfig::default();
+        let f = find_failure(&cfg, &strat, no_element_reaches_50).expect("failure");
+        let replayed = generate_case(&strat, f.seed, f.case);
+        assert_eq!(replayed, f.original);
+        // And the whole search is deterministic end to end.
+        let f2 = find_failure(&cfg, &strat, no_element_reaches_50).expect("failure");
+        assert_eq!(f2.case, f.case);
+        assert_eq!(f2.minimal, f.minimal);
+        assert_eq!(f2.shrink_steps, f.shrink_steps);
+    }
+
+    #[test]
+    fn passing_property_finds_no_failure() {
+        let strat = vec_of(range_u(0, 100), 0, 12);
+        let cfg = CheckConfig::with_cases(32);
+        assert!(find_failure(&cfg, &strat, |_| Ok(())).is_none());
+    }
+
+    #[test]
+    fn shrink_step_cap_is_respected() {
+        let strat = range_u(0, 1_000_000);
+        let cfg = CheckConfig {
+            cases: 4,
+            seed: 1,
+            max_shrink_steps: 3,
+        };
+        // Property that always fails: shrinking would walk to 0, but
+        // the cap stops it after 3 accepted steps.
+        let f = find_failure(&cfg, &strat, |_| Err("always".into())).expect("failure");
+        assert!(f.shrink_steps <= 3);
+    }
+
+    #[test]
+    fn regression_file_parsing_ignores_comments_and_blanks() {
+        // Missing file: silently empty.
+        assert!(regression_seeds("no-such-property-file").is_empty());
+    }
+}

@@ -146,12 +146,24 @@ impl FeedbackState {
         seq: u32,
         embedding: Arc<Vec<f32>>,
     ) -> bool {
-        match self.applied.get(&query) {
-            Some((last, _)) if *last >= seq => false,
-            _ => {
-                self.applied.insert(query, (seq, embedding));
-                true
-            }
+        let last = self.applied.get(&query).map(|(s, _)| *s).unwrap_or(0);
+        if last >= seq {
+            false
+        } else {
+            // Invariants on the applied path: the router mints 1-based
+            // seqs (0 on a header means "not a refinement"), and an
+            // applied update is strictly fresher — which is exactly
+            // what makes each refinement apply at most once here.
+            crate::strict_assert!(
+                seq >= 1,
+                "refinement for query {query} carries reserved seq 0"
+            );
+            crate::strict_assert!(
+                seq > last,
+                "refinement seq {seq} for query {query} not fresher than {last}"
+            );
+            self.applied.insert(query, (seq, embedding));
+            true
         }
     }
 

@@ -95,6 +95,13 @@ impl<E> EventCore<E> {
     pub fn schedule(&mut self, t: Micros, ev: E) {
         let slot = match self.free.pop() {
             Some(s) => {
+                // Invariant: a slot handed out by the free-list must not
+                // alias a live (still-queued) event — that would make two
+                // heap keys dispatch the same payload.
+                crate::strict_assert!(
+                    self.store[s as usize].is_none(),
+                    "free-list slot {s} aliases a live event"
+                );
                 self.store[s as usize] = Some(ev);
                 s
             }

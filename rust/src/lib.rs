@@ -155,7 +155,16 @@
 //! [`dataflow::FeedbackRouter`] / [`dataflow::FeedbackState`] and
 //! `docs/ARCHITECTURE.md` for the loop's determinism contract.
 
+// Compiler-backed halves of the `check::lint` repo invariants: the
+// no-escape-hatch rule is a hard forbid (the lint pass cross-checks
+// binaries and build scripts this header does not cover), and the
+// strict-invariants verification build insists on documented items so
+// the invariant inventory stays readable.
+#![forbid(unsafe_code)]
+#![cfg_attr(feature = "strict-invariants", warn(missing_docs))]
+
 pub mod apps;
+pub mod check;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;

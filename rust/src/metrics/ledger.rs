@@ -41,6 +41,11 @@ struct Entry {
 pub struct Ledger {
     entries: Vec<Option<Entry>>,
     generated: u64,
+    /// Count of `InFlight` → terminal transitions (completed, dropped,
+    /// lost-to-fault). Maintained on every path so the strict build can
+    /// cross-check the per-entry scan in [`Ledger::summary`] against
+    /// the running count — the trace↔ledger conservation tripwire.
+    terminated: u64,
 }
 
 /// Aggregate counts + latency stats for a run.
@@ -76,6 +81,16 @@ impl Ledger {
         if idx >= self.entries.len() {
             self.entries.resize(idx + 1, None);
         }
+        // Invariant: source ids come from a global counter, so a
+        // generated id must never overwrite a live (in-flight) entry —
+        // that would double-count `generated` for one slot.
+        crate::strict_assert!(
+            !matches!(
+                self.entries.get(idx),
+                Some(Some(e)) if matches!(e.outcome, Outcome::InFlight)
+            ),
+            "event id {id} re-generated while still in flight"
+        );
         self.entries[idx] = Some(Entry {
             outcome: Outcome::InFlight,
             entity_present,
@@ -91,7 +106,16 @@ impl Ledger {
         gamma: Micros,
         detected: bool,
     ) {
+        // Invariant: a sink arrival must reference a generated event —
+        // an unknown id here means the trace and the ledger diverged.
+        crate::strict_assert!(
+            matches!(self.entries.get(id as usize), Some(Some(_))),
+            "sink arrival for unledgered event id {id}"
+        );
         if let Some(Some(e)) = self.entries.get_mut(id as usize) {
+            if matches!(e.outcome, Outcome::InFlight) {
+                self.terminated += 1;
+            }
             e.detected = detected;
             e.outcome = if latency <= gamma {
                 Outcome::OnTime { latency }
@@ -99,6 +123,10 @@ impl Ledger {
                 Outcome::Delayed { latency }
             };
         }
+        crate::strict_assert!(
+            self.terminated <= self.generated,
+            "more terminal outcomes than generated events"
+        );
     }
 
     /// The event was dropped at `stage`.
@@ -107,6 +135,7 @@ impl Ledger {
             // First drop wins; an event cannot be dropped twice (1:1
             // selectivity) but defensive against double accounting.
             if matches!(e.outcome, Outcome::InFlight) {
+                self.terminated += 1;
                 e.outcome = Outcome::Dropped { stage };
             }
         }
@@ -116,6 +145,7 @@ impl Ledger {
     pub fn lost_to_fault(&mut self, id: u64, stage: Stage) {
         if let Some(Some(e)) = self.entries.get_mut(id as usize) {
             if matches!(e.outcome, Outcome::InFlight) {
+                self.terminated += 1;
                 e.outcome = Outcome::LostToFault { stage };
             }
         }
@@ -181,7 +211,20 @@ impl Ledger {
             }
         }
         s.latency = Stats::from(lats);
+        // Conservation cross-check: the per-entry scan must agree with
+        // the running transition counter maintained by the mutators.
+        crate::strict_assert!(
+            s.on_time + s.delayed + s.dropped + s.lost_to_fault == self.terminated,
+            "ledger scan disagrees with the terminal-transition counter"
+        );
         s
+    }
+
+    /// `InFlight` → terminal transitions so far (completed + dropped +
+    /// lost-to-fault). Always maintained; the strict build additionally
+    /// cross-checks it in [`Ledger::summary`].
+    pub fn terminated_count(&self) -> u64 {
+        self.terminated
     }
 }
 

@@ -2,8 +2,6 @@
 //! timeline plots (Figs 7, 8, 9, 10, 11): active camera count, mean
 //! end-to-end event latency per second, and per-stage batch sizes.
 
-use std::collections::HashMap;
-
 use crate::dataflow::Stage;
 use crate::util::FastMap;
 use crate::util::{Micros, SEC};
@@ -20,7 +18,7 @@ pub struct TimelineRow {
     /// Events dropped this second.
     pub dropped: usize,
     /// Mean batch size executed per stage this second.
-    pub mean_batch: HashMap<Stage, f64>,
+    pub mean_batch: FastMap<Stage, f64>,
 }
 
 #[derive(Debug, Default)]
@@ -29,7 +27,7 @@ struct Acc {
     lat_sum: f64,
     completed: usize,
     dropped: usize,
-    batch_sum: HashMap<Stage, (f64, usize)>,
+    batch_sum: FastMap<Stage, (f64, usize)>,
     /// (latency_s, batch_size) samples per stage — Fig 8's scatter.
     scatter: Vec<(Stage, f64, usize)>,
 }

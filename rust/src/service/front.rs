@@ -311,6 +311,15 @@ struct Inner {
     /// discarded, a missed one is recovered.
     refinements: Mutex<FastMap<QueryId, (u32, Arc<Vec<f32>>)>>,
     state: Mutex<State>,
+    /// Workers whose supervisors exhausted their restart budget — the
+    /// backing store for [`SupervisorHealth`]. Pushed (at most once
+    /// per worker) from the supervisor thread at give-up time.
+    lost_workers: Mutex<Vec<LostWorker>>,
+    /// Worker counts per stage, kept so the submit path can tell "some
+    /// workers lost" (degraded but serving) from "all workers of a
+    /// stage lost" (reject new work).
+    n_va: usize,
+    n_cr: usize,
     start: Instant,
     stopping: AtomicBool,
     /// Shared trace sink (threads hold the service's `Inner`, so one
@@ -324,6 +333,15 @@ struct Inner {
 impl Inner {
     fn now_us(&self) -> Micros {
         self.start.elapsed().as_micros() as Micros
+    }
+
+    fn supervisor_health(&self) -> SupervisorHealth {
+        let lost = self.lost_workers.lock().unwrap().clone();
+        if lost.is_empty() {
+            SupervisorHealth::AllWorkersLive
+        } else {
+            SupervisorHealth::Degraded { lost }
+        }
     }
 }
 
@@ -535,6 +553,53 @@ fn promote_locked(
     admitted
 }
 
+/// A worker whose supervisor gave up restarting it: its restart
+/// budget ([`MAX_WORKER_RESTARTS`]) was exhausted by repeated panics,
+/// so the thread exited and its partition is no longer processing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LostWorker {
+    /// Stage the worker served (VA or CR).
+    pub stage: Stage,
+    /// Worker index within its stage.
+    pub task: u32,
+    /// Restarts consumed before the supervisor gave up.
+    pub restarts: u32,
+}
+
+/// Typed supervisor state — the PR-7 `worker_restarts` gauge promoted
+/// to something callers can branch on. Observable mid-run via
+/// [`TrackingService::supervisor_health`] and embedded in the final
+/// [`ServiceReport`]; the submit path consults it to reject new work
+/// once an entire stage has lost every worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SupervisorHealth {
+    /// No worker has exhausted its restart budget.
+    AllWorkersLive,
+    /// One or more workers gave up; the service still runs but their
+    /// partitions are dark (events routed there stay in flight).
+    Degraded {
+        /// The workers whose supervisors gave up, in give-up order.
+        lost: Vec<LostWorker>,
+    },
+}
+
+impl SupervisorHealth {
+    /// Whether any worker has been lost.
+    pub fn is_degraded(&self) -> bool {
+        matches!(self, SupervisorHealth::Degraded { .. })
+    }
+
+    /// Lost workers at `stage` (empty when healthy).
+    pub fn lost_at(&self, stage: Stage) -> usize {
+        match self {
+            SupervisorHealth::AllWorkersLive => 0,
+            SupervisorHealth::Degraded { lost } => {
+                lost.iter().filter(|w| w.stage == stage).count()
+            }
+        }
+    }
+}
+
 /// Final report of a service run.
 #[derive(Debug)]
 pub struct ServiceReport {
@@ -547,6 +612,9 @@ pub struct ServiceReport {
     /// Final metrics-registry snapshot (also observable mid-run via
     /// [`TrackingService::metrics_snapshot`]).
     pub metrics: MetricsSnapshot,
+    /// Supervisor state at shutdown: workers that exhausted their
+    /// restart budget mid-run and stopped processing.
+    pub supervisor: SupervisorHealth,
 }
 
 /// The running multi-query service.
@@ -621,6 +689,8 @@ impl TrackingService {
         );
         let catalog =
             AppCatalog::new(app.clone(), cfg.app, cfg.tl);
+        let n_va = cfg.cluster.va_instances.clamp(1, 4);
+        let n_cr = cfg.cluster.cr_instances.clamp(1, 4);
         let inner = Arc::new(Inner {
             admission: AdmissionController::new(policy),
             catalog,
@@ -636,6 +706,9 @@ impl TrackingService {
                 next_event_id: 0,
                 peak_concurrent: 0,
             }),
+            lost_workers: Mutex::new(Vec::new()),
+            n_va,
+            n_cr,
             start: Instant::now(),
             stopping: AtomicBool::new(false),
             graph,
@@ -647,8 +720,6 @@ impl TrackingService {
         let cfg = &inner.cfg;
         let max_batch_delay = millis(250.0).min(cfg.gamma());
 
-        let n_va = cfg.cluster.va_instances.clamp(1, 4);
-        let n_cr = cfg.cluster.cr_instances.clamp(1, 4);
         let va_part = Partitioner::new(n_va);
         let cr_part = Partitioner::new(n_cr);
 
@@ -760,6 +831,23 @@ impl TrackingService {
         &self,
         spec: QuerySpec,
     ) -> Result<(QueryId, QueryStatus)> {
+        // A stage whose every worker exhausted its restart budget can
+        // no longer process frames at all — reject new work with a
+        // typed error instead of admitting queries that would starve.
+        {
+            let health = self.inner.supervisor_health();
+            let lost_va = health.lost_at(Stage::Va);
+            let lost_cr = health.lost_at(Stage::Cr);
+            if lost_va >= self.inner.n_va || lost_cr >= self.inner.n_cr {
+                return Err(anyhow!(
+                    "supervisor restart budget exhausted: \
+                     {lost_va}/{} VA and {lost_cr}/{} CR workers \
+                     lost; service cannot accept new queries",
+                    self.inner.n_va,
+                    self.inner.n_cr
+                ));
+            }
+        }
         let now = self.inner.now_us();
         let mut st = self.inner.state.lock().unwrap();
         let id = st.registry.submit(spec.clone(), now);
@@ -829,6 +917,14 @@ impl TrackingService {
     /// atomics; no lock is taken and no worker is stalled).
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         self.inner.metrics.snapshot()
+    }
+
+    /// Typed supervisor state: which workers (if any) exhausted their
+    /// restart budget and stopped processing. Observable mid-run (no
+    /// worker is stalled — only the give-up path takes this lock);
+    /// the final value is embedded in [`ServiceReport::supervisor`].
+    pub fn supervisor_health(&self) -> SupervisorHealth {
+        self.inner.supervisor_health()
     }
 
     /// Cancel a submitted/queued/active query; frees its capacity and
@@ -935,6 +1031,7 @@ impl TrackingService {
             fusion_updates,
             wall_secs: wall,
             metrics: self.inner.metrics.snapshot(),
+            supervisor: self.inner.supervisor_health(),
         }
     }
 }
@@ -1219,9 +1316,18 @@ fn supervised_worker(
                 // resurrect the worker (its Stop is already consumed
                 // and shutdown would hang on join); same once the
                 // restart budget is spent.
-                if inner.stopping.load(Ordering::SeqCst)
-                    || restarts > MAX_WORKER_RESTARTS
-                {
+                if inner.stopping.load(Ordering::SeqCst) {
+                    return;
+                }
+                if restarts > MAX_WORKER_RESTARTS {
+                    // Budget spent mid-run: record the loss so the
+                    // submit path and the final report surface it as
+                    // typed state, not just a metrics gauge.
+                    inner.lost_workers.lock().unwrap().push(LostWorker {
+                        stage,
+                        task,
+                        restarts,
+                    });
                     return;
                 }
             }

@@ -56,7 +56,8 @@ pub mod scheduler;
 pub use admission::{Admission, AdmissionController, AdmissionPolicy};
 pub use engine::{MultiQueryDes, MultiQueryResult};
 pub use front::{
-    ScoreBackend, ScoreCtx, ServiceReport, SimBackend, TrackingService,
+    LostWorker, ScoreBackend, ScoreCtx, ServiceReport, SimBackend,
+    SupervisorHealth, TrackingService,
 };
 pub use query::{
     Priority, QueryRecord, QueryRegistry, QueryReport, QuerySpec,

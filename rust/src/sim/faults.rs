@@ -113,6 +113,28 @@ impl FaultModel {
         }
         m.transitions.sort_unstable();
         m.transitions.dedup();
+        // Post-compile invariants: every step/window list the queries
+        // binary-search or scan is sorted, transitions are strictly
+        // increasing after the dedup, and loss probabilities survived
+        // the clamp — a malformed model here would fail far away, as a
+        // non-deterministic aliveness answer mid-run.
+        crate::strict_assert!(
+            m.node_steps
+                .iter()
+                .chain(m.cam_steps.iter())
+                .all(|s| s.windows(2).all(|w| w[0].0 <= w[1].0)),
+            "fault model step schedule not sorted by time"
+        );
+        crate::strict_assert!(
+            m.transitions.windows(2).all(|w| w[0] < w[1]),
+            "fault model transitions not strictly increasing"
+        );
+        crate::strict_assert!(
+            m.loss
+                .iter()
+                .all(|&(from, until, p)| from <= until && (0.0..=1.0).contains(&p)),
+            "fault model loss window malformed"
+        );
         m
     }
 

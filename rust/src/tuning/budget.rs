@@ -123,6 +123,17 @@ impl BudgetManager {
             self.slots.resize(self.capacity, None);
         }
         let idx = (event % self.capacity as u64) as usize;
+        // Invariant: a ring overwrite may only evict a record in the
+        // same residue class — never a foreign key. (No monotonicity
+        // assert here: probes legitimately recycle the id of the drop
+        // that spawned them, so an older id can land on a newer one.)
+        crate::strict_assert!(
+            match &self.slots[idx] {
+                Some((old_id, _)) => old_id % self.capacity as u64 == event % self.capacity as u64,
+                None => true,
+            },
+            "budget ring slot {idx} held a foreign key"
+        );
         self.slots[idx] = Some((event, rec));
     }
 

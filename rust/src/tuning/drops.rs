@@ -65,7 +65,12 @@ pub fn drop_at_queue(
     xi_1: Micros,
     budget: Micros,
 ) -> bool {
-    !exempt && drop_before_queue(u, xi_1, budget)
+    let verdict = !exempt && drop_before_queue(u, xi_1, budget);
+    crate::strict_assert!(
+        !(exempt && verdict),
+        "drop point 1 dropped an exempt event"
+    );
+    verdict
 }
 
 /// Drop point 2 with the exemption rule applied.
@@ -76,7 +81,12 @@ pub fn drop_at_exec(
     xi_b: Micros,
     budget: Micros,
 ) -> bool {
-    !exempt && drop_before_exec(u, q, xi_b, budget)
+    let verdict = !exempt && drop_before_exec(u, q, xi_b, budget);
+    crate::strict_assert!(
+        !(exempt && verdict),
+        "drop point 2 dropped an exempt event"
+    );
+    verdict
 }
 
 /// Drop point 3 with the exemption rule applied.
@@ -86,7 +96,12 @@ pub fn drop_at_transmit(
     pi: Micros,
     budget: Micros,
 ) -> bool {
-    !exempt && drop_before_transmit(u, pi, budget)
+    let verdict = !exempt && drop_before_transmit(u, pi, budget);
+    crate::strict_assert!(
+        !(exempt && verdict),
+        "drop point 3 dropped an exempt event"
+    );
+    verdict
 }
 
 #[cfg(test)]
