@@ -698,6 +698,29 @@ fn main() {
         run_des(rp, "des.1000cam.faults.recovery_off", mk(true, false));
     }
 
+    println!(
+        "\n== Sharded execution (K=1 vs K=4, sequential vs threaded) =="
+    );
+    {
+        // Same workload and seed; the arms differ only in the shard
+        // layout and merge backend. The property suite proves the
+        // *results* bit-identical, so these rows price purely the
+        // merge machinery: k1 vs the single-core baseline is the
+        // router + merge-loop overhead, k4 adds real cross-shard
+        // envelope traffic, and k4_threaded prices the channel
+        // round-trips of the worker backend against the inline merge.
+        let mk = |shards: usize, threads: usize| {
+            let mut c = des_cfg(smoke);
+            c.tl = TlKind::Base;
+            c.sharding.shards = shards;
+            c.sharding.threads = threads;
+            c
+        };
+        run_des(rp, "des.1000cam.shards.k1", mk(1, 0));
+        run_des(rp, "des.1000cam.shards.k4", mk(4, 0));
+        run_des(rp, "des.1000cam.shards.k4_threaded", mk(4, 4));
+    }
+
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");
     match ModelPool::load(&default_dir(), &["va", "cr_small"], Some(&[1, 8, 25])) {
         Ok(pool) => {

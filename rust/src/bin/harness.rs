@@ -24,6 +24,12 @@
 //!                               # must reconcile (incl. lost_to_fault)
 //!                               # and recovery-on must complete
 //!                               # strictly more on-time events
+//!   harness shard [--smoke]     # sharded-execution A/B: the same
+//!                               # seed at K=1, K=4 and K=4 threaded;
+//!                               # all three traces must schema-
+//!                               # validate and reconcile with their
+//!                               # ledgers, and every summary must be
+//!                               # bit-identical across the arms
 //!   harness lint                # repo-invariant static-analysis pass
 //!                               # over rust/src (trace gating,
 //!                               # wall-clock bans, map determinism);
@@ -60,7 +66,7 @@ fn main() {
     };
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults|lint [--smoke] ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults|shard|lint [--smoke] ..."
         );
         std::process::exit(2);
     }
@@ -129,6 +135,9 @@ fn main() {
     }
     if want("faults") {
         faults(&out_dir, smoke);
+    }
+    if want("shard") {
+        shard(&out_dir, smoke);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -973,6 +982,162 @@ fn faults(out: &Path, smoke: bool) {
         ("recovery_off", summary_json(off)),
     ]);
     std::fs::write(out.join("faults.json"), doc.to_string()).unwrap();
+}
+
+/// Sharded-execution A/B (`harness shard`): the same seed runs at
+/// K=1, K=4 sequential and K=4 threaded. Every arm runs under the
+/// JSONL flight recorder; each trace must schema-validate and
+/// reconcile exactly with its ledger (including the `cross_shard`
+/// count against the metrics registry), and the merge contract is
+/// then enforced across the arms: bit-identical summaries, detections,
+/// dispatch counts and RNG draws, zero cross-shard traffic at K=1,
+/// non-zero at K=4, and identical cross-shard traffic between the
+/// sequential and threaded K=4 arms. Any mismatch exits 1. `--smoke`
+/// shrinks to 60 cameras / 60 s so CI runs the whole A/B in seconds.
+fn shard(out: &Path, smoke: bool) {
+    use anveshak::config::{BatchingKind, ExperimentConfig, TlKind};
+    use anveshak::coordinator::des::run_with_sink;
+    use anveshak::obs::{validate_trace, JsonlSink};
+
+    println!(
+        "\n== Sharded execution A/B: same seed at K=1, K=4, K=4 threaded =="
+    );
+    let mut results: Vec<(&str, RunResult)> = Vec::new();
+    for (arm, shards, threads) in
+        [("k1", 1usize, 0usize), ("k4", 4, 0), ("k4_threaded", 4, 4)]
+    {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("shard_{arm}");
+        cfg.tl = TlKind::Base;
+        cfg.batching = BatchingKind::Dynamic { max: 25 };
+        cfg.drops_enabled = true;
+        cfg.sharding.shards = shards;
+        cfg.sharding.threads = threads;
+        if smoke {
+            cfg.num_cameras = 60;
+            cfg.workload.vertices = 60;
+            cfg.workload.edges = 160;
+            cfg.duration_secs = 60.0;
+        }
+        let path = out.join(format!("shard_{arm}.jsonl"));
+        let sink = JsonlSink::create(&path).expect("create trace file");
+        eprintln!(
+            "[run] shard_{arm}{} ...",
+            if smoke { " (smoke)" } else { "" }
+        );
+        let start = std::time::Instant::now();
+        let r = run_with_sink(cfg, sink.clone());
+        sink.flush();
+        eprintln!(
+            "[run] shard_{arm} done in {:.1}s ({} trace lines)",
+            start.elapsed().as_secs_f64(),
+            sink.lines()
+        );
+
+        let text =
+            std::fs::read_to_string(&path).expect("read trace back");
+        let check = match validate_trace(&text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{arm}: trace FAILED schema validation: {e}");
+                std::process::exit(1);
+            }
+        };
+        let s = &r.summary;
+        let mut ok = true;
+        {
+            let mut expect = |what: &str, got: u64, want: u64| {
+                if got != want {
+                    eprintln!(
+                        "  MISMATCH {arm} {what}: trace {got} != ledger {want}"
+                    );
+                    ok = false;
+                }
+            };
+            expect("generated", check.generated, s.generated);
+            expect("completed", check.completed, s.on_time + s.delayed);
+            expect("on_time", check.on_time, s.on_time);
+            expect("dropped", check.dropped_total(), s.dropped);
+            expect("in_flight", check.unterminated(), s.in_flight);
+            expect("detections", check.detections, r.detections);
+            expect(
+                "cross_shard",
+                check.cross_shard,
+                r.metrics.cross_shard_msgs,
+            );
+        }
+        let viol = check.violations();
+        if !viol.is_empty() {
+            eprintln!(
+                "  MISMATCH {arm} conservation: {} violation(s), first {:?}",
+                viol.len(),
+                viol[0]
+            );
+            ok = false;
+        }
+        if !ok {
+            eprintln!("{arm}: trace FAILED ledger reconciliation");
+            std::process::exit(1);
+        }
+        print_summary_row(arm, &r);
+        println!(
+            "    shards {} | cross-shard msgs {} | trace reconciles ({} lines)",
+            r.metrics.shards, r.metrics.cross_shard_msgs, check.lines
+        );
+        results.push((arm, r));
+    }
+
+    let k1 = &results[0].1;
+    let mut ok = true;
+    for (arm, r) in &results[1..] {
+        if r.summary != k1.summary
+            || r.detections != k1.detections
+            || r.fusion_updates != k1.fusion_updates
+            || r.core_events != k1.core_events
+            || r.rng_draws != k1.rng_draws
+        {
+            eprintln!(
+                "FAIL: {arm} diverged from k1: {:?} vs {:?}",
+                r.summary, k1.summary
+            );
+            ok = false;
+        }
+    }
+    if k1.metrics.cross_shard_msgs != 0 {
+        eprintln!("FAIL: K=1 recorded cross-shard traffic");
+        ok = false;
+    }
+    let k4 = &results[1].1;
+    let k4t = &results[2].1;
+    if k4.metrics.cross_shard_msgs == 0 {
+        eprintln!("FAIL: K=4 recorded no cross-shard traffic");
+        ok = false;
+    }
+    if k4.metrics.cross_shard_msgs != k4t.metrics.cross_shard_msgs {
+        eprintln!(
+            "FAIL: threaded K=4 cross-shard traffic {} != sequential {}",
+            k4t.metrics.cross_shard_msgs, k4.metrics.cross_shard_msgs
+        );
+        ok = false;
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+    println!(
+        "  merge contract holds: K=4 bit-identical to K=1 ({} cross-shard msgs, threaded agrees)",
+        k4.metrics.cross_shard_msgs
+    );
+    let doc = obj([
+        ("smoke", smoke.into()),
+        ("k1", summary_json(k1)),
+        ("k4", summary_json(k4)),
+        ("k4_threaded", summary_json(k4t)),
+        (
+            "cross_shard_msgs",
+            (k4.metrics.cross_shard_msgs as i64).into(),
+        ),
+    ]);
+    std::fs::write(out.join("shard.json"), doc.to_string()).unwrap();
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

@@ -312,6 +312,92 @@ impl Strategy for ArrivalOrder {
 }
 
 // ---------------------------------------------------------------------------
+// Shard plans
+// ---------------------------------------------------------------------------
+
+/// A sharded-execution plan for the DES engines: shard count `K`, the
+/// merge backend (inline vs one worker thread per shard), and a camera
+/// count that can drop *below* `K` to force degenerate single-vertex
+/// shards in the partition. Shrinks toward the canonical unsharded
+/// plan (`shards = 1`, `threads = 0`, full-size workload) one field at
+/// a time, so a minimal counterexample names whether the shard count,
+/// the threaded backend, or the degenerate layout breaks the property.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Shard count `K ∈ [1, 8]`.
+    pub shards: usize,
+    /// Merge-backend worker threads (0 = inline; `shards` = threaded).
+    pub threads: usize,
+    /// Cameras in the generated workload. May be smaller than
+    /// `shards`; [`crate::roadnet::partition()`] then clamps `K` to the
+    /// vertex count and every shard is a single boundary vertex.
+    pub cameras: usize,
+}
+
+/// Camera counts the generator draws from: a degenerate handful
+/// (below the largest `K`, forcing single-vertex shards), a
+/// boundary-heavy small town, and the canonical full-size workload.
+const SHARD_CAMERA_SIZES: [usize; 3] = [3, 12, 40];
+
+/// Strategy over [`ShardPlan`]s.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardPlans;
+
+/// Shard-plan strategy (`K ∈ [1, 8]`, inline or threaded backend,
+/// degenerate to full-size workloads).
+pub fn shard_plan() -> ShardPlans {
+    ShardPlans
+}
+
+impl Strategy for ShardPlans {
+    type Value = ShardPlan;
+
+    fn generate(&self, r: &mut Rng) -> ShardPlan {
+        let shards = r.range_u(1, 9);
+        let threads = if r.bool(0.5) { shards } else { 0 };
+        let cameras =
+            SHARD_CAMERA_SIZES[r.range_u(0, SHARD_CAMERA_SIZES.len())];
+        ShardPlan {
+            shards,
+            threads,
+            cameras,
+        }
+    }
+
+    fn shrink(&self, v: &ShardPlan) -> Vec<ShardPlan> {
+        let mut out = Vec::new();
+        // Backend first: an inline repro of a threaded failure is the
+        // more valuable counterexample.
+        if v.threads != 0 {
+            out.push(ShardPlan { threads: 0, ..*v });
+        }
+        if v.shards > 1 {
+            out.push(ShardPlan {
+                shards: 1,
+                threads: v.threads.min(1),
+                ..*v
+            });
+            let mid = 1 + (v.shards - 1) / 2;
+            if mid != 1 && mid != v.shards {
+                out.push(ShardPlan {
+                    shards: mid,
+                    threads: v.threads.min(mid),
+                    ..*v
+                });
+            }
+        }
+        let full = SHARD_CAMERA_SIZES[SHARD_CAMERA_SIZES.len() - 1];
+        if v.cameras != full {
+            out.push(ShardPlan {
+                cameras: full,
+                ..*v
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // ServiceConfig mutations
 // ---------------------------------------------------------------------------
 
@@ -454,6 +540,54 @@ mod tests {
             assert!(steps <= 8, "transposition chain too long");
         }
         assert!(s.shrink(&identity).is_empty());
+    }
+
+    #[test]
+    fn shard_plan_generates_in_range_and_shrinks_to_unsharded() {
+        let s = shard_plan();
+        let a = s.generate(&mut rng(9, 0));
+        let b = s.generate(&mut rng(9, 0));
+        assert_eq!(a, b, "generator is seed-deterministic");
+        for case in 0..64 {
+            let v = s.generate(&mut rng(9, case));
+            assert!((1..=8).contains(&v.shards), "{v:?}");
+            assert!(v.threads == 0 || v.threads == v.shards, "{v:?}");
+            assert!(SHARD_CAMERA_SIZES.contains(&v.cameras), "{v:?}");
+        }
+        // Every shrink chain terminates at the canonical unsharded
+        // plan, and the walk changes at most ~log K + 2 steps.
+        let mut cur = ShardPlan {
+            shards: 8,
+            threads: 8,
+            cameras: 3,
+        };
+        let min = ShardPlan {
+            shards: 1,
+            threads: 0,
+            cameras: 40,
+        };
+        let mut steps = 0;
+        while cur != min {
+            let cands = s.shrink(&cur);
+            assert!(!cands.is_empty(), "stuck at {cur:?}");
+            cur = *cands.last().unwrap();
+            steps += 1;
+            assert!(steps <= 12, "shrink chain too long at {cur:?}");
+        }
+        assert!(s.shrink(&min).is_empty(), "canonical plan is minimal");
+    }
+
+    #[test]
+    fn shard_plan_can_force_degenerate_single_camera_shards() {
+        let s = shard_plan();
+        let degenerate = (0..256).any(|case| {
+            let v = s.generate(&mut rng(1, case));
+            v.shards > v.cameras
+        });
+        assert!(
+            degenerate,
+            "generator must sometimes draw K above the camera count"
+        );
     }
 
     #[test]

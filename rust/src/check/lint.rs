@@ -334,6 +334,20 @@ mod tests {
     }
 
     #[test]
+    fn sharded_execution_files_are_on_the_des_path() {
+        // The sharded merge loop and the roadnet partition run per
+        // event; both must stay under the wall-clock and map-order
+        // bans. The directory prefixes cover them — this pins that
+        // coverage so a future path reshuffle cannot silently drop it.
+        assert!(is_des_path("engine/sharded.rs"));
+        assert!(is_des_path("engine/core.rs"));
+        assert!(is_des_path("roadnet/partition.rs"));
+        assert!(is_des_path("service/engine.rs"));
+        assert!(!is_des_path("obs/jsonl.rs"));
+        assert!(!is_des_path("bin/harness.rs"));
+    }
+
+    #[test]
     fn enabled_gate_within_window_passes_and_outside_window_fails() {
         let root = fixture_root("window");
         let gated = "pub fn f(on: bool) {\n    if obs.enabled() {\n        emit(TraceEvent::Generated);\n    }\n}\n";

@@ -179,6 +179,13 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ),
             ]),
         ),
+        (
+            "sharding",
+            obj([
+                ("shards", c.sharding.shards.into()),
+                ("threads", c.sharding.threads.into()),
+            ]),
+        ),
     ])
 }
 
@@ -376,6 +383,10 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         {
             c.obs.per_second_metrics = b;
         }
+    }
+    if let Some(v) = j.get("sharding") {
+        set_usize(v, "shards", &mut c.sharding.shards);
+        set_usize(v, "threads", &mut c.sharding.threads);
     }
     Ok(c)
 }
@@ -768,6 +779,21 @@ mod tests {
         let c3 = config_from_json("{}").unwrap();
         assert_eq!(c3.obs.ring_capacity, 4093);
         assert!(c3.obs.per_second_metrics);
+    }
+
+    #[test]
+    fn sharding_round_trips() {
+        let mut c = ExperimentConfig::default();
+        c.sharding.shards = 4;
+        c.sharding.threads = 4;
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert_eq!(c2.sharding.shards, 4);
+        assert_eq!(c2.sharding.threads, 4);
+        // Omitting the section keeps the single-shard default.
+        let c3 = config_from_json("{}").unwrap();
+        assert_eq!(c3.sharding.shards, 1);
+        assert_eq!(c3.sharding.threads, 0);
     }
 
     #[test]

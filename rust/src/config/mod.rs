@@ -392,6 +392,28 @@ impl Default for ObsConfig {
     }
 }
 
+/// Sharded-DES execution parameters (see `docs/ARCHITECTURE.md`,
+/// "Sharded execution"). The determinism contract makes these knobs
+/// result-neutral: any `(shards, threads)` pair produces bit-identical
+/// summaries/ledgers for the same seed — only the execution geometry
+/// (and the cross-shard traffic reported by `obs`) changes.
+#[derive(Debug, Clone)]
+pub struct ShardingConfig {
+    /// Geographic shard count K (clamped to the vertex count; 1 =
+    /// single-shard, the pre-sharding engine behaviour).
+    pub shards: usize,
+    /// Opt-in parallelism: > 0 runs each shard's event core on its
+    /// own std thread (the value is advisory — shards are the unit of
+    /// parallelism); 0 keeps the sequential inline backend.
+    pub threads: usize,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        Self { shards: 1, threads: 0 }
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -429,6 +451,8 @@ pub struct ExperimentConfig {
     pub multi_query: MultiQueryConfig,
     /// Observability knobs (recording sinks only).
     pub obs: ObsConfig,
+    /// Sharded-DES execution geometry (result-neutral by contract).
+    pub sharding: ShardingConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -455,6 +479,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::default(),
             multi_query: MultiQueryConfig::default(),
             obs: ObsConfig::default(),
+            sharding: ShardingConfig::default(),
         }
     }
 }

@@ -27,13 +27,15 @@ use crate::dataflow::{
     FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
     TrackingLogic, TruthSource, VideoAnalytics, SINGLE_QUERY,
 };
-use crate::engine::EventCore;
+use crate::engine::ShardedDes;
 use crate::metrics::{Ledger, Summary, Timeline};
 use crate::obs::{
     span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
     NullSink, ObsSink, QueryPhase, Scope, TraceEvent,
 };
-use crate::roadnet::{generate, place_cameras, Graph};
+use crate::roadnet::{
+    generate, partition, place_cameras, Graph, Partition,
+};
 use crate::sim::{
     backoff_delay, ClockSkews, ComputeModel, EntityWalk, FaultModel,
     GroundTruth, NetModel,
@@ -130,8 +132,8 @@ pub struct RunResult {
     /// Query-embedding refinements performed by the app's QF block
     /// (0 unless the composition enables fusion).
     pub fusion_updates: u64,
-    /// Total simulation events dispatched by the shared
-    /// [`EventCore`] — the numerator of the events/sec throughput
+    /// Total simulation events dispatched by the sharded event core
+    /// ([`ShardedDes`]) — the numerator of the events/sec throughput
     /// metric reported by `benches/hotpath.rs`.
     pub core_events: u64,
     /// End-of-run metrics registry snapshot (sink-independent: the
@@ -194,7 +196,17 @@ pub struct DesEngine<S: ObsSink = NullSink> {
     fc_active: Vec<bool>,
     fc_budget: Vec<BudgetManager>,
     fc_xi: XiModel,
-    core: EventCore<Ev>,
+    /// Geographic K-way split of the roadnet (K=1 by default); drives
+    /// event routing and the failure-migration ring in
+    /// [`Self::pick_survivor`].
+    part: Partition,
+    /// Camera -> shard (the camera's host vertex's shard).
+    shard_of_cam: Vec<u32>,
+    /// Task -> shard: FC tasks follow their camera, VA/CR instances
+    /// round-robin over shards, cloud-tier tasks (TL/UV) sit on the
+    /// coordinator shard 0.
+    shard_of_task: Vec<u32>,
+    core: ShardedDes<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
     frame_counters: Vec<u64>,
@@ -405,6 +417,34 @@ impl<S: ObsSink> DesEngine<S> {
         );
         let nodes = topo.nodes;
         let task_redirect = (0..topo.tasks.len()).collect();
+        // Geographic sharding (K=1 by default). Routing is
+        // result-neutral — the merge reproduces the single-core
+        // dispatch order for any K — so the tables below only decide
+        // which shard's heap holds each event (and therefore what
+        // counts as a cross-shard handoff).
+        let part = partition(&graph, cfg.sharding.shards);
+        let shard_of_cam: Vec<u32> = (0..num_cameras)
+            .map(|c| {
+                cams.get(c)
+                    .map_or(0, |cam| part.shard_of_vertex(cam.vertex))
+            })
+            .collect();
+        let shard_of_task: Vec<u32> = topo
+            .tasks
+            .iter()
+            .map(|info| match info.stage {
+                Stage::Fc => shard_of_cam[info.instance],
+                Stage::Va | Stage::Cr => {
+                    (info.instance % part.shards()) as u32
+                }
+                _ => 0,
+            })
+            .collect();
+        let mut core =
+            ShardedDes::with_threads(part.shards(), cfg.sharding.threads);
+        if cfg!(feature = "strict-invariants") && part.shards() > 1 {
+            core.set_entity_tracking(true);
+        }
         Self {
             cfg,
             topo,
@@ -429,7 +469,10 @@ impl<S: ObsSink> DesEngine<S> {
             fc_active: vec![true; num_cameras],
             fc_budget,
             fc_xi,
-            core: EventCore::new(),
+            part,
+            shard_of_cam,
+            shard_of_task,
+            core,
             next_event_id: 0,
             next_batch_seq: 0,
             frame_counters: vec![0; num_cameras],
@@ -456,8 +499,65 @@ impl<S: ObsSink> DesEngine<S> {
 
     // ---- event plumbing --------------------------------------------------
 
+    /// Geographic routing for the sharded event core: per-camera
+    /// events live on the camera's shard, executor-addressed events on
+    /// their task's shard, and the control plane (TL spotlight, fault
+    /// ticks) on the coordinator shard 0.
+    fn shard_of(&self, ev: &Ev) -> u32 {
+        match ev {
+            Ev::FrameTick { cam } | Ev::Control { cam, .. } => {
+                self.shard_of_cam[*cam]
+            }
+            Ev::Arrive { task, .. }
+            | Ev::BatchTimer { task, .. }
+            | Ev::ExecDone { task, .. }
+            | Ev::SignalAt { task, .. } => self.shard_of_task[*task],
+            Ev::TlTick | Ev::TlDetection { .. } | Ev::FaultTick => 0,
+        }
+    }
+
     fn push(&mut self, t: Micros, ev: Ev) {
-        self.core.schedule(t, ev);
+        let shard = self.shard_of(&ev);
+        // Entity-ownership bookkeeping (strict-invariants, K>1 only):
+        // data events are owned by the shard holding them; probes
+        // reuse the slowest event's id and feedback updates are
+        // broadcast copies, so neither has a single owner.
+        let entity = if self.core.shards() > 1 {
+            match &ev {
+                Ev::Arrive { ev, .. }
+                    if !ev.header.probe
+                        && !matches!(
+                            ev.payload,
+                            Payload::QueryUpdate(_)
+                        ) =>
+                {
+                    Some(ev.header.id)
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let msg = self.core.schedule(t, shard, ev);
+        if let Some(id) = entity {
+            match msg {
+                Some(m) => self.core.record_handoff(id, m.from, m.to),
+                None => self.core.note_arrival(id, shard),
+            }
+        }
+        if let Some(m) = msg {
+            self.metrics.cross_shard_msg();
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::CrossShard {
+                        from_shard: m.from,
+                        to_shard: m.to,
+                        seq: m.seq,
+                    },
+                );
+            }
+        }
     }
 
     fn observe(&self, task: usize) -> Micros {
@@ -496,6 +596,7 @@ impl<S: ObsSink> DesEngine<S> {
         }
         self.push(SEC, Ev::TlTick);
         self.metrics.set_active_queries(1);
+        self.metrics.set_shards(self.core.shards());
 
         if !self.faults.is_static() {
             // One tick per scheduled node/camera transition: crash
@@ -1593,15 +1694,37 @@ impl<S: ObsSink> DesEngine<S> {
         }
     }
 
-    /// First alive executor of `stage` other than `task`, if any.
+    /// Surviving executor of `stage` to adopt `task`'s orphans.
+    /// Shard-aware: same-shard instances first, then instances on a
+    /// shard *adjacent* to the dead task's (sharing a boundary edge —
+    /// the geographic migration targets), then any survivor; ties
+    /// break by task id. At K=1 every candidate sits on shard 0, so
+    /// this reduces to the previous first-alive rule (bit-identity
+    /// with the unsharded engine). Re-dispatched orphans are priced
+    /// by the adopting executor's own per-stage ξ model — per
+    /// (stage, app) in the multi-query engine — like any batch it
+    /// forms.
     fn pick_survivor(&self, task: usize, stage: Stage) -> Option<usize> {
-        (0..self.tasks.len()).find(|&t| {
-            t != task
-                && self.tasks[t].stage == stage
-                && self
-                    .faults
-                    .node_alive(self.tasks[t].node, self.now)
-        })
+        let home = self.shard_of_task[task];
+        (0..self.tasks.len())
+            .filter(|&t| {
+                t != task
+                    && self.tasks[t].stage == stage
+                    && self
+                        .faults
+                        .node_alive(self.tasks[t].node, self.now)
+            })
+            .min_by_key(|&t| {
+                let s = self.shard_of_task[t];
+                let ring = if s == home {
+                    0
+                } else if self.part.adjacent(home, s) {
+                    1
+                } else {
+                    2
+                };
+                (ring, t)
+            })
     }
 
     // ---- sink (UV) ---------------------------------------------------------
@@ -1685,8 +1808,8 @@ impl<S: ObsSink> DesEngine<S> {
     /// Route the QF block's current embedding upstream as a
     /// seq-stamped [`Payload::QueryUpdate`], one copy per VA/CR
     /// executor, each after a control-message network delay. Arrival
-    /// order is deterministic (task index, then [`EventCore`] sequence
-    /// numbers), so seeded runs stay bit-reproducible.
+    /// order is deterministic (task index, then the event core's
+    /// global sequence numbers), so seeded runs stay bit-reproducible.
     fn route_refinement(&mut self, trigger: u64, camera: usize) {
         let Some(emb) = self.qf.embedding() else {
             return; // counting-only QF blocks refine nothing routable
@@ -2051,6 +2174,45 @@ mod tests {
         assert_eq!(a.summary.on_time, b.summary.on_time);
         assert_eq!(a.rng_draws, b.rng_draws);
         assert_eq!(a.detections, b.detections);
+    }
+
+    #[test]
+    fn sharding_is_result_neutral() {
+        // The determinism contract at engine level: any (K, threads)
+        // geometry produces bit-identical results for the same seed.
+        // The property suite (rust/tests/prop_shard.rs) explores the
+        // full plan space; this is the cheap in-tree sentinel.
+        let mk = |shards: usize, threads: usize| {
+            let mut c = small_cfg();
+            c.tl = TlKind::Base;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.drops_enabled = true;
+            c.sharding.shards = shards;
+            c.sharding.threads = threads;
+            c
+        };
+        let k1 = run(mk(1, 0));
+        let k3 = run(mk(3, 0));
+        let k3t = run(mk(3, 3));
+        for r in [&k3, &k3t] {
+            assert_eq!(r.summary.generated, k1.summary.generated);
+            assert_eq!(r.summary.on_time, k1.summary.on_time);
+            assert_eq!(r.summary.delayed, k1.summary.delayed);
+            assert_eq!(r.summary.dropped, k1.summary.dropped);
+            assert_eq!(r.detections, k1.detections);
+            assert_eq!(r.core_events, k1.core_events);
+            assert_eq!(r.rng_draws, k1.rng_draws);
+        }
+        // K=1 issues no envelopes; K=3 moves real traffic across
+        // boundaries (VA/CR hops round-robin over shards).
+        assert_eq!(k1.metrics.cross_shard_msgs, 0);
+        assert_eq!(k1.metrics.shards, 1);
+        assert!(k3.metrics.cross_shard_msgs > 0);
+        assert_eq!(k3.metrics.shards, 3);
+        assert_eq!(
+            k3.metrics.cross_shard_msgs,
+            k3t.metrics.cross_shard_msgs
+        );
     }
 
     #[test]

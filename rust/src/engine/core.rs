@@ -93,6 +93,24 @@ impl<E> EventCore<E> {
 
     /// Schedule `ev` at time `t` (clamped to `now`).
     pub fn schedule(&mut self, t: Micros, ev: E) {
+        self.seq += 1;
+        let seq = self.seq;
+        self.push_keyed(t, seq, ev);
+    }
+
+    /// Schedule `ev` at `(t, seq)` with a caller-assigned sequence
+    /// number. This is the sharded-merge entry point: the
+    /// [`crate::engine::ShardedDes`] assigns *globally* monotone
+    /// sequence numbers at schedule time so the K per-shard heaps can
+    /// be merged back into exactly the order a single core would have
+    /// produced. The local counter ratchets up to `seq` so a later
+    /// plain [`Self::schedule`] can never reuse a smaller number.
+    pub fn schedule_with_seq(&mut self, t: Micros, seq: u64, ev: E) {
+        self.seq = self.seq.max(seq);
+        self.push_keyed(t, seq, ev);
+    }
+
+    fn push_keyed(&mut self, t: Micros, seq: u64, ev: E) {
         let slot = match self.free.pop() {
             Some(s) => {
                 // Invariant: a slot handed out by the free-list must not
@@ -110,9 +128,17 @@ impl<E> EventCore<E> {
                 (self.store.len() - 1) as u32
             }
         };
-        self.seq += 1;
         self.heap
-            .push((Reverse(t.max(self.now)), Reverse(self.seq), slot));
+            .push((Reverse(t.max(self.now)), Reverse(seq), slot));
+    }
+
+    /// The `(time, seq)` key of the next event, without popping it.
+    /// The sharded merge compares the K shard heads through this.
+    #[inline]
+    pub fn peek(&self) -> Option<(Micros, u64)> {
+        self.heap
+            .peek()
+            .map(|&(Reverse(t), Reverse(s), _)| (t, s))
     }
 
     /// Pop the next event if it is due at or before `horizon`,
@@ -186,6 +212,32 @@ mod tests {
         // One live event at a time: the slab never exceeds one slot.
         assert_eq!(c.store.len(), 1);
         assert_eq!(c.dispatched(), 100);
+    }
+
+    #[test]
+    fn external_seq_orders_ties_and_ratchets_counter() {
+        let mut c: EventCore<u32> = EventCore::new();
+        // Caller-assigned seqs scheduled out of order: ties on time
+        // break by seq, not by insertion order.
+        c.schedule_with_seq(10, 7, 77);
+        c.schedule_with_seq(10, 3, 33);
+        c.schedule_with_seq(5, 9, 99);
+        assert_eq!(c.peek(), Some((5, 9)));
+        let mut seen = Vec::new();
+        while let Some((_, e)) = c.pop_until(Micros::MAX) {
+            seen.push(e);
+        }
+        assert_eq!(seen, vec![99, 33, 77]);
+        // The local counter ratcheted past the largest external seq,
+        // so a plain schedule sorts after everything already seen.
+        c.schedule_with_seq(20, 50, 1);
+        c.schedule(20, 2);
+        let mut tail = Vec::new();
+        while let Some((_, e)) = c.pop_until(Micros::MAX) {
+            tail.push(e);
+        }
+        assert_eq!(tail, vec![1, 2]);
+        assert_eq!(c.peek(), None);
     }
 
     #[test]

@@ -4,8 +4,14 @@
 //! loop that [`crate::coordinator::des`] (single query) and
 //! [`crate::service::engine`] (multi query) both instantiate; the
 //! engines contribute only their event vocabularies and handlers.
+//! [`ShardedDes`] splits that queue across K geographic shards with a
+//! deterministic `(time, seq, shard)` merge — both engines now run on
+//! it (K=1 by default), and cross-shard handoffs are typed
+//! [`CrossShardMsg`] envelopes.
 
 pub mod core;
+pub mod sharded;
 
 // `self::` disambiguates from the `core` built-in crate (E0659).
 pub use self::core::EventCore;
+pub use self::sharded::{CrossShardMsg, ShardedDes};

@@ -1,0 +1,606 @@
+//! Sharded discrete-event substrate with a deterministic merge.
+//!
+//! [`ShardedDes`] splits the event queue of a virtual-time engine
+//! across K geographic shards (one [`EventCore`] per shard, shards
+//! assigned by [`crate::roadnet::partition()`]) and merges the K heads
+//! back into a single dispatch stream. The merge is keyed by
+//! `(time, seq, shard)` where `seq` is a *globally* monotone sequence
+//! number assigned at schedule time — so the merged order is exactly
+//! the order a single [`EventCore`] would have produced, and per-seed
+//! bit-identity at K=1 plus K-invariance of every downstream result
+//! (summaries, detections, ledgers, RNG draws) hold *by construction*.
+//! The property suite (`rust/tests/prop_shard.rs`) proves rather than
+//! assumes this.
+//!
+//! Cross-shard handoff: when the event being dispatched lives on shard
+//! A and its handler schedules onto shard B, the new event rides a
+//! boundary edge of the partition as a typed [`CrossShardMsg`]
+//! envelope — [`ShardedDes::schedule`] returns the envelope so the
+//! engine can count it and emit a `TraceEvent::CrossShard`. Under
+//! `--features strict-invariants` the merge additionally checks three
+//! invariants at runtime: emitted keys strictly increase, a popped
+//! head matches its peeked key, and (when entity tracking is on) a
+//! handed-off entity is owned by exactly one shard at a time.
+//!
+//! Opt-in parallelism: `threads > 0` runs each shard's [`EventCore`]
+//! on its own std thread behind a channel protocol. The merge loop is
+//! unchanged — it compares the K cached heads and pops the global
+//! minimum — so the threaded path produces bit-identical results to
+//! the sequential one (also proven by the property suite), while heap
+//! maintenance (sift-up/down, slab bookkeeping) runs off the
+//! coordinator thread.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::core::EventCore;
+use crate::util::{FastMap, Micros};
+
+/// Typed envelope for an event handed across a shard boundary: the
+/// dispatching shard (`from`), the receiving shard (`to`), the merged
+/// virtual time and the global sequence number of the handed-off
+/// event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrossShardMsg {
+    pub from: u32,
+    pub to: u32,
+    pub at: Micros,
+    pub seq: u64,
+}
+
+/// Messages to a shard worker thread (threaded mode only).
+enum ToWorker<E> {
+    /// Insert an event with its pre-assigned global sequence number.
+    Schedule { t: Micros, seq: u64, ev: E },
+    /// Pop the shard head if due at or before `horizon`.
+    Pop { horizon: Micros },
+    Exit,
+}
+
+/// Replies from a shard worker thread.
+enum FromWorker<E> {
+    /// New head key after a `Schedule`.
+    Head(Option<(Micros, u64)>),
+    /// Result of a `Pop`, plus the new head key.
+    Popped {
+        popped: Option<(Micros, E)>,
+        head: Option<(Micros, u64)>,
+    },
+}
+
+/// K shard workers, one std thread each. `Schedule` is fire-and-forget
+/// (the worker's head reply is drained lazily before the next peek of
+/// that shard); `Pop` is synchronous. The protocol keeps the merge
+/// decision on the coordinator thread, so ordering is identical to the
+/// inline backend by construction.
+struct ThreadedShards<E> {
+    tx: Vec<Sender<ToWorker<E>>>,
+    rx: Vec<Receiver<FromWorker<E>>>,
+    /// Last known `(time, seq)` head per shard, refreshed by worker
+    /// replies.
+    heads: Vec<Option<(Micros, u64)>>,
+    /// Outstanding `Schedule` replies not yet drained, per shard.
+    pending: Vec<usize>,
+    workers: Vec<Option<JoinHandle<()>>>,
+}
+
+impl<E> ThreadedShards<E> {
+    fn drain(&mut self, s: usize) {
+        while self.pending[s] > 0 {
+            match self.rx[s].recv().expect("shard worker alive") {
+                FromWorker::Head(h) => self.heads[s] = h,
+                FromWorker::Popped { .. } => {
+                    unreachable!("Pop replies are consumed synchronously")
+                }
+            }
+            self.pending[s] -= 1;
+        }
+    }
+}
+
+impl<E> Drop for ThreadedShards<E> {
+    fn drop(&mut self) {
+        for tx in &self.tx {
+            // A worker that already exited (panicked) has closed its
+            // channel; nothing to signal.
+            let _ = tx.send(ToWorker::Exit);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Per-shard event storage: K inline cores, or K worker threads.
+enum Backend<E> {
+    Inline(Vec<EventCore<E>>),
+    Threads(ThreadedShards<E>),
+}
+
+impl<E> Backend<E> {
+    fn schedule(&mut self, s: usize, t: Micros, seq: u64, ev: E) {
+        match self {
+            Backend::Inline(cores) => {
+                cores[s].schedule_with_seq(t, seq, ev);
+            }
+            Backend::Threads(th) => {
+                th.tx[s]
+                    .send(ToWorker::Schedule { t, seq, ev })
+                    .expect("shard worker alive");
+                th.pending[s] += 1;
+            }
+        }
+    }
+
+    fn peek(&mut self, s: usize) -> Option<(Micros, u64)> {
+        match self {
+            Backend::Inline(cores) => cores[s].peek(),
+            Backend::Threads(th) => {
+                th.drain(s);
+                th.heads[s]
+            }
+        }
+    }
+
+    fn pop(&mut self, s: usize, horizon: Micros) -> Option<(Micros, E)> {
+        match self {
+            Backend::Inline(cores) => cores[s].pop_until(horizon),
+            Backend::Threads(th) => {
+                th.drain(s);
+                th.tx[s]
+                    .send(ToWorker::Pop { horizon })
+                    .expect("shard worker alive");
+                match th.rx[s].recv().expect("shard worker alive") {
+                    FromWorker::Popped { popped, head } => {
+                        th.heads[s] = head;
+                        popped
+                    }
+                    FromWorker::Head(_) => {
+                        unreachable!("Schedule replies were drained")
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// K per-shard event queues behind the single-core `schedule` /
+/// `pop_until` interface, merged deterministically (see the module
+/// docs for the contract). At K=1 this is a thin veneer over one
+/// [`EventCore`].
+pub struct ShardedDes<E> {
+    backend: Backend<E>,
+    /// Globally monotone schedule-time sequence counter — the merge's
+    /// FIFO tie-break, shared by all shards.
+    seq: u64,
+    /// Merged virtual time (time of the last popped event).
+    now: Micros,
+    /// Shard of the event currently being dispatched (`None` outside
+    /// the pop loop, e.g. during setup). Schedules targeting a
+    /// different shard than `current` are cross-shard handoffs.
+    current: Option<u32>,
+    dispatched: u64,
+    per_shard: Vec<u64>,
+    cross_shard: u64,
+    queued: usize,
+    /// Entity-ownership ledger (armed by [`Self::set_entity_tracking`];
+    /// the engines arm it under `strict-invariants` at K>1). Entries
+    /// are inserted, never removed — acceptable for checking builds.
+    owner: FastMap<u64, u32>,
+    track_entities: bool,
+    /// Last emitted `(time, seq, shard)` merge key.
+    last_key: Option<(Micros, u64, u32)>,
+}
+
+impl<E> ShardedDes<E> {
+    /// K inline (sequential) shards. `shards` is clamped to ≥ 1.
+    pub fn new(shards: usize) -> Self {
+        let k = shards.max(1);
+        Self::with_backend(
+            Backend::Inline((0..k).map(|_| EventCore::new()).collect()),
+            k,
+        )
+    }
+
+    fn with_backend(backend: Backend<E>, k: usize) -> Self {
+        Self {
+            backend,
+            seq: 0,
+            now: 0,
+            current: None,
+            dispatched: 0,
+            per_shard: vec![0; k],
+            cross_shard: 0,
+            queued: 0,
+            owner: FastMap::default(),
+            track_entities: false,
+            last_key: None,
+        }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Merged virtual time (time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Events scheduled but not yet popped, across all shards.
+    pub fn pending(&self) -> usize {
+        self.queued
+    }
+
+    /// Total events popped over the merge's lifetime.
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    /// Events dispatched per shard (index = shard id).
+    pub fn per_shard_dispatched(&self) -> &[u64] {
+        &self.per_shard
+    }
+
+    /// Cross-shard handoffs (envelopes issued) so far.
+    pub fn cross_shard_msgs(&self) -> u64 {
+        self.cross_shard
+    }
+
+    /// Shard of the event currently being dispatched, if any.
+    pub fn current_shard(&self) -> Option<u32> {
+        self.current
+    }
+
+    /// Arm or disarm the entity-ownership ledger. The engines arm it
+    /// only when `cfg!(feature = "strict-invariants")` and K > 1, so
+    /// production runs never pay for the map.
+    pub fn set_entity_tracking(&mut self, on: bool) {
+        self.track_entities = on;
+    }
+
+    /// Current owning shard of an entity, if tracked.
+    pub fn entity_owner(&self, id: u64) -> Option<u32> {
+        self.owner.get(&id).copied()
+    }
+
+    /// Record a same-shard arrival of entity `id` (no envelope).
+    /// Invariant: an already-owned entity cannot silently change
+    /// shards without a [`CrossShardMsg`] — the only sanctioned
+    /// exception is the coordinator shard (0) seizing orphans during
+    /// failure recovery (it re-dispatches from its own copy).
+    pub fn note_arrival(&mut self, id: u64, shard: u32) {
+        if !self.track_entities {
+            return;
+        }
+        let prev = self.owner.insert(id, shard);
+        crate::strict_assert!(
+            prev.is_none()
+                || prev == Some(shard)
+                || self.current == Some(0),
+            "entity {id} moved to shard {shard} without a CrossShardMsg \
+             envelope (owner was {prev:?})"
+        );
+    }
+
+    /// Record a cross-shard handoff of entity `id` riding an envelope
+    /// `from → to`. Invariant: the handoff originates from the owning
+    /// shard (exactly-one-owner), except the shard-0 recovery seize.
+    pub fn record_handoff(&mut self, id: u64, from: u32, to: u32) {
+        if !self.track_entities {
+            return;
+        }
+        let prev = self.owner.insert(id, to);
+        crate::strict_assert!(
+            prev.is_none() || prev == Some(from) || from == 0,
+            "entity {id} handed off {from} -> {to} but is owned by \
+             shard {prev:?}"
+        );
+    }
+
+    /// Schedule `ev` at time `t` (clamped to merged `now`) on `shard`.
+    /// Returns the [`CrossShardMsg`] envelope when this schedule is a
+    /// cross-shard handoff — i.e. it happens while dispatching an
+    /// event of a *different* shard. Schedules from outside the pop
+    /// loop (setup) are local by definition.
+    pub fn schedule(
+        &mut self,
+        t: Micros,
+        shard: u32,
+        ev: E,
+    ) -> Option<CrossShardMsg> {
+        // Clamp against the *merged* clock: a shard-local core has
+        // only seen times ≤ the merged now, so its inner clamp is a
+        // no-op and K=1 behaves bit-identically to a lone EventCore.
+        let t = t.max(self.now);
+        self.seq += 1;
+        let seq = self.seq;
+        self.backend.schedule(shard as usize, t, seq, ev);
+        self.queued += 1;
+        match self.current {
+            Some(from) if from != shard => {
+                self.cross_shard += 1;
+                Some(CrossShardMsg {
+                    from,
+                    to: shard,
+                    at: t,
+                    seq,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Pop the globally next event — the minimum `(time, seq)` over
+    /// all shard heads — if due at or before `horizon`. Advances the
+    /// merged clock and marks the event's shard as `current` for the
+    /// duration of its dispatch.
+    pub fn pop_until(&mut self, horizon: Micros) -> Option<(Micros, E)> {
+        let mut best: Option<(Micros, u64, usize)> = None;
+        for s in 0..self.per_shard.len() {
+            if let Some((t, q)) = self.backend.peek(s) {
+                let better = match best {
+                    None => true,
+                    Some((bt, bq, _)) => (t, q) < (bt, bq),
+                };
+                if better {
+                    best = Some((t, q, s));
+                }
+            }
+        }
+        let (t, seq, s) = match best {
+            Some(b) if b.0 <= horizon => b,
+            _ => {
+                self.current = None;
+                return None;
+            }
+        };
+        let (pt, ev) = self
+            .backend
+            .pop(s, horizon)
+            .expect("peeked shard head within horizon");
+        crate::strict_assert!(
+            pt == t,
+            "shard {s} popped t={pt} but its peeked head was t={t}"
+        );
+        if let Some((lt, lq, ls)) = self.last_key {
+            // The merge-order invariant: emitted keys strictly
+            // increase lexicographically (seq is globally unique, so
+            // the shard component never tie-breaks).
+            crate::strict_assert!(
+                (t, seq) > (lt, lq),
+                "merge emitted ({t}, {seq}, shard {s}) after \
+                 ({lt}, {lq}, shard {ls})"
+            );
+        }
+        self.last_key = Some((t, seq, s as u32));
+        self.now = t;
+        self.current = Some(s as u32);
+        self.dispatched += 1;
+        self.per_shard[s] += 1;
+        self.queued -= 1;
+        Some((t, ev))
+    }
+}
+
+impl<E: Send + 'static> ShardedDes<E> {
+    /// K shards with an opt-in threaded backend: `threads > 0` runs
+    /// one worker thread per shard (the count is advisory — shards are
+    /// the unit of parallelism); `threads == 0` is the sequential
+    /// inline backend. Both produce bit-identical dispatch streams.
+    pub fn with_threads(shards: usize, threads: usize) -> Self {
+        let k = shards.max(1);
+        if threads == 0 {
+            return Self::new(k);
+        }
+        let mut tx = Vec::with_capacity(k);
+        let mut rx = Vec::with_capacity(k);
+        let mut workers = Vec::with_capacity(k);
+        for _ in 0..k {
+            let (to_tx, to_rx) = channel::<ToWorker<E>>();
+            let (from_tx, from_rx) = channel::<FromWorker<E>>();
+            workers.push(Some(std::thread::spawn(move || {
+                shard_worker(to_rx, from_tx);
+            })));
+            tx.push(to_tx);
+            rx.push(from_rx);
+        }
+        Self::with_backend(
+            Backend::Threads(ThreadedShards {
+                tx,
+                rx,
+                heads: vec![None; k],
+                pending: vec![0; k],
+                workers,
+            }),
+            k,
+        )
+    }
+}
+
+/// Body of a shard worker thread: apply schedule/pop requests to the
+/// shard's own [`EventCore`] and report the resulting head key. Send
+/// failures mean the coordinator is gone — exit quietly.
+fn shard_worker<E>(
+    rx: Receiver<ToWorker<E>>,
+    tx: Sender<FromWorker<E>>,
+) {
+    let mut core: EventCore<E> = EventCore::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Schedule { t, seq, ev } => {
+                core.schedule_with_seq(t, seq, ev);
+                if tx.send(FromWorker::Head(core.peek())).is_err() {
+                    return;
+                }
+            }
+            ToWorker::Pop { horizon } => {
+                let popped = core.pop_until(horizon);
+                let head = core.peek();
+                if tx.send(FromWorker::Popped { popped, head }).is_err() {
+                    return;
+                }
+            }
+            ToWorker::Exit => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive the same schedule stream through a lone EventCore and a
+    /// K=1 ShardedDes: pops must be bit-identical.
+    #[test]
+    fn k1_matches_single_core() {
+        let mut solo: EventCore<u32> = EventCore::new();
+        let mut sharded: ShardedDes<u32> = ShardedDes::new(1);
+        for (t, v) in [(30, 1u32), (10, 2), (10, 3), (20, 4), (5, 5)] {
+            solo.schedule(t, v);
+            assert_eq!(sharded.schedule(t, 0, v), None);
+        }
+        loop {
+            let a = solo.pop_until(40);
+            let b = sharded.pop_until(40);
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(solo.dispatched(), sharded.dispatched());
+        assert_eq!(sharded.cross_shard_msgs(), 0);
+        assert_eq!(sharded.per_shard_dispatched(), &[5]);
+    }
+
+    /// The merge emits the global (time, seq) order regardless of
+    /// which shard holds each event.
+    #[test]
+    fn merge_is_globally_time_seq_ordered() {
+        let mut d: ShardedDes<usize> = ShardedDes::new(3);
+        let plan = [
+            (50, 2u32),
+            (10, 1),
+            (10, 2),
+            (30, 0),
+            (10, 0),
+            (20, 1),
+        ];
+        for (i, &(t, shard)) in plan.iter().enumerate() {
+            d.schedule(t, shard, i);
+        }
+        let mut popped = Vec::new();
+        while let Some((t, i)) = d.pop_until(Micros::MAX) {
+            popped.push((t, i));
+        }
+        // Time-major, schedule-order (seq) within ties — exactly the
+        // single-core contract.
+        assert_eq!(
+            popped,
+            vec![(10, 1), (10, 2), (10, 4), (20, 5), (30, 3), (50, 0)]
+        );
+        assert_eq!(d.pending(), 0);
+        assert_eq!(d.dispatched(), 6);
+    }
+
+    #[test]
+    fn envelopes_issued_exactly_on_cross_shard_schedules() {
+        let mut d: ShardedDes<&'static str> = ShardedDes::new(2);
+        // Setup (no dispatch context): local by definition.
+        assert_eq!(d.schedule(10, 0, "a"), None);
+        assert_eq!(d.schedule(20, 1, "b"), None);
+        let (_, ev) = d.pop_until(Micros::MAX).unwrap();
+        assert_eq!(ev, "a");
+        assert_eq!(d.current_shard(), Some(0));
+        // Dispatching on shard 0: same-shard schedule has no envelope…
+        assert_eq!(d.schedule(15, 0, "c"), None);
+        // …a cross-shard one does, stamped with the handoff metadata.
+        let msg = d.schedule(18, 1, "d").expect("cross-shard envelope");
+        assert_eq!((msg.from, msg.to, msg.at), (0, 1, 18));
+        assert_eq!(d.cross_shard_msgs(), 1);
+        // Past-time schedule clamped to the merged now (10), not 0.
+        assert!(d.schedule(3, 0, "e").is_none());
+        let order: Vec<_> =
+            std::iter::from_fn(|| d.pop_until(Micros::MAX)).collect();
+        assert_eq!(
+            order,
+            vec![(10, "e"), (15, "c"), (18, "d"), (20, "b")]
+        );
+        // Outside the pop loop again: no dispatch context.
+        assert_eq!(d.current_shard(), None);
+        assert_eq!(d.schedule(99, 1, "f"), None);
+    }
+
+    /// Same schedule stream through the inline and threaded backends:
+    /// identical pops, counters and envelopes.
+    #[test]
+    fn threaded_backend_matches_inline() {
+        let mut a: ShardedDes<u64> = ShardedDes::new(3);
+        let mut b: ShardedDes<u64> = ShardedDes::with_threads(3, 3);
+        let schedule = |d: &mut ShardedDes<u64>| {
+            for i in 0..60u64 {
+                let t = ((i * 37) % 50) as Micros;
+                let shard = (i % 3) as u32;
+                d.schedule(t, shard, i);
+            }
+        };
+        schedule(&mut a);
+        schedule(&mut b);
+        for horizon in [10, 25, Micros::MAX] {
+            loop {
+                let (x, y) = (a.pop_until(horizon), b.pop_until(horizon));
+                assert_eq!(x, y);
+                // Mid-drain schedules exercise the worker protocol's
+                // pending/drain path.
+                if let Some((t, v)) = x {
+                    if v % 7 == 0 {
+                        let ma = a.schedule(t + 3, (v % 3) as u32, v + 1000);
+                        let mb = b.schedule(t + 3, (v % 3) as u32, v + 1000);
+                        assert_eq!(ma, mb);
+                    }
+                } else {
+                    break;
+                }
+            }
+        }
+        assert_eq!(a.dispatched(), b.dispatched());
+        assert_eq!(a.pending(), b.pending());
+        assert_eq!(a.per_shard_dispatched(), b.per_shard_dispatched());
+        assert_eq!(a.cross_shard_msgs(), b.cross_shard_msgs());
+        assert_eq!(a.pending(), 0);
+    }
+
+    #[test]
+    fn entity_ownership_tracks_handoffs() {
+        let mut d: ShardedDes<u8> = ShardedDes::new(4);
+        d.set_entity_tracking(true);
+        d.note_arrival(7, 1);
+        assert_eq!(d.entity_owner(7), Some(1));
+        d.record_handoff(7, 1, 3);
+        assert_eq!(d.entity_owner(7), Some(3));
+        // The coordinator-shard recovery seize is sanctioned even when
+        // shard 0 never owned the entity.
+        d.record_handoff(7, 0, 2);
+        assert_eq!(d.entity_owner(7), Some(2));
+        // Untracked instances keep the map empty.
+        let mut off: ShardedDes<u8> = ShardedDes::new(4);
+        off.note_arrival(7, 1);
+        assert_eq!(off.entity_owner(7), None);
+    }
+
+    /// The exactly-one-owner invariant actually fires when armed: a
+    /// handoff claiming the wrong source shard panics.
+    #[cfg(feature = "strict-invariants")]
+    #[test]
+    #[should_panic(expected = "handed off")]
+    fn wrong_owner_handoff_panics_under_strict_invariants() {
+        let mut d: ShardedDes<u8> = ShardedDes::new(4);
+        d.set_entity_tracking(true);
+        d.note_arrival(7, 1);
+        d.record_handoff(7, 2, 3); // owner is shard 1, not 2
+    }
+}

@@ -49,7 +49,7 @@ pub struct Ledger {
 }
 
 /// Aggregate counts + latency stats for a run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
     pub generated: u64,
     pub on_time: u64,

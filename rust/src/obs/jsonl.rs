@@ -143,6 +143,8 @@ pub struct TraceCheck {
     pub lost_to_fault: u64,
     /// Recovery retries observed (`fault_retry` lines).
     pub fault_retries: u64,
+    /// Cross-shard handoff envelopes (`cross_shard` lines).
+    pub cross_shard: u64,
     /// Line count per `ev` kind.
     pub kinds: BTreeMap<String, u64>,
     /// `(query, event) -> (generated count, terminal count)` where a
@@ -361,6 +363,12 @@ pub fn validate_trace(text: &str) -> Result<TraceCheck, String> {
                 num(&j, "to_task").map_err(err)?;
                 num(&j, "events").map_err(err)?;
             }
+            "cross_shard" => {
+                num(&j, "from_shard").map_err(err)?;
+                num(&j, "to_shard").map_err(err)?;
+                num(&j, "seq").map_err(err)?;
+                c.cross_shard += 1;
+            }
             other => {
                 return Err(format!(
                     "line {lineno}: unknown event kind `{other}`"
@@ -494,6 +502,32 @@ mod tests {
         );
         let check = validate_trace(&s.contents().unwrap()).unwrap();
         assert_eq!(check.violations(), vec![((1, 0), (1, 2))]);
+    }
+
+    #[test]
+    fn cross_shard_is_counted_not_terminal() {
+        let s = JsonlSink::in_memory();
+        s.emit(
+            0,
+            &TraceEvent::Generated { event: 3, query: 0, camera: 1 },
+        );
+        s.emit(
+            2,
+            &TraceEvent::CrossShard { from_shard: 0, to_shard: 2, seq: 41 },
+        );
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.cross_shard, 1);
+        assert_eq!(check.kinds["cross_shard"], 1);
+        // A handoff is transport, not a terminal: the event stays in
+        // flight and conservation is untouched.
+        assert_eq!(check.unterminated(), 1);
+        assert!(check.violations().is_empty());
+        // Malformed handoff lines are rejected.
+        let missing = format!(
+            "{{\"schema\":\"{TRACE_SCHEMA}\"}}\n{{\"t_us\":1,\"ev\":\"cross_shard\",\"from_shard\":0}}\n"
+        );
+        let e = validate_trace(&missing).unwrap_err();
+        assert!(e.contains("to_shard"), "{e}");
     }
 
     #[test]

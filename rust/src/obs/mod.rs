@@ -48,7 +48,10 @@ use crate::util::{Json, Micros};
 /// v2: fault-injection kinds (`node_fault`, `camera_fault`,
 /// `lost_to_fault`, `fault_retry`, `redispatch`) — `lost_to_fault` is a
 /// new *terminal*, so a v1 validator would miscount conservation.
-pub const TRACE_SCHEMA: &str = "anveshak-trace-v2";
+/// v3: the `cross_shard` kind — sharded-DES boundary handoffs (not a
+/// terminal; conservation arithmetic is unchanged, but a v2 validator
+/// would reject the unknown kind).
+pub const TRACE_SCHEMA: &str = "anveshak-trace-v3";
 
 /// Which of the three §4.3 drop points produced a verdict (plus the
 /// teardown pseudo-gate for events drained without a budget decision).
@@ -259,6 +262,11 @@ pub enum TraceEvent {
         to_task: u32,
         events: u32,
     },
+    /// A sharded-DES handoff: an event scheduled across a shard
+    /// boundary rode a [`crate::engine::CrossShardMsg`] envelope.
+    /// `seq` is the global merge sequence number of the handed-off
+    /// event.
+    CrossShard { from_shard: u32, to_shard: u32, seq: u64 },
 }
 
 impl TraceEvent {
@@ -283,6 +291,7 @@ impl TraceEvent {
             TraceEvent::LostToFault { .. } => "lost_to_fault",
             TraceEvent::FaultRetry { .. } => "fault_retry",
             TraceEvent::Redispatch { .. } => "redispatch",
+            TraceEvent::CrossShard { .. } => "cross_shard",
         }
     }
 
@@ -423,6 +432,11 @@ impl TraceEvent {
                 put("from_task", (*from_task as i64).into());
                 put("to_task", (*to_task as i64).into());
                 put("events", (*events as i64).into());
+            }
+            TraceEvent::CrossShard { from_shard, to_shard, seq } => {
+                put("from_shard", (*from_shard as i64).into());
+                put("to_shard", (*to_shard as i64).into());
+                put("seq", (*seq as i64).into());
             }
         }
         Json::Obj(m)

@@ -90,9 +90,14 @@ struct Inner {
     redispatched: AtomicU64,
     node_restarts: AtomicU64,
     worker_restarts: AtomicU64,
+    /// Cross-shard handoff envelopes issued by the sharded DES (0 at
+    /// K=1).
+    cross_shard_msgs: AtomicU64,
     active_cameras: AtomicI64,
     active_queries: AtomicI64,
     nodes_down: AtomicI64,
+    /// Shard count of the engine publishing to this registry.
+    shards: AtomicI64,
     /// ξ(1) in µs per (app, stage) — the per-app pricing gauges; 0
     /// means "never priced".
     xi_app_us: [[AtomicI64; EXEC_STAGES]; APPS],
@@ -229,10 +234,20 @@ impl MetricsRegistry {
         self.inner.worker_restarts.fetch_add(1, Relaxed);
     }
 
+    /// An event crossed a shard boundary riding a `CrossShardMsg`.
+    pub fn cross_shard_msg(&self) {
+        self.inner.cross_shard_msgs.fetch_add(1, Relaxed);
+    }
+
     // ---- gauges ----------------------------------------------------------
 
     pub fn set_nodes_down(&self, n: usize) {
         self.inner.nodes_down.store(n as i64, Relaxed);
+    }
+
+    /// Publish the engine's shard count K (1 = unsharded).
+    pub fn set_shards(&self, k: usize) {
+        self.inner.shards.store(k as i64, Relaxed);
     }
 
     pub fn set_active_cameras(&self, n: usize) {
@@ -369,9 +384,11 @@ impl MetricsRegistry {
             redispatched: i.redispatched.load(Relaxed),
             node_restarts: i.node_restarts.load(Relaxed),
             worker_restarts: i.worker_restarts.load(Relaxed),
+            cross_shard_msgs: i.cross_shard_msgs.load(Relaxed),
             active_cameras: i.active_cameras.load(Relaxed),
             active_queries: i.active_queries.load(Relaxed),
             nodes_down: i.nodes_down.load(Relaxed),
+            shards: i.shards.load(Relaxed),
             xi_app_us: std::array::from_fn(|a| {
                 std::array::from_fn(|s| i.xi_app_us[a][s].load(Relaxed))
             }),
@@ -441,9 +458,13 @@ pub struct MetricsSnapshot {
     pub node_restarts: u64,
     /// Live-front worker threads restarted after a panic.
     pub worker_restarts: u64,
+    /// Cross-shard handoff envelopes (sharded DES; 0 at K=1).
+    pub cross_shard_msgs: u64,
     pub active_cameras: i64,
     pub active_queries: i64,
     pub nodes_down: i64,
+    /// Shard count K published by the engine (0 if never set).
+    pub shards: i64,
     pub xi_app_us: [[i64; 2]; 4],
     pub per_query: Vec<(QueryId, QueryCounters)>,
     /// Cumulative per-simulated-second rows (empty when
@@ -505,9 +526,14 @@ impl MetricsSnapshot {
             ("redispatched", (self.redispatched as i64).into()),
             ("node_restarts", (self.node_restarts as i64).into()),
             ("worker_restarts", (self.worker_restarts as i64).into()),
+            (
+                "cross_shard_msgs",
+                (self.cross_shard_msgs as i64).into(),
+            ),
             ("active_cameras", self.active_cameras.into()),
             ("active_queries", self.active_queries.into()),
             ("nodes_down", self.nodes_down.into()),
+            ("shards", self.shards.into()),
             (
                 "xi_app_us",
                 Json::Arr(
@@ -638,7 +664,11 @@ mod tests {
         m.redispatched(5);
         m.node_restart();
         m.worker_restart();
+        m.cross_shard_msg();
+        m.cross_shard_msg();
+        m.cross_shard_msg();
         m.set_nodes_down(2);
+        m.set_shards(4);
         m.query_lost_to_fault(4);
         let s = m.snapshot();
         assert_eq!(s.faults_injected, 1);
@@ -647,11 +677,15 @@ mod tests {
         assert_eq!(s.redispatched, 5);
         assert_eq!(s.node_restarts, 1);
         assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.cross_shard_msgs, 3);
         assert_eq!(s.nodes_down, 2);
+        assert_eq!(s.shards, 4);
         let q4 = s.per_query.iter().find(|(q, _)| *q == 4).unwrap().1;
         assert_eq!(q4.lost_to_fault, 1);
         let j = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(j.at("lost_to_fault").as_usize(), Some(2));
+        assert_eq!(j.at("cross_shard_msgs").as_usize(), Some(3));
+        assert_eq!(j.at("shards").as_usize(), Some(4));
     }
 
     #[test]

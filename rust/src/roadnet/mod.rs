@@ -1,16 +1,19 @@
 //! Road-network substrate: CSR graph types, the synthetic
-//! OSM-substitute generator, camera placement, and the spotlight search
+//! OSM-substitute generator, camera placement, the geographic shard
+//! partitioner used by the sharded DES, and the spotlight search
 //! algorithms used by the Tracking Logic module (with reusable
 //! workspaces for the per-tick expansion hot path).
 
 mod cameras;
 mod gen;
 mod graph;
+mod partition;
 mod spotlight;
 
 pub use cameras::{place_cameras, Camera, CameraId};
 pub use gen::generate;
 pub use graph::{Graph, GraphBuilder, VertexId};
+pub use partition::{partition, Partition};
 pub use spotlight::{
     bfs_spotlight, bfs_spotlight_into, dijkstra_distances,
     probabilistic_spotlight, probabilistic_spotlight_into,

@@ -1,0 +1,227 @@
+//! Geographic partition of the CSR roadnet into K shards.
+//!
+//! The sharded DES (`engine/sharded.rs`) assigns every camera — and
+//! therefore every per-camera event stream — to the shard of its host
+//! vertex. The partition is *geographic*: vertices are ordered by
+//! planar position (x, then y, then id — a total order, so the split
+//! is deterministic per graph) and cut into K contiguous, balanced
+//! slices. Spotlight edges whose endpoints land in different shards
+//! are the *boundary edges*: entity handoffs ride exactly these edges
+//! as `CrossShardMsg` envelopes, and two shards sharing at least one
+//! boundary edge are *adjacent* — the migration targets for orphaned
+//! work when a shard's node dies (see the engines' `pick_survivor`).
+//!
+//! Like everything on the DES path, the partition is plain data
+//! computed once at engine construction: no hashing, no wall clock,
+//! no randomness beyond the graph itself.
+
+use super::graph::{Graph, VertexId};
+
+/// A K-way geographic split of a road graph: vertex → shard map,
+/// boundary-edge set, and the shard-adjacency relation induced by it.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    shards: usize,
+    shard_of_vertex: Vec<u32>,
+    /// Edges `(a, b)` with `a < b` whose endpoints lie in different
+    /// shards, in [`Graph::iter_edges`] order.
+    boundary: Vec<(VertexId, VertexId)>,
+    /// `adjacency[s]` — ascending shard ids sharing at least one
+    /// boundary edge with `s` (never contains `s` itself).
+    adjacency: Vec<Vec<u32>>,
+}
+
+/// Split `g` into `shards` balanced geographic slices. The shard count
+/// is clamped to `[1, |V|]` (a graph cannot host more non-empty shards
+/// than vertices; `shards = |V|` is the degenerate one-camera-per-shard
+/// split the property suite exercises).
+pub fn partition(g: &Graph, shards: usize) -> Partition {
+    let n = g.num_vertices();
+    let k = shards.clamp(1, n.max(1));
+
+    // Geographic order: x, then y, then id. `total_cmp` gives a total
+    // order over the generator's finite coordinates, so the split is a
+    // pure function of the graph.
+    let mut order: Vec<VertexId> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        g.pos[a]
+            .0
+            .total_cmp(&g.pos[b].0)
+            .then(g.pos[a].1.total_cmp(&g.pos[b].1))
+            .then(a.cmp(&b))
+    });
+
+    // Balanced contiguous slices: the first `n % k` shards take one
+    // extra vertex, so sizes differ by at most one.
+    let mut shard_of_vertex = vec![0u32; n];
+    let (base, extra) = (n / k, n % k);
+    let mut idx = 0;
+    for s in 0..k {
+        let len = base + usize::from(s < extra);
+        for _ in 0..len {
+            shard_of_vertex[order[idx]] = s as u32;
+            idx += 1;
+        }
+    }
+
+    // Boundary edges + the adjacency relation they induce. A dense
+    // k x k matrix keeps the scan allocation-light and — unlike a hash
+    // set — iteration-order deterministic (the map-order rule).
+    let mut boundary = Vec::new();
+    let mut touch = vec![false; k * k];
+    for (a, b, _) in g.iter_edges() {
+        let (sa, sb) = (
+            shard_of_vertex[a] as usize,
+            shard_of_vertex[b] as usize,
+        );
+        if sa != sb {
+            boundary.push((a, b));
+            touch[sa * k + sb] = true;
+            touch[sb * k + sa] = true;
+        }
+    }
+    let adjacency = (0..k)
+        .map(|s| {
+            (0..k)
+                .filter(|&t| touch[s * k + t])
+                .map(|t| t as u32)
+                .collect()
+        })
+        .collect();
+
+    Partition {
+        shards: k,
+        shard_of_vertex,
+        boundary,
+        adjacency,
+    }
+}
+
+impl Partition {
+    /// Number of shards after clamping (always ≥ 1).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The shard hosting vertex `v`.
+    #[inline]
+    pub fn shard_of_vertex(&self, v: VertexId) -> u32 {
+        self.shard_of_vertex[v]
+    }
+
+    /// Spotlight edges crossing a shard boundary, each once (`a < b`).
+    pub fn boundary_edges(&self) -> &[(VertexId, VertexId)] {
+        &self.boundary
+    }
+
+    /// Shards sharing at least one boundary edge with `s`, ascending.
+    pub fn neighbors(&self, s: u32) -> &[u32] {
+        &self.adjacency[s as usize]
+    }
+
+    /// Do shards `a` and `b` share a boundary edge?
+    pub fn adjacent(&self, a: u32, b: u32) -> bool {
+        a != b && self.adjacency[a as usize].binary_search(&b).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::roadnet::generate;
+
+    fn small() -> Graph {
+        generate(
+            &WorkloadConfig {
+                vertices: 60,
+                edges: 160,
+                ..Default::default()
+            },
+            7,
+        )
+    }
+
+    #[test]
+    fn deterministic_and_balanced() {
+        let g = small();
+        for k in [1usize, 2, 3, 4, 8] {
+            let p = partition(&g, k);
+            let q = partition(&g, k);
+            assert_eq!(p.shard_of_vertex, q.shard_of_vertex, "k={k}");
+            let mut sizes = vec![0usize; k];
+            for v in 0..g.num_vertices() {
+                sizes[p.shard_of_vertex(v) as usize] += 1;
+            }
+            let (min, max) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "k={k}: sizes {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn single_shard_has_no_boundary() {
+        let g = small();
+        let p = partition(&g, 1);
+        assert_eq!(p.shards(), 1);
+        assert!(p.boundary_edges().is_empty());
+        assert!(p.neighbors(0).is_empty());
+        assert!(!p.adjacent(0, 0));
+    }
+
+    #[test]
+    fn boundary_edges_really_cross() {
+        let g = small();
+        let p = partition(&g, 4);
+        assert!(!p.boundary_edges().is_empty());
+        for &(a, b) in p.boundary_edges() {
+            assert!(a < b);
+            assert_ne!(p.shard_of_vertex(a), p.shard_of_vertex(b));
+        }
+        // Every boundary edge makes its endpoint shards adjacent,
+        // symmetrically.
+        for &(a, b) in p.boundary_edges() {
+            let (sa, sb) = (p.shard_of_vertex(a), p.shard_of_vertex(b));
+            assert!(p.adjacent(sa, sb));
+            assert!(p.adjacent(sb, sa));
+        }
+    }
+
+    #[test]
+    fn degenerate_one_vertex_shards() {
+        let g = small();
+        let n = g.num_vertices();
+        // Requesting more shards than vertices clamps to |V|.
+        let p = partition(&g, n + 100);
+        assert_eq!(p.shards(), n);
+        // Every vertex is its own shard; every edge is a boundary.
+        let mut seen = vec![false; n];
+        for v in 0..n {
+            let s = p.shard_of_vertex(v) as usize;
+            assert!(!seen[s], "shard {s} hosts two vertices");
+            seen[s] = true;
+        }
+        assert_eq!(p.boundary_edges().len(), g.num_edges());
+    }
+
+    #[test]
+    fn geographic_slices_are_contiguous_in_x() {
+        let g = small();
+        let p = partition(&g, 3);
+        // Sort vertices by the partition's own order; shard ids along
+        // that order must be non-decreasing (contiguous slices).
+        let mut order: Vec<usize> = (0..g.num_vertices()).collect();
+        order.sort_by(|&a, &b| {
+            g.pos[a]
+                .0
+                .total_cmp(&g.pos[b].0)
+                .then(g.pos[a].1.total_cmp(&g.pos[b].1))
+                .then(a.cmp(&b))
+        });
+        let shards: Vec<u32> =
+            order.iter().map(|&v| p.shard_of_vertex(v)).collect();
+        assert!(shards.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -32,13 +32,15 @@ use crate::dataflow::{
     FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
     TrackingLogic, TruthSource, VideoAnalytics,
 };
-use crate::engine::EventCore;
+use crate::engine::ShardedDes;
 use crate::metrics::{QueryLedgers, Summary};
 use crate::obs::{
     span_begin, span_end, Gate, MetricsRegistry, MetricsSnapshot,
     NullSink, ObsSink, QueryPhase, Scope, TraceEvent,
 };
-use crate::roadnet::{generate, place_cameras, Camera, Graph};
+use crate::roadnet::{
+    generate, partition, place_cameras, Camera, Graph, Partition,
+};
 use crate::service::admission::{
     Admission, AdmissionController, AdmissionPolicy,
 };
@@ -227,8 +229,8 @@ pub struct MultiQueryResult {
     /// across all queries (0 unless the composition enables fusion).
     pub fusion_updates: u64,
     /// Total simulation events dispatched by the shared
-    /// [`EventCore`] — the numerator of the events/sec throughput
-    /// metric reported by `benches/hotpath.rs`.
+    /// [`ShardedDes`] merge loop — the numerator of the events/sec
+    /// throughput metric reported by `benches/hotpath.rs`.
     pub core_events: u64,
     /// End-of-run snapshot of the engine's metrics registry (always
     /// recorded — counters are sink-independent).
@@ -300,7 +302,15 @@ pub struct MultiQueryDes<S: ObsSink = NullSink> {
     node_was_up: Vec<bool>,
     /// Last-observed camera aliveness.
     cam_was_up: Vec<bool>,
-    core: EventCore<Ev>,
+    /// Geographic shard layout of the roadnet (K=1 unless
+    /// `cfg.sharding.shards` says otherwise).
+    part: Partition,
+    /// Camera index -> owning shard (by the camera's roadnet vertex).
+    shard_of_cam: Vec<u32>,
+    /// Task index -> owning shard (FC follows its camera; VA/CR are
+    /// striped round-robin; TL lives on shard 0).
+    shard_of_task: Vec<u32>,
+    core: ShardedDes<Ev>,
     next_event_id: u64,
     next_batch_seq: u64,
     frame_counters: Vec<u64>,
@@ -499,6 +509,36 @@ impl<S: ObsSink> MultiQueryDes<S> {
         );
         let nodes = topo.nodes;
         let task_redirect: Vec<usize> = (0..topo.tasks.len()).collect();
+
+        // Geographic sharding: cameras follow their roadnet vertex,
+        // FC tasks follow their camera, shared executors (VA/CR) are
+        // striped across shards, and the query/TL/fault machinery is
+        // pinned to shard 0. Routing only picks which heap holds an
+        // event — the merge serialises dispatch, so any K is
+        // bit-identical to K=1.
+        let part = partition(&graph, cfg.sharding.shards);
+        let shard_of_cam: Vec<u32> = (0..num_cameras)
+            .map(|c| {
+                cams.get(c)
+                    .map_or(0, |cam| part.shard_of_vertex(cam.vertex))
+            })
+            .collect();
+        let shard_of_task: Vec<u32> = topo
+            .tasks
+            .iter()
+            .map(|info| match info.stage {
+                Stage::Fc => shard_of_cam[info.instance],
+                Stage::Va | Stage::Cr => {
+                    (info.instance % part.shards()) as u32
+                }
+                _ => 0,
+            })
+            .collect();
+        let mut core =
+            ShardedDes::with_threads(part.shards(), cfg.sharding.threads);
+        if cfg!(feature = "strict-invariants") && part.shards() > 1 {
+            core.set_entity_tracking(true);
+        }
         // Publish the initial per-(app, stage) ξ(1) prices; refreshed
         // whenever online calibration moves the estimator.
         let metrics = MetricsRegistry::new();
@@ -539,7 +579,10 @@ impl<S: ObsSink> MultiQueryDes<S> {
             task_redirect,
             node_was_up: vec![true; nodes],
             cam_was_up: vec![true; num_cameras],
-            core: EventCore::new(),
+            part,
+            shard_of_cam,
+            shard_of_task,
+            core,
             next_event_id: 0,
             next_batch_seq: 0,
             frame_counters: vec![0; num_cameras],
@@ -564,8 +607,66 @@ impl<S: ObsSink> MultiQueryDes<S> {
 
     // ---- event plumbing --------------------------------------------------
 
+    /// Owning shard for an event: camera-addressed events follow the
+    /// camera's vertex, task-addressed events follow the task, and the
+    /// global machinery (query lifecycle, TL, faults) lives on shard 0.
+    fn shard_of(&self, ev: &Ev) -> u32 {
+        match ev {
+            Ev::FrameTick { cam } => self.shard_of_cam[*cam],
+            Ev::Arrive { task, .. }
+            | Ev::BatchTimer { task, .. }
+            | Ev::ExecDone { task, .. }
+            | Ev::SignalAt { task, .. } => self.shard_of_task[*task],
+            Ev::QueryArrive { .. }
+            | Ev::QueryEnd { .. }
+            | Ev::TlTick
+            | Ev::FaultTick
+            | Ev::TlDetection { .. } => 0,
+        }
+    }
+
     fn push(&mut self, t: Micros, ev: Ev) {
-        self.core.schedule(t, ev);
+        let shard = self.shard_of(&ev);
+        // Entity ownership is tracked per source event id; probes reuse
+        // a live event's id and QF refinements are broadcast to many
+        // tasks, so neither participates in the exactly-one-owner
+        // bookkeeping.
+        let entity = if self.core.shards() > 1 {
+            match &ev {
+                Ev::Arrive { ev, .. }
+                    if !ev.header.probe
+                        && !matches!(
+                            ev.payload,
+                            Payload::QueryUpdate(_)
+                        ) =>
+                {
+                    Some(ev.header.id)
+                }
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let msg = self.core.schedule(t, shard, ev);
+        if let Some(id) = entity {
+            match msg {
+                Some(m) => self.core.record_handoff(id, m.from, m.to),
+                None => self.core.note_arrival(id, shard),
+            }
+        }
+        if let Some(m) = msg {
+            self.metrics.cross_shard_msg();
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::CrossShard {
+                        from_shard: m.from,
+                        to_shard: m.to,
+                        seq: m.seq,
+                    },
+                );
+            }
+        }
     }
 
     /// Override which application each scheduled query runs, cycling
@@ -586,6 +687,7 @@ impl<S: ObsSink> MultiQueryDes<S> {
     /// Run to completion: all arrivals, all lifetimes, plus a drain of
     /// two γ for in-flight events.
     pub fn run(mut self) -> MultiQueryResult {
+        self.metrics.set_shards(self.core.shards());
         for cam in 0..self.cfg.num_cameras {
             let phase = self
                 .rng
@@ -2096,15 +2198,35 @@ impl<S: ObsSink> MultiQueryDes<S> {
         }
     }
 
-    /// First alive executor of `stage` other than `task`, if any.
+    /// Alive executor of `stage` other than `task`, preferring shard
+    /// locality: the dead task's own shard first, then shards adjacent
+    /// in the partition graph (orphans migrate over spotlight edges),
+    /// then anywhere. At K=1 every candidate is ring 0, so this
+    /// degenerates to the first alive executor — bit-identical to the
+    /// unsharded policy. The survivor prices re-dispatched work with
+    /// its own per-(stage, app) ξ multipliers, so cross-shard recovery
+    /// costs the destination's calibration, not the dead shard's.
     fn pick_survivor(&self, task: usize, stage: Stage) -> Option<usize> {
-        (0..self.tasks.len()).find(|&t| {
-            t != task
-                && self.tasks[t].stage == stage
-                && self
-                    .faults
-                    .node_alive(self.tasks[t].node, self.now)
-        })
+        let home = self.shard_of_task[task];
+        (0..self.tasks.len())
+            .filter(|&t| {
+                t != task
+                    && self.tasks[t].stage == stage
+                    && self
+                        .faults
+                        .node_alive(self.tasks[t].node, self.now)
+            })
+            .min_by_key(|&t| {
+                let s = self.shard_of_task[t];
+                let ring = if s == home {
+                    0u8
+                } else if self.part.adjacent(home, s) {
+                    1
+                } else {
+                    2
+                };
+                (ring, t)
+            })
     }
 
     // ---- sink (UV) -------------------------------------------------------
@@ -2600,6 +2722,50 @@ mod tests {
         assert_eq!(base.rng_draws, traced.rng_draws);
         assert_eq!(base.core_events, traced.core_events);
         assert!(ring.total() > 0, "recorder saw the run");
+    }
+
+    #[test]
+    fn mq_sharding_is_result_neutral() {
+        // K-invariance for the multi-query path: the same seed under
+        // K=1, K=3 sequential and K=3 threaded must agree on every
+        // user-visible output — aggregate ledger, per-query summaries,
+        // fusion updates, dispatch count and RNG draws — because the
+        // merge serialises dispatch regardless of shard layout.
+        let mk = |shards: usize, threads: usize| {
+            let mut cfg = base_cfg();
+            cfg.drops_enabled = true;
+            cfg.sharding.shards = shards;
+            cfg.sharding.threads = threads;
+            run(cfg, mq_cfg(3))
+        };
+        let k1 = mk(1, 0);
+        let k3 = mk(3, 0);
+        let k3t = mk(3, 3);
+        for r in [&k3, &k3t] {
+            assert_eq!(k1.aggregate, r.aggregate);
+            assert_eq!(k1.fusion_updates, r.fusion_updates);
+            assert_eq!(k1.core_events, r.core_events);
+            assert_eq!(k1.rng_draws, r.rng_draws);
+            assert_eq!(k1.peak_concurrent, r.peak_concurrent);
+            assert_eq!(k1.queries.len(), r.queries.len());
+            for (a, b) in k1.queries.iter().zip(r.queries.iter()) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.status, b.status);
+                assert_eq!(a.detections, b.detections);
+                assert_eq!(a.summary, b.summary, "query {}", a.id);
+            }
+        }
+        assert_eq!(k1.metrics.cross_shard_msgs, 0);
+        assert_eq!(k1.metrics.shards, 1);
+        assert_eq!(k3.metrics.shards, 3);
+        assert!(
+            k3.metrics.cross_shard_msgs > 0,
+            "K=3 must hand events across shard boundaries"
+        );
+        assert_eq!(
+            k3.metrics.cross_shard_msgs,
+            k3t.metrics.cross_shard_msgs
+        );
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Summary stats over an unsorted sample.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Stats {
     pub count: usize,
     pub min: f64,

@@ -1,0 +1,366 @@
+//! Property suite for the sharded DES merge (`engine::sharded`).
+//!
+//! The contract under test, end to end:
+//!
+//! * **K=1 bit-identity** — a [`ShardedDes`] with one shard produces
+//!   exactly the single-[`EventCore`] pop stream, and a full
+//!   `coordinator::des::run` at `shards = 1` is the unsharded engine.
+//! * **K-invariance** — for *any* generated shard plan (K ∈ [1, 8],
+//!   inline or threaded backend, degenerate single-vertex shards),
+//!   every user-visible output of both engines — `Summary`, per-query
+//!   `QueryLedgers` rows, `fusion_updates`, detections, dispatch count
+//!   and RNG draws — is identical to the K=1 run of the same seed.
+//!   Routing only decides which heap holds an event; the merge
+//!   serialises dispatch in global `(time, seq)` order.
+//! * **Merge determinism** — the merged stream does not depend on
+//!   shard assignment, backend, or the order in which shards complete
+//!   their pops (threaded workers answer in nondeterministic wall
+//!   order; virtual order must not notice).
+//! * **Shard-crash conservation** — under generated fault schedules
+//!   (dead shard = node crash) with cross-shard orphan migration, the
+//!   event ledger still conserves:
+//!   `generated = on_time + delayed + dropped + lost_to_fault +
+//!   in_flight`.
+//!
+//! Failures shrink toward the canonical unsharded plan
+//! (`{shards: 1, threads: 0}`) and persist `seed case` pairs in
+//! `rust/tests/regressions/shard.seeds`.
+
+use anveshak::check::domain::{
+    arrival_order, fault_schedule, shard_plan, ShardPlan,
+};
+use anveshak::check::runner::regression_seeds;
+use anveshak::check::{check, generate_case, CheckConfig};
+use anveshak::config::{BatchingKind, ExperimentConfig, TlKind};
+use anveshak::coordinator::des;
+use anveshak::engine::{EventCore, ShardedDes};
+use anveshak::service::engine as mq_engine;
+use anveshak::util::Micros;
+
+// ---------------------------------------------------------------------------
+// Raw merge properties (no simulation on top).
+// ---------------------------------------------------------------------------
+
+/// Drain a sharded core to exhaustion.
+fn drain(d: &mut ShardedDes<u32>) -> Vec<(Micros, u32)> {
+    let mut out = Vec::new();
+    while let Some(p) = d.pop_until(Micros::MAX) {
+        out.push(p);
+    }
+    out
+}
+
+#[test]
+fn prop_merge_matches_single_core_for_any_shard_assignment() {
+    // For an arbitrary arrival order, the merged stream of every
+    // (K, backend, shard-assignment) combination equals the single
+    // EventCore's stream — including events scheduled mid-drain, which
+    // is where cross-shard envelopes appear. This is the K=1
+    // bit-identity *and* merge-determinism-under-reordered-completion
+    // property at the engine level: threaded workers complete pops in
+    // arbitrary wall order, shard assignment is permuted per case, and
+    // the virtual-time order must never notice.
+    let n = 24usize;
+    check(
+        "shard_merge",
+        &CheckConfig::with_cases(48),
+        &arrival_order(n),
+        |order| {
+            let run_reference = || {
+                let mut single = EventCore::new();
+                for (i, &x) in order.iter().enumerate() {
+                    single.schedule(x as Micros * 10, i as u32);
+                }
+                let mut out = Vec::new();
+                // Mid-drain schedules: pop half, inject a second wave
+                // (times interleave with the first), drain the rest.
+                for _ in 0..n / 2 {
+                    out.extend(single.pop_until(Micros::MAX));
+                }
+                for (i, &x) in order.iter().enumerate() {
+                    single
+                        .schedule(x as Micros * 10 + 5, (n + i) as u32);
+                }
+                while let Some(p) = single.pop_until(Micros::MAX) {
+                    out.push(p);
+                }
+                out
+            };
+            let want = run_reference();
+
+            for k in [1usize, 2, 4, 8] {
+                for threads in [0, k] {
+                    // Two distinct shard assignments per combination:
+                    // round-robin by schedule index, and one salted by
+                    // the permutation itself.
+                    for salt in [0usize, 1] {
+                        let assign = |i: usize| {
+                            ((i + salt * order[i % n]) % k) as u32
+                        };
+                        let mut d =
+                            ShardedDes::with_threads(k, threads);
+                        for (i, &x) in order.iter().enumerate() {
+                            d.schedule(
+                                x as Micros * 10,
+                                assign(i),
+                                i as u32,
+                            );
+                        }
+                        let mut got = Vec::new();
+                        for _ in 0..n / 2 {
+                            got.extend(d.pop_until(Micros::MAX));
+                        }
+                        for (i, &x) in order.iter().enumerate() {
+                            d.schedule(
+                                x as Micros * 10 + 5,
+                                assign(n + i),
+                                (n + i) as u32,
+                            );
+                        }
+                        got.extend(drain(&mut d));
+                        if got != want {
+                            return Err(format!(
+                                "merge diverged at k={k} \
+                                 threads={threads} salt={salt}: \
+                                 {got:?} != {want:?}"
+                            ));
+                        }
+                        // The merged stream is non-decreasing in time
+                        // (the strict-invariants build also asserts
+                        // full (time, seq, shard) order inside).
+                        if got.windows(2).any(|w| w[1].0 < w[0].0) {
+                            return Err(format!(
+                                "merge emitted out of time order: \
+                                 {got:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Full-engine K-invariance.
+// ---------------------------------------------------------------------------
+
+/// Small-but-busy single-query config under a shard plan. The
+/// workload's vertex count tracks the plan's camera count, so
+/// degenerate plans (K above the vertex count) exercise the clamped,
+/// all-boundary partition.
+fn plan_cfg(plan: &ShardPlan) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = format!("prop_shard_k{}", plan.shards);
+    c.seed = 1302;
+    c.num_cameras = plan.cameras;
+    c.workload.vertices = plan.cameras;
+    c.workload.edges = plan.cameras * 3;
+    c.duration_secs = 20.0;
+    c.tl = TlKind::Base;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c.drops_enabled = true;
+    c.sharding.shards = plan.shards;
+    c.sharding.threads = plan.threads;
+    c
+}
+
+#[test]
+fn prop_runs_are_k_invariant() {
+    // The headline contract: per-seed bit-identity of the single-query
+    // engine across shard plans. `shard.seeds` persists regression
+    // pairs for this property.
+    check(
+        "shard",
+        &CheckConfig::with_cases(3),
+        &shard_plan(),
+        |plan| {
+            let sharded = des::run(plan_cfg(plan));
+            let baseline = des::run(plan_cfg(&ShardPlan {
+                shards: 1,
+                threads: 0,
+                cameras: plan.cameras,
+            }));
+            if sharded.summary != baseline.summary {
+                return Err(format!(
+                    "summary diverged under {plan:?}: {:?} != {:?}",
+                    sharded.summary, baseline.summary
+                ));
+            }
+            if sharded.detections != baseline.detections
+                || sharded.fusion_updates != baseline.fusion_updates
+                || sharded.core_events != baseline.core_events
+                || sharded.rng_draws != baseline.rng_draws
+            {
+                return Err(format!(
+                    "per-seed outputs diverged under {plan:?}"
+                ));
+            }
+            if !sharded.summary.conserved() {
+                return Err(format!(
+                    "conservation violated: {:?}",
+                    sharded.summary
+                ));
+            }
+            if baseline.metrics.cross_shard_msgs != 0 {
+                return Err("K=1 run recorded cross-shard traffic"
+                    .to_string());
+            }
+            if sharded.metrics.shards == 1
+                && sharded.metrics.cross_shard_msgs != 0
+            {
+                return Err(
+                    "single-shard layout recorded cross-shard traffic"
+                        .to_string(),
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multi_query_ledgers_are_k_invariant() {
+    // Same contract on the service-layer engine, down to the per-query
+    // ledger rows: aggregate Summary, each query's Summary, fusion
+    // updates and RNG draws are identical for any shard plan.
+    let mq = || anveshak::config::MultiQueryConfig {
+        num_queries: 3,
+        mean_interarrival_secs: 4.0,
+        lifetime_secs: 30.0,
+        max_active: 8,
+        max_active_cameras: 10_000,
+        queue_capacity: 4,
+        priority_levels: 2,
+    };
+    check(
+        "shard_mq",
+        &CheckConfig::with_cases(2),
+        &shard_plan(),
+        |plan| {
+            let sharded = mq_engine::run(plan_cfg(plan), mq());
+            let baseline = mq_engine::run(
+                plan_cfg(&ShardPlan {
+                    shards: 1,
+                    threads: 0,
+                    cameras: plan.cameras,
+                }),
+                mq(),
+            );
+            if sharded.aggregate != baseline.aggregate {
+                return Err(format!(
+                    "aggregate diverged under {plan:?}: {:?} != {:?}",
+                    sharded.aggregate, baseline.aggregate
+                ));
+            }
+            if sharded.fusion_updates != baseline.fusion_updates
+                || sharded.core_events != baseline.core_events
+                || sharded.rng_draws != baseline.rng_draws
+                || sharded.peak_concurrent != baseline.peak_concurrent
+            {
+                return Err(format!(
+                    "mq outputs diverged under {plan:?}"
+                ));
+            }
+            if sharded.queries.len() != baseline.queries.len() {
+                return Err("query report counts diverged".into());
+            }
+            for (a, b) in
+                sharded.queries.iter().zip(baseline.queries.iter())
+            {
+                if a.summary != b.summary
+                    || a.status != b.status
+                    || a.detections != b.detections
+                {
+                    return Err(format!(
+                        "query {} ledger diverged under {plan:?}",
+                        a.id
+                    ));
+                }
+            }
+            if !sharded.aggregate.conserved() {
+                return Err(format!(
+                    "conservation violated: {:?}",
+                    sharded.aggregate
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Shard-crash conservation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shard_crash_conserves_every_event() {
+    // A dead shard is a node crash: its orphans migrate to adjacent
+    // shards (or are written off as lost_to_fault when recovery is
+    // off / no survivor exists). Whatever the generated fault schedule
+    // and shard plan, the ledger conserves —
+    // generated = on_time + delayed + dropped + lost_to_fault +
+    // in_flight — and the metrics registry agrees with it. Camera
+    // indices are drawn below the smallest plan size so every schedule
+    // is valid for every plan.
+    let strat = (shard_plan(), fault_schedule(3, 3, 10));
+    check(
+        "shard_crash",
+        &CheckConfig::with_cases(2),
+        &strat,
+        |(plan, faults)| {
+            for recovery in [true, false] {
+                let mut cfg = plan_cfg(plan);
+                cfg.service.fault_events = faults.clone();
+                cfg.service.recovery.enabled = recovery;
+                let a = des::run(cfg.clone());
+                if !a.summary.conserved() {
+                    return Err(format!(
+                        "conservation violated (recovery={recovery}) \
+                         under {plan:?} + {faults:?}: {:?}",
+                        a.summary
+                    ));
+                }
+                if a.metrics.lost_to_fault != a.summary.lost_to_fault {
+                    return Err(
+                        "registry and ledger disagree on fault losses"
+                            .into(),
+                    );
+                }
+                // Faulted runs stay per-seed deterministic too.
+                let b = des::run(cfg);
+                if a.summary != b.summary
+                    || a.rng_draws != b.rng_draws
+                {
+                    return Err(format!(
+                        "faulted rerun diverged under {plan:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Persisted regressions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_seed_file_replays_deterministically() {
+    // The committed pairs replay first on every `check("shard", ...)`
+    // run; pin the file's presence and the generator's determinism so
+    // the replay path cannot silently rot.
+    let seeds = regression_seeds("shard");
+    assert!(
+        !seeds.is_empty(),
+        "rust/tests/regressions/shard.seeds is missing or empty"
+    );
+    let strat = shard_plan();
+    for (seed, case) in seeds {
+        let a = generate_case(&strat, seed, case);
+        assert_eq!(a, generate_case(&strat, seed, case));
+        assert!((1..=8).contains(&a.shards), "{a:?}");
+    }
+}
