@@ -56,8 +56,8 @@ use std::time::Instant;
 
 use anveshak::apps;
 use anveshak::config::{
-    AppKind, BatchingKind, ComputeEvent, ExperimentConfig, FaultEvent,
-    FaultKind, TlKind, WorkloadConfig,
+    preset, AppKind, BatchingKind, ComputeEvent, ExperimentConfig,
+    FaultEvent, FaultKind, TlKind, WorkloadConfig,
 };
 use anveshak::coordinator::des::DesEngine;
 use anveshak::dataflow::{Event, ModelVariant, Partitioner, Stage};
@@ -719,6 +719,35 @@ fn main() {
         run_des(rp, "des.1000cam.shards.k1", mk(1, 0));
         run_des(rp, "des.1000cam.shards.k4", mk(4, 0));
         run_des(rp, "des.1000cam.shards.k4_threaded", mk(4, 4));
+    }
+
+    println!(
+        "\n== Adaptation plane (4x mid-run slowdown, controller on/off) =="
+    );
+    {
+        // Same max-load workload, seed, ladder and compute step as the
+        // rest of the DES section; the arms differ only in the
+        // controller switch. The `off` row carries the full adaptation
+        // config with the controller frozen — it prices the inert
+        // plane's plumbing (the bit-identity property says the results
+        // match a pre-adaptation build; this row says the wall clock
+        // does too). The `on` row adds command minting, feedback
+        // routing and per-camera effective-batch pricing under load.
+        let mk = |on: bool| {
+            let mut c = des_cfg(smoke);
+            c.tl = TlKind::Base;
+            c.adaptation = preset("adapt_on").adaptation;
+            c.adaptation.enabled = on;
+            c.service.compute_events.push(ComputeEvent {
+                // Mid-run: des_cfg is 60 s full / 10 s smoke.
+                at_sec: if smoke { 5.0 } else { 30.0 },
+                node: None,
+                factor: 4.0,
+            });
+            c
+        };
+        run_des(rp, "des.1000cam.adapt.on", mk(true));
+        run_des(rp, "des.1000cam.adapt.off", mk(false));
     }
 
     println!("\n== L1/L2: PJRT model execution (measured xi(b)) ==");

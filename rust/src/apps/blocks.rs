@@ -200,10 +200,14 @@ pub struct SimDetector {
 }
 
 impl SimDetector {
+    /// A detector running `variant`, costed from the typed
+    /// [`crate::dataflow::VARIANT_TABLE`] — picking a variant can never
+    /// silently miss its ξ multiplier. [`Self::with_cost`] still
+    /// overrides for app-specific calibrations.
     pub fn new(variant: ModelVariant) -> Self {
         Self {
             variant,
-            cost: 1.0,
+            cost: variant.profile().xi,
             label: "detector",
         }
     }
@@ -275,8 +279,13 @@ impl VideoAnalytics for SimDetector {
                             ) < miss_p
                         })
                         .unwrap_or(false);
+                // Adaptation plane: a downshifted camera detects with
+                // reduced recall. Exactly 1.0 at the identity ladder
+                // (`p * 1.0` is bit-exact) and threshold-only — the
+                // RNG draw count never changes.
+                let acc = ctx.accuracy(ev.header.camera, self.variant);
                 let flagged = if entity_present && !transit_missed {
-                    ctx.rng.bool(ctx.sem.va_tp)
+                    ctx.rng.bool(ctx.sem.va_tp * acc)
                 } else if entity_present {
                     false // transit missed entirely
                 } else {
@@ -339,10 +348,14 @@ pub struct SimReid {
 }
 
 impl SimReid {
+    /// A re-id block running `variant`, costed from the typed
+    /// [`crate::dataflow::VARIANT_TABLE`] — the 1.63x CrLarge
+    /// multiplier comes with the variant, not from a per-call-site
+    /// constant that a new app could forget.
     pub fn new(variant: ModelVariant) -> Self {
         Self {
             variant,
-            cost: 1.0,
+            cost: variant.profile().xi,
             label: "reid",
         }
     }
@@ -352,11 +365,10 @@ impl SimReid {
         Self::new(ModelVariant::CrSmall).labeled("reid-small")
     }
 
-    /// The deeper CR DNN (~1.63x slower per frame, App 2/4).
+    /// The deeper CR DNN (~1.63x slower per frame, App 2/4) — the
+    /// cost multiplier rides in from the variant table.
     pub fn large() -> Self {
-        Self::new(ModelVariant::CrLarge)
-            .with_cost(1.63)
-            .labeled("reid-large")
+        Self::new(ModelVariant::CrLarge).labeled("reid-large")
     }
 
     /// BoxCars-class vehicle re-id (App 3).
@@ -403,8 +415,13 @@ impl ContentionResolver for SimReid {
                 } else {
                     (ctx.sem.cr_tp, ctx.sem.cr_fp)
                 };
+                // Adaptation plane: reduced resolution / a lighter CR
+                // variant lowers the confirm rate. Threshold-only and
+                // exactly 1.0 at the identity ladder, like the
+                // fusion-boost path above.
+                let acc = ctx.accuracy(ev.header.camera, self.variant);
                 let detected = if entity_present && candidate {
-                    ctx.rng.bool(tp)
+                    ctx.rng.bool(tp * acc)
                 } else {
                     candidate && ctx.rng.bool(fp)
                 };

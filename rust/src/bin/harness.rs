@@ -30,6 +30,14 @@
 //!                               # validate and reconcile with their
 //!                               # ledgers, and every summary must be
 //!                               # bit-identical across the arms
+//!   harness adapt [--smoke]     # adaptation-plane A/B: every compute
+//!                               # node slows 4x mid-run with the
+//!                               # DeepScale-style controller on vs
+//!                               # off at the same seed; both traces
+//!                               # must reconcile (incl. adaptation
+//!                               # commands vs the metrics registry)
+//!                               # and controller-on must complete
+//!                               # strictly more on-time events
 //!   harness lint                # repo-invariant static-analysis pass
 //!                               # over rust/src (trace gating,
 //!                               # wall-clock bans, map determinism);
@@ -66,7 +74,7 @@ fn main() {
     };
     if args.is_empty() || args.iter().any(|a| a == "--help") {
         eprintln!(
-            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults|shard|lint [--smoke] ..."
+            "usage: harness [--out DIR] all|table1|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|mq|compute|trace|faults|shard|adapt|lint [--smoke] ..."
         );
         std::process::exit(2);
     }
@@ -138,6 +146,9 @@ fn main() {
     }
     if want("shard") {
         shard(&out_dir, smoke);
+    }
+    if want("adapt") {
+        adapt(&out_dir, smoke);
     }
     println!("\nresults written to {}", out_dir.display());
 }
@@ -1138,6 +1149,153 @@ fn shard(out: &Path, smoke: bool) {
         ),
     ]);
     std::fs::write(out.join("shard.json"), doc.to_string()).unwrap();
+}
+
+/// Adaptation-plane A/B (`harness adapt`): the `adapt_on` /
+/// `adapt_off` presets differ only in the controller switch — same
+/// seed, same workload, same mid-run 4x slowdown of every compute
+/// node, same resolution ladder. Both arms run under the JSONL flight
+/// recorder; each trace must schema-validate and reconcile exactly
+/// with its ledger, `adaptation` trace lines must match the metrics
+/// registry's applied count (and be absent from the frozen arm), the
+/// offered load must be identical across the arms, and controller-on
+/// must complete strictly more on-time events than controller-off,
+/// else exit 1. `--smoke` shrinks to 60 cameras / 60 s with the
+/// slowdown at t = 20 s so CI runs the whole A/B in seconds.
+fn adapt(out: &Path, smoke: bool) {
+    use anveshak::coordinator::des::run_with_sink;
+    use anveshak::obs::{validate_trace, JsonlSink, RingSink};
+
+    println!(
+        "\n== Adaptation A/B: 4x compute slowdown mid-run, controller on vs off =="
+    );
+    let ring = RingSink::new(4096);
+    ring.install_dump_on_panic();
+
+    let mut results: Vec<(&str, RunResult)> = Vec::new();
+    for name in ["adapt_on", "adapt_off"] {
+        let mut cfg = preset(name);
+        if smoke {
+            cfg.num_cameras = 60;
+            cfg.workload.vertices = 60;
+            cfg.workload.edges = 160;
+            cfg.duration_secs = 60.0;
+            cfg.service.compute_events[0].at_sec = 20.0;
+        }
+        let arm = name.trim_start_matches("adapt_");
+        let path = out.join(format!("adapt_{arm}.jsonl"));
+        let sink = JsonlSink::create(&path).expect("create trace file");
+        eprintln!(
+            "[run] {name}{} ...",
+            if smoke { " (smoke)" } else { "" }
+        );
+        let start = std::time::Instant::now();
+        let r = run_with_sink(cfg, (sink.clone(), ring.clone()));
+        sink.flush();
+        eprintln!(
+            "[run] {name} done in {:.1}s ({} trace lines)",
+            start.elapsed().as_secs_f64(),
+            sink.lines()
+        );
+
+        let text =
+            std::fs::read_to_string(&path).expect("read trace back");
+        let check = match validate_trace(&text) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{arm}: trace FAILED schema validation: {e}");
+                std::process::exit(1);
+            }
+        };
+        let s = &r.summary;
+        let m = &r.metrics;
+        let mut ok = true;
+        {
+            let mut expect = |what: &str, got: u64, want: u64| {
+                if got != want {
+                    eprintln!(
+                        "  MISMATCH {arm} {what}: trace {got} != ledger {want}"
+                    );
+                    ok = false;
+                }
+            };
+            expect("generated", check.generated, s.generated);
+            expect("completed", check.completed, s.on_time + s.delayed);
+            expect("on_time", check.on_time, s.on_time);
+            expect("dropped", check.dropped_total(), s.dropped);
+            expect("in_flight", check.unterminated(), s.in_flight);
+            expect("detections", check.detections, r.detections);
+            // Every applied command leaves exactly one `adaptation`
+            // trace line; the frozen arm must leave none.
+            expect("adaptations", check.adaptations, m.adapt_applied);
+            if name == "adapt_off" {
+                expect("adaptations (frozen)", check.adaptations, 0);
+                expect("adapt_minted (frozen)", m.adapt_minted, 0);
+            }
+        }
+        let viol = check.violations();
+        if !viol.is_empty() {
+            eprintln!(
+                "  MISMATCH {arm} conservation: {} violation(s), first {:?}",
+                viol.len(),
+                viol[0]
+            );
+            ok = false;
+        }
+        if !ok {
+            eprintln!("{arm}: trace FAILED ledger reconciliation");
+            std::process::exit(1);
+        }
+        print_summary_row(arm, &r);
+        println!(
+            "    adapt minted {} | applied {} | stale {} | cams downshifted {} | trace reconciles ({} lines)",
+            m.adapt_minted,
+            m.adapt_applied,
+            m.adapt_stale,
+            m.cameras_downshifted,
+            check.lines
+        );
+        results.push((arm, r));
+    }
+
+    let on = &results[0].1;
+    let off = &results[1].1;
+    if on.summary.generated != off.summary.generated {
+        eprintln!(
+            "FAIL: offered load differs across arms: on {} vs off {}",
+            on.summary.generated, off.summary.generated
+        );
+        std::process::exit(1);
+    }
+    if on.metrics.adapt_minted == 0 {
+        eprintln!(
+            "FAIL: controller arm never minted a command under the 4x slowdown"
+        );
+        std::process::exit(1);
+    }
+    if on.summary.on_time <= off.summary.on_time {
+        eprintln!(
+            "FAIL: adaptation must strictly help: on-time with controller {} <= without {}",
+            on.summary.on_time, off.summary.on_time
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "  adaptation wins: +{} on-time events ({} commands applied, {} stale discards)",
+        on.summary.on_time - off.summary.on_time,
+        on.metrics.adapt_applied,
+        on.metrics.adapt_stale
+    );
+    let doc = obj([
+        ("smoke", smoke.into()),
+        ("adapt_on", summary_json(on)),
+        ("adapt_off", summary_json(off)),
+        (
+            "commands_applied",
+            (on.metrics.adapt_applied as i64).into(),
+        ),
+    ]);
+    std::fs::write(out.join("adapt.json"), doc.to_string()).unwrap();
 }
 
 /// Fig 12: App 2 (CR ~63% slower) latency distribution, delays, cams.

@@ -10,7 +10,10 @@
 //! that matters", which is the whole point of shrinking.
 
 use super::strategy::{vec_of, Strategy, VecOf};
-use crate::config::{BandwidthEvent, ComputeEvent, FaultEvent, FaultKind, ServiceConfig};
+use crate::config::{
+    AdaptationConfig, BandwidthEvent, ComputeEvent, FaultEvent, FaultKind, ResolutionLevel,
+    ServiceConfig,
+};
 use crate::util::Rng;
 
 // ---------------------------------------------------------------------------
@@ -226,6 +229,108 @@ impl Strategy for BandwidthEvents {
 /// the empty schedule.
 pub fn bandwidth_schedule(max_events: usize) -> VecOf<BandwidthEvents> {
     vec_of(BandwidthEvents, 0, max_events)
+}
+
+// ---------------------------------------------------------------------------
+// Adaptation-plane configurations
+// ---------------------------------------------------------------------------
+
+/// A random [`AdaptationConfig`]: a 1–4-rung resolution ladder (rung 0
+/// always native, deeper rungs monotonically cheaper and coarser),
+/// hysteresis band and cooldown drawn from the controller's sane
+/// ranges, controller switched on. Shrinks toward the canonical
+/// do-nothing configuration — the *enabled identity ladder* — one
+/// deviation at a time: first drop the deepest rung, then neutralise
+/// one non-native rung back to native, then reset one policy knob. A
+/// minimal counterexample therefore names the single rung or knob that
+/// breaks the property, and the shrink floor itself proves the
+/// identity-ladder contract (enabled + identity ⇒ inert).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptationConfigs;
+
+/// Adaptation-config strategy (enabled controller, 1–4 rungs).
+pub fn adaptation_config() -> AdaptationConfigs {
+    AdaptationConfigs
+}
+
+/// The canonical shrink floor: controller on, identity ladder, default
+/// policy knobs. `is_identity()` holds, so the plane is inert.
+fn adapt_floor() -> AdaptationConfig {
+    AdaptationConfig {
+        enabled: true,
+        ..AdaptationConfig::default()
+    }
+}
+
+impl Strategy for AdaptationConfigs {
+    type Value = AdaptationConfig;
+
+    fn generate(&self, r: &mut Rng) -> AdaptationConfig {
+        let rungs = r.range_u(1, 5);
+        let mut ladder = vec![ResolutionLevel::native()];
+        for _ in 1..rungs {
+            let prev = *ladder.last().unwrap();
+            ladder.push(ResolutionLevel {
+                scale: prev.scale * r.range_f64(0.4, 0.9),
+                cost: prev.cost * r.range_f64(0.4, 0.95),
+                accuracy: prev.accuracy * r.range_f64(0.85, 1.0),
+                stride: if r.bool(0.25) {
+                    prev.stride * 2
+                } else {
+                    prev.stride
+                },
+            });
+        }
+        let slack_down = r.range_f64(0.05, 0.4);
+        AdaptationConfig {
+            enabled: true,
+            ladder,
+            slack_down,
+            slack_up: slack_down + r.range_f64(0.1, 0.5),
+            cooldown_secs: r.range_f64(0.5, 10.0),
+        }
+    }
+
+    fn shrink(&self, v: &AdaptationConfig) -> Vec<AdaptationConfig> {
+        let floor = adapt_floor();
+        let mut out = Vec::new();
+        // Drop the deepest rung first: ladder depth is usually the
+        // interesting variable, and each pop strictly shortens it.
+        if v.ladder.len() > 1 {
+            let mut w = v.clone();
+            w.ladder.pop();
+            out.push(w);
+        }
+        // Neutralise one remaining non-native rung back to native.
+        for (i, l) in v.ladder.iter().enumerate().skip(1) {
+            if !l.is_native() {
+                let mut w = v.clone();
+                w.ladder[i] = ResolutionLevel::native();
+                out.push(w);
+            }
+        }
+        // Reset one policy knob, keeping the hysteresis band valid
+        // (`slack_down < slack_up`) in every candidate.
+        if v.slack_down != floor.slack_down && floor.slack_down < v.slack_up {
+            out.push(AdaptationConfig {
+                slack_down: floor.slack_down,
+                ..v.clone()
+            });
+        }
+        if v.slack_up != floor.slack_up && v.slack_down < floor.slack_up {
+            out.push(AdaptationConfig {
+                slack_up: floor.slack_up,
+                ..v.clone()
+            });
+        }
+        if v.cooldown_secs != floor.cooldown_secs {
+            out.push(AdaptationConfig {
+                cooldown_secs: floor.cooldown_secs,
+                ..v.clone()
+            });
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -609,6 +714,53 @@ mod tests {
         }
         // The base itself is minimal.
         assert!(s.shrink(&base).is_empty());
+    }
+
+    #[test]
+    fn adaptation_config_generates_valid_ladders() {
+        let s = adaptation_config();
+        let a = s.generate(&mut rng(13, 0));
+        let b = s.generate(&mut rng(13, 0));
+        assert_eq!(a, b, "generator is seed-deterministic");
+        for case in 0..64 {
+            let v = s.generate(&mut rng(13, case));
+            assert!(v.enabled);
+            assert!((1..=4).contains(&v.ladder.len()), "{v:?}");
+            assert!(v.ladder[0].is_native(), "{v:?}");
+            assert!(v.slack_down < v.slack_up, "{v:?}");
+            assert!(v.cooldown_secs > 0.0, "{v:?}");
+            // Deeper rungs are monotonically cheaper and coarser.
+            for w in v.ladder.windows(2) {
+                assert!(w[1].scale < w[0].scale, "{v:?}");
+                assert!(w[1].cost < w[0].cost, "{v:?}");
+                assert!(w[1].accuracy <= w[0].accuracy, "{v:?}");
+                assert!(w[1].stride >= w[0].stride, "{v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptation_config_shrinks_to_enabled_identity_ladder() {
+        let s = adaptation_config();
+        let floor = adapt_floor();
+        assert!(floor.is_identity(), "shrink floor must be inert");
+        assert!(s.shrink(&floor).is_empty(), "floor is minimal");
+        // Every shrink step keeps the hysteresis band valid and the
+        // walk terminates at the floor.
+        for case in 0..16 {
+            let mut cur = s.generate(&mut rng(13, case));
+            let mut steps = 0;
+            while cur != floor {
+                let cands = s.shrink(&cur);
+                assert!(!cands.is_empty(), "stuck at {cur:?}");
+                for c in &cands {
+                    assert!(c.slack_down < c.slack_up, "{c:?}");
+                }
+                cur = cands[0].clone();
+                steps += 1;
+                assert!(steps <= 16, "shrink chain too long at {cur:?}");
+            }
+        }
     }
 
     #[test]

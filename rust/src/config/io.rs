@@ -186,6 +186,35 @@ pub fn config_to_json(c: &ExperimentConfig) -> Json {
                 ("threads", c.sharding.threads.into()),
             ]),
         ),
+        (
+            "adaptation",
+            obj([
+                ("enabled", c.adaptation.enabled.into()),
+                (
+                    "ladder",
+                    Json::Arr(
+                        c.adaptation
+                            .ladder
+                            .iter()
+                            .map(|l| {
+                                obj([
+                                    ("scale", l.scale.into()),
+                                    ("cost", l.cost.into()),
+                                    ("accuracy", l.accuracy.into()),
+                                    (
+                                        "stride",
+                                        (l.stride as i64).into(),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("slack_down", c.adaptation.slack_down.into()),
+                ("slack_up", c.adaptation.slack_up.into()),
+                ("cooldown_secs", c.adaptation.cooldown_secs.into()),
+            ]),
+        ),
     ])
 }
 
@@ -388,7 +417,99 @@ pub fn config_from_json(text: &str) -> Result<ExperimentConfig, String> {
         set_usize(v, "shards", &mut c.sharding.shards);
         set_usize(v, "threads", &mut c.sharding.threads);
     }
+    if let Some(v) = j.get("adaptation") {
+        adaptation_from_json(v, &mut c.adaptation)?;
+    }
     Ok(c)
+}
+
+/// A ladder multiplier: finite and inside `(0, bound]` — a zero or
+/// negative multiplier would silently void the stage it scales, and a
+/// malformed ladder must be an error, not a default.
+fn ladder_multiplier(
+    e: &Json,
+    key: &str,
+    bound: f64,
+) -> Result<f64, String> {
+    let v = e
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("ladder level missing {key}"))?;
+    if !(v.is_finite() && v > 0.0 && v <= bound) {
+        return Err(format!(
+            "ladder level {key} must be in (0, {bound}], got {v}"
+        ));
+    }
+    Ok(v)
+}
+
+fn adaptation_from_json(
+    v: &Json,
+    out: &mut AdaptationConfig,
+) -> Result<(), String> {
+    if let Some(b) = v.get("enabled").and_then(Json::as_bool) {
+        out.enabled = b;
+    }
+    if let Some(Json::Arr(levels)) = v.get("ladder") {
+        if levels.is_empty() {
+            return Err(
+                "adaptation ladder must keep the native level".into()
+            );
+        }
+        let mut ladder = Vec::with_capacity(levels.len());
+        for l in levels {
+            let stride = l
+                .get("stride")
+                .and_then(Json::as_f64)
+                .unwrap_or(1.0);
+            if stride < 1.0 || stride.fract() != 0.0 {
+                return Err(format!(
+                    "ladder level stride must be a positive integer, \
+                     got {stride}"
+                ));
+            }
+            ladder.push(ResolutionLevel {
+                scale: ladder_multiplier(l, "scale", 1.0)?,
+                cost: ladder_multiplier(l, "cost", f64::INFINITY)?,
+                accuracy: ladder_multiplier(l, "accuracy", 1.0)?,
+                stride: stride as u64,
+            });
+        }
+        if !ladder[0].is_native() {
+            return Err(
+                "adaptation ladder level 0 must be the native identity \
+                 (scale/cost/accuracy 1.0, stride 1)"
+                    .into(),
+            );
+        }
+        out.ladder = ladder;
+    }
+    set_f64(v, "slack_down", &mut out.slack_down);
+    set_f64(v, "slack_up", &mut out.slack_up);
+    set_f64(v, "cooldown_secs", &mut out.cooldown_secs);
+    for (key, s) in
+        [("slack_down", out.slack_down), ("slack_up", out.slack_up)]
+    {
+        if !(s.is_finite() && (0.0..1.0).contains(&s)) {
+            return Err(format!(
+                "adaptation {key} must be in [0, 1), got {s}"
+            ));
+        }
+    }
+    if out.slack_up <= out.slack_down {
+        return Err(format!(
+            "adaptation slack_up ({}) must exceed slack_down ({}) — \
+             the hysteresis band cannot be empty",
+            out.slack_up, out.slack_down
+        ));
+    }
+    if !(out.cooldown_secs.is_finite() && out.cooldown_secs >= 0.0) {
+        return Err(format!(
+            "adaptation cooldown_secs must be finite and >= 0, got {}",
+            out.cooldown_secs
+        ));
+    }
+    Ok(())
 }
 
 fn fault_event_to_json(e: &FaultEvent) -> Json {
@@ -794,6 +915,62 @@ mod tests {
         let c3 = config_from_json("{}").unwrap();
         assert_eq!(c3.sharding.shards, 1);
         assert_eq!(c3.sharding.threads, 0);
+    }
+
+    #[test]
+    fn adaptation_round_trips() {
+        let mut c = ExperimentConfig::default();
+        c.adaptation.enabled = true;
+        c.adaptation.ladder.push(ResolutionLevel {
+            scale: 0.5,
+            cost: 0.55,
+            accuracy: 0.97,
+            stride: 2,
+        });
+        c.adaptation.slack_down = 0.2;
+        c.adaptation.slack_up = 0.7;
+        c.adaptation.cooldown_secs = 3.0;
+        let j = config_to_json(&c).to_string();
+        let c2 = config_from_json(&j).unwrap();
+        assert_eq!(c2.adaptation, c.adaptation);
+        // Omitting the section keeps the identity default.
+        let c3 = config_from_json("{}").unwrap();
+        assert!(c3.adaptation.is_identity());
+    }
+
+    #[test]
+    fn adaptation_rejects_malformed_ladders() {
+        let bad = [
+            // Empty ladder loses the native level.
+            r#"{"adaptation": {"ladder": []}}"#,
+            // Level 0 must be the exact identity.
+            r#"{"adaptation": {"ladder": [
+                {"scale": 0.5, "cost": 0.5, "accuracy": 1.0, "stride": 1}
+            ]}}"#,
+            // Multipliers must be in range — error, not default.
+            r#"{"adaptation": {"ladder": [
+                {"scale": 1.0, "cost": 1.0, "accuracy": 1.0, "stride": 1},
+                {"scale": 0.5, "cost": -2.0, "accuracy": 1.0, "stride": 1}
+            ]}}"#,
+            r#"{"adaptation": {"ladder": [
+                {"scale": 1.0, "cost": 1.0, "accuracy": 1.0, "stride": 1},
+                {"scale": 0.5, "cost": 0.5, "accuracy": 1.5, "stride": 1}
+            ]}}"#,
+            // Fractional or zero strides are nonsense.
+            r#"{"adaptation": {"ladder": [
+                {"scale": 1.0, "cost": 1.0, "accuracy": 1.0, "stride": 1},
+                {"scale": 0.5, "cost": 0.5, "accuracy": 0.9, "stride": 0.5}
+            ]}}"#,
+            // An empty hysteresis band would thrash.
+            r#"{"adaptation": {"slack_down": 0.5, "slack_up": 0.4}}"#,
+            r#"{"adaptation": {"cooldown_secs": -1.0}}"#,
+        ];
+        for text in bad {
+            assert!(
+                config_from_json(text).is_err(),
+                "accepted malformed adaptation config: {text}"
+            );
+        }
     }
 
     #[test]

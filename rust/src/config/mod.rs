@@ -109,7 +109,7 @@ pub struct BandwidthEvent {
 /// onward, batches executing on `node` take `factor` times their
 /// nominal duration (4.0 = a 4x slowdown; 1.0 restores full speed).
 /// `node: None` applies the step to every cluster node.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ComputeEvent {
     pub at_sec: f64,
     /// Target node index, or `None` for all nodes.
@@ -414,6 +414,87 @@ impl Default for ShardingConfig {
     }
 }
 
+/// One rung of a per-camera resolution ladder (the adaptation plane's
+/// quality operating points — see [`crate::tuning::adapt`]). Rung 0 is
+/// the native quality; deeper rungs trade accuracy for cost, DeepScale
+/// style. The **identity ladder** is a single native rung: every
+/// multiplier is exactly `1.0`, so an adaptation-aware build prices,
+/// scores and transfers bit-identically to a build without the plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolutionLevel {
+    /// Frame-size (byte) multiplier at this rung (1.0 = native).
+    pub scale: f64,
+    /// ξ cost multiplier an event at this rung contributes to a batch.
+    pub cost: f64,
+    /// Multiplier on the simulated true-positive rates (≤ 1.0).
+    pub accuracy: f64,
+    /// Frame stride at this rung (1 = every frame; > 1 decimates the
+    /// camera's effective frame rate platform-side).
+    pub stride: u64,
+}
+
+impl ResolutionLevel {
+    /// The native (identity) rung.
+    pub fn native() -> Self {
+        Self { scale: 1.0, cost: 1.0, accuracy: 1.0, stride: 1 }
+    }
+
+    /// Whether this rung is an exact identity.
+    pub fn is_native(&self) -> bool {
+        self.scale == 1.0
+            && self.cost == 1.0
+            && self.accuracy == 1.0
+            && self.stride <= 1
+    }
+}
+
+impl Default for ResolutionLevel {
+    fn default() -> Self {
+        Self::native()
+    }
+}
+
+/// Adaptation-plane configuration: the per-camera resolution ladder
+/// plus the sink-side controller's policy knobs. The default is the
+/// identity ladder with the controller off — bit-identical to a build
+/// without the adaptation plane, per seed, by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptationConfig {
+    /// Master switch for the sink-side controller. Even when `true`,
+    /// a single-rung ladder leaves the controller inert.
+    pub enabled: bool,
+    /// Ordered quality rungs, index 0 = native. Never empty.
+    pub ladder: Vec<ResolutionLevel>,
+    /// Downshift when deadline slack `(γ − ema)/γ` falls below this.
+    pub slack_down: f64,
+    /// Upshift when slack recovers above this (must exceed
+    /// `slack_down` — the hysteresis band).
+    pub slack_up: f64,
+    /// Minimum seconds between commands for one camera.
+    pub cooldown_secs: f64,
+}
+
+impl AdaptationConfig {
+    /// Is this the do-nothing configuration (identity ladder)?
+    pub fn is_identity(&self) -> bool {
+        !self.enabled
+            || (self.ladder.len() <= 1
+                && self.ladder.iter().all(|l| l.is_native()))
+    }
+}
+
+impl Default for AdaptationConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ladder: vec![ResolutionLevel::native()],
+            slack_down: 0.25,
+            slack_up: 0.6,
+            cooldown_secs: 5.0,
+        }
+    }
+}
+
 /// Full experiment description.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -453,6 +534,9 @@ pub struct ExperimentConfig {
     pub obs: ObsConfig,
     /// Sharded-DES execution geometry (result-neutral by contract).
     pub sharding: ShardingConfig,
+    /// Adaptation plane: resolution ladder + controller policy
+    /// (identity + disabled by default — see [`crate::tuning::adapt`]).
+    pub adaptation: AdaptationConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -480,6 +564,7 @@ impl Default for ExperimentConfig {
             multi_query: MultiQueryConfig::default(),
             obs: ObsConfig::default(),
             sharding: ShardingConfig::default(),
+            adaptation: AdaptationConfig::default(),
         }
     }
 }
@@ -544,6 +629,28 @@ mod tests {
         assert_eq!(c2.network.events.len(), 1);
         assert_eq!(c2.app, c.app);
         assert_eq!(c2.tl, c.tl);
+    }
+
+    #[test]
+    fn adaptation_defaults_to_the_identity_ladder() {
+        let c = ExperimentConfig::default();
+        assert!(c.adaptation.is_identity());
+        assert_eq!(c.adaptation.ladder.len(), 1);
+        assert!(c.adaptation.ladder[0].is_native());
+        assert!(!c.adaptation.enabled);
+        assert!(c.adaptation.slack_up > c.adaptation.slack_down);
+        // Enabled with a single native rung is still the identity.
+        let mut on = c.adaptation.clone();
+        on.enabled = true;
+        assert!(on.is_identity());
+        // A second rung under `enabled` is not.
+        on.ladder.push(ResolutionLevel {
+            scale: 0.5,
+            cost: 0.5,
+            accuracy: 0.95,
+            stride: 1,
+        });
+        assert!(!on.is_identity());
     }
 
     #[test]

@@ -13,7 +13,29 @@ pub const ALL: &[&str] = &[
     "fig10_base_200", "fig11_nodrops", "fig11_drops", "fig12_sb20",
     "fig12_db25", "fig12_wbfs_sb20", "fig12_es6_db25",
     "fig12_es6_drops", "faults_recovery_on", "faults_recovery_off",
+    "adapt_on", "adapt_off",
 ];
+
+/// The non-native rungs of the adaptation A/B ladder ("harness adapt").
+/// Strides stay 1 so both arms offer identical load — the controller
+/// trades per-event cost/accuracy, never event count.
+fn adapt_ladder() -> Vec<ResolutionLevel> {
+    vec![
+        ResolutionLevel::native(),
+        ResolutionLevel {
+            scale: 0.5,
+            cost: 0.55,
+            accuracy: 0.97,
+            stride: 1,
+        },
+        ResolutionLevel {
+            scale: 0.25,
+            cost: 0.35,
+            accuracy: 0.92,
+            stride: 1,
+        },
+    ]
+}
 
 /// Build the named preset. Panics on unknown names (the harness validates
 /// against [`ALL`]).
@@ -115,6 +137,26 @@ pub fn preset(name: &str) -> ExperimentConfig {
                 },
             });
             c.service.recovery.enabled = name.ends_with("_on");
+        }
+        // ---- Adaptation A/B ("harness adapt"): every compute node
+        // slows 4x at t = 300 s; the only difference between the pair
+        // is the controller switch — both arms carry the same ladder,
+        // so the off arm is the frozen baseline under identical load
+        // (Base TL at 200 cameras, stride-1 ladder). ----
+        "adapt_on" | "adapt_off" => {
+            c.tl = TlKind::Base;
+            c.num_cameras = 200;
+            c.workload.vertices = 200;
+            c.workload.edges = 563;
+            c.batching = BatchingKind::Dynamic { max: 25 };
+            c.drops_enabled = true;
+            c.service.compute_events.push(ComputeEvent {
+                at_sec: 300.0,
+                node: None,
+                factor: 4.0,
+            });
+            c.adaptation.ladder = adapt_ladder();
+            c.adaptation.enabled = name.ends_with("_on");
         }
         // ---- Fig 12: App 2 (large CR) ----
         "fig12_sb20" => {
@@ -219,6 +261,26 @@ mod tests {
         }
         assert!(on.service.recovery.enabled);
         assert!(!off.service.recovery.enabled);
+    }
+
+    #[test]
+    fn adapt_presets_are_an_ab_pair() {
+        let on = preset("adapt_on");
+        let off = preset("adapt_off");
+        for c in [&on, &off] {
+            assert_eq!(c.adaptation.ladder.len(), 3);
+            assert!(c.adaptation.ladder[0].is_native());
+            // Equal offered load across the arms: no stride rungs.
+            assert!(c.adaptation.ladder.iter().all(|l| l.stride == 1));
+            assert_eq!(c.service.compute_events.len(), 1);
+            assert!((c.service.compute_events[0].factor - 4.0).abs()
+                < 1e-9);
+            assert!(matches!(c.tl, TlKind::Base));
+            assert!(c.drops_enabled);
+        }
+        assert!(on.adaptation.enabled);
+        assert!(!off.adaptation.enabled);
+        assert!(!off.adaptation.is_identity() || !off.adaptation.enabled);
     }
 
     #[test]

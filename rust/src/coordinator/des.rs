@@ -23,9 +23,10 @@ use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig};
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{
-    ContentionResolver, Event, FeedbackRouter, FeedbackState,
-    FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
-    TrackingLogic, TruthSource, VideoAnalytics, SINGLE_QUERY,
+    ContentionResolver, Event, FeedbackEnvelope, FeedbackRouter,
+    FeedbackState, FilterControl, ModelVariant, Payload, QueryFusion,
+    QueryId, SimCtx, Stage, TlEnv, TrackingLogic, TruthSource,
+    VideoAnalytics, SINGLE_QUERY,
 };
 use crate::engine::ShardedDes;
 use crate::metrics::{Ledger, Summary, Timeline};
@@ -39,6 +40,9 @@ use crate::roadnet::{
 use crate::sim::{
     backoff_delay, ClockSkews, ComputeModel, EntityWalk, FaultModel,
     GroundTruth, NetModel,
+};
+use crate::tuning::adapt::{
+    AdaptController, AdaptationCommand, AdaptationState,
 };
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
@@ -221,6 +225,21 @@ pub struct DesEngine<S: ObsSink = NullSink> {
     /// Stamps QF refinements with per-query update sequence numbers
     /// before they are routed upstream (the feedback edge).
     router: FeedbackRouter,
+    /// The adaptation plane's single application point: every
+    /// [`Payload::Adaptation`] command lands in
+    /// [`Self::apply_adaptation`] and nowhere else. FC striding, frame
+    /// bytes and VA/CR batch pricing read commanded operating points
+    /// back out of it.
+    adapt: AdaptationState,
+    /// Sink-side accuracy–latency controller (deterministic, RNG-free).
+    adapt_ctl: AdaptController,
+    /// Hoisted `adapt_ctl.active()`: when false (identity ladder or
+    /// adaptation off) every pricing site takes the exact integer
+    /// ξ(b) path, bit-identical to the pre-adaptation engine.
+    adapt_on: bool,
+    /// App-nominal analytics variants per executor stage `[VA, CR]` —
+    /// what the adaptation state prices commanded overrides against.
+    stage_nominal: [ModelVariant; 2],
     rng: Rng,
     now: Micros,
     /// Trace sink (default [`NullSink`]: compiles to nothing).
@@ -445,6 +464,16 @@ impl<S: ObsSink> DesEngine<S> {
         if cfg!(feature = "strict-invariants") && part.shards() > 1 {
             core.set_entity_tracking(true);
         }
+        // Adaptation plane: one state (the single application point),
+        // one sink-side controller. CR's nominal variant rides on the
+        // commands; VA derives its own (non-)override from it.
+        let adapt = AdaptationState::new(&cfg.adaptation, num_cameras);
+        let adapt_ctl = AdaptController::new(
+            &cfg.adaptation,
+            num_cameras,
+            cfg.gamma(),
+            app.cr_variant,
+        );
         Self {
             cfg,
             topo,
@@ -483,6 +512,10 @@ impl<S: ObsSink> DesEngine<S> {
             peak_active: num_cameras,
             fusion_updates: 0,
             router: FeedbackRouter::new(),
+            adapt_on: adapt_ctl.active(),
+            adapt,
+            adapt_ctl,
+            stage_nominal: [app.va_variant, app.cr_variant],
             rng: rng(seed, 0xDE5),
             now: 0,
             obs: sink,
@@ -520,8 +553,9 @@ impl<S: ObsSink> DesEngine<S> {
         let shard = self.shard_of(&ev);
         // Entity-ownership bookkeeping (strict-invariants, K>1 only):
         // data events are owned by the shard holding them; probes
-        // reuse the slowest event's id and feedback updates are
-        // broadcast copies, so neither has a single owner.
+        // reuse the slowest event's id and feedback copies (query
+        // updates, adaptation commands) are broadcast, so neither has
+        // a single owner.
         let entity = if self.core.shards() > 1 {
             match &ev {
                 Ev::Arrive { ev, .. }
@@ -529,6 +563,7 @@ impl<S: ObsSink> DesEngine<S> {
                         && !matches!(
                             ev.payload,
                             Payload::QueryUpdate(_)
+                                | Payload::Adaptation(_)
                         ) =>
                 {
                     Some(ev.header.id)
@@ -736,6 +771,16 @@ impl<S: ObsSink> DesEngine<S> {
         // FCs see monotonically increasing frame numbers.
         let frame_no = self.frame_counters[cam];
         self.frame_counters[cam] += 1;
+        // Commanded frame-rate: a downshifted rung with stride k admits
+        // every k-th tick at the platform layer, so FC user-logic sees
+        // the commanded rate. Stride 1 (the identity ladder, and every
+        // rung of the stock A/B ladder) skips this entirely.
+        if self.adapt_on {
+            let stride = self.adapt.stride(cam);
+            if stride > 1 && frame_no % stride != 0 {
+                return;
+            }
+        }
         if !self.fc.admit(
             SINGLE_QUERY,
             cam,
@@ -790,10 +835,17 @@ impl<S: ObsSink> DesEngine<S> {
         );
         ev.header.sum_exec += fc_dur;
         let va = self.topo.va_task(cam);
+        // Commanded resolution: the frame ships at the rung's scaled
+        // size (native rung = exact identity, no f64 arithmetic).
+        let frame_bytes = if self.adapt_on {
+            self.adapt.scaled_bytes(self.net.frame_bytes, cam)
+        } else {
+            self.net.frame_bytes
+        };
         self.send_data(
             self.topo.node_of(fc_task),
             va,
-            self.net.frame_bytes,
+            frame_bytes,
             t + fc_dur,
             ev,
             None,
@@ -816,6 +868,16 @@ impl<S: ObsSink> DesEngine<S> {
         match self.tasks[task].stage {
             Stage::Uv => self.on_sink_arrive(ev, batch),
             Stage::Va | Stage::Cr => {
+                // Feedback edge, adaptation flavor: the first broadcast
+                // copy applies at the engine's single application
+                // point; later copies discard as stale. Like query
+                // updates, commands never touch the batcher, budgets
+                // or drop points.
+                if let Payload::Adaptation(cmd) = &ev.payload {
+                    let cmd = *cmd;
+                    self.apply_adaptation(cmd);
+                    return;
+                }
                 // Feedback edge: a QueryUpdate is consumed here — the
                 // executor swaps its scoring target (iff the update is
                 // fresher than the last applied one) and the event
@@ -840,7 +902,17 @@ impl<S: ObsSink> DesEngine<S> {
                     .downstream_slot(task, ev.header.camera);
                 let budget = self.tasks[task].budget.budget_for(slot);
                 if self.cfg.drops_enabled {
-                    let xi1 = self.tasks[task].xi.xi(1);
+                    // Gate 1 prices one event at the camera's
+                    // commanded rel (exactly ξ(1) at the identity).
+                    let xi1 = if self.adapt_on {
+                        let nom =
+                            self.nominal_of(self.tasks[task].stage);
+                        self.tasks[task].xi.xi_eff(
+                            self.adapt.rel(ev.header.camera, nom),
+                        )
+                    } else {
+                        self.tasks[task].xi.xi(1)
+                    };
                     if budget < BUDGET_INF
                         && drop_at_queue(exempt, u, xi1, budget)
                     {
@@ -931,7 +1003,7 @@ impl<S: ObsSink> DesEngine<S> {
                     // the filter allocates nothing in steady state.
                     if self.cfg.drops_enabled {
                         let b = batch.len();
-                        let xib = self.tasks[task].xi.xi(b);
+                        let xib = self.batch_xi(task, &batch);
                         let mut kept =
                             std::mem::take(&mut self.kept_scratch);
                         kept.clear();
@@ -990,14 +1062,24 @@ impl<S: ObsSink> DesEngine<S> {
                         continue; // try to form the next batch
                     }
                     let b = batch.len();
-                    let (xi_est, xi_true, jitter, node) = {
+                    // Batch pricing under adaptation: both the
+                    // estimate and the simulated-hardware truth price
+                    // the *effective* size Σ rel(camera) — a
+                    // downshifted camera's events genuinely run
+                    // cheaper. Inert plane: the exact integer ξ(b)
+                    // path, bit-identical to the pre-adaptation
+                    // engine.
+                    let (xi_est, xi_true) = if self.adapt_on {
+                        let rel = self.batch_rel(task, &batch);
                         let ts = &self.tasks[task];
-                        (
-                            ts.xi.xi(b),
-                            ts.xi_true.xi(b),
-                            self.cfg.service.jitter,
-                            ts.node,
-                        )
+                        (ts.xi.xi_eff(rel), ts.xi_true.xi_eff(rel))
+                    } else {
+                        let ts = &self.tasks[task];
+                        (ts.xi.xi(b), ts.xi_true.xi(b))
+                    };
+                    let (jitter, node) = {
+                        let ts = &self.tasks[task];
+                        (self.cfg.service.jitter, ts.node)
                     };
                     if self.obs.enabled() {
                         let stage = self.tasks[task].stage;
@@ -1075,8 +1157,21 @@ impl<S: ObsSink> DesEngine<S> {
         // and drop gates all read this model, so they now track the
         // current machine.
         if self.online_xi {
+            // Under an active adaptation plane the observation is
+            // attributed at the batch's *effective* size (what the
+            // actual duration was drawn at), so refinement converges
+            // on the per-unit cost, not a rel-deflated copy of it.
+            let b_eff = if self.adapt_on {
+                self.batch_rel(task, &batch)
+            } else {
+                b as f64
+            };
             let ts = &mut self.tasks[task];
-            ts.xi.observe(b, actual);
+            if self.adapt_on {
+                ts.xi.observe_eff(b_eff, actual);
+            } else {
+                ts.xi.observe(b, actual);
+            }
             ts.batcher.retune_nob(&ts.xi);
             self.metrics.xi_observed();
             self.metrics.nob_retune();
@@ -1088,7 +1183,7 @@ impl<S: ObsSink> DesEngine<S> {
                     &TraceEvent::XiObserved {
                         stage,
                         task: task as u32,
-                        b_eff: b as f64,
+                        b_eff,
                         actual_us: actual,
                         alpha_us,
                         beta_us,
@@ -1174,6 +1269,7 @@ impl<S: ObsSink> DesEngine<S> {
                 sem: &self.cfg.semantics,
                 seed: self.cfg.seed,
                 feedback: &self.tasks[task].feedback,
+                adapt: &self.adapt,
             };
             match stage {
                 Stage::Va => self.va.step_sim(&mut staged, &mut ctx),
@@ -1778,6 +1874,24 @@ impl<S: ObsSink> DesEngine<S> {
             );
         }
 
+        // Adaptation plane: the sink is where deadline slack is
+        // observable, so the controller watches completions here and
+        // mints quality commands onto the feedback edge.
+        if self.adapt_on {
+            if let Some(cmd) = self.adapt_ctl.on_completion(
+                ev.header.camera,
+                latency,
+                self.now,
+            ) {
+                self.metrics.adapt_minted();
+                self.route_adaptation(
+                    cmd,
+                    ev.header.id,
+                    ev.header.camera,
+                );
+            }
+        }
+
         // Accept logic (§4.5.2): track the slowest event per CR batch;
         // when the batch completes, grow budgets if even the slowest
         // arrived eps_max early.
@@ -1844,6 +1958,100 @@ impl<S: ObsSink> DesEngine<S> {
                 },
             );
         }
+    }
+
+    /// Broadcast an adaptation command upstream on the feedback edge —
+    /// one [`Payload::Adaptation`] copy per VA/CR executor, mirroring
+    /// [`Self::route_refinement`]. The first copy to arrive applies at
+    /// [`Self::apply_adaptation`]; the rest discard as stale (which
+    /// exercises the stale counter on every real command).
+    fn route_adaptation(
+        &mut self,
+        cmd: AdaptationCommand,
+        trigger: u64,
+        camera: usize,
+    ) {
+        let env = FeedbackEnvelope::Adaptation(cmd);
+        let lat = self
+            .net
+            .transfer_estimate(self.net.meta_bytes, self.now);
+        for task in 0..self.tasks.len() {
+            if !matches!(self.tasks[task].stage, Stage::Va | Stage::Cr)
+            {
+                continue;
+            }
+            self.push(
+                self.now + lat,
+                Ev::Arrive {
+                    task,
+                    ev: env.into_event(trigger, camera, self.now),
+                    batch: None,
+                },
+            );
+        }
+    }
+
+    /// The engine's single application point for adaptation commands —
+    /// the only call site of [`AdaptationState::apply`] in this file.
+    fn apply_adaptation(&mut self, cmd: AdaptationCommand) {
+        if self.adapt.apply(&cmd) {
+            self.metrics.adapt_applied();
+            self.metrics
+                .set_cameras_downshifted(self.adapt.downshifted());
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::Adaptation {
+                        camera: cmd.camera as u32,
+                        seq: cmd.seq,
+                        level: cmd.level as u32,
+                        variant: cmd.variant.profile().artifact,
+                    },
+                );
+            }
+        } else {
+            self.metrics.adapt_stale();
+        }
+    }
+
+    /// App-nominal analytics variant for an executor stage.
+    fn nominal_of(&self, stage: Stage) -> ModelVariant {
+        match stage {
+            Stage::Cr => self.stage_nominal[1],
+            _ => self.stage_nominal[0],
+        }
+    }
+
+    /// Effective batch size under the adaptation plane: Σ of per-event
+    /// relative costs. At the identity state every term is exactly
+    /// `1.0`, so the sum is exactly `b`.
+    fn batch_rel(
+        &self,
+        task: usize,
+        batch: &[QueuedEvent<Event>],
+    ) -> f64 {
+        let nominal = self.nominal_of(self.tasks[task].stage);
+        batch
+            .iter()
+            .map(|qe| {
+                self.adapt.rel(qe.item.header.camera, nominal)
+            })
+            .sum()
+    }
+
+    /// ξ estimate for a prospective batch: the exact integer path when
+    /// the adaptation plane is inert, the effective-size path
+    /// otherwise (bit-identical at the identity ladder, by the
+    /// whole-size ξ_eff property).
+    fn batch_xi(
+        &self,
+        task: usize,
+        batch: &[QueuedEvent<Event>],
+    ) -> Micros {
+        if !self.adapt_on {
+            return self.tasks[task].xi.xi(batch.len());
+        }
+        self.tasks[task].xi.xi_eff(self.batch_rel(task, batch))
     }
 
     fn send_accepts(&mut self, ev: &Event, eps: Micros, sum_exec: Micros) {

@@ -25,9 +25,10 @@ use anyhow::Result;
 use crate::apps::AppDefinition;
 use crate::config::{BatchingKind, ExperimentConfig, RecoveryConfig};
 use crate::dataflow::{
-    AnalyticsBlock, Event, FeedbackRouter, FeedbackState, FilterControl,
-    Header, Partitioner, Payload, QueryFusion, ScoreParams, Stage,
-    TlEnv, TrackingLogic, SINGLE_QUERY,
+    AnalyticsBlock, Event, FeedbackEnvelope, FeedbackRouter,
+    FeedbackState, FilterControl, Header, Partitioner, Payload,
+    QueryFusion, ScoreParams, Stage, TlEnv, TrackingLogic,
+    SINGLE_QUERY,
 };
 use crate::metrics::{Ledger, Summary};
 use crate::obs::{
@@ -40,6 +41,7 @@ use crate::sim::{
     backoff_delay, identity_image, EntityWalk, GroundTruth,
     IdentityGallery,
 };
+use crate::tuning::adapt::{AdaptController, AdaptationState};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
     drop_at_exec, drop_at_queue, Batcher, BatcherPoll, BudgetManager,
@@ -88,16 +90,30 @@ impl ModelService {
         artifacts_dir: std::path::PathBuf,
         va_variant: &str,
         cr_variant: &str,
+        extra_variants: &[String],
         buckets: Vec<usize>,
     ) -> Result<(Self, ModelServiceInit)> {
         let (tx, rx) = mpsc::channel::<ModelReq>();
         let (init_tx, init_rx) = mpsc::channel();
         let va_v = va_variant.to_string();
         let cr_v = cr_variant.to_string();
+        let extra: Vec<String> = extra_variants.to_vec();
         std::thread::spawn(move || {
             let setup = || -> Result<(ModelPool, Vec<f32>, XiModel, XiModel)> {
+                // Nominal variants plus any adaptation downshift
+                // targets — loaded up front so a runtime command never
+                // hits a missing-artifact lookup mid-serve.
                 let mut variants: Vec<&str> = vec![&va_v, &cr_v];
-                variants.dedup();
+                variants.extend(extra.iter().map(|s| s.as_str()));
+                let mut seen: Vec<&str> = Vec::new();
+                variants.retain(|v| {
+                    if seen.contains(v) {
+                        false
+                    } else {
+                        seen.push(v);
+                        true
+                    }
+                });
                 let pool = ModelPool::load(
                     &artifacts_dir,
                     &variants,
@@ -262,6 +278,84 @@ fn now_us(start: Instant) -> Micros {
     start.elapsed().as_micros() as Micros
 }
 
+/// Free-list capacity: bounds idle memory at
+/// `POOL_CAP × IMG_DIM × 4` bytes; reclaims beyond it just drop.
+const POOL_CAP: usize = 1024;
+
+/// Free-list pool for the per-frame pixel buffers flowing
+/// feed → VA → CR as [`Payload::FrameData`]. The feed loop takes
+/// cleared buffers here instead of allocating `IMG_DIM` floats per
+/// admitted frame; the CR worker — the pixels' last reader — hands
+/// each buffer back once the app block has replaced the payload with
+/// its detection verdict.
+///
+/// Reclaim is by [`Arc::try_unwrap`]: a frame still shared elsewhere
+/// (a custom block that kept the payload alive, a tee'd consumer)
+/// simply falls through and is dropped — never copied, never
+/// corrupted — and the next `get` falls back to a fresh allocation.
+pub struct FramePool {
+    free: Mutex<Vec<Vec<f32>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl FramePool {
+    pub fn new() -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Take a cleared buffer — pooled if one is parked, freshly
+    /// allocated otherwise.
+    pub fn get(&self) -> Vec<f32> {
+        match self.free.lock().unwrap().pop() {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Park a frame buffer if this `Arc` is its sole holder.
+    pub fn reclaim(&self, frame: Arc<Vec<f32>>) {
+        if let Ok(buf) = Arc::try_unwrap(frame) {
+            let mut free = self.free.lock().unwrap();
+            if free.len() < POOL_CAP {
+                free.push(buf);
+            }
+        }
+    }
+
+    /// Buffers served from the free list (reuse count).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Buffers served by fresh allocation.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently parked in the free list.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl Default for FramePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// A VA/CR worker: batcher + budgets + real model execution, with the
 /// app's analytics block owning the score-to-payload transformation.
 /// The model it runs is the *block's* typed variant
@@ -287,6 +381,10 @@ struct Worker {
     /// Reusable post-exec staging buffer (events between bookkeeping
     /// and the block's score transformation).
     staged: Vec<Event>,
+    /// Frame `Arc`s remembered across the block call so CR can hand
+    /// the pixel buffers back to [`Shared::frames`] (reused, not
+    /// reallocated).
+    frame_scratch: Vec<Arc<Vec<f32>>>,
 }
 
 struct Shared {
@@ -306,6 +404,17 @@ struct Shared {
     obs: Arc<dyn ObsSink>,
     /// Always-on counters/gauges/histograms.
     metrics: MetricsRegistry,
+    /// Free-list pool for `Payload::FrameData` pixel buffers
+    /// (feed loop gets, CR workers reclaim).
+    frames: FramePool,
+    /// Adaptation plane: the engine-global resolution/variant state.
+    /// Every `Payload::Adaptation` delivery lands in the single
+    /// application point inside [`handle_msg`] and nowhere else.
+    adapt: Mutex<AdaptationState>,
+    /// Hoisted [`AdaptController::active`] — when false, every
+    /// adaptation hook on this path is a single untaken branch and the
+    /// pre-adaptation expressions run unchanged.
+    adapt_on: bool,
 }
 
 /// The live serving engine. Runs one [`AppDefinition`]: the app's
@@ -385,10 +494,32 @@ impl LiveEngine {
         // mid-serve.
         let va_variant = self.app.va_variant.artifact_name();
         let cr_variant = self.app.cr_variant.artifact_name();
+        // Adaptation plane: the sink-side controller mints
+        // resolution/variant commands from completion slack; commands
+        // ride the feedback edge upstream. Downshift artifacts are
+        // preloaded so a runtime command never misses a model.
+        let adapt_ctl = AdaptController::new(
+            &cfg.adaptation,
+            cfg.num_cameras,
+            cfg.gamma(),
+            self.app.cr_variant,
+        );
+        let adapt_on = adapt_ctl.active();
+        let mut extra_variants: Vec<String> = Vec::new();
+        if adapt_on {
+            for v in [self.app.va_variant, self.app.cr_variant] {
+                let d = v.downshifted();
+                if d != v {
+                    extra_variants
+                        .push(d.artifact_name().to_string());
+                }
+            }
+        }
         let (service, init) = ModelService::spawn(
             self.artifacts_dir.clone(),
             va_variant,
             cr_variant,
+            &extra_variants,
             buckets,
         )?;
         let (va_xi, cr_xi) = (init.va_xi, init.cr_xi);
@@ -406,6 +537,12 @@ impl LiveEngine {
             start: Instant::now(),
             obs: Arc::clone(&self.obs),
             metrics: MetricsRegistry::new(),
+            frames: FramePool::new(),
+            adapt: Mutex::new(AdaptationState::new(
+                &cfg.adaptation,
+                cfg.num_cameras,
+            )),
+            adapt_on,
         });
 
         // ---- channel topology -------------------------------------------
@@ -560,6 +697,7 @@ impl LiveEngine {
             let bootstrap = Arc::clone(service.query_arc());
             std::thread::spawn(move || {
                 let mut qf = qf;
+                let mut adapt_ctl = adapt_ctl;
                 let mut router = FeedbackRouter::new();
                 loop {
                     match uv_rx.recv_timeout(Duration::from_millis(200))
@@ -601,6 +739,42 @@ impl LiveEngine {
                                         detected,
                                     },
                                 );
+                            }
+                            // Adaptation plane: the sink observes
+                            // every completion's deadline slack and
+                            // mints resolution/variant commands,
+                            // routed upstream on the same seq-stamped
+                            // feedback edge as QF refinements. One
+                            // copy per VA/CR worker; the first
+                            // arrival applies to the engine-global
+                            // state, the rest discard as stale.
+                            if sh.adapt_on {
+                                if let Some(cmd) = adapt_ctl
+                                    .on_completion(
+                                        ev.header.camera,
+                                        latency,
+                                        t,
+                                    )
+                                {
+                                    sh.metrics.adapt_minted();
+                                    let upd =
+                                        FeedbackEnvelope::Adaptation(
+                                            cmd,
+                                        )
+                                        .into_event(
+                                            ev.header.id,
+                                            ev.header.camera,
+                                            t,
+                                        );
+                                    for tx in va_sig
+                                        .iter()
+                                        .chain(cr_sig.iter())
+                                    {
+                                        let _ = tx.send(Msg::Ev(
+                                            upd.clone(),
+                                        ));
+                                    }
+                                }
                             }
                             if detected && qf.on_detection(&ev) {
                                 sh.fusion_updates
@@ -676,10 +850,19 @@ impl LiveEngine {
         let period =
             Duration::from_micros((1e6 / cfg.fps) as u64);
         let mut next_fire = Instant::now();
+        // Adaptation plane: per-camera frame strides, snapshotted once
+        // per tick (commands are rare; the hot loop stays lock-free).
+        let mut strides: Vec<u64> = vec![1; cfg.num_cameras];
         while shared.start.elapsed()
             < Duration::from_secs_f64(cfg.duration_secs)
         {
             let iter_sp = span_begin(&*shared.obs);
+            if shared.adapt_on {
+                let ad = shared.adapt.lock().unwrap();
+                for (cam, s) in strides.iter_mut().enumerate() {
+                    *s = ad.stride(cam);
+                }
+            }
             for cam in 0..cfg.num_cameras {
                 let t = now_us(shared.start);
                 let active =
@@ -689,6 +872,15 @@ impl LiveEngine {
                 // increasing frame numbers.
                 let fno = frame_no[cam];
                 frame_no[cam] += 1;
+                // Commanded frame-rate decimation: FC never sees
+                // strided-out ticks (mirrors the DES engines'
+                // frame-tick gate).
+                if shared.adapt_on
+                    && strides[cam] > 1
+                    && fno % strides[cam] != 0
+                {
+                    continue;
+                }
                 if !fc.admit(SINGLE_QUERY, cam, fno, t, active) {
                     continue;
                 }
@@ -700,7 +892,11 @@ impl LiveEngine {
                 } else {
                     1_000 + ((cam as u64) * 131 + fno) % 5_000
                 };
-                let img = gallery.image(ident, fno, 0.25);
+                // Pixel buffers come from the frame pool (CR workers
+                // reclaim them once scored) — steady-state serving
+                // reuses buffers instead of allocating one per frame.
+                let mut img = shared.frames.get();
+                gallery.image_into(ident, fno, 0.25, &mut img);
                 let header = Header::new(next_id, cam, fno, t);
                 shared
                     .ledger
@@ -804,6 +1000,7 @@ impl LiveEngine {
             feedback: FeedbackState::new(),
             img_scratch: Vec::new(),
             staged: Vec::new(),
+            frame_scratch: Vec::new(),
         }
     }
 }
@@ -918,12 +1115,60 @@ fn handle_msg(w: &mut Worker, msg: Msg, sh: &Arc<Shared>) -> bool {
                 }
                 return true;
             }
+            // Adaptation commands ride the same feedback edge and are
+            // consumed here — this engine's single application point —
+            // never batched, budgeted or dropped. The state is
+            // engine-global (commands steer cameras, which every
+            // worker shares), so of the per-worker broadcast copies
+            // the first arrival applies and the rest discard as
+            // stale.
+            if let Payload::Adaptation(cmd) = &ev.payload {
+                let cmd = *cmd;
+                let now = now_us(sh.start);
+                let (applied, down) = {
+                    let mut ad = sh.adapt.lock().unwrap();
+                    let ok = ad.apply(&cmd);
+                    (ok, ad.downshifted())
+                };
+                if applied {
+                    sh.metrics.adapt_applied();
+                    sh.metrics.set_cameras_downshifted(down);
+                    if sh.obs.enabled() {
+                        sh.obs.emit(
+                            now,
+                            &TraceEvent::Adaptation {
+                                camera: cmd.camera as u32,
+                                seq: cmd.seq,
+                                level: cmd.level as u32,
+                                variant: cmd
+                                    .variant
+                                    .profile()
+                                    .artifact,
+                            },
+                        );
+                    }
+                } else {
+                    sh.metrics.adapt_stale();
+                }
+                return true;
+            }
             let now = now_us(sh.start);
             let u = now - ev.header.src_arrival;
             let exempt = ev.header.avoid_drop || ev.header.probe;
             if sh.drops_enabled {
                 let budget = w.budget.budget_max();
-                let xi1 = w.xi.xi(1);
+                // Gate-1 prices the event at the commanded
+                // (resolution, variant) cost for its camera; with
+                // adaptation off this is exactly ξ(1).
+                let xi1 = if sh.adapt_on {
+                    let rel = sh.adapt.lock().unwrap().rel(
+                        ev.header.camera,
+                        w.block.variant(),
+                    );
+                    w.xi.xi_eff(rel)
+                } else {
+                    w.xi.xi(1)
+                };
                 if budget < BUDGET_INF
                     && drop_at_queue(exempt, u, xi1, budget)
                 {
@@ -1050,6 +1295,23 @@ fn exec_batch(
     if batch.is_empty() {
         return;
     }
+    // Adaptation plane: execute the commanded (possibly downshifted)
+    // variant for this batch's camera — `ModelService::spawn`
+    // preloaded the downshift artifacts, so the lookup cannot miss
+    // mid-serve. With adaptation off the block's nominal artifact runs
+    // unchanged.
+    let variant: &str = if sh.adapt_on {
+        sh.adapt
+            .lock()
+            .unwrap()
+            .variant_for(
+                batch[0].item.header.camera,
+                w.block.variant(),
+            )
+            .artifact_name()
+    } else {
+        variant
+    };
     let b = batch.len();
     let queue_sum: Micros =
         batch.iter().map(|qe| (start - qe.arrival).max(0)).sum();
@@ -1198,7 +1460,9 @@ fn exec_batch(
     // virtual call hands the whole batch + its model scores to the
     // app's block for the payload transformation.
     let mut staged = std::mem::take(&mut w.staged);
+    let mut recycle = std::mem::take(&mut w.frame_scratch);
     staged.clear();
+    recycle.clear();
     for qe in batch {
         let mut ev = qe.item;
         let q = start - qe.arrival;
@@ -1214,6 +1478,14 @@ fn exec_batch(
         );
         ev.header.sum_exec += xi_est;
         ev.header.sum_queue += q;
+        // CR is the pixels' last reader: remember each frame `Arc` so
+        // the buffer can go back to the pool once the block has
+        // replaced the payload with its verdict.
+        if matches!(w.stage, Stage::Cr) {
+            if let Payload::FrameData(img) = &ev.payload {
+                recycle.push(Arc::clone(img));
+            }
+        }
         staged.push(ev);
     }
     let sp = span_begin(&*sh.obs);
@@ -1225,8 +1497,57 @@ fn exec_batch(
         },
     );
     span_end(&*sh.obs, Scope::Scoring, sp);
+    // The stock CR blocks replaced every payload above, so each
+    // remembered frame `Arc` is now uniquely held here and its buffer
+    // is poolable; a block that kept the payload alive makes
+    // `reclaim`'s `try_unwrap` fail closed (buffer dropped, never
+    // copied or corrupted).
+    for img in recycle.drain(..) {
+        sh.frames.reclaim(img);
+    }
+    w.frame_scratch = recycle;
     for ev in staged.drain(..) {
         forward(ev);
     }
     w.staged = staged;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_pool_reuses_reclaimed_buffers() {
+        let pool = FramePool::new();
+        let mut a = pool.get();
+        assert_eq!(pool.misses(), 1);
+        assert_eq!(pool.hits(), 0);
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        pool.reclaim(Arc::new(a));
+        assert_eq!(pool.idle(), 1);
+
+        let b = pool.get();
+        assert_eq!(pool.hits(), 1, "second get must reuse the buffer");
+        assert_eq!(pool.misses(), 1);
+        assert!(b.is_empty(), "pooled buffers come back cleared");
+        assert!(b.capacity() >= 3, "reuse keeps the allocation");
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn frame_pool_drops_still_shared_frames() {
+        let pool = FramePool::new();
+        let frame = Arc::new(vec![1.0f32; 8]);
+        let held = Arc::clone(&frame);
+        pool.reclaim(frame);
+        assert_eq!(
+            pool.idle(),
+            0,
+            "a shared frame must not be pooled"
+        );
+        assert_eq!(held.len(), 8);
+        // Sole-holder reclaim pools it.
+        pool.reclaim(held);
+        assert_eq!(pool.idle(), 1);
+    }
 }

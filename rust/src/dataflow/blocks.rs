@@ -50,6 +50,57 @@ pub enum ModelVariant {
     Qf,
 }
 
+/// Everything the platform knows about one model variant, in one row:
+/// artifact name, relative ξ cost and relative accuracy. **The single
+/// source of truth** — [`ModelVariant::from_artifact`], the stock
+/// blocks' default costs and the adaptation plane's variant-swap
+/// pricing all read this table, so a variant added here cannot
+/// silently miss its ξ multiplier anywhere (and a variant added to
+/// the enum without a row is a *panic* at first use, not a default
+/// 1.0 — see [`ModelVariant::profile`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VariantProfile {
+    pub variant: ModelVariant,
+    /// Name of the artifact in `artifacts/manifest.json`.
+    pub artifact: &'static str,
+    /// ξ multiplier relative to the stage's calibration baseline
+    /// (App 1: HoG-class VA, OpenReid-class small CR).
+    pub xi: f64,
+    /// Relative accuracy (detection-rate multiplier vs the stage's
+    /// best variant; ≤ 1.0).
+    pub accuracy: f64,
+}
+
+/// The typed variant table, in manifest order.
+pub const VARIANT_TABLE: &[VariantProfile] = &[
+    VariantProfile {
+        variant: ModelVariant::Va,
+        artifact: "va",
+        xi: 1.0,
+        accuracy: 1.0,
+    },
+    VariantProfile {
+        variant: ModelVariant::CrSmall,
+        artifact: "cr_small",
+        xi: 1.0,
+        accuracy: 0.95,
+    },
+    VariantProfile {
+        variant: ModelVariant::CrLarge,
+        artifact: "cr_large",
+        // The deeper CR DNN takes ~63% longer per frame (§5.3) but
+        // sets the accuracy reference for the CR stage.
+        xi: 1.63,
+        accuracy: 1.0,
+    },
+    VariantProfile {
+        variant: ModelVariant::Qf,
+        artifact: "qf",
+        xi: 1.0,
+        accuracy: 1.0,
+    },
+];
+
 impl ModelVariant {
     /// All known variants, in manifest order.
     pub const ALL: [ModelVariant; 4] = [
@@ -59,33 +110,53 @@ impl ModelVariant {
         ModelVariant::Qf,
     ];
 
+    /// This variant's [`VariantProfile`] row. Panics — loudly, at
+    /// composition time — if a variant was added to the enum without a
+    /// table row; a missing ξ multiplier must never decay to 1.0.
+    pub fn profile(self) -> &'static VariantProfile {
+        VARIANT_TABLE
+            .iter()
+            .find(|p| p.variant == self)
+            .unwrap_or_else(|| {
+                panic!(
+                    "model variant {self:?} has no VARIANT_TABLE row; \
+                     add its artifact/cost/accuracy profile"
+                )
+            })
+    }
+
     /// Name of the artifact in `artifacts/manifest.json`.
     pub fn artifact_name(self) -> &'static str {
-        match self {
-            ModelVariant::Va => "va",
-            ModelVariant::CrSmall => "cr_small",
-            ModelVariant::CrLarge => "cr_large",
-            ModelVariant::Qf => "qf",
-        }
+        self.profile().artifact
     }
 
     /// Resolve an artifact name; errors name the valid set so a typo
     /// fails loudly at composition time rather than as a missing-file
     /// lookup deep inside the PJRT runtime.
     pub fn from_artifact(name: &str) -> Result<Self, String> {
-        Self::ALL
-            .into_iter()
-            .find(|v| v.artifact_name() == name)
+        VARIANT_TABLE
+            .iter()
+            .find(|p| p.artifact == name)
+            .map(|p| p.variant)
             .ok_or_else(|| {
                 format!(
                     "unknown model variant {name:?}; known variants: {}",
-                    Self::ALL
-                        .into_iter()
-                        .map(|v| v.artifact_name())
+                    VARIANT_TABLE
+                        .iter()
+                        .map(|p| p.artifact)
                         .collect::<Vec<_>>()
                         .join(", ")
                 )
             })
+    }
+
+    /// The cheaper sibling the adaptation plane downshifts to (the
+    /// identity for variants with no lighter alternative).
+    pub fn downshifted(self) -> ModelVariant {
+        match self {
+            ModelVariant::CrLarge => ModelVariant::CrSmall,
+            other => other,
+        }
     }
 }
 
@@ -123,6 +194,21 @@ pub struct SimCtx<'a> {
     /// see `None`, and consulting it never draws from `rng`, so
     /// non-fusing runs stay bit-identical.
     pub feedback: &'a FeedbackState,
+    /// The engine's adaptation plane (the single shared application
+    /// point for [`crate::tuning::adapt::AdaptationCommand`]s). Blocks
+    /// consult [`SimCtx::accuracy`] per event; at the identity ladder
+    /// it returns exactly `1.0`, so `p * acc` is bit-exact and
+    /// adaptation-unaware runs keep their RNG streams.
+    pub adapt: &'a crate::tuning::adapt::AdaptationState,
+}
+
+impl SimCtx<'_> {
+    /// Accuracy multiplier the adaptation plane commands for `camera`
+    /// at a stage whose nominal model is `nominal` (exactly `1.0`
+    /// under the identity ladder).
+    pub fn accuracy(&self, camera: usize, nominal: ModelVariant) -> f64 {
+        self.adapt.accuracy(camera, nominal)
+    }
 }
 
 /// Platform parameters for the live scoring path.
@@ -366,6 +452,40 @@ mod tests {
         assert!(err.contains("cr_sma11"), "{err}");
         assert!(err.contains("cr_small"), "lists valid names: {err}");
         assert!(err.contains("cr_large"), "lists valid names: {err}");
+    }
+
+    #[test]
+    fn variant_table_covers_every_variant_exactly_once() {
+        assert_eq!(VARIANT_TABLE.len(), ModelVariant::ALL.len());
+        for v in ModelVariant::ALL {
+            // `profile` panics rather than defaulting a missing row —
+            // this is the "error, not default-1.0" guarantee.
+            let p = v.profile();
+            assert_eq!(p.variant, v);
+            assert!(p.xi > 0.0 && p.xi.is_finite());
+            assert!(p.accuracy > 0.0 && p.accuracy <= 1.0);
+        }
+        // The one non-unit ξ row is the deep CR DNN (§5.3).
+        assert!(
+            (ModelVariant::CrLarge.profile().xi - 1.63).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn downshift_stays_within_the_stage() {
+        assert_eq!(
+            ModelVariant::CrLarge.downshifted(),
+            ModelVariant::CrSmall
+        );
+        // Variants with no lighter sibling downshift to themselves.
+        for v in [ModelVariant::Va, ModelVariant::CrSmall, ModelVariant::Qf]
+        {
+            assert_eq!(v.downshifted(), v);
+        }
+        // The downshift target is always cheaper or equal.
+        for v in ModelVariant::ALL {
+            assert!(v.downshifted().profile().xi <= v.profile().xi);
+        }
     }
 
     #[test]

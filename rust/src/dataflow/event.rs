@@ -107,6 +107,13 @@ pub enum Payload {
     /// through [`crate::dataflow::FeedbackState`] and discard stale
     /// deliveries.
     QueryUpdate(Arc<Vec<f32>>),
+    /// Sink-minted adaptation command riding the same feedback edge
+    /// (the per-camera command seq on [`Header::update_seq`]). Like
+    /// `QueryUpdate`, it is consumed at the executor — never ledgered,
+    /// batched or dropped — and applied exactly once per engine via
+    /// [`crate::tuning::adapt::AdaptationState::apply`] (duplicate
+    /// broadcast copies discard as stale).
+    Adaptation(crate::tuning::adapt::AdaptationCommand),
 }
 
 impl Payload {

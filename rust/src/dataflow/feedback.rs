@@ -33,6 +33,7 @@
 use std::sync::Arc;
 
 use crate::dataflow::{Event, EventId, Header, Payload, QueryId};
+use crate::tuning::adapt::AdaptationCommand;
 use crate::util::{FastMap, Micros};
 
 /// The refinement model shared by every simulated scorer: once a query
@@ -80,6 +81,62 @@ impl QueryRefinement {
         Event {
             header,
             payload: Payload::QueryUpdate(Arc::clone(&self.embedding)),
+        }
+    }
+}
+
+/// The refinement-or-adaptation envelope: everything the sink mints
+/// onto the upstream feedback edge. Both kinds carry their sequence
+/// number on [`Header::update_seq`] (1-based; 0 = "not feedback"),
+/// both are broadcast — one copy per executor, each after a
+/// control-message network delay — and both are consumed at the
+/// receiving executor with the same exactly-once, stale-discard rule:
+/// refinements through [`FeedbackState::apply`] (per executor, keyed
+/// by query), adaptation commands through the engine's single
+/// [`crate::tuning::adapt::AdaptationState::apply`] (keyed by camera,
+/// so the first broadcast copy to arrive applies and the rest discard
+/// deterministically).
+#[derive(Debug, Clone)]
+pub enum FeedbackEnvelope {
+    /// A fused query embedding (QF → VA/CR).
+    Refinement(QueryRefinement),
+    /// A quality operating-point command (sink → FC/VA/CR).
+    Adaptation(AdaptationCommand),
+}
+
+impl FeedbackEnvelope {
+    /// The envelope's sequence number (per query for refinements, per
+    /// camera for adaptation commands).
+    pub fn seq(&self) -> u32 {
+        match self {
+            FeedbackEnvelope::Refinement(r) => r.seq,
+            FeedbackEnvelope::Adaptation(c) => c.seq,
+        }
+    }
+
+    /// Wrap in a routable event. `trigger`/`camera` identify the
+    /// completion that minted this envelope (trace provenance only);
+    /// an adaptation command's *target* camera comes from the command
+    /// itself.
+    pub fn into_event(
+        &self,
+        trigger: EventId,
+        camera: usize,
+        now: Micros,
+    ) -> Event {
+        match self {
+            FeedbackEnvelope::Refinement(r) => {
+                r.into_event(trigger, camera, now)
+            }
+            FeedbackEnvelope::Adaptation(cmd) => {
+                let mut header =
+                    Header::new(trigger, cmd.camera, 0, now);
+                header.update_seq = cmd.seq;
+                Event {
+                    header,
+                    payload: Payload::Adaptation(*cmd),
+                }
+            }
         }
     }
 }
@@ -220,6 +277,36 @@ mod tests {
         st.forget(7);
         assert_eq!(st.refined(7), None);
         assert_eq!(st.last_seq(7), 0);
+    }
+
+    #[test]
+    fn adaptation_envelope_rides_the_same_edge() {
+        use crate::dataflow::ModelVariant;
+        let cmd = AdaptationCommand {
+            camera: 9,
+            level: 2,
+            variant: ModelVariant::CrSmall,
+            seq: 5,
+        };
+        let env = FeedbackEnvelope::Adaptation(cmd);
+        assert_eq!(env.seq(), 5);
+        // The trigger camera (3) is provenance; the event targets the
+        // command's own camera.
+        let ev = env.into_event(77, 3, 2_000_000);
+        assert_eq!(ev.header.camera, 9);
+        assert_eq!(ev.header.update_seq, 5);
+        assert_eq!(ev.header.id, 77);
+        match ev.payload {
+            Payload::Adaptation(c) => assert_eq!(c, cmd),
+            other => panic!("{other:?}"),
+        }
+        // A refinement through the envelope matches the direct path.
+        let mut r = FeedbackRouter::new();
+        let rf = r.refine(4, Arc::new(vec![0.5]));
+        let via_env = FeedbackEnvelope::Refinement(rf.clone())
+            .into_event(99, 12, 1_000);
+        let direct = rf.into_event(99, 12, 1_000);
+        assert_eq!(via_env.header, direct.header);
     }
 
     #[test]

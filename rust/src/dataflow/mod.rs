@@ -36,14 +36,14 @@ mod stage;
 pub use blocks::{
     AnalyticsBlock, ContentionResolver, FilterControl, ModelVariant,
     QueryFusion, ScoreParams, SimCtx, TlEnv, TlFactory, TrackingLogic,
-    TruthSource, VideoAnalytics,
+    TruthSource, VariantProfile, VideoAnalytics, VARIANT_TABLE,
 };
 pub use event::{
     Event, EventId, Header, Payload, QueryId, SINGLE_QUERY,
 };
 pub use feedback::{
-    boosted_rates, boosted_residual, FeedbackRouter, FeedbackState,
-    QueryRefinement,
+    boosted_rates, boosted_residual, FeedbackEnvelope, FeedbackRouter,
+    FeedbackState, QueryRefinement,
 };
 pub use partition::Partitioner;
 pub use stage::Stage;

@@ -145,6 +145,8 @@ pub struct TraceCheck {
     pub fault_retries: u64,
     /// Cross-shard handoff envelopes (`cross_shard` lines).
     pub cross_shard: u64,
+    /// Adaptation commands applied (`adaptation` lines).
+    pub adaptations: u64,
     /// Line count per `ev` kind.
     pub kinds: BTreeMap<String, u64>,
     /// `(query, event) -> (generated count, terminal count)` where a
@@ -369,6 +371,13 @@ pub fn validate_trace(text: &str) -> Result<TraceCheck, String> {
                 num(&j, "seq").map_err(err)?;
                 c.cross_shard += 1;
             }
+            "adaptation" => {
+                num(&j, "camera").map_err(err)?;
+                num(&j, "seq").map_err(err)?;
+                num(&j, "level").map_err(err)?;
+                st(&j, "variant").map_err(err)?;
+                c.adaptations += 1;
+            }
             other => {
                 return Err(format!(
                     "line {lineno}: unknown event kind `{other}`"
@@ -528,6 +537,37 @@ mod tests {
         );
         let e = validate_trace(&missing).unwrap_err();
         assert!(e.contains("to_shard"), "{e}");
+    }
+
+    #[test]
+    fn adaptation_is_counted_not_terminal() {
+        let s = JsonlSink::in_memory();
+        s.emit(
+            0,
+            &TraceEvent::Generated { event: 5, query: 0, camera: 2 },
+        );
+        s.emit(
+            3,
+            &TraceEvent::Adaptation {
+                camera: 2,
+                seq: 1,
+                level: 2,
+                variant: "cr_small",
+            },
+        );
+        let check = validate_trace(&s.contents().unwrap()).unwrap();
+        assert_eq!(check.adaptations, 1);
+        assert_eq!(check.kinds["adaptation"], 1);
+        // A command is control plane, not a terminal: the data event
+        // stays in flight and conservation is untouched.
+        assert_eq!(check.unterminated(), 1);
+        assert!(check.violations().is_empty());
+        // Malformed adaptation lines are rejected.
+        let missing = format!(
+            "{{\"schema\":\"{TRACE_SCHEMA}\"}}\n{{\"t_us\":1,\"ev\":\"adaptation\",\"camera\":2,\"seq\":1,\"level\":0}}\n"
+        );
+        let e = validate_trace(&missing).unwrap_err();
+        assert!(e.contains("variant"), "{e}");
     }
 
     #[test]

@@ -51,7 +51,10 @@ use crate::util::{Json, Micros};
 /// v3: the `cross_shard` kind — sharded-DES boundary handoffs (not a
 /// terminal; conservation arithmetic is unchanged, but a v2 validator
 /// would reject the unknown kind).
-pub const TRACE_SCHEMA: &str = "anveshak-trace-v3";
+/// v4: the `adaptation` kind — accuracy–latency commands applied on
+/// the feedback edge (not a terminal; conservation unchanged, but a
+/// v3 validator would reject the unknown kind).
+pub const TRACE_SCHEMA: &str = "anveshak-trace-v4";
 
 /// Which of the three §4.3 drop points produced a verdict (plus the
 /// teardown pseudo-gate for events drained without a budget decision).
@@ -267,6 +270,17 @@ pub enum TraceEvent {
     /// `seq` is the global merge sequence number of the handed-off
     /// event.
     CrossShard { from_shard: u32, to_shard: u32, seq: u64 },
+    /// An [`crate::tuning::adapt::AdaptationCommand`] was *applied* at
+    /// its single application point: `camera` now runs resolution rung
+    /// `level` with model `variant`. Stale broadcast copies emit
+    /// nothing (the stale counter in the metrics registry tracks
+    /// them), so one applied line per minted command.
+    Adaptation {
+        camera: u32,
+        seq: u32,
+        level: u32,
+        variant: &'static str,
+    },
 }
 
 impl TraceEvent {
@@ -292,6 +306,7 @@ impl TraceEvent {
             TraceEvent::FaultRetry { .. } => "fault_retry",
             TraceEvent::Redispatch { .. } => "redispatch",
             TraceEvent::CrossShard { .. } => "cross_shard",
+            TraceEvent::Adaptation { .. } => "adaptation",
         }
     }
 
@@ -437,6 +452,12 @@ impl TraceEvent {
                 put("from_shard", (*from_shard as i64).into());
                 put("to_shard", (*to_shard as i64).into());
                 put("seq", (*seq as i64).into());
+            }
+            TraceEvent::Adaptation { camera, seq, level, variant } => {
+                put("camera", (*camera as i64).into());
+                put("seq", (*seq as i64).into());
+                put("level", (*level as i64).into());
+                put("variant", (*variant).into());
             }
         }
         Json::Obj(m)

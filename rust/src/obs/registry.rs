@@ -93,11 +93,17 @@ struct Inner {
     /// Cross-shard handoff envelopes issued by the sharded DES (0 at
     /// K=1).
     cross_shard_msgs: AtomicU64,
+    // Adaptation-plane counters (all zero with the identity ladder).
+    adapt_minted: AtomicU64,
+    adapt_applied: AtomicU64,
+    adapt_stale: AtomicU64,
     active_cameras: AtomicI64,
     active_queries: AtomicI64,
     nodes_down: AtomicI64,
     /// Shard count of the engine publishing to this registry.
     shards: AtomicI64,
+    /// Cameras currently below their native resolution rung.
+    cameras_downshifted: AtomicI64,
     /// ξ(1) in µs per (app, stage) — the per-app pricing gauges; 0
     /// means "never priced".
     xi_app_us: [[AtomicI64; EXEC_STAGES]; APPS],
@@ -239,6 +245,25 @@ impl MetricsRegistry {
         self.inner.cross_shard_msgs.fetch_add(1, Relaxed);
     }
 
+    // ---- adaptation plane ------------------------------------------------
+
+    /// The sink-side controller minted an `AdaptationCommand`.
+    pub fn adapt_minted(&self) {
+        self.inner.adapt_minted.fetch_add(1, Relaxed);
+    }
+
+    /// A command's first broadcast copy applied at the engine's
+    /// application point.
+    pub fn adapt_applied(&self) {
+        self.inner.adapt_applied.fetch_add(1, Relaxed);
+    }
+
+    /// A later broadcast copy (or out-of-order delivery) was discarded
+    /// as stale.
+    pub fn adapt_stale(&self) {
+        self.inner.adapt_stale.fetch_add(1, Relaxed);
+    }
+
     // ---- gauges ----------------------------------------------------------
 
     pub fn set_nodes_down(&self, n: usize) {
@@ -248,6 +273,11 @@ impl MetricsRegistry {
     /// Publish the engine's shard count K (1 = unsharded).
     pub fn set_shards(&self, k: usize) {
         self.inner.shards.store(k as i64, Relaxed);
+    }
+
+    /// Publish how many cameras sit below their native resolution rung.
+    pub fn set_cameras_downshifted(&self, n: usize) {
+        self.inner.cameras_downshifted.store(n as i64, Relaxed);
     }
 
     pub fn set_active_cameras(&self, n: usize) {
@@ -385,10 +415,14 @@ impl MetricsRegistry {
             node_restarts: i.node_restarts.load(Relaxed),
             worker_restarts: i.worker_restarts.load(Relaxed),
             cross_shard_msgs: i.cross_shard_msgs.load(Relaxed),
+            adapt_minted: i.adapt_minted.load(Relaxed),
+            adapt_applied: i.adapt_applied.load(Relaxed),
+            adapt_stale: i.adapt_stale.load(Relaxed),
             active_cameras: i.active_cameras.load(Relaxed),
             active_queries: i.active_queries.load(Relaxed),
             nodes_down: i.nodes_down.load(Relaxed),
             shards: i.shards.load(Relaxed),
+            cameras_downshifted: i.cameras_downshifted.load(Relaxed),
             xi_app_us: std::array::from_fn(|a| {
                 std::array::from_fn(|s| i.xi_app_us[a][s].load(Relaxed))
             }),
@@ -460,11 +494,18 @@ pub struct MetricsSnapshot {
     pub worker_restarts: u64,
     /// Cross-shard handoff envelopes (sharded DES; 0 at K=1).
     pub cross_shard_msgs: u64,
+    /// Adaptation commands minted / applied / discarded-stale (all 0
+    /// with the identity ladder).
+    pub adapt_minted: u64,
+    pub adapt_applied: u64,
+    pub adapt_stale: u64,
     pub active_cameras: i64,
     pub active_queries: i64,
     pub nodes_down: i64,
     /// Shard count K published by the engine (0 if never set).
     pub shards: i64,
+    /// Cameras currently below their native resolution rung.
+    pub cameras_downshifted: i64,
     pub xi_app_us: [[i64; 2]; 4],
     pub per_query: Vec<(QueryId, QueryCounters)>,
     /// Cumulative per-simulated-second rows (empty when
@@ -530,10 +571,17 @@ impl MetricsSnapshot {
                 "cross_shard_msgs",
                 (self.cross_shard_msgs as i64).into(),
             ),
+            ("adapt_minted", (self.adapt_minted as i64).into()),
+            ("adapt_applied", (self.adapt_applied as i64).into()),
+            ("adapt_stale", (self.adapt_stale as i64).into()),
             ("active_cameras", self.active_cameras.into()),
             ("active_queries", self.active_queries.into()),
             ("nodes_down", self.nodes_down.into()),
             ("shards", self.shards.into()),
+            (
+                "cameras_downshifted",
+                self.cameras_downshifted.into(),
+            ),
             (
                 "xi_app_us",
                 Json::Arr(
@@ -686,6 +734,25 @@ mod tests {
         assert_eq!(j.at("lost_to_fault").as_usize(), Some(2));
         assert_eq!(j.at("cross_shard_msgs").as_usize(), Some(3));
         assert_eq!(j.at("shards").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn adaptation_counters_accumulate() {
+        let m = MetricsRegistry::new();
+        m.adapt_minted();
+        m.adapt_applied();
+        m.adapt_stale();
+        m.adapt_stale();
+        m.set_cameras_downshifted(3);
+        let s = m.snapshot();
+        assert_eq!(s.adapt_minted, 1);
+        assert_eq!(s.adapt_applied, 1);
+        assert_eq!(s.adapt_stale, 2);
+        assert_eq!(s.cameras_downshifted, 3);
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(j.at("adapt_minted").as_usize(), Some(1));
+        assert_eq!(j.at("adapt_stale").as_usize(), Some(2));
+        assert_eq!(j.at("cameras_downshifted").as_usize(), Some(3));
     }
 
     #[test]

@@ -28,9 +28,10 @@ use crate::config::{
 };
 use crate::coordinator::topology::Topology;
 use crate::dataflow::{
-    ContentionResolver, Event, FeedbackRouter, FeedbackState,
-    FilterControl, Payload, QueryFusion, QueryId, SimCtx, Stage, TlEnv,
-    TrackingLogic, TruthSource, VideoAnalytics,
+    ContentionResolver, Event, FeedbackEnvelope, FeedbackRouter,
+    FeedbackState, FilterControl, ModelVariant, Payload, QueryFusion,
+    QueryId, SimCtx, Stage, TlEnv, TrackingLogic, TruthSource,
+    VideoAnalytics,
 };
 use crate::engine::ShardedDes;
 use crate::metrics::{QueryLedgers, Summary};
@@ -51,6 +52,9 @@ use crate::service::scheduler::FairShareBatcher;
 use crate::sim::{
     backoff_delay, ComputeModel, EntityWalk, FaultModel, GroundTruth,
     NetModel,
+};
+use crate::tuning::adapt::{
+    AdaptController, AdaptationCommand, AdaptationState,
 };
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{
@@ -324,6 +328,17 @@ pub struct MultiQueryDes<S: ObsSink = NullSink> {
     fusion_updates: u64,
     /// Stamps QF refinements with per-query update sequence numbers.
     router: FeedbackRouter,
+    /// Commanded per-camera (resolution, variant) state — every
+    /// [`Payload::Adaptation`] delivery lands in
+    /// `Self::apply_adaptation` and nowhere else. Engine-global:
+    /// commands steer cameras, which all queries share.
+    adapt: AdaptationState,
+    /// Sink-side accuracy–latency controller: mints
+    /// [`AdaptationCommand`]s from per-completion deadline slack.
+    adapt_ctl: AdaptController,
+    /// `adapt_ctl.active()`, hoisted: every pricing/stride/bytes hook
+    /// is one branch and bit-identical when the plane is inert.
+    adapt_on: bool,
     m_max: usize,
     rng: Rng,
     now: Micros,
@@ -553,6 +568,17 @@ impl<S: ObsSink> MultiQueryDes<S> {
                 }
             }
         }
+        // Adaptation plane: the controller mints commands against the
+        // *default* app's CR variant (the downshift-capable stage);
+        // per-event pricing re-derives each event's own nominal from
+        // the catalog, so heterogeneous mixes stay stage-isolated.
+        let adapt = AdaptationState::new(&cfg.adaptation, num_cameras);
+        let adapt_ctl = AdaptController::new(
+            &cfg.adaptation,
+            num_cameras,
+            cfg.gamma(),
+            app.cr_variant,
+        );
         Self {
             cfg,
             topo,
@@ -592,6 +618,9 @@ impl<S: ObsSink> MultiQueryDes<S> {
             ever_queued: 0,
             fusion_updates: 0,
             router: FeedbackRouter::new(),
+            adapt_on: adapt_ctl.active(),
+            adapt,
+            adapt_ctl,
             m_max: m_max.max(1),
             rng: rng(seed, 0x3DE5),
             now: 0,
@@ -638,6 +667,7 @@ impl<S: ObsSink> MultiQueryDes<S> {
                         && !matches!(
                             ev.payload,
                             Payload::QueryUpdate(_)
+                                | Payload::Adaptation(_)
                         ) =>
                 {
                     Some(ev.header.id)
@@ -1064,6 +1094,15 @@ impl<S: ObsSink> MultiQueryDes<S> {
         }
         let frame_no = self.frame_counters[cam];
         self.frame_counters[cam] += 1;
+        if self.adapt_on {
+            // Commanded frame-rate: FC sees a decimated feed. Skipped
+            // frames are never generated (and never ledgered), so
+            // per-query conservation is untouched.
+            let stride = self.adapt.stride(cam);
+            if stride > 1 && frame_no % stride != 0 {
+                return;
+            }
+        }
         // One logical event per query that has this camera active.
         // Index iteration instead of cloning the active list per tick:
         // the loop body never mutates `self.active`.
@@ -1163,7 +1202,11 @@ impl<S: ObsSink> MultiQueryDes<S> {
             ev.header.sum_exec += fc_dur;
             let fc_task = self.topo.fc_task(cam);
             let va = self.topo.va_task(cam);
-            let frame_bytes = self.net.frame_bytes;
+            let frame_bytes = if self.adapt_on {
+                self.adapt.scaled_bytes(self.net.frame_bytes, cam)
+            } else {
+                self.net.frame_bytes
+            };
             self.send_data(
                 self.topo.node_of(fc_task),
                 va,
@@ -1197,12 +1240,38 @@ impl<S: ObsSink> MultiQueryDes<S> {
         batch: &[QueuedEvent<Event>],
     ) -> f64 {
         let rel = &self.tasks[task].rel;
+        if !self.adapt_on {
+            return batch
+                .iter()
+                .map(|qe| {
+                    rel[self.query_app(qe.item.header.query).index()]
+                })
+                .sum();
+        }
+        // Adaptation multiplies each member's per-app multiplier by
+        // its camera's commanded (resolution, variant) rel — the
+        // identity ladder is ×1.0 exact, so the sum (and every gate
+        // priced from it) is unchanged to the bit.
         batch
             .iter()
             .map(|qe| {
-                rel[self.query_app(qe.item.header.query).index()]
+                let kind = self.query_app(qe.item.header.query);
+                let nom = self.nominal_of(task, kind);
+                rel[kind.index()]
+                    * self.adapt.rel(qe.item.header.camera, nom)
             })
             .sum()
+    }
+
+    /// The nominal (configured) model variant an app runs at a task's
+    /// stage — what an [`AdaptationCommand`] downshifts *from*. Looked
+    /// up per event so heterogeneous query mixes stay stage-isolated.
+    fn nominal_of(&self, task: usize, kind: AppKind) -> ModelVariant {
+        let app = self.catalog.get(kind);
+        match self.tasks[task].stage {
+            Stage::Cr => app.cr_variant,
+            _ => app.va_variant,
+        }
     }
 
     /// Per-(task, query) budget, created on first use. Only call for
@@ -1269,6 +1338,14 @@ impl<S: ObsSink> MultiQueryDes<S> {
                     }
                     return;
                 }
+                // Feedback edge, adaptation flavour: engine-global
+                // state (not per-query), so the first broadcast copy
+                // applies and the rest discard as stale.
+                if let Payload::Adaptation(cmd) = &ev.payload {
+                    let cmd = *cmd;
+                    self.apply_adaptation(cmd);
+                    return;
+                }
                 let now = self.now;
                 let q = ev.header.query;
                 let u = now - ev.header.src_arrival;
@@ -1276,10 +1353,20 @@ impl<S: ObsSink> MultiQueryDes<S> {
                 let slot = self
                     .topo
                     .downstream_slot(task, ev.header.camera);
-                // Drop point 1 prices the event under *its* app's ξ.
+                // Drop point 1 prices the event under *its* app's ξ,
+                // scaled by its camera's commanded rel when the
+                // adaptation plane is live (ξ_eff(1.0) ≡ ξ(1) exactly,
+                // so the inert path is bit-identical).
                 let xi1 = {
                     let kind = self.query_app(q);
-                    self.tasks[task].app_xi(kind).xi(1)
+                    if self.adapt_on {
+                        let nom = self.nominal_of(task, kind);
+                        self.tasks[task].app_xi(kind).xi_eff(
+                            self.adapt.rel(ev.header.camera, nom),
+                        )
+                    } else {
+                        self.tasks[task].app_xi(kind).xi(1)
+                    }
                 };
                 let budget = self.task_budget_for(task, q, slot);
                 if self.cfg.drops_enabled
@@ -1645,6 +1732,7 @@ impl<S: ObsSink> MultiQueryDes<S> {
                 sem: &self.cfg.semantics,
                 seed: self.cfg.seed,
                 feedback: &self.tasks[task].feedback,
+                adapt: &self.adapt,
             };
             let mut i = 0;
             while i < staged.len() {
@@ -2304,6 +2392,24 @@ impl<S: ObsSink> MultiQueryDes<S> {
             );
         }
 
+        // Accuracy–latency controller: every completion's latency
+        // feeds the sink-side slack estimator; minted commands ride
+        // the feedback edge upstream.
+        if self.adapt_on {
+            if let Some(cmd) = self.adapt_ctl.on_completion(
+                ev.header.camera,
+                latency,
+                self.now,
+            ) {
+                self.metrics.adapt_minted();
+                self.route_adaptation(
+                    cmd,
+                    ev.header.id,
+                    ev.header.camera,
+                );
+            }
+        }
+
         if let Some((seq, size)) = batch {
             let entry = self
                 .sink_batches
@@ -2366,6 +2472,61 @@ impl<S: ObsSink> MultiQueryDes<S> {
                     batch: None,
                 },
             );
+        }
+    }
+
+    /// Route a minted [`AdaptationCommand`] upstream on the feedback
+    /// edge: one copy per VA/CR executor (same transport, same
+    /// seq-stamped envelope as refinements). Consumption is
+    /// engine-global, so the first arrival applies and the remaining
+    /// copies discard as stale — exercising the stale counter on every
+    /// command.
+    fn route_adaptation(
+        &mut self,
+        cmd: AdaptationCommand,
+        trigger: u64,
+        camera: usize,
+    ) {
+        let env = FeedbackEnvelope::Adaptation(cmd);
+        let lat = self
+            .net
+            .transfer_estimate(self.net.meta_bytes, self.now);
+        for task in 0..self.tasks.len() {
+            if !matches!(self.tasks[task].stage, Stage::Va | Stage::Cr)
+            {
+                continue;
+            }
+            self.push(
+                self.now + lat,
+                Ev::Arrive {
+                    task,
+                    ev: env.into_event(trigger, camera, self.now),
+                    batch: None,
+                },
+            );
+        }
+    }
+
+    /// The single application point for adaptation commands: every
+    /// [`Payload::Adaptation`] delivery, on every path, lands here.
+    fn apply_adaptation(&mut self, cmd: AdaptationCommand) {
+        if self.adapt.apply(&cmd) {
+            self.metrics.adapt_applied();
+            self.metrics
+                .set_cameras_downshifted(self.adapt.downshifted());
+            if self.obs.enabled() {
+                self.obs.emit(
+                    self.now,
+                    &TraceEvent::Adaptation {
+                        camera: cmd.camera as u32,
+                        seq: cmd.seq,
+                        level: cmd.level as u32,
+                        variant: cmd.variant.profile().artifact,
+                    },
+                );
+            }
+        } else {
+            self.metrics.adapt_stale();
         }
     }
 

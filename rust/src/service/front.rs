@@ -44,10 +44,10 @@ use anyhow::{anyhow, Result};
 use crate::apps::{AppCatalog, AppDefinition};
 use crate::config::{AppKind, ExperimentConfig, SemanticsConfig};
 use crate::dataflow::{
-    boosted_rates, AnalyticsBlock, Event, FeedbackRouter,
-    FeedbackState, FilterControl, Header, ModelVariant, Partitioner,
-    Payload, QueryFusion, QueryId, ScoreParams, Stage, TlEnv,
-    TrackingLogic,
+    boosted_rates, AnalyticsBlock, Event, FeedbackEnvelope,
+    FeedbackRouter, FeedbackState, FilterControl, Header,
+    ModelVariant, Partitioner, Payload, QueryFusion, QueryId,
+    ScoreParams, Stage, TlEnv, TrackingLogic,
 };
 use crate::metrics::{QueryLedgers, Summary};
 use crate::obs::{
@@ -63,6 +63,9 @@ use crate::service::query::{
 };
 use crate::service::scheduler::FairShareBatcher;
 use crate::sim::{EntityWalk, GroundTruth};
+use crate::tuning::adapt::{
+    AdaptController, AdaptationCommand, AdaptationState,
+};
 use crate::tuning::budget::BUDGET_INF;
 use crate::tuning::{drop_at_queue, BatcherPoll, QueuedEvent, XiModel};
 use crate::util::{millis, secs, FastMap, Micros, SEC};
@@ -328,6 +331,14 @@ struct Inner {
     /// Always-on counters/gauges/histograms, snapshotable mid-run via
     /// [`TrackingService::metrics_snapshot`].
     metrics: MetricsRegistry,
+    /// Adaptation plane: the service-global resolution/variant state.
+    /// Every `Payload::Adaptation` delivery lands in
+    /// [`Inner::apply_adaptation`] and nowhere else.
+    adapt: Mutex<AdaptationState>,
+    /// Hoisted [`AdaptController::active`] — when false, every
+    /// adaptation hook on this path is a single untaken branch and the
+    /// pre-adaptation expressions run unchanged.
+    adapt_on: bool,
 }
 
 impl Inner {
@@ -341,6 +352,35 @@ impl Inner {
             SupervisorHealth::AllWorkersLive
         } else {
             SupervisorHealth::Degraded { lost }
+        }
+    }
+
+    /// The service front's single application point for
+    /// [`Payload::Adaptation`] commands: every worker's handler lands
+    /// here, and the state's seq-stamped stale discard makes the
+    /// per-worker broadcast copies apply exactly once.
+    fn apply_adaptation(&self, cmd: &AdaptationCommand, now: Micros) {
+        let (applied, down) = {
+            let mut ad = self.adapt.lock().unwrap();
+            let ok = ad.apply(cmd);
+            (ok, ad.downshifted())
+        };
+        if applied {
+            self.metrics.adapt_applied();
+            self.metrics.set_cameras_downshifted(down);
+            if self.obs.enabled() {
+                self.obs.emit(
+                    now,
+                    &TraceEvent::Adaptation {
+                        camera: cmd.camera as u32,
+                        seq: cmd.seq,
+                        level: cmd.level as u32,
+                        variant: cmd.variant.profile().artifact,
+                    },
+                );
+            }
+        } else {
+            self.metrics.adapt_stale();
         }
     }
 }
@@ -691,6 +731,21 @@ impl TrackingService {
             AppCatalog::new(app.clone(), cfg.app, cfg.tl);
         let n_va = cfg.cluster.va_instances.clamp(1, 4);
         let n_cr = cfg.cluster.cr_instances.clamp(1, 4);
+        // Adaptation plane: the sink-side controller mints
+        // resolution/variant commands from completion slack; the
+        // shared state applies them (exactly once per seq) and prices
+        // every gate/batch under the commanded rung.
+        let adapt_ctl = AdaptController::new(
+            &cfg.adaptation,
+            cfg.num_cameras,
+            cfg.gamma(),
+            app.cr_variant,
+        );
+        let adapt_on = adapt_ctl.active();
+        let adapt = Mutex::new(AdaptationState::new(
+            &cfg.adaptation,
+            cfg.num_cameras,
+        ));
         let inner = Arc::new(Inner {
             admission: AdmissionController::new(policy),
             catalog,
@@ -716,6 +771,8 @@ impl TrackingService {
             cfg,
             obs,
             metrics: MetricsRegistry::new(),
+            adapt,
+            adapt_on,
         });
         let cfg = &inner.cfg;
         let max_batch_delay = millis(250.0).min(cfg.gamma());
@@ -799,7 +856,7 @@ impl TrackingService {
                 .cloned()
                 .collect();
             std::thread::spawn(move || {
-                sink_loop(inner_c, sink_rx, workers)
+                sink_loop(inner_c, sink_rx, workers, adapt_ctl)
             })
         };
 
@@ -1055,6 +1112,9 @@ fn feed_loop(
     let period = Duration::from_micros((1e6 / cfg.fps.max(0.1)) as u64);
     let mut frame_no: u64 = 0;
     let mut active_buf: Vec<usize> = Vec::new();
+    // Adaptation plane: per-camera frame strides, snapshotted once per
+    // tick so the lock-free FC/visibility pass stays lock-free.
+    let mut strides: Vec<u64> = vec![1; cfg.num_cameras];
     // Each query's FC block — feed-thread-owned.
     let mut fcs: FastMap<QueryId, Box<dyn FilterControl>> =
         FastMap::default();
@@ -1164,12 +1224,27 @@ fn feed_loop(
         // activation flag — inactive cameras included, so stateful
         // FCs (warm-up windows, duty cycles) observe deactivations.
         let mut frames: Vec<(QueryId, usize, bool)> = Vec::new();
+        if inner.adapt_on {
+            let ad = inner.adapt.lock().unwrap();
+            for (cam, s) in strides.iter_mut().enumerate() {
+                *s = ad.stride(cam);
+            }
+        }
         for (q, kind, t0, gt, active_cams) in &snapshots {
             // First sight of this query: mint its FC from its own app.
             let fc = fcs.entry(*q).or_insert_with(|| {
                 inner.catalog.get(*kind).make_fc()
             });
             for (cam, &act) in active_cams.iter().enumerate() {
+                // Commanded frame-rate decimation: FC never sees
+                // strided-out ticks (mirrors the engines' frame-tick
+                // gate).
+                if inner.adapt_on
+                    && strides[cam] > 1
+                    && frame_no % strides[cam] != 0
+                {
+                    continue;
+                }
                 if !fc.admit(*q, cam, frame_no, now, act) {
                     continue;
                 }
@@ -1506,6 +1581,16 @@ fn worker_loop(
                     }
                     return true;
                 }
+                // Adaptation commands ride the same feedback edge and
+                // are consumed here — never batched, priced or
+                // dropped. The state is service-global, so of the
+                // per-worker broadcast copies the first arrival
+                // applies ([`Inner::apply_adaptation`]) and the rest
+                // discard as stale.
+                if let Payload::Adaptation(cmd) = &ev.payload {
+                    inner.apply_adaptation(cmd, inner.now_us());
+                    return true;
+                }
                 let now = inner.now_us();
                 let q = ev.header.query;
                 let u = now - ev.header.src_arrival;
@@ -1515,7 +1600,31 @@ fn worker_loop(
                 // registered cost multiplier (1.0 for the default app
                 // and for late events of retired queries).
                 let rel = ws.rels.get(&q).copied().unwrap_or(1.0);
-                let xi1 = ((xi.xi(1) as f64) * rel).round() as Micros;
+                // Under adaptation the gate also charges the commanded
+                // (resolution, variant) multiplier for the event's
+                // camera; identity rungs multiply by exactly 1.0.
+                let xi1 = if inner.adapt_on {
+                    let nom = ws
+                        .blocks
+                        .get(&q)
+                        .map(|b| b.variant())
+                        .unwrap_or_else(|| {
+                            let d = inner.catalog.default_app();
+                            match stage {
+                                Stage::Cr => d.cr_variant,
+                                _ => d.va_variant,
+                            }
+                        });
+                    let arel = inner
+                        .adapt
+                        .lock()
+                        .unwrap()
+                        .rel(ev.header.camera, nom);
+                    ((xi.xi(1) as f64) * rel * arel).round()
+                        as Micros
+                } else {
+                    ((xi.xi(1) as f64) * rel).round() as Micros
+                };
                 if drops_enabled
                     && drop_at_queue(exempt, u, xi1, gamma)
                 {
@@ -1747,13 +1856,32 @@ fn exec_batch(
     let now = inner.now_us();
     // Effective batch size: Σ of per-app cost multipliers (exactly b
     // for a homogeneous default-app batch) — the same §4.4 pricing the
-    // DES engines use.
-    let relsum: f64 = batch
-        .iter()
-        .map(|qe| {
-            rels.get(&qe.item.header.query).copied().unwrap_or(1.0)
-        })
-        .sum();
+    // DES engines use. Under adaptation each event also carries its
+    // camera's commanded (resolution, variant) multiplier.
+    let relsum: f64 = if inner.adapt_on {
+        let ad = inner.adapt.lock().unwrap();
+        batch
+            .iter()
+            .map(|qe| {
+                let q = qe.item.header.query;
+                let rel = rels.get(&q).copied().unwrap_or(1.0);
+                let nom = blocks
+                    .get(&q)
+                    .map(|b| b.variant())
+                    .unwrap_or_else(|| default_block.variant());
+                rel * ad.rel(qe.item.header.camera, nom)
+            })
+            .sum()
+    } else {
+        batch
+            .iter()
+            .map(|qe| {
+                rels.get(&qe.item.header.query)
+                    .copied()
+                    .unwrap_or(1.0)
+            })
+            .sum()
+    };
     let queue_sum: Micros = batch
         .iter()
         .map(|qe| (now - qe.arrival).max(0))
@@ -1797,9 +1925,21 @@ fn exec_batch(
             None => &mut *default_block,
         };
         scores.clear();
+        // Under adaptation the backend executes the commanded
+        // (possibly downshifted) variant for this group's camera;
+        // nominal otherwise.
+        let nominal = block.variant();
+        let variant = if inner.adapt_on {
+            inner.adapt.lock().unwrap().variant_for(
+                events[start].header.camera,
+                nominal,
+            )
+        } else {
+            nominal
+        };
         let ctx = ScoreCtx {
             stage,
-            variant: block.variant(),
+            variant,
             query: q,
             refined: feedback.refined(q),
         };
@@ -1845,6 +1985,7 @@ fn sink_loop(
     inner: Arc<Inner>,
     rx: Receiver<Msg>,
     workers: Vec<Sender<Msg>>,
+    mut adapt_ctl: AdaptController,
 ) {
     let gamma = inner.cfg.gamma();
     // One QF block per query, minted from its app at registration.
@@ -1904,6 +2045,29 @@ fn sink_loop(
                             detected,
                         },
                     );
+                }
+                // Adaptation plane: every completion's deadline slack
+                // feeds the controller; minted commands broadcast to
+                // every worker on the same seq-stamped feedback edge
+                // as QF refinements (first arrival applies, the rest
+                // discard as stale).
+                if inner.adapt_on {
+                    if let Some(cmd) = adapt_ctl.on_completion(
+                        ev.header.camera,
+                        latency,
+                        now,
+                    ) {
+                        inner.metrics.adapt_minted();
+                        let upd = FeedbackEnvelope::Adaptation(cmd)
+                            .into_event(
+                                ev.header.id,
+                                ev.header.camera,
+                                now,
+                            );
+                        for tx in &workers {
+                            let _ = tx.send(Msg::Ev(upd.clone()));
+                        }
+                    }
                 }
                 // QF user-logic, outside the state lock. One lookup
                 // serves both the refinement check and the embedding

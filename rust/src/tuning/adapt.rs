@@ -1,0 +1,525 @@
+//! The adaptation plane: a DeepScale-style accuracy–latency controller
+//! (PAPERS.md) threaded through every execution path.
+//!
+//! The §4 tuning triangle's only pressure valve used to be *dropping
+//! data*; DeepScale shows that downshifting *content* — frame
+//! resolution and model variant — moves the recall-vs-deadline frontier
+//! instead of falling off it. This module is the typed core of that
+//! loop:
+//!
+//! * [`AdaptationCommand`] — one decision: `(camera, resolution level,
+//!   model variant)`, stamped with a per-camera monotone sequence
+//!   number. Minted at the sink (where deadline slack is observable),
+//!   routed upstream on the same seq-stamped feedback edge as query
+//!   refinements ([`crate::dataflow::FeedbackRouter`]).
+//! * [`AdaptationState`] — **the single shared application point.** All
+//!   four engines own exactly one and consume commands exclusively
+//!   through [`AdaptationState::apply`]; FC admission, VA/CR batch
+//!   pricing and live model selection then read the commanded
+//!   `(variant, resolution)` through its accessors. Exactly-once,
+//!   stale-discard semantics mirror [`crate::dataflow::FeedbackState`]
+//!   (duplicate or out-of-order deliveries discard deterministically).
+//! * [`AdaptController`] — sink-side policy: an EMA of per-camera
+//!   completion latency turns deadline slack into downshift/upshift
+//!   decisions. Deterministic and RNG-free: it never touches an engine
+//!   RNG stream, so an inert controller leaves runs bit-identical.
+//!
+//! Determinism contract: under the **identity ladder** (a single
+//! all-1.0 level, the default) the controller mints nothing, every
+//! multiplier accessor returns exactly `1.0` (an f64 identity under
+//! multiplication) and effective batch sizes stay exact whole counts —
+//! an adaptation-enabled build is bit-identical to a pre-adaptation
+//! build, per seed, by construction. `rust/tests/prop_adapt.rs` holds
+//! that line.
+
+use crate::config::{AdaptationConfig, ResolutionLevel};
+use crate::dataflow::ModelVariant;
+use crate::util::{Micros, SEC};
+
+/// EMA smoothing for the controller's per-camera latency tracker.
+/// Deliberately brisk: the controller must react within a few
+/// completions of a compute regime change.
+pub const ADAPT_LATENCY_EMA: f64 = 0.25;
+
+/// One adaptation decision, minted at the sink and applied upstream.
+///
+/// `seq` is per-camera, 1-based and strictly increasing (0 on an event
+/// header means "not an adaptation"), mirroring the query-refinement
+/// sequence numbers — the two kinds of feedback share one envelope and
+/// one staleness rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptationCommand {
+    /// The camera whose quality operating point moves.
+    pub camera: usize,
+    /// Target rung on the resolution ladder (0 = native quality).
+    pub level: usize,
+    /// Model variant the analytics stages should run for this camera.
+    pub variant: ModelVariant,
+    /// Per-camera monotone command sequence number (1-based).
+    pub seq: u32,
+}
+
+/// The single shared application point for adaptation commands.
+///
+/// Every engine owns one `AdaptationState`; no engine mutates a
+/// camera's operating point any other way. `apply` is exactly-once per
+/// command with deterministic stale-discard; the accessors are what FC
+/// admission, batch pricing and live model selection consult.
+#[derive(Debug, Clone)]
+pub struct AdaptationState {
+    ladder: Vec<ResolutionLevel>,
+    /// Current ladder rung per camera.
+    level: Vec<usize>,
+    /// Commanded variant override per camera (`None` = app nominal).
+    variant: Vec<Option<ModelVariant>>,
+    /// Last applied command seq per camera (0 = none).
+    last_seq: Vec<u32>,
+    /// Cameras currently below native quality (level > 0).
+    downshifted: usize,
+    applied: u64,
+    stale: u64,
+}
+
+impl AdaptationState {
+    pub fn new(cfg: &AdaptationConfig, cameras: usize) -> Self {
+        assert!(
+            !cfg.ladder.is_empty(),
+            "resolution ladder must have at least the native level"
+        );
+        Self {
+            ladder: cfg.ladder.clone(),
+            level: vec![0; cameras],
+            variant: vec![None; cameras],
+            last_seq: vec![0; cameras],
+            downshifted: 0,
+            applied: 0,
+            stale: 0,
+        }
+    }
+
+    /// Apply a command iff it is fresher than the last one applied for
+    /// its camera. Returns whether it took effect — `false` means the
+    /// delivery was stale (or a duplicate) and was discarded, so a
+    /// given command moves a camera's operating point exactly once.
+    pub fn apply(&mut self, cmd: &AdaptationCommand) -> bool {
+        crate::strict_assert!(
+            cmd.level < self.ladder.len(),
+            "adaptation command level {} outside ladder of {} rungs",
+            cmd.level,
+            self.ladder.len()
+        );
+        let last = self.last_seq[cmd.camera];
+        if last >= cmd.seq {
+            self.stale += 1;
+            return false;
+        }
+        crate::strict_assert!(
+            cmd.seq >= 1,
+            "adaptation command for camera {} carries reserved seq 0",
+            cmd.camera
+        );
+        crate::strict_assert!(
+            cmd.seq > last,
+            "adaptation seq {} for camera {} not fresher than {}",
+            cmd.seq,
+            cmd.camera,
+            last
+        );
+        let level = cmd.level.min(self.ladder.len() - 1);
+        let was_down = self.level[cmd.camera] > 0;
+        let is_down = level > 0;
+        match (was_down, is_down) {
+            (false, true) => self.downshifted += 1,
+            (true, false) => self.downshifted -= 1,
+            _ => {}
+        }
+        self.level[cmd.camera] = level;
+        self.variant[cmd.camera] = if level == 0 {
+            None // native rung restores the app's nominal variant
+        } else {
+            Some(cmd.variant)
+        };
+        self.last_seq[cmd.camera] = cmd.seq;
+        self.applied += 1;
+        true
+    }
+
+    /// The camera's current rung.
+    pub fn level_of(&self, camera: usize) -> usize {
+        self.level[camera]
+    }
+
+    /// Last applied command seq for `camera` (0 = none).
+    pub fn last_seq(&self, camera: usize) -> u32 {
+        self.last_seq[camera]
+    }
+
+    /// The rung's [`ResolutionLevel`] for `camera`.
+    fn rung(&self, camera: usize) -> &ResolutionLevel {
+        &self.ladder[self.level[camera]]
+    }
+
+    /// The commanded variant, iff it is a genuine downshift of this
+    /// stage's `nominal` model. A CR-variant command must never leak
+    /// into VA pricing/scoring (and vice versa), so a stage only sees
+    /// an override that is `nominal`'s own cheaper sibling.
+    fn override_for(
+        &self,
+        camera: usize,
+        nominal: ModelVariant,
+    ) -> Option<ModelVariant> {
+        match self.variant[camera] {
+            Some(v) if v != nominal && nominal.downshifted() == v => {
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Relative ξ cost an event from `camera` contributes to a batch at
+    /// a stage whose app-nominal variant is `nominal`: the ladder
+    /// rung's cost multiplier times the commanded-variant ξ ratio. At
+    /// the identity ladder this is exactly `1.0`.
+    pub fn rel(&self, camera: usize, nominal: ModelVariant) -> f64 {
+        let base = self.rung(camera).cost;
+        match self.override_for(camera, nominal) {
+            Some(v) => base * v.profile().xi / nominal.profile().xi,
+            None => base,
+        }
+    }
+
+    /// Accuracy multiplier on the simulated true-positive rates for
+    /// `camera` at a stage with nominal variant `nominal`. Exactly
+    /// `1.0` at the identity ladder (so `p * acc` is bit-exact).
+    pub fn accuracy(&self, camera: usize, nominal: ModelVariant) -> f64 {
+        let base = self.rung(camera).accuracy;
+        match self.override_for(camera, nominal) {
+            Some(v) => {
+                base * v.profile().accuracy / nominal.profile().accuracy
+            }
+            None => base,
+        }
+    }
+
+    /// Commanded frame size for `camera`, scaling `bytes` by the
+    /// rung's resolution. The native rung is an exact identity.
+    pub fn scaled_bytes(&self, bytes: usize, camera: usize) -> usize {
+        let s = self.rung(camera).scale;
+        if s == 1.0 {
+            bytes
+        } else {
+            ((bytes as f64) * s).round().max(1.0) as usize
+        }
+    }
+
+    /// Commanded frame stride for `camera` (1 = every frame).
+    pub fn stride(&self, camera: usize) -> u64 {
+        self.rung(camera).stride.max(1)
+    }
+
+    /// The model variant a stage with nominal model `nominal` should
+    /// run for `camera` (`nominal` unless a command downshifted this
+    /// stage).
+    pub fn variant_for(
+        &self,
+        camera: usize,
+        nominal: ModelVariant,
+    ) -> ModelVariant {
+        self.override_for(camera, nominal).unwrap_or(nominal)
+    }
+
+    /// Cameras currently operating below native quality.
+    pub fn downshifted(&self) -> usize {
+        self.downshifted
+    }
+
+    /// Commands applied / discarded as stale so far.
+    pub fn applied_count(&self) -> u64 {
+        self.applied
+    }
+
+    pub fn stale_count(&self) -> u64 {
+        self.stale
+    }
+}
+
+/// Sink-side adaptation policy (deterministic, RNG-free).
+///
+/// Tracks an EMA of completion latency per camera; when the deadline
+/// slack `(γ − ema)/γ` collapses below `slack_down`, the camera
+/// downshifts one ladder rung (cheaper resolution, possibly a lighter
+/// model variant); when slack recovers above `slack_up`, it climbs
+/// back. A per-camera cooldown keeps the loop from thrashing. With a
+/// single-rung (identity) ladder — or `enabled = false` — the
+/// controller mints nothing, ever.
+#[derive(Debug, Clone)]
+pub struct AdaptController {
+    enabled: bool,
+    rungs: usize,
+    slack_down: f64,
+    slack_up: f64,
+    cooldown: Micros,
+    gamma: Micros,
+    /// Nominal (rung-0) analytics variant, from the app definition.
+    nominal: ModelVariant,
+    /// Latency EMA per camera (µs); negative = no completion seen.
+    ema: Vec<f64>,
+    last_cmd_at: Vec<Micros>,
+    next_seq: Vec<u32>,
+    /// The controller's view of each camera's commanded rung.
+    level: Vec<usize>,
+    minted: u64,
+}
+
+impl AdaptController {
+    pub fn new(
+        cfg: &AdaptationConfig,
+        cameras: usize,
+        gamma: Micros,
+        nominal: ModelVariant,
+    ) -> Self {
+        Self {
+            enabled: cfg.enabled && cfg.ladder.len() > 1,
+            rungs: cfg.ladder.len().max(1),
+            slack_down: cfg.slack_down,
+            slack_up: cfg.slack_up,
+            cooldown: (cfg.cooldown_secs * SEC as f64) as Micros,
+            gamma: gamma.max(1),
+            nominal,
+            ema: vec![-1.0; cameras],
+            last_cmd_at: vec![Micros::MIN / 2; cameras],
+            next_seq: vec![0; cameras],
+            level: vec![0; cameras],
+            minted: 0,
+        }
+    }
+
+    /// Observe a completion at the sink; possibly mint a command. The
+    /// fast path (disabled / identity ladder) returns before touching
+    /// any per-camera state.
+    pub fn on_completion(
+        &mut self,
+        camera: usize,
+        latency: Micros,
+        now: Micros,
+    ) -> Option<AdaptationCommand> {
+        if !self.enabled {
+            return None;
+        }
+        let l = latency.max(0) as f64;
+        let e = &mut self.ema[camera];
+        *e = if *e < 0.0 {
+            l
+        } else {
+            (1.0 - ADAPT_LATENCY_EMA) * *e + ADAPT_LATENCY_EMA * l
+        };
+        let slack = (self.gamma as f64 - *e) / self.gamma as f64;
+        if now - self.last_cmd_at[camera] < self.cooldown {
+            return None;
+        }
+        let cur = self.level[camera];
+        let target = if slack < self.slack_down && cur + 1 < self.rungs {
+            cur + 1
+        } else if slack > self.slack_up && cur > 0 {
+            cur - 1
+        } else {
+            return None;
+        };
+        self.level[camera] = target;
+        self.last_cmd_at[camera] = now;
+        self.next_seq[camera] += 1;
+        self.minted += 1;
+        Some(AdaptationCommand {
+            camera,
+            level: target,
+            variant: if target == 0 {
+                self.nominal
+            } else {
+                self.nominal.downshifted()
+            },
+            seq: self.next_seq[camera],
+        })
+    }
+
+    /// Commands minted so far.
+    pub fn minted(&self) -> u64 {
+        self.minted
+    }
+
+    /// Whether this controller can ever mint a command.
+    pub fn active(&self) -> bool {
+        self.enabled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AdaptationConfig;
+    use crate::util::SEC;
+
+    fn three_rung() -> AdaptationConfig {
+        let mut c = AdaptationConfig::default();
+        c.enabled = true;
+        c.ladder = vec![
+            ResolutionLevel::native(),
+            ResolutionLevel {
+                scale: 0.5,
+                cost: 0.55,
+                accuracy: 0.97,
+                stride: 1,
+            },
+            ResolutionLevel {
+                scale: 0.25,
+                cost: 0.35,
+                accuracy: 0.92,
+                stride: 2,
+            },
+        ];
+        c
+    }
+
+    #[test]
+    fn identity_state_is_an_exact_identity() {
+        let s = AdaptationState::new(&AdaptationConfig::default(), 4);
+        for cam in 0..4 {
+            assert_eq!(s.rel(cam, ModelVariant::CrLarge), 1.0);
+            assert_eq!(s.accuracy(cam, ModelVariant::Va), 1.0);
+            assert_eq!(s.scaled_bytes(307_200, cam), 307_200);
+            assert_eq!(s.stride(cam), 1);
+            assert_eq!(
+                s.variant_for(cam, ModelVariant::CrSmall),
+                ModelVariant::CrSmall
+            );
+        }
+        assert_eq!(s.downshifted(), 0);
+    }
+
+    #[test]
+    fn apply_is_exactly_once_with_stale_discard() {
+        let mut s = AdaptationState::new(&three_rung(), 3);
+        let cmd = AdaptationCommand {
+            camera: 1,
+            level: 1,
+            variant: ModelVariant::CrSmall,
+            seq: 1,
+        };
+        assert!(s.apply(&cmd));
+        // Duplicate delivery of the same seq is discarded.
+        assert!(!s.apply(&cmd));
+        assert_eq!(s.level_of(1), 1);
+        assert_eq!(s.downshifted(), 1);
+        // A fresher command applies; an out-of-order older one does not.
+        assert!(s.apply(&AdaptationCommand {
+            camera: 1,
+            level: 2,
+            variant: ModelVariant::CrSmall,
+            seq: 3,
+        }));
+        assert!(!s.apply(&AdaptationCommand {
+            camera: 1,
+            level: 0,
+            variant: ModelVariant::CrLarge,
+            seq: 2,
+        }));
+        assert_eq!(s.level_of(1), 2);
+        assert_eq!((s.applied_count(), s.stale_count()), (2, 2));
+        // Returning to the native rung restores the nominal variant.
+        assert!(s.apply(&AdaptationCommand {
+            camera: 1,
+            level: 0,
+            variant: ModelVariant::CrLarge,
+            seq: 4,
+        }));
+        assert_eq!(s.downshifted(), 0);
+        assert_eq!(
+            s.variant_for(1, ModelVariant::CrLarge),
+            ModelVariant::CrLarge
+        );
+    }
+
+    #[test]
+    fn downshifted_rung_prices_and_scores_cheaper() {
+        let mut s = AdaptationState::new(&three_rung(), 2);
+        s.apply(&AdaptationCommand {
+            camera: 0,
+            level: 2,
+            variant: ModelVariant::CrSmall,
+            seq: 1,
+        });
+        // Ladder cost times the CrSmall/CrLarge ξ ratio.
+        let rel = s.rel(0, ModelVariant::CrLarge);
+        let expect = 0.35 * ModelVariant::CrSmall.profile().xi
+            / ModelVariant::CrLarge.profile().xi;
+        assert!((rel - expect).abs() < 1e-12, "rel {rel}");
+        assert!(s.accuracy(0, ModelVariant::CrLarge) < 1.0);
+        assert_eq!(s.scaled_bytes(1000, 0), 250);
+        assert_eq!(s.stride(0), 2);
+        // The CR-variant override never leaks into VA: the VA stage
+        // sees only the ladder cost, and keeps its nominal model.
+        assert_eq!(s.rel(0, ModelVariant::Va), 0.35);
+        assert_eq!(
+            s.variant_for(0, ModelVariant::Va),
+            ModelVariant::Va
+        );
+        assert_eq!(
+            s.variant_for(0, ModelVariant::CrLarge),
+            ModelVariant::CrSmall
+        );
+        // The untouched camera stays native.
+        assert_eq!(s.rel(1, ModelVariant::CrLarge), 1.0);
+    }
+
+    #[test]
+    fn controller_downshifts_under_pressure_and_recovers() {
+        let gamma = 15 * SEC;
+        let mut c =
+            AdaptController::new(&three_rung(), 2, gamma, ModelVariant::CrLarge);
+        assert!(c.active());
+        // Healthy latencies mint nothing.
+        assert!(c.on_completion(0, SEC, 0).is_none());
+        // Collapsed slack downshifts once the EMA catches up...
+        let mut t = 0;
+        let mut cmd = None;
+        for _ in 0..64 {
+            t += SEC;
+            if let Some(m) = c.on_completion(0, 14 * SEC, t) {
+                cmd = Some(m);
+                break;
+            }
+        }
+        let cmd = cmd.expect("controller never downshifted");
+        assert_eq!((cmd.camera, cmd.level, cmd.seq), (0, 1, 1));
+        assert_eq!(cmd.variant, ModelVariant::CrSmall);
+        // ... and the cooldown gates an immediate second command.
+        assert!(c.on_completion(0, 14 * SEC, t + 1).is_none());
+        // Recovered slack climbs back toward native quality.
+        let mut up = None;
+        for _ in 0..256 {
+            t += 10 * SEC;
+            if let Some(m) = c.on_completion(0, SEC / 2, t) {
+                up = Some(m);
+                break;
+            }
+        }
+        let up = up.expect("controller never upshifted");
+        assert_eq!((up.level, up.seq), (0, 2));
+        assert_eq!(up.variant, ModelVariant::CrLarge);
+        assert_eq!(c.minted(), 2);
+    }
+
+    #[test]
+    fn identity_ladder_controller_is_inert() {
+        let mut id = AdaptationConfig::default();
+        id.enabled = true; // enabled but single-rung: still inert
+        let mut c =
+            AdaptController::new(&id, 1, 15 * SEC, ModelVariant::Va);
+        assert!(!c.active());
+        for i in 0..1000 {
+            assert!(c
+                .on_completion(0, 20 * SEC, i as Micros * SEC)
+                .is_none());
+        }
+        assert_eq!(c.minted(), 0);
+    }
+}

@@ -13,8 +13,12 @@
 //! by feeding the same scenario through skewed observation functions.
 //!
 //! The multi-query service layer adds a fourth concern: **fairness**
-//! across concurrent queries sharing the same executors ([`share`]).
+//! across concurrent queries sharing the same executors ([`share`]),
+//! and the adaptation plane a fifth: **content quality** — per-camera
+//! resolution/variant downshifts that move the accuracy–latency
+//! frontier instead of dropping data ([`adapt`]).
 
+pub mod adapt;
 pub mod batcher;
 pub mod bounds;
 pub mod budget;
@@ -23,6 +27,10 @@ pub mod nob;
 pub mod share;
 pub mod xi;
 
+pub use adapt::{
+    AdaptController, AdaptationCommand, AdaptationState,
+    ADAPT_LATENCY_EMA,
+};
 pub use batcher::{Batcher, BatcherPoll, QueuedEvent};
 pub use bounds::{batching_added_latency, max_stable_batch, max_stable_rate};
 pub use budget::{BudgetManager, EventRecord, Signal};

@@ -1,0 +1,470 @@
+//! Property suite for the adaptation plane (`tuning::adapt`).
+//!
+//! The contract under test, end to end:
+//!
+//! * **Identity-ladder bit-identity** — for *any* generated
+//!   [`AdaptationConfig`], every inert toggle combination (controller
+//!   off, controller on over the identity ladder, controller off over
+//!   the generated ladder) leaves both DES engines bit-identical per
+//!   seed: `Summary`, detections, fusion updates, dispatch count and
+//!   RNG draws all match the pre-adaptation baseline exactly.
+//! * **Exactly-once, stale-discard** — a command stream delivered in
+//!   *any* arrival order applies each `(camera, seq)` at most once,
+//!   lands on the highest-seq command, and discards duplicates and
+//!   out-of-order stragglers deterministically — under the *same*
+//!   staleness rule as query refinements ([`FeedbackState`]), which
+//!   shares the feedback envelope.
+//! * **Controller beats frozen** — under generated severe compute
+//!   slowdowns (the DeepScale regime), the controller arm completes at
+//!   least as many on-time events as the frozen arm at the same seed,
+//!   and strictly more whenever it actually engaged; offered load is
+//!   identical across the arms and both ledgers conserve.
+//! * **K-invariance** — adaptation-enabled runs are bit-identical
+//!   across generated shard plans: command minting, routing and
+//!   application commute with `shard_plan()`.
+//!
+//! Failures shrink toward the canonical do-nothing value (the enabled
+//! identity ladder, the empty schedule, the unsharded plan) and the
+//! `adapt` A/B property persists `seed case` pairs in
+//! `rust/tests/regressions/adapt.seeds`.
+
+use std::sync::Arc;
+
+use anveshak::check::domain::{
+    adaptation_config, arrival_order, compute_schedule, shard_plan,
+    ShardPlan,
+};
+use anveshak::check::runner::regression_seeds;
+use anveshak::check::{check, generate_case, CheckConfig};
+use anveshak::config::{
+    preset, AdaptationConfig, BatchingKind, ComputeEvent,
+    ExperimentConfig, TlKind,
+};
+use anveshak::coordinator::des;
+use anveshak::dataflow::{FeedbackState, ModelVariant};
+use anveshak::service::engine as mq_engine;
+use anveshak::tuning::adapt::{AdaptationCommand, AdaptationState};
+
+// ---------------------------------------------------------------------------
+// Identity-ladder bit-identity across every inert toggle.
+// ---------------------------------------------------------------------------
+
+/// Small-but-busy single-query config (the `prop_feedback` workload).
+fn base_cfg(seed: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.seed = seed;
+    c.num_cameras = 60;
+    c.workload.vertices = 60;
+    c.workload.edges = 160;
+    c.duration_secs = 30.0;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c.drops_enabled = true;
+    c
+}
+
+#[test]
+fn prop_inert_toggles_are_bit_identical_on_both_engines() {
+    // The headline determinism contract: an adaptation-aware build with
+    // an inert plane is the pre-adaptation build, per seed, by
+    // construction. Three inert arms per generated config: the default
+    // (off, identity ladder), the controller switched ON over the
+    // identity ladder, and the controller switched OFF over the
+    // generated non-trivial ladder.
+    check(
+        "adapt_identity",
+        &CheckConfig::with_cases(2),
+        &adaptation_config(),
+        |g| {
+            let mut identity_on = AdaptationConfig::default();
+            identity_on.enabled = true;
+            let mut generated_off = g.clone();
+            generated_off.enabled = false;
+            for ad in [&identity_on, &generated_off] {
+                if !ad.is_identity() {
+                    return Err(format!("arm not inert: {ad:?}"));
+                }
+            }
+
+            let run_with = |ad: &AdaptationConfig| {
+                let mut c = base_cfg(2019);
+                c.adaptation = ad.clone();
+                des::run(c)
+            };
+            let want = run_with(&AdaptationConfig::default());
+            for (arm, ad) in
+                [("identity_on", &identity_on), ("gen_off", &generated_off)]
+            {
+                let got = run_with(ad);
+                if got.summary != want.summary
+                    || got.detections != want.detections
+                    || got.fusion_updates != want.fusion_updates
+                    || got.core_events != want.core_events
+                    || got.rng_draws != want.rng_draws
+                {
+                    return Err(format!(
+                        "DES diverged under inert arm {arm}: {:?} != {:?}",
+                        got.summary, want.summary
+                    ));
+                }
+                if got.metrics.adapt_minted != 0
+                    || got.metrics.adapt_applied != 0
+                {
+                    return Err(format!(
+                        "inert arm {arm} minted/applied commands"
+                    ));
+                }
+            }
+
+            // Same contract on the multi-query engine, down to the
+            // per-query ledger rows.
+            let mq_run = |ad: &AdaptationConfig| {
+                let mut c = base_cfg(2019);
+                c.adaptation = ad.clone();
+                c.multi_query.num_queries = 3;
+                c.multi_query.mean_interarrival_secs = 5.0;
+                c.multi_query.lifetime_secs = 20.0;
+                let mq = c.multi_query.clone();
+                mq_engine::run(c, mq)
+            };
+            let mwant = mq_run(&AdaptationConfig::default());
+            for (arm, ad) in
+                [("identity_on", &identity_on), ("gen_off", &generated_off)]
+            {
+                let mgot = mq_run(ad);
+                if mgot.aggregate != mwant.aggregate
+                    || mgot.fusion_updates != mwant.fusion_updates
+                    || mgot.core_events != mwant.core_events
+                    || mgot.rng_draws != mwant.rng_draws
+                {
+                    return Err(format!(
+                        "mq engine diverged under inert arm {arm}"
+                    ));
+                }
+                for (a, b) in
+                    mgot.queries.iter().zip(mwant.queries.iter())
+                {
+                    if a.summary != b.summary
+                        || a.detections != b.detections
+                    {
+                        return Err(format!(
+                            "query {} ledger diverged under inert \
+                             arm {arm}",
+                            a.id
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Exactly-once, stale-discard — shared staleness rule with refinements.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_commands_apply_exactly_once_in_any_delivery_order() {
+    // A per-camera stream of commands seq = 1..=n delivered in an
+    // arbitrary order: only the running-max prefix applies (exactly the
+    // left-to-right maxima of the delivery order), the state lands on
+    // the highest seq, and a full redelivery is discarded wholesale.
+    // The FeedbackState refinement ledger, driven by the same delivery
+    // order, must accept/reject the *same* pattern — one staleness rule
+    // across both feedback flavors.
+    let n = 12usize;
+    let strat = (arrival_order(n), adaptation_config());
+    check(
+        "adapt_once",
+        &CheckConfig::with_cases(32),
+        &strat,
+        |(order, ad)| {
+            let rungs = ad.ladder.len();
+            let nominal = ModelVariant::CrLarge;
+            let cmd = |seq: usize| {
+                let level = seq % rungs;
+                AdaptationCommand {
+                    camera: 0,
+                    level,
+                    variant: if level == 0 {
+                        nominal
+                    } else {
+                        nominal.downshifted()
+                    },
+                    seq: seq as u32,
+                }
+            };
+            let mut st = AdaptationState::new(ad, 1);
+            let mut fb = FeedbackState::new();
+            let mut applied = Vec::new();
+            let mut running_max = 0u32;
+            for &i in order {
+                let c = cmd(i + 1);
+                let took = st.apply(&c);
+                let fb_took =
+                    fb.apply(0, c.seq, Arc::new(vec![c.seq as f32]));
+                if took != fb_took {
+                    return Err(format!(
+                        "staleness rules diverged at seq {}: \
+                         adapt {took} vs refinement {fb_took}",
+                        c.seq
+                    ));
+                }
+                let fresh = c.seq > running_max;
+                if took != fresh {
+                    return Err(format!(
+                        "seq {} with running max {running_max}: \
+                         applied={took}, want {fresh}",
+                        c.seq
+                    ));
+                }
+                if fresh {
+                    running_max = c.seq;
+                    applied.push(c.seq);
+                }
+            }
+            if st.last_seq(0) != n as u32 {
+                return Err(format!(
+                    "state must land on the highest seq: {} != {n}",
+                    st.last_seq(0)
+                ));
+            }
+            let top = cmd(n);
+            if st.level_of(0) != top.level {
+                return Err(format!(
+                    "state must land on the highest-seq level: \
+                     {} != {}",
+                    st.level_of(0),
+                    top.level
+                ));
+            }
+            if st.applied_count() != applied.len() as u64
+                || st.stale_count() != (n - applied.len()) as u64
+            {
+                return Err(format!(
+                    "apply/stale ledger wrong: ({}, {}) != ({}, {})",
+                    st.applied_count(),
+                    st.stale_count(),
+                    applied.len(),
+                    n - applied.len()
+                ));
+            }
+            // The gauge agrees with the surviving command.
+            if st.downshifted() != usize::from(top.level > 0) {
+                return Err("downshifted gauge disagrees".into());
+            }
+            // Full redelivery: every copy is stale, nothing moves.
+            let (level, seq) = (st.level_of(0), st.last_seq(0));
+            for &i in order {
+                if st.apply(&cmd(i + 1)) {
+                    return Err(format!(
+                        "redelivered seq {} applied twice",
+                        i + 1
+                    ));
+                }
+            }
+            if st.level_of(0) != level || st.last_seq(0) != seq {
+                return Err("redelivery moved the operating point".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Controller beats frozen under generated compute slowdowns.
+// ---------------------------------------------------------------------------
+
+/// The `harness adapt --smoke` workload with the preset's compute
+/// schedule replaced by a generated one.
+fn ab_cfg(name: &str, evs: &[ComputeEvent]) -> ExperimentConfig {
+    let mut c = preset(name);
+    c.num_cameras = 60;
+    c.workload.vertices = 60;
+    c.workload.edges = 160;
+    c.duration_secs = 60.0;
+    c.service.compute_events = evs.to_vec();
+    c
+}
+
+#[test]
+fn prop_controller_beats_frozen_under_generated_slowdowns() {
+    // Generated compute schedules, clamped into the DeepScale regime
+    // (global, severe, early enough to matter): the controller arm
+    // must never complete fewer on-time events than the frozen arm,
+    // and must win strictly whenever a command actually applied.
+    // `adapt.seeds` persists regression pairs for this property.
+    check(
+        "adapt",
+        &CheckConfig::with_cases(2),
+        &compute_schedule(2, 4),
+        |sched| {
+            let mut evs = sched.clone();
+            for e in &mut evs {
+                e.node = None; // cluster-wide regime change
+                e.factor = e.factor.clamp(4.0, 8.0);
+                e.at_sec = e.at_sec.clamp(5.0, 20.0);
+            }
+            if evs.is_empty() {
+                // The shrink floor still exercises the A/B.
+                evs.push(ComputeEvent {
+                    at_sec: 10.0,
+                    node: None,
+                    factor: 4.0,
+                });
+            }
+            let on = des::run(ab_cfg("adapt_on", &evs));
+            let off = des::run(ab_cfg("adapt_off", &evs));
+            for (arm, r) in [("on", &on), ("off", &off)] {
+                if !r.summary.conserved() {
+                    return Err(format!(
+                        "conservation violated ({arm}): {:?}",
+                        r.summary
+                    ));
+                }
+            }
+            if on.summary.generated != off.summary.generated {
+                return Err(format!(
+                    "offered load differs: on {} vs off {}",
+                    on.summary.generated, off.summary.generated
+                ));
+            }
+            if off.metrics.adapt_minted != 0 {
+                return Err("frozen arm minted a command".into());
+            }
+            if on.metrics.adapt_minted == 0 {
+                return Err(
+                    "controller never engaged under a >=4x global \
+                     slowdown"
+                        .into(),
+                );
+            }
+            if on.summary.on_time < off.summary.on_time {
+                return Err(format!(
+                    "controller made things worse: on-time {} < {}",
+                    on.summary.on_time, off.summary.on_time
+                ));
+            }
+            if on.metrics.adapt_applied > 0
+                && on.summary.on_time <= off.summary.on_time
+            {
+                return Err(format!(
+                    "controller engaged ({} applied) but did not \
+                     strictly win: on-time {} <= {}",
+                    on.metrics.adapt_applied,
+                    on.summary.on_time,
+                    off.summary.on_time
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// K-invariance of adaptation runs.
+// ---------------------------------------------------------------------------
+
+/// Shard-plan config carrying a generated (active) adaptation plane.
+fn plan_cfg(plan: &ShardPlan, ad: &AdaptationConfig) -> ExperimentConfig {
+    let mut c = ExperimentConfig::default();
+    c.name = format!("prop_adapt_k{}", plan.shards);
+    c.seed = 1302;
+    c.num_cameras = plan.cameras;
+    c.workload.vertices = plan.cameras;
+    c.workload.edges = plan.cameras * 3;
+    c.duration_secs = 20.0;
+    c.tl = TlKind::Base;
+    c.batching = BatchingKind::Dynamic { max: 25 };
+    c.drops_enabled = true;
+    c.adaptation = ad.clone();
+    c.sharding.shards = plan.shards;
+    c.sharding.threads = plan.threads;
+    c
+}
+
+#[test]
+fn prop_adaptation_runs_are_k_invariant() {
+    // Command minting, feedback routing and the single application
+    // point all commute with sharding: an adaptation-enabled run is
+    // bit-identical across generated shard plans.
+    let strat = (shard_plan(), adaptation_config());
+    check(
+        "adapt_shard",
+        &CheckConfig::with_cases(2),
+        &strat,
+        |(plan, ad)| {
+            let sharded = des::run(plan_cfg(plan, ad));
+            let baseline = des::run(plan_cfg(
+                &ShardPlan {
+                    shards: 1,
+                    threads: 0,
+                    cameras: plan.cameras,
+                },
+                ad,
+            ));
+            if sharded.summary != baseline.summary {
+                return Err(format!(
+                    "summary diverged under {plan:?}: {:?} != {:?}",
+                    sharded.summary, baseline.summary
+                ));
+            }
+            if sharded.detections != baseline.detections
+                || sharded.fusion_updates != baseline.fusion_updates
+                || sharded.core_events != baseline.core_events
+                || sharded.rng_draws != baseline.rng_draws
+            {
+                return Err(format!(
+                    "per-seed outputs diverged under {plan:?}"
+                ));
+            }
+            if sharded.metrics.adapt_minted
+                != baseline.metrics.adapt_minted
+                || sharded.metrics.adapt_applied
+                    != baseline.metrics.adapt_applied
+                || sharded.metrics.adapt_stale
+                    != baseline.metrics.adapt_stale
+            {
+                return Err(format!(
+                    "adaptation registry diverged under {plan:?}: \
+                     ({}, {}, {}) != ({}, {}, {})",
+                    sharded.metrics.adapt_minted,
+                    sharded.metrics.adapt_applied,
+                    sharded.metrics.adapt_stale,
+                    baseline.metrics.adapt_minted,
+                    baseline.metrics.adapt_applied,
+                    baseline.metrics.adapt_stale,
+                ));
+            }
+            if !sharded.summary.conserved() {
+                return Err(format!(
+                    "conservation violated: {:?}",
+                    sharded.summary
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Persisted regressions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adapt_seed_file_replays_deterministically() {
+    // The committed pairs replay first on every `check("adapt", ...)`
+    // run; pin the file's presence and the generator's determinism so
+    // the replay path cannot silently rot.
+    let seeds = regression_seeds("adapt");
+    assert!(
+        !seeds.is_empty(),
+        "rust/tests/regressions/adapt.seeds is missing or empty"
+    );
+    let strat = compute_schedule(2, 4);
+    for (seed, case) in seeds {
+        let a = generate_case(&strat, seed, case);
+        assert_eq!(a, generate_case(&strat, seed, case));
+        assert!(a.len() <= 2, "{a:?}");
+    }
+}
